@@ -1,0 +1,73 @@
+//! NanoAOD algorithm scan — the paper's analysis-use-case study on one
+//! file: write the same NanoAOD-like dataset under every algorithm, then
+//! report file size, write throughput, and full-scan (read) throughput.
+//!
+//! This is Fig 2/3/6 condensed into the decision an experiment actually
+//! faces: "which setting do I put in my production config?"
+//!
+//! ```text
+//! cargo run --release --example nanoaod_scan [-- <n_events>]
+//! ```
+
+use rootio::compression::{Algorithm, Settings};
+use rootio::coordinator::{write_tree_parallel, PipelineConfig};
+use rootio::gen::nanoaod;
+use rootio::precond::Precond;
+use rootio::rfile::TreeReader;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let events = nanoaod::events(n, 42);
+    println!("NanoAOD-like sample: {n} events, {} branches\n", nanoaod::schema().len());
+
+    let candidates = vec![
+        Settings::new(Algorithm::Zlib, 1),
+        Settings::new(Algorithm::CfZlib, 1),
+        Settings::new(Algorithm::Zlib, 6),
+        Settings::new(Algorithm::Lz4, 1),
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        Settings::new(Algorithm::Lz4, 9).with_precond(Precond::BitShuffle(4)),
+        Settings::new(Algorithm::Zstd, 1),
+        Settings::new(Algorithm::Zstd, 5),
+        Settings::new(Algorithm::Lzma, 6),
+    ];
+
+    println!(
+        "{:<22} {:>12} {:>7} {:>12} {:>12}",
+        "setting", "file_bytes", "ratio", "write_MB_s", "scan_MB_s"
+    );
+    for s in candidates {
+        let path = std::env::temp_dir().join("rootio_nanoaod_scan.rfil");
+        let t0 = Instant::now();
+        let (_, snap) = write_tree_parallel(
+            &path,
+            "Events",
+            nanoaod::schema(),
+            s,
+            32 * 1024,
+            PipelineConfig::default(),
+            events.iter().cloned(),
+        )?;
+        let write_wall = t0.elapsed().as_secs_f64();
+        let file_len = std::fs::metadata(&path)?.len();
+
+        let t0 = Instant::now();
+        let mut reader = TreeReader::open(&path)?;
+        let back = reader.read_all_events()?;
+        let scan_wall = t0.elapsed().as_secs_f64();
+        assert_eq!(back.len(), n);
+
+        println!(
+            "{:<22} {:>12} {:>7.3} {:>12.1} {:>12.1}",
+            s.label(),
+            file_len,
+            snap.ratio(),
+            snap.bytes_in as f64 / 1e6 / write_wall,
+            snap.bytes_in as f64 / 1e6 / scan_wall,
+        );
+        std::fs::remove_file(&path).ok();
+    }
+    println!("\n(the paper's Fig-6 point: LZ4+BitShuffle beats ZLIB's ratio while keeping fast scans)");
+    Ok(())
+}

@@ -1,0 +1,22 @@
+// profiling driver: inflate + deflate over paper baskets
+use rootio::bench::figures::paper_baskets;
+use rootio::compression::{Algorithm, Engine, Settings};
+fn main() {
+    let baskets = paper_baskets(32 * 1024);
+    let mut engine = Engine::new();
+    let s = Settings::new(Algorithm::Zlib, 6);
+    let compressed: Vec<Vec<u8>> = baskets.iter().map(|b| engine.compress(b, &s)).collect();
+    let mode = std::env::args().nth(1).unwrap_or_default();
+    let t0 = std::time::Instant::now();
+    let mut total = 0usize;
+    if mode == "inflate" {
+        while t0.elapsed().as_secs_f64() < 5.0 {
+            for c in &compressed { total += engine.decompress(c).unwrap().len(); }
+        }
+    } else {
+        while t0.elapsed().as_secs_f64() < 5.0 {
+            for b in &baskets { total += engine.compress(b, &s).len(); }
+        }
+    }
+    println!("{} bytes", total);
+}

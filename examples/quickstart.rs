@@ -1,0 +1,73 @@
+//! Quickstart: write a small tree with two compression settings, read it
+//! back, and print per-branch compression statistics.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use rootio::compression::{Algorithm, Settings};
+use rootio::precond::Precond;
+use rootio::rfile::{write_tree_serial, BranchDef, BranchType, TreeReader, Value};
+use rootio::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let path = std::env::temp_dir().join("rootio_quickstart.rfil");
+
+    // 1. Define a schema: a scalar, a jagged array (note the offset-array
+    //    machinery this creates — the paper's Fig-6 subject), and a flag.
+    let branches = vec![
+        BranchDef::new("nHit", BranchType::I32),
+        // Per-branch override: LZ4 with the BitShuffle preconditioner.
+        BranchDef::new("Hit_energy", BranchType::VarF32)
+            .with_settings(Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4))),
+        BranchDef::new("is_calibrated", BranchType::Bool),
+    ];
+
+    // 2. Generate and write 5000 events (tree default: ZSTD-5).
+    let mut rng = Rng::new(7);
+    let events: Vec<Vec<Value>> = (0..5000)
+        .map(|_| {
+            let n = rng.poisson(4.0) as usize;
+            vec![
+                Value::I32(n as i32),
+                Value::AF32((0..n).map(|_| rng.exponential(0.1) as f32).collect()),
+                Value::Bool(rng.chance(0.9)),
+            ]
+        })
+        .collect();
+    let meta = write_tree_serial(
+        &path,
+        "Hits",
+        branches,
+        Settings::new(Algorithm::Zstd, 5),
+        16 * 1024,
+        events.iter().cloned(),
+    )?;
+    println!("wrote {} events in {} baskets to {}", meta.n_entries, meta.baskets.len(), path.display());
+
+    // 3. Read back and verify.
+    let mut reader = TreeReader::open(&path)?;
+    let back = reader.read_all_events()?;
+    assert_eq!(back, events);
+    println!("read back OK ({} events)", back.len());
+
+    // 4. Per-branch stats.
+    println!("\n{:<16} {:>10} {:>12} {:>7}", "branch", "raw", "compressed", "ratio");
+    for (i, b) in reader.meta.branches.iter().enumerate() {
+        let (raw, comp): (u64, u64) = reader
+            .baskets_for(i as u32)
+            .iter()
+            .map(|l| (l.uncompressed_len as u64, l.compressed_len as u64))
+            .fold((0, 0), |acc, x| (acc.0 + x.0, acc.1 + x.1));
+        println!(
+            "{:<16} {:>10} {:>12} {:>7.3}   [{}]",
+            b.name,
+            raw,
+            comp,
+            raw as f64 / comp.max(1) as f64,
+            b.settings.map(|s| s.label()).unwrap_or("tree default".into()),
+        );
+    }
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

@@ -1,0 +1,68 @@
+"""AOT lowering: jit(analyze) -> HLO *text* artifacts for the rust runtime.
+
+HLO text (not `.serialize()` / serialized HloModuleProto) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids that the
+xla_extension 0.5.1 bundled with the published `xla` crate rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py and its README.
+
+One artifact per basket-size bucket so shapes stay static (no recompiles on
+the request path). Buckets are multiples of 8*STRIDE and of the Pallas
+TILE_ELEMS*STRIDE so the gridded kernel tiles exactly.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import analyze, NUM_FEATURES, STRIDE
+
+#: Basket-prefix sizes (bytes) we compile analyzers for. Rust picks the
+#: largest bucket <= basket size (and skips analysis below the smallest).
+BUCKETS = (4096, 32768, 262144)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.int32)
+    lowered = jax.jit(analyze).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-artifact path (Makefile stamp)")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    for n in BUCKETS:
+        assert n % (8 * STRIDE) == 0
+        text = lower_bucket(n)
+        path = out_dir / f"analyzer_{n}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars, input int32[{n}], output f32[{NUM_FEATURES}])")
+
+    # Stamp file used by the Makefile to detect staleness.
+    stamp = pathlib.Path(args.out) if args.out else out_dir / "model.hlo.txt"
+    stamp.write_text(
+        "\n".join(f"analyzer_{n}.hlo.txt" for n in BUCKETS) + "\n"
+    )
+    print(f"wrote {stamp} (artifact manifest)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: BitShuffle — the paper's Fig-6 preconditioner as a
+TPU-shaped tile kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper is CPU-only,
+so the mapping exercise is expressing the bit-matrix transpose for a vector
+unit. On TPU the natural shape is: the grid walks element-tiles of the
+basket; each step loads a `[TILE_ELEMS, stride]` byte tile into VMEM
+(BlockSpec below), unpacks to bit planes with lane-wise shifts (VPU work —
+no MXU involvement), packs LSB-first, and writes the `[stride*8, TILE_ELEMS/8]`
+plane tile back. VMEM estimate for the default 32 KiB basket at stride 4:
+8192×4 int32 in + 8×8192 bit expansion ≈ 1.3 MiB, comfortably inside the
+~16 MiB VMEM budget; larger baskets raise the grid count, not the tile.
+
+MUST run interpret=True here: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elements per grid step. 1024 elements × stride bytes per tile.
+TILE_ELEMS = 1024
+
+
+def _bitshuffle_kernel(x_ref, o_ref):
+    """One tile: x_ref int32[(TILE, stride)] -> o_ref int32[(stride*8, TILE//8)]."""
+    x = x_ref[...]
+    tile, stride = x.shape
+    bits = (x[:, :, None] >> jnp.arange(8, dtype=x.dtype)[None, None, :]) & 1
+    planes = jnp.transpose(bits, (1, 2, 0)).reshape(stride * 8, tile)
+    grouped = planes.reshape(stride * 8, tile // 8, 8)
+    weights = (1 << jnp.arange(8, dtype=x.dtype))[None, None, :]
+    o_ref[...] = jnp.sum(grouped * weights, axis=-1, dtype=x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitshuffle(x, interpret=True):
+    """BitShuffle via pallas_call. x: int32[(nelem, stride)], nelem % 8 == 0.
+
+    Returns int32[(stride*8, nelem//8)]. For nelem <= TILE_ELEMS a single
+    tile; otherwise the grid walks element blocks (nelem must then be a
+    multiple of TILE_ELEMS — the AOT wrapper pads basket buckets to this).
+    """
+    nelem, stride = x.shape
+    if nelem % 8 != 0:
+        raise ValueError("nelem must be a multiple of 8")
+    if nelem <= TILE_ELEMS:
+        return pl.pallas_call(
+            _bitshuffle_kernel,
+            out_shape=jax.ShapeDtypeStruct((stride * 8, nelem // 8), x.dtype),
+            interpret=interpret,
+        )(x)
+    if nelem % TILE_ELEMS != 0:
+        raise ValueError("nelem must be a multiple of TILE_ELEMS for gridding")
+    grid = nelem // TILE_ELEMS
+    return pl.pallas_call(
+        _bitshuffle_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((TILE_ELEMS, stride), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((stride * 8, TILE_ELEMS // 8), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((stride * 8, nelem // 8), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _shuffle_kernel(x_ref, o_ref):
+    """Byte Shuffle tile kernel: transpose [TILE, stride] -> [stride, TILE]."""
+    o_ref[...] = jnp.transpose(x_ref[...], (1, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def shuffle(x, interpret=True):
+    """Blosc byte-Shuffle via pallas_call. x: int32[(nelem, stride)]."""
+    nelem, stride = x.shape
+    if nelem <= TILE_ELEMS:
+        return pl.pallas_call(
+            _shuffle_kernel,
+            out_shape=jax.ShapeDtypeStruct((stride, nelem), x.dtype),
+            interpret=interpret,
+        )(x)
+    if nelem % TILE_ELEMS != 0:
+        raise ValueError("nelem must be a multiple of TILE_ELEMS for gridding")
+    grid = nelem // TILE_ELEMS
+    return pl.pallas_call(
+        _shuffle_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((TILE_ELEMS, stride), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((stride, TILE_ELEMS), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((stride, nelem), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,74 @@
+"""Pure-jnp reference oracles for the Pallas kernels and the analyzer.
+
+This is the CORE correctness signal for the Python layer: the Pallas
+kernel(s) in bitshuffle.py must agree with these references bit-for-bit, and
+the rust `precond::bitshuffle` implements the same layout contract (the
+cross-language golden test in python/tests/test_kernel.py pins it).
+
+Layout contract (shared with rust/src/precond/bitshuffle.rs):
+  * input: `nelem` elements of `stride` bytes, nelem % 8 == 0;
+  * bit index within an element: byte*8 + bit, bit 0 = LSB of byte 0;
+  * output plane k holds bit k of every element, packed LSB-first
+    (element 8i+j -> bit j of plane byte i), planes concatenated in order.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bitshuffle_ref(x):
+    """Bit-transpose. x: int32[(nelem, stride)] with byte values 0..255.
+
+    Returns int32[(stride * 8, nelem // 8)] of packed plane bytes.
+    """
+    nelem, stride = x.shape
+    assert nelem % 8 == 0, "reference requires a multiple of 8 elements"
+    # bits[e, b, i] = bit i of byte b of element e
+    bits = (x[:, :, None] >> jnp.arange(8, dtype=x.dtype)[None, None, :]) & 1
+    # plane index k = b*8 + i  ->  reorder to [b, i, e] then flatten planes
+    planes = jnp.transpose(bits, (1, 2, 0)).reshape(stride * 8, nelem)
+    # pack: element 8i+j -> bit j of output byte i (LSB-first)
+    grouped = planes.reshape(stride * 8, nelem // 8, 8)
+    weights = (1 << jnp.arange(8, dtype=x.dtype))[None, None, :]
+    return jnp.sum(grouped * weights, axis=-1, dtype=x.dtype)
+
+
+def shuffle_ref(x):
+    """Byte shuffle (Blosc Shuffle). x: int32[(nelem, stride)].
+
+    Returns int32[(stride, nelem)] — byte k of every element contiguous.
+    """
+    return jnp.transpose(x, (1, 0))
+
+
+def byte_entropy_ref(buf):
+    """Shannon entropy (bits/byte) of int32 byte values 0..255."""
+    hist = jnp.zeros(256, dtype=jnp.float32).at[buf].add(1.0)
+    p = hist / jnp.maximum(buf.shape[0], 1)
+    logp = jnp.where(p > 0, jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0)
+    return -jnp.sum(p * logp)
+
+
+def repeat_fraction_ref(buf):
+    """Fraction of adjacent equal byte pairs."""
+    if buf.shape[0] < 2:
+        return jnp.float32(0.0)
+    return jnp.mean((buf[1:] == buf[:-1]).astype(jnp.float32))
+
+
+def bitshuffle_numpy(data: bytes, stride: int) -> bytes:
+    """Byte-level mirror of rust precond::bitshuffle (incl. tail rules).
+
+    Used by the cross-language golden test.
+    """
+    arr = np.frombuffer(data, dtype=np.uint8)
+    n = arr.shape[0]
+    if stride == 0 or n < stride * 8:
+        return arr.tobytes()
+    nelem_total = n // stride
+    nelem = nelem_total & ~7
+    body = nelem * stride
+    x = arr[:body].reshape(nelem, stride).astype(np.int32)
+    planes = np.asarray(bitshuffle_ref(jnp.asarray(x)))
+    out = np.concatenate([planes.astype(np.uint8).reshape(-1), arr[body:]])
+    return out.tobytes()

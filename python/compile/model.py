@@ -1,0 +1,67 @@
+"""L2 JAX model: the basket analyzer.
+
+The paper's §3 calls for I/O API improvements "to ease the switch between
+compression algorithms and settings for different use cases"; our adaptive
+planner is that feature. The heavy array math — byte histograms, entropies
+of four candidate views (raw / Shuffle / BitShuffle / Delta), and run
+proxies — is expressed here as one jitted function, calls the L1 Pallas
+BitShuffle kernel so it lowers into the same HLO module, and is AOT-compiled
+once by aot.py. The rust coordinator executes the artifact via PJRT and
+applies cheap threshold logic to the returned feature vector; Python never
+runs at request time.
+
+Input : int32[(n,)]  byte values 0..255 of a basket prefix (fixed n per
+                     bucket; rust truncates/samples the basket to fit).
+Output: f32[(NUM_FEATURES,)] — see FEATURES.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.bitshuffle import bitshuffle
+from .kernels.ref import byte_entropy_ref, repeat_fraction_ref
+
+#: Preconditioner stride the analyzer evaluates (the dominant element size
+#: in ROOT baskets: f32/i32 are both 4 bytes).
+STRIDE = 4
+
+FEATURES = (
+    "H_raw",          # entropy of raw bytes
+    "H_shuffle",      # entropy after byte-Shuffle(stride)
+    "H_bitshuffle",   # entropy after BitShuffle(stride)
+    "H_delta",        # entropy after Delta(stride)
+    "rep_raw",        # adjacent-equal fraction, raw
+    "rep_bitshuffle", # adjacent-equal fraction, bitshuffled
+    "zero_bitshuffle",# fraction of 0x00/0xFF plane bytes after BitShuffle
+    "rep_shuffle",    # adjacent-equal fraction after byte-Shuffle
+)
+NUM_FEATURES = len(FEATURES)
+
+
+def analyze(buf):
+    """Feature extraction over one basket prefix. buf: int32[(n,)], n % (8*STRIDE) == 0."""
+    n = buf.shape[0]
+    assert n % (8 * STRIDE) == 0, "bucket sizes are multiples of 8*stride"
+    x = buf.reshape(n // STRIDE, STRIDE)
+
+    # Candidate views.
+    shuf = jnp.transpose(x, (1, 0)).reshape(-1)
+    planes = bitshuffle(x).reshape(-1)  # L1 Pallas kernel
+    prev = jnp.concatenate([buf[:STRIDE], buf[:-STRIDE]])
+    delta = jnp.bitwise_and(buf - prev, 255)
+
+    h_raw = byte_entropy_ref(buf)
+    h_shuf = byte_entropy_ref(shuf)
+    h_bits = byte_entropy_ref(planes)
+    h_delta = byte_entropy_ref(delta)
+    rep_raw = repeat_fraction_ref(buf)
+    rep_bits = repeat_fraction_ref(planes)
+    zero_bits = jnp.mean(
+        jnp.logical_or(planes == 0, planes == 255).astype(jnp.float32)
+    )
+    rep_shuf = repeat_fraction_ref(shuf)
+
+    return (
+        jnp.stack(
+            [h_raw, h_shuf, h_bits, h_delta, rep_raw, rep_bits, zero_bits, rep_shuf]
+        ).astype(jnp.float32),
+    )

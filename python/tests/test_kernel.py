@@ -1,0 +1,109 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp reference, swept with
+hypothesis over shapes/strides/contents, plus layout-contract goldens that
+pin the cross-language agreement with rust/src/precond/bitshuffle.rs."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.bitshuffle import bitshuffle, shuffle, TILE_ELEMS
+from compile.kernels.ref import bitshuffle_ref, bitshuffle_numpy, shuffle_ref
+
+
+def _rand_bytes(rng, nelem, stride):
+    return rng.integers(0, 256, size=(nelem, stride), dtype=np.int32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nelem8=st.integers(min_value=1, max_value=96),
+    stride=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_bitshuffle_matches_ref_single_tile(nelem8, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(_rand_bytes(rng, 8 * nelem8, stride))
+    got = np.asarray(bitshuffle(x))
+    want = np.asarray(bitshuffle_ref(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tiles=st.integers(min_value=2, max_value=4),
+    stride=st.sampled_from([1, 4]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_bitshuffle_gridded_matches_ref(tiles, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(_rand_bytes(rng, tiles * TILE_ELEMS, stride))
+    got = np.asarray(bitshuffle(x))
+    want = np.asarray(bitshuffle_ref(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nelem=st.integers(min_value=8, max_value=512),
+    stride=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_shuffle_matches_ref(nelem, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(_rand_bytes(rng, nelem, stride))
+    got = np.asarray(shuffle(x))
+    want = np.asarray(shuffle_ref(x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_layout_contract_single_bit():
+    """Same golden as rust's `single_bit_lands_in_right_plane` test:
+    8 elements x 2 bytes, element 3 has bit 5 of byte 1 set ->
+    plane 13, byte 0, bit 3."""
+    x = np.zeros((8, 2), dtype=np.int32)
+    x[3, 1] = 1 << 5
+    got = np.asarray(bitshuffle(jnp.asarray(x)))
+    assert got.shape == (16, 1)
+    for plane in range(16):
+        expect = (1 << 3) if plane == 13 else 0
+        assert got[plane, 0] == expect, f"plane {plane}"
+
+
+def test_monotone_offsets_mostly_zero():
+    """Fig-6 mechanism: BE-serialized offsets 1..512 leave only low bit
+    planes non-constant (mirrors the rust test)."""
+    offs = np.arange(1, 513, dtype=">u4").tobytes()
+    x = np.frombuffer(offs, dtype=np.uint8).reshape(512, 4).astype(np.int32)
+    got = np.asarray(bitshuffle(jnp.asarray(x)))
+    zeros = int((got == 0).sum())
+    assert zeros > 0.6 * got.size, f"zeros={zeros}/{got.size}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nbytes=st.integers(min_value=0, max_value=2000),
+    stride=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_numpy_mirror_is_self_consistent(nbytes, stride, seed):
+    """bitshuffle_numpy (the byte-level mirror incl. tail handling) must be
+    a permutation-with-tail of the input: same multiset of bytes in body,
+    identical tail bytes."""
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, size=nbytes, dtype=np.uint8).tobytes()
+    out = bitshuffle_numpy(data, stride)
+    assert len(out) == len(data)
+    if stride > 0 and nbytes >= stride * 8:
+        nelem = (nbytes // stride) & ~7
+        body = nelem * stride
+        assert out[body:] == data[body:]
+
+
+def test_interpret_flag_required_for_cpu():
+    """Document the constraint: interpret=False would lower to a Mosaic
+    custom-call; on CPU we always pass interpret=True (default)."""
+    x = jnp.zeros((8, 4), dtype=jnp.int32)
+    out = bitshuffle(x)  # default interpret=True must work on CPU
+    assert out.shape == (32, 1)

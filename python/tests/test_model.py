@@ -1,0 +1,97 @@
+"""L2 correctness: analyzer features vs a plain-numpy reference, and the
+AOT artifacts' shape contract."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.model import analyze, NUM_FEATURES, STRIDE
+from compile.aot import BUCKETS, lower_bucket
+
+
+def entropy_np(b):
+    hist = np.bincount(b, minlength=256).astype(np.float64)
+    p = hist / max(len(b), 1)
+    nz = p[p > 0]
+    return float(-(nz * np.log2(nz)).sum())
+
+
+def features_np(buf):
+    n = len(buf)
+    x = buf.reshape(n // STRIDE, STRIDE)
+    shuf = x.T.reshape(-1)
+    # BitShuffle via the reference mirror.
+    from compile.kernels.ref import bitshuffle_numpy
+
+    planes = np.frombuffer(
+        bitshuffle_numpy(buf.astype(np.uint8).tobytes(), STRIDE), dtype=np.uint8
+    ).astype(np.int64)
+    prev = np.concatenate([buf[:STRIDE], buf[:-STRIDE]])
+    delta = (buf - prev) & 255
+    rep = lambda a: float((a[1:] == a[:-1]).mean()) if len(a) > 1 else 0.0
+    return np.array(
+        [
+            entropy_np(buf),
+            entropy_np(shuf),
+            entropy_np(planes),
+            entropy_np(delta),
+            rep(buf),
+            rep(planes),
+            float(((planes == 0) | (planes == 255)).mean()),
+            rep(shuf),
+        ],
+        dtype=np.float32,
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31), kind=st.sampled_from(["noise", "offsets", "runs"]))
+def test_analyze_matches_numpy(seed, kind):
+    rng = np.random.default_rng(seed)
+    n = 4096
+    if kind == "noise":
+        buf = rng.integers(0, 256, size=n, dtype=np.int64)
+    elif kind == "offsets":
+        offs = np.arange(1, n // 4 + 1, dtype=">u4").tobytes()
+        buf = np.frombuffer(offs, dtype=np.uint8).astype(np.int64)
+    else:
+        buf = np.repeat(rng.integers(0, 256, size=n // 64, dtype=np.int64), 64)
+    (got,) = analyze(jnp.asarray(buf, dtype=jnp.int32))
+    want = features_np(buf)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_feature_separation_on_canonical_inputs():
+    """The planner's signal: offset arrays must show a big entropy drop
+    under BitShuffle; noise must not."""
+    n = 4096
+    offs = np.arange(1, n // 4 + 1, dtype=">u4").tobytes()
+    buf_off = np.frombuffer(offs, dtype=np.uint8).astype(np.int64)
+    (f_off,) = analyze(jnp.asarray(buf_off, dtype=jnp.int32))
+    f_off = np.asarray(f_off)
+    assert f_off[2] < 0.5 * f_off[0], f"bitshuffle entropy {f_off[2]} vs raw {f_off[0]}"
+
+    rng = np.random.default_rng(0)
+    buf_noise = rng.integers(0, 256, size=n, dtype=np.int64)
+    (f_noise,) = analyze(jnp.asarray(buf_noise, dtype=jnp.int32))
+    f_noise = np.asarray(f_noise)
+    assert f_noise[2] > 0.95 * f_noise[0]
+
+
+@pytest.mark.parametrize("n", BUCKETS)
+def test_buckets_lower_to_hlo(n):
+    text = lower_bucket(n)
+    assert "HloModule" in text
+    # Output tuple of one f32[NUM_FEATURES] array.
+    assert f"f32[{NUM_FEATURES}]" in text
+
+
+def test_bucket_sizes_are_tileable():
+    from compile.kernels.bitshuffle import TILE_ELEMS
+
+    for n in BUCKETS:
+        nelem = n // STRIDE
+        assert n % (8 * STRIDE) == 0
+        assert nelem <= TILE_ELEMS or nelem % TILE_ELEMS == 0

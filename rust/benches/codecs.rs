@@ -1,0 +1,75 @@
+//! `cargo bench --bench codecs` — microbenchmarks of the codec substrates:
+//! per-codec compress/decompress on canonical payload classes, plus the
+//! preconditioner transforms themselves. These are the profiling anchors
+//! for the §Perf optimization pass.
+
+use rootio::bench::{bench, BenchConfig, Table};
+use rootio::compression::{Algorithm, Engine, Settings};
+use rootio::precond;
+use rootio::util::rng::Rng;
+
+fn payloads() -> Vec<(&'static str, Vec<u8>)> {
+    let mut rng = Rng::new(0xC0DEC);
+    let mut v: Vec<(&'static str, Vec<u8>)> = Vec::new();
+    // Offset-array class (Fig 6 pathology).
+    v.push(("offsets", (1u32..=65_536).flat_map(|i| i.to_be_bytes()).collect()));
+    // Serialized floats (kinematics).
+    v.push((
+        "floats",
+        (0..65_536).flat_map(|i| ((i as f32 * 0.37).sin() * 50.0).to_be_bytes()).collect(),
+    ));
+    // Text-ish (labels / json-like).
+    let mut text = Vec::new();
+    while text.len() < 256 * 1024 {
+        text.extend_from_slice(b"\"Muon_pt\": [31.4, 17.2], \"HLT_IsoMu24\": true, ");
+    }
+    v.push(("text", text));
+    // Incompressible.
+    v.push(("noise", rng.bytes(256 * 1024)));
+    v
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut engine = Engine::new();
+    let mut table = Table::new(&["payload", "setting", "ratio", "compress_MB_s", "decompress_MB_s"]);
+    for (pname, data) in payloads() {
+        for s in [
+            Settings::new(Algorithm::Zlib, 6),
+            Settings::new(Algorithm::CfZlib, 6),
+            Settings::new(Algorithm::Lz4, 1),
+            Settings::new(Algorithm::Zstd, 5),
+            Settings::new(Algorithm::Lzma, 6),
+            Settings::new(Algorithm::OldRoot, 6),
+        ] {
+            let c = engine.compress(&data, &s);
+            let rc = bench("c", data.len(), &cfg, || engine.compress(&data, &s).len());
+            let rd = bench("d", data.len(), &cfg, || engine.decompress(&c).unwrap().len());
+            table.row(vec![
+                pname.into(),
+                s.label(),
+                format!("{:.3}", data.len() as f64 / c.len() as f64),
+                format!("{:.1}", rc.mbps()),
+                format!("{:.1}", rd.mbps()),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    table.save_csv("codecs").unwrap();
+
+    // Preconditioner transform throughput (hot path on both write & read).
+    let mut t2 = Table::new(&["transform", "MB_s"]);
+    let data = payloads().swap_remove(0).1;
+    for (name, f) in [
+        ("shuffle4-fwd", Box::new(|d: &[u8]| precond::shuffle(d, 4)) as Box<dyn Fn(&[u8]) -> Vec<u8>>),
+        ("shuffle4-inv", Box::new(|d: &[u8]| precond::unshuffle(d, 4))),
+        ("bitshuffle4-fwd", Box::new(|d: &[u8]| precond::bitshuffle(d, 4))),
+        ("bitshuffle4-inv", Box::new(|d: &[u8]| precond::unbitshuffle(d, 4))),
+        ("delta4-fwd", Box::new(|d: &[u8]| precond::delta(d, 4))),
+    ] {
+        let r = bench(name, data.len(), &cfg, || f(&data).len());
+        t2.row(vec![name.into(), format!("{:.0}", r.mbps())]);
+    }
+    println!("{}", t2.render());
+    t2.save_csv("precond").unwrap();
+}

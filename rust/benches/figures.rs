@@ -1,0 +1,26 @@
+//! `cargo bench --bench figures` — regenerates every paper figure
+//! (Fig 2-6 + the dict study + pipeline scaling). Set BENCH_QUICK=1 for a
+//! fast smoke run. CSVs land in results/.
+
+use rootio::bench::figures::run_figure;
+use rootio::bench::BenchConfig;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let all = ["fig2", "fig3", "fig4", "fig5", "fig6", "dict", "scaling"];
+    let wanted: Vec<&str> = if args.is_empty() {
+        all.to_vec()
+    } else {
+        all.iter().copied().filter(|n| args.iter().any(|a| a == n)).collect()
+    };
+    let cfg = BenchConfig::from_env();
+    for name in wanted {
+        match run_figure(name, &cfg) {
+            Ok((out, _)) => println!("== {name} ==\n{out}\n"),
+            Err(e) => {
+                eprintln!("{name} failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench --bench pipeline` — L3 pipeline scaling + serial-vs-parallel
+//! comparison on the NanoAOD workload (the end-to-end throughput the
+//! paper's Run-3 motivation cares about).
+
+use rootio::bench::figures::run_figure;
+use rootio::bench::BenchConfig;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    match run_figure("scaling", &cfg) {
+        Ok((out, _)) => println!("== pipeline scaling ==\n{out}"),
+        Err(e) => {
+            eprintln!("scaling failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Minimal benchmarking harness (criterion is not in the offline crate
+//! set): warmup, fixed-time sampling, robust statistics, CSV output.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(120),
+            min_samples: 3,
+            max_samples: 30,
+        }
+    }
+
+    /// Read BENCH_QUICK env to pick a profile (used by `cargo bench`).
+    pub fn from_env() -> Self {
+        if std::env::var("BENCH_QUICK").is_ok() {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time statistics (seconds).
+    pub time: Summary,
+    /// Bytes processed per iteration (for throughput).
+    pub bytes: usize,
+}
+
+impl BenchResult {
+    /// Median throughput in MB/s (decimal, as the paper plots).
+    pub fn mbps(&self) -> f64 {
+        if self.time.median == 0.0 {
+            return f64::INFINITY;
+        }
+        self.bytes as f64 / 1e6 / self.time.median
+    }
+}
+
+/// Run one benchmark: `f` is invoked repeatedly; it must do the whole unit
+/// of work (e.g. compress one buffer) and return a value to keep the
+/// optimizer honest.
+pub fn bench<R>(name: &str, bytes: usize, cfg: &BenchConfig, mut f: impl FnMut() -> R) -> BenchResult {
+    // Warmup.
+    let t0 = Instant::now();
+    while t0.elapsed() < cfg.warmup {
+        std::hint::black_box(f());
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while (t0.elapsed() < cfg.measure || samples.len() < cfg.min_samples)
+        && samples.len() < cfg.max_samples
+    {
+        let s = Instant::now();
+        std::hint::black_box(f());
+        samples.push(s.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        time: Summary::from_samples(&samples),
+        bytes,
+    }
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV serialization (headers + rows).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV under results/ (created on demand).
+    pub fn save_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 3,
+            max_samples: 50,
+        };
+        let r = bench("noop-ish", 1_000_000, &cfg, || {
+            std::hint::black_box((0..1000u64).sum::<u64>())
+        });
+        assert!(r.time.n >= 3);
+        assert!(r.time.median > 0.0);
+        assert!(r.mbps() > 0.0);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new(&["name", "MB/s"]);
+        t.row(vec!["LZ4-1".into(), "800.5".into()]);
+        t.row(vec!["ZLIB-6".into(), "35.2".into()]);
+        let s = t.render();
+        assert!(s.contains("LZ4-1"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("name,MB/s\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

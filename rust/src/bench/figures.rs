@@ -1,0 +1,479 @@
+//! Figure harnesses: regenerate every figure of the paper's evaluation.
+//!
+//! Each `fig*` function produces the same series the paper plots (as a
+//! [`Table`] printed to stdout and saved as CSV under `results/`). See
+//! DESIGN.md §4 for the per-experiment index and the substitution notes
+//! (platforms → tuning profiles, hardware CRC32 → checksum backends).
+
+use super::benchkit::{bench, BenchConfig, Table};
+use crate::checksum::{adler32, crc32};
+use crate::compression::{Algorithm, Engine, Settings};
+use crate::deflate::tuning::{Flavor, Tuning};
+use crate::deflate::zlib::zlib_compress_custom;
+use crate::gen::{nanoaod, synthetic};
+use crate::precond::Precond;
+use crate::rfile::writer::BasketSink;
+use crate::rfile::{BasketLoc, BranchDef, PendingBasket, TreeWriter, Value};
+use anyhow::Result;
+
+/// In-memory sink that captures uncompressed baskets (no file I/O), letting
+/// the figure harnesses benchmark pure codec work over realistic baskets.
+#[derive(Default)]
+struct CollectSink {
+    baskets: Vec<PendingBasket>,
+}
+
+impl BasketSink for CollectSink {
+    fn submit(&mut self, basket: PendingBasket, _settings: Settings) -> Result<()> {
+        self.baskets.push(basket);
+        Ok(())
+    }
+    fn finish(&mut self) -> Result<Vec<BasketLoc>> {
+        Ok(Vec::new())
+    }
+}
+
+/// Serialize a workload into per-branch logical basket payloads.
+pub fn collect_baskets(
+    branches: Vec<BranchDef>,
+    events: &[Vec<Value>],
+    basket_size: usize,
+) -> Vec<PendingBasket> {
+    let mut tw = TreeWriter::new(
+        "bench",
+        branches,
+        Settings::new(Algorithm::None, 0),
+        basket_size,
+        CollectSink::default(),
+    );
+    for ev in events {
+        tw.fill(ev).expect("fill");
+    }
+    let (_, sink) = tw.finalize().expect("finalize");
+    sink.baskets
+}
+
+/// The paper's §2 test workload as logical basket payloads.
+pub fn paper_baskets(basket_size: usize) -> Vec<Vec<u8>> {
+    let (schema, events) = synthetic::paper_tree();
+    collect_baskets(schema, &events, basket_size)
+        .into_iter()
+        .map(|b| b.logical_payload())
+        .collect()
+}
+
+fn total_len(bufs: &[Vec<u8>]) -> usize {
+    bufs.iter().map(|b| b.len()).sum()
+}
+
+/// The (algorithm, level) grid of Fig 2/3. LZMA gets fewer levels (its
+/// level axis barely moves ratio in our simplified model and it is slow).
+pub fn survey_grid() -> Vec<(Algorithm, Vec<u8>)> {
+    vec![
+        (Algorithm::Zlib, vec![1, 3, 6, 9]),
+        (Algorithm::CfZlib, vec![1, 3, 6, 9]),
+        (Algorithm::Lz4, vec![1, 4, 6, 9]),
+        (Algorithm::Zstd, vec![1, 3, 5, 9]),
+        (Algorithm::Lzma, vec![1, 6, 9]),
+        (Algorithm::OldRoot, vec![1, 6]),
+    ]
+}
+
+/// Fig 2: compression speed vs compression ratio per {algorithm × level}
+/// on the artificial 2000-event tree.
+pub fn fig2(cfg: &BenchConfig) -> Table {
+    let baskets = paper_baskets(32 * 1024);
+    let raw = total_len(&baskets);
+    let mut table = Table::new(&["algorithm", "level", "ratio", "compress_MB_s", "compressed_bytes"]);
+    let mut engine = Engine::new();
+    for (alg, levels) in survey_grid() {
+        for level in levels {
+            let s = Settings::new(alg, level);
+            let compressed: usize = baskets.iter().map(|b| engine.compress(b, &s).len()).sum();
+            let r = bench(&s.label(), raw, cfg, || {
+                let mut total = 0usize;
+                for b in &baskets {
+                    total += engine.compress(b, &s).len();
+                }
+                total
+            });
+            let ratio = raw as f64 / compressed as f64;
+            table.row(vec![
+                alg.label().to_string(),
+                level.to_string(),
+                format!("{ratio:.3}"),
+                format!("{:.1}", r.mbps()),
+                compressed.to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+/// Fig 3: decompression speed reading the file back, by algorithm at input
+/// levels 0, 1, 6, 9. Key shape: decode speed ≈ f(algorithm), not level;
+/// LZ4 far ahead.
+pub fn fig3(cfg: &BenchConfig) -> Table {
+    let baskets = paper_baskets(32 * 1024);
+    let raw = total_len(&baskets);
+    let mut table = Table::new(&["algorithm", "level", "decompress_MB_s"]);
+    let mut engine = Engine::new();
+    let algos = [
+        Algorithm::None,
+        Algorithm::Zlib,
+        Algorithm::CfZlib,
+        Algorithm::Lz4,
+        Algorithm::Zstd,
+        Algorithm::Lzma,
+    ];
+    for alg in algos {
+        let levels: &[u8] = if alg == Algorithm::None { &[0] } else { &[1, 6, 9] };
+        for &level in levels {
+            let s = Settings::new(alg, level);
+            let compressed: Vec<Vec<u8>> =
+                baskets.iter().map(|b| engine.compress(b, &s)).collect();
+            let r = bench(&format!("dec-{}", s.label()), raw, cfg, || {
+                let mut total = 0usize;
+                for c in &compressed {
+                    total += engine.decompress(c).expect("decompress").len();
+                }
+                total
+            });
+            table.row(vec![
+                alg.label().to_string(),
+                level.to_string(),
+                format!("{:.1}", r.mbps()),
+            ]);
+        }
+    }
+    table
+}
+
+/// Fig 4: CF-ZLIB patch-set speedup vs reference ZLIB, levels 1..9, two
+/// workload regimes standing in for the paper's laptop/server platforms
+/// (see DESIGN.md's substitution table).
+pub fn fig4(cfg: &BenchConfig) -> Table {
+    let regimes: Vec<(&str, Vec<Vec<u8>>)> = vec![
+        ("laptop(32K baskets)", paper_baskets(32 * 1024)),
+        ("server(256K baskets)", {
+            let (schema, _) = synthetic::paper_tree();
+            let events = synthetic::events(8000, 0x5E4E);
+            collect_baskets(schema, &events, 256 * 1024)
+                .into_iter()
+                .map(|b| b.logical_payload())
+                .collect()
+        }),
+    ];
+    let mut table = Table::new(&["regime", "level", "ZLIB_MB_s", "CF_ZLIB_MB_s", "speedup"]);
+    for (regime, baskets) in &regimes {
+        let raw = total_len(baskets);
+        for level in 1..=9u8 {
+            let t_ref = Tuning::new(Flavor::Reference, level);
+            let t_cf = Tuning::new(Flavor::Cloudflare, level);
+            let r_ref = bench("zlib", raw, cfg, || {
+                baskets.iter().map(|b| zlib_compress_custom(b, &t_ref).len()).sum::<usize>()
+            });
+            let r_cf = bench("cf", raw, cfg, || {
+                baskets.iter().map(|b| zlib_compress_custom(b, &t_cf).len()).sum::<usize>()
+            });
+            table.row(vec![
+                regime.to_string(),
+                level.to_string(),
+                format!("{:.1}", r_ref.mbps()),
+                format!("{:.1}", r_cf.mbps()),
+                format!("{:.2}x", r_cf.mbps() / r_ref.mbps()),
+            ]);
+        }
+    }
+    table
+}
+
+/// Fig 5: checksum hardware axis — CF-ZLIB with "hardware-class" checksum
+/// kernels (SWAR adler32 / slice-by-8 crc32) vs software kernels (scalar /
+/// table). Also reports raw checksum throughput per backend.
+pub fn fig5(cfg: &BenchConfig) -> Table {
+    let baskets = paper_baskets(32 * 1024);
+    let raw = total_len(&baskets);
+    let mut table = Table::new(&["config", "level", "metric", "MB_s"]);
+
+    // Raw checksum kernel throughput (the paper's §2.1 hotspot).
+    let blob: Vec<u8> = baskets.concat();
+    for (name, backend) in [
+        ("adler32-scalar(sw)", adler32::Backend::Scalar),
+        ("adler32-unrolled16(zlib)", adler32::Backend::Unrolled),
+        ("adler32-swar(hw-class)", adler32::Backend::Swar),
+    ] {
+        let r = bench(name, blob.len(), cfg, || crate::checksum::adler32_with(&blob, backend));
+        table.row(vec![name.into(), "-".into(), "checksum".into(), format!("{:.0}", r.mbps())]);
+    }
+    for (name, backend) in [
+        ("crc32-bitwise(sw)", crc32::Backend::Bitwise),
+        ("crc32-table(sw)", crc32::Backend::Table),
+        ("crc32-slice8(hw-class)", crc32::Backend::Slice8),
+    ] {
+        let r = bench(name, blob.len(), cfg, || crate::checksum::crc32_with(&blob, backend));
+        table.row(vec![name.into(), "-".into(), "checksum".into(), format!("{:.0}", r.mbps())]);
+    }
+
+    // End-to-end CF-ZLIB with each checksum kernel (Fig 5's actual axis).
+    for level in [1u8, 6, 9] {
+        for (name, backend) in [
+            ("CF-ZLIB+sw-checksum", adler32::Backend::Scalar),
+            ("CF-ZLIB+hw-checksum", adler32::Backend::Swar),
+        ] {
+            let mut t = Tuning::new(Flavor::Cloudflare, level);
+            t.adler_backend = backend;
+            let r = bench(name, raw, cfg, || {
+                baskets.iter().map(|b| zlib_compress_custom(b, &t).len()).sum::<usize>()
+            });
+            table.row(vec![
+                name.into(),
+                level.to_string(),
+                "compress".into(),
+                format!("{:.1}", r.mbps()),
+            ]);
+        }
+    }
+    table
+}
+
+/// Fig 6: NanoAOD compression ratio — LZ4, LZ4+BitShuffle, ZLIB — plus the
+/// decode-speed column that motivates keeping LZ4.
+pub fn fig6(cfg: &BenchConfig, n_events: usize) -> Table {
+    let events = nanoaod::events(n_events, 0xF16);
+    let schema = nanoaod::schema();
+    let baskets = collect_baskets(schema.clone(), &events, 32 * 1024);
+    let mut engine = Engine::new();
+
+    let mut table = Table::new(&["setting", "file_ratio", "offsets_ratio", "decompress_MB_s"]);
+    // Branch classes: jagged branches' offset share is where BitShuffle acts.
+    let var_ids: Vec<u32> = schema
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| b.ty.is_var())
+        .map(|(i, _)| i as u32)
+        .collect();
+
+    for s in [
+        Settings::new(Algorithm::Lz4, 1),
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        Settings::new(Algorithm::Lz4, 9).with_precond(Precond::BitShuffle(4)),
+        Settings::new(Algorithm::Zlib, 1),
+        Settings::new(Algorithm::Zlib, 6),
+        Settings::new(Algorithm::Zstd, 5),
+    ] {
+        let mut raw_total = 0usize;
+        let mut comp_total = 0usize;
+        let mut raw_off = 0usize;
+        let mut comp_off = 0usize;
+        let mut compressed: Vec<Vec<u8>> = Vec::with_capacity(baskets.len());
+        for b in &baskets {
+            let logical = b.logical_payload();
+            let c = engine.compress(&logical, &s);
+            raw_total += logical.len();
+            comp_total += c.len();
+            if var_ids.contains(&b.branch_id) {
+                // Offset-array share: compress the offset half alone to
+                // attribute ratio (diagnostic column).
+                let off_bytes: Vec<u8> =
+                    b.offsets.iter().flat_map(|o| o.to_be_bytes()).collect();
+                if !off_bytes.is_empty() {
+                    raw_off += off_bytes.len();
+                    comp_off += engine.compress(&off_bytes, &s).len();
+                }
+            }
+            compressed.push(c);
+        }
+        let r = bench(&format!("dec-{}", s.label()), raw_total, cfg, || {
+            let mut total = 0usize;
+            for c in &compressed {
+                total += engine.decompress(c).expect("decompress").len();
+            }
+            total
+        });
+        table.row(vec![
+            s.label(),
+            format!("{:.3}", raw_total as f64 / comp_total as f64),
+            if raw_off > 0 {
+                format!("{:.3}", raw_off as f64 / comp_off as f64)
+            } else {
+                "-".into()
+            },
+            format!("{:.1}", r.mbps()),
+        ]);
+    }
+    table
+}
+
+/// §2.3 / future work: dictionary study on small baskets. Covers the ZSTD
+/// budget sweep AND the paper's cross-codec claim ("the generated
+/// dictionaries are useable for ZLIB and LZ4 as well") with one
+/// ZSTD-trained dictionary applied to all three codecs.
+pub fn dict_study(_cfg: &BenchConfig) -> Table {
+    let mut table =
+        Table::new(&["codec", "basket_bytes", "dict_bytes", "ratio_plain", "ratio_dict", "gain"]);
+    // ZSTD budget sweep.
+    for &rec_len in &[256usize, 1024, 4096] {
+        let corpus = crate::zstd::dict::synthetic_corpus(400, rec_len, 0xD1C7);
+        let (train, test) = corpus.split_at(300);
+        for &budget in &[1024usize, 4096, 16384] {
+            let dict = crate::zstd::dict::train_from_corpus(&train.to_vec(), budget);
+            let mut plain_total = 0usize;
+            let mut dict_total = 0usize;
+            let mut raw = 0usize;
+            for sample in test {
+                raw += sample.len();
+                plain_total += crate::zstd::zstd_compress_dict(sample, &[], 6).len();
+                dict_total += crate::zstd::zstd_compress_dict(sample, &dict, 6).len();
+            }
+            let rp = raw as f64 / plain_total as f64;
+            let rd = raw as f64 / dict_total as f64;
+            table.row(vec![
+                "ZSTD".into(),
+                rec_len.to_string(),
+                dict.len().to_string(),
+                format!("{rp:.3}"),
+                format!("{rd:.3}"),
+                format!("{:+.1}%", (rd / rp - 1.0) * 100.0),
+            ]);
+        }
+    }
+    // Cross-codec: one 8 KiB ZSTD-trained dictionary, 320-byte baskets.
+    let corpus = crate::zstd::dict::synthetic_corpus(400, 320, 0xD1C8);
+    let (train, test) = corpus.split_at(300);
+    let dict = crate::zstd::dict::train_from_corpus(&train.to_vec(), 8192);
+    let mut lz4 = crate::lz4::Lz4Encoder::new();
+    let raw: usize = test.iter().map(|s| s.len()).sum();
+    let mut rows: Vec<(&str, usize, usize)> = Vec::new();
+    {
+        let (mut p, mut d) = (0usize, 0usize);
+        for s in test {
+            p += crate::zstd::zstd_compress_dict(s, &[], 6).len();
+            d += crate::zstd::zstd_compress_dict(s, &dict, 6).len();
+        }
+        rows.push(("ZSTD(shared-dict)", p, d));
+    }
+    {
+        use crate::deflate::zlib::zlib_compress_dict;
+        use crate::deflate::Flavor;
+        let (mut p, mut d) = (0usize, 0usize);
+        for s in test {
+            p += crate::deflate::zlib_compress(s, Flavor::Cloudflare, 6).len();
+            d += zlib_compress_dict(s, &dict, Flavor::Cloudflare, 6).len();
+        }
+        rows.push(("ZLIB(FDICT)", p, d));
+    }
+    {
+        let (mut p, mut d) = (0usize, 0usize);
+        for s in test {
+            p += lz4.compress(s, crate::lz4::Lz4Method::Fast { accel: 1 }).len();
+            d += lz4
+                .compress_dict(s, &dict, crate::lz4::Lz4Method::Fast { accel: 1 })
+                .len();
+        }
+        rows.push(("LZ4(prefix-dict)", p, d));
+    }
+    for (name, p, d) in rows {
+        let rp = raw as f64 / p as f64;
+        let rd = raw as f64 / d as f64;
+        table.row(vec![
+            name.into(),
+            "320".into(),
+            dict.len().to_string(),
+            format!("{rp:.3}"),
+            format!("{rd:.3}"),
+            format!("{:+.1}%", (rd / rp - 1.0) * 100.0),
+        ]);
+    }
+    table
+}
+
+/// Pipeline scaling study (the L3 contribution): events/s and MB/s vs
+/// worker count on the NanoAOD workload.
+pub fn pipeline_scaling(_cfg: &BenchConfig, n_events: usize) -> Table {
+    use crate::coordinator::{write_tree_parallel, PipelineConfig};
+    let events = nanoaod::events(n_events, 0x5CA1E);
+    let mut table = Table::new(&["workers", "wall_s", "MB_s", "ratio", "baskets"]);
+    let max_workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut counts = vec![1usize, 2, 4];
+    if max_workers > 4 {
+        counts.push(max_workers);
+    }
+    for workers in counts {
+        let path = std::env::temp_dir().join(format!("rootio_scale_{workers}.rfil"));
+        let t0 = std::time::Instant::now();
+        let (_, snap) = write_tree_parallel(
+            &path,
+            "Events",
+            nanoaod::schema(),
+            Settings::new(Algorithm::Zstd, 5),
+            32 * 1024,
+            PipelineConfig { workers, queue_depth: workers * 4, dictionary: Vec::new() },
+            events.iter().cloned(),
+        )
+        .expect("pipeline write");
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            workers.to_string(),
+            format!("{wall:.2}"),
+            format!("{:.1}", snap.bytes_in as f64 / 1e6 / wall),
+            format!("{:.3}", snap.ratio()),
+            snap.baskets.to_string(),
+        ]);
+        std::fs::remove_file(&path).ok();
+    }
+    table
+}
+
+/// Run a named figure; returns rendered output.
+pub fn run_figure(name: &str, cfg: &BenchConfig) -> Result<(String, Table)> {
+    let table = match name {
+        "fig2" => fig2(cfg),
+        "fig3" => fig3(cfg),
+        "fig4" => fig4(cfg),
+        "fig5" => fig5(cfg),
+        "fig6" => fig6(cfg, 3000),
+        "dict" => dict_study(cfg),
+        "scaling" => pipeline_scaling(cfg, 2000),
+        _ => anyhow::bail!("unknown figure '{name}'"),
+    };
+    let csv_path = table.save_csv(name)?;
+    Ok((format!("{}\n(csv: {})", table.render(), csv_path.display()), table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_baskets_nonempty() {
+        let b = paper_baskets(32 * 1024);
+        assert!(b.len() >= 12, "at least one basket per branch: {}", b.len());
+        assert!(total_len(&b) > 100_000);
+    }
+
+    #[test]
+    fn collect_sink_covers_all_entries() {
+        let (schema, events) = synthetic::paper_tree();
+        let n_branches = schema.len();
+        let baskets = collect_baskets(schema, &events, 4096);
+        for br in 0..n_branches {
+            let total: u32 = baskets
+                .iter()
+                .filter(|b| b.branch_id == br as u32)
+                .map(|b| b.n_entries)
+                .sum();
+            assert_eq!(total as usize, events.len(), "branch {br}");
+        }
+    }
+
+    #[test]
+    fn fig6_smoke() {
+        // Tiny config: correctness of the harness, not performance.
+        let cfg = BenchConfig::quick();
+        let t = fig6(&cfg, 100);
+        let rendered = t.render();
+        assert!(rendered.contains("LZ4-1+bitshuffle4"));
+        assert!(rendered.contains("ZLIB-1"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Benchmark support: the custom harness (criterion is unavailable in the
+//! offline crate set) and the per-figure reproduction harnesses.
+
+pub mod benchkit;
+pub mod figures;
+
+pub use benchkit::{bench, BenchConfig, BenchResult, Table};

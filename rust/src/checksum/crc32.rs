@@ -1,0 +1,190 @@
+//! CRC-32 (IEEE 802.3, polynomial 0xEDB88320) with three backends.
+//!
+//! The paper's Fig 5 compares CF-ZLIB with and without *hardware* CRC32
+//! instructions (SSE 4.2 `crc32`, ARMv8 `CRC32B/W/X`). We have no portable
+//! intrinsics in this environment, so per DESIGN.md's substitution table the
+//! "hardware" configuration is modeled by the strongest software kernel
+//! (slice-by-8, ~8 bytes/iteration, limited by ALU not table lookups) and the
+//! "no hardware" configuration by the classic 1-byte table loop; the bitwise
+//! loop exists as a correctness oracle and worst-case reference.
+
+/// Reflected IEEE polynomial.
+const POLY: u32 = 0xEDB8_8320;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Bit-at-a-time (oracle; never used on the hot path).
+    Bitwise,
+    /// Classic single-table byte loop (models "no hardware crc32").
+    Table,
+    /// Slice-by-8 (models the "hardware crc32" configuration of Fig 5).
+    #[default]
+    Slice8,
+}
+
+/// 8 tables × 256 entries, built at first use.
+struct Tables {
+    t: [[u32; 256]; 8],
+}
+
+fn build_tables() -> Tables {
+    let mut t = [[0u32; 256]; 8];
+    for i in 0..256usize {
+        let mut crc = i as u32;
+        for _ in 0..8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+        }
+        t[0][i] = crc;
+    }
+    for k in 1..8 {
+        for i in 0..256usize {
+            let prev = t[k - 1][i];
+            t[k][i] = (prev >> 8) ^ t[0][(prev & 0xFF) as usize];
+        }
+    }
+    Tables { t }
+}
+
+fn tables() -> &'static Tables {
+    use std::sync::OnceLock;
+    static TABLES: OnceLock<Tables> = OnceLock::new();
+    TABLES.get_or_init(build_tables)
+}
+
+/// Streaming CRC-32 state.
+#[derive(Debug, Clone, Copy)]
+pub struct Crc32 {
+    state: u32, // pre-inverted
+    backend: Backend,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new(Backend::default())
+    }
+}
+
+impl Crc32 {
+    pub fn new(backend: Backend) -> Self {
+        Self { state: 0xFFFF_FFFF, backend }
+    }
+
+    pub fn from_value(value: u32, backend: Backend) -> Self {
+        Self { state: !value, backend }
+    }
+
+    #[inline]
+    pub fn update(&mut self, data: &[u8]) {
+        self.state = match self.backend {
+            Backend::Bitwise => update_bitwise(self.state, data),
+            Backend::Table => update_table(self.state, data),
+            Backend::Slice8 => update_slice8(self.state, data),
+        };
+    }
+
+    pub fn value(&self) -> u32 {
+        !self.state
+    }
+}
+
+fn update_bitwise(mut crc: u32, data: &[u8]) -> u32 {
+    for &byte in data {
+        crc ^= byte as u32;
+        for _ in 0..8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+        }
+    }
+    crc
+}
+
+fn update_table(mut crc: u32, data: &[u8]) -> u32 {
+    let t = &tables().t[0];
+    for &byte in data {
+        crc = (crc >> 8) ^ t[((crc ^ byte as u32) & 0xFF) as usize];
+    }
+    crc
+}
+
+fn update_slice8(mut crc: u32, data: &[u8]) -> u32 {
+    let tb = tables();
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = u32::from_le_bytes(c[0..4].try_into().unwrap()) ^ crc;
+        let hi = u32::from_le_bytes(c[4..8].try_into().unwrap());
+        crc = tb.t[7][(lo & 0xFF) as usize]
+            ^ tb.t[6][((lo >> 8) & 0xFF) as usize]
+            ^ tb.t[5][((lo >> 16) & 0xFF) as usize]
+            ^ tb.t[4][(lo >> 24) as usize]
+            ^ tb.t[3][(hi & 0xFF) as usize]
+            ^ tb.t[2][((hi >> 8) & 0xFF) as usize]
+            ^ tb.t[1][((hi >> 16) & 0xFF) as usize]
+            ^ tb.t[0][(hi >> 24) as usize];
+    }
+    update_table(crc, chunks.remainder())
+}
+
+/// One-shot convenience with the default backend.
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_with(data, Backend::default())
+}
+
+pub fn crc32_with(data: &[u8], backend: Backend) -> u32 {
+    let mut c = Crc32::new(backend);
+    c.update(data);
+    c.value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_vectors() {
+        // Standard check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn backends_agree() {
+        let mut rng = Rng::new(0xC3C3);
+        for _ in 0..40 {
+            let n = rng.range(0, 30_000);
+            let data = rng.bytes(n);
+            let b = crc32_with(&data, Backend::Bitwise);
+            let t = crc32_with(&data, Backend::Table);
+            let s = crc32_with(&data, Backend::Slice8);
+            assert_eq!(b, t, "bitwise vs table, n={n}");
+            assert_eq!(b, s, "bitwise vs slice8, n={n}");
+        }
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let mut rng = Rng::new(0xC3C4);
+        let data = rng.bytes(65_536 + 3);
+        for backend in [Backend::Bitwise, Backend::Table, Backend::Slice8] {
+            let mut c = Crc32::new(backend);
+            let mut pos = 0;
+            while pos < data.len() {
+                let step = rng.range(1, 777).min(data.len() - pos);
+                c.update(&data[pos..pos + step]);
+                pos += step;
+            }
+            assert_eq!(c.value(), crc32_with(&data, backend));
+        }
+    }
+
+    #[test]
+    fn resume_from_value() {
+        let data = b"crc32 resume test vector 0123456789";
+        let full = crc32(data);
+        let mut c = Crc32::new(Backend::Slice8);
+        c.update(&data[..7]);
+        let mut c2 = Crc32::from_value(c.value(), Backend::Slice8);
+        c2.update(&data[7..]);
+        assert_eq!(c2.value(), full);
+    }
+}

@@ -1,0 +1,9 @@
+//! Checksums used by the codec wrappers (paper §2.1 identifies these as
+//! ZLIB hotspots): Adler-32 for the zlib stream format, CRC-32 for the
+//! basket record payloads and the Fig-5 hardware-vs-software study.
+
+pub mod adler32;
+pub mod crc32;
+
+pub use adler32::{adler32, adler32_with, Adler32};
+pub use crc32::{crc32, crc32_with, Crc32};

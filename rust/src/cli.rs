@@ -1,0 +1,366 @@
+//! Hand-rolled CLI (clap is not in the offline crate set).
+//!
+//! ```text
+//! rootio write   --out f.rfil [--workload synthetic|nanoaod] [--events N]
+//!                [--setting ZSTD-5] [--precond bitshuffle4] [--basket N]
+//!                [--workers N] [--adaptive analysis|production|balanced]
+//! rootio read    --in f.rfil [--branch NAME]
+//! rootio inspect --in f.rfil
+//! rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
+//! rootio all-figures [--quick]
+//! ```
+
+use crate::bench::figures::run_figure;
+use crate::bench::BenchConfig;
+use crate::compression::{Algorithm, Settings};
+use crate::coordinator::{write_tree_parallel, FeatureSource, PipelineConfig, Planner, UseCase};
+use crate::gen::{nanoaod, synthetic};
+use crate::precond::Precond;
+use crate::rfile::TreeReader;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Parsed flags: `--key value` pairs plus bare flags.
+pub struct Args {
+    pub flags: HashMap<String, String>,
+    pub bare: Vec<String>,
+}
+
+pub fn parse_args(argv: &[String]) -> Args {
+    let mut flags = HashMap::new();
+    let mut bare = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            bare.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { flags, bare }
+}
+
+/// Parse "ZSTD-5", "LZ4-1", "CF-ZLIB-6", "none" into Settings.
+pub fn parse_setting(s: &str) -> Result<Settings> {
+    if s.eq_ignore_ascii_case("none") {
+        return Ok(Settings::new(Algorithm::None, 0));
+    }
+    let (alg_str, level_str) = s
+        .rsplit_once('-')
+        .with_context(|| format!("bad setting '{s}' (want e.g. ZSTD-5)"))?;
+    let level: u8 = level_str.parse().with_context(|| format!("bad level in '{s}'"))?;
+    let algorithm = match alg_str.to_uppercase().as_str() {
+        "ZLIB" => Algorithm::Zlib,
+        "CF-ZLIB" | "CFZLIB" | "CF" => Algorithm::CfZlib,
+        "LZMA" | "XZ" => Algorithm::Lzma,
+        "LZ4" => Algorithm::Lz4,
+        "ZSTD" => Algorithm::Zstd,
+        "OLD" | "LEGACY" => Algorithm::OldRoot,
+        other => bail!("unknown algorithm '{other}'"),
+    };
+    Ok(Settings::new(algorithm, level))
+}
+
+/// Parse "bitshuffle4", "shuffle8", "delta4", "none".
+pub fn parse_precond(s: &str) -> Result<Precond> {
+    if s == "none" {
+        return Ok(Precond::None);
+    }
+    let split = s.find(|c: char| c.is_ascii_digit()).unwrap_or(s.len());
+    let (name, num) = s.split_at(split);
+    let stride: u8 = if num.is_empty() { 4 } else { num.parse()? };
+    Ok(match name {
+        "bitshuffle" => Precond::BitShuffle(stride),
+        "shuffle" => Precond::Shuffle(stride),
+        "delta" => Precond::Delta(stride),
+        _ => bail!("unknown preconditioner '{s}'"),
+    })
+}
+
+pub fn usage() -> &'static str {
+    "rootio — ROOT I/O compression survey reproduction (Shadura & Bockelman, CHEP 2019)
+
+USAGE:
+  rootio write --out FILE [--workload synthetic|nanoaod] [--events N]
+               [--setting ZSTD-5] [--precond bitshuffle4] [--basket BYTES]
+               [--workers N] [--adaptive analysis|production|balanced]
+               [--artifacts DIR]
+  rootio read --in FILE [--branch NAME]
+  rootio inspect --in FILE
+  rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
+  rootio all-figures [--quick]
+
+FIGURES (paper mapping — see DESIGN.md §4):
+  fig2     compression speed vs ratio, all {algorithm x level}
+  fig3     decompression speed by algorithm and input level
+  fig4     CF-ZLIB patch-set speedup vs reference ZLIB
+  fig5     hardware-class vs software checksum kernels
+  fig6     NanoAOD: LZ4 vs LZ4+BitShuffle vs ZLIB
+  dict     ZSTD dictionary study on small baskets
+  scaling  parallel pipeline scaling (L3)
+"
+}
+
+pub fn run(argv: Vec<String>) -> Result<i32> {
+    let Some(cmd) = argv.first().cloned() else {
+        println!("{}", usage());
+        return Ok(2);
+    };
+    let args = parse_args(&argv[1..]);
+    match cmd.as_str() {
+        "write" => cmd_write(&args),
+        "read" => cmd_read(&args),
+        "inspect" => cmd_inspect(&args),
+        "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "dict" | "scaling" => {
+            let cfg = bench_cfg(&args);
+            let (out, _) = run_figure(&cmd, &cfg)?;
+            println!("== {cmd} ==\n{out}");
+            Ok(0)
+        }
+        "all-figures" => {
+            let cfg = bench_cfg(&args);
+            for name in ["fig2", "fig3", "fig4", "fig5", "fig6", "dict", "scaling"] {
+                let (out, _) = run_figure(name, &cfg)?;
+                println!("== {name} ==\n{out}\n");
+            }
+            Ok(0)
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            Ok(2)
+        }
+    }
+}
+
+fn bench_cfg(args: &Args) -> BenchConfig {
+    if args.flags.contains_key("quick") {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::from_env()
+    }
+}
+
+fn cmd_write(args: &Args) -> Result<i32> {
+    let out = PathBuf::from(args.flags.get("out").context("--out required")?);
+    let workload = args.flags.get("workload").map(|s| s.as_str()).unwrap_or("synthetic");
+    let n: usize = args
+        .flags
+        .get("events")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(synthetic::PAPER_EVENTS);
+    let basket: usize = args
+        .flags
+        .get("basket")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(crate::rfile::DEFAULT_BASKET_SIZE);
+    let workers: usize = args
+        .flags
+        .get("workers")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(|| PipelineConfig::default().workers);
+    let mut settings = args
+        .flags
+        .get("setting")
+        .map(|s| parse_setting(s))
+        .transpose()?
+        .unwrap_or(Settings::new(Algorithm::Zstd, 5));
+    if let Some(p) = args.flags.get("precond") {
+        settings.precond = parse_precond(p)?;
+    }
+
+    let (schema, events) = match workload {
+        "synthetic" => (synthetic::schema(), synthetic::events(n, 0x2019_C4E9)),
+        "nanoaod" => (nanoaod::schema(), nanoaod::events(n, 0x2019_C4E9)),
+        other => bail!("unknown workload '{other}'"),
+    };
+
+    // Adaptive mode: plan per-branch settings from the first basket-sized
+    // chunk of each branch (the planner also runs inside examples per
+    // basket; the CLI applies per-branch choices for simplicity).
+    let mut schema = schema;
+    if let Some(mode) = args.flags.get("adaptive") {
+        let use_case = match mode.as_str() {
+            "analysis" => UseCase::Analysis,
+            "production" => UseCase::Production,
+            "balanced" => UseCase::Balanced,
+            other => bail!("unknown use case '{other}'"),
+        };
+        let source = load_feature_source(args)?;
+        let mut planner = Planner::new(use_case, source);
+        let baskets = crate::bench::figures::collect_baskets(schema.clone(), &events, basket);
+        let mut per_branch: HashMap<u32, Settings> = HashMap::new();
+        for b in &baskets {
+            per_branch
+                .entry(b.branch_id)
+                .or_insert_with(|| planner.plan(&b.logical_payload()));
+        }
+        for (i, def) in schema.iter_mut().enumerate() {
+            if let Some(s) = per_branch.get(&(i as u32)) {
+                def.settings = Some(*s);
+            }
+        }
+        println!(
+            "adaptive({mode}, {}): per-branch settings chosen for {} branches",
+            planner.source.label(),
+            per_branch.len()
+        );
+    }
+
+    let t0 = std::time::Instant::now();
+    let (meta, snap) = write_tree_parallel(
+        &out,
+        "Events",
+        schema,
+        settings,
+        basket,
+        PipelineConfig { workers, queue_depth: workers * 4, dictionary: Vec::new() },
+        events.into_iter(),
+    )?;
+    let wall = t0.elapsed();
+    let file_len = std::fs::metadata(&out)?.len();
+    println!(
+        "wrote {}: {} events, {} baskets, {} bytes ({:.3} ratio) in {:.2}s [{:.1} MB/s wall]",
+        out.display(),
+        meta.n_entries,
+        meta.baskets.len(),
+        file_len,
+        snap.ratio(),
+        wall.as_secs_f64(),
+        snap.bytes_in as f64 / 1e6 / wall.as_secs_f64(),
+    );
+    println!("{}", snap.report("pipeline"));
+    Ok(0)
+}
+
+fn load_feature_source(args: &Args) -> Result<FeatureSource> {
+    let dir = args
+        .flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    if dir.join("analyzer_4096.hlo.txt").exists() {
+        let client = crate::runtime::cpu_client()?;
+        let analyzer = crate::runtime::Analyzer::load(&client, &dir)?;
+        Ok(FeatureSource::Xla(analyzer))
+    } else {
+        eprintln!(
+            "note: {} missing XLA artifacts, using native analyzer mirror",
+            dir.display()
+        );
+        Ok(FeatureSource::Native)
+    }
+}
+
+fn cmd_read(args: &Args) -> Result<i32> {
+    let path = PathBuf::from(args.flags.get("in").context("--in required")?);
+    let mut reader = TreeReader::open(&path)?;
+    let t0 = std::time::Instant::now();
+    let mut bytes = 0usize;
+    if let Some(branch) = args.flags.get("branch") {
+        let id = reader
+            .branch_id(branch)
+            .with_context(|| format!("no branch '{branch}'"))?;
+        let values = reader.read_branch(id)?;
+        println!("branch '{branch}': {} entries", values.len());
+        for l in reader.baskets_for(id) {
+            bytes += l.uncompressed_len as usize;
+        }
+    } else {
+        let events = reader.read_all_events()?;
+        println!("read {} events x {} branches", events.len(), reader.meta.branches.len());
+        bytes = reader.meta.baskets.iter().map(|l| l.uncompressed_len as usize).sum();
+    }
+    let wall = t0.elapsed();
+    println!(
+        "decompressed {:.2} MB in {:.3}s ({:.1} MB/s)",
+        bytes as f64 / 1e6,
+        wall.as_secs_f64(),
+        bytes as f64 / 1e6 / wall.as_secs_f64()
+    );
+    Ok(0)
+}
+
+fn cmd_inspect(args: &Args) -> Result<i32> {
+    let path = PathBuf::from(args.flags.get("in").context("--in required")?);
+    let reader = TreeReader::open(&path)?;
+    let m = &reader.meta;
+    println!("tree '{}': {} entries, {} branches, {} baskets", m.name, m.n_entries, m.branches.len(), m.baskets.len());
+    println!("default setting: {}", m.default_settings.label());
+    if let Some(d) = m.dictionary_offset {
+        println!("dictionary record at offset {d}");
+    }
+    let mut per_branch: HashMap<u32, (u64, u64, u32)> = HashMap::new();
+    for l in &m.baskets {
+        let e = per_branch.entry(l.branch_id).or_default();
+        e.0 += l.uncompressed_len as u64;
+        e.1 += l.compressed_len as u64;
+        e.2 += 1;
+    }
+    let mut ids: Vec<u32> = per_branch.keys().copied().collect();
+    ids.sort();
+    println!("{:<28} {:>8} {:>12} {:>12} {:>7} {}", "branch", "baskets", "raw", "compressed", "ratio", "setting");
+    for id in ids {
+        let (raw, comp, n) = per_branch[&id];
+        let def = &m.branches[id as usize];
+        println!(
+            "{:<28} {:>8} {:>12} {:>12} {:>7.3} {}",
+            def.name,
+            n,
+            raw,
+            comp,
+            raw as f64 / comp.max(1) as f64,
+            def.settings.map(|s| s.label()).unwrap_or_else(|| "(default)".into()),
+        );
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn setting_parse() {
+        assert_eq!(parse_setting("ZSTD-5").unwrap(), Settings::new(Algorithm::Zstd, 5));
+        assert_eq!(parse_setting("CF-ZLIB-6").unwrap(), Settings::new(Algorithm::CfZlib, 6));
+        assert_eq!(parse_setting("lz4-1").unwrap(), Settings::new(Algorithm::Lz4, 1));
+        assert!(parse_setting("nope").is_err());
+    }
+
+    #[test]
+    fn precond_parse() {
+        assert_eq!(parse_precond("bitshuffle4").unwrap(), Precond::BitShuffle(4));
+        assert_eq!(parse_precond("shuffle8").unwrap(), Precond::Shuffle(8));
+        assert_eq!(parse_precond("delta").unwrap(), Precond::Delta(4));
+        assert_eq!(parse_precond("none").unwrap(), Precond::None);
+        assert!(parse_precond("xor4").is_err());
+    }
+
+    #[test]
+    fn args_parse() {
+        let argv: Vec<String> = ["--out", "f.rfil", "--quick", "--events", "100"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = parse_args(&argv);
+        assert_eq!(a.flags.get("out").unwrap(), "f.rfil");
+        assert_eq!(a.flags.get("quick").unwrap(), "true");
+        assert_eq!(a.flags.get("events").unwrap(), "100");
+    }
+}

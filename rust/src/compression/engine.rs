@@ -1,0 +1,370 @@
+//! The unified compression engine: ROOT's `R__zipMultipleAlgorithm` /
+//! `R__unzip` equivalents. Applies the preconditioner, dispatches to the
+//! codec selected by [`Settings`], frames the output in (possibly several)
+//! 16 MiB-capped records, and inverts the whole thing on read.
+//!
+//! All per-basket scratch state lives in [`Engine`], so the pipeline's hot
+//! loop performs no allocations beyond output buffers.
+
+use super::record::{read_header, write_header, RecordHeader, HEADER_LEN, MAX_SPAN};
+use super::settings::{Algorithm, Settings};
+use crate::deflate::matcher::Matcher as DeflateMatcher;
+use crate::deflate::matcher::Token;
+use crate::deflate::zlib::zlib_compress_with;
+use crate::deflate::Flavor;
+use crate::lz4::{method_for_level, Lz4Encoder};
+use crate::lzma::{lzma_compress, lzma_decompress};
+use crate::legacy::{legacy_compress, legacy_decompress};
+use crate::zstd::{zstd_decompress_dict, ZstdEncoder};
+
+/// Engine errors (compression never fails; decompression is over untrusted
+/// bytes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineError(pub String);
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine: {}", self.0)
+    }
+}
+impl std::error::Error for EngineError {}
+
+fn err(e: impl std::fmt::Display) -> EngineError {
+    EngineError(e.to_string())
+}
+
+/// Hard output cap for a single record's uncompressed span.
+const MAX_OUT: usize = MAX_SPAN + 1;
+
+/// Reusable engine: owns all codec scratch state.
+#[derive(Default)]
+pub struct Engine {
+    deflate_matcher: DeflateMatcher,
+    deflate_tokens: Vec<Token>,
+    lz4: Lz4Encoder,
+    zstd: ZstdEncoder,
+    precond_buf: Vec<u8>,
+    /// Optional dictionary (ZSTD-style only; paper §2.3).
+    dictionary: Vec<u8>,
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a dictionary used by ZSTD-family settings.
+    pub fn set_dictionary(&mut self, dict: Vec<u8>) {
+        self.dictionary = dict;
+    }
+
+    pub fn dictionary(&self) -> &[u8] {
+        &self.dictionary
+    }
+
+    /// Compress `data` under `settings` into a framed byte vector.
+    pub fn compress(&mut self, data: &[u8], settings: &Settings) -> Vec<u8> {
+        // 1. Precondition.
+        let view: &[u8] = if settings.precond == crate::precond::Precond::None {
+            data
+        } else {
+            self.precond_buf.resize(data.len(), 0);
+            match settings.precond {
+                crate::precond::Precond::Shuffle(s) => {
+                    crate::precond::shuffle_into(data, s as usize, &mut self.precond_buf)
+                }
+                crate::precond::Precond::BitShuffle(s) => {
+                    crate::precond::bitshuffle_into(data, s as usize, &mut self.precond_buf)
+                }
+                crate::precond::Precond::Delta(s) => {
+                    self.precond_buf.copy_from_slice(data);
+                    crate::precond::delta_in_place(&mut self.precond_buf, s as usize);
+                }
+                crate::precond::Precond::None => unreachable!(),
+            }
+            &self.precond_buf
+        };
+
+        // 2. Split into <=16MiB spans, compress each, frame.
+        // (view borrows self.precond_buf; split the borrow via local refs.)
+        let mut out = Vec::with_capacity(view.len() / 2 + HEADER_LEN);
+        let spans: Vec<(usize, usize)> = {
+            let mut v = Vec::new();
+            let mut pos = 0;
+            loop {
+                let end = (pos + MAX_SPAN).min(view.len());
+                v.push((pos, end));
+                if end == view.len() {
+                    break;
+                }
+                pos = end;
+            }
+            v
+        };
+        for (a, b) in spans {
+            // When a preconditioner ran, the span lives in self.precond_buf,
+            // which we cannot borrow across the &mut self codec calls; copy
+            // it out (bounded by MAX_SPAN, and preconditioned baskets are a
+            // small minority of traffic).
+            let owned;
+            let chunk: &[u8] = if settings.precond == crate::precond::Precond::None {
+                &data[a..b]
+            } else {
+                owned = self.precond_buf[a..b].to_vec();
+                &owned
+            };
+            let (algorithm, level, payload) = self.compress_span(chunk, settings);
+            let h = RecordHeader {
+                algorithm,
+                level,
+                precond: settings.precond,
+                compressed_len: payload.len(),
+                uncompressed_len: chunk.len(),
+            };
+            write_header(&mut out, &h);
+            out.extend_from_slice(&payload);
+        }
+        out
+    }
+
+    /// Compress one span; falls back to a raw record when the codec output
+    /// would expand (ROOT does the same).
+    fn compress_span(&mut self, chunk: &[u8], settings: &Settings) -> (Algorithm, u8, Vec<u8>) {
+        let level = settings.level;
+        if level == 0 || settings.algorithm == Algorithm::None {
+            return (Algorithm::None, 0, chunk.to_vec());
+        }
+        let payload = match settings.algorithm {
+            Algorithm::None => chunk.to_vec(),
+            Algorithm::Zlib if self.dictionary.is_empty() => zlib_compress_with(
+                chunk,
+                Flavor::Reference,
+                level,
+                &mut self.deflate_matcher,
+                &mut self.deflate_tokens,
+            ),
+            Algorithm::CfZlib if self.dictionary.is_empty() => zlib_compress_with(
+                chunk,
+                Flavor::Cloudflare,
+                level,
+                &mut self.deflate_matcher,
+                &mut self.deflate_tokens,
+            ),
+            Algorithm::Zlib => {
+                crate::deflate::zlib::zlib_compress_dict(chunk, &self.dictionary, Flavor::Reference, level)
+            }
+            Algorithm::CfZlib => {
+                crate::deflate::zlib::zlib_compress_dict(chunk, &self.dictionary, Flavor::Cloudflare, level)
+            }
+            Algorithm::Lzma => lzma_compress(chunk, level),
+            Algorithm::OldRoot => legacy_compress(chunk, level),
+            Algorithm::Lz4 => {
+                let dict = std::mem::take(&mut self.dictionary);
+                let r = self.lz4.compress_dict(chunk, &dict, method_for_level(level));
+                self.dictionary = dict;
+                r
+            }
+            Algorithm::Zstd => {
+                // Clone borrow dance: dictionary is read-only during encode.
+                let dict = std::mem::take(&mut self.dictionary);
+                let r = self.zstd.compress_dict(chunk, &dict, level);
+                self.dictionary = dict;
+                r
+            }
+        };
+        if payload.len() >= chunk.len() {
+            // Store raw: decompression speed matters more than a negative
+            // ratio; ROOT falls back to kUncompressed spans identically.
+            (Algorithm::None, 0, chunk.to_vec())
+        } else {
+            (settings.algorithm, level, payload)
+        }
+    }
+
+    /// Decompress a framed buffer produced by [`Engine::compress`].
+    pub fn decompress(&mut self, mut data: &[u8]) -> Result<Vec<u8>, EngineError> {
+        let mut pre_image: Vec<u8> = Vec::new();
+        let mut precond = crate::precond::Precond::None;
+        while !data.is_empty() {
+            let h = read_header(data).map_err(err)?;
+            let body = data
+                .get(HEADER_LEN..HEADER_LEN + h.compressed_len)
+                .ok_or_else(|| err("record body truncated"))?;
+            precond = h.precond;
+            let chunk = match h.algorithm {
+                Algorithm::None => body.to_vec(),
+                Algorithm::Zlib | Algorithm::CfZlib => {
+                    crate::deflate::zlib::zlib_decompress_dict(
+                        body,
+                        &self.dictionary,
+                        h.uncompressed_len,
+                        MAX_OUT,
+                    )
+                    .map_err(err)?
+                }
+                Algorithm::Lzma => lzma_decompress(body, MAX_OUT).map_err(err)?,
+                Algorithm::OldRoot => {
+                    legacy_decompress(body, h.uncompressed_len).map_err(err)?
+                }
+                Algorithm::Lz4 => {
+                    let mut out = Vec::new();
+                    if body.len() < 4 {
+                        return Err(err("lz4 frame too short"));
+                    }
+                    crate::lz4::decompress_block_dict_into(
+                        &body[4..],
+                        &self.dictionary,
+                        h.uncompressed_len,
+                        &mut out,
+                    )
+                    .map_err(err)?;
+                    // Verify the frame checksum (first 4 bytes).
+                    let expect = u32::from_le_bytes(body[..4].try_into().unwrap());
+                    if crate::checksum::crc32(&out) != expect {
+                        return Err(err("lz4 content checksum mismatch"));
+                    }
+                    out
+                }
+                Algorithm::Zstd => {
+                    let dict = std::mem::take(&mut self.dictionary);
+                    let r = zstd_decompress_dict(body, &dict, MAX_OUT).map_err(err);
+                    self.dictionary = dict;
+                    r?
+                }
+            };
+            if chunk.len() != h.uncompressed_len {
+                return Err(err("uncompressed size mismatch"));
+            }
+            pre_image.extend_from_slice(&chunk);
+            data = &data[HEADER_LEN + h.compressed_len..];
+        }
+        // Invert the preconditioner over the whole logical buffer.
+        Ok(precond.invert(&pre_image))
+    }
+}
+
+/// Convenience one-shots (tests, examples).
+pub fn compress(data: &[u8], settings: &Settings) -> Vec<u8> {
+    Engine::new().compress(data, settings)
+}
+
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>, EngineError> {
+    Engine::new().decompress(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::Precond;
+    use crate::util::rng::Rng;
+
+    fn all_settings() -> Vec<Settings> {
+        let mut v = Vec::new();
+        for alg in Algorithm::survey() {
+            for level in [1u8, 6, 9] {
+                v.push(Settings::new(alg, level));
+            }
+        }
+        v.push(Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)));
+        v.push(Settings::new(Algorithm::Lz4, 9).with_precond(Precond::Shuffle(4)));
+        v.push(Settings::new(Algorithm::Zstd, 5).with_precond(Precond::Delta(4)));
+        v.push(Settings::new(Algorithm::Zlib, 6).with_precond(Precond::BitShuffle(8)));
+        v.push(Settings::new(Algorithm::None, 0));
+        v
+    }
+
+    #[test]
+    fn roundtrip_every_setting() {
+        let mut rng = Rng::new(0xE46);
+        let mut corpus: Vec<Vec<u8>> = vec![
+            vec![],
+            b"x".to_vec(),
+            (1u32..=5000).flat_map(|i| i.to_be_bytes()).collect(),
+            vec![0u8; 30_000],
+        ];
+        corpus.push(rng.bytes(20_000));
+        let mut engine = Engine::new();
+        for data in &corpus {
+            for s in all_settings() {
+                let c = engine.compress(data, &s);
+                let d = engine.decompress(&c).unwrap_or_else(|e| panic!("{}: {e}", s.label()));
+                assert_eq!(&d, data, "{}", s.label());
+            }
+        }
+    }
+
+    #[test]
+    fn incompressible_falls_back_to_raw() {
+        let mut rng = Rng::new(0xE47);
+        let data = rng.bytes(10_000);
+        let mut engine = Engine::new();
+        for s in all_settings() {
+            let c = engine.compress(&data, &s);
+            assert!(
+                c.len() <= data.len() + HEADER_LEN,
+                "{}: expanded to {}",
+                s.label(),
+                c.len()
+            );
+        }
+    }
+
+    #[test]
+    fn bitshuffle_lz4_beats_plain_lz4_on_offsets() {
+        // The Fig-6 headline through the full engine path.
+        let data: Vec<u8> = (1u32..=50_000).flat_map(|i| (i * 3).to_be_bytes()).collect();
+        let mut engine = Engine::new();
+        let plain = engine.compress(&data, &Settings::new(Algorithm::Lz4, 1));
+        let shuf = engine.compress(
+            &data,
+            &Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        );
+        let zlib = engine.compress(&data, &Settings::new(Algorithm::Zlib, 1));
+        assert!(shuf.len() * 2 < plain.len(), "shuf {} plain {}", shuf.len(), plain.len());
+        assert!(shuf.len() < zlib.len(), "shuf {} zlib {}", shuf.len(), zlib.len());
+        assert_eq!(engine.decompress(&shuf).unwrap(), data);
+    }
+
+    #[test]
+    fn multi_record_spans() {
+        // > 16 MiB forces multiple records.
+        let mut rng = Rng::new(0xE48);
+        let mut data = vec![0u8; MAX_SPAN + 100_000];
+        // Sprinkle structure so it compresses.
+        for i in (0..data.len()).step_by(1000) {
+            let b = rng.bytes(8);
+            data[i..i + 8].copy_from_slice(&b);
+        }
+        let mut engine = Engine::new();
+        let c = engine.compress(&data, &Settings::new(Algorithm::Lz4, 1));
+        assert_eq!(engine.decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn dictionary_roundtrip_through_engine() {
+        let corpus = crate::zstd::dict::synthetic_corpus(100, 300, 5);
+        let dict = crate::zstd::dict::train_from_corpus(&corpus, 4096);
+        let mut engine = Engine::new();
+        engine.set_dictionary(dict.clone());
+        let sample = &corpus[0];
+        let c = engine.compress(sample, &Settings::new(Algorithm::Zstd, 6));
+        assert_eq!(&engine.decompress(&c).unwrap(), sample);
+        // A dict-less engine must fail or mis-decode.
+        let mut other = Engine::new();
+        match other.decompress(&c) {
+            Ok(d) => assert_ne!(&d, sample),
+            Err(_) => {}
+        }
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let mut rng = Rng::new(0xE49);
+        let mut engine = Engine::new();
+        for _ in 0..200 {
+            let n = rng.range(0, 100);
+            let g = rng.bytes(n);
+            let _ = engine.decompress(&g); // must not panic
+        }
+    }
+}

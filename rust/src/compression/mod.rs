@@ -1,0 +1,11 @@
+//! Unified compression subsystem: ROOT-style settings, the 16 MiB-capped
+//! record framing every compressed basket uses on disk, and the engine
+//! dispatching to the from-scratch codecs.
+
+pub mod engine;
+pub mod record;
+pub mod settings;
+
+pub use engine::{compress, decompress, Engine, EngineError};
+pub use record::{RecordHeader, HEADER_LEN, MAX_SPAN};
+pub use settings::{Algorithm, Settings};

@@ -1,0 +1,200 @@
+//! ROOT-style compression settings.
+//!
+//! ROOT exposes "a single tunable parameter (which ROOT refers to as
+//! 'compression level')" per algorithm (paper §2) and packs both into one
+//! integer: `setting = 100 * algorithm + level` (e.g. 101 = ZLIB-1,
+//! 404 = LZ4-4, 505 = ZSTD-5; 0 = uncompressed). We reproduce that scheme
+//! and extend it with an explicit preconditioner field — the paper's §3
+//! future-work item about easing "the switch between compression algorithms
+//! and settings for different use cases".
+
+use crate::precond::Precond;
+
+/// Compression algorithm family, numbered like ROOT's
+/// `ECompressionAlgorithm` (1 = ZLIB, 2 = LZMA, 3 = old/legacy, 4 = LZ4,
+/// 5 = ZSTD) plus our explicit CF-ZLIB entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// No compression (level 0).
+    None,
+    /// Reference zlib.
+    Zlib,
+    /// LZMA-style range coder.
+    Lzma,
+    /// Legacy 1990s ROOT codec (backward compatibility only).
+    OldRoot,
+    /// LZ4 (fast at levels <=3, HC above).
+    Lz4,
+    /// ZSTD-style codec.
+    Zstd,
+    /// Cloudflare-tuned zlib (the ROOT 6.18.00 patch set).
+    CfZlib,
+}
+
+impl Algorithm {
+    /// ROOT algorithm index.
+    pub fn index(&self) -> u16 {
+        match self {
+            Algorithm::None => 0,
+            Algorithm::Zlib => 1,
+            Algorithm::Lzma => 2,
+            Algorithm::OldRoot => 3,
+            Algorithm::Lz4 => 4,
+            Algorithm::Zstd => 5,
+            Algorithm::CfZlib => 6,
+        }
+    }
+
+    pub fn from_index(i: u16) -> Option<Self> {
+        Some(match i {
+            0 => Algorithm::None,
+            1 => Algorithm::Zlib,
+            2 => Algorithm::Lzma,
+            3 => Algorithm::OldRoot,
+            4 => Algorithm::Lz4,
+            5 => Algorithm::Zstd,
+            6 => Algorithm::CfZlib,
+            _ => return None,
+        })
+    }
+
+    /// Two-character record tag (ROOT writes "ZL", "XZ", "L4", "ZS", "CS").
+    pub fn tag(&self) -> [u8; 2] {
+        match self {
+            Algorithm::None => *b"RW",
+            Algorithm::Zlib => *b"ZL",
+            Algorithm::Lzma => *b"XZ",
+            Algorithm::OldRoot => *b"CS",
+            Algorithm::Lz4 => *b"L4",
+            Algorithm::Zstd => *b"ZS",
+            Algorithm::CfZlib => *b"CF",
+        }
+    }
+
+    pub fn from_tag(tag: [u8; 2]) -> Option<Self> {
+        Some(match &tag {
+            b"RW" => Algorithm::None,
+            b"ZL" => Algorithm::Zlib,
+            b"XZ" => Algorithm::Lzma,
+            b"CS" => Algorithm::OldRoot,
+            b"L4" => Algorithm::Lz4,
+            b"ZS" => Algorithm::Zstd,
+            b"CF" => Algorithm::CfZlib,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algorithm::None => "none",
+            Algorithm::Zlib => "ZLIB",
+            Algorithm::Lzma => "LZMA",
+            Algorithm::OldRoot => "OLD",
+            Algorithm::Lz4 => "LZ4",
+            Algorithm::Zstd => "ZSTD",
+            Algorithm::CfZlib => "CF-ZLIB",
+        }
+    }
+
+    /// All real algorithms (the Fig-2 survey set).
+    pub fn survey() -> [Algorithm; 6] {
+        [
+            Algorithm::Zlib,
+            Algorithm::CfZlib,
+            Algorithm::Lzma,
+            Algorithm::Lz4,
+            Algorithm::Zstd,
+            Algorithm::OldRoot,
+        ]
+    }
+}
+
+/// A full compression setting: algorithm + level + optional preconditioner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Settings {
+    pub algorithm: Algorithm,
+    /// 0 disables compression; 1 fastest .. 9 best ratio (paper §2).
+    pub level: u8,
+    pub precond: Precond,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        // ROOT's historical default: ZLIB-1 (kZLIB, level 1).
+        Self { algorithm: Algorithm::Zlib, level: 1, precond: Precond::None }
+    }
+}
+
+impl Settings {
+    pub fn new(algorithm: Algorithm, level: u8) -> Self {
+        Self { algorithm, level, precond: Precond::None }
+    }
+
+    pub fn with_precond(mut self, p: Precond) -> Self {
+        self.precond = p;
+        self
+    }
+
+    /// ROOT packed form: `100 * algorithm + level`.
+    pub fn to_root_setting(&self) -> u16 {
+        if self.level == 0 {
+            return 0;
+        }
+        100 * self.algorithm.index() + self.level.min(99) as u16
+    }
+
+    /// Parse a ROOT packed setting (no preconditioner information — ROOT
+    /// has none; our record header carries it instead).
+    pub fn from_root_setting(v: u16) -> Option<Self> {
+        if v == 0 {
+            return Some(Settings::new(Algorithm::None, 0));
+        }
+        let algorithm = Algorithm::from_index(v / 100)?;
+        let level = (v % 100).min(9) as u8;
+        Some(Settings::new(algorithm, level))
+    }
+
+    pub fn label(&self) -> String {
+        let base = format!("{}-{}", self.algorithm.label(), self.level);
+        match self.precond {
+            Precond::None => base,
+            p => format!("{base}+{}", p.label()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn root_packing_roundtrip() {
+        for alg in Algorithm::survey() {
+            for level in 1..=9u8 {
+                let s = Settings::new(alg, level);
+                let packed = s.to_root_setting();
+                assert_eq!(packed, 100 * alg.index() + level as u16);
+                let back = Settings::from_root_setting(packed).unwrap();
+                assert_eq!(back.algorithm, alg);
+                assert_eq!(back.level, level);
+            }
+        }
+        assert_eq!(Settings::new(Algorithm::Zlib, 1).to_root_setting(), 101);
+        assert_eq!(Settings::new(Algorithm::Lz4, 4).to_root_setting(), 404);
+        assert_eq!(Settings::new(Algorithm::Zstd, 5).to_root_setting(), 505);
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        for alg in Algorithm::survey() {
+            assert_eq!(Algorithm::from_tag(alg.tag()), Some(alg));
+        }
+        assert_eq!(Algorithm::from_tag(*b"??"), None);
+    }
+
+    #[test]
+    fn level_zero_is_uncompressed() {
+        let s = Settings { algorithm: Algorithm::Zstd, level: 0, precond: Precond::None };
+        assert_eq!(s.to_root_setting(), 0);
+    }
+}

@@ -1,0 +1,193 @@
+//! The adaptive compression planner — the paper's §3 future-work item made
+//! concrete: "improvements are needed to the I/O APIs to ease the switch
+//! between compression algorithms and settings for different use cases".
+//!
+//! Per basket, the planner obtains the analyzer feature vector (from the
+//! XLA-compiled artifact via [`crate::runtime::Analyzer`], or the native
+//! mirror when artifacts are absent) and picks (algorithm, level,
+//! preconditioner) according to the declared *use case*:
+//!
+//! * `Analysis`   — decode-speed-bound (the paper: analysis is "less
+//!   sensitive to compression ratio but highly sensitive on decompression
+//!   speed") → LZ4 family, preconditioned when the features say BitShuffle
+//!   unlocks ratio (Fig 6).
+//! * `Production` — ratio-bound with CPU to spare → ZSTD/LZMA family.
+//! * `Balanced`   — ZSTD-leaning middle ground (the paper's "might be a
+//!   replacement of ZLIB for general purpose work").
+
+use crate::compression::{Algorithm, Settings};
+use crate::precond::Precond;
+use crate::runtime::analyzer::{analyze_native, bucket_for};
+use crate::runtime::{Analyzer, Features};
+
+/// The workload profile the user declares (paper §1: production vs
+/// analysis have opposite constraints).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UseCase {
+    Analysis,
+    Production,
+    Balanced,
+}
+
+/// Feature source: XLA artifact or native mirror.
+pub enum FeatureSource {
+    Xla(Analyzer),
+    Native,
+}
+
+impl FeatureSource {
+    pub fn features(&mut self, basket: &[u8]) -> Option<Features> {
+        match self {
+            FeatureSource::Xla(a) => a.analyze(basket).ok().flatten(),
+            FeatureSource::Native => bucket_for(basket.len()).and_then(|b| analyze_native(basket, b)),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FeatureSource::Xla(_) => "xla",
+            FeatureSource::Native => "native",
+        }
+    }
+}
+
+/// The planner.
+pub struct Planner {
+    pub use_case: UseCase,
+    pub source: FeatureSource,
+    /// Element stride assumed by the preconditioner decisions (matches the
+    /// analyzer's STRIDE).
+    stride: u8,
+}
+
+impl Planner {
+    pub fn new(use_case: UseCase, source: FeatureSource) -> Self {
+        Self { use_case, source, stride: 4 }
+    }
+
+    /// Decide settings for one basket. Small baskets (below the analyzer's
+    /// smallest bucket) get the use case's static default.
+    pub fn plan(&mut self, basket: &[u8]) -> Settings {
+        let Some(f) = self.source.features(basket) else {
+            return self.default_settings();
+        };
+        self.plan_from_features(&f)
+    }
+
+    /// Pure decision logic (unit-testable without artifacts).
+    pub fn plan_from_features(&self, f: &Features) -> Settings {
+        // Is the basket already incompressible noise? Entropy near 8 in
+        // every view → don't waste CPU, fastest codec at level 1.
+        let best_h = f.h_raw.min(f.h_shuffle).min(f.h_bitshuffle).min(f.h_delta);
+        if best_h > 7.8 && f.rep_raw < 0.02 {
+            return match self.use_case {
+                UseCase::Analysis => Settings::new(Algorithm::Lz4, 1),
+                _ => Settings::new(Algorithm::Zstd, 1),
+            };
+        }
+        // Does BitShuffle unlock structure (Fig-6 signature)? A large
+        // entropy drop or long runs in the bit planes.
+        let bitshuffle_wins = f.h_bitshuffle < 0.75 * f.h_raw
+            || (f.zero_bitshuffle > 0.5 && f.h_bitshuffle < f.h_raw);
+        let shuffle_wins = !bitshuffle_wins && f.h_shuffle < 0.8 * f.h_raw;
+        let precond = if bitshuffle_wins {
+            Precond::BitShuffle(self.stride)
+        } else if shuffle_wins {
+            Precond::Shuffle(self.stride)
+        } else {
+            Precond::None
+        };
+        match self.use_case {
+            UseCase::Analysis => {
+                // LZ4 keeps Fig-3 decode speed; precondition when it helps.
+                Settings::new(Algorithm::Lz4, 4).with_precond(precond)
+            }
+            UseCase::Production => {
+                // Ratio-bound: deep-search codecs; preconditioners still
+                // help the entropy stage on offset-like data.
+                if bitshuffle_wins {
+                    Settings::new(Algorithm::Zstd, 9).with_precond(precond)
+                } else {
+                    Settings::new(Algorithm::Lzma, 6)
+                }
+            }
+            UseCase::Balanced => Settings::new(Algorithm::Zstd, 5).with_precond(precond),
+        }
+    }
+
+    pub fn default_settings(&self) -> Settings {
+        match self.use_case {
+            UseCase::Analysis => Settings::new(Algorithm::Lz4, 4),
+            UseCase::Production => Settings::new(Algorithm::Zstd, 9),
+            UseCase::Balanced => Settings::new(Algorithm::Zstd, 5),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feats(h_raw: f32, h_shuf: f32, h_bits: f32, zero_bits: f32) -> Features {
+        Features {
+            h_raw,
+            h_shuffle: h_shuf,
+            h_bitshuffle: h_bits,
+            h_delta: h_raw,
+            rep_raw: 0.1,
+            rep_bitshuffle: 0.5,
+            zero_bitshuffle: zero_bits,
+            rep_shuffle: 0.2,
+        }
+    }
+
+    #[test]
+    fn offset_like_baskets_get_bitshuffle() {
+        let p = Planner::new(UseCase::Analysis, FeatureSource::Native);
+        // Offset arrays: raw entropy ~6, bitshuffled ~1.
+        let s = p.plan_from_features(&feats(6.0, 4.0, 1.0, 0.9));
+        assert_eq!(s.algorithm, Algorithm::Lz4);
+        assert_eq!(s.precond, Precond::BitShuffle(4));
+    }
+
+    #[test]
+    fn noise_gets_fast_low_effort() {
+        let p = Planner::new(UseCase::Production, FeatureSource::Native);
+        let mut f = feats(7.99, 7.99, 7.99, 0.0);
+        f.rep_raw = 0.0;
+        let s = p.plan_from_features(&f);
+        assert_eq!(s.level, 1);
+    }
+
+    #[test]
+    fn production_prefers_ratio_codecs() {
+        let p = Planner::new(UseCase::Production, FeatureSource::Native);
+        let s = p.plan_from_features(&feats(5.0, 4.9, 4.8, 0.1));
+        assert!(matches!(s.algorithm, Algorithm::Lzma | Algorithm::Zstd));
+        assert!(s.level >= 6);
+    }
+
+    #[test]
+    fn analysis_always_lz4_family() {
+        let p = Planner::new(UseCase::Analysis, FeatureSource::Native);
+        for f in [
+            feats(6.0, 4.0, 1.0, 0.9),
+            feats(5.0, 4.9, 4.8, 0.1),
+            feats(7.99, 7.99, 7.99, 0.0),
+        ] {
+            let s = p.plan_from_features(&f);
+            assert_eq!(s.algorithm, Algorithm::Lz4, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn native_source_end_to_end() {
+        let mut p = Planner::new(UseCase::Analysis, FeatureSource::Native);
+        let offsets: Vec<u8> = (1u32..=4096).flat_map(|i| i.to_be_bytes()).collect();
+        let s = p.plan(&offsets);
+        assert_eq!(s.precond, Precond::BitShuffle(4), "{s:?}");
+        // Tiny basket: default.
+        let s = p.plan(&[0u8; 64]);
+        assert_eq!(s, p.default_settings());
+    }
+}

@@ -1,0 +1,121 @@
+//! Pipeline metrics: throughput, ratios, per-stage timing, and latency
+//! histograms — what a production I/O framework exports, and what the
+//! figure harnesses read back.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Lock-free accumulating counters (shared across workers).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub baskets: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub compress_nanos: AtomicU64,
+    pub commit_nanos: AtomicU64,
+    pub analyze_nanos: AtomicU64,
+    /// Latency histogram buckets (basket compress time): <100us, <1ms,
+    /// <10ms, <100ms, >=100ms.
+    pub lat_buckets: [AtomicU64; 5],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_basket(&self, bytes_in: usize, bytes_out: usize, compress: Duration) {
+        self.baskets.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes_in as u64, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes_out as u64, Ordering::Relaxed);
+        let nanos = compress.as_nanos() as u64;
+        self.compress_nanos.fetch_add(nanos, Ordering::Relaxed);
+        let idx = match nanos {
+            n if n < 100_000 => 0,
+            n if n < 1_000_000 => 1,
+            n if n < 10_000_000 => 2,
+            n if n < 100_000_000 => 3,
+            _ => 4,
+        };
+        self.lat_buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            baskets: self.baskets.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            compress_nanos: self.compress_nanos.load(Ordering::Relaxed),
+            commit_nanos: self.commit_nanos.load(Ordering::Relaxed),
+            analyze_nanos: self.analyze_nanos.load(Ordering::Relaxed),
+            lat_buckets: [
+                self.lat_buckets[0].load(Ordering::Relaxed),
+                self.lat_buckets[1].load(Ordering::Relaxed),
+                self.lat_buckets[2].load(Ordering::Relaxed),
+                self.lat_buckets[3].load(Ordering::Relaxed),
+                self.lat_buckets[4].load(Ordering::Relaxed),
+            ],
+        }
+    }
+}
+
+/// Point-in-time copy.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Snapshot {
+    pub baskets: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub compress_nanos: u64,
+    pub commit_nanos: u64,
+    pub analyze_nanos: u64,
+    pub lat_buckets: [u64; 5],
+}
+
+impl Snapshot {
+    /// Overall compression ratio (uncompressed / compressed).
+    pub fn ratio(&self) -> f64 {
+        if self.bytes_out == 0 {
+            return 0.0;
+        }
+        self.bytes_in as f64 / self.bytes_out as f64
+    }
+
+    /// Aggregate compression throughput over CPU time spent compressing.
+    pub fn compress_mbps(&self) -> f64 {
+        if self.compress_nanos == 0 {
+            return 0.0;
+        }
+        self.bytes_in as f64 / 1e6 / (self.compress_nanos as f64 / 1e9)
+    }
+
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: baskets={} in={:.2}MB out={:.2}MB ratio={:.3} cpu-compress={:.1}ms ({:.1} MB/s/worker) lat[<.1ms,<1ms,<10ms,<100ms,>=]={:?}",
+            self.baskets,
+            self.bytes_in as f64 / 1e6,
+            self.bytes_out as f64 / 1e6,
+            self.ratio(),
+            self.compress_nanos as f64 / 1e6,
+            self.compress_mbps(),
+            self.lat_buckets,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_and_throughput() {
+        let m = Metrics::new();
+        m.record_basket(1000, 250, Duration::from_micros(50));
+        m.record_basket(1000, 250, Duration::from_millis(5));
+        let s = m.snapshot();
+        assert_eq!(s.baskets, 2);
+        assert!((s.ratio() - 4.0).abs() < 1e-9);
+        assert_eq!(s.lat_buckets[0], 1);
+        assert_eq!(s.lat_buckets[2], 1);
+        assert!(s.compress_mbps() > 0.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! The L3 coordination contribution: a parallel basket-compression pipeline
+//! with bounded-queue backpressure and strictly ordered commit.
+//!
+//! ROOT compresses baskets implicitly on the thread that fills them; the
+//! paper's Fig-1 discussion points at "a number of advanced compression or
+//! decompression possibilities such as simultaneous read and decompression
+//! for the multiple physics events". This module makes that explicit:
+//!
+//! ```text
+//!  fill thread ──submit──▶ [bounded job queue] ──▶ N compression workers
+//!                                                        │ (Engine each)
+//!                                  [bounded done queue] ◀┘
+//!                                        │
+//!                               committer thread: reorders by sequence
+//!                               number, writes records, tracks BasketLocs
+//! ```
+//!
+//! Invariants (property-tested in rust/tests/integration_pipeline.rs):
+//!  * the committed file is byte-identical in content to a serial write
+//!    (same baskets, same order);
+//!  * no basket is lost or duplicated for any worker count / queue depth;
+//!  * submission blocks (backpressure) rather than queueing unboundedly.
+
+use crate::compression::{Engine, Settings};
+use crate::coordinator::metrics::Metrics;
+use crate::rfile::writer::{frame_basket_record, BasketSink, RecordWriter};
+use crate::rfile::{basket::encode_basket, BasketLoc, PendingBasket};
+use crate::rfile::format::RecordKind;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub workers: usize,
+    /// Bounded queue depth between fill → workers (backpressure knob).
+    pub queue_depth: usize,
+    /// Dictionary for ZSTD-family settings (cloned into each worker).
+    pub dictionary: Vec<u8>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .saturating_sub(1)
+            .max(1);
+        Self { workers, queue_depth: 2 * workers, dictionary: Vec::new() }
+    }
+}
+
+struct Job {
+    seq: u64,
+    basket: PendingBasket,
+    settings: Settings,
+}
+
+struct Done {
+    seq: u64,
+    branch_id: u32,
+    basket_index: u32,
+    first_entry: u64,
+    n_entries: u32,
+    uncompressed_len: u32,
+    payload: Vec<u8>,
+}
+
+/// A [`BasketSink`] that compresses on a worker pool and commits in
+/// submission order.
+pub struct ParallelSink {
+    job_tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    committer: Option<JoinHandle<Result<(Vec<BasketLoc>, RecordWriter)>>>,
+    seq: u64,
+    finished_writer: Option<RecordWriter>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ParallelSink {
+    pub fn new(writer: RecordWriter, config: PipelineConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<Job>(config.queue_depth.max(1));
+        let (done_tx, done_rx) = std::sync::mpsc::sync_channel::<Done>(config.queue_depth.max(1) * 2);
+        let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
+
+        let mut workers = Vec::with_capacity(config.workers);
+        for _ in 0..config.workers.max(1) {
+            let rx = Arc::clone(&job_rx);
+            let tx = done_tx.clone();
+            let m = Arc::clone(&metrics);
+            let dict = config.dictionary.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut engine = Engine::new();
+                if !dict.is_empty() {
+                    engine.set_dictionary(dict);
+                }
+                loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(job) = job else { break };
+                    let t0 = Instant::now();
+                    let uncompressed_len = job.basket.logical_len() as u32;
+                    let encoded = encode_basket(&job.basket, &job.settings, &mut engine);
+                    let payload = frame_basket_record(
+                        job.basket.branch_id,
+                        job.basket.basket_index,
+                        &encoded,
+                    );
+                    m.record_basket(uncompressed_len as usize, payload.len(), t0.elapsed());
+                    let done = Done {
+                        seq: job.seq,
+                        branch_id: job.basket.branch_id,
+                        basket_index: job.basket.basket_index,
+                        first_entry: job.basket.first_entry,
+                        n_entries: job.basket.n_entries,
+                        uncompressed_len,
+                        payload,
+                    };
+                    if tx.send(done).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(done_tx);
+
+        let committer = std::thread::spawn(move || commit_loop(writer, done_rx));
+
+        Self {
+            job_tx: Some(job_tx),
+            workers,
+            committer: Some(committer),
+            seq: 0,
+            finished_writer: None,
+            metrics,
+        }
+    }
+
+    /// After `finish()`, retrieve the writer to close the file.
+    pub fn take_writer(&mut self) -> Option<RecordWriter> {
+        self.finished_writer.take()
+    }
+
+    /// Drain the pipeline; returns (locations, writer) for file close.
+    fn shutdown(&mut self) -> Result<(Vec<BasketLoc>, RecordWriter)> {
+        drop(self.job_tx.take());
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        }
+        let committer = self
+            .committer
+            .take()
+            .context("pipeline already shut down")?;
+        committer
+            .join()
+            .map_err(|_| anyhow::anyhow!("committer panicked"))?
+    }
+}
+
+/// Reorders by sequence number and writes records in order.
+fn commit_loop(
+    mut writer: RecordWriter,
+    done_rx: Receiver<Done>,
+) -> Result<(Vec<BasketLoc>, RecordWriter)> {
+    let mut next_seq = 0u64;
+    let mut pending: BTreeMap<u64, Done> = BTreeMap::new();
+    let mut locs = Vec::new();
+    let mut write = |writer: &mut RecordWriter, d: Done, locs: &mut Vec<BasketLoc>| -> Result<()> {
+        let off = writer.append(RecordKind::Basket, &d.payload)?;
+        locs.push(BasketLoc {
+            branch_id: d.branch_id,
+            basket_index: d.basket_index,
+            first_entry: d.first_entry,
+            n_entries: d.n_entries,
+            file_offset: off,
+            compressed_len: d.payload.len() as u32,
+            uncompressed_len: d.uncompressed_len,
+        });
+        Ok(())
+    };
+    while let Ok(done) = done_rx.recv() {
+        pending.insert(done.seq, done);
+        while let Some(d) = pending.remove(&next_seq) {
+            write(&mut writer, d, &mut locs)?;
+            next_seq += 1;
+        }
+    }
+    // Channel closed: everything must have committed.
+    if !pending.is_empty() {
+        bail!("pipeline lost sequence numbers; {} baskets stranded", pending.len());
+    }
+    Ok((locs, writer))
+}
+
+impl BasketSink for ParallelSink {
+    fn submit(&mut self, basket: PendingBasket, settings: Settings) -> Result<()> {
+        let job = Job { seq: self.seq, basket, settings };
+        self.seq += 1;
+        self.job_tx
+            .as_ref()
+            .context("pipeline is shut down")?
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("pipeline workers gone"))
+    }
+
+    fn finish(&mut self) -> Result<Vec<BasketLoc>> {
+        let (locs, writer) = self.shutdown()?;
+        self.finished_writer = Some(writer);
+        Ok(locs)
+    }
+}
+
+/// Write a whole tree through the parallel pipeline.
+pub fn write_tree_parallel(
+    path: &std::path::Path,
+    name: &str,
+    branches: Vec<crate::rfile::BranchDef>,
+    default_settings: Settings,
+    basket_size: usize,
+    config: PipelineConfig,
+    events: impl Iterator<Item = Vec<crate::rfile::Value>>,
+) -> Result<(crate::rfile::TreeMeta, crate::coordinator::metrics::Snapshot)> {
+    let writer = RecordWriter::create(path)?;
+    let dict = config.dictionary.clone();
+    let sink = ParallelSink::new(writer, config);
+    let metrics = Arc::clone(&sink.metrics);
+    let mut tw = crate::rfile::TreeWriter::new(name, branches, default_settings, basket_size, sink);
+    for ev in events {
+        tw.fill(&ev)?;
+    }
+    let (mut meta, mut sink) = tw.finalize()?;
+    let mut writer = sink.take_writer().context("pipeline writer missing")?;
+    // Write the dictionary record if present, then close.
+    if !dict.is_empty() {
+        let off = writer.append(RecordKind::Dictionary, &dict)?;
+        meta.dictionary_offset = Some(off);
+    }
+    writer.close(&meta)?;
+    Ok((meta, metrics.snapshot()))
+}

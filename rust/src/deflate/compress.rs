@@ -1,0 +1,432 @@
+//! Raw DEFLATE (RFC 1951) compression: token stream → bit stream with
+//! per-block choice of stored / fixed-Huffman / dynamic-Huffman encoding,
+//! like zlib's `_tr_flush_block`.
+
+use super::consts::*;
+use super::huffman::{build_code_lengths, canonical_codes};
+use super::matcher::{Matcher, Token};
+use super::tuning::Tuning;
+use crate::util::bitio::BitWriter;
+
+/// Tokens per block before we flush (zlib uses a 16K-symbol buffer; bigger
+/// blocks amortize tree headers better on our basket-sized inputs).
+const BLOCK_TOKENS: usize = 48 * 1024;
+/// Stored blocks cap at 65535 bytes.
+const MAX_STORED: usize = 65_535;
+
+/// Compress `data` as a raw DEFLATE stream at the given tuning.
+pub fn deflate(data: &[u8], tuning: &Tuning) -> Vec<u8> {
+    let mut matcher = Matcher::new();
+    let mut tokens = Vec::new();
+    deflate_with(data, tuning, &mut matcher, &mut tokens)
+}
+
+/// Compress `buf[start..]` with `buf[..start]` as a preset dictionary
+/// (matchable, not emitted) — the RFC 1950 FDICT mechanism the paper's §3
+/// points at ("the generated dictionaries are useable for ZLIB ... as
+/// well").
+pub fn deflate_dict(buf: &[u8], start: usize, tuning: &Tuning) -> Vec<u8> {
+    let mut matcher = Matcher::new();
+    let mut tokens = Vec::new();
+    let mut w = BitWriter::with_capacity((buf.len() - start) / 2 + 64);
+    if buf.len() == start {
+        write_stored_blocks(&mut w, &[], true);
+        return w.finish();
+    }
+    matcher.tokenize_from(buf, start, tuning, &mut tokens);
+    let mut start_tok = 0usize;
+    let mut start_byte = start;
+    while start_tok < tokens.len() {
+        let end_tok = (start_tok + BLOCK_TOKENS).min(tokens.len());
+        let span: usize = tokens[start_tok..end_tok]
+            .iter()
+            .map(|t| match t {
+                Token::Literal(_) => 1usize,
+                Token::Match { len, .. } => *len as usize,
+            })
+            .sum();
+        let is_final = end_tok == tokens.len();
+        write_block(&mut w, &tokens[start_tok..end_tok], &buf[start_byte..start_byte + span], is_final);
+        start_tok = end_tok;
+        start_byte += span;
+    }
+    w.finish()
+}
+
+/// Compress with caller-provided scratch (hot-path variant: no per-call
+/// allocations beyond the output).
+pub fn deflate_with(
+    data: &[u8],
+    tuning: &Tuning,
+    matcher: &mut Matcher,
+    tokens: &mut Vec<Token>,
+) -> Vec<u8> {
+    let mut w = BitWriter::with_capacity(data.len() / 2 + 64);
+    if data.is_empty() {
+        // A single final stored block of length 0.
+        write_stored_blocks(&mut w, data, true);
+        return w.finish();
+    }
+    matcher.tokenize(data, tuning, tokens);
+
+    // Split the token stream into blocks, tracking the input span covered by
+    // each so stored-block fallback knows which bytes to copy.
+    let mut start_tok = 0usize;
+    let mut start_byte = 0usize;
+    while start_tok < tokens.len() {
+        let end_tok = (start_tok + BLOCK_TOKENS).min(tokens.len());
+        let span: usize = tokens[start_tok..end_tok]
+            .iter()
+            .map(|t| match t {
+                Token::Literal(_) => 1usize,
+                Token::Match { len, .. } => *len as usize,
+            })
+            .sum();
+        let is_final = end_tok == tokens.len();
+        write_block(
+            &mut w,
+            &tokens[start_tok..end_tok],
+            &data[start_byte..start_byte + span],
+            is_final,
+        );
+        start_tok = end_tok;
+        start_byte += span;
+    }
+    w.finish()
+}
+
+/// "Level 0": no compression — stored blocks only (ROOT compression level 0
+/// disables compression entirely, but the zlib wrapper still frames it).
+pub fn deflate_stored(data: &[u8]) -> Vec<u8> {
+    let mut w = BitWriter::with_capacity(data.len() + data.len() / MAX_STORED * 5 + 16);
+    write_stored_blocks(&mut w, data, true);
+    w.finish()
+}
+
+fn write_stored_blocks(w: &mut BitWriter, data: &[u8], finish: bool) {
+    let mut chunks = data.chunks(MAX_STORED).peekable();
+    if data.is_empty() {
+        w.write_bits(finish as u64, 1);
+        w.write_bits(0b00, 2); // BTYPE=00
+        w.align_byte();
+        w.write_bytes(&0u16.to_le_bytes());
+        w.write_bytes(&0xFFFFu16.to_le_bytes());
+        return;
+    }
+    while let Some(chunk) = chunks.next() {
+        let last = chunks.peek().is_none() && finish;
+        w.write_bits(last as u64, 1);
+        w.write_bits(0b00, 2);
+        w.align_byte();
+        let len = chunk.len() as u16;
+        w.write_bytes(&len.to_le_bytes());
+        w.write_bytes(&(!len).to_le_bytes());
+        w.write_bytes(chunk);
+    }
+}
+
+/// Fixed literal/length code lengths (RFC 1951 §3.2.6).
+fn fixed_litlen_lengths() -> Vec<u8> {
+    let mut l = vec![0u8; 288];
+    for (i, v) in l.iter_mut().enumerate() {
+        *v = match i {
+            0..=143 => 8,
+            144..=255 => 9,
+            256..=279 => 7,
+            _ => 8,
+        };
+    }
+    l
+}
+
+fn fixed_dist_lengths() -> Vec<u8> {
+    vec![5u8; 30]
+}
+
+struct Trees {
+    lit_lengths: Vec<u8>,
+    lit_codes: Vec<u16>,
+    dist_lengths: Vec<u8>,
+    dist_codes: Vec<u16>,
+}
+
+fn histogram(tokens: &[Token]) -> ([u64; NUM_LITLEN], [u64; NUM_DIST]) {
+    let mut lit = [0u64; NUM_LITLEN];
+    let mut dist = [0u64; NUM_DIST];
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => lit[b as usize] += 1,
+            Token::Match { len, dist: d } => {
+                lit[257 + length_code(len)] += 1;
+                dist[dist_code(d)] += 1;
+            }
+        }
+    }
+    lit[256] += 1; // end-of-block
+    (lit, dist)
+}
+
+/// Cost in bits of encoding `tokens` with the given code lengths.
+fn body_cost(tokens_hist: &([u64; NUM_LITLEN], [u64; NUM_DIST]), lit_len: &[u8], dist_len: &[u8]) -> u64 {
+    let (lit, dist) = tokens_hist;
+    let mut bits = 0u64;
+    for (sym, &count) in lit.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let extra = if sym > 256 { LENGTH_TABLE[sym - 257].1 as u64 } else { 0 };
+        bits += count * (lit_len[sym] as u64 + extra);
+    }
+    for (sym, &count) in dist.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        bits += count * (dist_len[sym] as u64 + DIST_TABLE[sym].1 as u64);
+    }
+    bits
+}
+
+fn write_block(w: &mut BitWriter, tokens: &[Token], raw: &[u8], is_final: bool) {
+    let hist = histogram(tokens);
+    let (lit_hist, dist_hist) = &hist;
+
+    // Dynamic trees.
+    let mut dyn_lit = build_code_lengths(lit_hist, 15);
+    dyn_lit.resize(NUM_LITLEN, 0);
+    let mut dyn_dist = build_code_lengths(dist_hist, 15);
+    dyn_dist.resize(NUM_DIST, 0);
+    // DEFLATE requires at least one distance code length transmitted; if no
+    // matches, send a single zero-length slot (handled by HDIST below). Also
+    // if exactly one distance code is used it gets length 1 — legal.
+    let (clc_payload, clc_lengths, clc_codes, header_bits) = encode_tree_header(&dyn_lit, &dyn_dist);
+
+    let fixed_lit = fixed_litlen_lengths();
+    let fixed_dist = fixed_dist_lengths();
+
+    let dyn_cost = 3 + header_bits + body_cost(&hist, &dyn_lit, &dyn_dist);
+    let fix_cost = 3 + body_cost(&hist, &fixed_lit, &fixed_dist);
+    let stored_cost = 3 + 32 + (raw.len() as u64) * 8 + 7 /* alignment upper bound */
+        + (raw.len() / MAX_STORED) as u64 * 40;
+
+    if stored_cost < dyn_cost && stored_cost < fix_cost {
+        write_stored_blocks(w, raw, is_final);
+        return;
+    }
+
+    if fix_cost <= dyn_cost {
+        w.write_bits(is_final as u64, 1);
+        w.write_bits(0b01, 2);
+        let lit_codes = canonical_codes(&fixed_lit);
+        let dist_codes = canonical_codes(&fixed_dist);
+        let trees = Trees {
+            lit_lengths: fixed_lit,
+            lit_codes,
+            dist_lengths: fixed_dist,
+            dist_codes,
+        };
+        write_body(w, tokens, &trees);
+    } else {
+        w.write_bits(is_final as u64, 1);
+        w.write_bits(0b10, 2);
+        write_tree_header(w, &clc_payload, &clc_lengths, &clc_codes, &dyn_lit, &dyn_dist);
+        let lit_codes = canonical_codes(&dyn_lit);
+        let dist_codes = canonical_codes(&dyn_dist);
+        let trees = Trees {
+            lit_lengths: dyn_lit,
+            lit_codes,
+            dist_lengths: dyn_dist,
+            dist_codes,
+        };
+        write_body(w, tokens, &trees);
+    }
+}
+
+/// Code-length-code symbol: (symbol, extra bits value, extra bit count).
+type ClcSym = (u8, u8, u8);
+
+/// RLE-encode the two trees' lengths into the code-length alphabet
+/// (symbols 0..15 literal, 16 repeat prev 3–6, 17 zeros 3–10, 18 zeros
+/// 11–138) and build the CLC huffman code. Returns payload, clc lengths,
+/// clc codes, and total header bit cost.
+fn encode_tree_header(lit: &[u8], dist: &[u8]) -> (Vec<ClcSym>, [u8; 19], Vec<u16>, u64) {
+    let hlit = trailing_trim(lit, 257);
+    let hdist = trailing_trim(dist, 1);
+    let mut seq: Vec<u8> = Vec::with_capacity(hlit + hdist);
+    seq.extend_from_slice(&lit[..hlit]);
+    seq.extend_from_slice(&dist[..hdist]);
+
+    let mut payload: Vec<ClcSym> = Vec::new();
+    let mut i = 0usize;
+    while i < seq.len() {
+        let v = seq[i];
+        let mut run = 1usize;
+        while i + run < seq.len() && seq[i + run] == v {
+            run += 1;
+        }
+        if v == 0 {
+            let mut r = run;
+            while r >= 11 {
+                let take = r.min(138);
+                payload.push((18, (take - 11) as u8, 7));
+                r -= take;
+            }
+            if r >= 3 {
+                payload.push((17, (r - 3) as u8, 3));
+                r = 0;
+            }
+            for _ in 0..r {
+                payload.push((0, 0, 0));
+            }
+        } else {
+            payload.push((v, 0, 0));
+            let mut r = run - 1;
+            while r >= 3 {
+                let take = r.min(6);
+                payload.push((16, (take - 3) as u8, 2));
+                r -= take;
+            }
+            for _ in 0..r {
+                payload.push((v, 0, 0));
+            }
+        }
+        i += run;
+    }
+
+    let mut clc_freq = [0u64; 19];
+    for &(s, _, _) in &payload {
+        clc_freq[s as usize] += 1;
+    }
+    let clc_lengths_v = build_code_lengths(&clc_freq, 7);
+    let mut clc_lengths = [0u8; 19];
+    clc_lengths[..clc_lengths_v.len()].copy_from_slice(&clc_lengths_v);
+    let clc_codes = canonical_codes(&clc_lengths);
+
+    // HCLEN: number of CLC lengths transmitted, in CLC_ORDER, min 4.
+    let mut hclen = 19;
+    while hclen > 4 && clc_lengths[CLC_ORDER[hclen - 1]] == 0 {
+        hclen -= 1;
+    }
+    let mut bits = 5 + 5 + 4 + 3 * hclen as u64;
+    for &(s, _, extra) in &payload {
+        bits += clc_lengths[s as usize] as u64 + extra as u64;
+    }
+    (payload, clc_lengths, clc_codes, bits)
+}
+
+fn trailing_trim(lengths: &[u8], min: usize) -> usize {
+    let mut n = lengths.len();
+    while n > min && lengths[n - 1] == 0 {
+        n -= 1;
+    }
+    n
+}
+
+fn write_tree_header(
+    w: &mut BitWriter,
+    payload: &[ClcSym],
+    clc_lengths: &[u8; 19],
+    clc_codes: &[u16],
+    lit: &[u8],
+    dist: &[u8],
+) {
+    let hlit = trailing_trim(lit, 257);
+    let hdist = trailing_trim(dist, 1);
+    let mut hclen = 19;
+    while hclen > 4 && clc_lengths[CLC_ORDER[hclen - 1]] == 0 {
+        hclen -= 1;
+    }
+    w.write_bits((hlit - 257) as u64, 5);
+    w.write_bits((hdist - 1) as u64, 5);
+    w.write_bits((hclen - 4) as u64, 4);
+    for k in 0..hclen {
+        w.write_bits(clc_lengths[CLC_ORDER[k]] as u64, 3);
+    }
+    for &(s, extra_val, extra_bits) in payload {
+        w.write_bits(clc_codes[s as usize] as u64, clc_lengths[s as usize] as u32);
+        if extra_bits > 0 {
+            w.write_bits(extra_val as u64, extra_bits as u32);
+        }
+    }
+}
+
+fn write_body(w: &mut BitWriter, tokens: &[Token], trees: &Trees) {
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => {
+                let s = b as usize;
+                w.write_bits(trees.lit_codes[s] as u64, trees.lit_lengths[s] as u32);
+            }
+            Token::Match { len, dist } => {
+                let lc = length_code(len);
+                let s = 257 + lc;
+                let (lbase, lextra) = LENGTH_TABLE[lc];
+                // Combine code + extra bits in up to 2 writes.
+                w.write_bits(trees.lit_codes[s] as u64, trees.lit_lengths[s] as u32);
+                if lextra > 0 {
+                    w.write_bits((len - lbase) as u64, lextra as u32);
+                }
+                let dc = dist_code(dist);
+                let (dbase, dextra) = DIST_TABLE[dc];
+                w.write_bits(trees.dist_codes[dc] as u64, trees.dist_lengths[dc] as u32);
+                if dextra > 0 {
+                    w.write_bits((dist - dbase) as u64, dextra as u32);
+                }
+            }
+        }
+    }
+    // End of block.
+    w.write_bits(trees.lit_codes[256] as u64, trees.lit_lengths[256] as u32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deflate::tuning::{Flavor, Tuning};
+
+    // Round-trip tests live in inflate.rs / interop tests; here we check
+    // structural properties only.
+
+    #[test]
+    fn stored_empty() {
+        let out = deflate_stored(b"");
+        // 1 bit BFINAL + 2 bits BTYPE + pad + LEN/NLEN = 5 bytes.
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0] & 0b111, 0b001); // final, stored
+    }
+
+    #[test]
+    fn stored_roundtrip_framing() {
+        let data = vec![7u8; 100_000]; // forces 2 stored blocks
+        let out = deflate_stored(&data);
+        assert!(out.len() > data.len()); // stored adds framing
+        assert!(out.len() < data.len() + 64);
+    }
+
+    #[test]
+    fn compressible_data_shrinks() {
+        let data = vec![42u8; 65_536];
+        for level in [1u8, 6, 9] {
+            let out = deflate(&data, &Tuning::new(Flavor::Reference, level));
+            assert!(out.len() < 1024, "level {level}: {} bytes", out.len());
+        }
+    }
+
+    #[test]
+    fn incompressible_data_bounded_expansion() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let data = rng.bytes(65_536);
+        let out = deflate(&data, &Tuning::new(Flavor::Cloudflare, 6));
+        // Stored fallback keeps expansion tiny.
+        assert!(out.len() <= data.len() + 5 * (data.len() / MAX_STORED + 1) + 16);
+    }
+
+    #[test]
+    fn trailing_trim_bounds() {
+        let mut l = vec![0u8; 286];
+        assert_eq!(trailing_trim(&l, 257), 257);
+        l[260] = 5;
+        assert_eq!(trailing_trim(&l, 257), 261);
+        let d = vec![0u8; 30];
+        assert_eq!(trailing_trim(&d, 1), 1);
+    }
+}

@@ -1,0 +1,148 @@
+//! Shared RFC 1951 constant tables: length/distance code bases and extra
+//! bits, code-length-alphabet permutation order.
+
+/// Length codes 257..=285: (base length, extra bits).
+pub const LENGTH_TABLE: [(u16, u8); 29] = [
+    (3, 0), (4, 0), (5, 0), (6, 0), (7, 0), (8, 0), (9, 0), (10, 0),
+    (11, 1), (13, 1), (15, 1), (17, 1),
+    (19, 2), (23, 2), (27, 2), (31, 2),
+    (35, 3), (43, 3), (51, 3), (59, 3),
+    (67, 4), (83, 4), (99, 4), (115, 4),
+    (131, 5), (163, 5), (195, 5), (227, 5),
+    (258, 0),
+];
+
+/// Distance codes 0..=29: (base distance, extra bits).
+pub const DIST_TABLE: [(u16, u8); 30] = [
+    (1, 0), (2, 0), (3, 0), (4, 0),
+    (5, 1), (7, 1),
+    (9, 2), (13, 2),
+    (17, 3), (25, 3),
+    (33, 4), (49, 4),
+    (65, 5), (97, 5),
+    (129, 6), (193, 6),
+    (257, 7), (385, 7),
+    (513, 8), (769, 8),
+    (1025, 9), (1537, 9),
+    (2049, 10), (3073, 10),
+    (4097, 11), (6145, 11),
+    (8193, 12), (12289, 12),
+    (16385, 13), (24577, 13),
+];
+
+/// Order in which code-length-code lengths are transmitted (RFC 1951 §3.2.7).
+pub const CLC_ORDER: [usize; 19] = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+
+/// Number of literal/length symbols (0..=285, 286 entries).
+pub const NUM_LITLEN: usize = 286;
+/// Number of distance symbols.
+pub const NUM_DIST: usize = 30;
+
+/// Map a match length (3..=258) to (code index 0..=28 within 257..285).
+#[inline]
+pub fn length_code(len: u16) -> usize {
+    debug_assert!((3..=258).contains(&len));
+    // Binary-search-free: a 256-entry LUT would be faster; built on first use.
+    LENGTH_LUT[(len - 3) as usize] as usize
+}
+
+/// Map a distance (1..=32768) to code index 0..=29.
+#[inline]
+pub fn dist_code(dist: u16) -> usize {
+    debug_assert!(dist >= 1);
+    let d = (dist - 1) as usize;
+    if d < 256 {
+        DIST_LUT_LO[d] as usize
+    } else {
+        DIST_LUT_HI[d >> 7] as usize
+    }
+}
+
+/// Length LUT: len-3 -> length code index (0..=28).
+pub static LENGTH_LUT: [u8; 256] = build_length_lut();
+static DIST_LUT_LO: [u8; 256] = build_dist_lut_lo();
+static DIST_LUT_HI: [u8; 256] = build_dist_lut_hi();
+
+const fn build_length_lut() -> [u8; 256] {
+    let mut lut = [0u8; 256];
+    let mut code = 0usize;
+    let mut len = 3usize;
+    while len <= 258 {
+        // Advance code while len exceeds the next base.
+        while code + 1 < 29 && len >= LENGTH_TABLE[code + 1].0 as usize {
+            code += 1;
+        }
+        lut[len - 3] = code as u8;
+        len += 1;
+    }
+    // Special case: 258 has its own code 28 (base 258, 0 extra).
+    lut[258 - 3] = 28;
+    lut
+}
+
+const fn build_dist_lut_lo() -> [u8; 256] {
+    let mut lut = [0u8; 256];
+    let mut d = 0usize; // dist-1
+    while d < 256 {
+        let dist = d + 1;
+        let mut code = 0usize;
+        while code + 1 < 30 && dist >= DIST_TABLE[code + 1].0 as usize {
+            code += 1;
+        }
+        lut[d] = code as u8;
+        d += 1;
+    }
+    lut
+}
+
+const fn build_dist_lut_hi() -> [u8; 256] {
+    // Index: (dist-1) >> 7 for dist > 256.
+    let mut lut = [0u8; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let dist = (i << 7) + 1 + 127; // representative distance in bucket
+        let dist = if dist > 32768 { 32768 } else { dist };
+        let mut code = 0usize;
+        while code + 1 < 30 && dist >= DIST_TABLE[code + 1].0 as usize {
+            code += 1;
+        }
+        lut[i] = code as u8;
+        i += 1;
+    }
+    lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_code_matches_table() {
+        for len in 3u16..=258 {
+            let c = length_code(len);
+            let (base, extra) = LENGTH_TABLE[c];
+            assert!(len >= base, "len {len} code {c}");
+            assert!(
+                (len as u32) < base as u32 + (1u32 << extra) || len == 258,
+                "len {len} code {c} base {base} extra {extra}"
+            );
+        }
+        assert_eq!(length_code(3), 0);
+        assert_eq!(length_code(258), 28);
+        assert_eq!(length_code(10), 7);
+        assert_eq!(length_code(11), 8);
+    }
+
+    #[test]
+    fn dist_code_matches_table() {
+        for dist in 1u32..=32768 {
+            let c = dist_code(dist as u16);
+            let (base, extra) = DIST_TABLE[c];
+            assert!(dist >= base as u32, "dist {dist} code {c}");
+            assert!(
+                dist < base as u32 + (1u32 << extra),
+                "dist {dist} code {c} base {base} extra {extra}"
+            );
+        }
+    }
+}

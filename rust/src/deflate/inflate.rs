@@ -1,0 +1,387 @@
+//! DEFLATE decompression (RFC 1951) — table-driven, branch-light bit reader.
+
+use super::consts::*;
+use super::huffman::Decoder;
+use crate::util::bitio::BitReader;
+
+/// Inflate errors carry a static reason; inputs are untrusted (files on
+/// disk), so every malformed case must land here rather than panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InflateError(pub &'static str);
+
+impl std::fmt::Display for InflateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "inflate: {}", self.0)
+    }
+}
+impl std::error::Error for InflateError {}
+
+const E: fn(&'static str) -> InflateError = InflateError;
+
+/// Decompress a raw DEFLATE stream. `size_hint` pre-sizes the output (the
+/// ROOT record header stores the exact uncompressed size, so the hot path
+/// always has it). `max_out` bounds memory for untrusted input.
+pub fn inflate(data: &[u8], size_hint: usize, max_out: usize) -> Result<Vec<u8>, InflateError> {
+    inflate_dict(data, &[], size_hint, max_out)
+}
+
+/// Inflate with a preset dictionary (RFC 1950 FDICT): the window starts
+/// primed with `dict`, so back-references may reach into it.
+pub fn inflate_dict(
+    data: &[u8],
+    dict: &[u8],
+    size_hint: usize,
+    max_out: usize,
+) -> Result<Vec<u8>, InflateError> {
+    let mut out: Vec<u8> = Vec::with_capacity(dict.len() + size_hint.min(max_out));
+    out.extend_from_slice(dict);
+    let max_out = max_out.saturating_add(dict.len());
+    let mut r = BitReader::new(data);
+    loop {
+        let bfinal = r.read_bits(1) != 0;
+        let btype = r.read_bits(2);
+        match btype {
+            0b00 => inflate_stored(&mut r, &mut out, max_out)?,
+            0b01 => {
+                let (lit, dist) = fixed_decoders();
+                inflate_block(&mut r, lit, dist, &mut out, max_out)?;
+            }
+            0b10 => {
+                let (lit, dist) = read_dynamic_trees(&mut r)?;
+                inflate_block(&mut r, &lit, dist.as_ref(), &mut out, max_out)?;
+            }
+            _ => return Err(E("reserved block type")),
+        }
+        if r.overflowed() {
+            return Err(E("truncated stream"));
+        }
+        if bfinal {
+            out.drain(..dict.len());
+            return Ok(out);
+        }
+    }
+}
+
+fn inflate_stored(r: &mut BitReader, out: &mut Vec<u8>, max_out: usize) -> Result<(), InflateError> {
+    r.align_byte();
+    let len = r.read_bits(16) as u16;
+    let nlen = r.read_bits(16) as u16;
+    if r.overflowed() {
+        return Err(E("truncated stored header"));
+    }
+    if len != !nlen {
+        return Err(E("stored LEN/NLEN mismatch"));
+    }
+    if out.len() + len as usize > max_out {
+        return Err(E("output limit exceeded"));
+    }
+    let start = out.len();
+    out.resize(start + len as usize, 0);
+    r.read_bytes(&mut out[start..])
+        .map_err(|_| E("truncated stored block"))
+}
+
+fn fixed_decoders() -> (&'static Decoder, Option<&'static Decoder>) {
+    use std::sync::OnceLock;
+    static FIXED: OnceLock<(Decoder, Decoder)> = OnceLock::new();
+    let (lit, dist) = FIXED.get_or_init(|| {
+        let mut l = vec![0u8; 288];
+        for (i, v) in l.iter_mut().enumerate() {
+            *v = match i {
+                0..=143 => 8,
+                144..=255 => 9,
+                256..=279 => 7,
+                _ => 8,
+            };
+        }
+        // 32 codes: 30/31 are defined by the RFC but invalid if used.
+        let d = vec![5u8; 32];
+        (
+            Decoder::from_lengths(&l).expect("fixed lit tree"),
+            Decoder::from_lengths(&d).expect("fixed dist tree"),
+        )
+    });
+    (lit, Some(dist))
+}
+
+fn read_dynamic_trees(r: &mut BitReader) -> Result<(Decoder, Option<Decoder>), InflateError> {
+    let hlit = r.read_bits(5) as usize + 257;
+    let hdist = r.read_bits(5) as usize + 1;
+    let hclen = r.read_bits(4) as usize + 4;
+    if hlit > NUM_LITLEN {
+        return Err(E("HLIT too large"));
+    }
+    if hdist > NUM_DIST {
+        return Err(E("HDIST too large"));
+    }
+    let mut clc_lengths = [0u8; 19];
+    for k in 0..hclen {
+        clc_lengths[CLC_ORDER[k]] = r.read_bits(3) as u8;
+    }
+    if r.overflowed() {
+        return Err(E("truncated tree header"));
+    }
+    let clc = Decoder::from_lengths(&clc_lengths).map_err(|_| E("bad code-length code"))?;
+
+    let mut lengths = vec![0u8; hlit + hdist];
+    let mut i = 0usize;
+    while i < lengths.len() {
+        let sym = clc.decode(r).map_err(|_| E("bad CLC symbol"))?;
+        match sym {
+            0..=15 => {
+                lengths[i] = sym as u8;
+                i += 1;
+            }
+            16 => {
+                if i == 0 {
+                    return Err(E("repeat with no previous length"));
+                }
+                let run = 3 + r.read_bits(2) as usize;
+                if i + run > lengths.len() {
+                    return Err(E("length repeat overflow"));
+                }
+                let v = lengths[i - 1];
+                lengths[i..i + run].fill(v);
+                i += run;
+            }
+            17 => {
+                let run = 3 + r.read_bits(3) as usize;
+                if i + run > lengths.len() {
+                    return Err(E("zero repeat overflow"));
+                }
+                i += run;
+            }
+            18 => {
+                let run = 11 + r.read_bits(7) as usize;
+                if i + run > lengths.len() {
+                    return Err(E("zero repeat overflow"));
+                }
+                i += run;
+            }
+            _ => return Err(E("invalid CLC symbol")),
+        }
+        if r.overflowed() {
+            return Err(E("truncated tree payload"));
+        }
+    }
+    let (lit_lengths, dist_lengths) = lengths.split_at(hlit);
+    if lit_lengths[256] == 0 {
+        return Err(E("no end-of-block code"));
+    }
+    let lit = Decoder::from_lengths(lit_lengths).map_err(|_| E("bad literal tree"))?;
+    let dist = if dist_lengths.iter().all(|&l| l == 0) {
+        None
+    } else {
+        Some(Decoder::from_lengths(dist_lengths).map_err(|_| E("bad distance tree"))?)
+    };
+    Ok((lit, dist))
+}
+
+fn inflate_block(
+    r: &mut BitReader,
+    lit: &Decoder,
+    dist: Option<&Decoder>,
+    out: &mut Vec<u8>,
+    max_out: usize,
+) -> Result<(), InflateError> {
+    loop {
+        let sym = lit.decode(r).map_err(|_| E("bad literal/length code"))?;
+        if r.overflowed() {
+            return Err(E("truncated block"));
+        }
+        match sym {
+            0..=255 => {
+                if out.len() >= max_out {
+                    return Err(E("output limit exceeded"));
+                }
+                out.push(sym as u8);
+            }
+            256 => return Ok(()),
+            257..=285 => {
+                let (lbase, lextra) = LENGTH_TABLE[(sym - 257) as usize];
+                let len = lbase as usize + r.read_bits(lextra as u32) as usize;
+                let dist_dec = dist.ok_or(E("match with empty distance tree"))?;
+                let dsym = dist_dec.decode(r).map_err(|_| E("bad distance code"))?;
+                if dsym as usize >= DIST_TABLE.len() {
+                    return Err(E("invalid distance symbol"));
+                }
+                let (dbase, dextra) = DIST_TABLE[dsym as usize];
+                let d = dbase as usize + r.read_bits(dextra as u32) as usize;
+                if r.overflowed() {
+                    return Err(E("truncated match"));
+                }
+                if d > out.len() {
+                    return Err(E("distance beyond output start"));
+                }
+                if out.len() + len > max_out {
+                    return Err(E("output limit exceeded"));
+                }
+                copy_match(out, d, len);
+            }
+            _ => return Err(E("invalid literal/length symbol")),
+        }
+    }
+}
+
+/// Overlapping backwards copy. For dist >= 8 use wide chunk copies (safe
+/// because source and destination don't overlap within a chunk).
+#[inline]
+fn copy_match(out: &mut Vec<u8>, dist: usize, len: usize) {
+    let start = out.len() - dist;
+    if dist >= len {
+        // No overlap at all.
+        out.extend_from_within(start..start + len);
+        return;
+    }
+    if dist == 1 {
+        // Run of a single byte.
+        let b = out[out.len() - 1];
+        let new_len = out.len() + len;
+        out.resize(new_len, b);
+        return;
+    }
+    // Overlapping: replicate the dist-sized period.
+    out.reserve(len);
+    let mut remaining = len;
+    let mut src = start;
+    while remaining > 0 {
+        let chunk = remaining.min(out.len() - src);
+        out.extend_from_within(src..src + chunk);
+        src += chunk;
+        remaining -= chunk;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deflate::compress::{deflate, deflate_stored};
+    use crate::deflate::tuning::{Flavor, Tuning};
+    use crate::util::rng::Rng;
+
+    const MAX: usize = 64 << 20;
+
+    fn roundtrip(data: &[u8], tuning: &Tuning) {
+        let c = deflate(data, tuning);
+        let d = inflate(&c, data.len(), MAX).expect("inflate");
+        assert_eq!(d, data, "{} on {} bytes", tuning.label(), data.len());
+    }
+
+    #[test]
+    fn roundtrip_corpus() {
+        let mut rng = Rng::new(0x1F1F);
+        let mut corpus: Vec<Vec<u8>> = vec![
+            vec![],
+            b"a".to_vec(),
+            b"hello hello hello hello".to_vec(),
+            vec![0u8; 100_000],
+            (0u32..20_000).flat_map(|i| i.to_be_bytes()).collect(),
+        ];
+        corpus.push(rng.bytes(70_000));
+        // Text-like.
+        let mut text = Vec::new();
+        while text.len() < 50_000 {
+            text.extend_from_slice(b"The LHC will increase both energy and luminosity. ");
+        }
+        corpus.push(text);
+        for data in &corpus {
+            for flavor in [Flavor::Reference, Flavor::Cloudflare] {
+                for level in [1u8, 4, 6, 9] {
+                    roundtrip(data, &Tuning::new(flavor, level));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_stored() {
+        let mut rng = Rng::new(0x1F20);
+        for n in [0usize, 1, 100, 65_535, 65_536, 200_000] {
+            let data = rng.bytes(n);
+            let c = deflate_stored(&data);
+            assert_eq!(inflate(&c, n, MAX).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn roundtrip_fuzz() {
+        let mut rng = Rng::new(0x1F21);
+        for round in 0..60 {
+            let n = rng.range(0, 30_000);
+            // Structured randomness: random spans of runs, text, noise.
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                match rng.range(0, 3) {
+                    0 => {
+                        let b = (rng.next_u64() & 0xFF) as u8;
+                        let run = rng.range(1, 300);
+                        data.extend(std::iter::repeat(b).take(run));
+                    }
+                    1 => data.extend_from_slice(b"branch_entry_offset_"),
+                    2 => {
+                        let k = rng.range(1, 64);
+                        let bytes = rng.bytes(k);
+                        data.extend_from_slice(&bytes);
+                    }
+                    _ => {
+                        let v = rng.next_u32();
+                        data.extend_from_slice(&v.to_be_bytes());
+                    }
+                }
+            }
+            data.truncate(n);
+            let level = [1u8, 3, 6, 9][round % 4];
+            let flavor = if round % 2 == 0 { Flavor::Reference } else { Flavor::Cloudflare };
+            roundtrip(&data, &Tuning::new(flavor, level));
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let mut rng = Rng::new(0x1F22);
+        let mut rejected = 0;
+        for _ in 0..200 {
+            let n = rng.range(1, 200);
+            let garbage = rng.bytes(n);
+            if inflate(&garbage, 1000, 1 << 16).is_err() {
+                rejected += 1;
+            }
+        }
+        // Random bytes are overwhelmingly invalid deflate streams.
+        assert!(rejected > 150, "only {rejected}/200 rejected");
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let data = vec![7u8; 10_000];
+        let c = deflate(&data, &Tuning::new(Flavor::Reference, 6));
+        for cut in [1, c.len() / 2, c.len() - 1] {
+            assert!(
+                inflate(&c[..cut], data.len(), MAX).is_err(),
+                "cut at {cut} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn respects_output_limit() {
+        let data = vec![0u8; 1 << 20];
+        let c = deflate(&data, &Tuning::new(Flavor::Reference, 6));
+        let err = inflate(&c, 1024, 1024).unwrap_err();
+        assert_eq!(err.0, "output limit exceeded");
+    }
+
+    #[test]
+    fn overlapping_copy_cases() {
+        // dist < len exercises the periodic copy.
+        let mut data = Vec::new();
+        for period in [1usize, 2, 3, 5, 7] {
+            for _ in 0..100 {
+                for k in 0..period {
+                    data.push((k * 37) as u8);
+                }
+            }
+        }
+        roundtrip(&data, &Tuning::new(Flavor::Reference, 6));
+    }
+}

@@ -1,0 +1,411 @@
+//! LZ77 match finding for DEFLATE: hash-head + prev-chain exactly like
+//! zlib's `deflate.c`, parameterized by the [`Tuning`] profile so the
+//! reference (triplet-hash) and Cloudflare (quadruplet-hash) behaviours are
+//! both available.
+
+use super::tuning::Tuning;
+
+/// DEFLATE window size (RFC 1951: distances up to 32768).
+pub const WINDOW_SIZE: usize = 32 * 1024;
+/// Minimum/maximum match lengths in DEFLATE.
+pub const MIN_MATCH: usize = 3;
+pub const MAX_MATCH: usize = 258;
+
+/// One LZ77 token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Token {
+    Literal(u8),
+    /// length in 3..=258, distance in 1..=32768
+    Match { len: u16, dist: u16 },
+}
+
+const HASH_BITS: u32 = 15;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+
+#[inline]
+fn hash3(data: &[u8], i: usize) -> usize {
+    // Multiplicative hash over 3 bytes (reference zlib uses shift-xor; a
+    // multiplicative mix has the same role and better distribution).
+    let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes(data[i..i + 4].try_into().unwrap());
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Reusable match-finder state (hash head + chain links). Reusing it across
+/// baskets avoids the dominant allocation in the per-basket hot loop.
+pub struct Matcher {
+    head: Vec<i32>,
+    prev: Vec<i32>,
+}
+
+impl Default for Matcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Matcher {
+    pub fn new() -> Self {
+        Self { head: vec![-1; HASH_SIZE], prev: Vec::new() }
+    }
+
+    /// Tokenize `data` according to `tuning`. Appends to `out` (cleared
+    /// first) to allow buffer reuse.
+    pub fn tokenize(&mut self, data: &[u8], tuning: &Tuning, out: &mut Vec<Token>) {
+        self.tokenize_from(data, 0, tuning, out)
+    }
+
+    /// Tokenize `data[start..]` with `data[..start]` as a preset dictionary
+    /// (RFC 1950 FDICT semantics): dictionary bytes are matchable within
+    /// the 32 KiB window but never emitted as tokens.
+    pub fn tokenize_from(&mut self, data: &[u8], start: usize, tuning: &Tuning, out: &mut Vec<Token>) {
+        out.clear();
+        let n = data.len();
+        self.head.fill(-1);
+        self.prev.clear();
+        self.prev.resize(n, -1);
+
+        let hash_width = tuning.hash_width as usize;
+        if n < start + hash_width.max(MIN_MATCH) + 1 {
+            out.extend(data[start..].iter().map(|&b| Token::Literal(b)));
+            return;
+        }
+        let p = tuning.params;
+
+        let hash_at = |data: &[u8], i: usize| -> usize {
+            if hash_width == 4 {
+                hash4(data, i)
+            } else {
+                hash3(data, i)
+            }
+        };
+        // Last position where a full hash fits.
+        let hash_end = n - hash_width;
+
+        // Preload the dictionary region into the hash chains.
+        for pos in 0..start.min(hash_end + 1) {
+            let h = hash_at(data, pos);
+            self.prev[pos] = self.head[h];
+            self.head[h] = pos as i32;
+        }
+
+        let mut i = start;
+        // Lazy-matching state.
+        let mut prev_len: usize = 0;
+        let mut prev_dist: usize = 0;
+        let mut have_prev = false;
+
+        macro_rules! insert {
+            ($pos:expr) => {
+                if $pos <= hash_end {
+                    let h = hash_at(data, $pos);
+                    self.prev[$pos] = self.head[h];
+                    self.head[h] = $pos as i32;
+                }
+            };
+        }
+
+        while i < n {
+            // Find the longest match at i.
+            let (mut len, mut dist) = (0usize, 0usize);
+            if i <= hash_end && i + MIN_MATCH <= n {
+                let h = hash_at(data, i);
+                let mut cand = self.head[h];
+                let limit = i.saturating_sub(WINDOW_SIZE);
+                let mut chain = if have_prev && prev_len >= p.good_length as usize {
+                    (p.max_chain / 4).max(1)
+                } else {
+                    p.max_chain
+                };
+                let max_len = MAX_MATCH.min(n - i);
+                let nice = (p.nice_length as usize).min(max_len);
+                while cand >= 0 && chain > 0 {
+                    let c = cand as usize;
+                    if c < limit {
+                        break;
+                    }
+                    // Quick reject: compare the byte that would extend the
+                    // current best match.
+                    if len == 0 || data[c + len] == data[i + len] {
+                        let m = match_len(data, c, i, max_len);
+                        if m > len {
+                            len = m;
+                            dist = i - c;
+                            if m >= nice {
+                                break;
+                            }
+                        }
+                    }
+                    cand = self.prev[c];
+                    chain -= 1;
+                }
+                if len < MIN_MATCH {
+                    len = 0;
+                }
+                // zlib drops distant 3-byte matches: too far to be worth it.
+                if len == MIN_MATCH && dist > 4096 {
+                    len = 0;
+                }
+            }
+
+            if p.lazy {
+                if have_prev {
+                    // Previous match exists; emit it unless current is better.
+                    if len > prev_len && prev_len < p.max_lazy as usize {
+                        // Defer: previous position becomes a literal.
+                        out.push(Token::Literal(data[i - 1]));
+                        prev_len = len;
+                        prev_dist = dist;
+                        insert!(i);
+                        i += 1;
+                        continue;
+                    } else {
+                        // Emit previous match (started at i-1).
+                        out.push(Token::Match { len: prev_len as u16, dist: prev_dist as u16 });
+                        // Insert hashes for the matched span (from i+1 on;
+                        // i-1 and i already inserted).
+                        let end = i - 1 + prev_len;
+                        let mut j = i + 1;
+                        while j < end {
+                            insert!(j);
+                            j += 1;
+                        }
+                        have_prev = false;
+                        i = end;
+                        continue;
+                    }
+                }
+                if len >= MIN_MATCH && len <= p.max_lazy as usize {
+                    // Hold as candidate for lazy evaluation.
+                    prev_len = len;
+                    prev_dist = dist;
+                    have_prev = true;
+                    insert!(i);
+                    i += 1;
+                    continue;
+                }
+                if len >= MIN_MATCH {
+                    // Long match: take immediately (no lazy above max_lazy).
+                    out.push(Token::Match { len: len as u16, dist: dist as u16 });
+                    let end = i + len;
+                    insert!(i);
+                    let mut j = i + 1;
+                    while j < end {
+                        insert!(j);
+                        j += 1;
+                    }
+                    i = end;
+                    continue;
+                }
+                out.push(Token::Literal(data[i]));
+                insert!(i);
+                i += 1;
+            } else {
+                // deflate_fast: greedy; max_lazy caps *insertion* length.
+                if len >= MIN_MATCH {
+                    out.push(Token::Match { len: len as u16, dist: dist as u16 });
+                    let end = i + len;
+                    insert!(i);
+                    if len <= p.max_lazy as usize {
+                        let mut j = i + 1;
+                        while j < end {
+                            insert!(j);
+                            j += 1;
+                        }
+                    }
+                    i = end;
+                } else {
+                    out.push(Token::Literal(data[i]));
+                    insert!(i);
+                    i += 1;
+                }
+            }
+        }
+        if have_prev {
+            out.push(Token::Match { len: prev_len as u16, dist: prev_dist as u16 });
+            // Trailing bytes of the match are already past; tokenize() only
+            // reaches here when the match ran to the end of input.
+            let covered: usize = (n - 1 + prev_len).min(n); // defensive
+            debug_assert!(covered <= n);
+        }
+    }
+}
+
+/// Length of the common prefix of `data[a..]` and `data[b..]`, capped.
+#[inline]
+fn match_len(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
+    debug_assert!(a < b);
+    let x = &data[a..];
+    let y = &data[b..];
+    let cap = cap.min(x.len()).min(y.len());
+    let mut i = 0usize;
+    // 8-byte wide compare.
+    while i + 8 <= cap {
+        let xa = u64::from_le_bytes(x[i..i + 8].try_into().unwrap());
+        let yb = u64::from_le_bytes(y[i..i + 8].try_into().unwrap());
+        let xor = xa ^ yb;
+        if xor != 0 {
+            return i + (xor.trailing_zeros() / 8) as usize;
+        }
+        i += 8;
+    }
+    while i < cap && x[i] == y[i] {
+        i += 1;
+    }
+    i
+}
+
+/// Expand tokens back to bytes (used by tests and as a matcher oracle).
+pub fn expand_tokens(tokens: &[Token]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => out.push(b),
+            Token::Match { len, dist } => {
+                let start = out.len() - dist as usize;
+                for k in 0..len as usize {
+                    out.push(out[start + k]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deflate::tuning::{Flavor, Tuning};
+    use crate::util::rng::Rng;
+
+    fn check_tokens_valid(data: &[u8], tokens: &[Token]) {
+        let mut pos = 0usize;
+        for t in tokens {
+            match *t {
+                Token::Literal(b) => {
+                    assert_eq!(data[pos], b);
+                    pos += 1;
+                }
+                Token::Match { len, dist } => {
+                    let (len, dist) = (len as usize, dist as usize);
+                    assert!((MIN_MATCH..=MAX_MATCH).contains(&len), "len {len}");
+                    assert!(dist >= 1 && dist <= WINDOW_SIZE && dist <= pos, "dist {dist} pos {pos}");
+                    for k in 0..len {
+                        assert_eq!(data[pos + k], data[pos - dist + k], "match body");
+                    }
+                    pos += len;
+                }
+            }
+        }
+        assert_eq!(pos, data.len(), "tokens must cover input exactly");
+    }
+
+    fn all_tunings() -> Vec<Tuning> {
+        let mut v = Vec::new();
+        for flavor in [Flavor::Reference, Flavor::Cloudflare] {
+            for level in [1u8, 3, 4, 6, 9] {
+                v.push(Tuning::new(flavor, level));
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut m = Matcher::new();
+        let mut out = Vec::new();
+        for t in all_tunings() {
+            for data in [&b""[..], b"a", b"ab", b"abc", b"aaaa"] {
+                m.tokenize(data, &t, &mut out);
+                check_tokens_valid(data, &out);
+                assert_eq!(expand_tokens(&out), data);
+            }
+        }
+    }
+
+    #[test]
+    fn repetitive_input_finds_matches() {
+        let data: Vec<u8> = b"abcabcabcabcabcabcabcabcabcabc".to_vec();
+        let mut m = Matcher::new();
+        let mut out = Vec::new();
+        for t in all_tunings() {
+            m.tokenize(&data, &t, &mut out);
+            check_tokens_valid(&data, &out);
+            let matches = out.iter().filter(|t| matches!(t, Token::Match { .. })).count();
+            assert!(matches >= 1, "{}: no matches found", t.label());
+        }
+    }
+
+    #[test]
+    fn long_runs_capped_at_max_match() {
+        let data = vec![0u8; 10_000];
+        let mut m = Matcher::new();
+        let mut out = Vec::new();
+        for t in all_tunings() {
+            m.tokenize(&data, &t, &mut out);
+            check_tokens_valid(&data, &out);
+            // A 10_000-byte zero run should be mostly MAX_MATCH matches.
+            let toks = out.len();
+            assert!(toks < 100, "{}: {toks} tokens for 10k zeros", t.label());
+        }
+    }
+
+    #[test]
+    fn random_data_roundtrips() {
+        let mut rng = Rng::new(0x17A9);
+        let mut m = Matcher::new();
+        let mut out = Vec::new();
+        for _ in 0..30 {
+            let n = rng.range(0, 20_000);
+            // Mix of random and structured data.
+            let mut data = rng.bytes(n);
+            if n > 100 {
+                let span = rng.range(10, n / 2);
+                let src = rng.range(0, n - span - 1);
+                let dst = rng.range(0, n - span - 1);
+                data.copy_within(src..src + span, dst);
+            }
+            for t in all_tunings() {
+                m.tokenize(&data, &t, &mut out);
+                check_tokens_valid(&data, &out);
+            }
+        }
+    }
+
+    #[test]
+    fn higher_levels_do_not_regress_much() {
+        // On compressible data, level 9 should produce <= tokens than level 1.
+        let mut rng = Rng::new(0x17AA);
+        let mut base = Vec::new();
+        for _ in 0..200 {
+            base.extend_from_slice(b"event_data:");
+            base.extend_from_slice(&rng.bytes(8));
+        }
+        let mut m = Matcher::new();
+        let mut t1 = Vec::new();
+        let mut t9 = Vec::new();
+        m.tokenize(&base, &Tuning::new(Flavor::Reference, 1), &mut t1);
+        m.tokenize(&base, &Tuning::new(Flavor::Reference, 9), &mut t9);
+        assert!(t9.len() <= t1.len() + t1.len() / 10, "l9 {} vs l1 {}", t9.len(), t1.len());
+    }
+
+    #[test]
+    fn window_limit_respected() {
+        // A repeat at distance > 32768 must NOT be found as a match.
+        let mut data = vec![0xAAu8; 40_000];
+        // Make the middle unique noise so the only long match is far away.
+        let mut rng = Rng::new(5);
+        for i in 200..39_800 {
+            data[i] = (rng.next_u64() & 0xFF) as u8;
+        }
+        let mut m = Matcher::new();
+        let mut out = Vec::new();
+        m.tokenize(&data, &Tuning::new(Flavor::Reference, 9), &mut out);
+        check_tokens_valid(&data, &out); // check_tokens_valid enforces dist<=pos & window
+    }
+}

@@ -1,0 +1,17 @@
+//! From-scratch DEFLATE / zlib (RFC 1950/1951) implementation with two
+//! tuning profiles: reference zlib and the Cloudflare fork whose patch set
+//! the paper contributed to ROOT 6.18.00 (§2.1, Figs 4-5).
+//!
+//! Format-compatible with any zlib: see `rust/tests/interop_flate2.rs`.
+
+pub mod compress;
+pub mod consts;
+pub mod huffman;
+pub mod inflate;
+pub mod matcher;
+pub mod tuning;
+pub mod zlib;
+
+pub use inflate::{inflate, InflateError};
+pub use tuning::{Flavor, Tuning};
+pub use zlib::{zlib_compress, zlib_decompress};

@@ -1,0 +1,125 @@
+//! Engine tuning profiles: reference zlib vs the Cloudflare fork.
+//!
+//! The paper's §2.1 enumerates the CF-ZLIB differences we model:
+//!
+//! * **Hash width** — reference zlib hashes 3-byte prefixes (“triplets”);
+//!   CF hashes 4-byte prefixes (“quadruplets”) at fast levels (1–5),
+//!   shrinking the hash map and skipping unproductive 3-byte matches.
+//! * **Checksum kernel** — reference: scalar/16×-unrolled adler32;
+//!   CF: SWAR (`_mm_sad_epu8`-style) adler32 with 8× unrolling.
+//! * **Unroll factors** — CF reduced hand-unrolling (adler32 16→8,
+//!   crc32 8→4) because modern OoO cores prefer tighter loops.
+//!
+//! Both profiles emit bit-identical *formats* (RFC 1950/1951); only match
+//! finding and checksum kernels differ, so compressed sizes differ slightly
+//! — exactly the paper's observation ("compression ratios for CF-ZLIB and
+//! ZLIB vary slightly even at equivalent compression levels").
+
+use crate::checksum::adler32::Backend as AdlerBackend;
+
+/// Which implementation family to model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Flavor {
+    /// Mark Adler's reference zlib.
+    Reference,
+    /// Cloudflare fork as patched into ROOT 6.18.00.
+    #[default]
+    Cloudflare,
+}
+
+/// Per-level match-finding parameters (zlib's `configuration_table`).
+#[derive(Debug, Clone, Copy)]
+pub struct LevelParams {
+    /// Reduce lazy search above this match length.
+    pub good_length: u16,
+    /// Do not perform lazy search above this length (levels ≤3: insert cap).
+    pub max_lazy: u16,
+    /// Quit search above this length.
+    pub nice_length: u16,
+    /// Maximum hash-chain links to walk.
+    pub max_chain: u16,
+    /// Use the lazy-matching strategy (levels ≥ 4).
+    pub lazy: bool,
+}
+
+/// zlib's deflate_slow/fast configuration table, levels 1..=9.
+const ZLIB_LEVELS: [LevelParams; 9] = [
+    // 1..=3: deflate_fast
+    LevelParams { good_length: 4, max_lazy: 4, nice_length: 8, max_chain: 4, lazy: false },
+    LevelParams { good_length: 4, max_lazy: 5, nice_length: 16, max_chain: 8, lazy: false },
+    LevelParams { good_length: 4, max_lazy: 6, nice_length: 32, max_chain: 32, lazy: false },
+    // 4..=9: deflate_slow
+    LevelParams { good_length: 4, max_lazy: 4, nice_length: 16, max_chain: 16, lazy: true },
+    LevelParams { good_length: 8, max_lazy: 16, nice_length: 32, max_chain: 32, lazy: true },
+    LevelParams { good_length: 8, max_lazy: 16, nice_length: 128, max_chain: 128, lazy: true },
+    LevelParams { good_length: 8, max_lazy: 32, nice_length: 128, max_chain: 256, lazy: true },
+    LevelParams { good_length: 32, max_lazy: 128, nice_length: 258, max_chain: 1024, lazy: true },
+    LevelParams { good_length: 32, max_lazy: 258, nice_length: 258, max_chain: 4096, lazy: true },
+];
+
+/// A fully-resolved tuning for one (flavor, level) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Tuning {
+    pub flavor: Flavor,
+    pub level: u8,
+    pub params: LevelParams,
+    /// Bytes hashed per table entry: 3 (triplet) or 4 (quadruplet).
+    pub hash_width: u8,
+    /// Checksum kernel for the zlib wrapper.
+    pub adler_backend: AdlerBackend,
+}
+
+impl Tuning {
+    /// Resolve a tuning. `level` is clamped to 1..=9 (0 is handled by the
+    /// stored-block path in `compress`).
+    pub fn new(flavor: Flavor, level: u8) -> Self {
+        let level = level.clamp(1, 9);
+        let params = ZLIB_LEVELS[(level - 1) as usize];
+        let (hash_width, adler_backend) = match flavor {
+            Flavor::Reference => (3, AdlerBackend::Unrolled),
+            // CF: quadruplet hashing for the fast levels (1–5), SWAR adler.
+            Flavor::Cloudflare => (if level <= 5 { 4 } else { 3 }, AdlerBackend::Swar),
+        };
+        Self { flavor, level, params, hash_width, adler_backend }
+    }
+
+    /// Label used in figure output, e.g. "ZLIB-6" / "CF-ZLIB-6".
+    pub fn label(&self) -> String {
+        match self.flavor {
+            Flavor::Reference => format!("ZLIB-{}", self.level),
+            Flavor::Cloudflare => format!("CF-ZLIB-{}", self.level),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_clamping() {
+        assert_eq!(Tuning::new(Flavor::Reference, 0).level, 1);
+        assert_eq!(Tuning::new(Flavor::Reference, 99).level, 9);
+    }
+
+    #[test]
+    fn cf_quadruplet_fast_levels_only() {
+        for l in 1..=5u8 {
+            assert_eq!(Tuning::new(Flavor::Cloudflare, l).hash_width, 4);
+        }
+        for l in 6..=9u8 {
+            assert_eq!(Tuning::new(Flavor::Cloudflare, l).hash_width, 3);
+        }
+        for l in 1..=9u8 {
+            assert_eq!(Tuning::new(Flavor::Reference, l).hash_width, 3);
+        }
+    }
+
+    #[test]
+    fn params_monotone_effort() {
+        // Chain caps never decrease with level within a strategy.
+        for l in 1..9usize {
+            assert!(ZLIB_LEVELS[l].max_chain >= ZLIB_LEVELS[l - 1].max_chain || l == 3);
+        }
+    }
+}

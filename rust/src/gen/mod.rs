@@ -1,0 +1,5 @@
+//! Workload generators: the paper's artificial 2000-event tree (§2) and a
+//! NanoAOD-like event sample (Fig 6). Both deterministic by seed.
+
+pub mod nanoaod;
+pub mod synthetic;

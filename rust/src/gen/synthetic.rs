@@ -1,0 +1,105 @@
+//! The paper's benchmark workload: "a simple test case of an
+//! artificially-generated ROOT tree with 2,000 events" (§2).
+//!
+//! The tree mixes the branch kinds that exercise every compression
+//! behaviour the survey measures: smooth floats (Gaussian/exponential
+//! physics quantities), small integers, monotone counters, booleans, and
+//! C-style variable-length arrays whose serialized offset arrays are the
+//! Fig-6 pathology. Deterministic for a given seed.
+
+use crate::rfile::{BranchDef, BranchType, Value};
+use crate::util::rng::Rng;
+
+/// Number of events the paper's test case uses.
+pub const PAPER_EVENTS: usize = 2000;
+
+/// Schema of the artificial tree.
+pub fn schema() -> Vec<BranchDef> {
+    vec![
+        BranchDef::new("event_id", BranchType::I64),
+        BranchDef::new("run_number", BranchType::I32),
+        BranchDef::new("energy", BranchType::F64),
+        BranchDef::new("px", BranchType::F32),
+        BranchDef::new("py", BranchType::F32),
+        BranchDef::new("pz", BranchType::F32),
+        BranchDef::new("nTrack", BranchType::I32),
+        BranchDef::new("Track_pt", BranchType::VarF32),
+        BranchDef::new("Track_charge", BranchType::VarI32),
+        BranchDef::new("trigger_bits", BranchType::I32),
+        BranchDef::new("is_good", BranchType::Bool),
+        BranchDef::new("label", BranchType::VarU8),
+    ]
+}
+
+/// Generate `n` events deterministically.
+pub fn events(n: usize, seed: u64) -> Vec<Vec<Value>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let ntrack = rng.poisson(8.0) as usize;
+            let e = rng.exponential(0.02);
+            vec![
+                Value::I64(1_000_000 + i as i64),
+                Value::I32(300_000 + (i / 500) as i32),
+                Value::F64(e),
+                Value::F32(rng.gauss(0.0, 12.0) as f32),
+                Value::F32(rng.gauss(0.0, 12.0) as f32),
+                Value::F32(rng.gauss(0.0, 45.0) as f32),
+                Value::I32(ntrack as i32),
+                Value::AF32((0..ntrack).map(|_| rng.exponential(0.08) as f32).collect()),
+                Value::AI32((0..ntrack).map(|_| if rng.chance(0.5) { 1 } else { -1 }).collect()),
+                Value::I32((rng.next_u32() & 0x00FF_0F0F) as i32),
+                Value::Bool(rng.chance(0.85)),
+                Value::AU8(format!("evt_{:07}", i).into_bytes()),
+            ]
+        })
+        .collect()
+}
+
+/// The paper's exact workload: 2000 events, fixed seed.
+pub fn paper_tree() -> (Vec<BranchDef>, Vec<Vec<Value>>) {
+    (schema(), events(PAPER_EVENTS, 0x2019_C4E9))
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = events(100, 7);
+        let b = events(100, 7);
+        assert_eq!(a, b);
+        let c = events(100, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn schema_matches_events() {
+        let s = schema();
+        for ev in events(50, 3) {
+            assert_eq!(ev.len(), s.len());
+            for (v, b) in ev.iter().zip(&s) {
+                assert!(v.matches(b.ty), "branch {}", b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn realistic_sizes() {
+        let evs = events(PAPER_EVENTS, 1);
+        let mut total = 0usize;
+        let mut buf = Vec::new();
+        for ev in &evs {
+            for v in ev {
+                buf.clear();
+                total += v.serialize(&mut buf);
+            }
+        }
+        // ~100 bytes/event ballpark: non-trivial but small, like the paper's
+        // simple test tree.
+        assert!(total > 50 * PAPER_EVENTS, "total {total}");
+        assert!(total < 2000 * PAPER_EVENTS, "total {total}");
+    }
+}

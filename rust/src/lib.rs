@@ -1,0 +1,29 @@
+//! # rootio
+//!
+//! A from-scratch reproduction of the system studied in *"ROOT I/O
+//! compression algorithms and their performance impact within Run 3"*
+//! (Shadura & Bockelman, CHEP 2019): a ROOT-like columnar I/O framework with
+//! pluggable lossless compression — ZLIB (reference and Cloudflare-tuned),
+//! LZ4/LZ4-HC, a ZSTD-style tANS codec with dictionaries, an LZMA-style
+//! range coder, and the legacy ROOT codec — plus Shuffle/BitShuffle/Delta
+//! preconditioners, a parallel compression pipeline, and an XLA-served
+//! adaptive compression planner.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for measured results.
+
+pub mod bench;
+pub mod checksum;
+pub mod cli;
+pub mod compression;
+pub mod coordinator;
+pub mod deflate;
+pub mod gen;
+pub mod legacy;
+pub mod lz4;
+pub mod lzma;
+pub mod precond;
+pub mod rfile;
+pub mod zstd;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,305 @@
+//! LZ4 block format (lz4/lz4 `lz4_Block_format.md`) — fast compressor.
+//!
+//! The format the paper's §2.2 analyzes: byte-aligned tokens, 4-byte minimum
+//! matches, no entropy stage. That design is why LZ4 decodes so fast (Fig 3)
+//! and why ROOT offset arrays compress so poorly without a preconditioner
+//! (Fig 6): the monotone offset sequence never produces byte-aligned repeats.
+//!
+//! Sequence layout: token byte (hi nibble = literal length, lo nibble =
+//! match length - 4, 15 = extended by 255-run bytes), literals, 2-byte LE
+//! offset, extended match length. The final sequence is literals-only; the
+//! last 5 bytes must be literals and the last match must start ≥ 12 bytes
+//! from the end (format end-conditions).
+
+pub const MIN_MATCH: usize = 4;
+/// End-of-block conditions from the spec.
+const LAST_LITERALS: usize = 5;
+const MFLIMIT: usize = 12;
+/// Max offset.
+pub const MAX_DISTANCE: usize = 65_535;
+
+const HASH_LOG: u32 = 16;
+
+#[inline]
+fn hash5(v: u64) -> usize {
+    // lz4-style hash of 5 bytes for the fast path at default accel.
+    ((v << 24).wrapping_mul(889523592379u64) >> (64 - HASH_LOG)) as usize
+}
+
+#[inline]
+fn read_u32(data: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(data[i..i + 4].try_into().unwrap())
+}
+
+#[inline]
+fn read_u64(data: &[u8], i: usize) -> u64 {
+    u64::from_le_bytes(data[i..i + 8].try_into().unwrap())
+}
+
+/// Reusable compressor state.
+pub struct Lz4Fast {
+    table: Vec<u32>,
+}
+
+impl Default for Lz4Fast {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Lz4Fast {
+    pub fn new() -> Self {
+        Self { table: vec![0u32; 1 << HASH_LOG] }
+    }
+
+    /// Compress one block. `accel` ≥ 1: larger = faster/looser search (maps
+    /// from ROOT's negative LZ4 levels; 1 = default LZ4).
+    pub fn compress(&mut self, src: &[u8], accel: u32, out: &mut Vec<u8>) {
+        self.compress_dict(src, 0, accel, out)
+    }
+
+    /// Compress `src[start..]` with `src[..start]` as a dictionary prefix
+    /// (matchable within the 64 KiB offset range, never emitted) — the
+    /// LZ4 half of the paper's §3 note that trained dictionaries "are
+    /// useable for ... LZ4 as well".
+    pub fn compress_dict(&mut self, src: &[u8], start: usize, accel: u32, out: &mut Vec<u8>) {
+        out.clear();
+        let n = src.len();
+        if n == start {
+            out.push(0); // single empty-literal token
+            return;
+        }
+        if n < start + MFLIMIT + 1 {
+            emit_last_literals(src, start, out);
+            return;
+        }
+        self.table.fill(0);
+        let accel = accel.max(1) as usize;
+
+        let match_limit = n - LAST_LITERALS;
+        let mf_limit = n - MFLIMIT;
+        // Prime the table with dictionary positions (position 0 is the
+        // hash-table sentinel and is skipped; one lost byte).
+        let mut pos = 1usize;
+        while pos + 8 <= start.min(mf_limit + 1) {
+            let h = hash5(read_u64(src, pos));
+            self.table[h] = pos as u32;
+            pos += 1;
+        }
+        let mut anchor = start;
+        let mut i = start.max(1); // position 0 can't match backwards
+
+        'outer: loop {
+            // Find a match: step grows with misses (acceleration).
+            let mut step = 1usize;
+            let mut search_count = accel << 6; // 64 attempts per accel unit before growing
+            let mut candidate;
+            loop {
+                if i > mf_limit {
+                    break 'outer;
+                }
+                let h = hash5(read_u64(src, i));
+                candidate = self.table[h] as usize;
+                self.table[h] = i as u32;
+                if candidate != 0
+                    && candidate < i
+                    && i - candidate <= MAX_DISTANCE
+                    && read_u32(src, candidate) == read_u32(src, i)
+                {
+                    break;
+                }
+                search_count -= 1;
+                if search_count == 0 {
+                    search_count = accel << 6;
+                    step += 1 + (step >> 6);
+                }
+                i += step;
+            }
+
+            // Extend backwards.
+            let mut match_start = i;
+            let mut ref_start = candidate;
+            while match_start > anchor && ref_start > 0 && src[match_start - 1] == src[ref_start - 1] {
+                match_start -= 1;
+                ref_start -= 1;
+            }
+
+            // Extend forwards.
+            let mut len = MIN_MATCH;
+            {
+                let cap = match_limit - match_start;
+                while len < cap {
+                    if len + 8 <= cap {
+                        let x = read_u64(src, ref_start + len) ^ read_u64(src, match_start + len);
+                        if x != 0 {
+                            len += (x.trailing_zeros() / 8) as usize;
+                            break;
+                        }
+                        len += 8;
+                    } else if src[ref_start + len] == src[match_start + len] {
+                        len += 1;
+                    } else {
+                        break;
+                    }
+                }
+                len = len.min(cap);
+            }
+
+            emit_sequence(src, anchor, match_start, (match_start - ref_start) as u16, len, out);
+            i = match_start + len;
+            anchor = i;
+            if i > mf_limit {
+                break;
+            }
+            // Prime the table with the position before the next search.
+            let h = hash5(read_u64(src, i - 2));
+            self.table[h] = (i - 2) as u32;
+        }
+        emit_last_literals(src, anchor, out);
+    }
+}
+
+/// Emit token + literals + offset + extended match length.
+fn emit_sequence(src: &[u8], lit_start: usize, lit_end: usize, offset: u16, match_len: usize, out: &mut Vec<u8>) {
+    debug_assert!(match_len >= MIN_MATCH);
+    debug_assert!(offset >= 1);
+    let lit_len = lit_end - lit_start;
+    let ml = match_len - MIN_MATCH;
+    let tok_lit = lit_len.min(15) as u8;
+    let tok_ml = ml.min(15) as u8;
+    out.push((tok_lit << 4) | tok_ml);
+    if lit_len >= 15 {
+        emit_len(lit_len - 15, out);
+    }
+    out.extend_from_slice(&src[lit_start..lit_end]);
+    out.extend_from_slice(&offset.to_le_bytes());
+    if ml >= 15 {
+        emit_len(ml - 15, out);
+    }
+}
+
+fn emit_last_literals(src: &[u8], anchor: usize, out: &mut Vec<u8>) {
+    let lit_len = src.len() - anchor;
+    let tok = lit_len.min(15) as u8;
+    out.push(tok << 4);
+    if lit_len >= 15 {
+        emit_len(lit_len - 15, out);
+    }
+    out.extend_from_slice(&src[anchor..]);
+}
+
+#[inline]
+fn emit_len(mut v: usize, out: &mut Vec<u8>) {
+    while v >= 255 {
+        out.push(255);
+        v -= 255;
+    }
+    out.push(v as u8);
+}
+
+/// Worst-case compressed size (spec's LZ4_compressBound).
+pub fn compress_bound(n: usize) -> usize {
+    n + n / 255 + 16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode::decompress_block;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8], accel: u32) {
+        let mut c = Lz4Fast::new();
+        let mut out = Vec::new();
+        c.compress(data, accel, &mut out);
+        let d = decompress_block(&out, data.len()).expect("decode");
+        assert_eq!(d, data, "accel={accel} n={}", data.len());
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        for n in 0..20usize {
+            let data: Vec<u8> = (0..n as u8).collect();
+            roundtrip(&data, 1);
+        }
+    }
+
+    #[test]
+    fn runs_compress_well() {
+        let data = vec![9u8; 100_000];
+        let mut c = Lz4Fast::new();
+        let mut out = Vec::new();
+        c.compress(&data, 1, &mut out);
+        assert!(out.len() < 500, "{} bytes for 100k run", out.len());
+        assert_eq!(decompress_block(&out, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn offset_arrays_barely_compress() {
+        // The paper's Fig-6 pathology: monotone BE u32 offsets.
+        let data: Vec<u8> = (1u32..=25_000).flat_map(|i| i.to_be_bytes()).collect();
+        let mut c = Lz4Fast::new();
+        let mut out = Vec::new();
+        c.compress(&data, 1, &mut out);
+        let ratio = data.len() as f64 / out.len() as f64;
+        assert!(ratio < 1.7, "LZ4 should do poorly on offsets, got ratio {ratio:.2}");
+        assert_eq!(decompress_block(&out, data.len()).unwrap(), data);
+        // With BitShuffle preconditioning the same data compresses far better.
+        let pre = crate::precond::bitshuffle(&data, 4);
+        let mut out2 = Vec::new();
+        c.compress(&pre, 1, &mut out2);
+        let ratio2 = data.len() as f64 / out2.len() as f64;
+        assert!(ratio2 > 2.0 * ratio, "bitshuffle ratio {ratio2:.2} vs plain {ratio:.2}");
+    }
+
+    #[test]
+    fn fuzz_roundtrip() {
+        let mut rng = Rng::new(0x124);
+        for round in 0..120 {
+            let n = rng.range(0, 50_000);
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                match rng.range(0, 3) {
+                    0 => {
+                        let b = (rng.next_u64() & 0xFF) as u8;
+                        let run = rng.range(1, 800);
+                        data.extend(std::iter::repeat(b).take(run));
+                    }
+                    1 => data.extend_from_slice(b"basket_payload/"),
+                    2 => {
+                        let k = rng.range(1, 128);
+                        let b = rng.bytes(k);
+                        data.extend_from_slice(&b);
+                    }
+                    _ => data.extend_from_slice(&rng.next_u32().to_le_bytes()),
+                }
+            }
+            data.truncate(n);
+            roundtrip(&data, 1 + (round % 8) as u32);
+        }
+    }
+
+    #[test]
+    fn incompressible_bounded() {
+        let mut rng = Rng::new(0x125);
+        let data = rng.bytes(65_536);
+        let mut c = Lz4Fast::new();
+        let mut out = Vec::new();
+        c.compress(&data, 1, &mut out);
+        assert!(out.len() <= compress_bound(data.len()));
+        assert_eq!(decompress_block(&out, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn higher_accel_still_correct() {
+        let mut rng = Rng::new(0x126);
+        let mut data = Vec::new();
+        while data.len() < 30_000 {
+            data.extend_from_slice(b"xyzzy-");
+            data.extend_from_slice(&rng.bytes(2));
+        }
+        for accel in [1u32, 4, 16, 64] {
+            roundtrip(&data, accel);
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! LZ4 block decoder. Decompression speed is the whole point of LZ4 in the
+//! paper (Fig 3: "extremely fast decompressor at all compression levels"),
+//! so this is one of the repository's hot paths: wide wild copies inside a
+//! bounds-checked envelope, scalar fallback near the edges.
+
+/// Decode error (untrusted input — never panic).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lz4Error(pub &'static str);
+
+impl std::fmt::Display for Lz4Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lz4: {}", self.0)
+    }
+}
+impl std::error::Error for Lz4Error {}
+
+const E: fn(&'static str) -> Lz4Error = Lz4Error;
+
+/// Decompress a block with known uncompressed size (ROOT's record header
+/// always stores it; the LZ4 block format itself is not self-terminating).
+pub fn decompress_block(src: &[u8], expected_len: usize) -> Result<Vec<u8>, Lz4Error> {
+    let mut out = Vec::with_capacity(expected_len);
+    decompress_block_into(src, expected_len, &mut out)?;
+    Ok(out)
+}
+
+/// Decompress into a reusable buffer (cleared first).
+pub fn decompress_block_into(src: &[u8], expected_len: usize, out: &mut Vec<u8>) -> Result<(), Lz4Error> {
+    decompress_block_dict_into(src, &[], expected_len, out)
+}
+
+/// Decompress a block produced with a dictionary prefix: `out` is primed
+/// with `dict` so matches can reach into it; the dictionary is stripped
+/// from the returned content.
+pub fn decompress_block_dict_into(
+    src: &[u8],
+    dict: &[u8],
+    expected_len: usize,
+    out: &mut Vec<u8>,
+) -> Result<(), Lz4Error> {
+    out.clear();
+    out.reserve(dict.len() + expected_len);
+    out.extend_from_slice(dict);
+    let expected_len = dict.len() + expected_len;
+    let dict_len = dict.len();
+    let mut i = 0usize;
+    loop {
+        let token = *src.get(i).ok_or(E("truncated token"))?;
+        i += 1;
+        // Literal length.
+        let mut lit_len = (token >> 4) as usize;
+        if lit_len == 15 {
+            lit_len += read_len(src, &mut i)?;
+        }
+        if i + lit_len > src.len() {
+            return Err(E("literal overrun"));
+        }
+        if out.len() + lit_len > expected_len {
+            return Err(E("output overflow (literals)"));
+        }
+        out.extend_from_slice(&src[i..i + lit_len]);
+        i += lit_len;
+
+        if i == src.len() {
+            // Final literals-only sequence.
+            if out.len() != expected_len {
+                return Err(E("size mismatch"));
+            }
+            out.drain(..dict_len);
+            return Ok(());
+        }
+
+        // Match.
+        if i + 2 > src.len() {
+            return Err(E("truncated offset"));
+        }
+        let offset = u16::from_le_bytes(src[i..i + 2].try_into().unwrap()) as usize;
+        i += 2;
+        if offset == 0 {
+            return Err(E("zero offset"));
+        }
+        if offset > out.len() {
+            return Err(E("offset beyond output"));
+        }
+        let mut match_len = (token & 0x0F) as usize;
+        if match_len == 15 {
+            match_len += read_len(src, &mut i)?;
+        }
+        match_len += 4;
+        if out.len() + match_len > expected_len {
+            return Err(E("output overflow (match)"));
+        }
+        copy_match(out, offset, match_len);
+    }
+}
+
+#[inline]
+fn read_len(src: &[u8], i: &mut usize) -> Result<usize, Lz4Error> {
+    let mut total = 0usize;
+    loop {
+        let b = *src.get(*i).ok_or(E("truncated length"))?;
+        *i += 1;
+        total += b as usize;
+        if b != 255 {
+            return Ok(total);
+        }
+        if total > (1 << 30) {
+            return Err(E("length overflow"));
+        }
+    }
+}
+
+/// Backwards copy supporting overlap; see deflate::inflate::copy_match for
+/// the same pattern.
+#[inline]
+fn copy_match(out: &mut Vec<u8>, dist: usize, len: usize) {
+    let start = out.len() - dist;
+    if dist >= len {
+        out.extend_from_within(start..start + len);
+        return;
+    }
+    if dist == 1 {
+        let b = out[out.len() - 1];
+        let new_len = out.len() + len;
+        out.resize(new_len, b);
+        return;
+    }
+    out.reserve(len);
+    let mut remaining = len;
+    let mut src = start;
+    while remaining > 0 {
+        let chunk = remaining.min(out.len() - src);
+        out.extend_from_within(src..src + chunk);
+        src += chunk;
+        remaining -= chunk;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_block() {
+        // Single zero token = empty literals, end.
+        assert_eq!(decompress_block(&[0], 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        // Truncated.
+        assert!(decompress_block(&[], 5).is_err());
+        // Literal length runs past end.
+        assert!(decompress_block(&[0xF0, 200], 300).is_err());
+        // Match offset beyond output.
+        // token: 1 literal, match len 4; lit 'a'; offset 9 (too far).
+        assert!(decompress_block(&[0x10, b'a', 9, 0], 10).is_err());
+        // Zero offset.
+        assert!(decompress_block(&[0x10, b'a', 0, 0], 10).is_err());
+    }
+
+    #[test]
+    fn size_mismatch_detected() {
+        // 3 literals but caller expects 4.
+        assert!(decompress_block(&[0x30, b'a', b'b', b'c'], 4).is_err());
+        assert_eq!(decompress_block(&[0x30, b'a', b'b', b'c'], 3).unwrap(), b"abc");
+    }
+
+    #[test]
+    fn fuzz_garbage_never_panics() {
+        let mut rng = Rng::new(0x44);
+        for _ in 0..500 {
+            let n = rng.range(0, 300);
+            let garbage = rng.bytes(n);
+            let expected = rng.range(0, 1000);
+            let _ = decompress_block(&garbage, expected); // must not panic
+        }
+    }
+
+    #[test]
+    fn overlap_copy_periods() {
+        // Hand-built stream: 4 literals "abab" then match offset 2 len 10.
+        // -> "abab" + "ababababab"
+        let stream = [0x46u8, b'a', b'b', b'a', b'b', 2, 0, 0x00];
+        // token 0x46: lit_len 4, match_len 6+4=10; trailing empty-literal token.
+        let out = decompress_block(&stream, 14).unwrap();
+        assert_eq!(&out, b"ababababababab");
+    }
+}

@@ -1,0 +1,301 @@
+//! LZ4-HC: the high-compression LZ4 variant (paper §2.2 — "a slower
+//! compressor which achieves higher compression ratios", typically ~20%
+//! better ratio). Same block format as the fast compressor, but match
+//! finding uses hash chains with a per-level search depth and greedy-with-
+//! lookahead parsing instead of a single-probe hash table.
+
+use super::block::{compress_bound, MAX_DISTANCE, MIN_MATCH};
+
+const HASH_LOG: u32 = 15;
+const LAST_LITERALS: usize = 5;
+const MFLIMIT: usize = 12;
+
+#[inline]
+fn hash4(v: u32) -> usize {
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_LOG)) as usize
+}
+
+#[inline]
+fn read_u32(data: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(data[i..i + 4].try_into().unwrap())
+}
+
+/// Search depth per HC level (mirrors lz4hc's 2^(level-1) clamping).
+pub fn depth_for_level(level: u8) -> u32 {
+    match level {
+        0..=2 => 16,
+        3 => 32,
+        4 => 64,
+        5 => 128,
+        6 => 256,
+        7 => 512,
+        8 => 1024,
+        _ => 4096,
+    }
+}
+
+/// Reusable HC compressor state.
+pub struct Lz4Hc {
+    head: Vec<i32>,
+    prev: Vec<i32>,
+}
+
+impl Default for Lz4Hc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Lz4Hc {
+    pub fn new() -> Self {
+        Self { head: vec![-1; 1 << HASH_LOG], prev: Vec::new() }
+    }
+
+    /// Compress one block at the given HC level (3..=12 in lz4 terms).
+    pub fn compress(&mut self, src: &[u8], level: u8, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(compress_bound(src.len()));
+        let n = src.len();
+        if n == 0 {
+            out.push(0);
+            return;
+        }
+        if n < MFLIMIT + 1 {
+            emit_last_literals(src, 0, out);
+            return;
+        }
+        self.head.fill(-1);
+        self.prev.clear();
+        self.prev.resize(n, -1);
+        let depth = depth_for_level(level);
+        let match_limit = n - LAST_LITERALS;
+        let mf_limit = n - MFLIMIT;
+
+        let mut anchor = 0usize;
+        let mut i = 0usize;
+        let mut inserted = 0usize; // positions [0, inserted) are in the chains
+
+        macro_rules! insert_up_to {
+            ($end:expr) => {
+                while inserted < $end && inserted + 4 <= n {
+                    let h = hash4(read_u32(src, inserted));
+                    self.prev[inserted] = self.head[h];
+                    self.head[h] = inserted as i32;
+                    inserted += 1;
+                }
+            };
+        }
+
+        while i <= mf_limit {
+            insert_up_to!(i + 1);
+            let (len, dist) = self.find_best(src, i, match_limit, depth);
+            if len < MIN_MATCH {
+                i += 1;
+                continue;
+            }
+            // Lookahead: try i+1; if strictly better, emit literal and move on
+            // (single-step lazy matching — a good chunk of HC's gain).
+            let mut best_len = len;
+            let mut best_dist = dist;
+            let mut start = i;
+            if i + 1 <= mf_limit {
+                insert_up_to!(i + 2);
+                let (len2, dist2) = self.find_best(src, i + 1, match_limit, depth);
+                if len2 > best_len + 1 {
+                    best_len = len2;
+                    best_dist = dist2;
+                    start = i + 1;
+                }
+            }
+            // Extend backwards.
+            let mut ref_start = start - best_dist;
+            while start > anchor && ref_start > 0 && src[start - 1] == src[ref_start - 1] {
+                start -= 1;
+                ref_start -= 1;
+                best_len += 1;
+            }
+            emit_sequence(src, anchor, start, best_dist as u16, best_len, out);
+            i = start + best_len;
+            anchor = i;
+            insert_up_to!(i.min(mf_limit + 1));
+        }
+        emit_last_literals(src, anchor, out);
+    }
+
+    /// Longest match at position i walking at most `depth` chain links.
+    fn find_best(&self, src: &[u8], i: usize, match_limit: usize, depth: u32) -> (usize, usize) {
+        if i + MIN_MATCH > match_limit {
+            return (0, 0);
+        }
+        let h = hash4(read_u32(src, i));
+        let mut cand = self.head[h];
+        let lower = i.saturating_sub(MAX_DISTANCE);
+        let cap = match_limit - i;
+        let (mut best_len, mut best_dist) = (0usize, 0usize);
+        let mut steps = depth;
+        while cand >= 0 && steps > 0 {
+            let c = cand as usize;
+            if c < lower {
+                break;
+            }
+            if c < i {
+                // Quick reject on the extending byte.
+                if best_len == 0 || (i + best_len < src.len() && src[c + best_len] == src[i + best_len]) {
+                    let mut l = 0usize;
+                    while l + 8 <= cap {
+                        let x = u64::from_le_bytes(src[c + l..c + l + 8].try_into().unwrap())
+                            ^ u64::from_le_bytes(src[i + l..i + l + 8].try_into().unwrap());
+                        if x != 0 {
+                            l += (x.trailing_zeros() / 8) as usize;
+                            break;
+                        }
+                        l += 8;
+                    }
+                    while l < cap && src[c + l] == src[i + l] {
+                        l += 1;
+                    }
+                    let l = l.min(cap);
+                    if l > best_len {
+                        best_len = l;
+                        best_dist = i - c;
+                    }
+                }
+            }
+            cand = self.prev[c];
+            steps -= 1;
+        }
+        if best_len < MIN_MATCH {
+            (0, 0)
+        } else {
+            (best_len, best_dist)
+        }
+    }
+}
+
+fn emit_sequence(src: &[u8], lit_start: usize, lit_end: usize, offset: u16, match_len: usize, out: &mut Vec<u8>) {
+    let lit_len = lit_end - lit_start;
+    let ml = match_len - MIN_MATCH;
+    out.push(((lit_len.min(15) as u8) << 4) | ml.min(15) as u8);
+    if lit_len >= 15 {
+        emit_len(lit_len - 15, out);
+    }
+    out.extend_from_slice(&src[lit_start..lit_end]);
+    out.extend_from_slice(&offset.to_le_bytes());
+    if ml >= 15 {
+        emit_len(ml - 15, out);
+    }
+}
+
+fn emit_last_literals(src: &[u8], anchor: usize, out: &mut Vec<u8>) {
+    let lit_len = src.len() - anchor;
+    out.push((lit_len.min(15) as u8) << 4);
+    if lit_len >= 15 {
+        emit_len(lit_len - 15, out);
+    }
+    out.extend_from_slice(&src[anchor..]);
+}
+
+#[inline]
+fn emit_len(mut v: usize, out: &mut Vec<u8>) {
+    while v >= 255 {
+        out.push(255);
+        v -= 255;
+    }
+    out.push(v as u8);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::block::Lz4Fast;
+    use super::super::decode::decompress_block;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8], level: u8) {
+        let mut c = Lz4Hc::new();
+        let mut out = Vec::new();
+        c.compress(data, level, &mut out);
+        let d = decompress_block(&out, data.len()).expect("decode");
+        assert_eq!(d, data, "level={level} n={}", data.len());
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        for n in 0..20usize {
+            let data: Vec<u8> = (0..n as u8).collect();
+            roundtrip(&data, 9);
+        }
+    }
+
+    #[test]
+    fn fuzz_roundtrip() {
+        let mut rng = Rng::new(0x4C48);
+        for round in 0..80 {
+            let n = rng.range(0, 40_000);
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                match rng.range(0, 2) {
+                    0 => {
+                        let b = (rng.next_u64() & 0xFF) as u8;
+                        let run = rng.range(1, 400);
+                        data.extend(std::iter::repeat(b).take(run));
+                    }
+                    1 => data.extend_from_slice(b"Electron_eta::"),
+                    _ => {
+                        let k = rng.range(1, 80);
+                        let b = rng.bytes(k);
+                        data.extend_from_slice(&b);
+                    }
+                }
+            }
+            data.truncate(n);
+            roundtrip(&data, [3u8, 6, 9, 12][round % 4]);
+        }
+    }
+
+    #[test]
+    fn hc_beats_fast_on_text() {
+        // Paper: "LZ4-HC typically results in a 20% improvement of
+        // compression ratio" — require HC to be meaningfully smaller.
+        // A pool of random chunks re-sampled with repetition: the fast
+        // compressor's single-probe hash table constantly loses candidates
+        // to collisions, while HC's chains recover them.
+        let mut rng = Rng::new(0x4C49);
+        let pool: Vec<Vec<u8>> = (0..256).map(|_| rng.bytes(24)).collect();
+        let mut data = Vec::new();
+        while data.len() < 200_000 {
+            data.extend_from_slice(&pool[rng.range(0, 255)]);
+        }
+        let mut fast = Lz4Fast::new();
+        let mut hc = Lz4Hc::new();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        fast.compress(&data, 1, &mut a);
+        hc.compress(&data, 9, &mut b);
+        assert!(
+            (b.len() as f64) < 0.97 * a.len() as f64,
+            "HC {} vs fast {}",
+            b.len(),
+            a.len()
+        );
+        assert_eq!(decompress_block(&b, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn deeper_levels_never_larger_much() {
+        let mut rng = Rng::new(0x4C4A);
+        let mut data = Vec::new();
+        while data.len() < 60_000 {
+            data.extend_from_slice(b"Jet_btag=");
+            data.extend_from_slice(&rng.bytes(4));
+        }
+        let mut hc = Lz4Hc::new();
+        let mut prev = usize::MAX / 2;
+        for level in [3u8, 6, 9, 12] {
+            let mut out = Vec::new();
+            hc.compress(&data, level, &mut out);
+            assert!(out.len() <= prev + prev / 50, "level {level}: {} vs {prev}", out.len());
+            prev = out.len();
+            assert_eq!(decompress_block(&out, data.len()).unwrap(), data);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! From-scratch LZ4 (block format + HC variant + ROOT-style frame).
+//!
+//! Paper §2.2: LZ4's byte-aligned, entropy-free design gives it the fastest
+//! decompression at every level (Fig 3) but a poor ratio on ROOT offset
+//! arrays (fixed by the preconditioners in `crate::precond`, Fig 6).
+
+pub mod block;
+pub mod decode;
+pub mod frame;
+pub mod hc;
+
+pub use block::Lz4Fast;
+pub use decode::{decompress_block, Lz4Error};
+pub use decode::decompress_block_dict_into;
+pub use frame::{lz4_compress, lz4_decompress, lz4_decompress_dict, lz4_decompress_into, method_for_level, Lz4Encoder, Lz4Method};
+pub use hc::Lz4Hc;

@@ -1,0 +1,8 @@
+//! LZMA-style codec: adaptive binary range coder + contextual models +
+//! large dictionary (paper §2, item ii). Holds LZMA's survey position:
+//! best ratio, slowest speed (Figs 2-3).
+
+pub mod codec;
+pub mod rangecoder;
+
+pub use codec::{lzma_compress, lzma_decompress, LzmaError};

@@ -1,0 +1,319 @@
+//! Binary range coder with adaptive probabilities — the LZMA entropy engine
+//! (paper §2: LZMA "has more complex encoding techniques, such as use of a
+//! range encoder (using a complex model for probability-based prediction)").
+//!
+//! Standard LZMA construction: 11-bit probabilities, adaptation shift 5,
+//! 32-bit range with byte-wise normalization and carry propagation through
+//! a cache byte.
+
+/// Number of probability bits.
+pub const PROB_BITS: u32 = 11;
+pub const PROB_INIT: u16 = (1 << PROB_BITS) / 2;
+const MOVE_BITS: u32 = 5;
+const TOP: u32 = 1 << 24;
+
+/// One adaptive binary probability.
+#[derive(Debug, Clone, Copy)]
+pub struct BitModel(pub u16);
+
+impl Default for BitModel {
+    fn default() -> Self {
+        Self(PROB_INIT)
+    }
+}
+
+impl BitModel {
+    #[inline]
+    fn update(&mut self, bit: u32) {
+        if bit == 0 {
+            self.0 += ((1 << PROB_BITS) - self.0) >> MOVE_BITS;
+        } else {
+            self.0 -= self.0 >> MOVE_BITS;
+        }
+    }
+}
+
+/// Range encoder.
+pub struct RangeEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl Default for RangeEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RangeEncoder {
+    pub fn new() -> Self {
+        Self { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+    }
+
+    #[inline]
+    pub fn encode_bit(&mut self, model: &mut BitModel, bit: u32) {
+        let bound = (self.range >> PROB_BITS) * model.0 as u32;
+        if bit == 0 {
+            self.range = bound;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+        }
+        model.update(bit);
+        while self.range < TOP {
+            self.shift_low();
+            self.range <<= 8;
+        }
+    }
+
+    /// Encode `n` bits without modelling (equiprobable).
+    #[inline]
+    pub fn encode_direct(&mut self, value: u32, n: u32) {
+        for i in (0..n).rev() {
+            self.range >>= 1;
+            let bit = (value >> i) & 1;
+            if bit != 0 {
+                self.low += self.range as u64;
+            }
+            while self.range < TOP {
+                self.shift_low();
+                self.range <<= 8;
+            }
+        }
+    }
+
+    /// Bit-tree encode `value` with `n` bits, MSB-first, over `probs`
+    /// (length `1 << n`).
+    pub fn encode_tree(&mut self, probs: &mut [BitModel], n: u32, value: u32) {
+        let mut m = 1usize;
+        for i in (0..n).rev() {
+            let bit = (value >> i) & 1;
+            self.encode_bit(&mut probs[m], bit);
+            m = (m << 1) | bit as usize;
+        }
+    }
+
+    fn shift_low(&mut self) {
+        if self.low < 0xFF00_0000 || self.low >= (1 << 32) {
+            let carry = (self.low >> 32) as u8;
+            let mut c = self.cache;
+            loop {
+                self.out.push(c.wrapping_add(carry));
+                c = 0xFF;
+                self.cache_size -= 1;
+                if self.cache_size == 0 {
+                    break;
+                }
+            }
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        self.low = (self.low << 8) & 0xFFFF_FFFF;
+    }
+
+    /// Flush and return the encoded bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+}
+
+/// Range decoder.
+pub struct RangeDecoder<'a> {
+    range: u32,
+    code: u32,
+    data: &'a [u8],
+    pos: usize,
+    overrun: bool,
+}
+
+impl<'a> RangeDecoder<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        let mut d = Self { range: u32::MAX, code: 0, data, pos: 1, overrun: false };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        d
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        if self.pos < self.data.len() {
+            let b = self.data[self.pos];
+            self.pos += 1;
+            b
+        } else {
+            self.overrun = true;
+            0
+        }
+    }
+
+    /// True if the decoder consumed synthetic bytes past the end.
+    pub fn overrun(&self) -> bool {
+        self.overrun
+    }
+
+    #[inline]
+    pub fn decode_bit(&mut self, model: &mut BitModel) -> u32 {
+        let bound = (self.range >> PROB_BITS) * model.0 as u32;
+        let bit = if self.code < bound {
+            self.range = bound;
+            0
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            1
+        };
+        model.update(bit);
+        while self.range < TOP {
+            self.code = (self.code << 8) | self.next_byte() as u32;
+            self.range <<= 8;
+        }
+        bit
+    }
+
+    #[inline]
+    pub fn decode_direct(&mut self, n: u32) -> u32 {
+        let mut v = 0u32;
+        for _ in 0..n {
+            self.range >>= 1;
+            let bit = if self.code >= self.range {
+                self.code -= self.range;
+                1
+            } else {
+                0
+            };
+            v = (v << 1) | bit;
+            while self.range < TOP {
+                self.code = (self.code << 8) | self.next_byte() as u32;
+                self.range <<= 8;
+            }
+        }
+        v
+    }
+
+    pub fn decode_tree(&mut self, probs: &mut [BitModel], n: u32) -> u32 {
+        let mut m = 1usize;
+        for _ in 0..n {
+            let bit = self.decode_bit(&mut probs[m]);
+            m = (m << 1) | bit as usize;
+        }
+        (m as u32) - (1 << n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bit_roundtrip_skewed() {
+        let mut rng = Rng::new(0x7A);
+        let bits: Vec<u32> = (0..50_000).map(|_| rng.chance(0.03) as u32).collect();
+        let mut enc = RangeEncoder::new();
+        let mut m = BitModel::default();
+        for &b in &bits {
+            enc.encode_bit(&mut m, b);
+        }
+        let payload = enc.finish();
+        // Skewed bits should compress far below 1 bit each.
+        assert!(payload.len() < bits.len() / 30, "{} bytes", payload.len());
+        let mut dec = RangeDecoder::new(&payload);
+        let mut m = BitModel::default();
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(dec.decode_bit(&mut m), b, "bit {i}");
+        }
+        assert!(!dec.overrun());
+    }
+
+    #[test]
+    fn direct_roundtrip() {
+        let mut rng = Rng::new(0x7B);
+        let values: Vec<(u32, u32)> = (0..5000)
+            .map(|_| {
+                let n = rng.range(1, 30) as u32;
+                (rng.next_u32() & ((1u32 << n) - 1).max(1), n)
+            })
+            .collect();
+        let mut enc = RangeEncoder::new();
+        for &(v, n) in &values {
+            enc.encode_direct(v, n);
+        }
+        let payload = enc.finish();
+        let mut dec = RangeDecoder::new(&payload);
+        for &(v, n) in &values {
+            assert_eq!(dec.decode_direct(n), v);
+        }
+    }
+
+    #[test]
+    fn tree_roundtrip() {
+        let mut rng = Rng::new(0x7C);
+        let n = 6u32;
+        let values: Vec<u32> = (0..20_000).map(|_| (rng.below(1 << n)) as u32).collect();
+        let mut enc = RangeEncoder::new();
+        let mut probs = vec![BitModel::default(); 1 << n];
+        for &v in &values {
+            enc.encode_tree(&mut probs, n, v);
+        }
+        let payload = enc.finish();
+        let mut dec = RangeDecoder::new(&payload);
+        let mut probs = vec![BitModel::default(); 1 << n];
+        for &v in &values {
+            assert_eq!(dec.decode_tree(&mut probs, n), v);
+        }
+    }
+
+    #[test]
+    fn mixed_sequences_roundtrip() {
+        // Interleave modelled bits, trees and direct bits like the codec does.
+        let mut rng = Rng::new(0x7D);
+        let mut enc = RangeEncoder::new();
+        let mut flag = BitModel::default();
+        let mut tree = vec![BitModel::default(); 64];
+        let mut script = Vec::new();
+        for _ in 0..10_000 {
+            let choice = rng.range(0, 2);
+            script.push(choice);
+            match choice {
+                0 => {
+                    let b = rng.chance(0.2) as u32;
+                    script.push(b as usize);
+                    enc.encode_bit(&mut flag, b);
+                }
+                1 => {
+                    let v = rng.below(64) as u32;
+                    script.push(v as usize);
+                    enc.encode_tree(&mut tree, 6, v);
+                }
+                _ => {
+                    let v = rng.below(1 << 13) as u32;
+                    script.push(v as usize);
+                    enc.encode_direct(v, 13);
+                }
+            }
+        }
+        let payload = enc.finish();
+        let mut dec = RangeDecoder::new(&payload);
+        let mut flag = BitModel::default();
+        let mut tree = vec![BitModel::default(); 64];
+        let mut i = 0;
+        while i < script.len() {
+            let choice = script[i];
+            let v = script[i + 1] as u32;
+            i += 2;
+            match choice {
+                0 => assert_eq!(dec.decode_bit(&mut flag), v),
+                1 => assert_eq!(dec.decode_tree(&mut tree, 6), v),
+                _ => assert_eq!(dec.decode_direct(13), v),
+            }
+        }
+        assert!(!dec.overrun());
+    }
+}

@@ -1,0 +1,12 @@
+//! `rootio` CLI entrypoint — see `rootio help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match rootio::cli::run(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Preconditioners (paper §2.2): deterministic, invertible byte transforms
+//! applied before compression to expose structure to byte-aligned matchers.
+//!
+//! The paper investigates Blosc-inspired Shuffle and BitShuffle to rescue
+//! LZ4's compression ratio on ROOT offset arrays (Fig 6); we additionally
+//! ship a Delta transform used by the adaptive planner.
+
+pub mod bitshuffle;
+pub mod delta;
+pub mod shuffle;
+
+pub use bitshuffle::{bitshuffle, bitshuffle_into, unbitshuffle, unbitshuffle_into};
+pub use delta::{delta, delta_in_place, undelta, undelta_in_place};
+pub use shuffle::{shuffle, shuffle_into, unshuffle, unshuffle_into};
+
+/// Preconditioner selector, stored in the basket record header so readers
+/// can invert the transform without out-of-band metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precond {
+    /// No transform.
+    #[default]
+    None,
+    /// Byte shuffle with element size in bytes.
+    Shuffle(u8),
+    /// Bit shuffle with element size in bytes.
+    BitShuffle(u8),
+    /// Byte-wise delta with stride in bytes.
+    Delta(u8),
+}
+
+impl Precond {
+    /// Apply the forward transform.
+    pub fn apply(&self, data: &[u8]) -> Vec<u8> {
+        match *self {
+            Precond::None => data.to_vec(),
+            Precond::Shuffle(s) => shuffle(data, s as usize),
+            Precond::BitShuffle(s) => bitshuffle(data, s as usize),
+            Precond::Delta(s) => delta(data, s as usize),
+        }
+    }
+
+    /// Apply the inverse transform.
+    pub fn invert(&self, data: &[u8]) -> Vec<u8> {
+        match *self {
+            Precond::None => data.to_vec(),
+            Precond::Shuffle(s) => unshuffle(data, s as usize),
+            Precond::BitShuffle(s) => unbitshuffle(data, s as usize),
+            Precond::Delta(s) => undelta(data, s as usize),
+        }
+    }
+
+    /// Encode as (tag, stride) for the record header.
+    pub fn encode(&self) -> (u8, u8) {
+        match *self {
+            Precond::None => (0, 0),
+            Precond::Shuffle(s) => (1, s),
+            Precond::BitShuffle(s) => (2, s),
+            Precond::Delta(s) => (3, s),
+        }
+    }
+
+    /// Decode from (tag, stride); unknown tags are an error.
+    pub fn decode(tag: u8, stride: u8) -> Option<Self> {
+        Some(match tag {
+            0 => Precond::None,
+            1 => Precond::Shuffle(stride),
+            2 => Precond::BitShuffle(stride),
+            3 => Precond::Delta(stride),
+            _ => return None,
+        })
+    }
+
+    /// Human-readable label used in figure output.
+    pub fn label(&self) -> String {
+        match *self {
+            Precond::None => "none".into(),
+            Precond::Shuffle(s) => format!("shuffle{s}"),
+            Precond::BitShuffle(s) => format!("bitshuffle{s}"),
+            Precond::Delta(s) => format!("delta{s}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_variants_roundtrip() {
+        let mut rng = Rng::new(0x9999);
+        let variants = [
+            Precond::None,
+            Precond::Shuffle(4),
+            Precond::Shuffle(8),
+            Precond::BitShuffle(2),
+            Precond::BitShuffle(4),
+            Precond::Delta(1),
+            Precond::Delta(4),
+        ];
+        for _ in 0..50 {
+            let n = rng.range(0, 4000);
+            let data = rng.bytes(n);
+            for p in variants {
+                assert_eq!(p.invert(&p.apply(&data)), data, "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode() {
+        for p in [
+            Precond::None,
+            Precond::Shuffle(4),
+            Precond::BitShuffle(8),
+            Precond::Delta(2),
+        ] {
+            let (t, s) = p.encode();
+            assert_eq!(Precond::decode(t, s), Some(p));
+        }
+        assert_eq!(Precond::decode(77, 4), None);
+    }
+}

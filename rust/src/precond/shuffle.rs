@@ -1,0 +1,127 @@
+//! Byte-Shuffle preconditioner (Blosc-style), paper §2.2.
+//!
+//! Rearranges an array of fixed-size elements so that byte k of every
+//! element is stored contiguously: for stride 4 over bytes
+//! `1,2,3,4,5,6,7,8` the output order is `1,5,2,6,3,7,4,8`. Serialized
+//! integers that differ only in their low byte (ROOT offset arrays!) then
+//! produce long runs of identical bytes, which LZ4's byte-aligned matcher
+//! can finally exploit.
+//!
+//! The transform is applied to the largest prefix that is a multiple of
+//! `stride`; the tail is copied verbatim (Blosc does the same), so any
+//! buffer round-trips for any stride.
+
+/// Shuffle `data` with element size `stride` into a new buffer.
+pub fn shuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    let mut out = vec![0u8; data.len()];
+    shuffle_into(data, stride, &mut out);
+    out
+}
+
+/// Shuffle into a caller-provided buffer (`out.len() == data.len()`).
+pub fn shuffle_into(data: &[u8], stride: usize, out: &mut [u8]) {
+    assert_eq!(data.len(), out.len());
+    if stride <= 1 || data.len() < stride {
+        out.copy_from_slice(data);
+        return;
+    }
+    let nelem = data.len() / stride;
+    let body = nelem * stride;
+    // out[k*nelem + i] = data[i*stride + k]
+    for k in 0..stride {
+        let dst = &mut out[k * nelem..(k + 1) * nelem];
+        let mut src = k;
+        for d in dst.iter_mut() {
+            *d = data[src];
+            src += stride;
+        }
+    }
+    out[body..].copy_from_slice(&data[body..]);
+}
+
+/// Inverse of [`shuffle`].
+pub fn unshuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    let mut out = vec![0u8; data.len()];
+    unshuffle_into(data, stride, &mut out);
+    out
+}
+
+/// Inverse shuffle into a caller-provided buffer.
+pub fn unshuffle_into(data: &[u8], stride: usize, out: &mut [u8]) {
+    assert_eq!(data.len(), out.len());
+    if stride <= 1 || data.len() < stride {
+        out.copy_from_slice(data);
+        return;
+    }
+    let nelem = data.len() / stride;
+    let body = nelem * stride;
+    for k in 0..stride {
+        let src = &data[k * nelem..(k + 1) * nelem];
+        let mut dst = k;
+        for &s in src.iter() {
+            out[dst] = s;
+            dst += stride;
+        }
+    }
+    out[body..].copy_from_slice(&data[body..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_example() {
+        // Paper §2.2: stride 4 over bytes 1..8 -> 1,5,2,6,3,7,4,8.
+        let input = [1u8, 2, 3, 4, 5, 6, 7, 8];
+        assert_eq!(shuffle(&input, 4), vec![1, 5, 2, 6, 3, 7, 4, 8]);
+    }
+
+    #[test]
+    fn paper_offset_array_example() {
+        // Big-endian 32-bit ints 1 and 2: 0,0,0,1,0,0,0,2 -> 0,0,0,0,0,0,1,2.
+        let input = [0u8, 0, 0, 1, 0, 0, 0, 2];
+        assert_eq!(shuffle(&input, 4), vec![0, 0, 0, 0, 0, 0, 1, 2]);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Rng::new(0x5F5F);
+        for _ in 0..300 {
+            let n = rng.range(0, 5000);
+            let stride = rng.range(1, 16);
+            let data = rng.bytes(n);
+            assert_eq!(unshuffle(&shuffle(&data, stride), stride), data, "n={n} stride={stride}");
+        }
+    }
+
+    #[test]
+    fn tail_preserved() {
+        let data = [1u8, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        let s = shuffle(&data, 4);
+        // Tail (bytes 9, 10) copied verbatim at the end.
+        assert_eq!(&s[8..], &[9, 10]);
+        assert_eq!(unshuffle(&s, 4), data);
+    }
+
+    #[test]
+    fn stride_one_is_identity() {
+        let data: Vec<u8> = (0..100).collect();
+        assert_eq!(shuffle(&data, 1), data);
+    }
+
+    #[test]
+    fn monotone_offsets_become_runs() {
+        // The Fig-6 mechanism: a ROOT offset array (big-endian monotone ints)
+        // shuffles into long zero runs.
+        let mut data = Vec::new();
+        for i in 1u32..=256 {
+            data.extend_from_slice(&i.to_be_bytes());
+        }
+        let s = shuffle(&data, 4);
+        // First 3*256 bytes are the three high bytes, almost all zero.
+        let zeros = s[..768].iter().filter(|&&b| b == 0).count();
+        assert!(zeros >= 767, "zeros={zeros}");
+    }
+}

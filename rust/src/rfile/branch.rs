@@ -1,0 +1,223 @@
+//! Branch schema and value serialization.
+//!
+//! Mirrors ROOT's TTree semantics at the level the paper depends on:
+//! columnar branches serialized big-endian into baskets (Fig 1), with
+//! variable-sized branches producing *two* internal arrays — the element
+//! data and the per-entry byte offsets — whose interaction with LZ4 drives
+//! the paper's Fig 6.
+
+use crate::compression::Settings;
+use crate::util::varint::{put_lp_bytes, put_uvarint, Cursor};
+
+/// Element type of a branch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BranchType {
+    F32,
+    F64,
+    I32,
+    I64,
+    U8,
+    /// Variable-length array of f32 per entry (jagged).
+    VarF32,
+    /// Variable-length array of i32 per entry (jagged).
+    VarI32,
+    /// Variable-length byte array per entry (e.g. strings).
+    VarU8,
+    /// Boolean flags stored as one byte (HLT bits etc.).
+    Bool,
+}
+
+impl BranchType {
+    pub fn is_var(&self) -> bool {
+        matches!(self, BranchType::VarF32 | BranchType::VarI32 | BranchType::VarU8)
+    }
+
+    /// Element width in bytes (the natural preconditioner stride).
+    pub fn elem_size(&self) -> usize {
+        match self {
+            BranchType::F32 | BranchType::I32 | BranchType::VarF32 | BranchType::VarI32 => 4,
+            BranchType::F64 | BranchType::I64 => 8,
+            BranchType::U8 | BranchType::VarU8 | BranchType::Bool => 1,
+        }
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            BranchType::F32 => 0,
+            BranchType::F64 => 1,
+            BranchType::I32 => 2,
+            BranchType::I64 => 3,
+            BranchType::U8 => 4,
+            BranchType::VarF32 => 5,
+            BranchType::VarI32 => 6,
+            BranchType::VarU8 => 7,
+            BranchType::Bool => 8,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        Some(match c {
+            0 => BranchType::F32,
+            1 => BranchType::F64,
+            2 => BranchType::I32,
+            3 => BranchType::I64,
+            4 => BranchType::U8,
+            5 => BranchType::VarF32,
+            6 => BranchType::VarI32,
+            7 => BranchType::VarU8,
+            8 => BranchType::Bool,
+            _ => return None,
+        })
+    }
+}
+
+/// One value for one entry of one branch.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(f32),
+    F64(f64),
+    I32(i32),
+    I64(i64),
+    U8(u8),
+    Bool(bool),
+    AF32(Vec<f32>),
+    AI32(Vec<i32>),
+    AU8(Vec<u8>),
+}
+
+impl Value {
+    pub fn matches(&self, ty: BranchType) -> bool {
+        matches!(
+            (self, ty),
+            (Value::F32(_), BranchType::F32)
+                | (Value::F64(_), BranchType::F64)
+                | (Value::I32(_), BranchType::I32)
+                | (Value::I64(_), BranchType::I64)
+                | (Value::U8(_), BranchType::U8)
+                | (Value::Bool(_), BranchType::Bool)
+                | (Value::AF32(_), BranchType::VarF32)
+                | (Value::AI32(_), BranchType::VarI32)
+                | (Value::AU8(_), BranchType::VarU8)
+        )
+    }
+
+    /// Serialize big-endian (ROOT network order) onto `out`; returns the
+    /// number of bytes written.
+    pub fn serialize(&self, out: &mut Vec<u8>) -> usize {
+        let start = out.len();
+        match self {
+            Value::F32(v) => out.extend_from_slice(&v.to_be_bytes()),
+            Value::F64(v) => out.extend_from_slice(&v.to_be_bytes()),
+            Value::I32(v) => out.extend_from_slice(&v.to_be_bytes()),
+            Value::I64(v) => out.extend_from_slice(&v.to_be_bytes()),
+            Value::U8(v) => out.push(*v),
+            Value::Bool(v) => out.push(*v as u8),
+            Value::AF32(a) => {
+                for v in a {
+                    out.extend_from_slice(&v.to_be_bytes());
+                }
+            }
+            Value::AI32(a) => {
+                for v in a {
+                    out.extend_from_slice(&v.to_be_bytes());
+                }
+            }
+            Value::AU8(a) => out.extend_from_slice(a),
+        }
+        out.len() - start
+    }
+}
+
+/// Branch definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BranchDef {
+    pub name: String,
+    pub ty: BranchType,
+    /// Per-branch compression override (None = tree default), mirroring
+    /// ROOT's per-branch compression settings.
+    pub settings: Option<Settings>,
+}
+
+impl BranchDef {
+    pub fn new(name: impl Into<String>, ty: BranchType) -> Self {
+        Self { name: name.into(), ty, settings: None }
+    }
+
+    pub fn with_settings(mut self, s: Settings) -> Self {
+        self.settings = Some(s);
+        self
+    }
+
+    pub(crate) fn serialize(&self, out: &mut Vec<u8>) {
+        put_lp_bytes(out, self.name.as_bytes());
+        out.push(self.ty.code());
+        match &self.settings {
+            None => out.push(0),
+            Some(s) => {
+                out.push(1);
+                put_uvarint(out, s.to_root_setting() as u64);
+                let (pt, ps) = s.precond.encode();
+                out.push((pt << 4) | (ps & 0x0F));
+            }
+        }
+    }
+
+    pub(crate) fn deserialize(c: &mut Cursor) -> Option<Self> {
+        let name = c.lp_str()?.to_string();
+        let ty = BranchType::from_code(c.u8()?)?;
+        let has = c.u8()?;
+        let settings = if has == 1 {
+            let packed = c.uvarint()? as u16;
+            let pbyte = c.u8()?;
+            let mut s = Settings::from_root_setting(packed)?;
+            s.precond = crate::precond::Precond::decode(pbyte >> 4, pbyte & 0x0F)?;
+            Some(s)
+        } else {
+            None
+        };
+        Some(Self { name, ty, settings })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::Algorithm;
+    use crate::precond::Precond;
+
+    #[test]
+    fn value_serialization_is_big_endian() {
+        let mut out = Vec::new();
+        Value::I32(1).serialize(&mut out);
+        assert_eq!(out, vec![0, 0, 0, 1]);
+        out.clear();
+        Value::F32(1.0).serialize(&mut out);
+        assert_eq!(out, vec![0x3F, 0x80, 0, 0]);
+    }
+
+    #[test]
+    fn branch_def_roundtrip() {
+        let defs = [
+            BranchDef::new("Muon_pt", BranchType::VarF32),
+            BranchDef::new("nMuon", BranchType::I32).with_settings(
+                Settings::new(Algorithm::Lz4, 4).with_precond(Precond::BitShuffle(4)),
+            ),
+            BranchDef::new("HLT_IsoMu24", BranchType::Bool),
+        ];
+        for d in &defs {
+            let mut buf = Vec::new();
+            d.serialize(&mut buf);
+            let mut c = Cursor::new(&buf);
+            let back = BranchDef::deserialize(&mut c).unwrap();
+            assert_eq!(&back, d);
+        }
+    }
+
+    #[test]
+    fn type_checks() {
+        assert!(Value::AF32(vec![1.0]).matches(BranchType::VarF32));
+        assert!(!Value::F32(1.0).matches(BranchType::F64));
+        assert!(BranchType::VarF32.is_var());
+        assert_eq!(BranchType::F64.elem_size(), 8);
+    }
+}

@@ -1,0 +1,152 @@
+//! On-disk container: a keyed record stream with a trailer, the moral
+//! equivalent of ROOT's TFile + TKey structure (simplified, versioned).
+//!
+//! ```text
+//! file  := header record* trailer
+//! header:= "RFIL" u16_version
+//! record:= u32_be total_len, u8 kind, payload[total_len - 5]
+//! trailer (fixed 16 bytes at EOF): u64_be metadata_offset "RFILEND1"
+//! ```
+//!
+//! Record kinds: 1 = basket, 2 = tree metadata, 3 = dictionary blob.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Seek, SeekFrom, Write};
+
+pub const MAGIC: &[u8; 4] = b"RFIL";
+pub const VERSION: u16 = 1;
+pub const TRAILER_MAGIC: &[u8; 8] = b"RFILEND1";
+pub const TRAILER_LEN: u64 = 16;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordKind {
+    Basket = 1,
+    TreeMeta = 2,
+    Dictionary = 3,
+}
+
+impl RecordKind {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => RecordKind::Basket,
+            2 => RecordKind::TreeMeta,
+            3 => RecordKind::Dictionary,
+            _ => return None,
+        })
+    }
+}
+
+/// Write the file header; returns bytes written.
+pub fn write_header(w: &mut impl Write) -> Result<u64> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_be_bytes())?;
+    Ok(6)
+}
+
+/// Append one record; returns its file offset (caller tracks position).
+pub fn write_record(w: &mut impl Write, pos: u64, kind: RecordKind, payload: &[u8]) -> Result<u64> {
+    let total = payload.len() as u32 + 5;
+    w.write_all(&total.to_be_bytes())?;
+    w.write_all(&[kind as u8])?;
+    w.write_all(payload)?;
+    Ok(pos)
+}
+
+/// Write the trailer pointing at the metadata record.
+pub fn write_trailer(w: &mut impl Write, meta_offset: u64) -> Result<()> {
+    w.write_all(&meta_offset.to_be_bytes())?;
+    w.write_all(TRAILER_MAGIC)?;
+    Ok(())
+}
+
+/// Validate the header of an open file.
+pub fn read_header(r: &mut impl Read) -> Result<u16> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading file magic")?;
+    if &magic != MAGIC {
+        bail!("not an RFIL file (bad magic)");
+    }
+    let mut v = [0u8; 2];
+    r.read_exact(&mut v)?;
+    let version = u16::from_be_bytes(v);
+    if version != VERSION {
+        bail!("unsupported RFIL version {version}");
+    }
+    Ok(version)
+}
+
+/// Read the trailer; returns the metadata record offset.
+pub fn read_trailer(f: &mut (impl Read + Seek)) -> Result<u64> {
+    let end = f.seek(SeekFrom::End(0))?;
+    if end < TRAILER_LEN + 6 {
+        bail!("file too short for trailer");
+    }
+    f.seek(SeekFrom::End(-(TRAILER_LEN as i64)))?;
+    let mut buf = [0u8; 16];
+    f.read_exact(&mut buf)?;
+    if &buf[8..] != TRAILER_MAGIC {
+        bail!("missing RFIL trailer (file not closed?)");
+    }
+    Ok(u64::from_be_bytes(buf[..8].try_into().unwrap()))
+}
+
+/// Read the record at `offset`; returns (kind, payload).
+pub fn read_record_at(f: &mut (impl Read + Seek), offset: u64) -> Result<(RecordKind, Vec<u8>)> {
+    f.seek(SeekFrom::Start(offset))?;
+    let mut hdr = [0u8; 5];
+    f.read_exact(&mut hdr).context("reading record header")?;
+    let total = u32::from_be_bytes(hdr[..4].try_into().unwrap()) as usize;
+    if total < 5 || total > (1 << 30) {
+        bail!("implausible record length {total}");
+    }
+    let kind = RecordKind::from_u8(hdr[4]).context("unknown record kind")?;
+    let mut payload = vec![0u8; total - 5];
+    f.read_exact(&mut payload).context("reading record payload")?;
+    Ok((kind, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn file_structure_roundtrip() {
+        let mut buf = Cursor::new(Vec::<u8>::new());
+        let mut pos = write_header(&mut buf).unwrap();
+        let r1 = pos;
+        write_record(&mut buf, pos, RecordKind::Basket, b"payload-1").unwrap();
+        pos += 5 + 9;
+        let r2 = pos;
+        write_record(&mut buf, pos, RecordKind::TreeMeta, b"meta").unwrap();
+        pos += 5 + 4;
+        write_trailer(&mut buf, r2).unwrap();
+        let _ = pos;
+
+        buf.set_position(0);
+        assert_eq!(read_header(&mut buf).unwrap(), VERSION);
+        let meta_off = read_trailer(&mut buf).unwrap();
+        assert_eq!(meta_off, r2);
+        let (k, p) = read_record_at(&mut buf, r2).unwrap();
+        assert_eq!(k, RecordKind::TreeMeta);
+        assert_eq!(p, b"meta");
+        let (k, p) = read_record_at(&mut buf, r1).unwrap();
+        assert_eq!(k, RecordKind::Basket);
+        assert_eq!(p, b"payload-1");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Cursor::new(b"NOPE00".to_vec());
+        assert!(read_header(&mut buf).is_err());
+    }
+
+    #[test]
+    fn missing_trailer_rejected() {
+        let mut buf = Cursor::new(Vec::<u8>::new());
+        write_header(&mut buf).unwrap();
+        write_record(&mut buf, 6, RecordKind::Basket, &vec![0u8; 64]).unwrap();
+        buf.set_position(0);
+        assert!(read_trailer(&mut buf).is_err());
+    }
+}

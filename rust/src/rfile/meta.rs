@@ -1,0 +1,178 @@
+//! Tree metadata: schema + basket directory, serialized into the TreeMeta
+//! record that the trailer points at.
+
+use super::branch::BranchDef;
+use crate::compression::Settings;
+use crate::util::varint::{put_lp_bytes, put_uvarint, Cursor};
+use anyhow::{bail, Result};
+
+/// Location + stats of one committed basket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BasketLoc {
+    pub branch_id: u32,
+    pub basket_index: u32,
+    pub first_entry: u64,
+    pub n_entries: u32,
+    pub file_offset: u64,
+    pub compressed_len: u32,
+    pub uncompressed_len: u32,
+}
+
+/// Full tree metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeMeta {
+    pub name: String,
+    pub branches: Vec<BranchDef>,
+    pub default_settings: Settings,
+    pub n_entries: u64,
+    /// All baskets, ordered by (branch_id, basket_index).
+    pub baskets: Vec<BasketLoc>,
+    /// Offset of the dictionary record, if one was written.
+    pub dictionary_offset: Option<u64>,
+}
+
+impl TreeMeta {
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_lp_bytes(&mut out, self.name.as_bytes());
+        put_uvarint(&mut out, self.branches.len() as u64);
+        for b in &self.branches {
+            b.serialize(&mut out);
+        }
+        put_uvarint(&mut out, self.default_settings.to_root_setting() as u64);
+        let (pt, ps) = self.default_settings.precond.encode();
+        out.push((pt << 4) | (ps & 0x0F));
+        put_uvarint(&mut out, self.n_entries);
+        match self.dictionary_offset {
+            None => out.push(0),
+            Some(o) => {
+                out.push(1);
+                put_uvarint(&mut out, o);
+            }
+        }
+        put_uvarint(&mut out, self.baskets.len() as u64);
+        for l in &self.baskets {
+            put_uvarint(&mut out, l.branch_id as u64);
+            put_uvarint(&mut out, l.basket_index as u64);
+            put_uvarint(&mut out, l.first_entry);
+            put_uvarint(&mut out, l.n_entries as u64);
+            put_uvarint(&mut out, l.file_offset);
+            put_uvarint(&mut out, l.compressed_len as u64);
+            put_uvarint(&mut out, l.uncompressed_len as u64);
+        }
+        out
+    }
+
+    pub fn deserialize(data: &[u8]) -> Result<Self> {
+        let mut c = Cursor::new(data);
+        let fail = || anyhow::anyhow!("truncated tree metadata");
+        let name = c.lp_str().ok_or_else(fail)?.to_string();
+        let n_branches = c.uvarint().ok_or_else(fail)? as usize;
+        if n_branches > 1_000_000 {
+            bail!("implausible branch count");
+        }
+        let mut branches = Vec::with_capacity(n_branches);
+        for _ in 0..n_branches {
+            branches.push(BranchDef::deserialize(&mut c).ok_or_else(fail)?);
+        }
+        let packed = c.uvarint().ok_or_else(fail)? as u16;
+        let pbyte = c.u8().ok_or_else(fail)?;
+        let mut default_settings =
+            Settings::from_root_setting(packed).ok_or_else(|| anyhow::anyhow!("bad settings"))?;
+        default_settings.precond = crate::precond::Precond::decode(pbyte >> 4, pbyte & 0x0F)
+            .ok_or_else(|| anyhow::anyhow!("bad precond"))?;
+        let n_entries = c.uvarint().ok_or_else(fail)?;
+        let dictionary_offset = match c.u8().ok_or_else(fail)? {
+            0 => None,
+            1 => Some(c.uvarint().ok_or_else(fail)?),
+            _ => bail!("bad dictionary flag"),
+        };
+        let n_baskets = c.uvarint().ok_or_else(fail)? as usize;
+        if n_baskets > 100_000_000 {
+            bail!("implausible basket count");
+        }
+        let mut baskets = Vec::with_capacity(n_baskets);
+        for _ in 0..n_baskets {
+            baskets.push(BasketLoc {
+                branch_id: c.uvarint().ok_or_else(fail)? as u32,
+                basket_index: c.uvarint().ok_or_else(fail)? as u32,
+                first_entry: c.uvarint().ok_or_else(fail)?,
+                n_entries: c.uvarint().ok_or_else(fail)? as u32,
+                file_offset: c.uvarint().ok_or_else(fail)?,
+                compressed_len: c.uvarint().ok_or_else(fail)? as u32,
+                uncompressed_len: c.uvarint().ok_or_else(fail)? as u32,
+            });
+        }
+        Ok(Self {
+            name,
+            branches,
+            default_settings,
+            n_entries,
+            baskets,
+            dictionary_offset,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{Algorithm, Settings};
+    use crate::precond::Precond;
+    use crate::rfile::branch::BranchType;
+
+    #[test]
+    fn meta_roundtrip() {
+        let meta = TreeMeta {
+            name: "Events".into(),
+            branches: vec![
+                BranchDef::new("nMuon", BranchType::I32),
+                BranchDef::new("Muon_pt", BranchType::VarF32).with_settings(
+                    Settings::new(Algorithm::Lz4, 4).with_precond(Precond::BitShuffle(4)),
+                ),
+            ],
+            default_settings: Settings::new(Algorithm::Zstd, 5),
+            n_entries: 2000,
+            baskets: vec![
+                BasketLoc {
+                    branch_id: 0,
+                    basket_index: 0,
+                    first_entry: 0,
+                    n_entries: 1000,
+                    file_offset: 6,
+                    compressed_len: 1234,
+                    uncompressed_len: 4000,
+                },
+                BasketLoc {
+                    branch_id: 1,
+                    basket_index: 0,
+                    first_entry: 0,
+                    n_entries: 2000,
+                    file_offset: 1300,
+                    compressed_len: 999,
+                    uncompressed_len: 8000,
+                },
+            ],
+            dictionary_offset: Some(42),
+        };
+        let bytes = meta.serialize();
+        let back = TreeMeta::deserialize(&bytes).unwrap();
+        assert_eq!(back, meta);
+    }
+
+    #[test]
+    fn truncated_meta_rejected() {
+        let meta = TreeMeta {
+            name: "T".into(),
+            branches: vec![BranchDef::new("x", BranchType::F32)],
+            default_settings: Settings::default(),
+            n_entries: 1,
+            baskets: vec![],
+            dictionary_offset: None,
+        };
+        let bytes = meta.serialize();
+        for cut in 1..bytes.len() - 1 {
+            let _ = TreeMeta::deserialize(&bytes[..cut]); // no panic
+        }
+    }
+}

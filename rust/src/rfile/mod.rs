@@ -1,0 +1,20 @@
+//! ROOT-like columnar file format: keyed container (TFile/TKey analogue),
+//! trees with typed branches and baskets (TTree/TBranch/TBasket), per-branch
+//! compression settings, and the serialized offset arrays for variable-size
+//! branches that drive the paper's Fig 6.
+
+pub mod basket;
+pub mod branch;
+pub mod format;
+pub mod meta;
+pub mod reader;
+pub mod writer;
+
+pub use basket::{BasketContent, PendingBasket};
+pub use branch::{BranchDef, BranchType, Value};
+pub use meta::{BasketLoc, TreeMeta};
+pub use reader::TreeReader;
+pub use writer::{
+    frame_basket_record, write_tree_serial, BasketSink, RecordWriter, SerialSink, TreeWriter,
+    DEFAULT_BASKET_SIZE,
+};

@@ -1,0 +1,195 @@
+//! Tree reader: opens an RFIL file, loads the metadata, and decompresses
+//! baskets on demand — the read path whose decompression cost is the
+//! paper's Fig 3 (and the reason analysis use cases prefer LZ4).
+
+use super::basket::{decode_basket, BasketContent};
+use super::branch::{BranchType, Value};
+use super::format::{self, RecordKind};
+use super::meta::{BasketLoc, TreeMeta};
+use crate::compression::Engine;
+use crate::util::varint::Cursor;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::BufReader;
+use std::path::Path;
+
+/// An open tree file.
+pub struct TreeReader {
+    file: BufReader<File>,
+    pub meta: TreeMeta,
+    engine: Engine,
+}
+
+impl TreeReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let mut file = BufReader::new(f);
+        format::read_header(&mut file)?;
+        let meta_off = format::read_trailer(&mut file)?;
+        let (kind, payload) = format::read_record_at(&mut file, meta_off)?;
+        if kind != RecordKind::TreeMeta {
+            bail!("trailer does not point at tree metadata");
+        }
+        let meta = TreeMeta::deserialize(&payload)?;
+        let mut engine = Engine::new();
+        // Load the dictionary blob if the tree carries one.
+        if let Some(doff) = meta.dictionary_offset {
+            let (k, dict) = format::read_record_at(&mut file, doff)?;
+            if k != RecordKind::Dictionary {
+                bail!("dictionary offset does not point at a dictionary record");
+            }
+            engine.set_dictionary(dict);
+        }
+        Ok(Self { file, meta, engine })
+    }
+
+    pub fn branch_id(&self, name: &str) -> Option<u32> {
+        self.meta
+            .branches
+            .iter()
+            .position(|b| b.name == name)
+            .map(|i| i as u32)
+    }
+
+    /// Basket directory for one branch (ordered by basket_index).
+    pub fn baskets_for(&self, branch_id: u32) -> Vec<BasketLoc> {
+        self.meta
+            .baskets
+            .iter()
+            .copied()
+            .filter(|l| l.branch_id == branch_id)
+            .collect()
+    }
+
+    /// Read + decompress one basket.
+    pub fn read_basket(&mut self, loc: &BasketLoc) -> Result<BasketContent> {
+        let (kind, payload) = format::read_record_at(&mut self.file, loc.file_offset)?;
+        if kind != RecordKind::Basket {
+            bail!("expected basket record at {}", loc.file_offset);
+        }
+        let mut c = Cursor::new(&payload);
+        let branch_id = c.uvarint().context("basket branch id")? as u32;
+        let basket_index = c.uvarint().context("basket index")? as u32;
+        if branch_id != loc.branch_id || basket_index != loc.basket_index {
+            bail!(
+                "basket identity mismatch: found ({branch_id},{basket_index}), expected ({},{})",
+                loc.branch_id,
+                loc.basket_index
+            );
+        }
+        let content = decode_basket(&payload[c.pos()..], &mut self.engine)
+            .map_err(|e| anyhow::anyhow!("basket decode: {e}"))?;
+        if content.n_entries != loc.n_entries {
+            bail!("basket entry count mismatch");
+        }
+        Ok(content)
+    }
+
+    /// Read an entire branch back as per-entry values.
+    pub fn read_branch(&mut self, branch_id: u32) -> Result<Vec<Value>> {
+        let ty = self
+            .meta
+            .branches
+            .get(branch_id as usize)
+            .ok_or_else(|| anyhow::anyhow!("no branch {branch_id}"))?
+            .ty;
+        let locs = self.baskets_for(branch_id);
+        let mut out = Vec::with_capacity(self.meta.n_entries as usize);
+        for loc in &locs {
+            let content = self.read_basket(loc)?;
+            decode_values(&content, ty, &mut out)?;
+        }
+        if out.len() as u64 != self.meta.n_entries {
+            bail!(
+                "branch {branch_id}: {} entries decoded, tree has {}",
+                out.len(),
+                self.meta.n_entries
+            );
+        }
+        Ok(out)
+    }
+
+    /// Iterate all events (row-wise reconstruction across all branches).
+    /// Memory-heavy for wide trees; used by examples and tests on small
+    /// files. Returns `events[entry][branch]`.
+    pub fn read_all_events(&mut self) -> Result<Vec<Vec<Value>>> {
+        let n_branches = self.meta.branches.len();
+        let n = self.meta.n_entries as usize;
+        let mut columns = Vec::with_capacity(n_branches);
+        for b in 0..n_branches {
+            columns.push(self.read_branch(b as u32)?);
+        }
+        let mut events = vec![Vec::with_capacity(n_branches); n];
+        for col in columns {
+            for (ev, v) in events.iter_mut().zip(col) {
+                ev.push(v);
+            }
+        }
+        Ok(events)
+    }
+}
+
+/// Decode a basket's raw content into typed per-entry values.
+pub fn decode_values(content: &BasketContent, ty: BranchType, out: &mut Vec<Value>) -> Result<()> {
+    let data = &content.data;
+    if ty.is_var() {
+        let mut start = 0usize;
+        if content.offsets.len() != content.n_entries as usize {
+            bail!("offset array length mismatch");
+        }
+        for &end in &content.offsets {
+            let end = end as usize;
+            if end < start || end > data.len() {
+                bail!("corrupt offset array");
+            }
+            let slice = &data[start..end];
+            out.push(match ty {
+                BranchType::VarF32 => {
+                    if slice.len() % 4 != 0 {
+                        bail!("var-f32 entry not multiple of 4");
+                    }
+                    Value::AF32(
+                        slice
+                            .chunks_exact(4)
+                            .map(|c| f32::from_be_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                BranchType::VarI32 => {
+                    if slice.len() % 4 != 0 {
+                        bail!("var-i32 entry not multiple of 4");
+                    }
+                    Value::AI32(
+                        slice
+                            .chunks_exact(4)
+                            .map(|c| i32::from_be_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                BranchType::VarU8 => Value::AU8(slice.to_vec()),
+                _ => unreachable!(),
+            });
+            start = end;
+        }
+        if start != data.len() {
+            bail!("trailing bytes after last offset");
+        }
+    } else {
+        let esz = ty.elem_size();
+        if data.len() != esz * content.n_entries as usize {
+            bail!("fixed-width basket size mismatch");
+        }
+        for chunk in data.chunks_exact(esz) {
+            out.push(match ty {
+                BranchType::F32 => Value::F32(f32::from_be_bytes(chunk.try_into().unwrap())),
+                BranchType::F64 => Value::F64(f64::from_be_bytes(chunk.try_into().unwrap())),
+                BranchType::I32 => Value::I32(i32::from_be_bytes(chunk.try_into().unwrap())),
+                BranchType::I64 => Value::I64(i64::from_be_bytes(chunk.try_into().unwrap())),
+                BranchType::U8 => Value::U8(chunk[0]),
+                BranchType::Bool => Value::Bool(chunk[0] != 0),
+                _ => unreachable!(),
+            });
+        }
+    }
+    Ok(())
+}

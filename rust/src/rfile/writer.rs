@@ -1,0 +1,270 @@
+//! Tree writer: accumulates entries column-wise into per-branch baskets
+//! (paper Fig 1), flushing each basket through a [`BasketSink`] when it
+//! reaches the basket size. The sink abstraction is the seam where the
+//! parallel compression pipeline (coordinator) plugs in; the default
+//! [`SerialSink`] compresses inline.
+
+use super::basket::{encode_basket, PendingBasket};
+use super::branch::{BranchDef, Value};
+use super::format::{self, RecordKind};
+use super::meta::{BasketLoc, TreeMeta};
+use crate::compression::{Engine, Settings};
+use crate::util::varint::put_uvarint;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Default basket size (ROOT's default TBasket buffer is 32 KiB).
+pub const DEFAULT_BASKET_SIZE: usize = 32 * 1024;
+
+/// Where finished (uncompressed) baskets go. Implementations must commit
+/// baskets to the file *in submission order per branch* and return the
+/// locations at finish.
+pub trait BasketSink {
+    fn submit(&mut self, basket: PendingBasket, settings: Settings) -> Result<()>;
+    /// Flush everything; returns committed basket locations.
+    fn finish(&mut self) -> Result<Vec<BasketLoc>>;
+}
+
+/// Record-level writer shared by sinks: owns the output file and the
+/// running offset.
+pub struct RecordWriter {
+    out: BufWriter<File>,
+    pos: u64,
+}
+
+impl RecordWriter {
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        let pos = format::write_header(&mut out)?;
+        Ok(Self { out, pos })
+    }
+
+    /// Append a record, returning its offset.
+    pub fn append(&mut self, kind: RecordKind, payload: &[u8]) -> Result<u64> {
+        let off = self.pos;
+        format::write_record(&mut self.out, self.pos, kind, payload)?;
+        self.pos += 5 + payload.len() as u64;
+        Ok(off)
+    }
+
+    /// Write metadata + trailer and flush.
+    pub fn close(mut self, meta: &TreeMeta) -> Result<u64> {
+        let meta_off = self.append(RecordKind::TreeMeta, &meta.serialize())?;
+        format::write_trailer(&mut self.out, meta_off)?;
+        self.out.flush()?;
+        Ok(self.pos + format::TRAILER_LEN)
+    }
+}
+
+/// Basket record payload framing shared by all sinks:
+/// `[uvarint branch_id][uvarint basket_index][encoded basket]`.
+pub fn frame_basket_record(branch_id: u32, basket_index: u32, encoded: &[u8]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(encoded.len() + 8);
+    put_uvarint(&mut payload, branch_id as u64);
+    put_uvarint(&mut payload, basket_index as u64);
+    payload.extend_from_slice(encoded);
+    payload
+}
+
+/// Serial sink: compress + write inline on the caller's thread.
+pub struct SerialSink {
+    writer: RecordWriter,
+    engine: Engine,
+    locs: Vec<BasketLoc>,
+}
+
+impl SerialSink {
+    pub fn new(writer: RecordWriter) -> Self {
+        Self { writer, engine: Engine::new(), locs: Vec::new() }
+    }
+
+    pub fn with_dictionary(writer: RecordWriter, dict: Vec<u8>) -> Self {
+        let mut engine = Engine::new();
+        engine.set_dictionary(dict);
+        Self { writer, engine, locs: Vec::new() }
+    }
+
+    /// Hand back the record writer to close the file (after finish()).
+    pub fn into_writer(self) -> RecordWriter {
+        self.writer
+    }
+}
+
+impl BasketSink for SerialSink {
+    fn submit(&mut self, basket: PendingBasket, settings: Settings) -> Result<()> {
+        let uncompressed_len = basket.logical_len() as u32;
+        let encoded = encode_basket(&basket, &settings, &mut self.engine);
+        let payload = frame_basket_record(basket.branch_id, basket.basket_index, &encoded);
+        let off = self.writer.append(RecordKind::Basket, &payload)?;
+        self.locs.push(BasketLoc {
+            branch_id: basket.branch_id,
+            basket_index: basket.basket_index,
+            first_entry: basket.first_entry,
+            n_entries: basket.n_entries,
+            file_offset: off,
+            compressed_len: payload.len() as u32,
+            uncompressed_len,
+        });
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<Vec<BasketLoc>> {
+        Ok(std::mem::take(&mut self.locs))
+    }
+}
+
+/// Per-branch accumulation state.
+struct BranchState {
+    def: BranchDef,
+    data: Vec<u8>,
+    offsets: Vec<u32>,
+    basket_index: u32,
+    first_entry: u64,
+    entries_in_basket: u32,
+}
+
+/// The tree writer.
+pub struct TreeWriter<S: BasketSink> {
+    name: String,
+    branches: Vec<BranchState>,
+    default_settings: Settings,
+    basket_size: usize,
+    n_entries: u64,
+    sink: S,
+    dictionary_offset: Option<u64>,
+}
+
+impl<S: BasketSink> TreeWriter<S> {
+    pub fn new(
+        name: impl Into<String>,
+        branches: Vec<BranchDef>,
+        default_settings: Settings,
+        basket_size: usize,
+        sink: S,
+    ) -> Self {
+        let branches = branches
+            .into_iter()
+            .map(|def| BranchState {
+                def,
+                data: Vec::new(),
+                offsets: Vec::new(),
+                basket_index: 0,
+                first_entry: 0,
+                entries_in_basket: 0,
+            })
+            .collect();
+        Self {
+            name: name.into(),
+            branches,
+            default_settings,
+            basket_size,
+            n_entries: 0,
+            sink,
+            dictionary_offset: None,
+        }
+    }
+
+    pub fn set_dictionary_offset(&mut self, off: u64) {
+        self.dictionary_offset = Some(off);
+    }
+
+    pub fn n_entries(&self) -> u64 {
+        self.n_entries
+    }
+
+    /// Fill one event: one [`Value`] per branch, in schema order.
+    pub fn fill(&mut self, values: &[Value]) -> Result<()> {
+        if values.len() != self.branches.len() {
+            bail!(
+                "fill() got {} values for {} branches",
+                values.len(),
+                self.branches.len()
+            );
+        }
+        for (b, v) in self.branches.iter_mut().zip(values) {
+            if !v.matches(b.def.ty) {
+                bail!("type mismatch on branch '{}'", b.def.name);
+            }
+            v.serialize(&mut b.data);
+            if b.def.ty.is_var() {
+                b.offsets.push(b.data.len() as u32);
+            }
+            b.entries_in_basket += 1;
+        }
+        self.n_entries += 1;
+        // Flush any branch whose basket is full.
+        for i in 0..self.branches.len() {
+            if self.branches[i].data.len() + self.branches[i].offsets.len() * 4
+                >= self.basket_size
+            {
+                self.flush_branch(i)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn flush_branch(&mut self, i: usize) -> Result<()> {
+        let settings = self.branches[i]
+            .def
+            .settings
+            .unwrap_or(self.default_settings);
+        let b = &mut self.branches[i];
+        if b.entries_in_basket == 0 {
+            return Ok(());
+        }
+        let basket = PendingBasket {
+            branch_id: i as u32,
+            basket_index: b.basket_index,
+            first_entry: b.first_entry,
+            n_entries: b.entries_in_basket,
+            data: std::mem::take(&mut b.data),
+            offsets: std::mem::take(&mut b.offsets),
+        };
+        b.basket_index += 1;
+        b.first_entry += b.entries_in_basket as u64;
+        b.entries_in_basket = 0;
+        self.sink.submit(basket, settings)
+    }
+
+    /// Flush remaining baskets and produce the tree metadata. Returns
+    /// (metadata, sink) — the caller closes the file via the sink's writer.
+    pub fn finalize(mut self) -> Result<(TreeMeta, S)> {
+        for i in 0..self.branches.len() {
+            self.flush_branch(i)?;
+        }
+        let mut baskets = self.sink.finish()?;
+        baskets.sort_by_key(|l| (l.branch_id, l.basket_index));
+        let meta = TreeMeta {
+            name: self.name,
+            branches: self.branches.into_iter().map(|b| b.def).collect(),
+            default_settings: self.default_settings,
+            n_entries: self.n_entries,
+            baskets,
+            dictionary_offset: self.dictionary_offset,
+        };
+        Ok((meta, self.sink))
+    }
+}
+
+/// Convenience: write a whole tree serially to `path`.
+pub fn write_tree_serial(
+    path: &Path,
+    name: &str,
+    branches: Vec<BranchDef>,
+    default_settings: Settings,
+    basket_size: usize,
+    events: impl Iterator<Item = Vec<Value>>,
+) -> Result<TreeMeta> {
+    let writer = RecordWriter::create(path)?;
+    let sink = SerialSink::new(writer);
+    let mut tw = TreeWriter::new(name, branches, default_settings, basket_size, sink);
+    for ev in events {
+        tw.fill(&ev)?;
+    }
+    let (meta, sink) = tw.finalize()?;
+    sink.into_writer().close(&meta)?;
+    Ok(meta)
+}

@@ -1,0 +1,167 @@
+//! The XLA-served basket analyzer: wraps compiled `analyzer_<n>.hlo.txt`
+//! executables (one per basket-size bucket) behind a byte-slice API.
+//!
+//! Load path per artifact: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! Text interchange is mandatory — see aot.py's module docstring.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Basket-prefix buckets, must mirror python/compile/aot.py BUCKETS.
+pub const BUCKETS: [usize; 3] = [4096, 32768, 262144];
+/// Feature vector length, must mirror python/compile/model.py.
+pub const NUM_FEATURES: usize = 8;
+
+/// Analyzer features (named view over the raw vector).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Features {
+    pub h_raw: f32,
+    pub h_shuffle: f32,
+    pub h_bitshuffle: f32,
+    pub h_delta: f32,
+    pub rep_raw: f32,
+    pub rep_bitshuffle: f32,
+    pub zero_bitshuffle: f32,
+    pub rep_shuffle: f32,
+}
+
+impl Features {
+    pub fn from_vec(v: &[f32]) -> Result<Self> {
+        if v.len() != NUM_FEATURES {
+            bail!("feature vector has {} entries, expected {NUM_FEATURES}", v.len());
+        }
+        Ok(Self {
+            h_raw: v[0],
+            h_shuffle: v[1],
+            h_bitshuffle: v[2],
+            h_delta: v[3],
+            rep_raw: v[4],
+            rep_bitshuffle: v[5],
+            zero_bitshuffle: v[6],
+            rep_shuffle: v[7],
+        })
+    }
+}
+
+struct BucketExe {
+    size: usize,
+    exe: xla::PjRtLoadedExecutable,
+    /// Reused input staging buffer (basket bytes widened to i32).
+    staging: Vec<i32>,
+}
+
+/// Compiled analyzer over all buckets.
+pub struct Analyzer {
+    buckets: Vec<BucketExe>,
+}
+
+impl Analyzer {
+    /// Load every `analyzer_<n>.hlo.txt` from `artifacts_dir` and compile.
+    pub fn load(client: &xla::PjRtClient, artifacts_dir: &Path) -> Result<Self> {
+        let mut buckets = Vec::new();
+        for &size in BUCKETS.iter() {
+            let path = artifacts_dir.join(format!("analyzer_{size}.hlo.txt"));
+            if !path.exists() {
+                bail!(
+                    "missing artifact {} — run `make artifacts` first",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            buckets.push(BucketExe { size, exe, staging: vec![0i32; size] });
+        }
+        Ok(Self { buckets })
+    }
+
+    /// Smallest bucket size (baskets below this are not analyzed).
+    pub fn min_bucket(&self) -> usize {
+        self.buckets.first().map(|b| b.size).unwrap_or(usize::MAX)
+    }
+
+    /// Analyze the basket prefix: picks the largest bucket that fits,
+    /// widens bytes to i32, executes the XLA computation, returns features.
+    /// Returns None for baskets smaller than the smallest bucket.
+    pub fn analyze(&mut self, basket: &[u8]) -> Result<Option<Features>> {
+        let Some(idx) = self
+            .buckets
+            .iter()
+            .rposition(|b| b.size <= basket.len())
+        else {
+            return Ok(None);
+        };
+        let b = &mut self.buckets[idx];
+        for (dst, src) in b.staging.iter_mut().zip(basket.iter()) {
+            *dst = *src as i32;
+        }
+        let input = xla::Literal::vec1(&b.staging[..]);
+        let result = b.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(Some(Features::from_vec(&values)?))
+    }
+}
+
+/// Pure-rust mirror of the analyzer's math, used (a) to validate the XLA
+/// path in tests and (b) as a fallback when artifacts are absent.
+pub fn analyze_native(basket: &[u8], bucket: usize) -> Option<Features> {
+    use crate::precond;
+    use crate::util::stats::{repeat_fraction, shannon_entropy};
+    if basket.len() < bucket {
+        return None;
+    }
+    let buf = &basket[..bucket];
+    const STRIDE: usize = 4;
+    let shuf = precond::shuffle(buf, STRIDE);
+    let bits = precond::bitshuffle(buf, STRIDE);
+    let delta = precond::delta(buf, STRIDE);
+    let zero = bits.iter().filter(|&&b| b == 0 || b == 255).count() as f32 / bits.len() as f32;
+    Some(Features {
+        h_raw: shannon_entropy(buf) as f32,
+        h_shuffle: shannon_entropy(&shuf) as f32,
+        h_bitshuffle: shannon_entropy(&bits) as f32,
+        h_delta: shannon_entropy(&delta) as f32,
+        rep_raw: repeat_fraction(buf) as f32,
+        rep_bitshuffle: repeat_fraction(&bits) as f32,
+        zero_bitshuffle: zero,
+        rep_shuffle: repeat_fraction(&shuf) as f32,
+    })
+}
+
+/// Pick the largest bucket <= len (shared by native and XLA paths).
+pub fn bucket_for(len: usize) -> Option<usize> {
+    BUCKETS.iter().rev().find(|&&b| b <= len).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(100), None);
+        assert_eq!(bucket_for(4096), Some(4096));
+        assert_eq!(bucket_for(40_000), Some(32_768));
+        assert_eq!(bucket_for(1 << 20), Some(262_144));
+    }
+
+    #[test]
+    fn native_features_separate_offsets_from_noise() {
+        let offsets: Vec<u8> = (1u32..=2048).flat_map(|i| i.to_be_bytes()).collect();
+        let f = analyze_native(&offsets, 4096).unwrap();
+        assert!(f.h_bitshuffle < 0.5 * f.h_raw, "{f:?}");
+
+        let mut rng = crate::util::rng::Rng::new(1);
+        let noise = rng.bytes(8192);
+        let f = analyze_native(&noise, 4096).unwrap();
+        assert!(f.h_bitshuffle > 0.95 * f.h_raw, "{f:?}");
+    }
+
+    // XLA-path tests live in rust/tests/integration_runtime.rs (they need
+    // artifacts/ built).
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled basket-analyzer HLO artifacts and
+//! executes them from the request path. Python is never involved here —
+//! `make artifacts` ran once at build time (see python/compile/aot.py and
+//! DESIGN.md §2).
+
+pub mod analyzer;
+
+pub use analyzer::{Analyzer, Features, BUCKETS, NUM_FEATURES};
+
+use anyhow::Result;
+
+/// Create the CPU PJRT client (one per process; cheap to share by ref).
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    Ok(xla::PjRtClient::cpu()?)
+}

@@ -1,0 +1,300 @@
+//! Bit-level I/O used by the DEFLATE and ZSTD-style codecs.
+//!
+//! DEFLATE packs bits LSB-first within bytes (RFC 1951 §3.1.1); our tANS
+//! stage reuses the same convention. `BitWriter` accumulates into a `u64`
+//! and flushes whole bytes; `BitReader` reads ahead up to 57 bits at a time
+//! with a branch-light refill, which is the single most important structural
+//! choice for inflate throughput.
+
+/// LSB-first bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { out: Vec::with_capacity(cap), acc: 0, nbits: 0 }
+    }
+
+    /// Write the low `n` bits of `bits` (n <= 57).
+    #[inline]
+    pub fn write_bits(&mut self, bits: u64, n: u32) {
+        debug_assert!(n <= 57);
+        debug_assert!(n == 64 || bits < (1u64 << n) || n == 0);
+        self.acc |= bits << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.out.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Pad with zero bits to the next byte boundary.
+    #[inline]
+    pub fn align_byte(&mut self) {
+        if self.nbits > 0 {
+            self.out.push(self.acc as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write raw bytes; the stream must be byte-aligned.
+    pub fn write_bytes(&mut self, data: &[u8]) {
+        debug_assert_eq!(self.nbits, 0, "write_bytes requires byte alignment");
+        self.out.extend_from_slice(data);
+    }
+
+    /// Number of whole bytes emitted so far (excluding pending bits).
+    pub fn byte_len(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Total bits written (incl. pending).
+    pub fn bit_len(&self) -> usize {
+        self.out.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush pending bits (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.out
+    }
+}
+
+/// Error for bit reads past end of input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitReadError;
+
+impl std::fmt::Display for BitReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bit stream exhausted")
+    }
+}
+
+impl std::error::Error for BitReadError {}
+
+/// LSB-first bit reader over a byte slice.
+///
+/// Maintains a 64-bit accumulator; `refill` tops it up to >= 56 bits when
+/// possible. Reads past the end of input yield zero bits but are tracked so
+/// `overflowed()` can reject truncated streams after the fact — this is the
+/// same trick zlib-ng and miniz use to keep the hot loop branch-light.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,  // next byte index to load
+    acc: u64,
+    nbits: u32,
+    /// bits consumed beyond the physical end of `data`
+    over: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        let mut r = Self { data, pos: 0, acc: 0, nbits: 0, over: 0 };
+        r.refill();
+        r
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        // Fast path: 8-byte load.
+        if self.pos + 8 <= self.data.len() && self.nbits <= 56 {
+            let chunk = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into().unwrap());
+            self.acc |= chunk << self.nbits;
+            let take = (63 - self.nbits) / 8;
+            self.pos += take as usize;
+            self.nbits += take * 8;
+            return;
+        }
+        while self.nbits <= 56 {
+            let byte = if self.pos < self.data.len() {
+                let b = self.data[self.pos];
+                self.pos += 1;
+                b
+            } else {
+                self.over += 8;
+                0
+            };
+            self.acc |= (byte as u64) << self.nbits;
+            self.nbits += 8;
+        }
+    }
+
+    /// Peek at the next `n` bits without consuming (n <= 56).
+    #[inline]
+    pub fn peek(&self, n: u32) -> u64 {
+        debug_assert!(n <= 56);
+        self.acc & ((1u64 << n) - 1)
+    }
+
+    /// Consume `n` bits.
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        debug_assert!(n <= self.nbits);
+        self.acc >>= n;
+        self.nbits -= n;
+        if self.nbits < 56 {
+            self.refill();
+        }
+    }
+
+    /// Read `n` bits (n <= 56).
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> u64 {
+        let v = self.peek(n);
+        self.consume(n);
+        v
+    }
+
+    /// Discard bits to the next byte boundary (relative to stream start).
+    pub fn align_byte(&mut self) {
+        let rem = (self.bit_pos() % 8) as u32;
+        if rem != 0 {
+            self.consume(8 - rem);
+        }
+    }
+
+    /// Bits consumed from the start of the stream.
+    pub fn bit_pos(&self) -> usize {
+        (self.pos + (self.over / 8) as usize) * 8 - self.nbits as usize
+    }
+
+    /// Byte position if aligned.
+    pub fn byte_pos(&self) -> usize {
+        let bp = self.bit_pos();
+        debug_assert_eq!(bp % 8, 0);
+        bp / 8
+    }
+
+    /// Copy `n` raw bytes (requires byte alignment). Returns Err on overrun.
+    pub fn read_bytes(&mut self, out: &mut [u8]) -> Result<(), BitReadError> {
+        self.align_byte();
+        let start = self.bit_pos() / 8;
+        if start + out.len() > self.data.len() {
+            return Err(BitReadError);
+        }
+        out.copy_from_slice(&self.data[start..start + out.len()]);
+        // Reset the accumulator past the copied region.
+        self.pos = start + out.len();
+        self.acc = 0;
+        self.nbits = 0;
+        self.over = 0;
+        self.refill();
+        Ok(())
+    }
+
+    /// True if any read consumed synthetic (past-the-end) bits.
+    #[inline]
+    pub fn overflowed(&self) -> bool {
+        // Some of the synthetic bits may still sit unconsumed in the
+        // accumulator; only count them once consumed.
+        let synthetic_in_acc = self.over.min(self.nbits);
+        self.over > synthetic_in_acc
+            || (self.over > 0 && self.bit_pos() > self.data.len() * 8)
+    }
+
+    /// Remaining whole input bits (not counting synthetic zeros).
+    pub fn bits_remaining(&self) -> usize {
+        (self.data.len() * 8).saturating_sub(self.bit_pos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFF, 8);
+        w.write_bits(0, 1);
+        w.write_bits(0b111111, 6);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_bits(8), 0xFF);
+        assert_eq!(r.read_bits(1), 0);
+        assert_eq!(r.read_bits(6), 0b111111);
+        assert!(!r.overflowed());
+    }
+
+    #[test]
+    fn roundtrip_random_widths() {
+        let mut rng = Rng::new(0xBEEF);
+        for _ in 0..200 {
+            let n = rng.range(1, 300);
+            let mut widths = Vec::with_capacity(n);
+            let mut values = Vec::with_capacity(n);
+            let mut w = BitWriter::new();
+            for _ in 0..n {
+                let width = rng.range(1, 56) as u32;
+                let val = rng.next_u64() & ((1u64 << width) - 1);
+                widths.push(width);
+                values.push(val);
+                w.write_bits(val, width);
+            }
+            let buf = w.finish();
+            let mut r = BitReader::new(&buf);
+            for (width, val) in widths.iter().zip(&values) {
+                assert_eq!(r.read_bits(*width), *val);
+            }
+        }
+    }
+
+    #[test]
+    fn align_and_bytes() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1, 1);
+        w.align_byte();
+        w.write_bytes(b"abc");
+        let buf = w.finish();
+        assert_eq!(buf.len(), 4);
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(1), 1);
+        let mut out = [0u8; 3];
+        r.read_bytes(&mut out).unwrap();
+        assert_eq!(&out, b"abc");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let buf = vec![0xAAu8; 2];
+        let mut r = BitReader::new(&buf);
+        let _ = r.read_bits(16);
+        assert!(!r.overflowed());
+        let _ = r.read_bits(16);
+        assert!(r.overflowed());
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let buf = vec![0b1010_1010u8];
+        let r = BitReader::new(&buf);
+        assert_eq!(r.peek(4), 0b1010);
+        assert_eq!(r.peek(8), 0b1010_1010);
+    }
+
+    #[test]
+    fn bit_pos_tracks() {
+        let buf = vec![0u8; 16];
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.bit_pos(), 0);
+        r.read_bits(5);
+        assert_eq!(r.bit_pos(), 5);
+        r.align_byte();
+        assert_eq!(r.bit_pos(), 8);
+        r.read_bits(16);
+        assert_eq!(r.bit_pos(), 24);
+    }
+}

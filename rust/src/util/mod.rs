@@ -1,0 +1,8 @@
+//! Shared low-level utilities: deterministic RNG, bit I/O, varints,
+//! statistics, timing.
+
+pub mod bitio;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod varint;

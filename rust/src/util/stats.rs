@@ -1,0 +1,155 @@
+//! Small statistics helpers shared by the bench harness, the adaptive
+//! planner's pure-rust fallback heuristics, and tests.
+
+/// Shannon entropy (bits/byte) of a byte buffer.
+pub fn shannon_entropy(data: &[u8]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let mut hist = [0u64; 256];
+    for &b in data {
+        hist[b as usize] += 1;
+    }
+    entropy_from_hist(&hist, data.len() as u64)
+}
+
+/// Shannon entropy (bits/symbol) from a histogram with `total` counts.
+pub fn entropy_from_hist(hist: &[u64; 256], total: u64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let inv = 1.0 / total as f64;
+    let mut h = 0.0;
+    for &c in hist.iter() {
+        if c > 0 {
+            let p = c as f64 * inv;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Byte histogram.
+pub fn byte_histogram(data: &[u8]) -> [u64; 256] {
+    let mut hist = [0u64; 256];
+    for &b in data {
+        hist[b as usize] += 1;
+    }
+    hist
+}
+
+/// Fraction of positions where `data[i] == data[i-1]` — a cheap run proxy.
+pub fn repeat_fraction(data: &[u8]) -> f64 {
+    if data.len() < 2 {
+        return 0.0;
+    }
+    let reps = data.windows(2).filter(|w| w[0] == w[1]).count();
+    reps as f64 / (data.len() - 1) as f64
+}
+
+/// Summary statistics over a set of f64 samples (bench harness).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let median = percentile_sorted(&sorted, 50.0);
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0);
+        Self {
+            n,
+            mean,
+            median,
+            min: sorted[0],
+            max: sorted[n - 1],
+            mad,
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Percentile (0..=100) of an ascending-sorted slice, linear interpolation.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_extremes() {
+        assert_eq!(shannon_entropy(&[]), 0.0);
+        assert_eq!(shannon_entropy(&[7u8; 4096]), 0.0);
+        // All 256 values equally often -> 8 bits.
+        let all: Vec<u8> = (0..=255u8).cycle().take(256 * 16).collect();
+        assert!((shannon_entropy(&all) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_two_symbols() {
+        let half: Vec<u8> = std::iter::repeat(0u8)
+            .take(512)
+            .chain(std::iter::repeat(1u8).take(512))
+            .collect();
+        assert!((shannon_entropy(&half) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeat_fraction_bounds() {
+        assert_eq!(repeat_fraction(&[1, 1, 1, 1]), 1.0);
+        assert_eq!(repeat_fraction(&[1, 2, 3, 4]), 0.0);
+        assert_eq!(repeat_fraction(&[5]), 0.0);
+    }
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!(s.mean > 3.0); // pulled by outlier
+        assert!(s.mad <= 2.0); // robust to outlier
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+        assert!((percentile_sorted(&v, 50.0) - 5.0).abs() < 1e-12);
+    }
+}

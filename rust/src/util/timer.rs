@@ -1,0 +1,68 @@
+//! Wall-clock timing helpers for the bench harness and pipeline metrics.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning (result, elapsed).
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Throughput in MB/s (decimal megabytes, as the paper's figures use).
+pub fn mb_per_s(bytes: usize, elapsed: Duration) -> f64 {
+    if elapsed.is_zero() {
+        return f64::INFINITY;
+    }
+    bytes as f64 / 1e6 / elapsed.as_secs_f64()
+}
+
+/// A simple accumulating stopwatch, usable across pipeline stages.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Stopwatch {
+    total: Duration,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn measure<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.total += t0.elapsed();
+        r
+    }
+
+    pub fn add(&mut self, d: Duration) {
+        self.total += d;
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mbps_math() {
+        let v = mb_per_s(10_000_000, Duration::from_secs(1));
+        assert!((v - 10.0).abs() < 1e-9);
+        assert!(mb_per_s(1, Duration::ZERO).is_infinite());
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.add(Duration::from_millis(5));
+        sw.add(Duration::from_millis(7));
+        assert_eq!(sw.total(), Duration::from_millis(12));
+        let out = sw.measure(|| 41 + 1);
+        assert_eq!(out, 42);
+        assert!(sw.total() >= Duration::from_millis(12));
+    }
+}

@@ -1,0 +1,171 @@
+//! LEB128-style varints + fixed-width big-endian helpers.
+//!
+//! `rfile` serializes in big-endian (network order) to mirror ROOT's disk
+//! layout; metadata blocks use varints where ROOT would use version-dependent
+//! fixed widths.
+
+/// Append an LEB128 varint.
+pub fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read an LEB128 varint; returns (value, bytes consumed) or None on
+/// truncation / overlong (>10 bytes) encodings.
+pub fn get_uvarint(data: &[u8]) -> Option<(u64, usize)> {
+    let mut v: u64 = 0;
+    for (i, &byte) in data.iter().enumerate().take(10) {
+        v |= ((byte & 0x7F) as u64) << (7 * i);
+        if byte & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+    }
+    None
+}
+
+/// Big-endian fixed-width writes (ROOT disk convention).
+pub fn put_u16_be(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+pub fn put_u32_be(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+pub fn put_u64_be(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+pub fn get_u16_be(data: &[u8]) -> Option<u16> {
+    Some(u16::from_be_bytes(data.get(..2)?.try_into().ok()?))
+}
+pub fn get_u32_be(data: &[u8]) -> Option<u32> {
+    Some(u32::from_be_bytes(data.get(..4)?.try_into().ok()?))
+}
+pub fn get_u64_be(data: &[u8]) -> Option<u64> {
+    Some(u64::from_be_bytes(data.get(..8)?.try_into().ok()?))
+}
+
+/// A cursor for sequential decoding of metadata blocks.
+pub struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0 }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    pub fn uvarint(&mut self) -> Option<u64> {
+        let (v, n) = get_uvarint(&self.data[self.pos..])?;
+        self.pos += n;
+        Some(v)
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        let v = *self.data.get(self.pos)?;
+        self.pos += 1;
+        Some(v)
+    }
+
+    pub fn u16_be(&mut self) -> Option<u16> {
+        let v = get_u16_be(&self.data[self.pos..])?;
+        self.pos += 2;
+        Some(v)
+    }
+
+    pub fn u32_be(&mut self) -> Option<u32> {
+        let v = get_u32_be(&self.data[self.pos..])?;
+        self.pos += 4;
+        Some(v)
+    }
+
+    pub fn u64_be(&mut self) -> Option<u64> {
+        let v = get_u64_be(&self.data[self.pos..])?;
+        self.pos += 8;
+        Some(v)
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Option<&'a [u8]> {
+        let v = self.data.get(self.pos..self.pos + n)?;
+        self.pos += n;
+        Some(v)
+    }
+
+    /// Length-prefixed (uvarint) byte string.
+    pub fn lp_bytes(&mut self) -> Option<&'a [u8]> {
+        let n = self.uvarint()? as usize;
+        self.bytes(n)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn lp_str(&mut self) -> Option<&'a str> {
+        std::str::from_utf8(self.lp_bytes()?).ok()
+    }
+}
+
+/// Append a length-prefixed byte string.
+pub fn put_lp_bytes(out: &mut Vec<u8>, data: &[u8]) {
+    put_uvarint(out, data.len() as u64);
+    out.extend_from_slice(data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uvarint_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, 0xFFFF, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_uvarint(&mut buf, v);
+            let (got, n) = get_uvarint(&buf).unwrap();
+            assert_eq!(got, v);
+            assert_eq!(n, buf.len());
+        }
+    }
+
+    #[test]
+    fn uvarint_truncated_rejected() {
+        assert!(get_uvarint(&[0x80]).is_none());
+        assert!(get_uvarint(&[]).is_none());
+        assert!(get_uvarint(&[0x80; 11]).is_none());
+    }
+
+    #[test]
+    fn cursor_sequence() {
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 300);
+        put_u32_be(&mut buf, 0xDEADBEEF);
+        put_lp_bytes(&mut buf, b"tree");
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.uvarint(), Some(300));
+        assert_eq!(c.u32_be(), Some(0xDEADBEEF));
+        assert_eq!(c.lp_str(), Some("tree"));
+        assert_eq!(c.remaining(), 0);
+        assert!(c.u8().is_none());
+    }
+
+    #[test]
+    fn be_roundtrip() {
+        let mut buf = Vec::new();
+        put_u16_be(&mut buf, 0x1234);
+        put_u64_be(&mut buf, 0x0102030405060708);
+        assert_eq!(get_u16_be(&buf), Some(0x1234));
+        assert_eq!(get_u64_be(&buf[2..]), Some(0x0102030405060708));
+    }
+}

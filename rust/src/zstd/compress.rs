@@ -1,0 +1,530 @@
+//! RZS1 block format: the ZSTD-style container combining the large-window
+//! LZ parse with FSE entropy coding of literals and sequence codes.
+//!
+//! Layout (all integers uvarint unless noted):
+//!
+//! ```text
+//! [raw_len][n_seq]
+//! literals:  [mode u8] 0=raw:   [len][bytes]
+//!                      1=rle:   [len][byte]
+//!                      2=fse:   [len][norm table][state][payload_len][payload]
+//! if n_seq > 0, three code sections (ll, ml, of), each:
+//!            [mode u8] 0=raw:   [codes as bytes]        (len = n_seq)
+//!                      1=rle:   [code byte]
+//!                      2=fse:   [norm table][state][payload_len][payload]
+//! extras:    [payload_len][bit payload]   (ll, ml, of extra bits per seq)
+//! ```
+//!
+//! Value coding: `v` maps to code `k` = bit-length of `v` (0 → code 0),
+//! with `k-1` extra bits storing `v - 2^(k-1)`. Sequence fields: ll = lit
+//! run, ml = match_len - 3, of = offset - 1.
+
+use super::fse;
+use super::matcher::{ChainMatcher, SearchParams, Seq, MIN_MATCH};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::varint::{put_uvarint, Cursor};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ZstdError(pub &'static str);
+
+impl std::fmt::Display for ZstdError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rzs1: {}", self.0)
+    }
+}
+impl std::error::Error for ZstdError {}
+
+const E: fn(&'static str) -> ZstdError = ZstdError;
+
+/// Max symbols for the code alphabets (value codes ≤ 32).
+const CODE_ALPHABET: usize = 33;
+
+#[inline]
+pub(crate) fn value_code(v: u32) -> (u16, u32, u32) {
+    if v == 0 {
+        (0, 0, 0)
+    } else {
+        let k = 32 - v.leading_zeros();
+        (k as u16, v - (1 << (k - 1)), k - 1)
+    }
+}
+
+#[inline]
+pub(crate) fn value_decode(code: u16, extra: u32) -> u32 {
+    if code == 0 {
+        0
+    } else {
+        (1 << (code - 1)) + extra
+    }
+}
+
+/// Reusable encoder state.
+#[derive(Default)]
+pub struct ZstdEncoder {
+    matcher: ChainMatcher,
+    seqs: Vec<Seq>,
+    literals: Vec<u8>,
+    concat: Vec<u8>,
+}
+
+impl ZstdEncoder {
+    pub fn new() -> Self {
+        Self {
+            matcher: ChainMatcher::new(),
+            ..Default::default()
+        }
+    }
+
+    /// Compress without a dictionary.
+    pub fn compress(&mut self, src: &[u8], level: u8) -> Vec<u8> {
+        self.compress_dict(src, &[], level)
+    }
+
+    /// Compress with a dictionary prefix (decoder must supply the same).
+    pub fn compress_dict(&mut self, src: &[u8], dict: &[u8], level: u8) -> Vec<u8> {
+        let params = SearchParams::for_level(level);
+        let start = if dict.is_empty() {
+            self.matcher.parse(src, 0, &params, &mut self.seqs, &mut self.literals);
+            0
+        } else {
+            self.concat.clear();
+            self.concat.extend_from_slice(dict);
+            self.concat.extend_from_slice(src);
+            self.matcher.parse(&self.concat, dict.len(), &params, &mut self.seqs, &mut self.literals);
+            dict.len()
+        };
+        let _ = start;
+
+        let mut out = Vec::with_capacity(src.len() / 2 + 64);
+        put_uvarint(&mut out, src.len() as u64);
+        put_uvarint(&mut out, self.seqs.len() as u64);
+
+        // Literals section.
+        write_byte_section(&mut out, &self.literals);
+
+        if !self.seqs.is_empty() {
+            // Code streams.
+            let mut ll = Vec::with_capacity(self.seqs.len());
+            let mut ml = Vec::with_capacity(self.seqs.len());
+            let mut of = Vec::with_capacity(self.seqs.len());
+            let mut extras = BitWriter::new();
+            for s in &self.seqs {
+                let (lc, le, ln) = value_code(s.lit_len);
+                let (mc, me, mn) = value_code(s.match_len - MIN_MATCH as u32);
+                let (oc, oe, on) = value_code(s.offset - 1);
+                ll.push(lc);
+                ml.push(mc);
+                of.push(oc);
+                extras.write_bits(le as u64, ln);
+                extras.write_bits(me as u64, mn);
+                extras.write_bits(oe as u64, on);
+            }
+            write_code_section(&mut out, &ll);
+            write_code_section(&mut out, &ml);
+            write_code_section(&mut out, &of);
+            let eb = extras.finish();
+            put_uvarint(&mut out, eb.len() as u64);
+            out.extend_from_slice(&eb);
+        }
+        out
+    }
+}
+
+/// One-shot helpers.
+pub fn zstd_compress(src: &[u8], level: u8) -> Vec<u8> {
+    ZstdEncoder::new().compress(src, level)
+}
+
+pub fn zstd_compress_dict(src: &[u8], dict: &[u8], level: u8) -> Vec<u8> {
+    ZstdEncoder::new().compress_dict(src, dict, level)
+}
+
+const MODE_RAW: u8 = 0;
+const MODE_RLE: u8 = 1;
+const MODE_FSE: u8 = 2;
+
+/// Literals: choose raw / rle / fse by measured size.
+fn write_byte_section(out: &mut Vec<u8>, data: &[u8]) {
+    if data.is_empty() {
+        out.push(MODE_RAW);
+        put_uvarint(out, 0);
+        return;
+    }
+    if data.iter().all(|&b| b == data[0]) {
+        out.push(MODE_RLE);
+        put_uvarint(out, data.len() as u64);
+        out.push(data[0]);
+        return;
+    }
+    // Try FSE.
+    let mut hist = vec![0u32; 256];
+    for &b in data {
+        hist[b as usize] += 1;
+    }
+    let present = hist.iter().filter(|&&c| c > 0).count();
+    if present >= 2 && data.len() >= 32 {
+        let log = fse::optimal_table_log(data.len(), present, 11);
+        if let Ok(norm) = fse::normalize_counts(&hist, data.len() as u64, log) {
+            if let Ok(enc) = fse::EncTable::new(&norm, log) {
+                let (payload, state) = enc.encode(data.iter().map(|&b| b as u16));
+                let mut section = Vec::with_capacity(payload.len() + 64);
+                fse::write_norm(&mut section, &norm, log);
+                put_uvarint(&mut section, state as u64);
+                put_uvarint(&mut section, payload.len() as u64);
+                section.extend_from_slice(&payload);
+                if section.len() + 2 < data.len() {
+                    out.push(MODE_FSE);
+                    put_uvarint(out, data.len() as u64);
+                    out.extend_from_slice(&section);
+                    return;
+                }
+            }
+        }
+    }
+    out.push(MODE_RAW);
+    put_uvarint(out, data.len() as u64);
+    out.extend_from_slice(data);
+}
+
+/// Code stream (u16 codes < CODE_ALPHABET); length is known (n_seq).
+fn write_code_section(out: &mut Vec<u8>, codes: &[u16]) {
+    debug_assert!(!codes.is_empty());
+    if codes.iter().all(|&c| c == codes[0]) {
+        out.push(MODE_RLE);
+        out.push(codes[0] as u8);
+        return;
+    }
+    let mut hist = vec![0u32; CODE_ALPHABET];
+    for &c in codes {
+        hist[c as usize] += 1;
+    }
+    let present = hist.iter().filter(|&&c| c > 0).count();
+    if codes.len() >= 16 {
+        let log = fse::optimal_table_log(codes.len(), present, 9);
+        if let Ok(norm) = fse::normalize_counts(&hist, codes.len() as u64, log) {
+            if let Ok(enc) = fse::EncTable::new(&norm, log) {
+                let (payload, state) = enc.encode(codes.iter().copied());
+                let mut section = Vec::with_capacity(payload.len() + 32);
+                fse::write_norm(&mut section, &norm, log);
+                put_uvarint(&mut section, state as u64);
+                put_uvarint(&mut section, payload.len() as u64);
+                section.extend_from_slice(&payload);
+                if section.len() < codes.len() {
+                    out.push(MODE_FSE);
+                    out.extend_from_slice(&section);
+                    return;
+                }
+            }
+        }
+    }
+    out.push(MODE_RAW);
+    for &c in codes {
+        out.push(c as u8);
+    }
+}
+
+fn read_byte_section(c: &mut Cursor, max_out: usize) -> Result<Vec<u8>, ZstdError> {
+    let mode = c.u8().ok_or(E("truncated literal mode"))?;
+    let len = c.uvarint().ok_or(E("truncated literal len"))? as usize;
+    if len > max_out {
+        return Err(E("literals exceed output limit"));
+    }
+    match mode {
+        MODE_RAW => {
+            let bytes = c.bytes(len).ok_or(E("truncated raw literals"))?;
+            Ok(bytes.to_vec())
+        }
+        MODE_RLE => {
+            let b = c.u8().ok_or(E("truncated rle literal"))?;
+            Ok(vec![b; len])
+        }
+        MODE_FSE => {
+            let (norm, log) = fse::read_norm(c).map_err(|_| E("bad literal table"))?;
+            let state = c.uvarint().ok_or(E("truncated literal state"))? as u16;
+            let plen = c.uvarint().ok_or(E("truncated literal payload len"))? as usize;
+            let payload = c.bytes(plen).ok_or(E("truncated literal payload"))?;
+            let dec = fse::DecTable::new(&norm, log).map_err(|_| E("bad literal table"))?;
+            let mut r = BitReader::new(payload);
+            let mut syms = Vec::with_capacity(len);
+            dec.decode(&mut r, state, len, &mut syms)
+                .map_err(|_| E("literal decode failed"))?;
+            Ok(syms.into_iter().map(|s| s as u8).collect())
+        }
+        _ => Err(E("bad literal mode")),
+    }
+}
+
+fn read_code_section(c: &mut Cursor, n: usize) -> Result<Vec<u16>, ZstdError> {
+    let mode = c.u8().ok_or(E("truncated code mode"))?;
+    match mode {
+        MODE_RAW => {
+            let bytes = c.bytes(n).ok_or(E("truncated raw codes"))?;
+            let codes: Vec<u16> = bytes.iter().map(|&b| b as u16).collect();
+            if codes.iter().any(|&v| v as usize >= CODE_ALPHABET) {
+                return Err(E("code out of range"));
+            }
+            Ok(codes)
+        }
+        MODE_RLE => {
+            let b = c.u8().ok_or(E("truncated rle code"))?;
+            if b as usize >= CODE_ALPHABET {
+                return Err(E("code out of range"));
+            }
+            Ok(vec![b as u16; n])
+        }
+        MODE_FSE => {
+            let (norm, log) = fse::read_norm(c).map_err(|_| E("bad code table"))?;
+            if norm.len() > CODE_ALPHABET {
+                return Err(E("code alphabet too large"));
+            }
+            let state = c.uvarint().ok_or(E("truncated code state"))? as u16;
+            let plen = c.uvarint().ok_or(E("truncated code payload len"))? as usize;
+            let payload = c.bytes(plen).ok_or(E("truncated code payload"))?;
+            let dec = fse::DecTable::new(&norm, log).map_err(|_| E("bad code table"))?;
+            let mut r = BitReader::new(payload);
+            let mut syms = Vec::with_capacity(n);
+            dec.decode(&mut r, state, n, &mut syms)
+                .map_err(|_| E("code decode failed"))?;
+            Ok(syms)
+        }
+        _ => Err(E("bad code mode")),
+    }
+}
+
+/// Decompress an RZS1 block (optionally with the dictionary used at
+/// compression time). `max_out` bounds memory for untrusted input.
+pub fn zstd_decompress(src: &[u8], max_out: usize) -> Result<Vec<u8>, ZstdError> {
+    zstd_decompress_dict(src, &[], max_out)
+}
+
+pub fn zstd_decompress_dict(src: &[u8], dict: &[u8], max_out: usize) -> Result<Vec<u8>, ZstdError> {
+    let mut c = Cursor::new(src);
+    let raw_len = c.uvarint().ok_or(E("truncated raw len"))? as usize;
+    if raw_len > max_out {
+        return Err(E("output limit exceeded"));
+    }
+    let n_seq = c.uvarint().ok_or(E("truncated n_seq"))? as usize;
+    if n_seq > raw_len.max(1) {
+        return Err(E("implausible sequence count"));
+    }
+    let literals = read_byte_section(&mut c, raw_len)?;
+
+    let mut out = Vec::with_capacity(dict.len() + raw_len);
+    out.extend_from_slice(dict);
+    let mut lit_pos = 0usize;
+
+    if n_seq > 0 {
+        let ll = read_code_section(&mut c, n_seq)?;
+        let ml = read_code_section(&mut c, n_seq)?;
+        let of = read_code_section(&mut c, n_seq)?;
+        let elen = c.uvarint().ok_or(E("truncated extras len"))? as usize;
+        let extras = c.bytes(elen).ok_or(E("truncated extras"))?;
+        let mut r = BitReader::new(extras);
+        let limit = dict.len() + raw_len;
+        for k in 0..n_seq {
+            let lit_len = read_value(&mut r, ll[k])? as usize;
+            let match_len = read_value(&mut r, ml[k])? as usize + MIN_MATCH;
+            let offset = read_value(&mut r, of[k])? as usize + 1;
+            if r.overflowed() {
+                return Err(E("extras exhausted"));
+            }
+            if lit_pos + lit_len > literals.len() {
+                return Err(E("literal underflow"));
+            }
+            if out.len() + lit_len + match_len > limit {
+                return Err(E("output overflow"));
+            }
+            out.extend_from_slice(&literals[lit_pos..lit_pos + lit_len]);
+            lit_pos += lit_len;
+            if offset > out.len() {
+                return Err(E("offset beyond output"));
+            }
+            copy_match(&mut out, offset, match_len);
+        }
+    }
+    // Trailing literals.
+    let rest = &literals[lit_pos..];
+    if out.len() + rest.len() != dict.len() + raw_len {
+        return Err(E("size mismatch"));
+    }
+    out.extend_from_slice(rest);
+    out.drain(..dict.len());
+    Ok(out)
+}
+
+#[inline]
+fn read_value(r: &mut BitReader, code: u16) -> Result<u32, ZstdError> {
+    if code == 0 {
+        return Ok(0);
+    }
+    if code > 32 {
+        return Err(E("code out of range"));
+    }
+    let extra = r.read_bits((code - 1) as u32) as u32;
+    Ok(value_decode(code, extra))
+}
+
+#[inline]
+fn copy_match(out: &mut Vec<u8>, dist: usize, len: usize) {
+    let start = out.len() - dist;
+    if dist >= len {
+        out.extend_from_within(start..start + len);
+    } else if dist == 1 {
+        let b = out[out.len() - 1];
+        let target = out.len() + len;
+        out.resize(target, b);
+    } else {
+        let mut rem = len;
+        let mut src = start;
+        while rem > 0 {
+            let chunk = rem.min(out.len() - src);
+            out.extend_from_within(src..src + chunk);
+            src += chunk;
+            rem -= chunk;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const MAX: usize = 64 << 20;
+
+    fn roundtrip(data: &[u8], level: u8) {
+        let c = zstd_compress(data, level);
+        let d = zstd_decompress(&c, MAX).expect("decompress");
+        assert_eq!(d, data, "level {level} n={}", data.len());
+    }
+
+    #[test]
+    fn value_code_roundtrip() {
+        for v in [0u32, 1, 2, 3, 7, 8, 100, 65_535, 1 << 20, u32::MAX / 2] {
+            let (c, e, n) = value_code(v);
+            assert!(e < (1u32 << n) || n == 0);
+            assert_eq!(value_decode(c, e), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_corpus() {
+        let mut rng = Rng::new(0x257D);
+        let mut corpus: Vec<Vec<u8>> = vec![
+            vec![],
+            b"z".to_vec(),
+            b"zstd zstd zstd zstd zstd".to_vec(),
+            vec![0u8; 150_000],
+        ];
+        corpus.push((0u32..40_000).flat_map(|i| i.to_be_bytes()).collect());
+        corpus.push(rng.bytes(80_000));
+        let mut text = Vec::new();
+        while text.len() < 90_000 {
+            text.extend_from_slice(b"Zstandard: How Facebook increased compression speed. ");
+        }
+        corpus.push(text);
+        for data in &corpus {
+            for level in [1u8, 5, 9] {
+                roundtrip(data, level);
+            }
+        }
+    }
+
+    #[test]
+    fn beats_or_matches_window_limited_codecs_on_long_range() {
+        // Long-range redundancy at 100 KiB distance: inside our 256K window.
+        let mut rng = Rng::new(0x257E);
+        let chunk = rng.bytes(30_000);
+        let mut data = Vec::new();
+        data.extend_from_slice(&chunk);
+        data.extend(rng.bytes(90_000));
+        data.extend_from_slice(&chunk);
+        let z = zstd_compress(&data, 6);
+        let g = crate::deflate::zlib_compress(&data, crate::deflate::Flavor::Cloudflare, 6);
+        assert!(
+            z.len() as f64 <= 0.85 * g.len() as f64,
+            "zstd {} vs zlib {}",
+            z.len(),
+            g.len()
+        );
+        roundtrip(&data, 6);
+    }
+
+    #[test]
+    fn dictionary_helps_small_buffers() {
+        // Paper §2.3: dictionaries raise ratio "particularly when
+        // compressing a small amount of data (such as a few hundred bytes)".
+        let mut rng = Rng::new(0x257F);
+        let dict: Vec<u8> = {
+            let mut d = Vec::new();
+            while d.len() < 4096 {
+                d.extend_from_slice(b"\"Muon_pt\":[],\"Muon_eta\":[],\"Jet_mass\":[]");
+                d.extend_from_slice(&rng.bytes(4));
+            }
+            d
+        };
+        let small = b"\"Muon_pt\":[],\"Muon_eta\":[],\"Jet_mass\":[1.5]".to_vec();
+        let plain = zstd_compress_dict(&small, &[], 6);
+        let with_dict = zstd_compress_dict(&small, &dict, 6);
+        assert!(
+            with_dict.len() < plain.len(),
+            "dict {} vs plain {}",
+            with_dict.len(),
+            plain.len()
+        );
+        let d = zstd_decompress_dict(&with_dict, &dict, MAX).unwrap();
+        assert_eq!(d, small);
+        // Wrong dictionary must not silently succeed with wrong content.
+        let wrong = rng.bytes(dict.len());
+        match zstd_decompress_dict(&with_dict, &wrong, MAX) {
+            Ok(d2) => assert_ne!(d2, small),
+            Err(_) => {}
+        }
+    }
+
+    #[test]
+    fn fuzz_roundtrip() {
+        let mut rng = Rng::new(0x2580);
+        for round in 0..50 {
+            let n = rng.range(0, 40_000);
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                match rng.range(0, 3) {
+                    0 => {
+                        let b = (rng.next_u64() & 0xFF) as u8;
+                        let r = rng.range(1, 400);
+                        data.extend(std::iter::repeat(b).take(r));
+                    }
+                    1 => data.extend_from_slice(b"CaloJet_"),
+                    2 => data.extend_from_slice(&rng.next_u32().to_be_bytes()),
+                    _ => {
+                        let k = rng.range(1, 100);
+                        let b = rng.bytes(k);
+                        data.extend_from_slice(&b);
+                    }
+                }
+            }
+            data.truncate(n);
+            roundtrip(&data, [1u8, 3, 6, 9][round % 4]);
+        }
+    }
+
+    #[test]
+    fn garbage_never_panics() {
+        let mut rng = Rng::new(0x2581);
+        for _ in 0..400 {
+            let n = rng.range(0, 400);
+            let garbage = rng.bytes(n);
+            let _ = zstd_decompress(&garbage, 1 << 20);
+        }
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let data: Vec<u8> = (0u32..5000).flat_map(|i| i.to_be_bytes()).collect();
+        let c = zstd_compress(&data, 6);
+        for cut in [1, c.len() / 3, c.len() - 1] {
+            assert!(zstd_decompress(&c[..cut], MAX).is_err(), "cut {cut}");
+        }
+    }
+}

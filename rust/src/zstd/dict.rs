@@ -1,0 +1,198 @@
+//! Dictionary training for the ZSTD-style codec (paper §2.3 and §3 future
+//! work: "the dictionary generation found in the ZSTD could provide
+//! significant gains in compression ratios ... the generated dictionaries
+//! are useable for ZLIB and LZ4 as well. Work, however, is needed, to
+//! better understand the optimal dictionary sizes").
+//!
+//! Training is a simplified COVER-style procedure: count frequent k-byte
+//! shingles across the sample corpus, score candidate segments by the sum
+//! of their shingle frequencies (favoring segments that recur across
+//! samples), and concatenate the best non-overlapping segments up to the
+//! dictionary budget. The most valuable content goes at the *end* of the
+//! dictionary, nearest the window, where short offsets reach it — the same
+//! layout logic zstd uses.
+
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Shingle width for frequency analysis.
+const K: usize = 8;
+/// Candidate segment length.
+const SEG: usize = 64;
+
+/// Train a dictionary of at most `budget` bytes from `samples`.
+///
+/// Deterministic for a given sample set and budget.
+pub fn train(samples: &[&[u8]], budget: usize) -> Vec<u8> {
+    if budget == 0 {
+        return Vec::new();
+    }
+    // 1. Count shingle frequencies (hash -> count), sampled for large inputs.
+    let mut counts: HashMap<u64, u32> = HashMap::new();
+    let total_len: usize = samples.iter().map(|s| s.len()).sum();
+    let step = (total_len / 2_000_000).max(1); // cap work on huge corpora
+    for s in samples {
+        if s.len() < K {
+            continue;
+        }
+        let mut i = 0;
+        while i + K <= s.len() {
+            let h = shingle_hash(&s[i..i + K]);
+            *counts.entry(h).or_insert(0) += 1;
+            i += step;
+        }
+    }
+
+    // 2. Score candidate segments from each sample.
+    #[derive(Clone)]
+    struct Cand {
+        score: u64,
+        sample: usize,
+        pos: usize,
+    }
+    let mut cands: Vec<Cand> = Vec::new();
+    for (si, s) in samples.iter().enumerate() {
+        if s.len() < SEG {
+            continue;
+        }
+        let mut pos = 0usize;
+        while pos + SEG <= s.len() {
+            let mut score = 0u64;
+            let mut j = pos;
+            while j + K <= pos + SEG {
+                if let Some(&c) = counts.get(&shingle_hash(&s[j..j + K])) {
+                    // Only repeated shingles contribute.
+                    if c > 1 {
+                        score += c as u64;
+                    }
+                }
+                j += 4;
+            }
+            cands.push(Cand { score, sample: si, pos });
+            pos += SEG / 2;
+        }
+    }
+    cands.sort_by(|a, b| b.score.cmp(&a.score).then(a.sample.cmp(&b.sample)).then(a.pos.cmp(&b.pos)));
+
+    // 3. Greedily take the best segments, dropping near-duplicates.
+    let mut dict_segments: Vec<&[u8]> = Vec::new();
+    let mut taken = 0usize;
+    let mut seen: HashMap<u64, ()> = HashMap::new();
+    for c in &cands {
+        if taken + SEG > budget {
+            break;
+        }
+        let seg = &samples[c.sample][c.pos..c.pos + SEG];
+        let key = shingle_hash(seg);
+        if seen.contains_key(&key) {
+            continue;
+        }
+        seen.insert(key, ());
+        dict_segments.push(seg);
+        taken += SEG;
+    }
+
+    // 4. Most valuable content last (closest to the window).
+    dict_segments.reverse();
+    let mut dict = Vec::with_capacity(taken);
+    for seg in dict_segments {
+        dict.extend_from_slice(seg);
+    }
+    dict
+}
+
+/// Train from equally-sized synthetic baskets (convenience used by the
+/// dict-study bench).
+pub fn train_from_corpus(corpus: &[Vec<u8>], budget: usize) -> Vec<u8> {
+    let refs: Vec<&[u8]> = corpus.iter().map(|v| v.as_slice()).collect();
+    train(&refs, budget)
+}
+
+#[inline]
+fn shingle_hash(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Generate a small-basket corpus for tests/benches: records sharing
+/// structure (field names, common prefixes) with per-record noise.
+pub fn synthetic_corpus(n: usize, record_len: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    let fields = [
+        &b"Muon_pt="[..],
+        b"Muon_eta=",
+        b"Jet_mass=",
+        b"MET_sumEt=",
+        b"nElectron=",
+        b"HLT_IsoMu24=",
+    ];
+    (0..n)
+        .map(|_| {
+            let mut rec = Vec::with_capacity(record_len);
+            while rec.len() < record_len {
+                let f = fields[rng.range(0, fields.len() - 1)];
+                rec.extend_from_slice(f);
+                let v = rng.f32();
+                rec.extend_from_slice(format!("{v:.4};").as_bytes());
+            }
+            rec.truncate(record_len);
+            rec
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zstd::compress::{zstd_compress_dict, zstd_decompress_dict};
+
+    #[test]
+    fn deterministic() {
+        let corpus = synthetic_corpus(50, 256, 7);
+        let d1 = train_from_corpus(&corpus, 4096);
+        let d2 = train_from_corpus(&corpus, 4096);
+        assert_eq!(d1, d2);
+        assert!(!d1.is_empty());
+        assert!(d1.len() <= 4096);
+    }
+
+    #[test]
+    fn trained_dict_improves_small_buffers() {
+        let corpus = synthetic_corpus(200, 300, 11);
+        let dict = train_from_corpus(&corpus[..150], 8192);
+        // Held-out samples (151..).
+        let mut plain_total = 0usize;
+        let mut dict_total = 0usize;
+        for sample in &corpus[150..] {
+            let plain = zstd_compress_dict(sample, &[], 6);
+            let with = zstd_compress_dict(sample, &dict, 6);
+            assert_eq!(
+                zstd_decompress_dict(&with, &dict, 1 << 20).unwrap(),
+                *sample
+            );
+            plain_total += plain.len();
+            dict_total += with.len();
+        }
+        assert!(
+            (dict_total as f64) < 0.9 * plain_total as f64,
+            "dict {dict_total} vs plain {plain_total}"
+        );
+    }
+
+    #[test]
+    fn zero_budget_empty() {
+        let corpus = synthetic_corpus(10, 100, 3);
+        assert!(train_from_corpus(&corpus, 0).is_empty());
+    }
+
+    #[test]
+    fn tiny_samples_no_panic() {
+        let samples: Vec<&[u8]> = vec![b"ab", b"", b"xyz"];
+        let d = train(&samples, 1024);
+        assert!(d.len() <= 1024);
+    }
+}

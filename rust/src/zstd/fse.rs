@@ -1,0 +1,503 @@
+//! Finite State Entropy — tabled asymmetric numeral system (tANS) coding,
+//! the entropy stage the paper credits for ZSTD's win over ZLIB's Huffman
+//! pass (§2.3: "Finite State Encoding ... outperforms ZLIB's Huffman coding
+//! pass in terms of compression ratio and speed").
+//!
+//! This is a from-scratch tANS implementation following the zstd/FSE
+//! construction: normalize symbol counts to a power-of-two table, spread
+//! symbols with the coprime-step walk, then encode by state transitions
+//! emitting `nb_bits` per symbol. Unlike Huffman, per-symbol cost is
+//! fractional (state carries the remainder), so skewed alphabets code below
+//! 1 bit/symbol.
+//!
+//! Stream convention: symbols are encoded in reverse and the emitted bit
+//! chunks are flushed in reverse, so the decoder reads the bitstream
+//! *forward* with the shared LSB-first [`BitReader`]. The final encoder
+//! state is stored in the stream header; decode recovers symbols in the
+//! original order.
+
+use crate::util::bitio::{BitReader, BitWriter};
+
+/// Errors from table construction or decoding (untrusted inputs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FseError(pub &'static str);
+
+impl std::fmt::Display for FseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fse: {}", self.0)
+    }
+}
+impl std::error::Error for FseError {}
+
+const E: fn(&'static str) -> FseError = FseError;
+
+/// Max table log we ever use (zstd default max is 12 for literals).
+pub const MAX_TABLE_LOG: u32 = 12;
+
+/// Normalize `hist` so the counts sum to `1 << table_log`, every present
+/// symbol keeping a count ≥ 1 (zstd's fast normalization + correction).
+pub fn normalize_counts(hist: &[u32], total: u64, table_log: u32) -> Result<Vec<u16>, FseError> {
+    if table_log > MAX_TABLE_LOG {
+        return Err(E("table log too large"));
+    }
+    let size = 1u64 << table_log;
+    if total == 0 {
+        return Err(E("empty input"));
+    }
+    let present = hist.iter().filter(|&&c| c > 0).count();
+    if present == 0 {
+        return Err(E("no symbols"));
+    }
+    if present as u64 > size {
+        return Err(E("table too small for alphabet"));
+    }
+    let mut norm = vec![0u16; hist.len()];
+    if present == 1 {
+        // Degenerate: callers should use RLE mode, but keep it legal by
+        // giving the single symbol the whole table.
+        let sym = hist.iter().position(|&c| c > 0).unwrap();
+        norm[sym] = size as u16;
+        return Ok(norm);
+    }
+
+    // First pass: scaled counts, rounding to nearest, floor 1.
+    let mut assigned: i64 = 0;
+    for (s, &c) in hist.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let scaled = ((c as u128 * size as u128) / total as u128) as u64;
+        let v = scaled.max(1).min(size - 1);
+        norm[s] = v as u16;
+        assigned += v as i64;
+    }
+    let mut rest = size as i64 - assigned;
+    if rest > 0 {
+        // Distribute remainder to the largest symbols (cheapest distortion).
+        while rest > 0 {
+            let s = (0..hist.len()).max_by_key(|&s| (norm[s], hist[s])).unwrap();
+            let add = rest.min(size as i64 / 8).max(1) as u16;
+            norm[s] += add;
+            rest -= add as i64;
+        }
+    } else if rest < 0 {
+        // Take back from over-represented symbols, never below 1.
+        while rest < 0 {
+            let mut best: Option<(f64, usize)> = None;
+            for s in 0..hist.len() {
+                if norm[s] > 1 {
+                    // Overrepresentation ratio.
+                    let ratio = norm[s] as f64 * total as f64 / (hist[s].max(1) as f64 * size as f64);
+                    if best.map_or(true, |(r, _)| ratio > r) {
+                        best = Some((ratio, s));
+                    }
+                }
+            }
+            let (_, s) = best.ok_or(E("normalization failed"))?;
+            norm[s] -= 1;
+            rest += 1;
+        }
+    }
+    debug_assert_eq!(norm.iter().map(|&v| v as u64).sum::<u64>(), size);
+    Ok(norm)
+}
+
+/// zstd's symbol-spread: walk the table with step `(5/8)size + 3`, which is
+/// coprime with the power-of-two size, placing each symbol `norm[s]` times.
+fn spread_symbols(norm: &[u16], table_log: u32) -> Vec<u16> {
+    let size = 1usize << table_log;
+    let mut table = vec![0u16; size];
+    let step = (size >> 1) + (size >> 3) + 3;
+    let mask = size - 1;
+    let mut pos = 0usize;
+    for (sym, &count) in norm.iter().enumerate() {
+        for _ in 0..count {
+            table[pos] = sym as u16;
+            pos = (pos + step) & mask;
+        }
+    }
+    debug_assert_eq!(pos, 0);
+    table
+}
+
+/// Encoder tables (zstd layout: per-symbol deltaNbBits / deltaFindState +
+/// a state transition table).
+pub struct EncTable {
+    table_log: u32,
+    /// next_state[i]: for the i-th occurrence slot of a symbol.
+    next_state: Vec<u16>,
+    /// per symbol: (delta_find_state, delta_nb_bits)
+    sym: Vec<(i32, u32)>,
+    /// per symbol: a valid seed state (first spread slot), for the last
+    /// symbol of a stream which is absorbed into the initial state.
+    seed: Vec<u16>,
+}
+
+impl EncTable {
+    pub fn new(norm: &[u16], table_log: u32) -> Result<Self, FseError> {
+        let size = 1usize << table_log;
+        let spread = spread_symbols(norm, table_log);
+
+        // cumul[s] = first slot index for symbol s in the sorted layout.
+        let mut cumul = vec![0u32; norm.len() + 1];
+        for s in 0..norm.len() {
+            cumul[s + 1] = cumul[s] + norm[s] as u32;
+        }
+
+        // next_state table: walking the spread table in order, the k-th slot
+        // of symbol s (in spread order) maps state (size + k') where k'
+        // counts occurrences. zstd builds: for position p in spread order,
+        // tableU16[cumul[sym]++] = size + p.
+        let mut next_state = vec![0u16; size];
+        let mut cursor = cumul.clone();
+        for (p, &sym) in spread.iter().enumerate() {
+            let c = &mut cursor[sym as usize];
+            next_state[*c as usize] = (size + p) as u16;
+            *c += 1;
+        }
+
+        // Per-symbol deltas + seed states.
+        let mut sym = vec![(0i32, 0u32); norm.len()];
+        let mut seed = vec![0u16; norm.len()];
+        let mut total = 0u32;
+        for (s, &count) in norm.iter().enumerate() {
+            let count = count as u32;
+            if count == 0 {
+                continue;
+            }
+            seed[s] = next_state[total as usize];
+            if count == 1 {
+                sym[s] = (total as i32 - 1, (table_log << 16) - (1 << table_log));
+            } else {
+                // max_bits_out = table_log - floor(log2(count-1));
+                let max_bits = table_log - (31 - (count - 1).leading_zeros());
+                let min_state_plus = count << max_bits;
+                sym[s] = (
+                    total as i32 - count as i32,
+                    (max_bits << 16) - min_state_plus,
+                );
+            }
+            total += count;
+        }
+        Ok(Self { table_log, next_state, sym, seed })
+    }
+
+    pub fn table_log(&self) -> u32 {
+        self.table_log
+    }
+
+    /// Encode `symbols` (forward order); the decoder will recover the same
+    /// order reading the returned bits forward. Returns (payload, final
+    /// state) — state must be transmitted.
+    pub fn encode(&self, symbols: impl DoubleEndedIterator<Item = u16> + ExactSizeIterator) -> (Vec<u8>, u16) {
+        // tANS encodes in reverse; stack the (bits, nbits) chunks and flush
+        // them reversed so decode reads forward.
+        let mut chunks: Vec<(u32, u32)> = Vec::with_capacity(symbols.len());
+        // Initial state: encode the first (in reverse order) symbol from the
+        // canonical start. zstd seeds state via the first symbol's table; we
+        // use state = first occurrence slot, which is always valid.
+        let mut state: u32 = 0;
+        let mut first = true;
+        for s in symbols.rev() {
+            if first {
+                // The last stream symbol is absorbed into the seed state —
+                // the decoder emits it from the final state without reading
+                // further bits.
+                state = self.seed[s as usize] as u32;
+                first = false;
+                continue;
+            }
+            let (delta_find, delta_nb) = self.sym[s as usize];
+            let nb_bits = (delta_nb.wrapping_add(state)) >> 16;
+            chunks.push((state & ((1 << nb_bits) - 1), nb_bits));
+            let idx = ((state >> nb_bits) as i32 + delta_find) as usize;
+            state = self.next_state[idx] as u32;
+        }
+        let mut w = BitWriter::with_capacity(chunks.len() / 2 + 8);
+        for &(bits, nb) in chunks.iter().rev() {
+            w.write_bits(bits as u64, nb);
+        }
+        (w.finish(), state as u16)
+    }
+}
+
+/// Decoder table entry.
+#[derive(Clone, Copy, Default)]
+struct DecEntry {
+    symbol: u16,
+    nb_bits: u8,
+    base: u16,
+}
+
+/// Decoder table.
+pub struct DecTable {
+    table_log: u32,
+    entries: Vec<DecEntry>,
+}
+
+impl DecTable {
+    pub fn new(norm: &[u16], table_log: u32) -> Result<Self, FseError> {
+        let size = 1usize << table_log;
+        let total: u64 = norm.iter().map(|&v| v as u64).sum();
+        if total != size as u64 {
+            return Err(E("counts don't sum to table size"));
+        }
+        let spread = spread_symbols(norm, table_log);
+        let mut occurrences = vec![0u16; norm.len()];
+        let mut entries = vec![DecEntry::default(); size];
+        for (p, &sym) in spread.iter().enumerate() {
+            let s = sym as usize;
+            let count = norm[s] as u32;
+            let k = occurrences[s] as u32; // occurrence index of this slot
+            occurrences[s] += 1;
+            // This slot is reached from states [ (count + k) << nb , ... ).
+            let x = count + k;
+            let nb_bits = table_log - (31 - x.leading_zeros());
+            let base = (x << nb_bits) - size as u32;
+            entries[p] = DecEntry { symbol: sym, nb_bits: nb_bits as u8, base: base as u16 };
+        }
+        Ok(Self { table_log, entries })
+    }
+
+    /// Decode `count` symbols, starting from `init_state` (the encoder's
+    /// final state), reading extra bits forward.
+    pub fn decode(
+        &self,
+        r: &mut BitReader,
+        init_state: u16,
+        count: usize,
+        out: &mut Vec<u16>,
+    ) -> Result<(), FseError> {
+        let size = 1u32 << self.table_log;
+        let mut state = init_state as u32;
+        if state < size || state >= 2 * size {
+            return Err(E("invalid initial state"));
+        }
+        for k in 0..count {
+            let e = self.entries[(state - size) as usize];
+            out.push(e.symbol);
+            if k + 1 == count {
+                break; // last symbol: no trailing bits (absorbed at seed)
+            }
+            let bits = r.read_bits(e.nb_bits as u32) as u32;
+            state = size + e.base as u32 + bits;
+            if r.overflowed() {
+                return Err(E("bitstream exhausted"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Serialize normalized counts (compact): uvarint alphabet size, then for
+/// each symbol a uvarint count (0 allowed, cheap due to varint).
+pub fn write_norm(out: &mut Vec<u8>, norm: &[u16], table_log: u32) {
+    use crate::util::varint::put_uvarint;
+    out.push(table_log as u8);
+    let last = norm.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+    put_uvarint(out, last as u64);
+    let mut zeros = 0u64;
+    for &c in &norm[..last] {
+        if c == 0 {
+            zeros += 1;
+            continue;
+        }
+        if zeros > 0 {
+            // 0 marker followed by zero-run length.
+            put_uvarint(out, 0);
+            put_uvarint(out, zeros);
+            zeros = 0;
+        }
+        put_uvarint(out, c as u64);
+    }
+}
+
+/// Deserialize normalized counts; returns (norm, table_log).
+pub fn read_norm(c: &mut crate::util::varint::Cursor) -> Result<(Vec<u16>, u32), FseError> {
+    let table_log = c.u8().ok_or(E("truncated table log"))? as u32;
+    if table_log == 0 || table_log > MAX_TABLE_LOG {
+        return Err(E("bad table log"));
+    }
+    let n = c.uvarint().ok_or(E("truncated alphabet size"))? as usize;
+    if n == 0 || n > 4096 {
+        return Err(E("bad alphabet size"));
+    }
+    let mut norm = vec![0u16; n];
+    let mut i = 0usize;
+    let size = 1u64 << table_log;
+    let mut total = 0u64;
+    while i < n {
+        let v = c.uvarint().ok_or(E("truncated counts"))?;
+        if v == 0 {
+            let run = c.uvarint().ok_or(E("truncated zero run"))? as usize;
+            if run == 0 || i + run > n {
+                return Err(E("bad zero run"));
+            }
+            i += run;
+        } else {
+            if v > size {
+                return Err(E("count too large"));
+            }
+            norm[i] = v as u16;
+            total += v;
+            i += 1;
+        }
+    }
+    if total != size {
+        return Err(E("counts don't sum to table size"));
+    }
+    Ok((norm, table_log))
+}
+
+/// Pick a table log for `total` symbols over `alphabet` present symbols
+/// (zstd's FSE_optimalTableLog flavor).
+pub fn optimal_table_log(total: usize, present: usize, max_log: u32) -> u32 {
+    let mut log = if total > 1 { (usize::BITS - 1 - (total - 1).leading_zeros()).saturating_sub(2) } else { 5 };
+    let min_for_alphabet = (usize::BITS - (present.max(2) - 1).leading_zeros()) + 1;
+    log = log.max(min_for_alphabet).max(5).min(max_log);
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::varint::Cursor;
+
+    fn roundtrip_syms(symbols: &[u16], alphabet: usize) {
+        let mut hist = vec![0u32; alphabet];
+        for &s in symbols {
+            hist[s as usize] += 1;
+        }
+        let present = hist.iter().filter(|&&c| c > 0).count();
+        if present < 2 {
+            return; // RLE territory, not FSE
+        }
+        let log = optimal_table_log(symbols.len(), present, 11);
+        let norm = normalize_counts(&hist, symbols.len() as u64, log).unwrap();
+        let enc = EncTable::new(&norm, log).unwrap();
+        let (payload, state) = enc.encode(symbols.iter().copied());
+        let dec = DecTable::new(&norm, log).unwrap();
+        let mut r = BitReader::new(&payload);
+        let mut out = Vec::with_capacity(symbols.len());
+        dec.decode(&mut r, state, symbols.len(), &mut out).unwrap();
+        assert_eq!(out, symbols);
+    }
+
+    #[test]
+    fn roundtrip_uniform() {
+        let mut rng = Rng::new(0xF5E);
+        let syms: Vec<u16> = (0..10_000).map(|_| rng.range(0, 255) as u16).collect();
+        roundtrip_syms(&syms, 256);
+    }
+
+    #[test]
+    fn roundtrip_skewed() {
+        let mut rng = Rng::new(0xF5F);
+        let syms: Vec<u16> = (0..20_000)
+            .map(|_| {
+                if rng.chance(0.9) {
+                    0u16
+                } else if rng.chance(0.7) {
+                    1
+                } else {
+                    rng.range(2, 40) as u16
+                }
+            })
+            .collect();
+        roundtrip_syms(&syms, 41);
+        // Compression sanity: skewed stream codes well below 8 bits/sym.
+        let mut hist = vec![0u32; 41];
+        for &s in &syms {
+            hist[s as usize] += 1;
+        }
+        let log = optimal_table_log(syms.len(), 41, 11);
+        let norm = normalize_counts(&hist, syms.len() as u64, log).unwrap();
+        let enc = EncTable::new(&norm, log).unwrap();
+        let (payload, _) = enc.encode(syms.iter().copied());
+        let bits_per_sym = payload.len() as f64 * 8.0 / syms.len() as f64;
+        assert!(bits_per_sym < 1.2, "bits/sym = {bits_per_sym}");
+    }
+
+    #[test]
+    fn roundtrip_two_symbols() {
+        let syms: Vec<u16> = (0..999).map(|i| (i % 5 == 0) as u16).collect();
+        roundtrip_syms(&syms, 2);
+    }
+
+    #[test]
+    fn roundtrip_tiny_streams() {
+        for n in 2..30usize {
+            let syms: Vec<u16> = (0..n).map(|i| (i % 3) as u16).collect();
+            roundtrip_syms(&syms, 3);
+        }
+    }
+
+    #[test]
+    fn fuzz_random_alphabets() {
+        let mut rng = Rng::new(0xF60);
+        for _ in 0..60 {
+            let alphabet = rng.range(2, 300);
+            let n = rng.range(2, 5000);
+            // Zipf-ish distribution.
+            let syms: Vec<u16> = (0..n)
+                .map(|_| {
+                    let r = rng.f64();
+                    let v = ((alphabet as f64).powf(r) - 1.0) as usize;
+                    v.min(alphabet - 1) as u16
+                })
+                .collect();
+            roundtrip_syms(&syms, alphabet);
+        }
+    }
+
+    #[test]
+    fn norm_counts_serialize() {
+        let hist = [100u32, 0, 0, 0, 50, 3, 0, 1];
+        let norm = normalize_counts(&hist, 154, 8).unwrap();
+        let mut buf = Vec::new();
+        write_norm(&mut buf, &norm, 8);
+        let mut cur = Cursor::new(&buf);
+        let (norm2, log2) = read_norm(&mut cur).unwrap();
+        assert_eq!(log2, 8);
+        assert_eq!(&norm2[..], &norm[..norm2.len()]);
+        assert_eq!(norm[norm2.len()..].iter().map(|&v| v as u32).sum::<u32>(), 0);
+    }
+
+    #[test]
+    fn read_norm_rejects_bad() {
+        // Counts not summing to table size.
+        let mut buf = Vec::new();
+        buf.push(8u8); // log
+        crate::util::varint::put_uvarint(&mut buf, 2); // 2 symbols
+        crate::util::varint::put_uvarint(&mut buf, 100);
+        crate::util::varint::put_uvarint(&mut buf, 100);
+        let mut cur = Cursor::new(&buf);
+        assert!(read_norm(&mut cur).is_err());
+    }
+
+    #[test]
+    fn normalize_preserves_presence() {
+        let mut rng = Rng::new(0xF61);
+        for _ in 0..50 {
+            let n = rng.range(2, 200);
+            let mut hist = vec![0u32; n];
+            for h in hist.iter_mut() {
+                if rng.chance(0.6) {
+                    *h = rng.below(10_000) as u32 + 1;
+                }
+            }
+            let present = hist.iter().filter(|&&c| c > 0).count();
+            if present < 2 {
+                continue;
+            }
+            let total: u64 = hist.iter().map(|&c| c as u64).sum();
+            let log = optimal_table_log(total as usize, present, 12);
+            let norm = normalize_counts(&hist, total, log).unwrap();
+            assert_eq!(norm.iter().map(|&v| v as u64).sum::<u64>(), 1 << log);
+            for (h, n) in hist.iter().zip(&norm) {
+                assert_eq!(*h > 0, *n > 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! Large-window LZ77 match finder for the ZSTD-style codec.
+//!
+//! The paper (§2.3) credits ZSTD's 256 KiB window — "eight times larger than
+//! the ZLIB window" — for much of its ratio advantage; this matcher searches
+//! that window with hash chains and optional single-step lazy parsing, and
+//! supports a *dictionary prefix*: content prepended to the window that
+//! matches may reference but that is not emitted (the mechanism behind
+//! ZSTD-style dictionary compression on small baskets).
+
+/// 256 KiB window (8× zlib), as the paper describes.
+pub const WINDOW_LOG: u32 = 18;
+pub const WINDOW_SIZE: usize = 1 << WINDOW_LOG;
+pub const MIN_MATCH: usize = 3;
+/// Cap match length (fits the value-code scheme comfortably).
+pub const MAX_MATCH: usize = 1 << 16;
+
+/// One LZ sequence: emit `lit_len` literals, then copy `match_len` bytes
+/// from `offset` back. A trailing literal run (after the last sequence) is
+/// carried separately by the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Seq {
+    pub lit_len: u32,
+    pub match_len: u32,
+    pub offset: u32,
+}
+
+/// Per-level search parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchParams {
+    pub depth: u32,
+    pub lazy: bool,
+    pub nice_len: usize,
+}
+
+impl SearchParams {
+    /// Map ROOT-style levels 1..=9.
+    pub fn for_level(level: u8) -> Self {
+        match level.clamp(1, 9) {
+            1 => Self { depth: 4, lazy: false, nice_len: 48 },
+            2 => Self { depth: 8, lazy: false, nice_len: 64 },
+            3 => Self { depth: 16, lazy: false, nice_len: 96 },
+            4 => Self { depth: 16, lazy: true, nice_len: 96 },
+            5 => Self { depth: 32, lazy: true, nice_len: 128 },
+            6 => Self { depth: 64, lazy: true, nice_len: 256 },
+            7 => Self { depth: 128, lazy: true, nice_len: 512 },
+            8 => Self { depth: 512, lazy: true, nice_len: 1024 },
+            _ => Self { depth: 2048, lazy: true, nice_len: MAX_MATCH },
+        }
+    }
+}
+
+const HASH_LOG: u32 = 17;
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes(data[i..i + 4].try_into().unwrap());
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_LOG)) as usize
+}
+
+/// Reusable chain matcher.
+pub struct ChainMatcher {
+    head: Vec<i32>,
+    prev: Vec<i32>,
+}
+
+impl Default for ChainMatcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChainMatcher {
+    pub fn new() -> Self {
+        Self { head: vec![-1; 1 << HASH_LOG], prev: Vec::new() }
+    }
+
+    /// Parse `data[start..]` into sequences (`data[..start]` is the
+    /// dictionary prefix, matchable but not emitted). Returns the sequences
+    /// and appends all literal bytes (in order) to `literals`; the final
+    /// literal run length is `data.len() - start - covered`.
+    pub fn parse(
+        &mut self,
+        data: &[u8],
+        start: usize,
+        params: &SearchParams,
+        seqs: &mut Vec<Seq>,
+        literals: &mut Vec<u8>,
+    ) {
+        seqs.clear();
+        literals.clear();
+        let n = data.len();
+        self.head.fill(-1);
+        self.prev.clear();
+        self.prev.resize(n, -1);
+
+        if n < MIN_MATCH + 1 || n - start == 0 {
+            literals.extend_from_slice(&data[start..]);
+            return;
+        }
+        let hash_end = n.saturating_sub(4);
+
+        // Pre-insert the dictionary prefix so matches can reach into it.
+        let mut inserted = 0usize;
+        macro_rules! insert_up_to {
+            ($end:expr) => {
+                let e = $end;
+                while inserted < e && inserted <= hash_end {
+                    let h = hash4(data, inserted);
+                    self.prev[inserted] = self.head[h];
+                    self.head[h] = inserted as i32;
+                    inserted += 1;
+                }
+                if inserted < e {
+                    inserted = e;
+                }
+            };
+        }
+        insert_up_to!(start);
+
+        let mut anchor = start;
+        let mut i = start;
+        while i < n {
+            insert_up_to!(i + 1);
+            let (len, dist) = self.find(data, i, params);
+            if len < MIN_MATCH {
+                i += 1;
+                continue;
+            }
+            let (mut best_len, mut best_dist, mut pos) = (len, dist, i);
+            if params.lazy && len < params.nice_len && i + 1 < n {
+                insert_up_to!(i + 2);
+                let (len2, dist2) = self.find(data, i + 1, params);
+                if len2 > best_len + 1 {
+                    best_len = len2;
+                    best_dist = dist2;
+                    pos = i + 1;
+                }
+            }
+            // Emit literals [anchor, pos) then the match.
+            literals.extend_from_slice(&data[anchor..pos]);
+            seqs.push(Seq {
+                lit_len: (pos - anchor) as u32,
+                match_len: best_len as u32,
+                offset: best_dist as u32,
+            });
+            i = pos + best_len;
+            anchor = i;
+            insert_up_to!(i.min(hash_end + 1));
+        }
+        literals.extend_from_slice(&data[anchor..]);
+    }
+
+    fn find(&self, data: &[u8], i: usize, params: &SearchParams) -> (usize, usize) {
+        let n = data.len();
+        if i + 4 > n {
+            return (0, 0);
+        }
+        let h = hash4(data, i);
+        let mut cand = self.head[h];
+        let lower = i.saturating_sub(WINDOW_SIZE);
+        let cap = (n - i).min(MAX_MATCH);
+        let nice = params.nice_len.min(cap);
+        let (mut best_len, mut best_dist) = (0usize, 0usize);
+        let mut steps = params.depth;
+        while cand >= 0 && steps > 0 {
+            let c = cand as usize;
+            if c < lower || c >= i {
+                if c >= i {
+                    cand = self.prev[c];
+                    continue;
+                }
+                break;
+            }
+            if best_len == 0 || (i + best_len < n && data[c + best_len] == data[i + best_len]) {
+                let l = common_prefix(data, c, i, cap);
+                if l > best_len {
+                    best_len = l;
+                    best_dist = i - c;
+                    if l >= nice {
+                        break;
+                    }
+                }
+            }
+            cand = self.prev[c];
+            steps -= 1;
+        }
+        if best_len < MIN_MATCH {
+            (0, 0)
+        } else {
+            (best_len, best_dist)
+        }
+    }
+}
+
+#[inline]
+fn common_prefix(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
+    let mut l = 0usize;
+    while l + 8 <= cap {
+        let x = u64::from_le_bytes(data[a + l..a + l + 8].try_into().unwrap())
+            ^ u64::from_le_bytes(data[b + l..b + l + 8].try_into().unwrap());
+        if x != 0 {
+            return (l + (x.trailing_zeros() / 8) as usize).min(cap);
+        }
+        l += 8;
+    }
+    while l < cap && data[a + l] == data[b + l] {
+        l += 1;
+    }
+    l
+}
+
+/// Rebuild bytes from sequences + literals (oracle for tests & decoder core).
+pub fn execute_seqs(
+    seqs: &[Seq],
+    literals: &[u8],
+    dict: &[u8],
+    expected_len: usize,
+) -> Result<Vec<u8>, &'static str> {
+    let mut out = Vec::with_capacity(dict.len() + expected_len);
+    out.extend_from_slice(dict);
+    let mut lit_pos = 0usize;
+    for s in seqs {
+        let ll = s.lit_len as usize;
+        if lit_pos + ll > literals.len() {
+            return Err("literal underflow");
+        }
+        out.extend_from_slice(&literals[lit_pos..lit_pos + ll]);
+        lit_pos += ll;
+        let dist = s.offset as usize;
+        let ml = s.match_len as usize;
+        if dist == 0 || dist > out.len() {
+            return Err("bad offset");
+        }
+        if out.len() + ml > dict.len() + expected_len {
+            return Err("output overflow");
+        }
+        let start = out.len() - dist;
+        if dist >= ml {
+            out.extend_from_within(start..start + ml);
+        } else {
+            let mut rem = ml;
+            let mut src = start;
+            while rem > 0 {
+                let chunk = rem.min(out.len() - src);
+                out.extend_from_within(src..src + chunk);
+                src += chunk;
+                rem -= chunk;
+            }
+        }
+    }
+    out.extend_from_slice(&literals[lit_pos..]);
+    out.drain(..dict.len());
+    if out.len() != expected_len {
+        return Err("size mismatch");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8], dict: &[u8], level: u8) {
+        let mut m = ChainMatcher::new();
+        let mut buf = Vec::with_capacity(dict.len() + data.len());
+        buf.extend_from_slice(dict);
+        buf.extend_from_slice(data);
+        let mut seqs = Vec::new();
+        let mut lits = Vec::new();
+        m.parse(&buf, dict.len(), &SearchParams::for_level(level), &mut seqs, &mut lits);
+        let out = execute_seqs(&seqs, &lits, dict, data.len()).expect("execute");
+        assert_eq!(out, data, "level {level} n={} dict={}", data.len(), dict.len());
+    }
+
+    #[test]
+    fn basic_roundtrips() {
+        for level in [1u8, 5, 9] {
+            roundtrip(b"", b"", level);
+            roundtrip(b"a", b"", level);
+            roundtrip(b"abcabcabcabcabcabc", b"", level);
+            roundtrip(&vec![7u8; 50_000], b"", level);
+        }
+    }
+
+    #[test]
+    fn long_window_matches_found() {
+        // Repeat at distance ~100k: inside our 256K window, outside zlib's 32K.
+        let mut rng = Rng::new(0x2E57);
+        let chunk = rng.bytes(1000);
+        let mut data = chunk.clone();
+        data.extend(rng.bytes(100_000));
+        data.extend_from_slice(&chunk);
+        let mut m = ChainMatcher::new();
+        let mut seqs = Vec::new();
+        let mut lits = Vec::new();
+        m.parse(&data, 0, &SearchParams::for_level(9), &mut seqs, &mut lits);
+        let far = seqs.iter().any(|s| s.offset > 32_768 && s.match_len > 500);
+        assert!(far, "no long-range match found: {:?}", seqs.iter().map(|s| (s.offset, s.match_len)).collect::<Vec<_>>());
+        let out = execute_seqs(&seqs, &lits, b"", data.len()).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn dictionary_prefix_matchable() {
+        let mut rng = Rng::new(0x2E58);
+        let dict = rng.bytes(2000);
+        // Small payload largely made of dictionary content.
+        let mut data = Vec::new();
+        for _ in 0..5 {
+            let a = rng.range(0, 1500);
+            data.extend_from_slice(&dict[a..a + 300]);
+        }
+        let mut m = ChainMatcher::new();
+        let mut buf = dict.clone();
+        buf.extend_from_slice(&data);
+        let mut seqs = Vec::new();
+        let mut lits = Vec::new();
+        m.parse(&buf, dict.len(), &SearchParams::for_level(6), &mut seqs, &mut lits);
+        // Nearly all of the payload should come from dictionary matches.
+        assert!(lits.len() < data.len() / 4, "lits {} of {}", lits.len(), data.len());
+        let out = execute_seqs(&seqs, &lits, &dict, data.len()).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn fuzz_roundtrip() {
+        let mut rng = Rng::new(0x2E59);
+        for round in 0..60 {
+            let n = rng.range(0, 30_000);
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                match rng.range(0, 2) {
+                    0 => {
+                        let b = (rng.next_u64() & 0xFF) as u8;
+                        let r = rng.range(1, 300);
+                        data.extend(std::iter::repeat(b).take(r));
+                    }
+                    1 => {
+                        let k = rng.range(1, 60);
+                        let b = rng.bytes(k);
+                        data.extend_from_slice(&b);
+                    }
+                    _ => data.extend_from_slice(b"ZSTD_window_"),
+                }
+            }
+            data.truncate(n);
+            let dict_len = if round % 3 == 0 { rng.range(0, 500) } else { 0 };
+            let dict = rng.bytes(dict_len);
+            roundtrip(&data, &dict, [1u8, 5, 9][round % 3]);
+        }
+    }
+}

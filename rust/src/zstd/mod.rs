@@ -1,0 +1,14 @@
+//! ZSTD-style codec (paper §2.3): LZ77 with a 256 KiB window + tANS (FSE)
+//! entropy stage + dictionary support. Implements the three levers the
+//! paper credits for ZSTD's advantage; the container format is our own
+//! ("RZS1"), not RFC 8478 bit-compatible — see DESIGN.md's honesty box.
+
+pub mod compress;
+pub mod dict;
+pub mod fse;
+pub mod matcher;
+
+pub use compress::{
+    zstd_compress, zstd_compress_dict, zstd_decompress, zstd_decompress_dict, ZstdEncoder,
+    ZstdError,
+};

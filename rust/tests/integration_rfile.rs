@@ -1,0 +1,249 @@
+//! Integration: full write → read round-trips of the RFIL format across
+//! codecs, preconditioners, basket sizes, and corruption scenarios.
+
+use rootio::compression::{Algorithm, Settings};
+use rootio::precond::Precond;
+use rootio::rfile::{
+    write_tree_serial, BranchDef, BranchType, TreeReader, Value, DEFAULT_BASKET_SIZE,
+};
+use rootio::util::rng::Rng;
+use std::path::PathBuf;
+
+fn tmp_path(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("rootio_test_{}_{}", std::process::id(), name));
+    p
+}
+
+fn make_events(n: usize, seed: u64) -> Vec<Vec<Value>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let nmu = rng.poisson(2.5) as usize;
+            vec![
+                Value::I32(nmu as i32),
+                Value::AF32((0..nmu).map(|_| rng.gauss(30.0, 15.0) as f32).collect()),
+                Value::F64(rng.exponential(0.05)),
+                Value::Bool(rng.chance(0.3)),
+                Value::I64(i as i64 * 1000),
+                Value::AU8(format!("run{}_{}", i / 100, i).into_bytes()),
+            ]
+        })
+        .collect()
+}
+
+fn schema() -> Vec<BranchDef> {
+    vec![
+        BranchDef::new("nMuon", BranchType::I32),
+        BranchDef::new("Muon_pt", BranchType::VarF32),
+        BranchDef::new("MET_sumEt", BranchType::F64),
+        BranchDef::new("HLT_IsoMu24", BranchType::Bool),
+        BranchDef::new("event", BranchType::I64),
+        BranchDef::new("tag", BranchType::VarU8),
+    ]
+}
+
+fn roundtrip_with(settings: Settings, basket_size: usize, n: usize, name: &str) {
+    let path = tmp_path(name);
+    let events = make_events(n, 0xABCD);
+    let meta = write_tree_serial(
+        &path,
+        "Events",
+        schema(),
+        settings,
+        basket_size,
+        events.iter().cloned(),
+    )
+    .expect("write");
+    assert_eq!(meta.n_entries, n as u64);
+
+    let mut reader = TreeReader::open(&path).expect("open");
+    assert_eq!(reader.meta.n_entries, n as u64);
+    assert_eq!(reader.meta.branches.len(), 6);
+    let back = reader.read_all_events().expect("read");
+    assert_eq!(back.len(), events.len());
+    for (i, (a, b)) in events.iter().zip(&back).enumerate() {
+        assert_eq!(a, b, "event {i} mismatch ({})", settings.label());
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn roundtrip_all_algorithms() {
+    for (i, alg) in Algorithm::survey().iter().enumerate() {
+        roundtrip_with(
+            Settings::new(*alg, 5),
+            DEFAULT_BASKET_SIZE,
+            700,
+            &format!("alg{i}"),
+        );
+    }
+}
+
+#[test]
+fn roundtrip_uncompressed() {
+    roundtrip_with(Settings::new(Algorithm::None, 0), DEFAULT_BASKET_SIZE, 300, "raw");
+}
+
+#[test]
+fn roundtrip_with_preconditioners() {
+    roundtrip_with(
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        DEFAULT_BASKET_SIZE,
+        500,
+        "bitshuf",
+    );
+    roundtrip_with(
+        Settings::new(Algorithm::Zstd, 3).with_precond(Precond::Shuffle(4)),
+        DEFAULT_BASKET_SIZE,
+        500,
+        "shuf",
+    );
+}
+
+#[test]
+fn roundtrip_tiny_baskets_many_flushes() {
+    // Tiny basket size exercises multi-basket paths on every branch.
+    roundtrip_with(Settings::new(Algorithm::Zlib, 1), 256, 400, "tiny");
+}
+
+#[test]
+fn roundtrip_single_giant_basket() {
+    roundtrip_with(Settings::new(Algorithm::Zstd, 2), 64 << 20, 1000, "giant");
+}
+
+#[test]
+fn per_branch_settings_respected() {
+    let path = tmp_path("perbranch");
+    let mut branches = schema();
+    branches[1] = BranchDef::new("Muon_pt", BranchType::VarF32)
+        .with_settings(Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)));
+    branches[2] = BranchDef::new("MET_sumEt", BranchType::F64)
+        .with_settings(Settings::new(Algorithm::Lzma, 6));
+    let events = make_events(500, 77);
+    write_tree_serial(
+        &path,
+        "Events",
+        branches,
+        Settings::new(Algorithm::Zstd, 4),
+        4096,
+        events.iter().cloned(),
+    )
+    .unwrap();
+    let mut reader = TreeReader::open(&path).unwrap();
+    let back = reader.read_all_events().unwrap();
+    assert_eq!(back, events);
+    // Per-branch settings survive the metadata round-trip.
+    assert_eq!(
+        reader.meta.branches[1].settings.unwrap().algorithm,
+        Algorithm::Lz4
+    );
+    assert_eq!(
+        reader.meta.branches[2].settings.unwrap().algorithm,
+        Algorithm::Lzma
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn empty_tree() {
+    let path = tmp_path("empty");
+    write_tree_serial(
+        &path,
+        "Empty",
+        schema(),
+        Settings::default(),
+        1024,
+        std::iter::empty(),
+    )
+    .unwrap();
+    let mut reader = TreeReader::open(&path).unwrap();
+    assert_eq!(reader.meta.n_entries, 0);
+    let back = reader.read_all_events().unwrap();
+    assert!(back.is_empty());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_file_rejected() {
+    let path = tmp_path("trunc");
+    let events = make_events(200, 5);
+    write_tree_serial(
+        &path,
+        "Events",
+        schema(),
+        Settings::default(),
+        2048,
+        events.into_iter(),
+    )
+    .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // Cut the file at several points; open must fail (no trailer) or the
+    // basket reads must fail — never panic, never wrong data.
+    for frac in [0.3, 0.7, 0.95] {
+        let cut = (bytes.len() as f64 * frac) as usize;
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        match TreeReader::open(&path) {
+            Err(_) => {}
+            Ok(mut r) => {
+                let _ = r.read_all_events().map(|evs| {
+                    // If metadata happened to be intact, content must be too.
+                    assert_eq!(evs.len() as u64, r.meta.n_entries);
+                });
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupted_basket_detected() {
+    let path = tmp_path("corrupt");
+    let events = make_events(300, 9);
+    write_tree_serial(
+        &path,
+        "Events",
+        schema(),
+        Settings::new(Algorithm::Zlib, 6), // zlib carries adler32
+        2048,
+        events.iter().cloned(),
+    )
+    .unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Flip a byte early in the record stream (inside some basket body).
+    let target = bytes.len() / 3;
+    bytes[target] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    match TreeReader::open(&path) {
+        Err(_) => {}
+        Ok(mut r) => match r.read_all_events() {
+            Err(_) => {}
+            Ok(back) => assert_ne!(back, events, "corruption silently ignored"),
+        },
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn offset_arrays_match_paper_structure() {
+    // Single-byte var entries => offsets 1,2,3,... (paper §2.2's example).
+    let path = tmp_path("offsets");
+    let branches = vec![BranchDef::new("c", BranchType::VarU8)];
+    let events: Vec<Vec<Value>> = (0..100).map(|i| vec![Value::AU8(vec![i as u8])]).collect();
+    write_tree_serial(
+        &path,
+        "T",
+        branches,
+        Settings::new(Algorithm::None, 0),
+        1 << 20,
+        events.into_iter(),
+    )
+    .unwrap();
+    let mut reader = TreeReader::open(&path).unwrap();
+    let locs = reader.baskets_for(0);
+    assert_eq!(locs.len(), 1);
+    let content = reader.read_basket(&locs[0]).unwrap();
+    let expect: Vec<u32> = (1..=100).collect();
+    assert_eq!(content.offsets, expect);
+    std::fs::remove_file(&path).ok();
+}

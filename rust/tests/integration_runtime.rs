@@ -1,0 +1,111 @@
+//! Runtime integration: the XLA-compiled analyzer must agree with the
+//! pure-rust mirror (which itself mirrors the python/numpy reference tested
+//! in python/tests/test_model.py) — closing the three-way cross-language
+//! correctness loop.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise,
+//! so `cargo test` works in a fresh checkout; `make test` always builds
+//! artifacts first).
+
+use rootio::runtime::analyzer::{analyze_native, bucket_for};
+use rootio::runtime::{cpu_client, Analyzer};
+use rootio::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+trait Leak {
+    fn leak(self) -> &'static Path;
+}
+impl Leak for std::path::PathBuf {
+    fn leak(self) -> &'static Path {
+        Box::leak(self.into_boxed_path())
+    }
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("analyzer_4096.hlo.txt").exists()
+}
+
+fn workloads() -> Vec<(&'static str, Vec<u8>)> {
+    let mut rng = Rng::new(0xA11A);
+    let mut v = Vec::new();
+    v.push((
+        "offsets",
+        (1u32..=100_000).flat_map(|i| i.to_be_bytes()).collect::<Vec<u8>>(),
+    ));
+    v.push(("noise", rng.bytes(300_000)));
+    v.push(("zeros", vec![0u8; 50_000]));
+    let floats: Vec<u8> = (0..80_000)
+        .flat_map(|i| ((i as f32 * 0.01).sin() * 100.0).to_be_bytes())
+        .collect();
+    v.push(("floats", floats));
+    v
+}
+
+#[test]
+fn xla_analyzer_matches_native_mirror() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let client = cpu_client().expect("pjrt cpu client");
+    let mut analyzer = Analyzer::load(&client, artifacts_dir()).expect("load artifacts");
+    for (name, data) in workloads() {
+        let got = analyzer.analyze(&data).expect("xla exec");
+        let bucket = bucket_for(data.len());
+        match (got, bucket) {
+            (Some(f), Some(b)) => {
+                let want = analyze_native(&data, b).unwrap();
+                let pairs = [
+                    (f.h_raw, want.h_raw),
+                    (f.h_shuffle, want.h_shuffle),
+                    (f.h_bitshuffle, want.h_bitshuffle),
+                    (f.h_delta, want.h_delta),
+                    (f.rep_raw, want.rep_raw),
+                    (f.rep_bitshuffle, want.rep_bitshuffle),
+                    (f.zero_bitshuffle, want.zero_bitshuffle),
+                    (f.rep_shuffle, want.rep_shuffle),
+                ];
+                for (i, (g, w)) in pairs.iter().enumerate() {
+                    assert!(
+                        (g - w).abs() < 1e-3 + 0.001 * w.abs(),
+                        "{name}: feature {i}: xla {g} vs native {w}"
+                    );
+                }
+            }
+            (None, None) => {}
+            (g, b) => panic!("{name}: bucket mismatch xla={g:?} native_bucket={b:?}"),
+        }
+    }
+}
+
+#[test]
+fn analyzer_rejects_small_baskets() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let client = cpu_client().unwrap();
+    let mut analyzer = Analyzer::load(&client, artifacts_dir()).unwrap();
+    assert!(analyzer.analyze(&[0u8; 100]).unwrap().is_none());
+    assert_eq!(analyzer.min_bucket(), 4096);
+}
+
+#[test]
+fn repeated_execution_is_stable() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let client = cpu_client().unwrap();
+    let mut analyzer = Analyzer::load(&client, artifacts_dir()).unwrap();
+    let data: Vec<u8> = (1u32..=50_000).flat_map(|i| i.to_be_bytes()).collect();
+    let a = analyzer.analyze(&data).unwrap().unwrap();
+    for _ in 0..5 {
+        let b = analyzer.analyze(&data).unwrap().unwrap();
+        assert_eq!(a, b);
+    }
+}
