@@ -1,12 +1,41 @@
 //! `cargo bench --bench codecs` — microbenchmarks of the codec substrates:
-//! per-codec compress/decompress on canonical payload classes, plus the
-//! preconditioner transforms themselves. These are the profiling anchors
-//! for the §Perf optimization pass.
+//! per-(codec × level × preconditioner) compress/decompress throughput on
+//! canonical payload classes (including the synthetic NanoAOD workload),
+//! plus fast-path-vs-naive-reference speedups for every §Perf hot loop.
+//!
+//! Outputs:
+//!  * human-readable tables on stdout,
+//!  * `results/codecs.csv` + `results/precond.csv` (historical columns)
+//!    + `results/fastpath.csv` (fast-vs-reference speedups),
+//!  * `BENCH_codecs.json` at the repo root — the machine-readable perf
+//!    trajectory consumed by CI and future PRs. Set BENCH_QUICK=1 for a
+//!    smoke run.
 
-use rootio::bench::{bench, BenchConfig, Table};
+use rootio::bench::figures::collect_baskets;
+use rootio::bench::{bench, json_array, json_escape, json_num, BenchConfig, Table};
 use rootio::compression::{Algorithm, Engine, Settings};
-use rootio::precond;
+use rootio::deflate::compress::{deflate, deflate_reference};
+use rootio::deflate::{Flavor, Tuning};
+use rootio::gen::nanoaod;
+use rootio::precond::{self, Precond};
+use rootio::util::bitio::{reference::NaiveBitWriter, BitWriter};
 use rootio::util::rng::Rng;
+
+fn nanoaod_payload() -> Vec<u8> {
+    // Concatenated logical basket payloads (data + big-endian offset
+    // arrays) of the synthetic NanoAOD generator — the paper's workload.
+    let events = nanoaod::events(2000, 0xA0D);
+    let baskets = collect_baskets(nanoaod::schema(), &events, 32 * 1024);
+    let mut buf = Vec::new();
+    for b in baskets {
+        buf.extend_from_slice(&b.logical_payload());
+        if buf.len() >= 256 * 1024 {
+            break;
+        }
+    }
+    buf.truncate(256 * 1024);
+    buf
+}
 
 fn payloads() -> Vec<(&'static str, Vec<u8>)> {
     let mut rng = Rng::new(0xC0DEC);
@@ -26,40 +55,231 @@ fn payloads() -> Vec<(&'static str, Vec<u8>)> {
     v.push(("text", text));
     // Incompressible.
     v.push(("noise", rng.bytes(256 * 1024)));
+    // The real thing.
+    v.push(("nanoaod", nanoaod_payload()));
     v
+}
+
+/// The (codec × level × preconditioner) grid. Preconditioners are applied
+/// where the paper does (byte-aligned + entropy codecs).
+fn settings_grid() -> Vec<Settings> {
+    let mut grid = Vec::new();
+    for (alg, levels) in [
+        (Algorithm::Zlib, &[1u8, 6][..]),
+        (Algorithm::CfZlib, &[1, 6]),
+        (Algorithm::Lz4, &[1, 9]),
+        (Algorithm::Zstd, &[1, 5]),
+        (Algorithm::Lzma, &[6]),
+        (Algorithm::OldRoot, &[6]),
+    ] {
+        for &level in levels {
+            grid.push(Settings::new(alg, level));
+            if matches!(alg, Algorithm::Lz4 | Algorithm::Zlib | Algorithm::CfZlib | Algorithm::Zstd) {
+                grid.push(Settings::new(alg, level).with_precond(Precond::BitShuffle(4)));
+                grid.push(Settings::new(alg, level).with_precond(Precond::Shuffle(4)));
+            }
+        }
+    }
+    grid
+}
+
+/// Look up a payload class by name so reordering `payloads()` cannot
+/// silently mislabel the published speedup rows.
+fn payload_by_name<'a>(all: &'a [(&'static str, Vec<u8>)], name: &str) -> &'a Vec<u8> {
+    &all.iter().find(|(n, _)| *n == name).expect("payload class").1
+}
+
+struct Row {
+    payload: &'static str,
+    setting: Settings,
+    ratio: f64,
+    compress_mbps: f64,
+    decompress_mbps: f64,
+}
+
+struct Speedup {
+    name: &'static str,
+    payload: &'static str,
+    fast_mbps: f64,
+    reference_mbps: f64,
+}
+
+fn codec_grid(cfg: &BenchConfig) -> Vec<Row> {
+    let mut engine = Engine::new();
+    let mut rows = Vec::new();
+    for (pname, data) in payloads() {
+        for s in settings_grid() {
+            let c = engine.compress(&data, &s);
+            let rc = bench("c", data.len(), cfg, || engine.compress(&data, &s).len());
+            let rd = bench("d", data.len(), cfg, || engine.decompress(&c).unwrap().len());
+            rows.push(Row {
+                payload: pname,
+                setting: s,
+                ratio: data.len() as f64 / c.len() as f64,
+                compress_mbps: rc.mbps(),
+                decompress_mbps: rd.mbps(),
+            });
+        }
+    }
+    rows
+}
+
+/// §Perf regression anchors: each optimized hot loop against the naive
+/// reference implementation it replaced (and stays bit-identical to).
+fn fast_path_speedups(cfg: &BenchConfig) -> Vec<Speedup> {
+    let mut out = Vec::new();
+    let all = payloads();
+    let offsets = payload_by_name(&all, "offsets");
+    let nanoaod = payload_by_name(&all, "nanoaod");
+
+    // 1. Fused Huffman emission + word-flush BitWriter vs per-field
+    // emission + byte-at-a-time flushing (whole-deflate compress path).
+    for (payload, data) in [("nanoaod", nanoaod), ("offsets", offsets)] {
+        let t = Tuning::new(Flavor::Cloudflare, 6);
+        let fast = bench("deflate-fast", data.len(), cfg, || deflate(data, &t).len());
+        let refr = bench("deflate-ref", data.len(), cfg, || deflate_reference(data, &t).len());
+        out.push(Speedup {
+            name: "deflate_compress_fused_vs_reference",
+            payload,
+            fast_mbps: fast.mbps(),
+            reference_mbps: refr.mbps(),
+        });
+    }
+
+    // 2. BitShuffle: 8×8 u64 bit-matrix transpose vs bit-at-a-time scalar.
+    let fast = bench("bitshuffle-fast", offsets.len(), cfg, || precond::bitshuffle(offsets, 4).len());
+    let refr = bench("bitshuffle-naive", offsets.len(), cfg, || {
+        precond::bitshuffle::reference::bitshuffle_naive(offsets, 4).len()
+    });
+    out.push(Speedup {
+        name: "bitshuffle_u64_transpose_vs_naive",
+        payload: "offsets",
+        fast_mbps: fast.mbps(),
+        reference_mbps: refr.mbps(),
+    });
+    let shuffled = precond::bitshuffle(offsets, 4);
+    let fast = bench("unbitshuffle-fast", shuffled.len(), cfg, || {
+        precond::unbitshuffle(&shuffled, 4).len()
+    });
+    let refr = bench("unbitshuffle-naive", shuffled.len(), cfg, || {
+        precond::bitshuffle::reference::unbitshuffle_naive(&shuffled, 4).len()
+    });
+    out.push(Speedup {
+        name: "unbitshuffle_u64_transpose_vs_naive",
+        payload: "offsets",
+        fast_mbps: fast.mbps(),
+        reference_mbps: refr.mbps(),
+    });
+
+    // 3. Byte shuffle: stride-4 single-pass specialization vs per-plane.
+    let fast = bench("shuffle4-fast", offsets.len(), cfg, || precond::shuffle(offsets, 4).len());
+    let refr = bench("shuffle4-naive", offsets.len(), cfg, || {
+        precond::shuffle::reference::shuffle_naive(offsets, 4).len()
+    });
+    out.push(Speedup {
+        name: "shuffle4_specialized_vs_generic",
+        payload: "offsets",
+        fast_mbps: fast.mbps(),
+        reference_mbps: refr.mbps(),
+    });
+
+    // 4. BitWriter word flush vs byte-at-a-time flushing (pure bit I/O).
+    let mut rng = Rng::new(0xB17);
+    let tokens: Vec<(u64, u32)> = (0..100_000)
+        .map(|_| {
+            let w = rng.range(1, 48) as u32;
+            (rng.next_u64() & ((1u64 << w) - 1), w)
+        })
+        .collect();
+    let bits: usize = tokens.iter().map(|&(_, w)| w as usize).sum();
+    let fast = bench("bitwriter-word", bits / 8, cfg, || {
+        let mut w = BitWriter::with_capacity(bits / 8 + 8);
+        for &(v, n) in &tokens {
+            w.write_bits(v, n);
+        }
+        w.finish().len()
+    });
+    let refr = bench("bitwriter-naive", bits / 8, cfg, || {
+        let mut w = NaiveBitWriter::new();
+        for &(v, n) in &tokens {
+            w.write_bits(v, n);
+        }
+        w.finish().len()
+    });
+    out.push(Speedup {
+        name: "bitwriter_word_flush_vs_naive",
+        payload: "random-tokens",
+        fast_mbps: fast.mbps(),
+        reference_mbps: refr.mbps(),
+    });
+    out
+}
+
+fn write_json(rows: &[Row], speedups: &[Speedup], quick: bool) -> std::io::Result<()> {
+    let result_items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"payload\": \"{}\", \"setting\": \"{}\", \"codec\": \"{}\", \"level\": {}, \"precond\": \"{}\", \"ratio\": {}, \"compress_MBps\": {}, \"decompress_MBps\": {}}}",
+                json_escape(r.payload),
+                json_escape(&r.setting.label()),
+                json_escape(r.setting.algorithm.label()),
+                r.setting.level,
+                json_escape(&r.setting.precond.label()),
+                json_num(r.ratio),
+                json_num(r.compress_mbps),
+                json_num(r.decompress_mbps),
+            )
+        })
+        .collect();
+    let speedup_items: Vec<String> = speedups
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"name\": \"{}\", \"payload\": \"{}\", \"fast_MBps\": {}, \"reference_MBps\": {}, \"speedup\": {}}}",
+                json_escape(s.name),
+                json_escape(s.payload),
+                json_num(s.fast_mbps),
+                json_num(s.reference_mbps),
+                json_num(s.fast_mbps / s.reference_mbps),
+            )
+        })
+        .collect();
+    let doc = format!(
+        "{{\n  \"schema\": \"bench-codecs/v1\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {}\n}}\n",
+        quick,
+        json_array(&result_items, "  "),
+        json_array(&speedup_items, "  "),
+    );
+    // Land next to Cargo.toml (the repo root) regardless of CWD.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_codecs.json");
+    std::fs::write(path, doc)?;
+    println!("wrote {path}");
+    Ok(())
 }
 
 fn main() {
     let cfg = BenchConfig::from_env();
-    let mut engine = Engine::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+
+    let rows = codec_grid(&cfg);
     let mut table = Table::new(&["payload", "setting", "ratio", "compress_MB_s", "decompress_MB_s"]);
-    for (pname, data) in payloads() {
-        for s in [
-            Settings::new(Algorithm::Zlib, 6),
-            Settings::new(Algorithm::CfZlib, 6),
-            Settings::new(Algorithm::Lz4, 1),
-            Settings::new(Algorithm::Zstd, 5),
-            Settings::new(Algorithm::Lzma, 6),
-            Settings::new(Algorithm::OldRoot, 6),
-        ] {
-            let c = engine.compress(&data, &s);
-            let rc = bench("c", data.len(), &cfg, || engine.compress(&data, &s).len());
-            let rd = bench("d", data.len(), &cfg, || engine.decompress(&c).unwrap().len());
-            table.row(vec![
-                pname.into(),
-                s.label(),
-                format!("{:.3}", data.len() as f64 / c.len() as f64),
-                format!("{:.1}", rc.mbps()),
-                format!("{:.1}", rd.mbps()),
-            ]);
-        }
+    for r in &rows {
+        table.row(vec![
+            r.payload.into(),
+            r.setting.label(),
+            format!("{:.3}", r.ratio),
+            format!("{:.1}", r.compress_mbps),
+            format!("{:.1}", r.decompress_mbps),
+        ]);
     }
     println!("{}", table.render());
     table.save_csv("codecs").unwrap();
 
-    // Preconditioner transform throughput (hot path on both write & read).
-    let mut t2 = Table::new(&["transform", "MB_s"]);
+    // Preconditioner transform throughput (hot path on both write & read);
+    // keeps results/precond.csv's historical [transform, MB_s] columns.
     let data = payloads().swap_remove(0).1;
+    let mut t2 = Table::new(&["transform", "MB_s"]);
     for (name, f) in [
         ("shuffle4-fwd", Box::new(|d: &[u8]| precond::shuffle(d, 4)) as Box<dyn Fn(&[u8]) -> Vec<u8>>),
         ("shuffle4-inv", Box::new(|d: &[u8]| precond::unshuffle(d, 4))),
@@ -72,4 +292,20 @@ fn main() {
     }
     println!("{}", t2.render());
     t2.save_csv("precond").unwrap();
+
+    let speedups = fast_path_speedups(&cfg);
+    let mut t3 = Table::new(&["fast path", "payload", "fast_MB_s", "reference_MB_s", "speedup"]);
+    for s in &speedups {
+        t3.row(vec![
+            s.name.into(),
+            s.payload.into(),
+            format!("{:.1}", s.fast_mbps),
+            format!("{:.1}", s.reference_mbps),
+            format!("{:.2}x", s.fast_mbps / s.reference_mbps),
+        ]);
+    }
+    println!("{}", t3.render());
+    t3.save_csv("fastpath").unwrap();
+
+    write_json(&rows, &speedups, quick).expect("writing BENCH_codecs.json");
 }

@@ -165,9 +165,61 @@ impl Table {
     }
 }
 
+/// Escape a string for embedding in a JSON document (no serde in the
+/// offline crate set; the bench artifacts hand-roll their JSON).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a float as a JSON number (`null` for non-finite values).
+pub fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render a list of pre-rendered JSON values as an array, one per line.
+pub fn json_array(items: &[String], indent: &str) -> String {
+    if items.is_empty() {
+        return "[]".to_string();
+    }
+    let inner = items
+        .iter()
+        .map(|i| format!("{indent}  {i}"))
+        .collect::<Vec<_>>()
+        .join(",\n");
+    format!("[\n{inner}\n{indent}]")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_helpers() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_num(1.5), "1.500");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        let arr = json_array(&["1".into(), "2".into()], "");
+        assert!(arr.starts_with("[\n"));
+        assert!(arr.contains("  1,\n"));
+        // Must parse as JSON (structure check only).
+        assert_eq!(arr.matches(',').count(), 1);
+    }
 
     #[test]
     fn bench_produces_sane_stats() {

@@ -4,4 +4,4 @@
 pub mod benchkit;
 pub mod figures;
 
-pub use benchkit::{bench, BenchConfig, BenchResult, Table};
+pub use benchkit::{bench, json_array, json_escape, json_num, BenchConfig, BenchResult, Table};

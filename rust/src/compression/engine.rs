@@ -64,78 +64,78 @@ impl Engine {
 
     /// Compress `data` under `settings` into a framed byte vector.
     pub fn compress(&mut self, data: &[u8], settings: &Settings) -> Vec<u8> {
-        // 1. Precondition.
-        let view: &[u8] = if settings.precond == crate::precond::Precond::None {
-            data
-        } else {
-            self.precond_buf.resize(data.len(), 0);
+        let mut out = Vec::with_capacity(data.len() / 2 + HEADER_LEN);
+        self.compress_append(data, settings, &mut out);
+        out
+    }
+
+    /// Compress `data` under `settings`, appending the framed records to
+    /// `out` (§Perf: the zero-alloc pipeline variant — `out` is typically a
+    /// recycled buffer from a [`crate::util::pool::BufferPool`]).
+    pub fn compress_append(&mut self, data: &[u8], settings: &Settings, out: &mut Vec<u8>) {
+        // 1. Precondition into the engine's reusable scratch. `mem::take`
+        // moves the scratch out of `self` so the span chunks (which borrow
+        // it) can coexist with the `&mut self` codec calls below — this
+        // removes the per-span copy the previous implementation paid.
+        let mut pre = std::mem::take(&mut self.precond_buf);
+        let use_pre = settings.precond != crate::precond::Precond::None;
+        if use_pre {
+            pre.resize(data.len(), 0);
             match settings.precond {
                 crate::precond::Precond::Shuffle(s) => {
-                    crate::precond::shuffle_into(data, s as usize, &mut self.precond_buf)
+                    crate::precond::shuffle_into(data, s as usize, &mut pre)
                 }
                 crate::precond::Precond::BitShuffle(s) => {
-                    crate::precond::bitshuffle_into(data, s as usize, &mut self.precond_buf)
+                    crate::precond::bitshuffle_into(data, s as usize, &mut pre)
                 }
                 crate::precond::Precond::Delta(s) => {
-                    self.precond_buf.copy_from_slice(data);
-                    crate::precond::delta_in_place(&mut self.precond_buf, s as usize);
+                    pre.copy_from_slice(data);
+                    crate::precond::delta_in_place(&mut pre, s as usize);
                 }
                 crate::precond::Precond::None => unreachable!(),
             }
-            &self.precond_buf
-        };
+        }
+        let view: &[u8] = if use_pre { &pre } else { data };
 
         // 2. Split into <=16MiB spans, compress each, frame.
-        // (view borrows self.precond_buf; split the borrow via local refs.)
-        let mut out = Vec::with_capacity(view.len() / 2 + HEADER_LEN);
-        let spans: Vec<(usize, usize)> = {
-            let mut v = Vec::new();
-            let mut pos = 0;
-            loop {
-                let end = (pos + MAX_SPAN).min(view.len());
-                v.push((pos, end));
-                if end == view.len() {
-                    break;
-                }
-                pos = end;
-            }
-            v
-        };
-        for (a, b) in spans {
-            // When a preconditioner ran, the span lives in self.precond_buf,
-            // which we cannot borrow across the &mut self codec calls; copy
-            // it out (bounded by MAX_SPAN, and preconditioned baskets are a
-            // small minority of traffic).
-            let owned;
-            let chunk: &[u8] = if settings.precond == crate::precond::Precond::None {
-                &data[a..b]
-            } else {
-                owned = self.precond_buf[a..b].to_vec();
-                &owned
-            };
+        out.reserve(view.len() / 2 + HEADER_LEN);
+        let mut pos = 0usize;
+        loop {
+            let end = (pos + MAX_SPAN).min(view.len());
+            let chunk = &view[pos..end];
             let (algorithm, level, payload) = self.compress_span(chunk, settings);
             let h = RecordHeader {
                 algorithm,
                 level,
                 precond: settings.precond,
-                compressed_len: payload.len(),
+                compressed_len: payload.as_ref().map_or(chunk.len(), |p| p.len()),
                 uncompressed_len: chunk.len(),
             };
-            write_header(&mut out, &h);
-            out.extend_from_slice(&payload);
+            write_header(out, &h);
+            match payload {
+                Some(p) => out.extend_from_slice(&p),
+                // Raw fallback: copy the span bytes straight into the frame.
+                None => out.extend_from_slice(chunk),
+            }
+            if end == view.len() {
+                break;
+            }
+            pos = end;
         }
-        out
+        self.precond_buf = pre;
     }
 
-    /// Compress one span; falls back to a raw record when the codec output
-    /// would expand (ROOT does the same).
-    fn compress_span(&mut self, chunk: &[u8], settings: &Settings) -> (Algorithm, u8, Vec<u8>) {
+    /// Compress one span. Returns `None` as the payload when the span
+    /// should be stored raw — codec output would expand (ROOT's
+    /// kUncompressed fallback) or compression is disabled — so the caller
+    /// copies the input bytes exactly once, into the output frame.
+    fn compress_span(&mut self, chunk: &[u8], settings: &Settings) -> (Algorithm, u8, Option<Vec<u8>>) {
         let level = settings.level;
         if level == 0 || settings.algorithm == Algorithm::None {
-            return (Algorithm::None, 0, chunk.to_vec());
+            return (Algorithm::None, 0, None);
         }
         let payload = match settings.algorithm {
-            Algorithm::None => chunk.to_vec(),
+            Algorithm::None => unreachable!("handled by the raw fallback above"),
             Algorithm::Zlib if self.dictionary.is_empty() => zlib_compress_with(
                 chunk,
                 Flavor::Reference,
@@ -175,9 +175,9 @@ impl Engine {
         if payload.len() >= chunk.len() {
             // Store raw: decompression speed matters more than a negative
             // ratio; ROOT falls back to kUncompressed spans identically.
-            (Algorithm::None, 0, chunk.to_vec())
+            (Algorithm::None, 0, None)
         } else {
-            (settings.algorithm, level, payload)
+            (settings.algorithm, level, Some(payload))
         }
     }
 

@@ -23,9 +23,10 @@
 
 use crate::compression::{Engine, Settings};
 use crate::coordinator::metrics::Metrics;
-use crate::rfile::writer::{frame_basket_record, BasketSink, RecordWriter};
-use crate::rfile::{basket::encode_basket, BasketLoc, PendingBasket};
+use crate::rfile::writer::{frame_basket_record_prefix, BasketSink, RecordWriter};
+use crate::rfile::{basket::encode_basket_into, BasketLoc, PendingBasket};
 use crate::rfile::format::RecordKind;
+use crate::util::pool::BufferPool;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, SyncSender};
@@ -88,14 +89,25 @@ impl ParallelSink {
         let (done_tx, done_rx) = std::sync::mpsc::sync_channel::<Done>(config.queue_depth.max(1) * 2);
         let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
 
+        // §Perf: one shared pool; workers rent payload buffers, the
+        // committer returns them after the bytes hit the file. Steady state
+        // performs no payload allocations at all. Caps bound worst-case
+        // retention: at most in-flight-count buffers parked, and any buffer
+        // grown past 4 MiB (a jumbo basket, vs the 32 KiB default) is freed
+        // rather than pinned for the sink's lifetime.
+        let pool = BufferPool::new(config.queue_depth.max(1) * 2 + config.workers, 4 << 20);
+
         let mut workers = Vec::with_capacity(config.workers);
         for _ in 0..config.workers.max(1) {
             let rx = Arc::clone(&job_rx);
             let tx = done_tx.clone();
             let m = Arc::clone(&metrics);
             let dict = config.dictionary.clone();
+            let pool = pool.clone();
             workers.push(std::thread::spawn(move || {
                 let mut engine = Engine::new();
+                // Worker-local scratch, reused across every basket.
+                let mut logical_scratch: Vec<u8> = Vec::new();
                 if !dict.is_empty() {
                     engine.set_dictionary(dict);
                 }
@@ -107,11 +119,14 @@ impl ParallelSink {
                     let Ok(job) = job else { break };
                     let t0 = Instant::now();
                     let uncompressed_len = job.basket.logical_len() as u32;
-                    let encoded = encode_basket(&job.basket, &job.settings, &mut engine);
-                    let payload = frame_basket_record(
-                        job.basket.branch_id,
-                        job.basket.basket_index,
-                        &encoded,
+                    let mut payload = pool.get();
+                    frame_basket_record_prefix(&mut payload, job.basket.branch_id, job.basket.basket_index);
+                    encode_basket_into(
+                        &job.basket,
+                        &job.settings,
+                        &mut engine,
+                        &mut logical_scratch,
+                        &mut payload,
                     );
                     m.record_basket(uncompressed_len as usize, payload.len(), t0.elapsed());
                     let done = Done {
@@ -131,7 +146,8 @@ impl ParallelSink {
         }
         drop(done_tx);
 
-        let committer = std::thread::spawn(move || commit_loop(writer, done_rx));
+        let commit_pool = pool.clone();
+        let committer = std::thread::spawn(move || commit_loop(writer, done_rx, commit_pool));
 
         Self {
             job_tx: Some(job_tx),
@@ -164,10 +180,12 @@ impl ParallelSink {
     }
 }
 
-/// Reorders by sequence number and writes records in order.
+/// Reorders by sequence number and writes records in order; returns each
+/// payload buffer to the pool once written.
 fn commit_loop(
     mut writer: RecordWriter,
     done_rx: Receiver<Done>,
+    pool: BufferPool,
 ) -> Result<(Vec<BasketLoc>, RecordWriter)> {
     let mut next_seq = 0u64;
     let mut pending: BTreeMap<u64, Done> = BTreeMap::new();
@@ -183,6 +201,7 @@ fn commit_loop(
             compressed_len: d.payload.len() as u32,
             uncompressed_len: d.uncompressed_len,
         });
+        pool.put(d.payload);
         Ok(())
     };
     while let Ok(done) = done_rx.recv() {

@@ -46,7 +46,7 @@ pub fn deflate_dict(buf: &[u8], start: usize, tuning: &Tuning) -> Vec<u8> {
             })
             .sum();
         let is_final = end_tok == tokens.len();
-        write_block(&mut w, &tokens[start_tok..end_tok], &buf[start_byte..start_byte + span], is_final);
+        write_block_with(&mut w, &tokens[start_tok..end_tok], &buf[start_byte..start_byte + span], is_final, true);
         start_tok = end_tok;
         start_byte += span;
     }
@@ -60,6 +60,27 @@ pub fn deflate_with(
     tuning: &Tuning,
     matcher: &mut Matcher,
     tokens: &mut Vec<Token>,
+) -> Vec<u8> {
+    deflate_with_emitter(data, tuning, matcher, tokens, true)
+}
+
+/// Reference encoder: identical match finding and tree construction, but
+/// per-field token emission (one `write_bits` per Huffman code / extra-bits
+/// field). The fused fast path must stay byte-identical to this — property
+/// tested in `rust/tests/prop_codecs.rs`.
+#[doc(hidden)]
+pub fn deflate_reference(data: &[u8], tuning: &Tuning) -> Vec<u8> {
+    let mut matcher = Matcher::new();
+    let mut tokens = Vec::new();
+    deflate_with_emitter(data, tuning, &mut matcher, &mut tokens, false)
+}
+
+fn deflate_with_emitter(
+    data: &[u8],
+    tuning: &Tuning,
+    matcher: &mut Matcher,
+    tokens: &mut Vec<Token>,
+    fused: bool,
 ) -> Vec<u8> {
     let mut w = BitWriter::with_capacity(data.len() / 2 + 64);
     if data.is_empty() {
@@ -83,11 +104,12 @@ pub fn deflate_with(
             })
             .sum();
         let is_final = end_tok == tokens.len();
-        write_block(
+        write_block_with(
             &mut w,
             &tokens[start_tok..end_tok],
             &data[start_byte..start_byte + span],
             is_final,
+            fused,
         );
         start_tok = end_tok;
         start_byte += span;
@@ -186,7 +208,7 @@ fn body_cost(tokens_hist: &([u64; NUM_LITLEN], [u64; NUM_DIST]), lit_len: &[u8],
     bits
 }
 
-fn write_block(w: &mut BitWriter, tokens: &[Token], raw: &[u8], is_final: bool) {
+fn write_block_with(w: &mut BitWriter, tokens: &[Token], raw: &[u8], is_final: bool, fused: bool) {
     let hist = histogram(tokens);
     let (lit_hist, dist_hist) = &hist;
 
@@ -224,7 +246,7 @@ fn write_block(w: &mut BitWriter, tokens: &[Token], raw: &[u8], is_final: bool) 
             dist_lengths: fixed_dist,
             dist_codes,
         };
-        write_body(w, tokens, &trees);
+        write_body(w, tokens, &trees, fused);
     } else {
         w.write_bits(is_final as u64, 1);
         w.write_bits(0b10, 2);
@@ -237,7 +259,7 @@ fn write_block(w: &mut BitWriter, tokens: &[Token], raw: &[u8], is_final: bool) 
             dist_lengths: dyn_dist,
             dist_codes,
         };
-        write_body(w, tokens, &trees);
+        write_body(w, tokens, &trees, fused);
     }
 }
 
@@ -349,7 +371,62 @@ fn write_tree_header(
     }
 }
 
-fn write_body(w: &mut BitWriter, tokens: &[Token], trees: &Trees) {
+fn write_body(w: &mut BitWriter, tokens: &[Token], trees: &Trees, fused: bool) {
+    if fused {
+        write_body_fused(w, tokens, trees);
+    } else {
+        write_body_reference(w, tokens, trees);
+    }
+}
+
+/// §Perf fast path: every match token costs exactly ONE `write_bits` call.
+///
+/// DEFLATE transmits a match as four LSB-first fields — length code, length
+/// extra bits, distance code, distance extra bits. Because the bit writer is
+/// LSB-first, writing fields A then B is identical to writing
+/// `A | (B << bits(A))` in one call; the whole token is at most
+/// 15+5+15+13 = 48 bits, under the writer's 57-bit limit. The per-length
+/// (code ‖ extra) halves are precomputed into a 256-entry fused table per
+/// block; the distance half is fused inline from the (much smaller) distance
+/// code tables. Byte-identical to [`write_body_reference`] by construction
+/// and by property test.
+fn write_body_fused(w: &mut BitWriter, tokens: &[Token], trees: &Trees) {
+    // len-3 -> (huffman code | extra value << code_len, total bit count).
+    let mut len_fused = [(0u32, 0u8); 256];
+    for len in 3u16..=258 {
+        let lc = length_code(len);
+        let s = 257 + lc;
+        let (lbase, lextra) = LENGTH_TABLE[lc];
+        let nbits = trees.lit_lengths[s];
+        let bits = trees.lit_codes[s] as u32 | (((len - lbase) as u32) << nbits);
+        len_fused[(len - 3) as usize] = (bits, nbits + lextra);
+    }
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => {
+                let s = b as usize;
+                w.write_bits(trees.lit_codes[s] as u64, trees.lit_lengths[s] as u32);
+            }
+            Token::Match { len, dist } => {
+                let (lbits, ln) = len_fused[(len - 3) as usize];
+                let dc = dist_code(dist);
+                let (dbase, dextra) = DIST_TABLE[dc];
+                let dn = trees.dist_lengths[dc] as u32;
+                let dbits = trees.dist_codes[dc] as u64 | (((dist - dbase) as u64) << dn);
+                w.write_bits(
+                    lbits as u64 | (dbits << ln),
+                    ln as u32 + dn + dextra as u32,
+                );
+            }
+        }
+    }
+    // End of block.
+    w.write_bits(trees.lit_codes[256] as u64, trees.lit_lengths[256] as u32);
+}
+
+/// Reference per-field emission (one `write_bits` per Huffman/extra field);
+/// oracle for the fused fast path.
+fn write_body_reference(w: &mut BitWriter, tokens: &[Token], trees: &Trees) {
     for t in tokens {
         match *t {
             Token::Literal(b) => {
@@ -360,7 +437,6 @@ fn write_body(w: &mut BitWriter, tokens: &[Token], trees: &Trees) {
                 let lc = length_code(len);
                 let s = 257 + lc;
                 let (lbase, lextra) = LENGTH_TABLE[lc];
-                // Combine code + extra bits in up to 2 writes.
                 w.write_bits(trees.lit_codes[s] as u64, trees.lit_lengths[s] as u32);
                 if lextra > 0 {
                     w.write_bits((len - lbase) as u64, lextra as u32);
@@ -418,6 +494,32 @@ mod tests {
         let out = deflate(&data, &Tuning::new(Flavor::Cloudflare, 6));
         // Stored fallback keeps expansion tiny.
         assert!(out.len() <= data.len() + 5 * (data.len() / MAX_STORED + 1) + 16);
+    }
+
+    #[test]
+    fn fused_emission_is_byte_identical_to_reference() {
+        let mut rng = crate::util::rng::Rng::new(0xF0_5ED);
+        let mut corpus: Vec<Vec<u8>> = vec![
+            vec![],
+            b"abcabcabcabcabcabc".to_vec(),
+            vec![0u8; 70_000],
+            (0u32..10_000).flat_map(|i| (i * 7).to_be_bytes()).collect(),
+        ];
+        corpus.push(rng.bytes(40_000));
+        for data in &corpus {
+            for flavor in [Flavor::Reference, Flavor::Cloudflare] {
+                for level in [1u8, 6, 9] {
+                    let t = Tuning::new(flavor, level);
+                    assert_eq!(
+                        deflate(data, &t),
+                        deflate_reference(data, &t),
+                        "{} on {} bytes",
+                        t.label(),
+                        data.len()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -323,25 +323,43 @@ impl Decoder {
     /// Decode one symbol from the bit reader.
     #[inline]
     pub fn decode(&self, r: &mut crate::util::bitio::BitReader) -> Result<u16, HuffError> {
+        match self.decode_fast(r) {
+            INVALID_SYM => Err(HuffError("invalid code")),
+            s => Ok(s as u16),
+        }
+    }
+
+    /// §Perf hot-loop variant: decode one symbol with no `Result` wrapping,
+    /// returning [`INVALID_SYM`] for an invalid code. Identical table walk
+    /// to [`Decoder::decode`] (which is implemented on top of this). The
+    /// caller guarantees enough buffered bits — the inflate fast loop checks
+    /// `bits_remaining() >= 64` before each token, which covers the
+    /// decoder's 15-bit worst case several times over thanks to the bit
+    /// reader's 57-bit refill.
+    #[inline(always)]
+    pub fn decode_fast(&self, r: &mut crate::util::bitio::BitReader) -> u32 {
         let root_bits = self.max_len.min(ROOT_BITS);
         let e = self.root[r.peek(root_bits) as usize];
         if e.len as u32 <= root_bits && e.len != 0 {
             r.consume(e.len as u32);
-            return Ok(e.val);
+            return e.val as u32;
         }
         if e.len == SUB_MARKER {
             let (start, extra) = self.subs[e.val as usize];
             let idx = (r.peek(root_bits + extra as u32) >> root_bits) as usize;
             let e2 = self.sub[start as usize + idx];
             if e2.len == 0 {
-                return Err(HuffError("invalid code"));
+                return INVALID_SYM;
             }
             r.consume(e2.len as u32);
-            return Ok(e2.val);
+            return e2.val as u32;
         }
-        Err(HuffError("invalid code"))
+        INVALID_SYM
     }
 }
+
+/// Sentinel returned by [`Decoder::decode_fast`] for invalid codes.
+pub const INVALID_SYM: u32 = u32::MAX;
 
 #[cfg(test)]
 mod tests {

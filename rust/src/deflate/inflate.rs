@@ -184,6 +184,49 @@ fn inflate_block(
     out: &mut Vec<u8>,
     max_out: usize,
 ) -> Result<(), InflateError> {
+    // §Perf multi-symbol fast loop (zlib-ng's `inflate_fast` shape): while
+    // at least 64 real input bits remain and the output has a full
+    // MAX_MATCH of headroom, a complete token — literal (<=15 bits) or
+    // match (<=15+5+15+13 = 48 bits) — can be decoded with NO per-symbol
+    // truncation or output-limit checks: the reader's 57-bit refill means
+    // every peek sees real bits, and consuming <=48 of >=64 real bits can
+    // never touch synthetic padding. The careful loop below finishes the
+    // tail; both loops share the same tables, so behavior is identical.
+    while r.bits_remaining() >= 64 && out.len() + 258 <= max_out {
+        let sym = lit.decode_fast(r);
+        if sym < 256 {
+            out.push(sym as u8);
+            continue;
+        }
+        if sym == 256 {
+            return Ok(());
+        }
+        if sym > 285 {
+            return Err(if sym == crate::deflate::huffman::INVALID_SYM {
+                E("bad literal/length code")
+            } else {
+                E("invalid literal/length symbol")
+            });
+        }
+        let (lbase, lextra) = LENGTH_TABLE[(sym - 257) as usize];
+        let len = lbase as usize + r.read_bits(lextra as u32) as usize;
+        let dist_dec = dist.ok_or(E("match with empty distance tree"))?;
+        let dsym = dist_dec.decode_fast(r);
+        if dsym as usize >= DIST_TABLE.len() {
+            return Err(if dsym == crate::deflate::huffman::INVALID_SYM {
+                E("bad distance code")
+            } else {
+                E("invalid distance symbol")
+            });
+        }
+        let (dbase, dextra) = DIST_TABLE[dsym as usize];
+        let d = dbase as usize + r.read_bits(dextra as u32) as usize;
+        if d > out.len() {
+            return Err(E("distance beyond output start"));
+        }
+        copy_match(out, d, len);
+    }
+    // Careful tail loop: per-symbol truncation and output-limit checks.
     loop {
         let sym = lit.decode(r).map_err(|_| E("bad literal/length code"))?;
         if r.overflowed() {

@@ -237,8 +237,15 @@ impl Matcher {
 }
 
 /// Length of the common prefix of `data[a..]` and `data[b..]`, capped.
+///
+/// §Perf: extends the match 8 bytes per iteration — one `u64` load pair, an
+/// XOR, and `trailing_zeros` to locate the first differing byte — instead of
+/// a byte-at-a-time walk; the scalar loop only finishes the sub-8-byte tail.
+/// `pub` (doc-hidden) so the property suite can pit it against
+/// [`reference::match_len_naive`].
+#[doc(hidden)]
 #[inline]
-fn match_len(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
+pub fn match_len(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
     debug_assert!(a < b);
     let x = &data[a..];
     let y = &data[b..];
@@ -258,6 +265,22 @@ fn match_len(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
         i += 1;
     }
     i
+}
+
+/// Byte-at-a-time oracle for [`match_len`] (property-tested equal).
+#[doc(hidden)]
+pub mod reference {
+    pub fn match_len_naive(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
+        debug_assert!(a < b);
+        let x = &data[a..];
+        let y = &data[b..];
+        let cap = cap.min(x.len()).min(y.len());
+        let mut i = 0usize;
+        while i < cap && x[i] == y[i] {
+            i += 1;
+        }
+        i
+    }
 }
 
 /// Expand tokens back to bytes (used by tests and as a matcher oracle).

@@ -2,7 +2,39 @@
 //! tuning profiles: reference zlib and the Cloudflare fork whose patch set
 //! the paper contributed to ROOT 6.18.00 (§2.1, Figs 4-5).
 //!
-//! Format-compatible with any zlib: see `rust/tests/interop_flate2.rs`.
+//! Format-compatible with any zlib: see `rust/tests/interop_flate2.rs`
+//! (run with `--features interop-flate2`).
+//!
+//! # §Perf fast paths (hot-path throughput overhaul)
+//!
+//! Four classic scalar fast paths, each with an in-tree naive reference it
+//! must stay **bit-identical** to (asserted by `rust/tests/prop_codecs.rs`
+//! across the fuzz corpus):
+//!
+//! * **Match extension** (`matcher::match_len`): extends candidate matches
+//!   8 bytes per step via `u64` XOR + `trailing_zeros`; oracle:
+//!   `matcher::reference::match_len_naive`. Chain walking is shortened by
+//!   zlib's `good_length`/`nice_length`/`max_chain` knobs from
+//!   [`tuning::LevelParams`].
+//! * **Fused token emission** (`compress`): a 256-entry per-block table
+//!   fuses each length's Huffman code with its extra bits, and the distance
+//!   half fuses inline, so one LSB-first `write_bits` call emits an entire
+//!   match token (≤48 bits); oracle: `compress::deflate_reference`
+//!   (per-field emission).
+//! * **Word-flush bit writer** (`crate::util::bitio::BitWriter`): flushes
+//!   whole 64-bit words instead of byte-at-a-time; oracle:
+//!   `bitio::reference::NaiveBitWriter`.
+//! * **Multi-symbol inflate loop** (`inflate` + `huffman::Decoder::
+//!   decode_fast`): while ≥64 real bits and ≥258 output bytes of headroom
+//!   remain, whole tokens decode with no per-symbol truncation/limit
+//!   checks, exploiting the reader's 57-bit refill; the careful per-symbol
+//!   loop finishes the tail, so error behavior on malformed input is
+//!   unchanged.
+//!
+//! Equivalence guarantee: fast and reference paths produce byte-identical
+//! streams (same tokens, same trees, same bits); on decode the fast loop is
+//! a check-hoisted restriction of the careful loop. Compressed output is
+//! therefore byte-for-byte reproducible across this PR.
 
 pub mod compress;
 pub mod consts;

@@ -134,6 +134,64 @@ pub fn unbitshuffle_into(data: &[u8], stride: usize, out: &mut [u8]) {
     out[body..].copy_from_slice(&data[body..]);
 }
 
+/// Bit-at-a-time reference implementations (pre-optimization), kept as the
+/// oracle for the SWAR fast path: `rust/tests/prop_codecs.rs` asserts the
+/// u64 8×8-transpose loops above are byte-identical to these for every
+/// (input, stride). Also the executable statement of the layout contract
+/// shared with the Pallas kernel.
+#[doc(hidden)]
+pub mod reference {
+    /// Scalar bit-by-bit forward transform; same layout contract as
+    /// [`super::bitshuffle`].
+    pub fn bitshuffle_naive(data: &[u8], stride: usize) -> Vec<u8> {
+        let mut out = vec![0u8; data.len()];
+        if stride == 0 || data.len() < stride * 8 {
+            out.copy_from_slice(data);
+            return out;
+        }
+        let nelem = (data.len() / stride) & !7;
+        let body = nelem * stride;
+        let plane_bytes = nelem / 8;
+        for e in 0..nelem {
+            for b in 0..stride {
+                let byte = data[e * stride + b];
+                for bit in 0..8 {
+                    let v = (byte >> bit) & 1;
+                    let plane = b * 8 + bit;
+                    out[plane * plane_bytes + e / 8] |= v << (e % 8);
+                }
+            }
+        }
+        out[body..].copy_from_slice(&data[body..]);
+        out
+    }
+
+    /// Scalar bit-by-bit inverse transform.
+    pub fn unbitshuffle_naive(data: &[u8], stride: usize) -> Vec<u8> {
+        let mut out = vec![0u8; data.len()];
+        if stride == 0 || data.len() < stride * 8 {
+            out.copy_from_slice(data);
+            return out;
+        }
+        let nelem = (data.len() / stride) & !7;
+        let body = nelem * stride;
+        let plane_bytes = nelem / 8;
+        for e in 0..nelem {
+            for b in 0..stride {
+                let mut acc = 0u8;
+                for bit in 0..8 {
+                    let plane = b * 8 + bit;
+                    let v = (data[plane * plane_bytes + e / 8] >> (e % 8)) & 1;
+                    acc |= v << bit;
+                }
+                out[e * stride + b] = acc;
+            }
+        }
+        out[body..].copy_from_slice(&data[body..]);
+        out
+    }
+}
+
 /// 8x8 bit-matrix transpose in a u64 (Hacker's Delight §7-3): byte lane i,
 /// bit j maps to byte lane j, bit i. Self-inverse.
 #[inline]
@@ -215,6 +273,23 @@ mod tests {
             } else {
                 assert_eq!(x, 0, "plane byte {i}");
             }
+        }
+    }
+
+    #[test]
+    fn swar_matches_naive_reference() {
+        let mut rng = Rng::new(0xB177);
+        for _ in 0..200 {
+            let n = rng.range(0, 2000);
+            let stride = rng.range(1, 10);
+            let data = rng.bytes(n);
+            let fast = bitshuffle(&data, stride);
+            assert_eq!(fast, reference::bitshuffle_naive(&data, stride), "fwd n={n} stride={stride}");
+            assert_eq!(
+                unbitshuffle(&fast, stride),
+                reference::unbitshuffle_naive(&fast, stride),
+                "inv n={n} stride={stride}"
+            );
         }
     }
 

@@ -4,6 +4,25 @@
 //! The paper investigates Blosc-inspired Shuffle and BitShuffle to rescue
 //! LZ4's compression ratio on ROOT offset arrays (Fig 6); we additionally
 //! ship a Delta transform used by the adaptive planner.
+//!
+//! # §Perf fast paths
+//!
+//! * **BitShuffle** runs as a SWAR loop: each 8-element × 8-bit tile is
+//!   gathered into a `u64` and transposed with the Hacker's-Delight 8×8
+//!   bit-matrix trick (~18 ALU ops) instead of bit-at-a-time shifts. The
+//!   scalar loop survives as `bitshuffle::reference::{bitshuffle_naive,
+//!   unbitshuffle_naive}` — also the executable statement of the layout
+//!   contract shared with the Pallas kernel
+//!   (`python/compile/kernels/bitshuffle.py`).
+//! * **Shuffle** has single-pass specializations for the common strides
+//!   2/4/8 (one `chunks_exact` read pass, `stride` sequential write
+//!   streams via `split_at_mut`); the any-stride per-plane loop survives as
+//!   `shuffle::reference::{shuffle_naive, unshuffle_naive}`.
+//!
+//! Equivalence guarantee: every fast path is byte-identical to its naive
+//! reference for all (input, stride) — property-tested in
+//! `rust/tests/prop_codecs.rs` across the fuzz corpus, so on-disk bytes are
+//! unchanged by the optimization PR.
 
 pub mod bitshuffle;
 pub mod delta;

@@ -30,12 +30,18 @@ impl PendingBasket {
     /// ROOT serializes the offset array as 32-bit ints in the same buffer;
     /// the paper's "1, 2, 3, 4" example is exactly this array.
     pub fn logical_payload(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.data.len() + self.offsets.len() * 4);
+        let mut out = Vec::with_capacity(self.logical_len());
+        self.logical_payload_into(&mut out);
+        out
+    }
+
+    /// Append the logical payload to a caller-provided (reusable) buffer.
+    pub fn logical_payload_into(&self, out: &mut Vec<u8>) {
+        out.reserve(self.logical_len());
         out.extend_from_slice(&self.data);
         for &o in &self.offsets {
             out.extend_from_slice(&o.to_be_bytes());
         }
-        out
     }
 
     pub fn logical_len(&self) -> usize {
@@ -50,14 +56,29 @@ pub fn encode_basket(
     settings: &Settings,
     engine: &mut Engine,
 ) -> Vec<u8> {
-    let logical = b.logical_payload();
-    let blob = engine.compress(&logical, settings);
-    let mut out = Vec::with_capacity(blob.len() + 16);
-    put_uvarint(&mut out, b.n_entries as u64);
-    put_uvarint(&mut out, b.data.len() as u64);
-    put_uvarint(&mut out, b.offsets.len() as u64);
-    out.extend_from_slice(&blob);
+    let mut logical = Vec::new();
+    let mut out = Vec::with_capacity(b.logical_len() / 2 + 16);
+    encode_basket_into(b, settings, engine, &mut logical, &mut out);
     out
+}
+
+/// Zero-alloc variant (§Perf): appends the encoded basket to `out` using
+/// `logical_scratch` for the intermediate logical payload. Both buffers are
+/// caller-owned so pipeline workers can recycle them across baskets; `out`
+/// is appended to (not cleared) so record framing can precede it.
+pub fn encode_basket_into(
+    b: &PendingBasket,
+    settings: &Settings,
+    engine: &mut Engine,
+    logical_scratch: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) {
+    logical_scratch.clear();
+    b.logical_payload_into(logical_scratch);
+    put_uvarint(out, b.n_entries as u64);
+    put_uvarint(out, b.data.len() as u64);
+    put_uvarint(out, b.offsets.len() as u64);
+    engine.compress_append(logical_scratch, settings, out);
 }
 
 /// Decoded basket content.

@@ -15,6 +15,7 @@ pub use branch::{BranchDef, BranchType, Value};
 pub use meta::{BasketLoc, TreeMeta};
 pub use reader::TreeReader;
 pub use writer::{
-    frame_basket_record, write_tree_serial, BasketSink, RecordWriter, SerialSink, TreeWriter,
+    frame_basket_record, frame_basket_record_prefix, write_tree_serial, BasketSink, RecordWriter,
+    SerialSink, TreeWriter,
     DEFAULT_BASKET_SIZE,
 };

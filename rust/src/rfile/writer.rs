@@ -4,7 +4,7 @@
 //! parallel compression pipeline (coordinator) plugs in; the default
 //! [`SerialSink`] compresses inline.
 
-use super::basket::{encode_basket, PendingBasket};
+use super::basket::{encode_basket_into, PendingBasket};
 use super::branch::{BranchDef, Value};
 use super::format::{self, RecordKind};
 use super::meta::{BasketLoc, TreeMeta};
@@ -63,28 +63,45 @@ impl RecordWriter {
 /// `[uvarint branch_id][uvarint basket_index][encoded basket]`.
 pub fn frame_basket_record(branch_id: u32, basket_index: u32, encoded: &[u8]) -> Vec<u8> {
     let mut payload = Vec::with_capacity(encoded.len() + 8);
-    put_uvarint(&mut payload, branch_id as u64);
-    put_uvarint(&mut payload, basket_index as u64);
+    frame_basket_record_prefix(&mut payload, branch_id, basket_index);
     payload.extend_from_slice(encoded);
     payload
 }
 
-/// Serial sink: compress + write inline on the caller's thread.
+/// Append just the framing prefix (`[uvarint branch_id][uvarint
+/// basket_index]`) — the zero-alloc sinks write this then encode the basket
+/// directly into the same buffer. Single source of truth for the layout.
+pub fn frame_basket_record_prefix(out: &mut Vec<u8>, branch_id: u32, basket_index: u32) {
+    put_uvarint(out, branch_id as u64);
+    put_uvarint(out, basket_index as u64);
+}
+
+/// Serial sink: compress + write inline on the caller's thread. The two
+/// scratch buffers are reused across submits, so steady state allocates
+/// nothing per basket (§Perf, same discipline as the parallel pipeline).
 pub struct SerialSink {
     writer: RecordWriter,
     engine: Engine,
     locs: Vec<BasketLoc>,
+    logical_scratch: Vec<u8>,
+    payload_scratch: Vec<u8>,
 }
 
 impl SerialSink {
     pub fn new(writer: RecordWriter) -> Self {
-        Self { writer, engine: Engine::new(), locs: Vec::new() }
+        Self {
+            writer,
+            engine: Engine::new(),
+            locs: Vec::new(),
+            logical_scratch: Vec::new(),
+            payload_scratch: Vec::new(),
+        }
     }
 
     pub fn with_dictionary(writer: RecordWriter, dict: Vec<u8>) -> Self {
-        let mut engine = Engine::new();
-        engine.set_dictionary(dict);
-        Self { writer, engine, locs: Vec::new() }
+        let mut sink = Self::new(writer);
+        sink.engine.set_dictionary(dict);
+        sink
     }
 
     /// Hand back the record writer to close the file (after finish()).
@@ -96,16 +113,23 @@ impl SerialSink {
 impl BasketSink for SerialSink {
     fn submit(&mut self, basket: PendingBasket, settings: Settings) -> Result<()> {
         let uncompressed_len = basket.logical_len() as u32;
-        let encoded = encode_basket(&basket, &settings, &mut self.engine);
-        let payload = frame_basket_record(basket.branch_id, basket.basket_index, &encoded);
-        let off = self.writer.append(RecordKind::Basket, &payload)?;
+        self.payload_scratch.clear();
+        frame_basket_record_prefix(&mut self.payload_scratch, basket.branch_id, basket.basket_index);
+        encode_basket_into(
+            &basket,
+            &settings,
+            &mut self.engine,
+            &mut self.logical_scratch,
+            &mut self.payload_scratch,
+        );
+        let off = self.writer.append(RecordKind::Basket, &self.payload_scratch)?;
         self.locs.push(BasketLoc {
             branch_id: basket.branch_id,
             basket_index: basket.basket_index,
             first_entry: basket.first_entry,
             n_entries: basket.n_entries,
             file_offset: off,
-            compressed_len: payload.len() as u32,
+            compressed_len: self.payload_scratch.len() as u32,
             uncompressed_len,
         });
         Ok(())

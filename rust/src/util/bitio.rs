@@ -24,27 +24,48 @@ impl BitWriter {
     }
 
     /// Write the low `n` bits of `bits` (n <= 57).
+    ///
+    /// §Perf: flushes the accumulator *word-at-a-time* — one unconditional
+    /// 8-byte little-endian store followed by a truncate to the number of
+    /// whole bytes — instead of the byte-by-byte `push` loop. The invariant
+    /// is `nbits < 8 && acc < (1 << nbits)` between calls, so up to 57 new
+    /// bits always fit in the 64-bit accumulator.
     #[inline]
     pub fn write_bits(&mut self, bits: u64, n: u32) {
         debug_assert!(n <= 57);
         debug_assert!(n == 64 || bits < (1u64 << n) || n == 0);
+        debug_assert!(self.nbits < 8 && self.acc >> self.nbits == 0);
         self.acc |= bits << self.nbits;
         self.nbits += n;
-        while self.nbits >= 8 {
-            self.out.push(self.acc as u8);
-            self.acc >>= 8;
-            self.nbits -= 8;
+        if self.nbits >= 8 {
+            let nbytes = (self.nbits >> 3) as usize;
+            let len = self.out.len();
+            self.out.extend_from_slice(&self.acc.to_le_bytes());
+            self.out.truncate(len + nbytes);
+            // `nbits` can be exactly 64 here (7 pending + 57 new), making a
+            // single `>> 64` UB; the two-step shift keeps every case defined
+            // and leaves only the still-pending low bits in the accumulator,
+            // so a later `align_byte` can never re-emit already-flushed
+            // (stale) bytes.
+            self.acc = (self.acc >> 1) >> (nbytes * 8 - 1);
+            self.nbits &= 7;
         }
     }
 
     /// Pad with zero bits to the next byte boundary.
+    ///
+    /// With the word-flush discipline `nbits < 8` always holds on entry and
+    /// `acc` holds exactly the pending bits (high bits zero), so at most one
+    /// byte is emitted and the accumulator reset cannot discard real data.
     #[inline]
     pub fn align_byte(&mut self) {
+        debug_assert!(self.nbits < 8);
         if self.nbits > 0 {
             self.out.push(self.acc as u8);
             self.acc = 0;
             self.nbits = 0;
         }
+        debug_assert_eq!(self.acc, 0, "no stale bits may survive alignment");
     }
 
     /// Write raw bytes; the stream must be byte-aligned.
@@ -67,6 +88,51 @@ impl BitWriter {
     pub fn finish(mut self) -> Vec<u8> {
         self.align_byte();
         self.out
+    }
+}
+
+/// Pre-optimization reference implementations, kept as oracles for the
+/// property tests in `rust/tests/prop_codecs.rs`: the word-flush
+/// [`BitWriter`] must stay byte-identical to this byte-at-a-time writer for
+/// every (value, width) sequence, including `align_byte` interleavings.
+#[doc(hidden)]
+pub mod reference {
+    /// Byte-at-a-time LSB-first bit writer (the original hot-path code).
+    #[derive(Default)]
+    pub struct NaiveBitWriter {
+        out: Vec<u8>,
+        acc: u64,
+        nbits: u32,
+    }
+
+    impl NaiveBitWriter {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        pub fn write_bits(&mut self, bits: u64, n: u32) {
+            debug_assert!(n <= 57);
+            self.acc |= bits << self.nbits;
+            self.nbits += n;
+            while self.nbits >= 8 {
+                self.out.push(self.acc as u8);
+                self.acc >>= 8;
+                self.nbits -= 8;
+            }
+        }
+
+        pub fn align_byte(&mut self) {
+            if self.nbits > 0 {
+                self.out.push(self.acc as u8);
+                self.acc = 0;
+                self.nbits = 0;
+            }
+        }
+
+        pub fn finish(mut self) -> Vec<u8> {
+            self.align_byte();
+            self.out
+        }
     }
 }
 
@@ -265,6 +331,64 @@ mod tests {
         let mut out = [0u8; 3];
         r.read_bytes(&mut out).unwrap();
         assert_eq!(&out, b"abc");
+    }
+
+    #[test]
+    fn word_flush_matches_naive_writer() {
+        // The word-flush writer must be byte-identical to the byte-at-a-time
+        // reference for arbitrary width sequences with interleaved aligns.
+        let mut rng = Rng::new(0xF1A5);
+        for _ in 0..100 {
+            let mut w = BitWriter::new();
+            let mut nw = reference::NaiveBitWriter::new();
+            for _ in 0..rng.range(1, 500) {
+                if rng.chance(0.1) {
+                    w.align_byte();
+                    nw.align_byte();
+                    continue;
+                }
+                let width = rng.range(1, 57) as u32;
+                let val = rng.next_u64() & ((1u64 << width) - 1);
+                w.write_bits(val, width);
+                nw.write_bits(val, width);
+            }
+            assert_eq!(w.finish(), nw.finish());
+        }
+    }
+
+    #[test]
+    fn full_accumulator_boundary() {
+        // 7 pending bits + 57 new bits = exactly 64: the flush must emit all
+        // 8 bytes and leave a clean accumulator (the `>> 64` hazard).
+        let mut w = BitWriter::new();
+        w.write_bits(0x55, 7);
+        w.write_bits((1u64 << 57) - 1, 57);
+        assert_eq!(w.byte_len(), 8);
+        assert_eq!(w.bit_len(), 64);
+        // align_byte after an exact word flush must emit nothing.
+        w.align_byte();
+        assert_eq!(w.byte_len(), 8);
+        w.write_bits(0b1010, 4);
+        let buf = w.finish();
+        assert_eq!(buf.len(), 9);
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(7), 0x55);
+        assert_eq!(r.read_bits(57), (1u64 << 57) - 1);
+        assert_eq!(r.read_bits(4), 0b1010);
+    }
+
+    #[test]
+    fn align_byte_regression_no_stale_bytes() {
+        // Regression: after a word flush lands exactly on a byte boundary,
+        // align_byte + further writes must not re-emit flushed bytes.
+        let mut w = BitWriter::new();
+        w.write_bits(0xFF, 8); // flush leaves nbits == 0
+        w.align_byte(); // must be a no-op
+        w.write_bits(0x00, 8);
+        w.write_bits(0b1, 1);
+        w.align_byte(); // pads the single pending bit
+        let buf = w.finish();
+        assert_eq!(buf, vec![0xFF, 0x00, 0b1]);
     }
 
     #[test]

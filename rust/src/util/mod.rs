@@ -2,6 +2,7 @@
 //! statistics, timing.
 
 pub mod bitio;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;

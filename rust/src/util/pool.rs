@@ -1,0 +1,154 @@
+//! A small thread-safe `Vec<u8>` pool (§Perf): the parallel pipeline's
+//! workers compress thousands of baskets per second, and before this pool
+//! every basket paid one fresh output-payload allocation on the worker plus
+//! a drop on the committer. Renting buffers from a shared free list makes
+//! the steady-state hot path allocation-free: the committer returns each
+//! payload buffer after writing it, and the worker's next basket reuses the
+//! (already-grown) capacity.
+//!
+//! Bounded on both axes so the pool cannot hoard memory: at most
+//! `max_buffers` parked buffers, and any buffer whose capacity exceeded
+//! `max_capacity` (e.g. one pathological jumbo basket) is dropped instead of
+//! parked.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared pool of reusable byte buffers. `Clone` is cheap (`Arc`).
+#[derive(Clone)]
+pub struct BufferPool {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    free: Mutex<Vec<Vec<u8>>>,
+    max_buffers: usize,
+    max_capacity: usize,
+    reuses: AtomicU64,
+    allocs: AtomicU64,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        // 64 parked buffers × 32 MiB cap comfortably covers a pipeline with
+        // 2×workers in-flight baskets of the 16 MiB max record span.
+        Self::new(64, 32 << 20)
+    }
+}
+
+impl BufferPool {
+    pub fn new(max_buffers: usize, max_capacity: usize) -> Self {
+        Self {
+            inner: Arc::new(Inner {
+                free: Mutex::new(Vec::new()),
+                max_buffers,
+                max_capacity,
+                reuses: AtomicU64::new(0),
+                allocs: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Rent a cleared buffer (recycled if one is parked, fresh otherwise).
+    pub fn get(&self) -> Vec<u8> {
+        let recycled = self.inner.free.lock().unwrap().pop();
+        match recycled {
+            Some(buf) => {
+                self.inner.reuses.fetch_add(1, Ordering::Relaxed);
+                debug_assert!(buf.is_empty());
+                buf
+            }
+            None => {
+                self.inner.allocs.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer to the pool. Contents are cleared; capacity is kept
+    /// unless it exceeds the pool's cap or the free list is full.
+    pub fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 || buf.capacity() > self.inner.max_capacity {
+            return;
+        }
+        buf.clear();
+        let mut free = self.inner.free.lock().unwrap();
+        if free.len() < self.inner.max_buffers {
+            free.push(buf);
+        }
+    }
+
+    /// (buffers reused, fresh allocations) since creation.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.inner.reuses.load(Ordering::Relaxed),
+            self.inner.allocs.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Number of currently parked buffers.
+    pub fn parked(&self) -> usize {
+        self.inner.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_cycle() {
+        let pool = BufferPool::new(4, 1 << 20);
+        let mut b = pool.get();
+        b.extend_from_slice(b"hello");
+        let cap = b.capacity();
+        pool.put(b);
+        assert_eq!(pool.parked(), 1);
+        let b2 = pool.get();
+        assert!(b2.is_empty());
+        assert_eq!(b2.capacity(), cap, "capacity must be recycled");
+        let (reuses, allocs) = pool.stats();
+        assert_eq!((reuses, allocs), (1, 1));
+    }
+
+    #[test]
+    fn bounded_buffers_and_capacity() {
+        let pool = BufferPool::new(2, 64);
+        for _ in 0..5 {
+            let mut b = Vec::new();
+            b.push(1u8);
+            pool.put(b);
+        }
+        assert!(pool.parked() <= 2);
+        // Oversized buffers are dropped, not parked.
+        let pool = BufferPool::new(8, 16);
+        let b = Vec::with_capacity(1024);
+        pool.put(b);
+        assert_eq!(pool.parked(), 0);
+        // Zero-capacity buffers are not worth parking.
+        pool.put(Vec::new());
+        assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn cross_thread_recycling() {
+        let pool = BufferPool::new(16, 1 << 20);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u32 {
+                    let mut b = p.get();
+                    b.extend_from_slice(&i.to_be_bytes());
+                    p.put(b);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (reuses, allocs) = pool.stats();
+        assert_eq!(reuses + allocs, 400);
+        assert!(allocs <= 16, "at most one fresh alloc per parked slot: {allocs}");
+    }
+}

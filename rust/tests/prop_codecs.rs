@@ -172,6 +172,123 @@ fn compressible_classes_actually_compress() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fast-path vs naive-reference equivalence (§Perf): every optimized hot loop
+// must be BIT-IDENTICAL to its scalar/naive oracle across the fuzz corpus.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn match_len_fast_equals_naive() {
+    use rootio::deflate::matcher::{match_len, reference::match_len_naive};
+    let mut rng = Rng::new(0x11_2233);
+    for round in 0..400 {
+        let n = rng.range(2, 5000);
+        // Low-entropy bytes so long common prefixes actually occur.
+        let data: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0x3) as u8).collect();
+        let b = rng.range(1, n - 1);
+        let a = rng.range(0, b - 1);
+        let cap = rng.range(0, 300);
+        assert_eq!(
+            match_len(&data, a, b, cap),
+            match_len_naive(&data, a, b, cap),
+            "round {round}: a={a} b={b} cap={cap}"
+        );
+    }
+    // Deterministic worst cases: identical suffixes, cap boundaries at the
+    // 8-byte compare width.
+    let data = vec![7u8; 600];
+    for cap in [0usize, 1, 7, 8, 9, 15, 16, 17, 258, 600] {
+        assert_eq!(match_len(&data, 0, 100, cap), match_len_naive(&data, 0, 100, cap));
+    }
+}
+
+#[test]
+fn bitshuffle_swar_equals_naive_on_fuzz_corpus() {
+    use rootio::precond::bitshuffle::{bitshuffle, reference, unbitshuffle};
+    let mut rng = Rng::new(0x44_5566);
+    for round in 0..120 {
+        let class = round % 7;
+        let n = rng.range(0, 20_000);
+        let data = gen_payload(&mut rng, class, n);
+        for stride in [1usize, 2, 3, 4, 5, 8] {
+            let fast = bitshuffle(&data, stride);
+            assert_eq!(
+                fast,
+                reference::bitshuffle_naive(&data, stride),
+                "class {class} n {n} stride {stride}"
+            );
+            assert_eq!(
+                unbitshuffle(&fast, stride),
+                reference::unbitshuffle_naive(&fast, stride),
+                "inv class {class} n {n} stride {stride}"
+            );
+        }
+    }
+}
+
+#[test]
+fn shuffle_specializations_equal_generic_on_fuzz_corpus() {
+    use rootio::precond::shuffle::{reference, shuffle, unshuffle};
+    let mut rng = Rng::new(0x55_6677);
+    for round in 0..120 {
+        let class = round % 7;
+        let n = rng.range(0, 20_000);
+        let data = gen_payload(&mut rng, class, n);
+        for stride in [2usize, 4, 8] {
+            let fast = shuffle(&data, stride);
+            assert_eq!(fast, reference::shuffle_naive(&data, stride), "class {class} n {n} stride {stride}");
+            assert_eq!(
+                unshuffle(&fast, stride),
+                reference::unshuffle_naive(&fast, stride),
+                "inv class {class} n {n} stride {stride}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_huffman_emission_equals_reference_on_fuzz_corpus() {
+    use rootio::deflate::compress::{deflate, deflate_reference};
+    use rootio::deflate::{Flavor, Tuning};
+    let mut rng = Rng::new(0x66_7788);
+    for round in 0..60 {
+        let class = round % 7;
+        let n = rng.range(0, 60_000);
+        let data = gen_payload(&mut rng, class, n);
+        let flavor = if round % 2 == 0 { Flavor::Reference } else { Flavor::Cloudflare };
+        let level = [1u8, 4, 6, 9][round % 4];
+        let t = Tuning::new(flavor, level);
+        assert_eq!(
+            deflate(&data, &t),
+            deflate_reference(&data, &t),
+            "{} class {class} n {n}",
+            t.label()
+        );
+    }
+}
+
+#[test]
+fn bitwriter_word_flush_equals_naive() {
+    use rootio::util::bitio::{reference::NaiveBitWriter, BitWriter};
+    let mut rng = Rng::new(0x77_8899);
+    for _ in 0..200 {
+        let mut fast = BitWriter::new();
+        let mut naive = NaiveBitWriter::new();
+        for _ in 0..rng.range(1, 600) {
+            if rng.chance(0.08) {
+                fast.align_byte();
+                naive.align_byte();
+                continue;
+            }
+            let width = rng.range(1, 57) as u32;
+            let val = rng.next_u64() & ((1u64 << width) - 1);
+            fast.write_bits(val, width);
+            naive.write_bits(val, width);
+        }
+        assert_eq!(fast.finish(), naive.finish());
+    }
+}
+
 #[test]
 fn deterministic_compression() {
     // Same input + settings -> identical bytes (required for the pipeline's

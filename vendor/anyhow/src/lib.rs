@@ -1,0 +1,240 @@
+//! Minimal, dependency-free reimplementation of the `anyhow` API subset used
+//! by this repository, vendored so the workspace builds with no network
+//! access. Semantics match upstream for the covered surface:
+//!
+//! * [`Error`]: an opaque error value carrying a message and a cause chain.
+//! * [`Result<T>`]: alias for `Result<T, Error>`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`]: format-style constructors.
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` (for any
+//!   `std::error::Error`) and on `Option`.
+//!
+//! Like upstream, `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket `From` impl coherent.
+//! `{:#}` formats the full cause chain (`outer: inner: ...`); `{:?}` formats
+//! the anyhow-style multi-line report.
+
+use std::fmt;
+
+/// Opaque error: display message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result` specialized to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string(), source: None }
+    }
+
+    /// Construct from an ordered chain of messages, outermost first.
+    fn from_chain(mut msgs: Vec<String>) -> Self {
+        let mut err: Option<Error> = None;
+        while let Some(m) = msgs.pop() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.unwrap_or_else(|| Error::msg("unknown error"))
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, msg: impl fmt::Display) -> Self {
+        Error { msg: msg.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        msgs.into_iter()
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for m in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = std::error::Error::source(&e);
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error::from_chain(msgs)
+    }
+}
+
+/// Attach context to errors (`Result`) or turn `None` into an error.
+pub trait Context<T> {
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening file").unwrap_err();
+        assert_eq!(format!("{e}"), "opening file");
+        assert_eq!(format!("{e:#}"), "opening file: missing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "slot 3");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "too big: 12");
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn debug_report_shape() {
+        let e = Error::msg("inner").context("middle").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("outer"));
+        assert!(d.contains("Caused by:"));
+        assert_eq!(e.root_cause(), "inner");
+    }
+}
