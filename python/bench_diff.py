@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_codecs.json files and print a per-lane speedup summary.
+
+Usage:
+    python3 python/bench_diff.py BASELINE.json NEW.json
+
+Used by CI: the committed BENCH_codecs.json is the baseline, the file the
+bench job just regenerated is NEW. Prints
+
+  * the `fast_path_speedups` table of NEW (one row per optimized lane:
+    fast MB/s, naive-reference MB/s, speedup factor),
+  * per-(payload, setting) compress/decompress throughput deltas vs the
+    baseline where both sides have real numbers.
+
+Placeholder baselines (a fresh PR authored without a local rust toolchain
+commits `results: []`) are handled gracefully: the script then only prints
+the NEW summary. Exit code is always 0 — the diff is informational; the
+equivalence guarantees are enforced by `cargo test`, not by thresholds.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read {path}: {e}")
+        return None
+
+
+def fmt_mbps(v):
+    return f"{v:9.1f}" if isinstance(v, (int, float)) else f"{'-':>9}"
+
+
+def speedup_table(doc, title):
+    rows = doc.get("fast_path_speedups") or []
+    print(f"\n== {title}: fast-path speedups ({len(rows)} lanes) ==")
+    if not rows:
+        print("  (none recorded — placeholder file?)")
+        return {}
+    print(f"  {'lane':<44} {'payload':<14} {'fast':>9} {'naive':>9} {'speedup':>8}")
+    out = {}
+    for r in rows:
+        name, payload = r.get("name", "?"), r.get("payload", "?")
+        fast, ref, spd = r.get("fast_MBps"), r.get("reference_MBps"), r.get("speedup")
+        spd_s = f"{spd:7.2f}x" if isinstance(spd, (int, float)) else "       -"
+        print(f"  {name:<44} {payload:<14} {fmt_mbps(fast)} {fmt_mbps(ref)} {spd_s}")
+        out[(name, payload)] = spd
+    return out
+
+
+def result_key(r):
+    return (r.get("payload"), r.get("setting"))
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 0
+    base, new = load(sys.argv[1]), load(sys.argv[2])
+    if new is None:
+        return 0
+
+    new_spd = speedup_table(new, "current run")
+    if base is not None:
+        base_spd = speedup_table(base, "committed baseline")
+        common = [k for k in new_spd if k in base_spd
+                  and isinstance(new_spd[k], (int, float))
+                  and isinstance(base_spd[k], (int, float))]
+        if common:
+            print("\n== speedup drift vs baseline ==")
+            for k in sorted(common):
+                d = new_spd[k] - base_spd[k]
+                print(f"  {k[0]:<44} {k[1]:<14} {base_spd[k]:6.2f}x -> {new_spd[k]:6.2f}x ({d:+.2f})")
+
+        base_rows = {result_key(r): r for r in (base.get("results") or [])}
+        new_rows = {result_key(r): r for r in (new.get("results") or [])}
+        common = sorted(k for k in new_rows if k in base_rows)
+        if common:
+            print(f"\n== codec-grid throughput drift vs baseline ({len(common)} cells) ==")
+            print(f"  {'payload':<10} {'setting':<28} {'compress':>18} {'decompress':>18}")
+            for k in common:
+                b, n = base_rows[k], new_rows[k]
+                def delta(field):
+                    bv, nv = b.get(field), n.get(field)
+                    if isinstance(bv, (int, float)) and isinstance(nv, (int, float)) and bv:
+                        return f"{bv:7.1f}->{nv:7.1f}"
+                    return f"{'-':>16}"
+                print(f"  {k[0] or '?':<10} {k[1] or '?':<28} {delta('compress_MBps'):>18} {delta('decompress_MBps'):>18}")
+        elif not base.get("results"):
+            print("\n(baseline has no codec-grid results — placeholder; skipping drift table)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

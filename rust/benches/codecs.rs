@@ -15,11 +15,14 @@ use rootio::bench::figures::collect_baskets;
 use rootio::bench::{bench, json_array, json_escape, json_num, BenchConfig, Table};
 use rootio::compression::{Algorithm, Engine, Settings};
 use rootio::deflate::compress::{deflate, deflate_reference};
+use rootio::deflate::inflate::{inflate, inflate_reference};
 use rootio::deflate::{Flavor, Tuning};
 use rootio::gen::nanoaod;
+use rootio::lz4::Lz4Fast;
 use rootio::precond::{self, Precond};
-use rootio::util::bitio::{reference::NaiveBitWriter, BitWriter};
+use rootio::util::bitio::{reference::NaiveBitWriter, BitReader, BitWriter};
 use rootio::util::rng::Rng;
+use rootio::zstd::fse;
 
 fn nanoaod_payload() -> Vec<u8> {
     // Concatenated logical basket payloads (data + big-endian offset
@@ -212,6 +215,110 @@ fn fast_path_speedups(cfg: &BenchConfig) -> Vec<Speedup> {
         fast_mbps: fast.mbps(),
         reference_mbps: refr.mbps(),
     });
+
+    // 5. LZ4 wild-copy decode vs the Vec-growth naive decoder (PR 2) — the
+    // paper's headline LZ4 property is decompression speed, so this is the
+    // lane that matters most.
+    let text = payload_by_name(&all, "text");
+    for (payload, data) in [("text", text), ("nanoaod", nanoaod)] {
+        let mut c = Lz4Fast::new();
+        let mut blk = Vec::new();
+        c.compress(data, 1, &mut blk);
+        let mut scratch = Vec::new();
+        let fast = bench("lz4-decode-fast", data.len(), cfg, || {
+            rootio::lz4::decode::decompress_block_into(&blk, data.len(), &mut scratch).unwrap();
+            scratch.len()
+        });
+        let refr = bench("lz4-decode-naive", data.len(), cfg, || {
+            rootio::lz4::decode::reference::decompress_block_naive(&blk, &[], data.len())
+                .unwrap()
+                .len()
+        });
+        out.push(Speedup {
+            name: "lz4_decode_wildcopy_vs_naive",
+            payload,
+            fast_mbps: fast.mbps(),
+            reference_mbps: refr.mbps(),
+        });
+    }
+
+    // 6. FSE interleaved dual-state encode/decode vs the single-symbol
+    // naive coder (byte-identical streams).
+    {
+        let data = text;
+        let hist = fse::histogram(data);
+        let present = hist.iter().filter(|&&c| c > 0).count();
+        let log = fse::optimal_table_log(data.len(), present, 11);
+        let norm = fse::normalize_counts(&hist, data.len() as u64, log).expect("norm");
+        let enc = fse::EncTable::new(&norm, log).expect("enc table");
+        let dec = fse::DecTable::new(&norm, log).expect("dec table");
+        let syms: Vec<u16> = data.iter().map(|&b| b as u16).collect();
+        let fast = bench("fse-encode-fast", data.len(), cfg, || enc.encode_interleaved(&syms).0.len());
+        let refr = bench("fse-encode-naive", data.len(), cfg, || {
+            fse::reference::encode_interleaved_naive(&enc, &syms).0.len()
+        });
+        out.push(Speedup {
+            name: "fse_encode_interleaved2_vs_naive",
+            payload: "text",
+            fast_mbps: fast.mbps(),
+            reference_mbps: refr.mbps(),
+        });
+        let (payload_bits, states) = enc.encode_interleaved(&syms);
+        let mut sym_buf: Vec<u16> = Vec::with_capacity(data.len());
+        let fast = bench("fse-decode-fast", data.len(), cfg, || {
+            sym_buf.clear();
+            let mut r = BitReader::new(&payload_bits);
+            dec.decode_interleaved(&mut r, states, data.len(), &mut sym_buf).unwrap();
+            sym_buf.len()
+        });
+        let refr = bench("fse-decode-naive", data.len(), cfg, || {
+            sym_buf.clear();
+            let mut r = BitReader::new(&payload_bits);
+            fse::reference::decode_interleaved_naive(&dec, &mut r, states, data.len(), &mut sym_buf)
+                .unwrap();
+            sym_buf.len()
+        });
+        out.push(Speedup {
+            name: "fse_decode_interleaved2_vs_naive",
+            payload: "text",
+            fast_mbps: fast.mbps(),
+            reference_mbps: refr.mbps(),
+        });
+    }
+
+    // 7. 4-lane histogram vs scalar (feeds normalize_counts on every FSE
+    // section build).
+    let fast = bench("histogram-4lane", nanoaod.len(), cfg, || {
+        fse::histogram(nanoaod)[0] as usize
+    });
+    let refr = bench("histogram-naive", nanoaod.len(), cfg, || {
+        fse::reference::histogram_naive(nanoaod)[0] as usize
+    });
+    out.push(Speedup {
+        name: "histogram_4lane_vs_naive",
+        payload: "nanoaod",
+        fast_mbps: fast.mbps(),
+        reference_mbps: refr.mbps(),
+    });
+
+    // 8. Inflate fast loop (with PR-2 literal-run batching) vs the
+    // careful-only reference decoder.
+    {
+        let t = Tuning::new(Flavor::Cloudflare, 6);
+        let c = deflate(text, &t);
+        let fast = bench("inflate-fast", text.len(), cfg, || {
+            inflate(&c, text.len(), 64 << 20).unwrap().len()
+        });
+        let refr = bench("inflate-careful", text.len(), cfg, || {
+            inflate_reference(&c, text.len(), 64 << 20).unwrap().len()
+        });
+        out.push(Speedup {
+            name: "inflate_fastloop_litbatch_vs_careful",
+            payload: "text",
+            fast_mbps: fast.mbps(),
+            reference_mbps: refr.mbps(),
+        });
+    }
     out
 }
 

@@ -44,6 +44,10 @@ pub struct Engine {
     lz4: Lz4Encoder,
     zstd: ZstdEncoder,
     precond_buf: Vec<u8>,
+    /// LZ4 decode scratch (§Perf): its *length* is preserved across calls
+    /// so the wild-copy decoder's pre-sizing only zero-extends a capacity
+    /// shortfall instead of memsetting the whole output every basket.
+    lz4_scratch: Vec<u8>,
     /// Optional dictionary (ZSTD-style only; paper §2.3).
     dictionary: Vec<u8>,
 }
@@ -207,7 +211,9 @@ impl Engine {
                     legacy_decompress(body, h.uncompressed_len).map_err(err)?
                 }
                 Algorithm::Lz4 => {
-                    let mut out = Vec::new();
+                    // Reuse the engine scratch with its length intact: the
+                    // decoder only zero-extends the shortfall (§Perf).
+                    let mut out = std::mem::take(&mut self.lz4_scratch);
                     if body.len() < 4 {
                         return Err(err("lz4 frame too short"));
                     }
@@ -236,6 +242,10 @@ impl Engine {
                 return Err(err("uncompressed size mismatch"));
             }
             pre_image.extend_from_slice(&chunk);
+            // Park whichever chunk buffer this span produced as the LZ4
+            // scratch; its preserved length keeps the next LZ4 decode's
+            // pre-sizing memset-free.
+            self.lz4_scratch = chunk;
             data = &data[HEADER_LEN + h.compressed_len..];
         }
         // Invert the preconditioner over the whole logical buffer.

@@ -26,7 +26,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::rfile::writer::{frame_basket_record_prefix, BasketSink, RecordWriter};
 use crate::rfile::{basket::encode_basket_into, BasketLoc, PendingBasket};
 use crate::rfile::format::RecordKind;
-use crate::util::pool::BufferPool;
+use crate::util::pool::{BufferPool, OffsetPool};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, SyncSender};
@@ -80,6 +80,12 @@ pub struct ParallelSink {
     seq: u64,
     finished_writer: Option<RecordWriter>,
     pub metrics: Arc<Metrics>,
+    /// §Perf (ROADMAP follow-up): consumed `PendingBasket` data/offset
+    /// buffers flow back from the workers through these pools to the fill
+    /// thread via [`BasketSink::recycle_buffers`], closing the last
+    /// per-basket allocation loop (payload buffers were already pooled).
+    basket_data_pool: BufferPool,
+    basket_offset_pool: OffsetPool,
 }
 
 impl ParallelSink {
@@ -96,6 +102,10 @@ impl ParallelSink {
         // grown past 4 MiB (a jumbo basket, vs the 32 KiB default) is freed
         // rather than pinned for the sink's lifetime.
         let pool = BufferPool::new(config.queue_depth.max(1) * 2 + config.workers, 4 << 20);
+        // Basket accumulation buffers: bounded like the payload pool; a
+        // data buffer is ~basket_size, offsets ~basket_size/4 entries.
+        let basket_data_pool = BufferPool::new(config.queue_depth.max(1) * 2 + config.workers, 4 << 20);
+        let basket_offset_pool = OffsetPool::new(config.queue_depth.max(1) * 2 + config.workers, 1 << 20);
 
         let mut workers = Vec::with_capacity(config.workers);
         for _ in 0..config.workers.max(1) {
@@ -104,6 +114,8 @@ impl ParallelSink {
             let m = Arc::clone(&metrics);
             let dict = config.dictionary.clone();
             let pool = pool.clone();
+            let data_pool = basket_data_pool.clone();
+            let offset_pool = basket_offset_pool.clone();
             workers.push(std::thread::spawn(move || {
                 let mut engine = Engine::new();
                 // Worker-local scratch, reused across every basket.
@@ -138,6 +150,11 @@ impl ParallelSink {
                         uncompressed_len,
                         payload,
                     };
+                    // Recycle the consumed basket's accumulation buffers
+                    // back to the fill thread (§Perf).
+                    let (data, offsets) = job.basket.into_buffers();
+                    data_pool.put(data);
+                    offset_pool.put(offsets);
                     if tx.send(done).is_err() {
                         break;
                     }
@@ -156,7 +173,15 @@ impl ParallelSink {
             seq: 0,
             finished_writer: None,
             metrics,
+            basket_data_pool,
+            basket_offset_pool,
         }
+    }
+
+    /// (reuses, fresh allocations) of the basket accumulation buffers —
+    /// observability hook for the zero-alloc steady-state claim.
+    pub fn basket_pool_stats(&self) -> ((u64, u64), (u64, u64)) {
+        (self.basket_data_pool.stats(), self.basket_offset_pool.stats())
     }
 
     /// After `finish()`, retrieve the writer to close the file.
@@ -233,6 +258,12 @@ impl BasketSink for ParallelSink {
         let (locs, writer) = self.shutdown()?;
         self.finished_writer = Some(writer);
         Ok(locs)
+    }
+
+    fn recycle_buffers(&mut self) -> Option<(Vec<u8>, Vec<u32>)> {
+        // Early in the run the pools are empty and `get()` hands back fresh
+        // (zero-capacity) Vecs — identical to the allocate-on-demand path.
+        Some((self.basket_data_pool.get(), self.basket_offset_pool.get()))
     }
 }
 

@@ -33,6 +33,25 @@ pub fn inflate_dict(
     size_hint: usize,
     max_out: usize,
 ) -> Result<Vec<u8>, InflateError> {
+    inflate_impl(data, dict, size_hint, max_out, true)
+}
+
+/// Careful-loop-only oracle (§Perf): identical tables and per-symbol logic
+/// with the multi-symbol fast loop disabled. The property suite asserts
+/// [`inflate`] matches it byte-for-byte on every corpus stream and agrees
+/// on rejection for malformed/truncated ones.
+#[doc(hidden)]
+pub fn inflate_reference(data: &[u8], size_hint: usize, max_out: usize) -> Result<Vec<u8>, InflateError> {
+    inflate_impl(data, &[], size_hint, max_out, false)
+}
+
+fn inflate_impl(
+    data: &[u8],
+    dict: &[u8],
+    size_hint: usize,
+    max_out: usize,
+    use_fast: bool,
+) -> Result<Vec<u8>, InflateError> {
     let mut out: Vec<u8> = Vec::with_capacity(dict.len() + size_hint.min(max_out));
     out.extend_from_slice(dict);
     let max_out = max_out.saturating_add(dict.len());
@@ -44,11 +63,11 @@ pub fn inflate_dict(
             0b00 => inflate_stored(&mut r, &mut out, max_out)?,
             0b01 => {
                 let (lit, dist) = fixed_decoders();
-                inflate_block(&mut r, lit, dist, &mut out, max_out)?;
+                inflate_block(&mut r, lit, dist, &mut out, max_out, use_fast)?;
             }
             0b10 => {
                 let (lit, dist) = read_dynamic_trees(&mut r)?;
-                inflate_block(&mut r, &lit, dist.as_ref(), &mut out, max_out)?;
+                inflate_block(&mut r, &lit, dist.as_ref(), &mut out, max_out, use_fast)?;
             }
             _ => return Err(E("reserved block type")),
         }
@@ -183,6 +202,7 @@ fn inflate_block(
     dist: Option<&Decoder>,
     out: &mut Vec<u8>,
     max_out: usize,
+    use_fast: bool,
 ) -> Result<(), InflateError> {
     // §Perf multi-symbol fast loop (zlib-ng's `inflate_fast` shape): while
     // at least 64 real input bits remain and the output has a full
@@ -190,13 +210,20 @@ fn inflate_block(
     // match (<=15+5+15+13 = 48 bits) — can be decoded with NO per-symbol
     // truncation or output-limit checks: the reader's 57-bit refill means
     // every peek sees real bits, and consuming <=48 of >=64 real bits can
-    // never touch synthetic padding. The careful loop below finishes the
-    // tail; both loops share the same tables, so behavior is identical.
-    while r.bits_remaining() >= 64 && out.len() + 258 <= max_out {
-        let sym = lit.decode_fast(r);
-        if sym < 256 {
+    // never touch synthetic padding. Literal *runs* batch inside one outer
+    // iteration: after each pushed literal only the two cheap window checks
+    // re-run (each literal consumes <=15 bits, so re-validating >=64 keeps
+    // the match-token budget intact), not the full loop re-entry. The
+    // careful loop below finishes the tail; both loops share the same
+    // tables, so behavior is identical (oracle: `inflate_reference`).
+    'fast: while use_fast && r.bits_remaining() >= 64 && out.len() + 258 <= max_out {
+        let mut sym = lit.decode_fast(r);
+        while sym < 256 {
             out.push(sym as u8);
-            continue;
+            if r.bits_remaining() < 64 || out.len() + 258 > max_out {
+                continue 'fast;
+            }
+            sym = lit.decode_fast(r);
         }
         if sym == 256 {
             return Ok(());

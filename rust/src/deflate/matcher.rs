@@ -247,24 +247,9 @@ impl Matcher {
 #[inline]
 pub fn match_len(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
     debug_assert!(a < b);
-    let x = &data[a..];
-    let y = &data[b..];
-    let cap = cap.min(x.len()).min(y.len());
-    let mut i = 0usize;
-    // 8-byte wide compare.
-    while i + 8 <= cap {
-        let xa = u64::from_le_bytes(x[i..i + 8].try_into().unwrap());
-        let yb = u64::from_le_bytes(y[i..i + 8].try_into().unwrap());
-        let xor = xa ^ yb;
-        if xor != 0 {
-            return i + (xor.trailing_zeros() / 8) as usize;
-        }
-        i += 8;
-    }
-    while i < cap && x[i] == y[i] {
-        i += 1;
-    }
-    i
+    // One shared SWAR implementation for every codec (PR 2); semantics and
+    // the [`reference::match_len_naive`] oracle are unchanged.
+    crate::util::match_finder::common_prefix(data, a, b, cap)
 }
 
 /// Byte-at-a-time oracle for [`match_len`] (property-tested equal).

@@ -22,8 +22,9 @@ const HASH_LOG: u32 = 16;
 
 #[inline]
 fn hash5(v: u64) -> usize {
-    // lz4-style hash of 5 bytes for the fast path at default accel.
-    ((v << 24).wrapping_mul(889523592379u64) >> (64 - HASH_LOG)) as usize
+    // lz4-style hash of 5 bytes for the fast path at default accel
+    // (shared SWAR helper from the match-finder substrate).
+    crate::util::match_finder::hash5(v, HASH_LOG)
 }
 
 #[inline]
@@ -124,26 +125,17 @@ impl Lz4Fast {
                 ref_start -= 1;
             }
 
-            // Extend forwards.
-            let mut len = MIN_MATCH;
-            {
-                let cap = match_limit - match_start;
-                while len < cap {
-                    if len + 8 <= cap {
-                        let x = read_u64(src, ref_start + len) ^ read_u64(src, match_start + len);
-                        if x != 0 {
-                            len += (x.trailing_zeros() / 8) as usize;
-                            break;
-                        }
-                        len += 8;
-                    } else if src[ref_start + len] == src[match_start + len] {
-                        len += 1;
-                    } else {
-                        break;
-                    }
-                }
-                len = len.min(cap);
-            }
+            // Extend forwards (shared SWAR prefix extension; the first
+            // MIN_MATCH bytes are already known equal).
+            let cap = match_limit - match_start;
+            let len = (MIN_MATCH
+                + crate::util::match_finder::common_prefix(
+                    src,
+                    ref_start + MIN_MATCH,
+                    match_start + MIN_MATCH,
+                    cap - MIN_MATCH,
+                ))
+            .min(cap);
 
             emit_sequence(src, anchor, match_start, (match_start - ref_start) as u16, len, out);
             i = match_start + len;

@@ -3,22 +3,19 @@
 //! better ratio). Same block format as the fast compressor, but match
 //! finding uses hash chains with a per-level search depth and greedy-with-
 //! lookahead parsing instead of a single-probe hash table.
+//!
+//! §Perf: the chain walk is the shared
+//! [`crate::util::match_finder::ChainTable`] (SWAR `common_prefix`
+//! extension, quick-reject, `nice_len` early exit, `good_length` chain
+//! shortening on the lazy lookahead) — the same substrate the ZSTD-style
+//! matcher uses; this module keeps only the HC parse policy.
 
 use super::block::{compress_bound, MAX_DISTANCE, MIN_MATCH};
+use crate::util::match_finder::{ChainTable, SearchCfg};
 
 const HASH_LOG: u32 = 15;
 const LAST_LITERALS: usize = 5;
 const MFLIMIT: usize = 12;
-
-#[inline]
-fn hash4(v: u32) -> usize {
-    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_LOG)) as usize
-}
-
-#[inline]
-fn read_u32(data: &[u8], i: usize) -> u32 {
-    u32::from_le_bytes(data[i..i + 4].try_into().unwrap())
-}
 
 /// Search depth per HC level (mirrors lz4hc's 2^(level-1) clamping).
 pub fn depth_for_level(level: u8) -> u32 {
@@ -34,10 +31,23 @@ pub fn depth_for_level(level: u8) -> u32 {
     }
 }
 
+/// Per-level search knobs: depth from [`depth_for_level`]; `nice_len`
+/// grows with level (an already-long match is good enough to stop), and
+/// matches of `good_len`+ quarter the lazy-lookahead budget.
+fn cfg_for_level(level: u8) -> SearchCfg {
+    let depth = depth_for_level(level);
+    let nice_len = match level {
+        0..=4 => 128,
+        5..=6 => 256,
+        7..=8 => 512,
+        _ => 1 << 16,
+    };
+    SearchCfg { depth, nice_len, good_len: 32, min_match: MIN_MATCH }
+}
+
 /// Reusable HC compressor state.
 pub struct Lz4Hc {
-    head: Vec<i32>,
-    prev: Vec<i32>,
+    chains: ChainTable,
 }
 
 impl Default for Lz4Hc {
@@ -48,7 +58,7 @@ impl Default for Lz4Hc {
 
 impl Lz4Hc {
     pub fn new() -> Self {
-        Self { head: vec![-1; 1 << HASH_LOG], prev: Vec::new() }
+        Self { chains: ChainTable::new(HASH_LOG) }
     }
 
     /// Compress one block at the given HC level (3..=12 in lz4 terms).
@@ -64,10 +74,8 @@ impl Lz4Hc {
             emit_last_literals(src, 0, out);
             return;
         }
-        self.head.fill(-1);
-        self.prev.clear();
-        self.prev.resize(n, -1);
-        let depth = depth_for_level(level);
+        self.chains.reset(n);
+        let cfg = cfg_for_level(level);
         let match_limit = n - LAST_LITERALS;
         let mf_limit = n - MFLIMIT;
 
@@ -78,9 +86,7 @@ impl Lz4Hc {
         macro_rules! insert_up_to {
             ($end:expr) => {
                 while inserted < $end && inserted + 4 <= n {
-                    let h = hash4(read_u32(src, inserted));
-                    self.prev[inserted] = self.head[h];
-                    self.head[h] = inserted as i32;
+                    self.chains.insert(src, inserted);
                     inserted += 1;
                 }
             };
@@ -88,7 +94,7 @@ impl Lz4Hc {
 
         while i <= mf_limit {
             insert_up_to!(i + 1);
-            let (len, dist) = self.find_best(src, i, match_limit, depth);
+            let (len, dist) = self.find_best(src, i, match_limit, &cfg, None);
             if len < MIN_MATCH {
                 i += 1;
                 continue;
@@ -100,7 +106,14 @@ impl Lz4Hc {
             let mut start = i;
             if i + 1 <= mf_limit {
                 insert_up_to!(i + 2);
-                let (len2, dist2) = self.find_best(src, i + 1, match_limit, depth);
+                // good_length discipline: already holding a good match, probe
+                // the lookahead position on a quartered chain budget.
+                let lookahead_depth = if len >= cfg.good_len {
+                    Some((cfg.depth / 4).max(1))
+                } else {
+                    None
+                };
+                let (len2, dist2) = self.find_best(src, i + 1, match_limit, &cfg, lookahead_depth);
                 if len2 > best_len + 1 {
                     best_len = len2;
                     best_dist = dist2;
@@ -122,53 +135,21 @@ impl Lz4Hc {
         emit_last_literals(src, anchor, out);
     }
 
-    /// Longest match at position i walking at most `depth` chain links.
-    fn find_best(&self, src: &[u8], i: usize, match_limit: usize, depth: u32) -> (usize, usize) {
+    /// Longest match at position i (shared chain walk, capped so the match
+    /// never reaches into the spec's end-of-block literal region).
+    fn find_best(
+        &self,
+        src: &[u8],
+        i: usize,
+        match_limit: usize,
+        cfg: &SearchCfg,
+        depth_override: Option<u32>,
+    ) -> (usize, usize) {
         if i + MIN_MATCH > match_limit {
             return (0, 0);
         }
-        let h = hash4(read_u32(src, i));
-        let mut cand = self.head[h];
-        let lower = i.saturating_sub(MAX_DISTANCE);
         let cap = match_limit - i;
-        let (mut best_len, mut best_dist) = (0usize, 0usize);
-        let mut steps = depth;
-        while cand >= 0 && steps > 0 {
-            let c = cand as usize;
-            if c < lower {
-                break;
-            }
-            if c < i {
-                // Quick reject on the extending byte.
-                if best_len == 0 || (i + best_len < src.len() && src[c + best_len] == src[i + best_len]) {
-                    let mut l = 0usize;
-                    while l + 8 <= cap {
-                        let x = u64::from_le_bytes(src[c + l..c + l + 8].try_into().unwrap())
-                            ^ u64::from_le_bytes(src[i + l..i + l + 8].try_into().unwrap());
-                        if x != 0 {
-                            l += (x.trailing_zeros() / 8) as usize;
-                            break;
-                        }
-                        l += 8;
-                    }
-                    while l < cap && src[c + l] == src[i + l] {
-                        l += 1;
-                    }
-                    let l = l.min(cap);
-                    if l > best_len {
-                        best_len = l;
-                        best_dist = i - c;
-                    }
-                }
-            }
-            cand = self.prev[c];
-            steps -= 1;
-        }
-        if best_len < MIN_MATCH {
-            (0, 0)
-        } else {
-            (best_len, best_dist)
-        }
+        self.chains.find(src, i, cap, MAX_DISTANCE, cfg, depth_override)
     }
 }
 

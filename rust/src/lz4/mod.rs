@@ -3,6 +3,30 @@
 //! Paper §2.2: LZ4's byte-aligned, entropy-free design gives it the fastest
 //! decompression at every level (Fig 3) but a poor ratio on ROOT offset
 //! arrays (fixed by the preconditioners in `crate::precond`, Fig 6).
+//!
+//! # §Perf fast paths (LZ4/ZSTD hot-lane overhaul)
+//!
+//! * **Wild-copy block decode** (`decode`): sequences execute against a
+//!   pre-sized output buffer with a 16-byte pad — unconditional 16-byte
+//!   literal moves, 8-byte-stride match copies for `offset >= 8`, a
+//!   doubling `copy_within` stepper for self-overlapping `offset < 8`, and
+//!   a `memset` lane for `offset == 1`. Every format check of the original
+//!   Vec-growth decoder is preserved, so malformed input is rejected
+//!   identically. Oracle: `decode::reference::decompress_block_naive`,
+//!   property-tested byte-identical (and accept/reject-identical) in
+//!   `rust/tests/prop_codecs.rs` across roundtrip, dictionary, overlap and
+//!   fuzzed-garbage cases.
+//! * **Shared match finder** (`hc` over
+//!   `crate::util::match_finder::ChainTable`): the HC chain walk (SWAR
+//!   `common_prefix`, quick-reject, `nice_len` early exit, `good_length`
+//!   lookahead shortening) is the same substrate as the ZSTD matcher; the
+//!   fast path's `hash5` also lives there. Compressor output is validated
+//!   by decode roundtrips (parse policy may evolve; decoded bytes must
+//!   not).
+//!
+//! Equivalence guarantee: for every stream either decoder accepts, fast
+//! and naive decodes return the same bytes; streams one rejects, both
+//! reject.
 
 pub mod block;
 pub mod decode;

@@ -62,7 +62,7 @@ impl Models {
 /// zstd-style codec at the same nominal level.
 fn params_for_level(level: u8) -> SearchParams {
     let base = SearchParams::for_level(level.clamp(1, 9));
-    SearchParams { depth: base.depth * 4, lazy: true, nice_len: base.nice_len * 2 }
+    SearchParams { depth: base.depth * 4, lazy: true, nice_len: base.nice_len * 2, ..base }
 }
 
 /// Compress `src`; output is self-framed (uvarint raw length + rc payload).

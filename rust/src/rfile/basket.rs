@@ -47,6 +47,17 @@ impl PendingBasket {
     pub fn logical_len(&self) -> usize {
         self.data.len() + self.offsets.len() * 4
     }
+
+    /// Tear down a consumed basket into its two backing buffers (cleared,
+    /// capacity kept) so sinks can recycle them through the pipeline's
+    /// [`crate::util::pool::BufferPool`] / [`crate::util::pool::OffsetPool`]
+    /// instead of freeing and re-growing them once per basket (§Perf).
+    pub fn into_buffers(self) -> (Vec<u8>, Vec<u32>) {
+        let PendingBasket { mut data, mut offsets, .. } = self;
+        data.clear();
+        offsets.clear();
+        (data, offsets)
+    }
 }
 
 /// On-disk basket payload (after the record-key framing):

@@ -14,7 +14,11 @@ use anyhow::{bail, Context, Result};
 use std::io::{Read, Seek, SeekFrom, Write};
 
 pub const MAGIC: &[u8; 4] = b"RFIL";
-pub const VERSION: u16 = 1;
+/// Container version. Bumped to 2 in PR 2: RZS1 FSE sections now carry two
+/// interleaved-lane initial states instead of one, so files written by the
+/// v1 reader/writer pair are not stream-compatible — the bump turns a
+/// would-be garbled decode into a clean "unsupported version" rejection.
+pub const VERSION: u16 = 2;
 pub const TRAILER_MAGIC: &[u8; 8] = b"RFILEND1";
 pub const TRAILER_LEN: u64 = 16;
 

@@ -25,6 +25,14 @@ pub trait BasketSink {
     fn submit(&mut self, basket: PendingBasket, settings: Settings) -> Result<()>;
     /// Flush everything; returns committed basket locations.
     fn finish(&mut self) -> Result<Vec<BasketLoc>>;
+    /// Hand back a recycled `(data, offsets)` buffer pair from an already
+    /// consumed basket, if the sink pools them (§Perf: the fill thread
+    /// re-seeds its per-branch accumulation buffers from this instead of
+    /// growing fresh `Vec`s for every basket). Buffers are cleared; `None`
+    /// means allocate as before.
+    fn recycle_buffers(&mut self) -> Option<(Vec<u8>, Vec<u32>)> {
+        None
+    }
 }
 
 /// Record-level writer shared by sinks: owns the output file and the
@@ -85,6 +93,8 @@ pub struct SerialSink {
     locs: Vec<BasketLoc>,
     logical_scratch: Vec<u8>,
     payload_scratch: Vec<u8>,
+    /// Most recently consumed basket's buffers, parked for `recycle_buffers`.
+    spare_buffers: Option<(Vec<u8>, Vec<u32>)>,
 }
 
 impl SerialSink {
@@ -95,6 +105,7 @@ impl SerialSink {
             locs: Vec::new(),
             logical_scratch: Vec::new(),
             payload_scratch: Vec::new(),
+            spare_buffers: None,
         }
     }
 
@@ -132,11 +143,16 @@ impl BasketSink for SerialSink {
             compressed_len: self.payload_scratch.len() as u32,
             uncompressed_len,
         });
+        self.spare_buffers = Some(basket.into_buffers());
         Ok(())
     }
 
     fn finish(&mut self) -> Result<Vec<BasketLoc>> {
         Ok(std::mem::take(&mut self.locs))
+    }
+
+    fn recycle_buffers(&mut self) -> Option<(Vec<u8>, Vec<u32>)> {
+        self.spare_buffers.take()
     }
 }
 
@@ -250,7 +266,16 @@ impl<S: BasketSink> TreeWriter<S> {
         b.basket_index += 1;
         b.first_entry += b.entries_in_basket as u64;
         b.entries_in_basket = 0;
-        self.sink.submit(basket, settings)
+        self.sink.submit(basket, settings)?;
+        // §Perf: re-seed the branch accumulators with buffers recycled by
+        // the sink (same capacity the branch just grew) instead of starting
+        // the next basket from empty allocations.
+        if let Some((data, offsets)) = self.sink.recycle_buffers() {
+            let b = &mut self.branches[i];
+            b.data = data;
+            b.offsets = offsets;
+        }
+        Ok(())
     }
 
     /// Flush remaining baskets and produce the tree metadata. Returns
@@ -270,6 +295,38 @@ impl<S: BasketSink> TreeWriter<S> {
             dictionary_offset: self.dictionary_offset,
         };
         Ok((meta, self.sink))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::Algorithm;
+
+    #[test]
+    fn serial_sink_recycles_basket_buffers() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("rootio_writer_recycle_{}", std::process::id()));
+        let writer = RecordWriter::create(&path).unwrap();
+        let mut sink = SerialSink::new(writer);
+        // Nothing to recycle before the first submit.
+        assert!(sink.recycle_buffers().is_none());
+        let basket = PendingBasket {
+            branch_id: 0,
+            basket_index: 0,
+            first_entry: 0,
+            n_entries: 3,
+            data: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            offsets: vec![2, 4, 8],
+        };
+        let data_cap = basket.data.capacity();
+        sink.submit(basket, Settings::new(Algorithm::None, 0)).unwrap();
+        let (data, offsets) = sink.recycle_buffers().expect("buffers recycled");
+        assert!(data.is_empty() && offsets.is_empty(), "recycled buffers must be cleared");
+        assert_eq!(data.capacity(), data_cap, "capacity must survive recycling");
+        // take() semantics: a second call has nothing to hand back.
+        assert!(sink.recycle_buffers().is_none());
+        let _ = std::fs::remove_file(&path);
     }
 }
 

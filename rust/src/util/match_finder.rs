@@ -1,0 +1,272 @@
+//! Shared LZ77-family match-finder substrate (§Perf).
+//!
+//! Before this module, the chain-based matchers in the tree each carried
+//! their own copy of the hash-head + prev-chain walk, the SWAR
+//! common-prefix extension, and the multiplicative hashes. The chain walk
+//! here backs `lz4::hc` (64 KiB window) and `zstd::matcher` (256 KiB
+//! window); `deflate::matcher` keeps its own walk — its `hash3`/`hash4`
+//! flavor split emulates reference-vs-Cloudflare zlib and is part of the
+//! PR-1 equivalence surface — but delegates its SWAR match extension to
+//! [`common_prefix`]. This module owns:
+//!
+//! * [`ChainTable`] — reusable hash-head + prev-chain state with a
+//!   `find` that walks at most `depth` links, quick-rejects candidates on
+//!   the byte that would extend the current best, stops early at
+//!   `nice_len` (zlib's `nice_length`) and *shortens the remaining chain
+//!   budget* once a match of `good_len` is found (zlib's `good_length`
+//!   discipline, ported from PR 1's deflate matcher).
+//! * [`common_prefix`] — 8-bytes-per-step match extension via `u64` XOR +
+//!   `trailing_zeros`, with a byte-wise oracle in [`reference`] that the
+//!   property suite pits it against (`rust/tests/prop_codecs.rs`).
+//! * [`hash4`] / [`hash5`] — the multiplicative hashes used by the
+//!   min-match-4 codecs (LZ4 fast path uses `hash5` so one extra byte of
+//!   context disambiguates; chain matchers use `hash4`).
+//!
+//! The callers keep their own parse loops (greedy vs lazy vs
+//! one-step-lookahead are codec-level policies); only the *search* is
+//! shared, so a chain-walk improvement lands in every codec at once.
+
+/// Sentinel for "no position" in head/prev chains.
+pub const NO_POS: i32 = -1;
+
+#[inline]
+fn read_u32(data: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(data[i..i + 4].try_into().unwrap())
+}
+
+/// Multiplicative hash of 4 bytes into `hash_log` bits.
+#[inline]
+pub fn hash4(v: u32, hash_log: u32) -> usize {
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - hash_log)) as usize
+}
+
+/// lz4-style hash of 5 bytes (low 40 bits of `v`) into `hash_log` bits.
+#[inline]
+pub fn hash5(v: u64, hash_log: u32) -> usize {
+    ((v << 24).wrapping_mul(889_523_592_379u64) >> (64 - hash_log)) as usize
+}
+
+/// Length of the common prefix of `data[a..]` and `data[b..]`, capped at
+/// `cap` (§Perf: 8 bytes per step via `u64` XOR + `trailing_zeros`; the
+/// scalar loop only finishes the sub-8-byte tail). Property-tested equal
+/// to [`reference::common_prefix_naive`].
+#[inline]
+pub fn common_prefix(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
+    let x = &data[a..];
+    let y = &data[b..];
+    let cap = cap.min(x.len()).min(y.len());
+    let mut l = 0usize;
+    while l + 8 <= cap {
+        let xa = u64::from_le_bytes(x[l..l + 8].try_into().unwrap());
+        let yb = u64::from_le_bytes(y[l..l + 8].try_into().unwrap());
+        let xor = xa ^ yb;
+        if xor != 0 {
+            return l + (xor.trailing_zeros() / 8) as usize;
+        }
+        l += 8;
+    }
+    while l < cap && x[l] == y[l] {
+        l += 1;
+    }
+    l
+}
+
+/// Byte-at-a-time oracles for the SWAR fast paths.
+#[doc(hidden)]
+pub mod reference {
+    /// Naive counterpart of [`super::common_prefix`].
+    pub fn common_prefix_naive(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
+        let x = &data[a..];
+        let y = &data[b..];
+        let cap = cap.min(x.len()).min(y.len());
+        let mut l = 0usize;
+        while l < cap && x[l] == y[l] {
+            l += 1;
+        }
+        l
+    }
+}
+
+/// Per-search knobs (a codec maps its level to these).
+#[derive(Debug, Clone, Copy)]
+pub struct SearchCfg {
+    /// Maximum chain links to walk.
+    pub depth: u32,
+    /// Stop searching once a match at least this long is found.
+    pub nice_len: usize,
+    /// Once a match at least this long is found, cut the remaining chain
+    /// budget to a quarter (zlib `good_length` discipline).
+    pub good_len: usize,
+    /// Shortest match worth reporting.
+    pub min_match: usize,
+}
+
+/// Reusable hash-head + prev-chain match finder over a single buffer.
+pub struct ChainTable {
+    hash_log: u32,
+    head: Vec<i32>,
+    prev: Vec<i32>,
+}
+
+impl ChainTable {
+    pub fn new(hash_log: u32) -> Self {
+        Self { hash_log, head: vec![NO_POS; 1usize << hash_log], prev: Vec::new() }
+    }
+
+    /// Reset for a buffer of `n` bytes (clears all chains).
+    pub fn reset(&mut self, n: usize) {
+        self.head.fill(NO_POS);
+        self.prev.clear();
+        self.prev.resize(n, NO_POS);
+    }
+
+    /// Insert position `pos` into its chain. Caller guarantees
+    /// `pos + 4 <= data.len()`.
+    #[inline]
+    pub fn insert(&mut self, data: &[u8], pos: usize) {
+        debug_assert!(pos + 4 <= data.len());
+        let h = hash4(read_u32(data, pos), self.hash_log);
+        self.prev[pos] = self.head[h];
+        self.head[h] = pos as i32;
+    }
+
+    /// Longest match at `i` against positions within `max_dist`, capped at
+    /// `cap` bytes. `depth_override` (if set) replaces `cfg.depth` — callers
+    /// use it to search shallower when lazy evaluation already holds a good
+    /// match. Returns `(len, dist)`, or `(0, 0)` if nothing reaches
+    /// `cfg.min_match`.
+    pub fn find(
+        &self,
+        data: &[u8],
+        i: usize,
+        cap: usize,
+        max_dist: usize,
+        cfg: &SearchCfg,
+        depth_override: Option<u32>,
+    ) -> (usize, usize) {
+        if i + 4 > data.len() {
+            return (0, 0);
+        }
+        let h = hash4(read_u32(data, i), self.hash_log);
+        let mut cand = self.head[h];
+        let lower = i.saturating_sub(max_dist);
+        let nice = cfg.nice_len.min(cap);
+        let (mut best_len, mut best_dist) = (0usize, 0usize);
+        let mut steps = depth_override.unwrap_or(cfg.depth);
+        while cand >= 0 && steps > 0 {
+            let c = cand as usize;
+            if c >= i {
+                // Position i itself (or later) may already be chained by the
+                // caller's insert discipline; skip without spending budget.
+                cand = self.prev[c];
+                continue;
+            }
+            if c < lower {
+                break;
+            }
+            // Quick reject: compare the byte that would extend the best.
+            if best_len == 0 || (i + best_len < data.len() && data[c + best_len] == data[i + best_len]) {
+                let l = common_prefix(data, c, i, cap);
+                if l > best_len {
+                    best_len = l;
+                    best_dist = i - c;
+                    if l >= nice {
+                        break;
+                    }
+                    if l >= cfg.good_len {
+                        // Good enough: stop trying so hard (chain /4).
+                        steps = (steps / 4).max(1);
+                    }
+                }
+            }
+            cand = self.prev[c];
+            steps -= 1;
+        }
+        if best_len < cfg.min_match {
+            (0, 0)
+        } else {
+            (best_len, best_dist)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn common_prefix_fast_equals_naive() {
+        let mut rng = Rng::new(0x3F17);
+        for _ in 0..300 {
+            let n = rng.range(2, 4000);
+            let data: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0x3) as u8).collect();
+            let b = rng.range(1, n - 1);
+            let a = rng.range(0, b - 1);
+            let cap = rng.range(0, 400);
+            assert_eq!(
+                common_prefix(&data, a, b, cap),
+                reference::common_prefix_naive(&data, a, b, cap),
+                "a={a} b={b} cap={cap}"
+            );
+        }
+        let data = vec![9u8; 500];
+        for cap in [0usize, 1, 7, 8, 9, 15, 16, 17, 100, 500] {
+            assert_eq!(
+                common_prefix(&data, 0, 50, cap),
+                reference::common_prefix_naive(&data, 0, 50, cap)
+            );
+        }
+    }
+
+    #[test]
+    fn finds_obvious_matches() {
+        let data = b"abcdefgh_abcdefgh_abcdefgh".to_vec();
+        let mut t = ChainTable::new(12);
+        t.reset(data.len());
+        for p in 0..=data.len() - 4 {
+            t.insert(&data, p);
+        }
+        let cfg = SearchCfg { depth: 64, nice_len: 1 << 16, good_len: 1 << 16, min_match: 4 };
+        let (len, dist) = t.find(&data, 9, data.len() - 9, 1 << 16, &cfg, None);
+        assert!(len >= 8, "len {len}");
+        assert_eq!(dist % 9, 0, "dist {dist}");
+    }
+
+    #[test]
+    fn window_and_min_match_respected() {
+        let mut rng = Rng::new(0x3F18);
+        let mut data = rng.bytes(1000);
+        let tail: Vec<u8> = data[..100].to_vec();
+        data.extend_from_slice(&tail); // repeat at distance 1000
+        let mut t = ChainTable::new(12);
+        t.reset(data.len());
+        for p in 0..=data.len() - 4 {
+            t.insert(&data, p);
+        }
+        let cfg = SearchCfg { depth: 4096, nice_len: 1 << 16, good_len: 1 << 16, min_match: 4 };
+        // Window of 500 cannot reach the distance-1000 repeat.
+        let (len, _) = t.find(&data, 1000, data.len() - 1000, 500, &cfg, None);
+        assert!(len < 100, "window violated: len {len}");
+        // Full window finds it.
+        let (len, dist) = t.find(&data, 1000, data.len() - 1000, 1 << 16, &cfg, None);
+        assert_eq!((len, dist), (100, 1000));
+    }
+
+    #[test]
+    fn good_len_shortening_still_finds_a_match() {
+        // Shortening the chain must never lose an already-found match.
+        let mut data = Vec::new();
+        for _ in 0..50 {
+            data.extend_from_slice(b"periodic-block-32-bytes-long!!!!");
+        }
+        let mut t = ChainTable::new(10); // tiny table -> heavy collisions
+        t.reset(data.len());
+        for p in 0..=data.len() - 4 {
+            t.insert(&data, p);
+        }
+        let cfg = SearchCfg { depth: 8, nice_len: 1 << 16, good_len: 8, min_match: 4 };
+        let (len, dist) = t.find(&data, 64, data.len() - 64, 1 << 16, &cfg, None);
+        assert!(len >= 32, "len {len} dist {dist}");
+    }
+}

@@ -1,7 +1,8 @@
 //! Shared low-level utilities: deterministic RNG, bit I/O, varints,
-//! statistics, timing.
+//! statistics, timing, and the shared LZ77 match-finder substrate.
 
 pub mod bitio;
+pub mod match_finder;
 pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -1,32 +1,45 @@
-//! A small thread-safe `Vec<u8>` pool (§Perf): the parallel pipeline's
-//! workers compress thousands of baskets per second, and before this pool
-//! every basket paid one fresh output-payload allocation on the worker plus
-//! a drop on the committer. Renting buffers from a shared free list makes
-//! the steady-state hot path allocation-free: the committer returns each
-//! payload buffer after writing it, and the worker's next basket reuses the
-//! (already-grown) capacity.
+//! Small thread-safe buffer pools (§Perf): the parallel pipeline's workers
+//! compress thousands of baskets per second, and before pooling every
+//! basket paid fresh allocations on the worker plus drops on the committer.
+//! Renting buffers from a shared free list makes the steady-state hot path
+//! allocation-free: the committer returns each payload buffer after writing
+//! it, the workers return consumed basket data/offset buffers, and the next
+//! basket reuses the (already-grown) capacity.
 //!
-//! Bounded on both axes so the pool cannot hoard memory: at most
-//! `max_buffers` parked buffers, and any buffer whose capacity exceeded
-//! `max_capacity` (e.g. one pathological jumbo basket) is dropped instead of
-//! parked.
+//! One generic [`Pool<T>`] implementation backs both concrete pools —
+//! [`BufferPool`] (`Vec<u8>`: payload + basket data buffers) and
+//! [`OffsetPool`] (`Vec<u32>`: per-entry offset arrays of jagged branches)
+//! — so the bounding discipline lives in exactly one place: at most
+//! `max_buffers` parked buffers, and any buffer whose capacity (in
+//! elements) exceeded `max_capacity` (e.g. one pathological jumbo basket)
+//! is dropped instead of parked.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Shared pool of reusable byte buffers. `Clone` is cheap (`Arc`).
-#[derive(Clone)]
-pub struct BufferPool {
-    inner: Arc<Inner>,
+/// Shared pool of reusable `Vec<T>` buffers. `Clone` is cheap (`Arc`).
+pub struct Pool<T> {
+    inner: Arc<Inner<T>>,
 }
 
-struct Inner {
-    free: Mutex<Vec<Vec<u8>>>,
+impl<T> Clone for Pool<T> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+struct Inner<T> {
+    free: Mutex<Vec<Vec<T>>>,
     max_buffers: usize,
     max_capacity: usize,
     reuses: AtomicU64,
     allocs: AtomicU64,
 }
+
+/// Pool of `Vec<u8>` payload/data buffers.
+pub type BufferPool = Pool<u8>;
+/// Pool of `Vec<u32>` offset buffers (`PendingBasket::offsets`).
+pub type OffsetPool = Pool<u32>;
 
 impl Default for BufferPool {
     fn default() -> Self {
@@ -36,7 +49,14 @@ impl Default for BufferPool {
     }
 }
 
-impl BufferPool {
+impl Default for OffsetPool {
+    fn default() -> Self {
+        // 64 parked × 1M entries (4 MiB) mirrors BufferPool's default scale.
+        Self::new(64, 1 << 20)
+    }
+}
+
+impl<T> Pool<T> {
     pub fn new(max_buffers: usize, max_capacity: usize) -> Self {
         Self {
             inner: Arc::new(Inner {
@@ -50,7 +70,7 @@ impl BufferPool {
     }
 
     /// Rent a cleared buffer (recycled if one is parked, fresh otherwise).
-    pub fn get(&self) -> Vec<u8> {
+    pub fn get(&self) -> Vec<T> {
         let recycled = self.inner.free.lock().unwrap().pop();
         match recycled {
             Some(buf) => {
@@ -67,7 +87,7 @@ impl BufferPool {
 
     /// Return a buffer to the pool. Contents are cleared; capacity is kept
     /// unless it exceeds the pool's cap or the free list is full.
-    pub fn put(&self, mut buf: Vec<u8>) {
+    pub fn put(&self, mut buf: Vec<T>) {
         if buf.capacity() == 0 || buf.capacity() > self.inner.max_capacity {
             return;
         }
@@ -127,6 +147,23 @@ mod tests {
         assert_eq!(pool.parked(), 0);
         // Zero-capacity buffers are not worth parking.
         pool.put(Vec::new());
+        assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn offset_pool_reuse_and_bounds() {
+        let pool = OffsetPool::new(2, 1 << 10);
+        let mut b = pool.get();
+        b.extend_from_slice(&[1, 2, 3]);
+        let cap = b.capacity();
+        pool.put(b);
+        assert_eq!(pool.parked(), 1);
+        let b2 = pool.get();
+        assert!(b2.is_empty());
+        assert_eq!(b2.capacity(), cap);
+        assert_eq!(pool.stats(), (1, 1));
+        // Oversized offset buffers are dropped, not parked.
+        pool.put(Vec::with_capacity(1 << 12));
         assert_eq!(pool.parked(), 0);
     }
 

@@ -7,11 +7,16 @@
 //! [raw_len][n_seq]
 //! literals:  [mode u8] 0=raw:   [len][bytes]
 //!                      1=rle:   [len][byte]
-//!                      2=fse:   [len][norm table][state][payload_len][payload]
+//!                      2=fse:   [len][norm table][state0][state1][payload_len][payload]
 //! if n_seq > 0, three code sections (ll, ml, of), each:
 //!            [mode u8] 0=raw:   [codes as bytes]        (len = n_seq)
 //!                      1=rle:   [code byte]
-//!                      2=fse:   [norm table][state][payload_len][payload]
+//!                      2=fse:   [norm table][state0][state1][payload_len][payload]
+//!
+//! FSE sections carry **two** initial states: the entropy stage runs the
+//! §Perf interleaved dual-lane coder (`fse::EncTable::encode_interleaved`
+//! — even symbol indices on lane 0, odd on lane 1), whose byte-identical
+//! naive oracle lives in `fse::reference`.
 //! extras:    [payload_len][bit payload]   (ll, ml, of extra bits per seq)
 //! ```
 //!
@@ -156,20 +161,18 @@ fn write_byte_section(out: &mut Vec<u8>, data: &[u8]) {
         out.push(data[0]);
         return;
     }
-    // Try FSE.
-    let mut hist = vec![0u32; 256];
-    for &b in data {
-        hist[b as usize] += 1;
-    }
+    // Try FSE (§Perf: 4-lane histogram + interleaved dual-state encode).
+    let hist = fse::histogram(data);
     let present = hist.iter().filter(|&&c| c > 0).count();
     if present >= 2 && data.len() >= 32 {
         let log = fse::optimal_table_log(data.len(), present, 11);
         if let Ok(norm) = fse::normalize_counts(&hist, data.len() as u64, log) {
             if let Ok(enc) = fse::EncTable::new(&norm, log) {
-                let (payload, state) = enc.encode(data.iter().map(|&b| b as u16));
+                let (payload, states) = enc.encode_interleaved(data);
                 let mut section = Vec::with_capacity(payload.len() + 64);
                 fse::write_norm(&mut section, &norm, log);
-                put_uvarint(&mut section, state as u64);
+                put_uvarint(&mut section, states[0] as u64);
+                put_uvarint(&mut section, states[1] as u64);
                 put_uvarint(&mut section, payload.len() as u64);
                 section.extend_from_slice(&payload);
                 if section.len() + 2 < data.len() {
@@ -203,10 +206,11 @@ fn write_code_section(out: &mut Vec<u8>, codes: &[u16]) {
         let log = fse::optimal_table_log(codes.len(), present, 9);
         if let Ok(norm) = fse::normalize_counts(&hist, codes.len() as u64, log) {
             if let Ok(enc) = fse::EncTable::new(&norm, log) {
-                let (payload, state) = enc.encode(codes.iter().copied());
+                let (payload, states) = enc.encode_interleaved(codes);
                 let mut section = Vec::with_capacity(payload.len() + 32);
                 fse::write_norm(&mut section, &norm, log);
-                put_uvarint(&mut section, state as u64);
+                put_uvarint(&mut section, states[0] as u64);
+                put_uvarint(&mut section, states[1] as u64);
                 put_uvarint(&mut section, payload.len() as u64);
                 section.extend_from_slice(&payload);
                 if section.len() < codes.len() {
@@ -240,13 +244,14 @@ fn read_byte_section(c: &mut Cursor, max_out: usize) -> Result<Vec<u8>, ZstdErro
         }
         MODE_FSE => {
             let (norm, log) = fse::read_norm(c).map_err(|_| E("bad literal table"))?;
-            let state = c.uvarint().ok_or(E("truncated literal state"))? as u16;
+            let s0 = c.uvarint().ok_or(E("truncated literal state"))? as u16;
+            let s1 = c.uvarint().ok_or(E("truncated literal state"))? as u16;
             let plen = c.uvarint().ok_or(E("truncated literal payload len"))? as usize;
             let payload = c.bytes(plen).ok_or(E("truncated literal payload"))?;
             let dec = fse::DecTable::new(&norm, log).map_err(|_| E("bad literal table"))?;
             let mut r = BitReader::new(payload);
             let mut syms = Vec::with_capacity(len);
-            dec.decode(&mut r, state, len, &mut syms)
+            dec.decode_interleaved(&mut r, [s0, s1], len, &mut syms)
                 .map_err(|_| E("literal decode failed"))?;
             Ok(syms.into_iter().map(|s| s as u8).collect())
         }
@@ -277,13 +282,14 @@ fn read_code_section(c: &mut Cursor, n: usize) -> Result<Vec<u16>, ZstdError> {
             if norm.len() > CODE_ALPHABET {
                 return Err(E("code alphabet too large"));
             }
-            let state = c.uvarint().ok_or(E("truncated code state"))? as u16;
+            let s0 = c.uvarint().ok_or(E("truncated code state"))? as u16;
+            let s1 = c.uvarint().ok_or(E("truncated code state"))? as u16;
             let plen = c.uvarint().ok_or(E("truncated code payload len"))? as usize;
             let payload = c.bytes(plen).ok_or(E("truncated code payload"))?;
             let dec = fse::DecTable::new(&norm, log).map_err(|_| E("bad code table"))?;
             let mut r = BitReader::new(payload);
             let mut syms = Vec::with_capacity(n);
-            dec.decode(&mut r, state, n, &mut syms)
+            dec.decode_interleaved(&mut r, [s0, s1], n, &mut syms)
                 .map_err(|_| E("code decode failed"))?;
             Ok(syms)
         }

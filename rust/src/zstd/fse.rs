@@ -15,8 +15,72 @@
 //! *forward* with the shared LSB-first [`BitReader`]. The final encoder
 //! state is stored in the stream header; decode recovers symbols in the
 //! original order.
+//!
+//! # §Perf: interleaved dual-state coding
+//!
+//! The production streams ([`EncTable::encode_interleaved`] /
+//! [`DecTable::decode_interleaved`]) run **two** ANS states that alternate
+//! over consecutive symbols (even indices on lane 0, odd on lane 1), the
+//! same trick real zstd and the ans_flex reproduction use: the two state
+//! chains carry no data dependency on each other, so the table lookups and
+//! the shared 57-bit-refill bit I/O pipeline instead of serializing. Each
+//! lane absorbs its final symbol into its transmitted initial state (two
+//! states in the header instead of one). Both directions keep a
+//! deliberately straightforward oracle in [`reference`] that they are
+//! property-tested **byte-identical** against (`rust/tests/prop_codecs.rs`),
+//! mirroring the PR-1 fast-path pattern. Histogramming, the other hot
+//! encoder pass, is the 4-lane [`histogram`] with the scalar
+//! [`reference::histogram_naive`] oracle.
 
 use crate::util::bitio::{BitReader, BitWriter};
+
+/// Byte histogram feeding [`normalize_counts`] (§Perf): four interleaved
+/// count arrays over an 8-byte-per-iteration walk, so the store-to-load
+/// dependency on a repeated byte hits a different lane three times out of
+/// four (`hist`-crate / ans_flex idiom). Property-tested equal to
+/// [`reference::histogram_naive`].
+pub fn histogram(data: &[u8]) -> [u32; 256] {
+    let mut c0 = [0u32; 256];
+    let mut c1 = [0u32; 256];
+    let mut c2 = [0u32; 256];
+    let mut c3 = [0u32; 256];
+    let mut iter = data.chunks_exact(8);
+    for ch in &mut iter {
+        c0[ch[0] as usize] += 1;
+        c1[ch[1] as usize] += 1;
+        c2[ch[2] as usize] += 1;
+        c3[ch[3] as usize] += 1;
+        c0[ch[4] as usize] += 1;
+        c1[ch[5] as usize] += 1;
+        c2[ch[6] as usize] += 1;
+        c3[ch[7] as usize] += 1;
+    }
+    for &b in iter.remainder() {
+        c0[b as usize] += 1;
+    }
+    for i in 0..256 {
+        c0[i] += c1[i] + c2[i] + c3[i];
+    }
+    c0
+}
+
+/// Symbol types the FSE coder accepts directly (avoids widening copies of
+/// literal buffers on the encode hot path).
+pub trait Symbol: Copy {
+    fn as_u16(self) -> u16;
+}
+impl Symbol for u8 {
+    #[inline]
+    fn as_u16(self) -> u16 {
+        self as u16
+    }
+}
+impl Symbol for u16 {
+    #[inline]
+    fn as_u16(self) -> u16 {
+        self
+    }
+}
 
 /// Errors from table construction or decoding (untrusted inputs).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -219,6 +283,46 @@ impl EncTable {
         }
         (w.finish(), state as u16)
     }
+
+    /// §Perf hot path: encode `symbols` with two interleaved states — even
+    /// indices on lane 0, odd on lane 1 — so consecutive transitions are
+    /// independent and pipeline. Each lane's last symbol is absorbed into
+    /// its returned initial state. Byte-identical to
+    /// [`reference::encode_interleaved_naive`] (property-tested); decode
+    /// with [`DecTable::decode_interleaved`].
+    ///
+    /// The chunk stack packs `(bits, nb_bits)` into one `u32`
+    /// (`bits | nb << 12`; both fit 12 bits since `table_log <= 12`), and
+    /// the reversed flush goes through the word-flush [`BitWriter`] — the
+    /// two deliberately-cheap differences from the naive oracle.
+    pub fn encode_interleaved<S: Symbol>(&self, symbols: &[S]) -> (Vec<u8>, [u16; 2]) {
+        let size = 1u32 << self.table_log;
+        // Lanes a symbol never seeds keep `size`: a valid (ignored) state.
+        let mut states = [size, size];
+        let mut seeded = [false; 2];
+        let mut chunks: Vec<u32> = Vec::with_capacity(symbols.len());
+        let mut i = symbols.len();
+        while i > 0 {
+            i -= 1;
+            let s = symbols[i].as_u16() as usize;
+            let lane = i & 1;
+            if !seeded[lane] {
+                states[lane] = self.seed[s] as u32;
+                seeded[lane] = true;
+                continue;
+            }
+            let (delta_find, delta_nb) = self.sym[s];
+            let st = states[lane];
+            let nb = delta_nb.wrapping_add(st) >> 16;
+            chunks.push((st & ((1u32 << nb) - 1)) | (nb << 12));
+            states[lane] = self.next_state[((st >> nb) as i32 + delta_find) as usize] as u32;
+        }
+        let mut w = BitWriter::with_capacity(chunks.len() + 8);
+        for &c in chunks.iter().rev() {
+            w.write_bits((c & 0xFFF) as u64, c >> 12);
+        }
+        (w.finish(), [states[0] as u16, states[1] as u16])
+    }
 }
 
 /// Decoder table entry.
@@ -283,6 +387,137 @@ impl DecTable {
             state = size + e.base as u32 + bits;
             if r.overflowed() {
                 return Err(E("bitstream exhausted"));
+            }
+        }
+        Ok(())
+    }
+
+    /// §Perf hot path: decode `count` symbols produced by
+    /// [`EncTable::encode_interleaved`]. The batch loop emits one symbol
+    /// from each lane per iteration with no per-symbol exhaustion checks —
+    /// state transitions keep states in `[size, 2*size)` by construction
+    /// even on garbage bits, and the single [`BitReader::overflowed`] check
+    /// after the loop rejects truncated payloads exactly like the
+    /// per-symbol check in [`reference::decode_interleaved_naive`] (same
+    /// accept/reject set; identical symbols on accept — property-tested).
+    pub fn decode_interleaved(
+        &self,
+        r: &mut BitReader,
+        init: [u16; 2],
+        count: usize,
+        out: &mut Vec<u16>,
+    ) -> Result<(), FseError> {
+        let size = 1u32 << self.table_log;
+        let mut sa = init[0] as u32;
+        let mut sb = init[1] as u32;
+        for &s in &[sa, sb] {
+            if s < size || s >= 2 * size {
+                return Err(E("invalid initial state"));
+            }
+        }
+        out.reserve(count);
+        let entries = &self.entries[..];
+        let mut k = 0usize;
+        // Batch loop: symbol k reads bits iff k + 2 < count (each lane's
+        // final symbol was absorbed into its initial state), so a pair at
+        // (k, k+1) is check-free when k + 3 < count.
+        while k + 3 < count {
+            let ea = entries[(sa - size) as usize];
+            out.push(ea.symbol);
+            sa = size + ea.base as u32 + r.read_bits(ea.nb_bits as u32) as u32;
+            let eb = entries[(sb - size) as usize];
+            out.push(eb.symbol);
+            sb = size + eb.base as u32 + r.read_bits(eb.nb_bits as u32) as u32;
+            k += 2;
+        }
+        // Careful tail (≤ 3 symbols): per-symbol read guards.
+        while k < count {
+            let st = if k & 1 == 0 { &mut sa } else { &mut sb };
+            let e = entries[(*st - size) as usize];
+            out.push(e.symbol);
+            if k + 2 < count {
+                *st = size + e.base as u32 + r.read_bits(e.nb_bits as u32) as u32;
+            }
+            k += 1;
+        }
+        if r.overflowed() {
+            return Err(E("bitstream exhausted"));
+        }
+        Ok(())
+    }
+}
+
+/// Deliberately straightforward oracles for the §Perf fast paths above.
+/// Same stream format, naive loops: the property suite asserts the fast
+/// encoder is byte-identical and the fast decoder symbol-identical.
+#[doc(hidden)]
+pub mod reference {
+    use super::*;
+    use crate::util::bitio::reference::NaiveBitWriter;
+
+    /// Scalar byte histogram (oracle for [`super::histogram`]).
+    pub fn histogram_naive(data: &[u8]) -> [u32; 256] {
+        let mut hist = [0u32; 256];
+        for &b in data {
+            hist[b as usize] += 1;
+        }
+        hist
+    }
+
+    /// One-symbol-at-a-time interleaved encoder using the byte-at-a-time
+    /// bit writer (oracle for [`EncTable::encode_interleaved`]).
+    pub fn encode_interleaved_naive(table: &EncTable, symbols: &[u16]) -> (Vec<u8>, [u16; 2]) {
+        let size = 1u32 << table.table_log;
+        let mut states = [size, size];
+        let mut seeded = [false; 2];
+        let mut chunks: Vec<(u32, u32)> = Vec::new();
+        for i in (0..symbols.len()).rev() {
+            let s = symbols[i] as usize;
+            let lane = i % 2;
+            if !seeded[lane] {
+                states[lane] = table.seed[s] as u32;
+                seeded[lane] = true;
+                continue;
+            }
+            let (delta_find, delta_nb) = table.sym[s];
+            let st = states[lane];
+            let nb = delta_nb.wrapping_add(st) >> 16;
+            chunks.push((st & ((1u32 << nb) - 1), nb));
+            states[lane] = table.next_state[((st >> nb) as i32 + delta_find) as usize] as u32;
+        }
+        let mut w = NaiveBitWriter::new();
+        for &(bits, nb) in chunks.iter().rev() {
+            w.write_bits(bits as u64, nb);
+        }
+        (w.finish(), [states[0] as u16, states[1] as u16])
+    }
+
+    /// Per-symbol interleaved decoder with an exhaustion check after every
+    /// read (oracle for [`DecTable::decode_interleaved`]).
+    pub fn decode_interleaved_naive(
+        table: &DecTable,
+        r: &mut BitReader,
+        init: [u16; 2],
+        count: usize,
+        out: &mut Vec<u16>,
+    ) -> Result<(), FseError> {
+        let size = 1u32 << table.table_log;
+        let mut states = [init[0] as u32, init[1] as u32];
+        for &s in &states {
+            if s < size || s >= 2 * size {
+                return Err(E("invalid initial state"));
+            }
+        }
+        for k in 0..count {
+            let lane = k % 2;
+            let e = table.entries[(states[lane] - size) as usize];
+            out.push(e.symbol);
+            if k + 2 < count {
+                let bits = r.read_bits(e.nb_bits as u32) as u32;
+                states[lane] = size + e.base as u32 + bits;
+                if r.overflowed() {
+                    return Err(E("bitstream exhausted"));
+                }
             }
         }
         Ok(())
@@ -448,6 +683,117 @@ mod tests {
                 })
                 .collect();
             roundtrip_syms(&syms, alphabet);
+        }
+    }
+
+    fn tables_for(symbols: &[u16], alphabet: usize, max_log: u32) -> Option<(EncTable, DecTable)> {
+        let mut hist = vec![0u32; alphabet];
+        for &s in symbols {
+            hist[s as usize] += 1;
+        }
+        let present = hist.iter().filter(|&&c| c > 0).count();
+        if present < 2 {
+            return None;
+        }
+        let log = optimal_table_log(symbols.len(), present, max_log);
+        let norm = normalize_counts(&hist, symbols.len() as u64, log).unwrap();
+        Some((EncTable::new(&norm, log).unwrap(), DecTable::new(&norm, log).unwrap()))
+    }
+
+    #[test]
+    fn interleaved_roundtrip_and_matches_naive() {
+        let mut rng = Rng::new(0xF62);
+        for round in 0..80 {
+            let alphabet = rng.range(2, 260);
+            let n = rng.range(2, 4000);
+            let syms: Vec<u16> = (0..n)
+                .map(|_| {
+                    let r = rng.f64();
+                    (((alphabet as f64).powf(r) - 1.0) as usize).min(alphabet - 1) as u16
+                })
+                .collect();
+            let Some((enc, dec)) = tables_for(&syms, alphabet, 11) else { continue };
+            let (fast_payload, fast_states) = enc.encode_interleaved(&syms);
+            let (naive_payload, naive_states) = reference::encode_interleaved_naive(&enc, &syms);
+            assert_eq!(fast_payload, naive_payload, "round {round} n {n}");
+            assert_eq!(fast_states, naive_states, "round {round}");
+            let mut out = Vec::new();
+            dec.decode_interleaved(&mut BitReader::new(&fast_payload), fast_states, syms.len(), &mut out)
+                .unwrap();
+            assert_eq!(out, syms, "round {round}");
+            let mut out2 = Vec::new();
+            reference::decode_interleaved_naive(
+                &dec,
+                &mut BitReader::new(&fast_payload),
+                fast_states,
+                syms.len(),
+                &mut out2,
+            )
+            .unwrap();
+            assert_eq!(out2, syms, "round {round} (naive decode)");
+        }
+    }
+
+    #[test]
+    fn interleaved_tiny_streams() {
+        for n in 2..40usize {
+            let syms: Vec<u16> = (0..n).map(|i| (i % 3) as u16).collect();
+            let Some((enc, dec)) = tables_for(&syms, 3, 9) else { continue };
+            let (payload, states) = enc.encode_interleaved(&syms);
+            let mut out = Vec::new();
+            dec.decode_interleaved(&mut BitReader::new(&payload), states, n, &mut out).unwrap();
+            assert_eq!(out, syms, "n={n}");
+        }
+    }
+
+    #[test]
+    fn interleaved_u8_symbols_match_u16() {
+        let mut rng = Rng::new(0xF63);
+        let bytes: Vec<u8> = (0..5000).map(|_| (rng.next_u64() & 0x1F) as u8).collect();
+        let wide: Vec<u16> = bytes.iter().map(|&b| b as u16).collect();
+        let (enc, dec) = tables_for(&wide, 256, 11).unwrap();
+        let (pa, sa) = enc.encode_interleaved(&bytes);
+        let (pb, sb) = enc.encode_interleaved(&wide);
+        assert_eq!(pa, pb);
+        assert_eq!(sa, sb);
+        let mut out = Vec::new();
+        dec.decode_interleaved(&mut BitReader::new(&pa), sa, bytes.len(), &mut out).unwrap();
+        assert_eq!(out, wide);
+    }
+
+    #[test]
+    fn interleaved_truncation_rejected() {
+        let syms: Vec<u16> = (0..4000).map(|i| (i % 7) as u16).collect();
+        let (enc, dec) = tables_for(&syms, 7, 9).unwrap();
+        let (payload, states) = enc.encode_interleaved(&syms);
+        for cut in [0usize, 1, payload.len() / 2] {
+            let mut out = Vec::new();
+            let r = dec.decode_interleaved(&mut BitReader::new(&payload[..cut]), states, syms.len(), &mut out);
+            assert!(r.is_err(), "cut {cut} accepted");
+            let mut out2 = Vec::new();
+            let rn = reference::decode_interleaved_naive(
+                &dec,
+                &mut BitReader::new(&payload[..cut]),
+                states,
+                syms.len(),
+                &mut out2,
+            );
+            assert!(rn.is_err(), "cut {cut} accepted by naive");
+        }
+    }
+
+    #[test]
+    fn histogram_matches_naive() {
+        let mut rng = Rng::new(0xF64);
+        for _ in 0..60 {
+            let n = rng.range(0, 10_000);
+            let data = rng.bytes(n);
+            assert_eq!(histogram(&data), reference::histogram_naive(&data));
+        }
+        // Alignment/remainder edges.
+        for n in 0..32usize {
+            let data: Vec<u8> = (0..n as u8).collect();
+            assert_eq!(histogram(&data), reference::histogram_naive(&data));
         }
     }
 

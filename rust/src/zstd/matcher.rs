@@ -6,6 +6,14 @@
 //! supports a *dictionary prefix*: content prepended to the window that
 //! matches may reference but that is not emitted (the mechanism behind
 //! ZSTD-style dictionary compression on small baskets).
+//!
+//! §Perf: the chain walk itself (SWAR `common_prefix` extension, quick
+//! reject on the best-extending byte, `nice_len` early exit and zlib-style
+//! `good_length` chain shortening) lives in the shared
+//! [`crate::util::match_finder::ChainTable`]; this module keeps only the
+//! parse policy (greedy/lazy, dictionary pre-insert).
+
+use crate::util::match_finder::{ChainTable, SearchCfg};
 
 /// 256 KiB window (8× zlib), as the paper describes.
 pub const WINDOW_LOG: u32 = 18;
@@ -30,37 +38,43 @@ pub struct SearchParams {
     pub depth: u32,
     pub lazy: bool,
     pub nice_len: usize,
+    /// zlib-style `good_length`: once a match at least this long is held,
+    /// further searching (in-chain and the lazy lookahead) runs on a
+    /// quartered budget.
+    pub good_len: usize,
 }
 
 impl SearchParams {
     /// Map ROOT-style levels 1..=9.
     pub fn for_level(level: u8) -> Self {
         match level.clamp(1, 9) {
-            1 => Self { depth: 4, lazy: false, nice_len: 48 },
-            2 => Self { depth: 8, lazy: false, nice_len: 64 },
-            3 => Self { depth: 16, lazy: false, nice_len: 96 },
-            4 => Self { depth: 16, lazy: true, nice_len: 96 },
-            5 => Self { depth: 32, lazy: true, nice_len: 128 },
-            6 => Self { depth: 64, lazy: true, nice_len: 256 },
-            7 => Self { depth: 128, lazy: true, nice_len: 512 },
-            8 => Self { depth: 512, lazy: true, nice_len: 1024 },
-            _ => Self { depth: 2048, lazy: true, nice_len: MAX_MATCH },
+            1 => Self { depth: 4, lazy: false, nice_len: 48, good_len: 16 },
+            2 => Self { depth: 8, lazy: false, nice_len: 64, good_len: 16 },
+            3 => Self { depth: 16, lazy: false, nice_len: 96, good_len: 24 },
+            4 => Self { depth: 16, lazy: true, nice_len: 96, good_len: 24 },
+            5 => Self { depth: 32, lazy: true, nice_len: 128, good_len: 32 },
+            6 => Self { depth: 64, lazy: true, nice_len: 256, good_len: 64 },
+            7 => Self { depth: 128, lazy: true, nice_len: 512, good_len: 128 },
+            8 => Self { depth: 512, lazy: true, nice_len: 1024, good_len: 256 },
+            _ => Self { depth: 2048, lazy: true, nice_len: MAX_MATCH, good_len: 1024 },
+        }
+    }
+
+    fn cfg(&self) -> SearchCfg {
+        SearchCfg {
+            depth: self.depth,
+            nice_len: self.nice_len,
+            good_len: self.good_len,
+            min_match: MIN_MATCH,
         }
     }
 }
 
 const HASH_LOG: u32 = 17;
 
-#[inline]
-fn hash4(data: &[u8], i: usize) -> usize {
-    let v = u32::from_le_bytes(data[i..i + 4].try_into().unwrap());
-    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_LOG)) as usize
-}
-
-/// Reusable chain matcher.
+/// Reusable chain matcher (parse policy over the shared [`ChainTable`]).
 pub struct ChainMatcher {
-    head: Vec<i32>,
-    prev: Vec<i32>,
+    chains: ChainTable,
 }
 
 impl Default for ChainMatcher {
@@ -71,7 +85,7 @@ impl Default for ChainMatcher {
 
 impl ChainMatcher {
     pub fn new() -> Self {
-        Self { head: vec![-1; 1 << HASH_LOG], prev: Vec::new() }
+        Self { chains: ChainTable::new(HASH_LOG) }
     }
 
     /// Parse `data[start..]` into sequences (`data[..start]` is the
@@ -89,15 +103,14 @@ impl ChainMatcher {
         seqs.clear();
         literals.clear();
         let n = data.len();
-        self.head.fill(-1);
-        self.prev.clear();
-        self.prev.resize(n, -1);
+        self.chains.reset(n);
 
         if n < MIN_MATCH + 1 || n - start == 0 {
             literals.extend_from_slice(&data[start..]);
             return;
         }
         let hash_end = n.saturating_sub(4);
+        let cfg = params.cfg();
 
         // Pre-insert the dictionary prefix so matches can reach into it.
         let mut inserted = 0usize;
@@ -105,9 +118,7 @@ impl ChainMatcher {
             ($end:expr) => {
                 let e = $end;
                 while inserted < e && inserted <= hash_end {
-                    let h = hash4(data, inserted);
-                    self.prev[inserted] = self.head[h];
-                    self.head[h] = inserted as i32;
+                    self.chains.insert(data, inserted);
                     inserted += 1;
                 }
                 if inserted < e {
@@ -121,7 +132,7 @@ impl ChainMatcher {
         let mut i = start;
         while i < n {
             insert_up_to!(i + 1);
-            let (len, dist) = self.find(data, i, params);
+            let (len, dist) = self.find(data, i, &cfg, None);
             if len < MIN_MATCH {
                 i += 1;
                 continue;
@@ -129,7 +140,14 @@ impl ChainMatcher {
             let (mut best_len, mut best_dist, mut pos) = (len, dist, i);
             if params.lazy && len < params.nice_len && i + 1 < n {
                 insert_up_to!(i + 2);
-                let (len2, dist2) = self.find(data, i + 1, params);
+                // good_length discipline: holding a long match already,
+                // spend only a quarter of the budget probing i+1.
+                let lookahead_depth = if len >= params.good_len {
+                    Some((params.depth / 4).max(1))
+                } else {
+                    None
+                };
+                let (len2, dist2) = self.find(data, i + 1, &cfg, lookahead_depth);
                 if len2 > best_len + 1 {
                     best_len = len2;
                     best_dist = dist2;
@@ -150,63 +168,10 @@ impl ChainMatcher {
         literals.extend_from_slice(&data[anchor..]);
     }
 
-    fn find(&self, data: &[u8], i: usize, params: &SearchParams) -> (usize, usize) {
-        let n = data.len();
-        if i + 4 > n {
-            return (0, 0);
-        }
-        let h = hash4(data, i);
-        let mut cand = self.head[h];
-        let lower = i.saturating_sub(WINDOW_SIZE);
-        let cap = (n - i).min(MAX_MATCH);
-        let nice = params.nice_len.min(cap);
-        let (mut best_len, mut best_dist) = (0usize, 0usize);
-        let mut steps = params.depth;
-        while cand >= 0 && steps > 0 {
-            let c = cand as usize;
-            if c < lower || c >= i {
-                if c >= i {
-                    cand = self.prev[c];
-                    continue;
-                }
-                break;
-            }
-            if best_len == 0 || (i + best_len < n && data[c + best_len] == data[i + best_len]) {
-                let l = common_prefix(data, c, i, cap);
-                if l > best_len {
-                    best_len = l;
-                    best_dist = i - c;
-                    if l >= nice {
-                        break;
-                    }
-                }
-            }
-            cand = self.prev[c];
-            steps -= 1;
-        }
-        if best_len < MIN_MATCH {
-            (0, 0)
-        } else {
-            (best_len, best_dist)
-        }
+    fn find(&self, data: &[u8], i: usize, cfg: &SearchCfg, depth_override: Option<u32>) -> (usize, usize) {
+        let cap = (data.len() - i).min(MAX_MATCH);
+        self.chains.find(data, i, cap, WINDOW_SIZE, cfg, depth_override)
     }
-}
-
-#[inline]
-fn common_prefix(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
-    let mut l = 0usize;
-    while l + 8 <= cap {
-        let x = u64::from_le_bytes(data[a + l..a + l + 8].try_into().unwrap())
-            ^ u64::from_le_bytes(data[b + l..b + l + 8].try_into().unwrap());
-        if x != 0 {
-            return (l + (x.trailing_zeros() / 8) as usize).min(cap);
-        }
-        l += 8;
-    }
-    while l < cap && data[a + l] == data[b + l] {
-        l += 1;
-    }
-    l
 }
 
 /// Rebuild bytes from sequences + literals (oracle for tests & decoder core).

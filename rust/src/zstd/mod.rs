@@ -2,6 +2,37 @@
 //! entropy stage + dictionary support. Implements the three levers the
 //! paper credits for ZSTD's advantage; the container format is our own
 //! ("RZS1"), not RFC 8478 bit-compatible — see DESIGN.md's honesty box.
+//!
+//! # §Perf fast paths (LZ4/ZSTD hot-lane overhaul)
+//!
+//! Each optimized loop keeps an in-tree naive reference it is
+//! property-tested against in `rust/tests/prop_codecs.rs`, the same
+//! discipline `crate::deflate` established in PR 1:
+//!
+//! * **Interleaved dual-state FSE** (`fse::EncTable::encode_interleaved` /
+//!   `fse::DecTable::decode_interleaved`): two ANS states alternate over
+//!   consecutive symbols (the real-zstd / ans_flex trick), removing the
+//!   serial state dependency so table lookups and the 57-bit-refill bit
+//!   I/O pipeline; the decode batch loop emits a symbol pair per iteration
+//!   with the exhaustion check hoisted out. Oracles:
+//!   `fse::reference::{encode,decode}_interleaved_naive` — compressed
+//!   bytes **identical** on encode, symbols identical on decode, same
+//!   accept/reject set on truncation.
+//! * **4-lane histogram** (`fse::histogram`): single pass, four count
+//!   arrays, 8 bytes per iteration, feeding `fse::normalize_counts`.
+//!   Oracle: `fse::reference::histogram_naive` (equal counts).
+//! * **Shared chain matcher** (`matcher::ChainMatcher` over
+//!   `crate::util::match_finder::ChainTable`): SWAR `common_prefix`
+//!   extension, quick-reject on the best-extending byte, `nice_len` early
+//!   exit, and zlib-style `good_length` budget shortening — one substrate
+//!   shared with `crate::lz4::hc`. Matcher output is validated by
+//!   `matcher::execute_seqs` roundtrips rather than bit-frozen (parse
+//!   policy may evolve; decoded bytes must not).
+//!
+//! Equivalence guarantee: the RZS1 *decoder* accepts exactly the streams
+//! the naive-reference pipeline accepts and yields identical bytes; the
+//! encoder's FSE sections are byte-identical to the naive entropy coder
+//! given the same parse.
 
 pub mod compress;
 pub mod dict;

@@ -268,6 +268,229 @@ fn fused_huffman_emission_equals_reference_on_fuzz_corpus() {
 }
 
 #[test]
+fn lz4_decode_wildcopy_equals_naive_on_fuzz_corpus() {
+    // PR-2 tentpole: the wild-copy slice decoder must return exactly the
+    // bytes of the Vec-growth naive decoder for every stream either
+    // accepts, and agree on rejection otherwise — across compressor
+    // variants, payload classes, dictionary prefixes, truncations and
+    // random corruption.
+    use rootio::lz4::decode::{decompress_block_dict_into, reference::decompress_block_naive};
+    use rootio::lz4::{Lz4Fast, Lz4Hc};
+    let mut rng = Rng::new(0x4C5A);
+    let mut fast_c = Lz4Fast::new();
+    let mut hc = Lz4Hc::new();
+    let mut blk = Vec::new();
+    let mut out = Vec::new();
+    for round in 0..120 {
+        let class = round % 7;
+        let n = rng.range(0, 30_000);
+        let data = gen_payload(&mut rng, class, n);
+        let dict = if round % 4 == 0 { rng.bytes(rng.range(1, 600)) } else { Vec::new() };
+        if dict.is_empty() && round % 2 == 1 {
+            hc.compress(&data, [3u8, 9, 12][round % 3], &mut blk);
+        } else if dict.is_empty() {
+            fast_c.compress(&data, 1 + (round % 5) as u32, &mut blk);
+        } else {
+            let mut buf = dict.clone();
+            buf.extend_from_slice(&data);
+            fast_c.compress_dict(&buf, dict.len(), 1, &mut blk);
+        }
+        // Valid stream: identical bytes.
+        decompress_block_dict_into(&blk, &dict, data.len(), &mut out)
+            .unwrap_or_else(|e| panic!("class {class} n {n}: {e}"));
+        assert_eq!(out, data, "class {class} n {n} dict {}", dict.len());
+        let naive = decompress_block_naive(&blk, &dict, data.len()).expect("naive decode");
+        assert_eq!(naive, data, "naive disagrees: class {class} n {n}");
+        // Truncations: both reject (or both accept with identical bytes —
+        // possible when the cut lands on a sequence boundary by luck).
+        for cut in [0usize, blk.len() / 3, blk.len().saturating_sub(1)] {
+            let fast = {
+                let r = decompress_block_dict_into(&blk[..cut], &dict, data.len(), &mut out);
+                r.map(|_| out.clone())
+            };
+            let nv = decompress_block_naive(&blk[..cut], &dict, data.len());
+            match (fast, nv) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "cut {cut}"),
+                (Err(_), Err(_)) => {}
+                (f, v) => panic!("cut {cut}: fast {:?} vs naive {:?}", f.is_ok(), v.is_ok()),
+            }
+        }
+        // Random corruption: never panic, agree on accept/reject; on
+        // accept-with-wrong-length semantics both still enforce size.
+        if !blk.is_empty() {
+            let mut bad = blk.clone();
+            let at = rng.range(0, bad.len() - 1);
+            bad[at] ^= 1 << (round % 8);
+            let fast = {
+                let r = decompress_block_dict_into(&bad, &dict, data.len(), &mut out);
+                r.map(|_| out.clone())
+            };
+            let nv = decompress_block_naive(&bad, &dict, data.len());
+            match (fast, nv) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "corrupt at {at}"),
+                (Err(_), Err(_)) => {}
+                (f, v) => panic!("corrupt at {at}: fast {:?} vs naive {:?}", f.is_ok(), v.is_ok()),
+            }
+        }
+    }
+}
+
+#[test]
+fn lz4_decode_edge_case_table() {
+    // Satellite: deterministic adversarial streams — offset < 8 overlap
+    // copies, matches reaching into the dictionary prefix, malformed
+    // tokens. Fast and naive must agree everywhere; nothing may panic.
+    use rootio::lz4::decode::{
+        decompress_block, decompress_block_dict_into, reference::decompress_block_naive,
+    };
+    // (stream, dict, expected_len) table.
+    let dict: Vec<u8> = (0..64u8).collect();
+    let mut table: Vec<(Vec<u8>, Vec<u8>, usize)> = Vec::new();
+    // Overlap offsets 1..8 with lengths crossing the 8-byte wild stride.
+    for offset in 1usize..8 {
+        for ml in [4usize, 7, 8, 9, 19] {
+            let lits: Vec<u8> = (0..offset as u8).map(|k| k + 1).collect();
+            let mut s = vec![((offset as u8) << 4) | ((ml - 4).min(15) as u8)];
+            s.extend_from_slice(&lits);
+            s.extend_from_slice(&(offset as u16).to_le_bytes());
+            if ml - 4 >= 15 {
+                s.push((ml - 4 - 15) as u8);
+            }
+            s.push(0);
+            table.push((s, Vec::new(), offset + ml));
+        }
+    }
+    // Match reaching entirely into the dictionary prefix: zero literals,
+    // offset spanning back into the dict.
+    for offset in [1usize, 7, 30, 64] {
+        let ml = 8usize;
+        let mut s = vec![(ml - 4) as u8]; // no literals, match only
+        s.extend_from_slice(&(offset as u16).to_le_bytes());
+        s.push(0);
+        table.push((s, dict.clone(), ml));
+    }
+    // Malformed: offset one past the dictionary, huge lengths, truncated
+    // extension bytes.
+    table.push((vec![0x00, 65, 0, 0x00], dict.clone(), 4)); // offset 65 > dict 64
+    table.push((vec![0x0F, 255, 255], Vec::new(), 100)); // truncated match ext
+    table.push((vec![0xF0, 255], Vec::new(), 100)); // truncated literal ext
+    table.push((vec![0x1F, b'x', 1, 0, 255, 255, 255, 10], Vec::new(), 50)); // match overflows expected
+    let mut out = Vec::new();
+    for (k, (stream, d, n)) in table.iter().enumerate() {
+        let fast = {
+            let r = decompress_block_dict_into(stream, d, *n, &mut out);
+            r.map(|_| out.clone())
+        };
+        let naive = decompress_block_naive(stream, d, *n);
+        match (&fast, &naive) {
+            (Ok(a), Ok(b)) => assert_eq!(a, b, "case {k}"),
+            (Err(_), Err(_)) => {}
+            _ => panic!("case {k}: fast {:?} vs naive {:?}", fast.is_ok(), naive.is_ok()),
+        }
+        // Dict-free convenience wrapper must agree too.
+        if d.is_empty() {
+            let w = decompress_block(stream, *n);
+            assert_eq!(w.is_ok(), naive.is_ok(), "case {k} wrapper");
+        }
+    }
+}
+
+#[test]
+fn fse_interleaved_fast_equals_naive_on_fuzz_corpus() {
+    use rootio::util::bitio::BitReader;
+    use rootio::zstd::fse;
+    let mut rng = Rng::new(0x88_99AA);
+    for round in 0..60 {
+        let class = round % 7;
+        let n = rng.range(2, 30_000);
+        let data = gen_payload(&mut rng, class, n);
+        let hist = fse::histogram(&data);
+        assert_eq!(hist, fse::reference::histogram_naive(&data), "histogram class {class} n {n}");
+        let present = hist.iter().filter(|&&c| c > 0).count();
+        if present < 2 {
+            continue;
+        }
+        let log = fse::optimal_table_log(data.len(), present, 11);
+        let norm = fse::normalize_counts(&hist, data.len() as u64, log).unwrap();
+        let enc = fse::EncTable::new(&norm, log).unwrap();
+        let dec = fse::DecTable::new(&norm, log).unwrap();
+        let syms: Vec<u16> = data.iter().map(|&b| b as u16).collect();
+        // Encoders: byte-identical payload and states.
+        let (fast_payload, fast_states) = enc.encode_interleaved(&data[..]);
+        let (naive_payload, naive_states) = fse::reference::encode_interleaved_naive(&enc, &syms);
+        assert_eq!(fast_payload, naive_payload, "class {class} n {n}");
+        assert_eq!(fast_states, naive_states, "class {class} n {n}");
+        // Decoders: identical symbols.
+        let mut a = Vec::new();
+        dec.decode_interleaved(&mut BitReader::new(&fast_payload), fast_states, n, &mut a)
+            .unwrap();
+        let mut b = Vec::new();
+        fse::reference::decode_interleaved_naive(
+            &dec,
+            &mut BitReader::new(&fast_payload),
+            fast_states,
+            n,
+            &mut b,
+        )
+        .unwrap();
+        assert_eq!(a, b, "class {class} n {n}");
+        assert_eq!(a, syms, "roundtrip class {class} n {n}");
+        // Truncation: both reject.
+        if fast_payload.len() > 1 {
+            let cut = &fast_payload[..fast_payload.len() / 2];
+            let mut t = Vec::new();
+            assert!(dec
+                .decode_interleaved(&mut BitReader::new(cut), fast_states, n, &mut t)
+                .is_err());
+            let mut t2 = Vec::new();
+            assert!(fse::reference::decode_interleaved_naive(
+                &dec,
+                &mut BitReader::new(cut),
+                fast_states,
+                n,
+                &mut t2
+            )
+            .is_err());
+        }
+    }
+}
+
+// NOTE: common_prefix fast-vs-naive equality is covered by the unit test
+// in util/match_finder.rs (common_prefix_fast_equals_naive); the deflate
+// `match_len` wrapper over it keeps its own oracle test above.
+
+#[test]
+fn inflate_fast_equals_careful_reference() {
+    use rootio::deflate::compress::deflate;
+    use rootio::deflate::inflate::{inflate, inflate_reference};
+    use rootio::deflate::{Flavor, Tuning};
+    let mut rng = Rng::new(0xAA_BBCC);
+    const MAX: usize = 64 << 20;
+    for round in 0..40 {
+        let class = round % 7;
+        let n = rng.range(0, 60_000);
+        let data = gen_payload(&mut rng, class, n);
+        let t = Tuning::new(
+            if round % 2 == 0 { Flavor::Reference } else { Flavor::Cloudflare },
+            [1u8, 4, 6, 9][round % 4],
+        );
+        let c = deflate(&data, &t);
+        // Bit-identity: batched-literal fast loop vs careful-only decode.
+        let fast = inflate(&c, data.len(), MAX).expect("fast inflate");
+        let careful = inflate_reference(&c, data.len(), MAX).expect("careful inflate");
+        assert_eq!(fast, careful, "{} class {class} n {n}", t.label());
+        assert_eq!(fast, data, "roundtrip {} class {class} n {n}", t.label());
+        // Truncations must be rejected by both.
+        if c.len() > 2 {
+            for cut in [c.len() / 2, c.len() - 1] {
+                assert!(inflate(&c[..cut], data.len(), MAX).is_err(), "fast cut {cut}");
+                assert!(inflate_reference(&c[..cut], data.len(), MAX).is_err(), "careful cut {cut}");
+            }
+        }
+    }
+}
+
+#[test]
 fn bitwriter_word_flush_equals_naive() {
     use rootio::util::bitio::{reference::NaiveBitWriter, BitWriter};
     let mut rng = Rng::new(0x77_8899);
