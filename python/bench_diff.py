@@ -9,17 +9,30 @@ bench job just regenerated is NEW. Prints
 
   * the `fast_path_speedups` table of NEW (one row per optimized lane:
     fast MB/s, naive-reference MB/s, speedup factor),
+  * the `read_pipeline` scaling table of NEW (serial oracle vs 1/2/4
+    decode workers, per setting),
   * per-(payload, setting) compress/decompress throughput deltas vs the
     baseline where both sides have real numbers.
 
 Placeholder baselines (a fresh PR authored without a local rust toolchain
-commits `results: []`) are handled gracefully: the script then only prints
-the NEW summary. Exit code is always 0 — the diff is informational; the
-equivalence guarantees are enforced by `cargo test`, not by thresholds.
+commits null MB/s fields) are fine: the script then only prints the NEW
+summary. What is NOT fine is a schema mismatch — an unknown schema tag, a
+missing section, or a lane present in the baseline but absent from the
+regenerated file. Those exit non-zero so CI fails loudly instead of
+silently skipping lanes; throughput *values* are never thresholded (the
+equivalence guarantees are enforced by `cargo test`, not by numbers).
+
+The document schema is specified in docs/BENCHMARKS.md.
 """
 
 import json
 import sys
+
+KNOWN_SCHEMAS = ("bench-codecs/v1", "bench-codecs/v2")
+
+
+class SchemaError(Exception):
+    pass
 
 
 def load(path):
@@ -27,8 +40,36 @@ def load(path):
         with open(path) as f:
             return json.load(f)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"bench_diff: cannot read {path}: {e}")
-        return None
+        raise SchemaError(f"cannot read {path}: {e}")
+
+
+def validate(doc, path):
+    """Structural validation; raises SchemaError on any mismatch."""
+    if not isinstance(doc, dict):
+        raise SchemaError(f"{path}: top level is not an object")
+    schema = doc.get("schema")
+    if schema not in KNOWN_SCHEMAS:
+        raise SchemaError(
+            f"{path}: unknown schema {schema!r} (known: {', '.join(KNOWN_SCHEMAS)})"
+        )
+    for key, row_keys in [
+        ("results", ("payload", "setting")),
+        ("fast_path_speedups", ("name", "payload")),
+    ]:
+        rows = doc.get(key)
+        if not isinstance(rows, list):
+            raise SchemaError(f"{path}: missing or non-list section {key!r}")
+        for i, r in enumerate(rows):
+            if not isinstance(r, dict) or any(k not in r for k in row_keys):
+                raise SchemaError(f"{path}: {key}[{i}] lacks keys {row_keys}")
+    if schema == "bench-codecs/v2":
+        rows = doc.get("read_pipeline")
+        if not isinstance(rows, list):
+            raise SchemaError(f"{path}: v2 document missing 'read_pipeline' section")
+        for i, r in enumerate(rows):
+            if not isinstance(r, dict) or "setting" not in r or "workers" not in r:
+                raise SchemaError(f"{path}: read_pipeline[{i}] lacks setting/workers")
+    return doc
 
 
 def fmt_mbps(v):
@@ -52,6 +93,32 @@ def speedup_table(doc, title):
     return out
 
 
+def read_pipeline_table(doc, title):
+    rows = doc.get("read_pipeline") or []
+    if not rows:
+        return {}
+    print(f"\n== {title}: read-pipeline scaling ({len(rows)} lanes) ==")
+    print(f"  {'setting':<28} {'workers':>8} {'read':>9}")
+    out = {}
+    for r in rows:
+        setting, workers = r.get("setting", "?"), r.get("workers", "?")
+        w_s = "serial" if workers == 0 else str(workers)
+        print(f"  {setting:<28} {w_s:>8} {fmt_mbps(r.get('MBps'))}")
+        out[(setting, workers)] = r.get("MBps")
+    return out
+
+
+def check_lane_coverage(base_lanes, new_lanes, what):
+    """A lane in the committed baseline that the regenerated file no longer
+    produces means the bench and its baseline have drifted apart — fail."""
+    missing = [k for k in base_lanes if k not in new_lanes]
+    if missing:
+        raise SchemaError(
+            f"{what}: {len(missing)} baseline lane(s) missing from regenerated file: "
+            + ", ".join(str(k) for k in sorted(missing)[:8])
+        )
+
+
 def result_key(r):
     return (r.get("payload"), r.get("setting"))
 
@@ -60,40 +127,57 @@ def main():
     if len(sys.argv) != 3:
         print(__doc__)
         return 0
-    base, new = load(sys.argv[1]), load(sys.argv[2])
-    if new is None:
-        return 0
+    base = validate(load(sys.argv[1]), sys.argv[1])
+    new = validate(load(sys.argv[2]), sys.argv[2])
 
     new_spd = speedup_table(new, "current run")
-    if base is not None:
-        base_spd = speedup_table(base, "committed baseline")
-        common = [k for k in new_spd if k in base_spd
-                  and isinstance(new_spd[k], (int, float))
-                  and isinstance(base_spd[k], (int, float))]
-        if common:
-            print("\n== speedup drift vs baseline ==")
-            for k in sorted(common):
-                d = new_spd[k] - base_spd[k]
-                print(f"  {k[0]:<44} {k[1]:<14} {base_spd[k]:6.2f}x -> {new_spd[k]:6.2f}x ({d:+.2f})")
+    new_read = read_pipeline_table(new, "current run")
 
-        base_rows = {result_key(r): r for r in (base.get("results") or [])}
-        new_rows = {result_key(r): r for r in (new.get("results") or [])}
-        common = sorted(k for k in new_rows if k in base_rows)
-        if common:
-            print(f"\n== codec-grid throughput drift vs baseline ({len(common)} cells) ==")
-            print(f"  {'payload':<10} {'setting':<28} {'compress':>18} {'decompress':>18}")
-            for k in common:
-                b, n = base_rows[k], new_rows[k]
-                def delta(field):
-                    bv, nv = b.get(field), n.get(field)
-                    if isinstance(bv, (int, float)) and isinstance(nv, (int, float)) and bv:
-                        return f"{bv:7.1f}->{nv:7.1f}"
-                    return f"{'-':>16}"
-                print(f"  {k[0] or '?':<10} {k[1] or '?':<28} {delta('compress_MBps'):>18} {delta('decompress_MBps'):>18}")
-        elif not base.get("results"):
-            print("\n(baseline has no codec-grid results — placeholder; skipping drift table)")
+    base_spd = speedup_table(base, "committed baseline")
+    base_read = read_pipeline_table(base, "committed baseline")
+    check_lane_coverage(base_spd, new_spd, "fast_path_speedups")
+    check_lane_coverage(base_read, new_read, "read_pipeline")
+
+    common = [k for k in new_spd if k in base_spd
+              and isinstance(new_spd[k], (int, float))
+              and isinstance(base_spd[k], (int, float))]
+    if common:
+        print("\n== speedup drift vs baseline ==")
+        for k in sorted(common):
+            d = new_spd[k] - base_spd[k]
+            print(f"  {k[0]:<44} {k[1]:<14} {base_spd[k]:6.2f}x -> {new_spd[k]:6.2f}x ({d:+.2f})")
+
+    common = [k for k in new_read if k in base_read
+              and isinstance(new_read[k], (int, float))
+              and isinstance(base_read[k], (int, float))]
+    if common:
+        print("\n== read-pipeline drift vs baseline ==")
+        for k in sorted(common):
+            w_s = "serial" if k[1] == 0 else f"{k[1]}w"
+            print(f"  {k[0]:<28} {w_s:>8} {base_read[k]:8.1f} -> {new_read[k]:8.1f} MB/s")
+
+    base_rows = {result_key(r): r for r in (base.get("results") or [])}
+    new_rows = {result_key(r): r for r in (new.get("results") or [])}
+    common = sorted(k for k in new_rows if k in base_rows)
+    if common:
+        print(f"\n== codec-grid throughput drift vs baseline ({len(common)} cells) ==")
+        print(f"  {'payload':<10} {'setting':<28} {'compress':>18} {'decompress':>18}")
+        for k in common:
+            b, n = base_rows[k], new_rows[k]
+            def delta(field):
+                bv, nv = b.get(field), n.get(field)
+                if isinstance(bv, (int, float)) and isinstance(nv, (int, float)) and bv:
+                    return f"{bv:7.1f}->{nv:7.1f}"
+                return f"{'-':>16}"
+            print(f"  {k[0] or '?':<10} {k[1] or '?':<28} {delta('compress_MBps'):>18} {delta('decompress_MBps'):>18}")
+    elif not base.get("results"):
+        print("\n(baseline has no codec-grid results — placeholder; skipping drift table)")
     return 0
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    try:
+        sys.exit(main())
+    except SchemaError as e:
+        print(f"bench_diff: SCHEMA MISMATCH: {e}", file=sys.stderr)
+        sys.exit(2)

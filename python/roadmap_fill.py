@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Fill ROADMAP.md's measured-numbers block from a BENCH_codecs.json.
+
+Usage:
+    python3 python/roadmap_fill.py BENCH_codecs.json [ROADMAP.md] [-o OUT.md]
+
+The PR-1/PR-2/PR-3 perf-trajectory sections of ROADMAP.md were authored in
+containers without a Rust toolchain, so their speedup claims point at the
+bench artifact instead of quoting numbers. This script renders the
+artifact's `fast_path_speedups` and `read_pipeline` sections as markdown
+tables into the block delimited by
+
+    <!-- BENCH_NUMBERS_BEGIN -->
+    ...
+    <!-- BENCH_NUMBERS_END -->
+
+CI runs it after regenerating the bench JSON and uploads the result as
+`ROADMAP.filled.md` in the BENCH_codecs artifact; committing that file
+back as ROADMAP.md (or copying the table) is the one-command way to land
+real measured numbers. Exits 1 if the markers are missing, 2 if the JSON
+fails the bench_diff schema check.
+"""
+
+import argparse
+import sys
+
+# bench_diff sits next to this script; the script's own directory is on
+# sys.path automatically when run as `python3 python/roadmap_fill.py`.
+from bench_diff import SchemaError, load, validate  # noqa: E402
+
+BEGIN = "<!-- BENCH_NUMBERS_BEGIN -->"
+END = "<!-- BENCH_NUMBERS_END -->"
+
+
+def fmt(v, suffix=""):
+    return f"{v:.1f}{suffix}" if isinstance(v, (int, float)) else "—"
+
+
+def render(doc):
+    lines = []
+    quick = doc.get("quick_mode")
+    prov = doc.get("generated_by", "?")
+    lines.append(f"Measured numbers (source: `{prov}`"
+                 + (", BENCH_QUICK smoke run" if quick else "") + "):")
+    lines.append("")
+    rows = doc.get("fast_path_speedups") or []
+    have = [r for r in rows if isinstance(r.get("speedup"), (int, float))]
+    if have:
+        lines.append("| fast path | payload | fast MB/s | naive MB/s | speedup |")
+        lines.append("|---|---|---:|---:|---:|")
+        for r in rows:
+            lines.append(
+                f"| {r.get('name','?')} | {r.get('payload','?')} | "
+                f"{fmt(r.get('fast_MBps'))} | {fmt(r.get('reference_MBps'))} | "
+                f"{fmt(r.get('speedup'), 'x')} |"
+            )
+    else:
+        lines.append("*(artifact is still a placeholder — fast-path MB/s "
+                     "fields are null; re-run from a real bench artifact)*")
+    reads = doc.get("read_pipeline") or []
+    have_reads = [r for r in reads if isinstance(r.get("MBps"), (int, float))]
+    if reads:
+        lines.append("")
+        lines.append("Read-pipeline scaling (uncompressed MB/s of a whole-file read):")
+        lines.append("")
+        if have_reads:
+            lines.append("| setting | serial | 1 worker | 2 workers | 4 workers |")
+            lines.append("|---|---:|---:|---:|---:|")
+            by_setting = {}
+            for r in reads:
+                by_setting.setdefault(r.get("setting", "?"), {})[r.get("workers")] = r.get("MBps")
+            for setting, cells in by_setting.items():
+                lines.append(
+                    f"| {setting} | " + " | ".join(fmt(cells.get(w)) for w in (0, 1, 2, 4)) + " |"
+                )
+        else:
+            lines.append("*(read-pipeline lanes present but unfilled)*")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json")
+    ap.add_argument("roadmap", nargs="?", default="ROADMAP.md")
+    ap.add_argument("-o", "--out", default=None,
+                    help="output path (default: overwrite ROADMAP in place)")
+    args = ap.parse_args()
+
+    doc = validate(load(args.bench_json), args.bench_json)
+    with open(args.roadmap) as f:
+        text = f.read()
+    if BEGIN not in text or END not in text:
+        print(f"roadmap_fill: markers {BEGIN} / {END} not found in {args.roadmap}",
+              file=sys.stderr)
+        return 1
+    head, rest = text.split(BEGIN, 1)
+    _, tail = rest.split(END, 1)
+    filled = f"{head}{BEGIN}\n{render(doc)}\n{END}{tail}"
+    out = args.out or args.roadmap
+    with open(out, "w") as f:
+        f.write(filled)
+    print(f"roadmap_fill: wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except SchemaError as e:
+        print(f"roadmap_fill: SCHEMA MISMATCH: {e}", file=sys.stderr)
+        sys.exit(2)

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Executable companion to docs/FORMAT.md: builds the spec's worked-example
+RFIL v2 file byte-by-byte from the *document's* rules (not from the Rust
+code), checks structural invariants (record lengths, trailer offset), and
+verifies the result is byte-identical to the hex dump embedded in
+docs/FORMAT.md §10 — so an edit to either the spec rules or the dump that
+breaks their agreement fails CI.
+
+This is the Python-oracle verification artifact for the format book: if the
+spec drifts from the writer, regenerating this dump and diffing it against a
+file produced by `rootio write` (or `write_tree_serial`) will show exactly
+where. Run: python3 python/tests/format_example.py
+"""
+
+import os
+import re
+import struct
+import sys
+
+
+def uvarint(v):
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def lp(data):
+    return uvarint(len(data)) + data
+
+
+def span_header(tag, level, comp_len, uncomp_len, precond_byte):
+    """FORMAT.md §6: 10-byte compressed-span header."""
+    assert len(tag) == 2
+    h = bytearray(tag)
+    h.append(level & 0x0F)
+    h += comp_len.to_bytes(3, "little")
+    h += uncomp_len.to_bytes(3, "little")
+    h.append(precond_byte)
+    return bytes(h)
+
+
+def record(kind, payload):
+    """FORMAT.md §3: u32_be total_len | u8 kind | payload."""
+    return (len(payload) + 5).to_bytes(4, "big") + bytes([kind]) + payload
+
+
+def build_example():
+    # One branch "x" of type F32 (code 0), three entries 1.0, 2.0, 3.0,
+    # default settings = uncompressed (packed setting 0), one basket.
+    data = b"".join(struct.pack(">f", v) for v in [1.0, 2.0, 3.0])
+    assert len(data) == 12
+
+    # §5 basket record payload: framing prefix + basket header + engine blob.
+    basket_payload = (
+        uvarint(0)            # branch_id
+        + uvarint(0)          # basket_index
+        + uvarint(3)          # n_entries
+        + uvarint(12)         # data_len
+        + uvarint(0)          # n_offsets
+        # §6 engine blob: one raw span ("RW"), precond byte 0.
+        + span_header(b"RW", 0, 12, 12, 0)
+        + data
+    )
+
+    header = b"RFIL" + (2).to_bytes(2, "big")   # §2
+    basket_offset = len(header)                  # first record at offset 6
+    basket_rec = record(1, basket_payload)
+
+    meta_offset = basket_offset + len(basket_rec)
+    # §4 TreeMeta payload.
+    meta_payload = (
+        lp(b"T")              # tree name
+        + uvarint(1)          # n_branches
+        + lp(b"x") + bytes([0]) + bytes([0])   # branch: name, type F32, no per-branch settings
+        + uvarint(0)          # default packed setting (0 = uncompressed)
+        + bytes([0])          # default precond byte
+        + uvarint(3)          # n_entries
+        + bytes([0])          # dictionary flag: none
+        + uvarint(1)          # n_baskets
+        # BasketLoc: branch_id, basket_index, first_entry, n_entries,
+        #            file_offset, compressed_len, uncompressed_len
+        + uvarint(0) + uvarint(0) + uvarint(0) + uvarint(3)
+        + uvarint(basket_offset) + uvarint(len(basket_rec) - 5) + uvarint(12)
+    )
+    meta_rec = record(2, meta_payload)
+
+    trailer = meta_offset.to_bytes(8, "big") + b"RFILEND1"   # §2
+
+    blob = header + basket_rec + meta_rec + trailer
+
+    # Structural checks the spec promises.
+    assert blob[:4] == b"RFIL" and blob[4:6] == b"\x00\x02"
+    assert blob[-8:] == b"RFILEND1"
+    assert int.from_bytes(blob[-16:-8], "big") == meta_offset
+    total = int.from_bytes(blob[basket_offset : basket_offset + 4], "big")
+    assert total == len(basket_payload) + 5 and blob[basket_offset + 4] == 1
+    return blob, basket_offset, meta_offset
+
+
+def hexdump(blob):
+    lines = []
+    for i in range(0, len(blob), 16):
+        chunk = blob[i : i + 16]
+        hexs = " ".join(f"{b:02x}" for b in chunk)
+        lines.append(f"{i:08x}  {hexs:<47}")
+    return "\n".join(lines)
+
+
+DUMP_LINE = re.compile(r"^([0-9a-f]{8})\s+((?:[0-9a-f]{2}[\s]*)+)$")
+
+
+def bytes_from_format_md(path):
+    """Extract the §10 worked-example bytes from docs/FORMAT.md's hex dump
+    (offset-prefixed lines inside the section's code fence; the mid-line
+    byte grouping is irrelevant — every 2-hex-digit token counts)."""
+    out = bytearray()
+    in_section = False
+    for line in open(path):
+        if line.startswith("## 10."):
+            in_section = True
+        elif in_section and line.startswith("## "):
+            break
+        if not in_section:
+            continue
+        m = DUMP_LINE.match(line.strip())
+        if m:
+            assert int(m.group(1), 16) == len(out), f"dump offset gap at {m.group(1)}"
+            out += bytes.fromhex("".join(m.group(2).split()))
+    return bytes(out)
+
+
+if __name__ == "__main__":
+    blob, basket_off, meta_off = build_example()
+    print(f"total {len(blob)} bytes; basket record @ {basket_off}, metadata record @ {meta_off}")
+    print(hexdump(blob))
+    fmt_md = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", "docs", "FORMAT.md")
+    documented = bytes_from_format_md(fmt_md)
+    if documented != blob:
+        print("MISMATCH: docs/FORMAT.md §10 dump disagrees with the bytes built "
+              "from the spec's rules", file=sys.stderr)
+        for i, (a, b) in enumerate(zip(documented, blob)):
+            if a != b:
+                print(f"  first diff at offset {i:#04x}: doc {a:02x} != built {b:02x}",
+                      file=sys.stderr)
+                break
+        print(f"  doc {len(documented)} bytes, built {len(blob)} bytes", file=sys.stderr)
+        sys.exit(1)
+    print(f"docs/FORMAT.md §10 dump matches ({len(blob)} bytes)")

@@ -1,15 +1,18 @@
 //! `cargo bench --bench codecs` — microbenchmarks of the codec substrates:
 //! per-(codec × level × preconditioner) compress/decompress throughput on
 //! canonical payload classes (including the synthetic NanoAOD workload),
-//! plus fast-path-vs-naive-reference speedups for every §Perf hot loop.
+//! fast-path-vs-naive-reference speedups for every §Perf hot loop, and
+//! end-to-end read-pipeline scaling (serial oracle vs 1/2/4 decode
+//! workers).
 //!
 //! Outputs:
 //!  * human-readable tables on stdout,
 //!  * `results/codecs.csv` + `results/precond.csv` (historical columns)
-//!    + `results/fastpath.csv` (fast-vs-reference speedups),
+//!    + `results/fastpath.csv` (fast-vs-reference speedups)
+//!    + `results/read_pipeline.csv` (read-side scaling),
 //!  * `BENCH_codecs.json` at the repo root — the machine-readable perf
-//!    trajectory consumed by CI and future PRs. Set BENCH_QUICK=1 for a
-//!    smoke run.
+//!    trajectory consumed by CI and future PRs (schema documented in
+//!    `docs/BENCHMARKS.md`). Set BENCH_QUICK=1 for a smoke run.
 
 use rootio::bench::figures::collect_baskets;
 use rootio::bench::{bench, json_array, json_escape, json_num, BenchConfig, Table};
@@ -105,6 +108,13 @@ struct Speedup {
     payload: &'static str,
     fast_mbps: f64,
     reference_mbps: f64,
+}
+
+struct ReadRow {
+    setting: String,
+    /// 0 = the serial `TreeReader` oracle; otherwise pipeline worker count.
+    workers: usize,
+    mbps: f64,
 }
 
 fn codec_grid(cfg: &BenchConfig) -> Vec<Row> {
@@ -322,7 +332,63 @@ fn fast_path_speedups(cfg: &BenchConfig) -> Vec<Speedup> {
     out
 }
 
-fn write_json(rows: &[Row], speedups: &[Speedup], quick: bool) -> std::io::Result<()> {
+/// End-to-end read-side scaling: decode a synthetic-NanoAOD tree file
+/// through the serial oracle and through the parallel basket read pipeline
+/// at 1/2/4 workers. Two representative settings: the paper's analysis
+/// read lane (LZ4 + BitShuffle) and the balanced ZSTD lane.
+fn read_pipeline_lanes(cfg: &BenchConfig) -> Vec<ReadRow> {
+    use rootio::coordinator::{ParallelTreeReader, ReadAhead};
+    use rootio::rfile::{write_tree_serial, TreeReader};
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_events = if quick { 1200 } else { 6000 };
+    let mut out = Vec::new();
+    for (tag, settings) in [
+        ("lz4", Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4))),
+        ("zstd", Settings::new(Algorithm::Zstd, 5)),
+    ] {
+        let path = std::env::temp_dir().join(format!(
+            "rootio_bench_read_{}_{}.rfil",
+            std::process::id(),
+            tag
+        ));
+        let events = nanoaod::events(n_events, 0xBE7C);
+        write_tree_serial(
+            &path,
+            "Events",
+            nanoaod::schema(),
+            settings,
+            32 * 1024,
+            events.iter().cloned(),
+        )
+        .expect("writing read-pipeline bench file");
+        let bytes: usize = TreeReader::open(&path)
+            .unwrap()
+            .meta
+            .baskets
+            .iter()
+            .map(|l| l.uncompressed_len as usize)
+            .sum();
+        let r = bench("read-serial", bytes, cfg, || {
+            let mut reader = TreeReader::open(&path).unwrap();
+            reader.read_all_events().unwrap().len()
+        });
+        out.push(ReadRow { setting: settings.label(), workers: 0, mbps: r.mbps() });
+        for workers in [1usize, 2, 4] {
+            let r = bench(&format!("read-{workers}w"), bytes, cfg, || {
+                ParallelTreeReader::open(&path, ReadAhead::with_workers(workers))
+                    .unwrap()
+                    .read_all_events()
+                    .unwrap()
+                    .len()
+            });
+            out.push(ReadRow { setting: settings.label(), workers, mbps: r.mbps() });
+        }
+        std::fs::remove_file(&path).ok();
+    }
+    out
+}
+
+fn write_json(rows: &[Row], speedups: &[Speedup], reads: &[ReadRow], quick: bool) -> std::io::Result<()> {
     let result_items: Vec<String> = rows
         .iter()
         .map(|r| {
@@ -352,11 +418,23 @@ fn write_json(rows: &[Row], speedups: &[Speedup], quick: bool) -> std::io::Resul
             )
         })
         .collect();
+    let read_items: Vec<String> = reads
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"setting\": \"{}\", \"workers\": {}, \"MBps\": {}}}",
+                json_escape(&r.setting),
+                r.workers,
+                json_num(r.mbps),
+            )
+        })
+        .collect();
     let doc = format!(
-        "{{\n  \"schema\": \"bench-codecs/v1\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {}\n}}\n",
+        "{{\n  \"schema\": \"bench-codecs/v2\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"read_pipeline\": {}\n}}\n",
         quick,
         json_array(&result_items, "  "),
         json_array(&speedup_items, "  "),
+        json_array(&read_items, "  "),
     );
     // Land next to Cargo.toml (the repo root) regardless of CWD.
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_codecs.json");
@@ -414,5 +492,18 @@ fn main() {
     println!("{}", t3.render());
     t3.save_csv("fastpath").unwrap();
 
-    write_json(&rows, &speedups, quick).expect("writing BENCH_codecs.json");
+    // Read-pipeline scaling: serial oracle vs 1/2/4 decode workers.
+    let reads = read_pipeline_lanes(&cfg);
+    let mut t4 = Table::new(&["setting", "workers", "read_MB_s"]);
+    for r in &reads {
+        t4.row(vec![
+            r.setting.clone(),
+            if r.workers == 0 { "serial".into() } else { format!("{}", r.workers) },
+            format!("{:.1}", r.mbps),
+        ]);
+    }
+    println!("{}", t4.render());
+    t4.save_csv("read_pipeline").unwrap();
+
+    write_json(&rows, &speedups, &reads, quick).expect("writing BENCH_codecs.json");
 }

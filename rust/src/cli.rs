@@ -4,8 +4,8 @@
 //! rootio write   --out f.rfil [--workload synthetic|nanoaod] [--events N]
 //!                [--setting ZSTD-5] [--precond bitshuffle4] [--basket N]
 //!                [--workers N] [--adaptive analysis|production|balanced]
-//! rootio read    --in f.rfil [--branch NAME]
-//! rootio inspect --in f.rfil
+//! rootio read    --in f.rfil [--branch NAME] [--workers N]
+//! rootio inspect --in f.rfil [--replan analysis|production|balanced]
 //! rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
 //! rootio all-figures [--quick]
 //! ```
@@ -13,7 +13,7 @@
 use crate::bench::figures::run_figure;
 use crate::bench::BenchConfig;
 use crate::compression::{Algorithm, Settings};
-use crate::coordinator::{write_tree_parallel, FeatureSource, PipelineConfig, Planner, UseCase};
+use crate::coordinator::{write_tree_parallel, FeatureSource, PipelineConfig, Planner, ReadAhead, UseCase};
 use crate::gen::{nanoaod, synthetic};
 use crate::precond::Precond;
 use crate::rfile::TreeReader;
@@ -94,8 +94,9 @@ USAGE:
                [--setting ZSTD-5] [--precond bitshuffle4] [--basket BYTES]
                [--workers N] [--adaptive analysis|production|balanced]
                [--artifacts DIR]
-  rootio read --in FILE [--branch NAME]
-  rootio inspect --in FILE
+  rootio read --in FILE [--branch NAME] [--workers N]
+               (--workers N > 0 reads through the parallel basket pipeline)
+  rootio inspect --in FILE [--replan analysis|production|balanced [--workers N]]
   rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
   rootio all-figures [--quick]
 
@@ -269,22 +270,44 @@ fn load_feature_source(args: &Args) -> Result<FeatureSource> {
 
 fn cmd_read(args: &Args) -> Result<i32> {
     let path = PathBuf::from(args.flags.get("in").context("--in required")?);
+    // --workers N engages the parallel read pipeline (0 or absent = the
+    // serial oracle path).
+    let workers: usize = args
+        .flags
+        .get("workers")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
     let mut reader = TreeReader::open(&path)?;
+    // Both paths answer directory queries from the same TreeMeta; only the
+    // value reads dispatch to the serial oracle or the pipeline.
+    let par = (workers > 0).then(|| reader.read_ahead(ReadAhead::with_workers(workers)));
     let t0 = std::time::Instant::now();
-    let mut bytes = 0usize;
+    let bytes: usize;
     if let Some(branch) = args.flags.get("branch") {
         let id = reader
             .branch_id(branch)
             .with_context(|| format!("no branch '{branch}'"))?;
-        let values = reader.read_branch(id)?;
+        let values = match &par {
+            Some(p) => p.read_branch(id)?,
+            None => reader.read_branch(id)?,
+        };
         println!("branch '{branch}': {} entries", values.len());
-        for l in reader.baskets_for(id) {
-            bytes += l.uncompressed_len as usize;
-        }
+        bytes = reader
+            .baskets_for(id)
+            .iter()
+            .map(|l| l.uncompressed_len as usize)
+            .sum();
     } else {
-        let events = reader.read_all_events()?;
+        let events = match &par {
+            Some(p) => p.read_all_events()?,
+            None => reader.read_all_events()?,
+        };
         println!("read {} events x {} branches", events.len(), reader.meta.branches.len());
         bytes = reader.meta.baskets.iter().map(|l| l.uncompressed_len as usize).sum();
+    }
+    if let Some(p) = &par {
+        println!("{}", p.metrics_snapshot().report_decode(&format!("read-pipeline[{workers}w]")));
     }
     let wall = t0.elapsed();
     println!(
@@ -299,6 +322,44 @@ fn cmd_read(args: &Args) -> Result<i32> {
 fn cmd_inspect(args: &Args) -> Result<i32> {
     let path = PathBuf::from(args.flags.get("in").context("--in required")?);
     let reader = TreeReader::open(&path)?;
+    // --replan USE_CASE: profile each branch's first basket through the
+    // parallel read pipeline and print the settings the adaptive planner
+    // would pick for a rewrite.
+    if let Some(mode) = args.flags.get("replan") {
+        let use_case = match mode.as_str() {
+            "analysis" => UseCase::Analysis,
+            "production" => UseCase::Production,
+            "balanced" => UseCase::Balanced,
+            other => bail!("unknown use case '{other}'"),
+        };
+        let workers: usize = args
+            .flags
+            .get("workers")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or_else(|| ReadAhead::default().workers);
+        let planner = Planner::new(use_case, FeatureSource::Native);
+        let profiles = crate::runtime::analyze_tree(&path, workers)?;
+        println!(
+            "replan({mode}) of {} — {} branches, analyzed via {}w read pipeline",
+            path.display(),
+            profiles.len(),
+            workers
+        );
+        println!("{:<28} {:>8} {:>12} {:<24} {}", "branch", "baskets", "raw", "current", "suggested");
+        for p in &profiles {
+            let current = reader.meta.branches[p.branch_id as usize]
+                .settings
+                .map(|s| s.label())
+                .unwrap_or_else(|| format!("(default {})", reader.meta.default_settings.label()));
+            let suggested = match &p.features {
+                Some(f) => planner.plan_from_features(f).label(),
+                None => format!("{} (basket below analyzer bucket)", planner.default_settings().label()),
+            };
+            println!("{:<28} {:>8} {:>12} {:<24} {}", p.name, p.baskets, p.logical_bytes, current, suggested);
+        }
+        return Ok(0);
+    }
     let m = &reader.meta;
     println!("tree '{}': {} entries, {} branches, {} baskets", m.name, m.n_entries, m.branches.len(), m.baskets.len());
     println!("default setting: {}", m.default_settings.label());

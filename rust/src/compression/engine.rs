@@ -186,8 +186,28 @@ impl Engine {
     }
 
     /// Decompress a framed buffer produced by [`Engine::compress`].
-    pub fn decompress(&mut self, mut data: &[u8]) -> Result<Vec<u8>, EngineError> {
-        let mut pre_image: Vec<u8> = Vec::new();
+    ///
+    /// ```
+    /// use rootio::compression::{Algorithm, Engine, Settings};
+    ///
+    /// let mut engine = Engine::new();
+    /// let data: Vec<u8> = (1u32..=4096).flat_map(|i| i.to_be_bytes()).collect();
+    /// let framed = engine.compress(&data, &Settings::new(Algorithm::Zstd, 5));
+    /// assert!(framed.len() < data.len());
+    /// assert_eq!(engine.decompress(&framed).unwrap(), data);
+    /// ```
+    pub fn decompress(&mut self, data: &[u8]) -> Result<Vec<u8>, EngineError> {
+        let mut out = Vec::new();
+        self.decompress_into(data, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decompress a framed buffer into a caller-owned buffer (§Perf: the
+    /// zero-alloc read-pipeline variant, mirroring [`Engine::compress_append`]
+    /// on the write side). `out` is cleared first; read-pipeline workers pass
+    /// a recycled buffer whose grown capacity survives across baskets.
+    pub fn decompress_into(&mut self, mut data: &[u8], out: &mut Vec<u8>) -> Result<(), EngineError> {
+        out.clear();
         let mut precond = crate::precond::Precond::None;
         while !data.is_empty() {
             let h = read_header(data).map_err(err)?;
@@ -195,61 +215,102 @@ impl Engine {
                 .get(HEADER_LEN..HEADER_LEN + h.compressed_len)
                 .ok_or_else(|| err("record body truncated"))?;
             precond = h.precond;
-            let chunk = match h.algorithm {
-                Algorithm::None => body.to_vec(),
-                Algorithm::Zlib | Algorithm::CfZlib => {
-                    crate::deflate::zlib::zlib_decompress_dict(
-                        body,
-                        &self.dictionary,
-                        h.uncompressed_len,
-                        MAX_OUT,
-                    )
-                    .map_err(err)?
-                }
-                Algorithm::Lzma => lzma_decompress(body, MAX_OUT).map_err(err)?,
-                Algorithm::OldRoot => {
-                    legacy_decompress(body, h.uncompressed_len).map_err(err)?
-                }
-                Algorithm::Lz4 => {
-                    // Reuse the engine scratch with its length intact: the
-                    // decoder only zero-extends the shortfall (§Perf).
-                    let mut out = std::mem::take(&mut self.lz4_scratch);
-                    if body.len() < 4 {
-                        return Err(err("lz4 frame too short"));
+            match h.algorithm {
+                // Raw span: copy straight into the output, no scratch needed.
+                Algorithm::None => {
+                    if body.len() != h.uncompressed_len {
+                        return Err(err("uncompressed size mismatch"));
                     }
-                    crate::lz4::decompress_block_dict_into(
-                        &body[4..],
-                        &self.dictionary,
-                        h.uncompressed_len,
-                        &mut out,
-                    )
-                    .map_err(err)?;
-                    // Verify the frame checksum (first 4 bytes).
-                    let expect = u32::from_le_bytes(body[..4].try_into().unwrap());
-                    if crate::checksum::crc32(&out) != expect {
-                        return Err(err("lz4 content checksum mismatch"));
+                    out.extend_from_slice(body);
+                }
+                _ => {
+                    let chunk = match h.algorithm {
+                        Algorithm::None => unreachable!("handled above"),
+                        Algorithm::Zlib | Algorithm::CfZlib => {
+                            crate::deflate::zlib::zlib_decompress_dict(
+                                body,
+                                &self.dictionary,
+                                h.uncompressed_len,
+                                MAX_OUT,
+                            )
+                            .map_err(err)?
+                        }
+                        Algorithm::Lzma => lzma_decompress(body, MAX_OUT).map_err(err)?,
+                        Algorithm::OldRoot => {
+                            legacy_decompress(body, h.uncompressed_len).map_err(err)?
+                        }
+                        Algorithm::Lz4 => {
+                            // Reuse the engine scratch with its length intact:
+                            // the decoder only zero-extends the shortfall
+                            // (§Perf). On every error path the scratch is
+                            // parked back, so one corrupt basket doesn't cost
+                            // the warmed buffer for the rest of the stream.
+                            let mut buf = std::mem::take(&mut self.lz4_scratch);
+                            if body.len() < 4 {
+                                self.lz4_scratch = buf;
+                                return Err(err("lz4 frame too short"));
+                            }
+                            if let Err(e) = crate::lz4::decompress_block_dict_into(
+                                &body[4..],
+                                &self.dictionary,
+                                h.uncompressed_len,
+                                &mut buf,
+                            ) {
+                                self.lz4_scratch = buf;
+                                return Err(err(e));
+                            }
+                            // Verify the frame checksum (first 4 bytes).
+                            let expect = u32::from_le_bytes(body[..4].try_into().unwrap());
+                            if crate::checksum::crc32(&buf) != expect {
+                                self.lz4_scratch = buf;
+                                return Err(err("lz4 content checksum mismatch"));
+                            }
+                            buf
+                        }
+                        Algorithm::Zstd => {
+                            let dict = std::mem::take(&mut self.dictionary);
+                            let r = zstd_decompress_dict(body, &dict, MAX_OUT).map_err(err);
+                            self.dictionary = dict;
+                            r?
+                        }
+                    };
+                    if chunk.len() != h.uncompressed_len {
+                        return Err(err("uncompressed size mismatch"));
                     }
-                    out
+                    out.extend_from_slice(&chunk);
+                    // Park whichever chunk buffer this span produced as the
+                    // LZ4 scratch; its preserved length keeps the next LZ4
+                    // decode's pre-sizing memset-free.
+                    self.lz4_scratch = chunk;
                 }
-                Algorithm::Zstd => {
-                    let dict = std::mem::take(&mut self.dictionary);
-                    let r = zstd_decompress_dict(body, &dict, MAX_OUT).map_err(err);
-                    self.dictionary = dict;
-                    r?
-                }
-            };
-            if chunk.len() != h.uncompressed_len {
-                return Err(err("uncompressed size mismatch"));
             }
-            pre_image.extend_from_slice(&chunk);
-            // Park whichever chunk buffer this span produced as the LZ4
-            // scratch; its preserved length keeps the next LZ4 decode's
-            // pre-sizing memset-free.
-            self.lz4_scratch = chunk;
             data = &data[HEADER_LEN + h.compressed_len..];
         }
-        // Invert the preconditioner over the whole logical buffer.
-        Ok(precond.invert(&pre_image))
+        // Invert the preconditioner over the whole logical buffer, staging
+        // through the engine's reusable scratch so no allocation survives
+        // steady state.
+        match precond {
+            crate::precond::Precond::None => {}
+            crate::precond::Precond::Delta(s) => {
+                crate::precond::undelta_in_place(out, s as usize);
+            }
+            p => {
+                let mut pre = std::mem::take(&mut self.precond_buf);
+                pre.clear();
+                pre.extend_from_slice(out);
+                match p {
+                    crate::precond::Precond::Shuffle(s) => {
+                        crate::precond::unshuffle_into(&pre, s as usize, out)
+                    }
+                    crate::precond::Precond::BitShuffle(s) => {
+                        crate::precond::unbitshuffle_into(&pre, s as usize, out)
+                    }
+                    _ => unreachable!("None and Delta handled above"),
+                }
+                self.precond_buf = pre;
+            }
+        }
+        Ok(())
     }
 }
 

@@ -89,8 +89,18 @@ impl Snapshot {
     }
 
     pub fn report(&self, label: &str) -> String {
+        self.report_kind(label, "compress")
+    }
+
+    /// Read-pipeline flavour of [`Snapshot::report`]: same counters, but the
+    /// per-basket CPU time is decode time, so label it that way.
+    pub fn report_decode(&self, label: &str) -> String {
+        self.report_kind(label, "decode")
+    }
+
+    fn report_kind(&self, label: &str, verb: &str) -> String {
         format!(
-            "{label}: baskets={} in={:.2}MB out={:.2}MB ratio={:.3} cpu-compress={:.1}ms ({:.1} MB/s/worker) lat[<.1ms,<1ms,<10ms,<100ms,>=]={:?}",
+            "{label}: baskets={} in={:.2}MB out={:.2}MB ratio={:.3} cpu-{verb}={:.1}ms ({:.1} MB/s/worker) lat[<.1ms,<1ms,<10ms,<100ms,>=]={:?}",
             self.baskets,
             self.bytes_in as f64 / 1e6,
             self.bytes_out as f64 / 1e6,

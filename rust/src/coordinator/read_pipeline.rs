@@ -1,0 +1,609 @@
+//! The read-side twin of [`pipeline`](super::pipeline): a parallel basket
+//! **read** pipeline with bounded read-ahead and strictly ordered delivery.
+//!
+//! "Increasing Parallelism in the ROOT I/O Subsystem" (arXiv:1804.03326)
+//! found ROOT's biggest read-side wins in cluster/basket-parallel
+//! decompression; the CHEP-2019 survey's Fig-3 motivation (LZ4 for
+//! analysis reads) only pays off if decompression keeps up with the
+//! storage. This module makes that explicit:
+//!
+//! ```text
+//!  prefetch thread ──raw basket bytes──▶ [bounded job queue] ──▶ N workers
+//!  (one File, sequential seeks,                                  │ (Engine each:
+//!   pooled payload buffers)                                      │  decompress,
+//!                                                                │  invert precond,
+//!                                        [bounded done queue] ◀──┘  verify checksums)
+//!                                              │
+//!                                   consumer: reorders by sequence number,
+//!                                   yields (BasketLoc, BasketContent) in
+//!                                   submission order, recycles buffers
+//! ```
+//!
+//! Invariants (property-tested in `rust/tests/integration_read_pipeline.rs`):
+//!  * decoded baskets are **byte-identical** to the serial
+//!    [`TreeReader`](crate::rfile::TreeReader) oracle, for any worker count
+//!    and queue depth, across every codec × preconditioner;
+//!  * a file the serial reader rejects (truncation, corrupted checksum,
+//!    basket identity mismatch) is rejected by the pipeline too — errors
+//!    surface on the consumer thread in delivery order;
+//!  * prefetch is bounded: the job queue holds at most `depth` raw
+//!    baskets, so read-ahead memory scales with the queue depth plus
+//!    transient worker skew, never the whole file;
+//!  * steady-state reads recycle every per-basket buffer (raw payload,
+//!    decoded data, offset array) through the same
+//!    [`Pool<T>`](crate::util::pool::Pool) free lists the write pipeline
+//!    uses ([`BufferPool`] / [`OffsetPool`]).
+//!
+//! Checksum verification (the LZ4 frame CRC-32 and every codec's internal
+//! consistency checks) happens inside the workers' [`Engine::decompress_into`]
+//! calls — off the consumer's critical path, unlike the serial reader where
+//! it serializes with everything else.
+
+use crate::compression::Engine;
+use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::rfile::basket::{decode_basket_into, BasketContent};
+use crate::rfile::format::{self, RecordKind};
+use crate::rfile::meta::{BasketLoc, TreeMeta};
+use crate::rfile::reader::{decode_values, TreeReader};
+use crate::rfile::branch::Value;
+use crate::util::pool::{BufferPool, OffsetPool};
+use crate::util::varint::Cursor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::BufReader;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Read-ahead configuration: how many decode workers to run and how many
+/// raw baskets may be prefetched ahead of the consumer (the backpressure
+/// knob bounding read-ahead memory).
+#[derive(Debug, Clone, Copy)]
+pub struct ReadAhead {
+    /// Decompression worker threads.
+    pub workers: usize,
+    /// Bounded queue depth between prefetcher → workers.
+    pub depth: usize,
+}
+
+impl Default for ReadAhead {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .saturating_sub(1)
+            .max(1);
+        Self { workers, depth: 2 * workers }
+    }
+}
+
+impl ReadAhead {
+    /// Config with `workers` decode threads and a proportional read-ahead.
+    pub fn with_workers(workers: usize) -> Self {
+        let workers = workers.max(1);
+        Self { workers, depth: 2 * workers }
+    }
+}
+
+/// A raw basket record travelling prefetcher → worker. The payload is the
+/// record body read at `loc.file_offset` (rented from the raw-buffer pool);
+/// prefetch-side failures travel as `Err` so they surface in delivery order.
+struct RawJob {
+    seq: u64,
+    loc: BasketLoc,
+    payload: Result<Vec<u8>, String>,
+}
+
+/// A decoded basket travelling worker → consumer.
+struct Done {
+    seq: u64,
+    loc: BasketLoc,
+    result: Result<BasketContent, String>,
+}
+
+/// An in-order stream of decoded baskets from a [`ParallelTreeReader`]
+/// scan. Iterate (or call [`BasketScan::next_basket`]) to receive
+/// `(BasketLoc, BasketContent)` pairs in exactly the order the basket list
+/// was submitted; hand finished contents back via [`BasketScan::recycle`]
+/// to keep the steady state allocation-free.
+pub struct BasketScan {
+    done_rx: Option<Receiver<Done>>,
+    pending: BTreeMap<u64, Done>,
+    next_seq: u64,
+    total: u64,
+    prefetcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    data_pool: BufferPool,
+    offset_pool: OffsetPool,
+}
+
+impl BasketScan {
+    /// Next basket in submission order, or `None` when the scan is done.
+    /// Worker and prefetcher failures surface here, on the basket whose
+    /// decode failed, exactly like the serial reader's per-basket errors.
+    pub fn next_basket(&mut self) -> Option<Result<(BasketLoc, BasketContent)>> {
+        if self.next_seq >= self.total {
+            self.join_threads();
+            return None;
+        }
+        loop {
+            if let Some(d) = self.pending.remove(&self.next_seq) {
+                self.next_seq += 1;
+                return Some(match d.result {
+                    Ok(c) => Ok((d.loc, c)),
+                    Err(e) => Err(anyhow::anyhow!(
+                        "basket ({},{}) at offset {}: {e}",
+                        d.loc.branch_id,
+                        d.loc.basket_index,
+                        d.loc.file_offset
+                    )),
+                });
+            }
+            let recv = match self.done_rx.as_ref() {
+                Some(rx) => rx.recv().map_err(|_| ()),
+                None => Err(()),
+            };
+            match recv {
+                Ok(d) => {
+                    self.pending.insert(d.seq, d);
+                }
+                Err(()) => {
+                    // Workers died before delivering everything. Report it
+                    // once, then terminate the stream: the next call falls
+                    // into the `None` arm above instead of re-yielding this
+                    // error forever (Iterator consumers that skip errors
+                    // must still reach the end).
+                    let delivered = self.next_seq;
+                    self.next_seq = self.total;
+                    self.done_rx = None;
+                    return Some(Err(anyhow::anyhow!(
+                        "read pipeline workers exited early ({delivered} of {} baskets delivered)",
+                        self.total
+                    )));
+                }
+            }
+        }
+    }
+
+    /// Return a consumed basket's buffers to the scan's pools so the next
+    /// basket decode reuses their capacity (§Perf: closes the last
+    /// per-basket allocation loop on the read side).
+    pub fn recycle(&self, content: BasketContent) {
+        self.data_pool.put(content.data);
+        self.offset_pool.put(content.offsets);
+    }
+
+    /// (reuses, fresh allocations) of the decoded-content buffers —
+    /// observability hook for the zero-alloc steady-state claim.
+    pub fn content_pool_stats(&self) -> ((u64, u64), (u64, u64)) {
+        (self.data_pool.stats(), self.offset_pool.stats())
+    }
+
+    fn join_threads(&mut self) {
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(p) = self.prefetcher.take() {
+            let _ = p.join();
+        }
+    }
+}
+
+impl Iterator for BasketScan {
+    type Item = Result<(BasketLoc, BasketContent)>;
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_basket()
+    }
+}
+
+impl Drop for BasketScan {
+    fn drop(&mut self) {
+        // Dropping the done receiver makes blocked workers' sends fail, the
+        // workers then drop the job receiver, which unblocks the prefetcher:
+        // an early-abandoned scan (error, partial read) winds down without
+        // deadlock.
+        self.done_rx.take();
+        self.join_threads();
+    }
+}
+
+/// Parallel tree reader: the read-side twin of
+/// [`write_tree_parallel`](super::pipeline::write_tree_parallel). Opens an
+/// RFIL file's metadata once, then serves branch/event reads by streaming
+/// raw baskets from disk and fanning decompression out across workers.
+///
+/// The serial [`TreeReader`] remains the oracle: every read method here is
+/// property-tested byte-identical to its serial counterpart.
+///
+/// ```
+/// use rootio::compression::{Algorithm, Settings};
+/// use rootio::coordinator::{ParallelTreeReader, ReadAhead};
+/// use rootio::gen::synthetic;
+/// use rootio::rfile::write_tree_serial;
+///
+/// let path = std::env::temp_dir().join(format!("rootio_doc_par_{}.rfil", std::process::id()));
+/// let events = synthetic::events(200, 7);
+/// write_tree_serial(&path, "Events", synthetic::schema(),
+///                   Settings::new(Algorithm::Lz4, 1), 4096, events.iter().cloned()).unwrap();
+///
+/// let reader = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+/// assert_eq!(reader.read_all_events().unwrap(), events);
+/// std::fs::remove_file(&path).ok();
+/// ```
+pub struct ParallelTreeReader {
+    path: PathBuf,
+    pub meta: TreeMeta,
+    dictionary: Vec<u8>,
+    config: ReadAhead,
+    metrics: Arc<Metrics>,
+}
+
+impl ParallelTreeReader {
+    /// Open `path`, loading metadata and the dictionary through the same
+    /// code path as the serial reader (so header/trailer rejection behaves
+    /// identically).
+    pub fn open(path: &Path, config: ReadAhead) -> Result<Self> {
+        let serial = TreeReader::open(path)?;
+        Ok(Self::from_parts(
+            path.to_path_buf(),
+            serial.meta.clone(),
+            serial.dictionary().to_vec(),
+            config,
+        ))
+    }
+
+    /// Build from already-loaded metadata (used by
+    /// [`TreeReader::read_ahead`], which has the file open and parsed).
+    pub fn from_parts(path: PathBuf, meta: TreeMeta, dictionary: Vec<u8>, config: ReadAhead) -> Self {
+        Self { path, meta, dictionary, config, metrics: Arc::new(Metrics::new()) }
+    }
+
+    /// Branch id for a branch name (same [`TreeMeta`] query the serial
+    /// reader uses).
+    pub fn branch_id(&self, name: &str) -> Option<u32> {
+        self.meta.branch_id(name)
+    }
+
+    /// Basket directory for one branch (ordered by basket_index).
+    pub fn baskets_for(&self, branch_id: u32) -> Vec<BasketLoc> {
+        self.meta.baskets_for(branch_id)
+    }
+
+    /// Decode metrics aggregated across every scan this reader served:
+    /// `bytes_in` = logical (uncompressed) bytes, `bytes_out` = compressed
+    /// record bytes, `compress_nanos` = worker decode CPU time.
+    pub fn metrics_snapshot(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Start a pipelined scan over `locs`, delivering decoded baskets in
+    /// exactly that order. The prefetcher reads raw records sequentially on
+    /// one thread; `config.workers` workers decompress concurrently.
+    pub fn scan(&self, locs: Vec<BasketLoc>) -> Result<BasketScan> {
+        let total = locs.len() as u64;
+        let workers_n = self.config.workers.max(1);
+        let depth = self.config.depth.max(1);
+        let file = File::open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+
+        let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<RawJob>(depth);
+        let (done_tx, done_rx) = std::sync::mpsc::sync_channel::<Done>(depth * 2);
+        let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
+
+        // §Perf: pools sized to the in-flight bound. Raw payload buffers
+        // cycle prefetcher → worker → prefetcher; decoded data/offset
+        // buffers cycle worker → consumer → (via recycle) worker. The 4 MiB
+        // capacity cap keeps one jumbo basket from pinning memory for the
+        // scan's lifetime, same policy as the write side.
+        let raw_pool = BufferPool::new(depth * 2 + workers_n, 4 << 20);
+        let data_pool = BufferPool::new(depth * 2 + workers_n, 4 << 20);
+        let offset_pool = OffsetPool::new(depth * 2 + workers_n, 1 << 20);
+
+        let mut workers = Vec::with_capacity(workers_n);
+        for _ in 0..workers_n {
+            let rx = Arc::clone(&job_rx);
+            let tx = done_tx.clone();
+            let m = Arc::clone(&self.metrics);
+            let dict = self.dictionary.clone();
+            let raw_pool = raw_pool.clone();
+            let data_pool = data_pool.clone();
+            let offset_pool = offset_pool.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut engine = Engine::new();
+                if !dict.is_empty() {
+                    engine.set_dictionary(dict);
+                }
+                // Worker-local scratch, reused across every basket.
+                let mut logical_scratch: Vec<u8> = Vec::new();
+                loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(job) = job else { break };
+                    let done = match job.payload {
+                        Err(e) => Done { seq: job.seq, loc: job.loc, result: Err(e) },
+                        Ok(raw) => {
+                            let t0 = Instant::now();
+                            let mut content = BasketContent {
+                                n_entries: 0,
+                                data: data_pool.get(),
+                                offsets: offset_pool.get(),
+                            };
+                            let r = decode_raw_basket(
+                                &raw,
+                                &job.loc,
+                                &mut engine,
+                                &mut logical_scratch,
+                                &mut content,
+                            );
+                            let raw_len = raw.len();
+                            raw_pool.put(raw);
+                            match r {
+                                Ok(()) => {
+                                    m.record_basket(
+                                        content.data.len() + 4 * content.offsets.len(),
+                                        raw_len,
+                                        t0.elapsed(),
+                                    );
+                                    Done { seq: job.seq, loc: job.loc, result: Ok(content) }
+                                }
+                                Err(e) => {
+                                    // Failed decode: the rented buffers go
+                                    // straight back to the pools.
+                                    data_pool.put(content.data);
+                                    offset_pool.put(content.offsets);
+                                    Done { seq: job.seq, loc: job.loc, result: Err(e) }
+                                }
+                            }
+                        }
+                    };
+                    if tx.send(done).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(done_tx);
+
+        let prefetch_raw_pool = raw_pool.clone();
+        let prefetcher = std::thread::spawn(move || {
+            let mut file = BufReader::new(file);
+            for (seq, loc) in locs.into_iter().enumerate() {
+                let mut buf = prefetch_raw_pool.get();
+                let payload = match format::read_record_at_into(&mut file, loc.file_offset, &mut buf)
+                {
+                    Ok(RecordKind::Basket) => Ok(buf),
+                    Ok(kind) => {
+                        prefetch_raw_pool.put(buf);
+                        Err(format!(
+                            "expected basket record at {}, found {kind:?}",
+                            loc.file_offset
+                        ))
+                    }
+                    Err(e) => {
+                        prefetch_raw_pool.put(buf);
+                        Err(format!("{e:#}"))
+                    }
+                };
+                if job_tx.send(RawJob { seq: seq as u64, loc, payload }).is_err() {
+                    // Workers gone (scan dropped early): stop prefetching.
+                    return;
+                }
+            }
+        });
+
+        Ok(BasketScan {
+            done_rx: Some(done_rx),
+            pending: BTreeMap::new(),
+            next_seq: 0,
+            total,
+            prefetcher: Some(prefetcher),
+            workers,
+            data_pool,
+            offset_pool,
+        })
+    }
+
+    /// Read an entire branch back as per-entry values — the parallel
+    /// equivalent of [`TreeReader::read_branch`], byte-identical output.
+    pub fn read_branch(&self, branch_id: u32) -> Result<Vec<Value>> {
+        let ty = self
+            .meta
+            .branches
+            .get(branch_id as usize)
+            .ok_or_else(|| anyhow::anyhow!("no branch {branch_id}"))?
+            .ty;
+        let locs = self.baskets_for(branch_id);
+        let mut scan = self.scan(locs)?;
+        let mut out = Vec::with_capacity(self.meta.n_entries as usize);
+        while let Some(item) = scan.next_basket() {
+            let (_, content) = item?;
+            decode_values(&content, ty, &mut out)?;
+            scan.recycle(content);
+        }
+        if out.len() as u64 != self.meta.n_entries {
+            bail!(
+                "branch {branch_id}: {} entries decoded, tree has {}",
+                out.len(),
+                self.meta.n_entries
+            );
+        }
+        Ok(out)
+    }
+
+    /// Row-wise reconstruction across all branches — the parallel
+    /// equivalent of [`TreeReader::read_all_events`]. One scan covers the
+    /// whole basket directory (branch-major order, so columns fill
+    /// sequentially), instead of one scan per branch.
+    pub fn read_all_events(&self) -> Result<Vec<Vec<Value>>> {
+        let n_branches = self.meta.branches.len();
+        let n = self.meta.n_entries as usize;
+        let mut columns: Vec<Vec<Value>> = (0..n_branches).map(|_| Vec::with_capacity(n)).collect();
+        let mut scan = self.scan(self.meta.baskets.clone())?;
+        while let Some(item) = scan.next_basket() {
+            let (loc, content) = item?;
+            let ty = self
+                .meta
+                .branches
+                .get(loc.branch_id as usize)
+                .ok_or_else(|| anyhow::anyhow!("basket for unknown branch {}", loc.branch_id))?
+                .ty;
+            decode_values(&content, ty, &mut columns[loc.branch_id as usize])?;
+            scan.recycle(content);
+        }
+        for (b, col) in columns.iter().enumerate() {
+            if col.len() as u64 != self.meta.n_entries {
+                bail!(
+                    "branch {b}: {} entries decoded, tree has {}",
+                    col.len(),
+                    self.meta.n_entries
+                );
+            }
+        }
+        // (vec![..; n] would clone away the capacity — Vec::clone starts
+        // from an empty buffer.)
+        let mut events: Vec<Vec<Value>> = (0..n).map(|_| Vec::with_capacity(n_branches)).collect();
+        for col in columns {
+            for (ev, v) in events.iter_mut().zip(col) {
+                ev.push(v);
+            }
+        }
+        Ok(events)
+    }
+}
+
+/// Decode one raw basket record body against its directory entry: parse the
+/// framing prefix, check identity, decompress, check the entry count — the
+/// exact checks [`TreeReader::read_basket`] performs serially.
+fn decode_raw_basket(
+    raw: &[u8],
+    loc: &BasketLoc,
+    engine: &mut Engine,
+    logical_scratch: &mut Vec<u8>,
+    content: &mut BasketContent,
+) -> Result<(), String> {
+    let mut c = Cursor::new(raw);
+    let branch_id = c.uvarint().ok_or("basket branch id truncated")? as u32;
+    let basket_index = c.uvarint().ok_or("basket index truncated")? as u32;
+    if branch_id != loc.branch_id || basket_index != loc.basket_index {
+        return Err(format!(
+            "basket identity mismatch: found ({branch_id},{basket_index}), expected ({},{})",
+            loc.branch_id, loc.basket_index
+        ));
+    }
+    decode_basket_into(&raw[c.pos()..], engine, logical_scratch, content)
+        .map_err(|e| format!("basket decode: {e}"))?;
+    if content.n_entries != loc.n_entries {
+        return Err("basket entry count mismatch".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{Algorithm, Settings};
+    use crate::gen::synthetic;
+    use crate::rfile::write_tree_serial;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rootio_rpipe_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn scan_delivers_in_order_and_recycles() {
+        let path = tmp("order");
+        let events = synthetic::events(300, 3);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Lz4, 1),
+            1024,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        let reader = ParallelTreeReader::open(&path, ReadAhead { workers: 3, depth: 2 }).unwrap();
+        let locs = reader.meta.baskets.clone();
+        assert!(locs.len() > 10, "want many baskets, got {}", locs.len());
+        let mut scan = reader.scan(locs.clone()).unwrap();
+        let mut n = 0usize;
+        while let Some(item) = scan.next_basket() {
+            let (loc, content) = item.unwrap();
+            // Delivery order is exactly submission order.
+            assert_eq!(
+                (loc.branch_id, loc.basket_index),
+                (locs[n].branch_id, locs[n].basket_index)
+            );
+            assert_eq!(content.n_entries, loc.n_entries);
+            scan.recycle(content);
+            n += 1;
+        }
+        assert_eq!(n, locs.len());
+        // Steady state reuses buffers: fresh allocations track the
+        // in-flight window (queue depth + workers + transient skew), not
+        // the basket count. Generous bound to stay robust on loaded CI.
+        let ((data_reuse, data_alloc), _) = scan.content_pool_stats();
+        assert_eq!(data_reuse + data_alloc, locs.len() as u64);
+        assert!(
+            data_reuse > 0 && data_alloc <= locs.len() as u64 / 2,
+            "expected pooled reuse, got {data_alloc} fresh allocations over {} baskets",
+            locs.len()
+        );
+        let snap = reader.metrics_snapshot();
+        assert_eq!(snap.baskets, locs.len() as u64);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn early_drop_does_not_deadlock() {
+        let path = tmp("drop");
+        let events = synthetic::events(400, 5);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Zstd, 1),
+            512,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        let reader = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 1 }).unwrap();
+        let mut scan = reader.scan(reader.meta.baskets.clone()).unwrap();
+        // Consume a couple of baskets, then drop the scan mid-flight.
+        for _ in 0..2 {
+            let (_, content) = scan.next_basket().unwrap().unwrap();
+            scan.recycle(content);
+        }
+        drop(scan);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bogus_offset_errors_like_serial() {
+        let path = tmp("bogus");
+        let events = synthetic::events(50, 9);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Zlib, 1),
+            4096,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        let reader = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+        let mut locs = reader.meta.baskets.clone();
+        // Point one basket at the trailer: both readers must reject it.
+        locs[0].file_offset = u64::MAX / 2;
+        let mut scan = reader.scan(locs).unwrap();
+        assert!(scan.next_basket().unwrap().is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -6,11 +6,51 @@
 //! pluggable lossless compression — ZLIB (reference and Cloudflare-tuned),
 //! LZ4/LZ4-HC, a ZSTD-style tANS codec with dictionaries, an LZMA-style
 //! range coder, and the legacy ROOT codec — plus Shuffle/BitShuffle/Delta
-//! preconditioners, a parallel compression pipeline, and an XLA-served
-//! adaptive compression planner.
+//! preconditioners, parallel basket pipelines on both the write and read
+//! sides, and an XLA-served adaptive compression planner.
 //!
-//! See `DESIGN.md` for the system inventory and the per-figure experiment
-//! index, and `EXPERIMENTS.md` for measured results.
+//! The layer map lives in `docs/ARCHITECTURE.md`; the byte-level on-disk
+//! format (RFIL v2 container, RZS1 sections) is specified in
+//! `docs/FORMAT.md`; the bench artifact schema in `docs/BENCHMARKS.md`.
+//!
+//! ## Entry points
+//!
+//! * Write: [`rfile::write_tree_serial`] (inline) or
+//!   [`coordinator::write_tree_parallel`] (multi-worker pipeline).
+//! * Read: [`rfile::TreeReader`] (serial oracle) or
+//!   [`coordinator::ParallelTreeReader`] / [`rfile::reader::TreeReader::read_ahead`]
+//!   (prefetch + parallel decompression, in-order delivery).
+//! * Buffer-level compression: [`compression::Engine`].
+//!
+//! ## End-to-end roundtrip
+//!
+//! ```
+//! use rootio::compression::{Algorithm, Settings};
+//! use rootio::coordinator::{ParallelTreeReader, ReadAhead};
+//! use rootio::gen::synthetic;
+//! use rootio::rfile::{write_tree_serial, TreeReader};
+//!
+//! let path = std::env::temp_dir().join(format!("rootio_doc_crate_{}.rfil", std::process::id()));
+//! let events = synthetic::events(150, 11);
+//! write_tree_serial(
+//!     &path,
+//!     "Events",
+//!     synthetic::schema(),
+//!     Settings::new(Algorithm::Zstd, 5),
+//!     4096,
+//!     events.iter().cloned(),
+//! )
+//! .unwrap();
+//!
+//! // Serial read (the oracle) ...
+//! let mut serial = TreeReader::open(&path).unwrap();
+//! assert_eq!(serial.read_all_events().unwrap(), events);
+//!
+//! // ... and the parallel basket read pipeline, byte-identical.
+//! let parallel = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+//! assert_eq!(parallel.read_all_events().unwrap(), events);
+//! std::fs::remove_file(&path).ok();
+//! ```
 
 pub mod bench;
 pub mod checksum;

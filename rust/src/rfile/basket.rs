@@ -102,26 +102,49 @@ pub struct BasketContent {
 
 /// Decode + decompress an on-disk basket payload.
 pub fn decode_basket(payload: &[u8], engine: &mut Engine) -> Result<BasketContent, EngineError> {
+    let mut content = BasketContent { n_entries: 0, data: Vec::new(), offsets: Vec::new() };
+    let mut logical_scratch = Vec::new();
+    decode_basket_into(payload, engine, &mut logical_scratch, &mut content)?;
+    Ok(content)
+}
+
+/// Zero-alloc variant (§Perf): decodes into caller-owned buffers, the read
+/// twin of [`encode_basket_into`]. `logical_scratch` holds the decompressed
+/// logical payload between the engine and the data/offset split;
+/// `content.data` / `content.offsets` are cleared and refilled, so
+/// read-pipeline workers can rent them from a
+/// [`crate::util::pool::BufferPool`] / [`crate::util::pool::OffsetPool`] and
+/// consumers can recycle them after use.
+pub fn decode_basket_into(
+    payload: &[u8],
+    engine: &mut Engine,
+    logical_scratch: &mut Vec<u8>,
+    content: &mut BasketContent,
+) -> Result<(), EngineError> {
     let mut c = Cursor::new(payload);
     let n_entries = c.uvarint().ok_or_else(|| EngineError("basket header truncated".into()))? as u32;
     let data_len = c.uvarint().ok_or_else(|| EngineError("basket header truncated".into()))? as usize;
     let n_offsets = c.uvarint().ok_or_else(|| EngineError("basket header truncated".into()))? as usize;
     let blob = &payload[c.pos()..];
-    let logical = engine.decompress(blob)?;
-    if logical.len() != data_len + n_offsets * 4 {
+    engine.decompress_into(blob, logical_scratch)?;
+    if logical_scratch.len() != data_len + n_offsets * 4 {
         return Err(EngineError(format!(
             "basket logical size mismatch: {} != {} + 4*{}",
-            logical.len(),
+            logical_scratch.len(),
             data_len,
             n_offsets
         )));
     }
-    let (data, off_bytes) = logical.split_at(data_len);
-    let mut offsets = Vec::with_capacity(n_offsets);
+    let (data, off_bytes) = logical_scratch.split_at(data_len);
+    content.n_entries = n_entries;
+    content.data.clear();
+    content.data.extend_from_slice(data);
+    content.offsets.clear();
+    content.offsets.reserve(n_offsets);
     for ch in off_bytes.chunks_exact(4) {
-        offsets.push(u32::from_be_bytes(ch.try_into().unwrap()));
+        content.offsets.push(u32::from_be_bytes(ch.try_into().unwrap()));
     }
-    Ok(BasketContent { n_entries, data: data.to_vec(), offsets })
+    Ok(())
 }
 
 #[cfg(test)]

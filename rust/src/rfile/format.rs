@@ -96,6 +96,20 @@ pub fn read_trailer(f: &mut (impl Read + Seek)) -> Result<u64> {
 
 /// Read the record at `offset`; returns (kind, payload).
 pub fn read_record_at(f: &mut (impl Read + Seek), offset: u64) -> Result<(RecordKind, Vec<u8>)> {
+    let mut payload = Vec::new();
+    let kind = read_record_at_into(f, offset, &mut payload)?;
+    Ok((kind, payload))
+}
+
+/// Pooled-buffer variant (§Perf): reads the record payload into a
+/// caller-owned buffer (cleared first, capacity kept), so the read
+/// pipeline's prefetcher can recycle raw-payload buffers through a
+/// [`crate::util::pool::BufferPool`] instead of allocating per basket.
+pub fn read_record_at_into(
+    f: &mut (impl Read + Seek),
+    offset: u64,
+    payload: &mut Vec<u8>,
+) -> Result<RecordKind> {
     f.seek(SeekFrom::Start(offset))?;
     let mut hdr = [0u8; 5];
     f.read_exact(&mut hdr).context("reading record header")?;
@@ -104,9 +118,21 @@ pub fn read_record_at(f: &mut (impl Read + Seek), offset: u64) -> Result<(Record
         bail!("implausible record length {total}");
     }
     let kind = RecordKind::from_u8(hdr[4]).context("unknown record kind")?;
-    let mut payload = vec![0u8; total - 5];
-    f.read_exact(&mut payload).context("reading record payload")?;
-    Ok((kind, payload))
+    payload.clear();
+    // Read through `take` + `read_to_end` rather than resize + read_exact:
+    // the recycled buffer's capacity is reused without zero-filling bytes
+    // that are about to be overwritten (§Perf: this runs once per basket on
+    // the read pipeline's prefetch thread).
+    let body_len = total - 5;
+    let n = f
+        .by_ref()
+        .take(body_len as u64)
+        .read_to_end(payload)
+        .context("reading record payload")?;
+    if n != body_len {
+        bail!("record payload truncated ({n} of {body_len} bytes)");
+    }
+    Ok(kind)
 }
 
 #[cfg(test)]

@@ -32,6 +32,22 @@ pub struct TreeMeta {
 }
 
 impl TreeMeta {
+    /// Branch id for a branch name. Single source of truth for the lookup
+    /// both the serial and the parallel reader expose.
+    pub fn branch_id(&self, name: &str) -> Option<u32> {
+        self.branches.iter().position(|b| b.name == name).map(|i| i as u32)
+    }
+
+    /// Basket directory for one branch (ordered by basket_index, since
+    /// `baskets` is sorted by `(branch_id, basket_index)`).
+    pub fn baskets_for(&self, branch_id: u32) -> Vec<BasketLoc> {
+        self.baskets
+            .iter()
+            .copied()
+            .filter(|l| l.branch_id == branch_id)
+            .collect()
+    }
+
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::new();
         put_lp_bytes(&mut out, self.name.as_bytes());

@@ -13,14 +13,35 @@ use std::fs::File;
 use std::io::BufReader;
 use std::path::Path;
 
-/// An open tree file.
+/// An open tree file (serial read path — the byte-identity oracle for the
+/// parallel reader in [`crate::coordinator::read_pipeline`]).
+///
+/// ```
+/// use rootio::compression::{Algorithm, Settings};
+/// use rootio::gen::synthetic;
+/// use rootio::rfile::{write_tree_serial, TreeReader};
+///
+/// let path = std::env::temp_dir().join(format!("rootio_doc_reader_{}.rfil", std::process::id()));
+/// let events = synthetic::events(100, 1);
+/// write_tree_serial(&path, "Events", synthetic::schema(),
+///                   Settings::new(Algorithm::Zstd, 5), 4096, events.iter().cloned()).unwrap();
+///
+/// let mut reader = TreeReader::open(&path).unwrap();
+/// assert_eq!(reader.meta.n_entries, 100);
+/// assert_eq!(reader.read_all_events().unwrap(), events);
+/// std::fs::remove_file(&path).ok();
+/// ```
 pub struct TreeReader {
     file: BufReader<File>,
+    path: std::path::PathBuf,
     pub meta: TreeMeta,
     engine: Engine,
 }
 
 impl TreeReader {
+    /// Open an RFIL file: validate the header, locate the metadata record
+    /// via the trailer, and load the dictionary blob if the tree carries
+    /// one. Rejects non-RFIL files and unsupported container versions.
     pub fn open(path: &Path) -> Result<Self> {
         let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
         let mut file = BufReader::new(f);
@@ -40,25 +61,36 @@ impl TreeReader {
             }
             engine.set_dictionary(dict);
         }
-        Ok(Self { file, meta, engine })
+        Ok(Self { file, path: path.to_path_buf(), meta, engine })
+    }
+
+    /// The dictionary blob the tree carries (empty if none) — shared with
+    /// the parallel reader so both paths decode identically.
+    pub fn dictionary(&self) -> &[u8] {
+        self.engine.dictionary()
+    }
+
+    /// Upgrade to the multi-worker read pipeline: prefetched raw baskets,
+    /// parallel decompression, in-order delivery. The metadata and
+    /// dictionary already parsed by this reader are reused; this serial
+    /// reader stays valid (and is the oracle the pipeline is tested
+    /// against).
+    pub fn read_ahead(&self, config: crate::coordinator::ReadAhead) -> crate::coordinator::ParallelTreeReader {
+        crate::coordinator::ParallelTreeReader::from_parts(
+            self.path.clone(),
+            self.meta.clone(),
+            self.dictionary().to_vec(),
+            config,
+        )
     }
 
     pub fn branch_id(&self, name: &str) -> Option<u32> {
-        self.meta
-            .branches
-            .iter()
-            .position(|b| b.name == name)
-            .map(|i| i as u32)
+        self.meta.branch_id(name)
     }
 
     /// Basket directory for one branch (ordered by basket_index).
     pub fn baskets_for(&self, branch_id: u32) -> Vec<BasketLoc> {
-        self.meta
-            .baskets
-            .iter()
-            .copied()
-            .filter(|l| l.branch_id == branch_id)
-            .collect()
+        self.meta.baskets_for(branch_id)
     }
 
     /// Read + decompress one basket.
@@ -119,7 +151,9 @@ impl TreeReader {
         for b in 0..n_branches {
             columns.push(self.read_branch(b as u32)?);
         }
-        let mut events = vec![Vec::with_capacity(n_branches); n];
+        // (vec![..; n] would clone away the capacity — Vec::clone starts
+        // from an empty buffer.)
+        let mut events: Vec<Vec<Value>> = (0..n).map(|_| Vec::with_capacity(n_branches)).collect();
         for col in columns {
             for (ev, v) in events.iter_mut().zip(col) {
                 ev.push(v);

@@ -330,7 +330,38 @@ mod tests {
     }
 }
 
-/// Convenience: write a whole tree serially to `path`.
+/// Convenience: write a whole tree serially to `path` (compress inline on
+/// the caller's thread through a [`SerialSink`]).
+///
+/// ```
+/// use rootio::compression::{Algorithm, Settings};
+/// use rootio::rfile::{write_tree_serial, BranchDef, BranchType, TreeReader, Value};
+///
+/// let path = std::env::temp_dir().join(format!("rootio_doc_writer_{}.rfil", std::process::id()));
+/// let branches = vec![
+///     BranchDef::new("energy", BranchType::F32),
+///     // A jagged branch: per-entry f32 arrays (serialized with an offset
+///     // array, the structure the preconditioners exist for).
+///     BranchDef::new("hits", BranchType::VarF32),
+/// ];
+/// let events: Vec<Vec<Value>> = (0..100)
+///     .map(|i| vec![Value::F32(i as f32), Value::AF32(vec![1.0; (i % 5) as usize])])
+///     .collect();
+/// let meta = write_tree_serial(
+///     &path,
+///     "Events",
+///     branches,
+///     Settings::new(Algorithm::Lz4, 1),
+///     1024,
+///     events.iter().cloned(),
+/// )
+/// .unwrap();
+/// assert_eq!(meta.n_entries, 100);
+///
+/// let mut reader = TreeReader::open(&path).unwrap();
+/// assert_eq!(reader.read_all_events().unwrap(), events);
+/// std::fs::remove_file(&path).ok();
+/// ```
 pub fn write_tree_serial(
     path: &Path,
     name: &str,

@@ -138,6 +138,80 @@ pub fn bucket_for(len: usize) -> Option<usize> {
     BUCKETS.iter().rev().find(|&&b| b <= len).copied()
 }
 
+/// One branch's profile from scanning an existing RFIL file: what the
+/// adaptive planner needs to re-plan compression settings after the fact.
+#[derive(Debug, Clone)]
+pub struct BranchProfile {
+    pub branch_id: u32,
+    pub name: String,
+    /// Basket count for this branch (from the directory).
+    pub baskets: u32,
+    /// Total uncompressed bytes across the branch's baskets.
+    pub logical_bytes: u64,
+    /// Analyzer features of the branch's first basket (`None` when every
+    /// basket is below the smallest analyzer bucket).
+    pub features: Option<Features>,
+}
+
+/// Profile every branch of an existing RFIL file: stream one basket per
+/// branch through the parallel read pipeline
+/// ([`crate::coordinator::ParallelTreeReader`]) and run the native analyzer
+/// over its logical payload. Feed the resulting features into
+/// [`crate::coordinator::Planner::plan_from_features`] to propose new
+/// per-branch settings for a rewrite (the paper's §3 "switch between
+/// compression algorithms and settings" workflow, applied retroactively).
+pub fn analyze_tree(path: &Path, workers: usize) -> Result<Vec<BranchProfile>> {
+    use crate::coordinator::{ParallelTreeReader, ReadAhead};
+    let reader = ParallelTreeReader::open(path, ReadAhead::with_workers(workers.max(1)))?;
+    let n_branches = reader.meta.branches.len();
+    // First basket of each branch: the directory is branch-major sorted, so
+    // one pass collects them in scan order.
+    let mut firsts = Vec::with_capacity(n_branches);
+    let mut seen: Option<u32> = None;
+    for loc in &reader.meta.baskets {
+        if seen != Some(loc.branch_id) {
+            firsts.push(*loc);
+            seen = Some(loc.branch_id);
+        }
+    }
+    let mut profiles: Vec<BranchProfile> = reader
+        .meta
+        .branches
+        .iter()
+        .enumerate()
+        .map(|(b, def)| BranchProfile {
+            branch_id: b as u32,
+            name: def.name.clone(),
+            baskets: 0,
+            logical_bytes: 0,
+            features: None,
+        })
+        .collect();
+    for loc in &reader.meta.baskets {
+        if let Some(p) = profiles.get_mut(loc.branch_id as usize) {
+            p.baskets += 1;
+            p.logical_bytes += loc.uncompressed_len as u64;
+        }
+    }
+    let mut scan = reader.scan(firsts)?;
+    let mut logical = Vec::new();
+    while let Some(item) = scan.next_basket() {
+        let (loc, content) = item?;
+        if let Some(p) = profiles.get_mut(loc.branch_id as usize) {
+            // Rebuild the logical payload (data then big-endian offsets) —
+            // the same bytes the write-side planner analyzes.
+            logical.clear();
+            logical.extend_from_slice(&content.data);
+            for &o in &content.offsets {
+                logical.extend_from_slice(&o.to_be_bytes());
+            }
+            p.features = bucket_for(logical.len()).and_then(|b| analyze_native(&logical, b));
+        }
+        scan.recycle(content);
+    }
+    Ok(profiles)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

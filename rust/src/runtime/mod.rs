@@ -5,7 +5,7 @@
 
 pub mod analyzer;
 
-pub use analyzer::{Analyzer, Features, BUCKETS, NUM_FEATURES};
+pub use analyzer::{analyze_tree, Analyzer, BranchProfile, Features, BUCKETS, NUM_FEATURES};
 
 use anyhow::Result;
 

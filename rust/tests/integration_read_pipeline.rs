@@ -1,0 +1,259 @@
+//! Read-pipeline invariants (property-style, seeded): for any worker count
+//! (1/2/4), queue depth, basket size, codec, and preconditioner, the
+//! parallel reader must be **byte-identical** to the serial
+//! [`rootio::rfile::TreeReader`] oracle — including which files it
+//! *rejects*. Decompression parallelism must never change what a file
+//! decodes to, and must never accept bytes the serial reader refuses
+//! (truncation, corrupted checksums, identity mismatches).
+
+use rootio::compression::{Algorithm, Settings};
+use rootio::coordinator::{ParallelTreeReader, ReadAhead};
+use rootio::gen::synthetic;
+use rootio::precond::Precond;
+use rootio::rfile::{write_tree_serial, TreeReader, Value};
+use rootio::util::rng::Rng;
+use std::path::PathBuf;
+
+fn tmp_path(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("rootio_rpipe_prop_{}_{}", std::process::id(), name));
+    p
+}
+
+/// The full codec × preconditioner grid the container supports.
+fn grid() -> Vec<Settings> {
+    let mut v = Vec::new();
+    for (alg, level) in [
+        (Algorithm::None, 0u8),
+        (Algorithm::Zlib, 6),
+        (Algorithm::CfZlib, 1),
+        (Algorithm::Lz4, 1),
+        (Algorithm::Lz4, 9),
+        (Algorithm::Zstd, 5),
+        (Algorithm::Lzma, 6),
+        (Algorithm::OldRoot, 6),
+    ] {
+        for precond in [
+            Precond::None,
+            Precond::BitShuffle(4),
+            Precond::Shuffle(4),
+            Precond::Delta(4),
+        ] {
+            v.push(Settings::new(alg, level).with_precond(precond));
+        }
+    }
+    v
+}
+
+#[test]
+fn parallel_read_equals_serial_oracle_across_grid() {
+    let mut rng = Rng::new(0x0EAD);
+    // Small event counts keep the whole grid (32 settings × 3 worker
+    // counts) fast; random basket sizes vary the basket structure.
+    let events = synthetic::events(120, 0xFEED);
+    for (i, settings) in grid().into_iter().enumerate() {
+        let basket_size = rng.range(256, 8192);
+        let path = tmp_path(&format!("grid{i}"));
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            settings,
+            basket_size,
+            events.iter().cloned(),
+        )
+        .unwrap();
+
+        // Serial oracle.
+        let mut serial = TreeReader::open(&path).unwrap();
+        let oracle_events = serial.read_all_events().unwrap();
+        assert_eq!(oracle_events, events, "{} oracle", settings.label());
+
+        for workers in [1usize, 2, 4] {
+            let depth = rng.range(1, 8);
+            let par = ParallelTreeReader::open(&path, ReadAhead { workers, depth }).unwrap();
+
+            // Per-basket content identity (data bytes + offsets + counts).
+            let mut scan = par.scan(par.meta.baskets.clone()).unwrap();
+            for loc in &par.meta.baskets {
+                let (ploc, content) = scan.next_basket().unwrap().unwrap();
+                assert_eq!((ploc.branch_id, ploc.basket_index), (loc.branch_id, loc.basket_index));
+                let oracle = serial.read_basket(loc).unwrap();
+                assert_eq!(content, oracle, "{} w={workers} basket {:?}", settings.label(), loc);
+                scan.recycle(content);
+            }
+            assert!(scan.next_basket().is_none());
+
+            // Whole-file identity through the high-level APIs.
+            assert_eq!(
+                par.read_all_events().unwrap(),
+                oracle_events,
+                "{} w={workers} d={depth}",
+                settings.label()
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn per_branch_reads_match_serial() {
+    let events = synthetic::events(400, 0xB0B);
+    let path = tmp_path("branch");
+    write_tree_serial(
+        &path,
+        "Events",
+        synthetic::schema(),
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        2048,
+        events.iter().cloned(),
+    )
+    .unwrap();
+    let mut serial = TreeReader::open(&path).unwrap();
+    // The rfile-level API: upgrade the already-open serial reader.
+    let par = serial.read_ahead(ReadAhead::with_workers(3));
+    let n_branches = serial.meta.branches.len();
+    for b in 0..n_branches as u32 {
+        let oracle: Vec<Value> = serial.read_branch(b).unwrap();
+        assert_eq!(par.read_branch(b).unwrap(), oracle, "branch {b}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_files_rejected_in_parity() {
+    let events = synthetic::events(150, 0x7777);
+    let path = tmp_path("trunc");
+    write_tree_serial(
+        &path,
+        "Events",
+        synthetic::schema(),
+        Settings::new(Algorithm::Zstd, 5),
+        1024,
+        events.iter().cloned(),
+    )
+    .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let cut_path = tmp_path("trunc_cut");
+    // Cuts across the whole file: header, first baskets, mid-file, trailer.
+    let cuts = [0usize, 3, 6, 40, bytes.len() / 3, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1];
+    for &cut in &cuts {
+        std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+        let serial_result = TreeReader::open(&cut_path).and_then(|mut r| r.read_all_events());
+        let parallel_result = ParallelTreeReader::open(&cut_path, ReadAhead::with_workers(2))
+            .and_then(|r| r.read_all_events());
+        match (serial_result, parallel_result) {
+            (Ok(s), Ok(p)) => assert_eq!(s, p, "cut {cut}"),
+            (Err(_), Err(_)) => {}
+            (s, p) => panic!(
+                "cut {cut}: serial {} but parallel {}",
+                if s.is_ok() { "accepted" } else { "rejected" },
+                if p.is_ok() { "accepted" } else { "rejected" },
+            ),
+        }
+    }
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&cut_path).ok();
+}
+
+#[test]
+fn corrupted_bytes_rejected_in_parity() {
+    // Byte flips anywhere in the file (basket payloads, record framing,
+    // checksums, metadata): the parallel reader must agree with the serial
+    // oracle on accept/reject, and on decoded values where both accept.
+    // LZ4 carries the CRC-32 content checksum, so flips inside LZ4 basket
+    // payloads exercise the checksum-rejection lane specifically.
+    let events = synthetic::events(150, 0xC0C0);
+    let path = tmp_path("corrupt");
+    write_tree_serial(
+        &path,
+        "Events",
+        synthetic::schema(),
+        Settings::new(Algorithm::Lz4, 1),
+        1024,
+        events.iter().cloned(),
+    )
+    .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let mut rng = Rng::new(0xBADF);
+    let flip_path = tmp_path("corrupt_flip");
+    let mut serial_rejects = 0;
+    for round in 0..40u32 {
+        let pos = rng.range(6, bytes.len() - 1); // past the RFIL header magic
+        let mut corrupted = bytes.clone();
+        corrupted[pos] ^= 1u8 << (round % 8);
+        std::fs::write(&flip_path, &corrupted).unwrap();
+        let serial_result = TreeReader::open(&flip_path).and_then(|mut r| r.read_all_events());
+        let parallel_result = ParallelTreeReader::open(&flip_path, ReadAhead::with_workers(2))
+            .and_then(|r| r.read_all_events());
+        match (serial_result, parallel_result) {
+            (Ok(s), Ok(p)) => assert_eq!(s, p, "flip at {pos}"),
+            (Err(_), Err(_)) => serial_rejects += 1,
+            (s, p) => panic!(
+                "flip at {pos}: serial {} but parallel {}",
+                if s.is_ok() { "accepted" } else { "rejected" },
+                if p.is_ok() { "accepted" } else { "rejected" },
+            ),
+        }
+    }
+    // Sanity: the corpus actually exercised the reject lane.
+    assert!(serial_rejects > 0, "no corruption was ever rejected");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&flip_path).ok();
+}
+
+#[test]
+fn checksum_corruption_in_lz4_basket_rejected_by_both() {
+    // Surgical test for the off-critical-path checksum verification: flip a
+    // byte inside the *stored CRC-32* of the first LZ4 basket frame. The
+    // decompressed bytes are untouched, so only the checksum comparison can
+    // catch it — both readers must reject.
+    let events = synthetic::events(200, 0x5EED);
+    let path = tmp_path("crc");
+    write_tree_serial(
+        &path,
+        "Events",
+        synthetic::schema(),
+        Settings::new(Algorithm::Lz4, 1),
+        4096,
+        events.iter().cloned(),
+    )
+    .unwrap();
+    let serial = TreeReader::open(&path).unwrap();
+    // Find a basket whose first span was actually LZ4-compressed (tag
+    // "L4"), not stored raw: parse the basket framing (five uvarints —
+    // branch_id, basket_index, n_entries, data_len, n_offsets) to land
+    // exactly on the first span header, per docs/FORMAT.md §5–6.
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mut patched = false;
+    for loc in serial.meta.baskets.clone() {
+        // Record layout at loc.file_offset: u32 len, u8 kind, payload.
+        let payload_start = loc.file_offset as usize + 5;
+        let payload_end = payload_start + loc.compressed_len as usize;
+        let payload = &bytes[payload_start..payload_end];
+        let mut pos = 0usize;
+        for _ in 0..5 {
+            let (_, n) = rootio::util::varint::get_uvarint(&payload[pos..]).unwrap();
+            pos += n;
+        }
+        // Span header: 2-byte tag, level, 3+3-byte sizes, precond byte;
+        // the LZ4 CRC-32 is the first 4 bytes of the span body.
+        if payload.get(pos..pos + 2) == Some(b"L4") {
+            let crc_pos = payload_start + pos + 10;
+            assert!(crc_pos + 4 <= payload_end, "span body shorter than its checksum");
+            bytes[crc_pos] ^= 0xFF;
+            patched = true;
+            break;
+        }
+    }
+    assert!(patched, "no LZ4-compressed span found to patch");
+    let crc_path = tmp_path("crc_flip");
+    std::fs::write(&crc_path, &bytes).unwrap();
+    let serial_result = TreeReader::open(&crc_path).and_then(|mut r| r.read_all_events());
+    let parallel_result = ParallelTreeReader::open(&crc_path, ReadAhead::with_workers(2))
+        .and_then(|r| r.read_all_events());
+    assert!(serial_result.is_err(), "serial reader accepted a corrupted checksum");
+    assert!(parallel_result.is_err(), "parallel reader accepted a corrupted checksum");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&crc_path).ok();
+}
