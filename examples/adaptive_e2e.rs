@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! END-TO-END DRIVER (the repository's full-system validation, recorded in
 //! EXPERIMENTS.md): runs the complete three-layer stack on a real small
 //! workload and reports the paper's headline metrics.

@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! NanoAOD algorithm scan — the paper's analysis-use-case study on one
 //! file: write the same NanoAOD-like dataset under every algorithm, then
 //! report file size, write throughput, and full-scan (read) throughput.

@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Parallel pipeline demo: stream a large synthetic dataset through the L3
 //! compression pipeline at several worker counts, showing scaling and
 //! backpressure behaviour, then verify the output file.

@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 // profiling driver: inflate + deflate over paper baskets
 use rootio::bench::figures::paper_baskets;
 use rootio::compression::{Algorithm, Engine, Settings};

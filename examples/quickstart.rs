@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Quickstart: write a small tree with two compression settings, read it
 //! back, and print per-branch compression statistics.
 //!

@@ -2,7 +2,7 @@
 """Diff two BENCH_codecs.json files and print a per-lane speedup summary.
 
 Usage:
-    python3 python/bench_diff.py BASELINE.json NEW.json
+    python3 python/bench_diff.py BASELINE.json NEW.json [--gate-fastpath PCT]
 
 Used by CI: the committed BENCH_codecs.json is the baseline, the file the
 bench job just regenerated is NEW. Prints
@@ -11,6 +11,8 @@ bench job just regenerated is NEW. Prints
     fast MB/s, naive-reference MB/s, speedup factor),
   * the `read_pipeline` scaling table of NEW (serial oracle vs 1/2/4
     decode workers, per setting),
+  * the `projection` table of NEW (2of8 / 8of8 branch projections:
+    serial vs offset-sorted vs submission-order prefetch),
   * per-(payload, setting) compress/decompress throughput deltas vs the
     baseline where both sides have real numbers.
 
@@ -18,20 +20,31 @@ Placeholder baselines (a fresh PR authored without a local rust toolchain
 commits null MB/s fields) are fine: the script then only prints the NEW
 summary. What is NOT fine is a schema mismatch — an unknown schema tag, a
 missing section, or a lane present in the baseline but absent from the
-regenerated file. Those exit non-zero so CI fails loudly instead of
-silently skipping lanes; throughput *values* are never thresholded (the
-equivalence guarantees are enforced by `cargo test`, not by numbers).
+regenerated file. Those exit 2 so CI fails loudly instead of silently
+skipping lanes.
+
+Gating: raw MB/s values are machine-noise-sensitive and are never
+thresholded. The fast-path *speedup factors* (fast/reference measured in
+the same run, so machine noise cancels) ARE gated when `--gate-fastpath
+PCT` is passed: a lane whose speedup drops more than PCT percent below a
+numeric baseline exits 3 — perf is a CI gate, not a log line. Null
+(placeholder) baselines never trip the gate.
 
 The document schema is specified in docs/BENCHMARKS.md.
 """
 
+import argparse
 import json
 import sys
 
-KNOWN_SCHEMAS = ("bench-codecs/v1", "bench-codecs/v2")
+KNOWN_SCHEMAS = ("bench-codecs/v1", "bench-codecs/v2", "bench-codecs/v3")
 
 
 class SchemaError(Exception):
+    pass
+
+
+class RegressionError(Exception):
     pass
 
 
@@ -52,23 +65,21 @@ def validate(doc, path):
         raise SchemaError(
             f"{path}: unknown schema {schema!r} (known: {', '.join(KNOWN_SCHEMAS)})"
         )
-    for key, row_keys in [
+    required = [
         ("results", ("payload", "setting")),
         ("fast_path_speedups", ("name", "payload")),
-    ]:
+    ]
+    if schema in ("bench-codecs/v2", "bench-codecs/v3"):
+        required.append(("read_pipeline", ("setting", "workers")))
+    if schema == "bench-codecs/v3":
+        required.append(("projection", ("branches", "order", "workers")))
+    for key, row_keys in required:
         rows = doc.get(key)
         if not isinstance(rows, list):
             raise SchemaError(f"{path}: missing or non-list section {key!r}")
         for i, r in enumerate(rows):
             if not isinstance(r, dict) or any(k not in r for k in row_keys):
                 raise SchemaError(f"{path}: {key}[{i}] lacks keys {row_keys}")
-    if schema == "bench-codecs/v2":
-        rows = doc.get("read_pipeline")
-        if not isinstance(rows, list):
-            raise SchemaError(f"{path}: v2 document missing 'read_pipeline' section")
-        for i, r in enumerate(rows):
-            if not isinstance(r, dict) or "setting" not in r or "workers" not in r:
-                raise SchemaError(f"{path}: read_pipeline[{i}] lacks setting/workers")
     return doc
 
 
@@ -108,6 +119,22 @@ def read_pipeline_table(doc, title):
     return out
 
 
+def projection_table(doc, title):
+    rows = doc.get("projection") or []
+    if not rows:
+        return {}
+    print(f"\n== {title}: columnar projection ({len(rows)} lanes) ==")
+    print(f"  {'projection':<12} {'order':<12} {'workers':>8} {'read':>9}")
+    out = {}
+    for r in rows:
+        branches, order = r.get("branches", "?"), r.get("order", "?")
+        workers = r.get("workers", "?")
+        w_s = "serial" if workers == 0 else str(workers)
+        print(f"  {branches:<12} {order:<12} {w_s:>8} {fmt_mbps(r.get('MBps'))}")
+        out[(branches, order, workers)] = r.get("MBps")
+    return out
+
+
 def check_lane_coverage(base_lanes, new_lanes, what):
     """A lane in the committed baseline that the regenerated file no longer
     produces means the bench and its baseline have drifted apart — fail."""
@@ -119,24 +146,56 @@ def check_lane_coverage(base_lanes, new_lanes, what):
         )
 
 
+def check_fastpath_gate(base_spd, new_spd, pct):
+    """Fail (exit 3) when any fast-path lane's speedup factor regresses more
+    than `pct` percent vs a *numeric* baseline. Speedups are same-run ratios
+    (fast vs naive on the same machine), so this is robust to absolute
+    machine-speed differences between CI runs."""
+    floor = 1.0 - pct / 100.0
+    regressed = []
+    for k in sorted(base_spd):
+        b, n = base_spd.get(k), new_spd.get(k)
+        if isinstance(b, (int, float)) and isinstance(n, (int, float)) and n < b * floor:
+            regressed.append(f"{k[0]} [{k[1]}]: {b:.2f}x -> {n:.2f}x")
+    if regressed:
+        raise RegressionError(
+            f"{len(regressed)} fast-path lane(s) regressed >{pct:g}% vs baseline:\n  "
+            + "\n  ".join(regressed)
+        )
+
+
 def result_key(r):
     return (r.get("payload"), r.get("setting"))
 
 
-def main():
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 0
-    base = validate(load(sys.argv[1]), sys.argv[1])
-    new = validate(load(sys.argv[2]), sys.argv[2])
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Diff two BENCH_codecs.json files (see module docstring)."
+    )
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument(
+        "--gate-fastpath",
+        type=float,
+        default=None,
+        metavar="PCT",
+        help="exit 3 if any fast-path speedup regresses more than PCT%% "
+        "vs a numeric baseline lane",
+    )
+    args = ap.parse_args(argv)
+    base = validate(load(args.baseline), args.baseline)
+    new = validate(load(args.new), args.new)
 
     new_spd = speedup_table(new, "current run")
     new_read = read_pipeline_table(new, "current run")
+    new_proj = projection_table(new, "current run")
 
     base_spd = speedup_table(base, "committed baseline")
     base_read = read_pipeline_table(base, "committed baseline")
+    base_proj = projection_table(base, "committed baseline")
     check_lane_coverage(base_spd, new_spd, "fast_path_speedups")
     check_lane_coverage(base_read, new_read, "read_pipeline")
+    check_lane_coverage(base_proj, new_proj, "projection")
 
     common = [k for k in new_spd if k in base_spd
               and isinstance(new_spd[k], (int, float))
@@ -156,6 +215,15 @@ def main():
             w_s = "serial" if k[1] == 0 else f"{k[1]}w"
             print(f"  {k[0]:<28} {w_s:>8} {base_read[k]:8.1f} -> {new_read[k]:8.1f} MB/s")
 
+    common = [k for k in new_proj if k in base_proj
+              and isinstance(new_proj[k], (int, float))
+              and isinstance(base_proj[k], (int, float))]
+    if common:
+        print("\n== projection drift vs baseline ==")
+        for k in sorted(common):
+            w_s = "serial" if k[2] == 0 else f"{k[2]}w"
+            print(f"  {k[0]:<12} {k[1]:<12} {w_s:>8} {base_proj[k]:8.1f} -> {new_proj[k]:8.1f} MB/s")
+
     base_rows = {result_key(r): r for r in (base.get("results") or [])}
     new_rows = {result_key(r): r for r in (new.get("results") or [])}
     common = sorted(k for k in new_rows if k in base_rows)
@@ -172,6 +240,10 @@ def main():
             print(f"  {k[0] or '?':<10} {k[1] or '?':<28} {delta('compress_MBps'):>18} {delta('decompress_MBps'):>18}")
     elif not base.get("results"):
         print("\n(baseline has no codec-grid results — placeholder; skipping drift table)")
+
+    if args.gate_fastpath is not None:
+        check_fastpath_gate(base_spd, new_spd, args.gate_fastpath)
+        print(f"\nfast-path gate: no lane regressed >{args.gate_fastpath:g}% vs baseline")
     return 0
 
 
@@ -181,3 +253,6 @@ if __name__ == "__main__":
     except SchemaError as e:
         print(f"bench_diff: SCHEMA MISMATCH: {e}", file=sys.stderr)
         sys.exit(2)
+    except RegressionError as e:
+        print(f"bench_diff: PERF REGRESSION: {e}", file=sys.stderr)
+        sys.exit(3)

@@ -75,6 +75,27 @@ def render(doc):
                 )
         else:
             lines.append("*(read-pipeline lanes present but unfilled)*")
+    projs = doc.get("projection") or []
+    have_projs = [r for r in projs if isinstance(r.get("MBps"), (int, float))]
+    if projs:
+        lines.append("")
+        lines.append("Columnar projection (uncompressed MB/s of the projected branches; "
+                     "serial = k independent `read_branch` sweeps, pipeline lanes at 4 workers):")
+        lines.append("")
+        if have_projs:
+            lines.append("| projection | serial | offset-sorted | submission-order |")
+            lines.append("|---|---:|---:|---:|")
+            by_branches = {}
+            for r in projs:
+                by_branches.setdefault(r.get("branches", "?"), {})[r.get("order")] = r.get("MBps")
+            for branches, cells in by_branches.items():
+                lines.append(
+                    f"| {branches} | "
+                    + " | ".join(fmt(cells.get(o)) for o in ("serial", "offset", "submission"))
+                    + " |"
+                )
+        else:
+            lines.append("*(projection lanes present but unfilled)*")
     return "\n".join(lines)
 
 

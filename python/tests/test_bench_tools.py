@@ -1,0 +1,225 @@
+#!/usr/bin/env python3
+"""Self-tests for the bench tooling contract CI leans on:
+
+  * `bench_diff.py` — schema validation (v1/v2/v3), lane-coverage checks,
+    and the `--gate-fastpath` perf gate with its exit codes (0 ok,
+    2 schema mismatch, 3 perf regression);
+  * `roadmap_fill.py` — marker-block replacement and table rendering for
+    every section of a v3 document.
+
+These run in the CI `python` job so bench-tooling drift fails the build
+even when no Rust toolchain is in play. Run:
+
+    python3 python/tests/test_bench_tools.py
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+PYDIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DIFF = os.path.join(PYDIR, "bench_diff.py")
+ROADMAP_FILL = os.path.join(PYDIR, "roadmap_fill.py")
+
+sys.path.insert(0, PYDIR)
+from bench_diff import SchemaError, validate  # noqa: E402
+
+
+def v3_doc(speedup=3.0, with_values=True):
+    """A minimal well-formed bench-codecs/v3 document."""
+    def mbps(v):
+        return v if with_values else None
+
+    return {
+        "schema": "bench-codecs/v3",
+        "generated_by": "test",
+        "quick_mode": True,
+        "corpus": "test",
+        "results": [
+            {
+                "payload": "offsets",
+                "setting": "LZ4-1",
+                "codec": "LZ4",
+                "level": 1,
+                "precond": "none",
+                "ratio": 2.0,
+                "compress_MBps": mbps(100.0),
+                "decompress_MBps": mbps(500.0),
+            }
+        ],
+        "fast_path_speedups": [
+            {
+                "name": "lz4_decode_wildcopy_vs_naive",
+                "payload": "text",
+                "fast_MBps": mbps(3000.0),
+                "reference_MBps": mbps(1000.0),
+                "speedup": speedup if with_values else None,
+            }
+        ],
+        "read_pipeline": [
+            {"setting": "ZSTD-5", "workers": 0, "MBps": mbps(400.0)},
+            {"setting": "ZSTD-5", "workers": 4, "MBps": mbps(1500.0)},
+        ],
+        "projection": [
+            {"branches": "2of8", "order": "serial", "workers": 0, "MBps": mbps(300.0)},
+            {"branches": "2of8", "order": "offset", "workers": 4, "MBps": mbps(900.0)},
+            {"branches": "2of8", "order": "submission", "workers": 4, "MBps": mbps(700.0)},
+        ],
+    }
+
+
+def write_doc(tmp, name, doc):
+    path = os.path.join(tmp, name)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return path
+
+
+def run_diff(*argv):
+    return subprocess.run(
+        [sys.executable, BENCH_DIFF, *argv], capture_output=True, text=True
+    )
+
+
+class ValidateTests(unittest.TestCase):
+    def test_v3_roundtrip(self):
+        validate(v3_doc(), "doc")
+
+    def test_unknown_schema_rejected(self):
+        doc = v3_doc()
+        doc["schema"] = "bench-codecs/v99"
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v3_requires_projection_section(self):
+        doc = v3_doc()
+        del doc["projection"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v2_does_not_require_projection(self):
+        doc = v3_doc()
+        doc["schema"] = "bench-codecs/v2"
+        del doc["projection"]
+        validate(doc, "doc")
+
+    def test_projection_rows_need_keys(self):
+        doc = v3_doc()
+        del doc["projection"][0]["order"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+
+class DiffCliTests(unittest.TestCase):
+    def test_identical_docs_pass(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            p = write_doc(tmp, "a.json", v3_doc())
+            r = run_diff(p, p)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            self.assertIn("columnar projection", r.stdout)
+
+    def test_missing_baseline_lane_is_schema_mismatch(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v3_doc())
+            new_doc = v3_doc()
+            new_doc["projection"] = new_doc["projection"][:1]  # drop lanes
+            new = write_doc(tmp, "new.json", new_doc)
+            r = run_diff(base, new)
+            self.assertEqual(r.returncode, 2, r.stdout)
+            self.assertIn("SCHEMA MISMATCH", r.stderr)
+
+    def test_unknown_schema_exits_2(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            doc = v3_doc()
+            doc["schema"] = "bench-codecs/v99"
+            p = write_doc(tmp, "bad.json", doc)
+            r = run_diff(p, p)
+            self.assertEqual(r.returncode, 2)
+
+
+class GateTests(unittest.TestCase):
+    def test_regression_beyond_gate_exits_3(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v3_doc(speedup=3.0))
+            new = write_doc(tmp, "new.json", v3_doc(speedup=2.0))  # -33%
+            r = run_diff(base, new, "--gate-fastpath", "10")
+            self.assertEqual(r.returncode, 3, r.stdout)
+            self.assertIn("PERF REGRESSION", r.stderr)
+            self.assertIn("lz4_decode_wildcopy_vs_naive", r.stderr)
+
+    def test_drift_within_gate_passes(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v3_doc(speedup=3.0))
+            new = write_doc(tmp, "new.json", v3_doc(speedup=2.8))  # -6.7%
+            r = run_diff(base, new, "--gate-fastpath", "10")
+            self.assertEqual(r.returncode, 0, r.stderr)
+            self.assertIn("no lane regressed", r.stdout)
+
+    def test_placeholder_baseline_never_trips_gate(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v3_doc(with_values=False))
+            new = write_doc(tmp, "new.json", v3_doc(speedup=0.5))
+            r = run_diff(base, new, "--gate-fastpath", "10")
+            self.assertEqual(r.returncode, 0, r.stderr)
+
+    def test_no_gate_flag_never_gates(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v3_doc(speedup=3.0))
+            new = write_doc(tmp, "new.json", v3_doc(speedup=1.0))
+            r = run_diff(base, new)
+            self.assertEqual(r.returncode, 0, r.stderr)
+
+
+class RoadmapFillTests(unittest.TestCase):
+    ROADMAP = (
+        "# R\n\nprose\n\n<!-- BENCH_NUMBERS_BEGIN -->\nold\n"
+        "<!-- BENCH_NUMBERS_END -->\n\ntail\n"
+    )
+
+    def run_fill(self, tmp, doc, roadmap_text):
+        bench = write_doc(tmp, "bench.json", doc)
+        roadmap = os.path.join(tmp, "ROADMAP.md")
+        with open(roadmap, "w") as f:
+            f.write(roadmap_text)
+        out = os.path.join(tmp, "out.md")
+        r = subprocess.run(
+            [sys.executable, ROADMAP_FILL, bench, roadmap, "-o", out],
+            capture_output=True,
+            text=True,
+        )
+        return r, out
+
+    def test_fills_marker_block_with_all_tables(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            r, out = self.run_fill(tmp, v3_doc(), self.ROADMAP)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            with open(out) as f:
+                text = f.read()
+            self.assertNotIn("\nold\n", text)
+            self.assertIn("| fast path |", text)
+            self.assertIn("Read-pipeline scaling", text)
+            self.assertIn("Columnar projection", text)
+            self.assertIn("| 2of8 | 300.0 | 900.0 | 700.0 |", text)
+            self.assertIn("tail", text)
+
+    def test_placeholder_doc_renders_placeholders(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            r, out = self.run_fill(tmp, v3_doc(with_values=False), self.ROADMAP)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            with open(out) as f:
+                text = f.read()
+            self.assertIn("placeholder", text)
+            self.assertIn("projection lanes present but unfilled", text)
+
+    def test_missing_markers_exit_1(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            r, _ = self.run_fill(tmp, v3_doc(), "# R\nno markers here\n")
+            self.assertEqual(r.returncode, 1)
+            self.assertIn("markers", r.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

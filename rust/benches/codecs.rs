@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! `cargo bench --bench codecs` — microbenchmarks of the codec substrates:
 //! per-(codec × level × preconditioner) compress/decompress throughput on
 //! canonical payload classes (including the synthetic NanoAOD workload),
@@ -9,7 +14,8 @@
 //!  * human-readable tables on stdout,
 //!  * `results/codecs.csv` + `results/precond.csv` (historical columns)
 //!    + `results/fastpath.csv` (fast-vs-reference speedups)
-//!    + `results/read_pipeline.csv` (read-side scaling),
+//!    + `results/read_pipeline.csv` (read-side scaling)
+//!    + `results/projection.csv` (columnar projection lanes),
 //!  * `BENCH_codecs.json` at the repo root — the machine-readable perf
 //!    trajectory consumed by CI and future PRs (schema documented in
 //!    `docs/BENCHMARKS.md`). Set BENCH_QUICK=1 for a smoke run.
@@ -113,6 +119,18 @@ struct Speedup {
 struct ReadRow {
     setting: String,
     /// 0 = the serial `TreeReader` oracle; otherwise pipeline worker count.
+    workers: usize,
+    mbps: f64,
+}
+
+struct ProjRow {
+    /// Projection width: "2of8" or "8of8".
+    branches: &'static str,
+    /// "serial" (k independent `read_branch` sweeps), "offset"
+    /// (offset-sorted single-pass plan), or "submission" (branch-major
+    /// single-pipeline baseline).
+    order: &'static str,
+    /// 0 for the serial baseline; pipeline decode workers otherwise.
     workers: usize,
     mbps: f64,
 }
@@ -388,7 +406,88 @@ fn read_pipeline_lanes(cfg: &BenchConfig) -> Vec<ReadRow> {
     out
 }
 
-fn write_json(rows: &[Row], speedups: &[Speedup], reads: &[ReadRow], quick: bool) -> std::io::Result<()> {
+/// Columnar projection lanes: read k of 8 branches off a NanoAOD-like
+/// LZ4+BitShuffle file (the paper's analysis read lane) three ways — k
+/// independent serial `read_branch` sweeps (the pre-projection behaviour),
+/// one offset-sorted projection pass, and the submission-order (branch-
+/// major) projection baseline that quantifies what the seek-free sweep
+/// buys. MB/s is uncompressed bytes of the *projected* branches only.
+fn projection_lanes(cfg: &BenchConfig) -> Vec<ProjRow> {
+    use rootio::coordinator::{ParallelTreeReader, PrefetchOrder, ProjectionPlan, ReadAhead};
+    use rootio::rfile::{write_tree_serial, TreeReader};
+    let branches8: [&str; 8] = [
+        "Muon_pt", "Muon_eta", "Jet_pt", "Jet_eta", "nJet", "MET_pt", "HLT_IsoMu24", "event",
+    ];
+    const WORKERS: usize = 4;
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_events = if quick { 1200 } else { 6000 };
+    let path = std::env::temp_dir().join(format!("rootio_bench_proj_{}.rfil", std::process::id()));
+    let events = nanoaod::events(n_events, 0x920A);
+    write_tree_serial(
+        &path,
+        "Events",
+        nanoaod::schema(),
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        32 * 1024,
+        events.iter().cloned(),
+    )
+    .expect("writing projection bench file");
+    let mut out = Vec::new();
+    for (tag, names) in [("2of8", &branches8[..2]), ("8of8", &branches8[..])] {
+        let reader = TreeReader::open(&path).unwrap();
+        let ids: Vec<u32> = names
+            .iter()
+            .map(|n| reader.branch_id(n).expect("bench branch in nanoaod schema"))
+            .collect();
+        let bytes: usize = reader
+            .meta
+            .baskets_for_branches(&ids)
+            .iter()
+            .map(|l| l.uncompressed_len as usize)
+            .sum();
+        let r = bench(&format!("proj-{tag}-serial"), bytes, cfg, || {
+            let mut reader = TreeReader::open(&path).unwrap();
+            let mut n = 0usize;
+            for &id in &ids {
+                n += reader.read_branch(id).unwrap().len();
+            }
+            n
+        });
+        out.push(ProjRow { branches: tag, order: "serial", workers: 0, mbps: r.mbps() });
+        for (order_tag, order) in [
+            ("offset", PrefetchOrder::FileOffset),
+            ("submission", PrefetchOrder::Submission),
+        ] {
+            {
+                let probe = ParallelTreeReader::open(&path, ReadAhead::with_workers(WORKERS)).unwrap();
+                let plan = ProjectionPlan::new(&probe.meta, &ids, order).unwrap();
+                if order == PrefetchOrder::FileOffset {
+                    assert!(plan.is_monotonic_sweep(), "offset plan must be one forward sweep");
+                }
+            }
+            // Symmetry with the serial lane (and read_pipeline_lanes): file
+            // open + metadata parse + plan build all inside the timer on
+            // both sides, so the lanes compare end-to-end read strategies,
+            // not setup amortization.
+            let r = bench(&format!("proj-{tag}-{order_tag}"), bytes, cfg, || {
+                let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(WORKERS)).unwrap();
+                let plan = ProjectionPlan::new(&par.meta, &ids, order).unwrap();
+                par.project_plan(&plan).unwrap().read_columns().unwrap().len()
+            });
+            out.push(ProjRow { branches: tag, order: order_tag, workers: WORKERS, mbps: r.mbps() });
+        }
+    }
+    std::fs::remove_file(&path).ok();
+    out
+}
+
+fn write_json(
+    rows: &[Row],
+    speedups: &[Speedup],
+    reads: &[ReadRow],
+    projections: &[ProjRow],
+    quick: bool,
+) -> std::io::Result<()> {
     let result_items: Vec<String> = rows
         .iter()
         .map(|r| {
@@ -429,12 +528,25 @@ fn write_json(rows: &[Row], speedups: &[Speedup], reads: &[ReadRow], quick: bool
             )
         })
         .collect();
+    let proj_items: Vec<String> = projections
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"branches\": \"{}\", \"order\": \"{}\", \"workers\": {}, \"MBps\": {}}}",
+                json_escape(p.branches),
+                json_escape(p.order),
+                p.workers,
+                json_num(p.mbps),
+            )
+        })
+        .collect();
     let doc = format!(
-        "{{\n  \"schema\": \"bench-codecs/v2\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"read_pipeline\": {}\n}}\n",
+        "{{\n  \"schema\": \"bench-codecs/v3\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"read_pipeline\": {},\n  \"projection\": {}\n}}\n",
         quick,
         json_array(&result_items, "  "),
         json_array(&speedup_items, "  "),
         json_array(&read_items, "  "),
+        json_array(&proj_items, "  "),
     );
     // Land next to Cargo.toml (the repo root) regardless of CWD.
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_codecs.json");
@@ -505,5 +617,21 @@ fn main() {
     println!("{}", t4.render());
     t4.save_csv("read_pipeline").unwrap();
 
-    write_json(&rows, &speedups, &reads, quick).expect("writing BENCH_codecs.json");
+    // Columnar projection: 2-of-8 / 8-of-8 branch reads, serial vs
+    // offset-sorted vs submission-order prefetch.
+    let projections = projection_lanes(&cfg);
+    let mut t5 = Table::new(&["projection", "order", "workers", "read_MB_s"]);
+    for p in &projections {
+        t5.row(vec![
+            p.branches.into(),
+            p.order.into(),
+            if p.workers == 0 { "serial".into() } else { format!("{}", p.workers) },
+            format!("{:.1}", p.mbps),
+        ]);
+    }
+    println!("{}", t5.render());
+    t5.save_csv("projection").unwrap();
+
+    write_json(&rows, &speedups, &reads, &projections, quick)
+        .expect("writing BENCH_codecs.json");
 }

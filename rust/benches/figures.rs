@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! `cargo bench --bench figures` — regenerates every paper figure
 //! (Fig 2-6 + the dict study + pipeline scaling). Set BENCH_QUICK=1 for a
 //! fast smoke run. CSVs land in results/.

@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! `cargo bench --bench pipeline` — L3 pipeline scaling + serial-vs-parallel
 //! comparison on the NanoAOD workload (the end-to-end throughput the
 //! paper's Run-3 motivation cares about).

@@ -4,7 +4,8 @@
 //! rootio write   --out f.rfil [--workload synthetic|nanoaod] [--events N]
 //!                [--setting ZSTD-5] [--precond bitshuffle4] [--basket N]
 //!                [--workers N] [--adaptive analysis|production|balanced]
-//! rootio read    --in f.rfil [--branch NAME] [--workers N]
+//! rootio read    --in f.rfil [--branch NAME] [--branches A,B,C] [--workers N]
+//!                [--prefetch offset|submission]
 //! rootio inspect --in f.rfil [--replan analysis|production|balanced]
 //! rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
 //! rootio all-figures [--quick]
@@ -96,6 +97,9 @@ USAGE:
                [--artifacts DIR]
   rootio read --in FILE [--branch NAME] [--workers N]
                (--workers N > 0 reads through the parallel basket pipeline)
+  rootio read --in FILE --branches A,B,C [--workers N] [--prefetch offset|submission]
+               (columnar projection: one offset-sorted pass over the file,
+                per-branch read metrics; submission = branch-major baseline)
   rootio inspect --in FILE [--replan analysis|production|balanced [--workers N]]
   rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
   rootio all-figures [--quick]
@@ -279,6 +283,11 @@ fn cmd_read(args: &Args) -> Result<i32> {
         .transpose()?
         .unwrap_or(0);
     let mut reader = TreeReader::open(&path)?;
+    // --branches: the columnar projection path (multi-branch single-pass
+    // scan with per-branch metrics).
+    if let Some(list) = args.flags.get("branches") {
+        return cmd_read_projection(args, &reader, list, workers);
+    }
     // Both paths answer directory queries from the same TreeMeta; only the
     // value reads dispatch to the serial oracle or the pipeline.
     let par = (workers > 0).then(|| reader.read_ahead(ReadAhead::with_workers(workers)));
@@ -315,6 +324,68 @@ fn cmd_read(args: &Args) -> Result<i32> {
         bytes as f64 / 1e6,
         wall.as_secs_f64(),
         bytes as f64 / 1e6 / wall.as_secs_f64()
+    );
+    Ok(0)
+}
+
+/// `rootio read --branches A,B,C`: project a branch subset through one
+/// pipelined pass (offset-sorted prefetch unless `--prefetch submission`
+/// asks for the branch-major baseline) and report per-branch read metrics.
+fn cmd_read_projection(args: &Args, reader: &TreeReader, list: &str, workers: usize) -> Result<i32> {
+    use crate::coordinator::{PrefetchOrder, ProjectionPlan};
+    let names: Vec<&str> = list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if names.is_empty() {
+        bail!("--branches needs a comma-separated list of branch names");
+    }
+    // Projection always rides the pipeline; --workers 0/absent means the
+    // default worker count, not the serial path.
+    let workers = if workers == 0 { ReadAhead::default().workers } else { workers };
+    let order = match args.flags.get("prefetch").map(|s| s.as_str()) {
+        None | Some("offset") => PrefetchOrder::FileOffset,
+        Some("submission") => PrefetchOrder::Submission,
+        Some(other) => bail!("unknown prefetch order '{other}' (want offset|submission)"),
+    };
+    let par = reader.read_ahead(ReadAhead::with_workers(workers));
+    let ids = ProjectionPlan::resolve_names(&par.meta, &names)?;
+    let plan = ProjectionPlan::new(&par.meta, &ids, order)?;
+    println!(
+        "projection: {} of {} branches, {} baskets, {} backward seeks ({})",
+        names.len(),
+        par.meta.branches.len(),
+        plan.locs().len(),
+        plan.backward_seeks(),
+        match order {
+            PrefetchOrder::FileOffset => "offset-sorted sweep",
+            PrefetchOrder::Submission => "submission-order baseline",
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let mut proj = par.project_plan(&plan)?;
+    let columns = proj.read_columns()?;
+    let wall = t0.elapsed();
+    println!("read {} entries x {} projected branches", par.meta.n_entries, columns.len());
+    println!(
+        "{:<28} {:>8} {:>10} {:>12} {:>12} {:>7}",
+        "branch", "baskets", "entries", "raw", "compressed", "ratio"
+    );
+    for st in proj.branch_stats() {
+        println!(
+            "{:<28} {:>8} {:>10} {:>12} {:>12} {:>7.3}",
+            st.name,
+            st.baskets,
+            st.entries,
+            st.logical_bytes,
+            st.compressed_bytes,
+            st.logical_bytes as f64 / st.compressed_bytes.max(1) as f64,
+        );
+    }
+    println!("{}", par.metrics_snapshot().report_decode(&format!("projection[{workers}w]")));
+    let bytes = plan.logical_bytes() as f64;
+    println!(
+        "decompressed {:.2} MB in {:.3}s ({:.1} MB/s)",
+        bytes / 1e6,
+        wall.as_secs_f64(),
+        bytes / 1e6 / wall.as_secs_f64()
     );
     Ok(0)
 }

@@ -1,14 +1,20 @@
 //! L3 coordinator: the parallel basket-compression pipeline (bounded-queue
 //! backpressure, ordered commit), its read-side twin (prefetch + parallel
-//! decompression + ordered delivery), runtime metrics, and the adaptive
-//! compression planner served by the XLA runtime.
+//! decompression + ordered delivery), columnar projection scans over that
+//! twin (multi-branch single-pass reads with offset-sorted prefetch),
+//! runtime metrics, and the adaptive compression planner served by the XLA
+//! runtime.
 
 pub mod adaptive;
 pub mod metrics;
 pub mod pipeline;
+pub mod projection;
 pub mod read_pipeline;
 
 pub use adaptive::{FeatureSource, Planner, UseCase};
 pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{write_tree_parallel, ParallelSink, PipelineConfig};
+pub use projection::{
+    BranchReadStats, PrefetchOrder, ProjectionPlan, ProjectionReader, ProjectionScan, RowBatch,
+};
 pub use read_pipeline::{BasketScan, ParallelTreeReader, ReadAhead};

@@ -1,0 +1,667 @@
+//! Columnar projection scans: read a *subset* of branches in **one pass**
+//! over the file.
+//!
+//! "Optimizing ROOT IO For Analysis" (arXiv:1711.02659) observes that the
+//! common analysis workload touches a small fraction of a tree's branches,
+//! and that the dominant cost after decompression is the *seek pattern* of
+//! per-branch reads. The PR-3 pipeline ([`super::read_pipeline`]) scans one
+//! branch at a time: projecting k branches meant k independent sweeps over
+//! the file, each skipping the other branches' baskets. This module
+//! generalizes it to multi-branch jobs:
+//!
+//! ```text
+//!  ProjectionPlan: merge k branches' BasketLoc lists, sort by file_offset
+//!        │            (ONE monotonically-increasing read sweep)
+//!        ▼
+//!  BasketScan (PR-3 machinery: prefetch thread → N decode workers →
+//!        │     in-submission-order delivery, pooled buffers)
+//!        ▼
+//!  ProjectionScan: reordering consumer keyed on (branch, basket seq) —
+//!        │          routes interleaved baskets back to per-branch streams
+//!        ▼
+//!  ProjectionReader: per-branch event-order columns, or aligned row
+//!                    batches via next_batch() (columns zipped per entry)
+//! ```
+//!
+//! Invariants (property-tested in `rust/tests/integration_projection.rs`):
+//!  * a k-of-n projection is **byte-identical** to k independent serial
+//!    [`TreeReader::read_branch`](crate::rfile::TreeReader::read_branch)
+//!    calls, for any worker count and either prefetch order;
+//!  * a corrupted basket in a projected branch fails the projection exactly
+//!    like the serial reader — and does *not* fail projections that skip
+//!    that branch (the columnar win: untouched branches are never read);
+//!  * the [`PrefetchOrder::FileOffset`] plan issues one forward sweep:
+//!    `ProjectionPlan::is_monotonic_sweep()` holds by construction (unit
+//!    test below).
+
+use crate::rfile::basket::BasketContent;
+use crate::rfile::branch::{BranchType, Value};
+use crate::rfile::meta::{BasketLoc, TreeMeta};
+use crate::rfile::reader::decode_values;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use super::read_pipeline::{BasketScan, ParallelTreeReader};
+
+/// Order in which a projection's merged basket list is handed to the
+/// prefetcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchOrder {
+    /// Sort the merged list by `file_offset`: one monotonically-increasing
+    /// sweep over the file (no backward seeks). The default.
+    FileOffset,
+    /// Branch-major concatenation in projection order — the PR-3 behaviour
+    /// of running one branch after another. Kept as the bench baseline for
+    /// the seek-pattern comparison.
+    Submission,
+}
+
+/// A merged, ordered prefetch plan over the baskets of a set of projected
+/// branches. Build with [`ProjectionPlan::new`] (branch ids) or let
+/// [`ParallelTreeReader::project`] resolve names for you.
+#[derive(Debug, Clone)]
+pub struct ProjectionPlan {
+    branch_ids: Vec<u32>,
+    locs: Vec<BasketLoc>,
+    order: PrefetchOrder,
+}
+
+impl ProjectionPlan {
+    /// Merge the basket directories of `branch_ids` into one prefetch plan.
+    /// Rejects empty projections, duplicate ids, and ids outside the tree's
+    /// schema.
+    pub fn new(meta: &TreeMeta, branch_ids: &[u32], order: PrefetchOrder) -> Result<Self> {
+        if branch_ids.is_empty() {
+            bail!("empty projection: no branches selected");
+        }
+        let n = meta.branches.len() as u32;
+        let mut seen = vec![false; n as usize];
+        for &id in branch_ids {
+            if id >= n {
+                bail!("projection references branch {id}, tree has {n} branches");
+            }
+            if seen[id as usize] {
+                bail!("duplicate branch {id} ('{}') in projection", meta.branches[id as usize].name);
+            }
+            seen[id as usize] = true;
+        }
+        // Branch-major merge first (each per-branch list is already ordered
+        // by basket_index), then the offset sort if requested. The sort is
+        // stable, so equal offsets (impossible in well-formed files, but
+        // cheap to be deterministic about) keep submission order.
+        let mut locs = meta.baskets_for_branches(branch_ids);
+        if order == PrefetchOrder::FileOffset {
+            locs.sort_by_key(|l| l.file_offset);
+        }
+        Ok(Self { branch_ids: branch_ids.to_vec(), locs, order })
+    }
+
+    /// Resolve branch *names* to ids against `meta` (first error wins).
+    pub fn resolve_names(meta: &TreeMeta, names: &[&str]) -> Result<Vec<u32>> {
+        names
+            .iter()
+            .map(|name| {
+                meta.branch_id(name)
+                    .ok_or_else(|| anyhow!("no branch '{name}' in tree '{}'", meta.name))
+            })
+            .collect()
+    }
+
+    /// Plan covering the *first* basket of every branch, offset-sorted —
+    /// the file-profiling sweep [`crate::runtime::analyze_tree`] rides
+    /// (one forward pass instead of a branch-major walk).
+    pub fn first_baskets(meta: &TreeMeta) -> Self {
+        let mut firsts = meta.first_baskets();
+        firsts.sort_by_key(|l| l.file_offset);
+        let branch_ids = (0..meta.branches.len() as u32).collect();
+        Self { branch_ids, locs: firsts, order: PrefetchOrder::FileOffset }
+    }
+
+    /// The merged basket list in prefetch order.
+    pub fn locs(&self) -> &[BasketLoc] {
+        &self.locs
+    }
+
+    /// Projected branch ids in projection (slot) order.
+    pub fn branch_ids(&self) -> &[u32] {
+        &self.branch_ids
+    }
+
+    pub fn order(&self) -> PrefetchOrder {
+        self.order
+    }
+
+    /// True iff the plan's file offsets never decrease — the prefetcher
+    /// issues one forward sweep over the file. Holds by construction for
+    /// [`PrefetchOrder::FileOffset`].
+    pub fn is_monotonic_sweep(&self) -> bool {
+        self.locs.windows(2).all(|w| w[0].file_offset <= w[1].file_offset)
+    }
+
+    /// Number of backward seeks the prefetcher would issue (positions where
+    /// the next basket sits at a lower offset than the previous one).
+    pub fn backward_seeks(&self) -> usize {
+        self.locs.windows(2).filter(|w| w[1].file_offset < w[0].file_offset).count()
+    }
+
+    /// Total uncompressed bytes the plan covers (throughput denominator).
+    pub fn logical_bytes(&self) -> u64 {
+        self.locs.iter().map(|l| l.uncompressed_len as u64).sum()
+    }
+
+    /// Total compressed bytes the plan reads off the file.
+    pub fn compressed_bytes(&self) -> u64 {
+        self.locs.iter().map(|l| l.compressed_len as u64).sum()
+    }
+}
+
+/// Per-slot reorder state: baskets of one projected branch.
+struct SlotState {
+    branch_id: u32,
+    /// Next basket_index to deliver for this branch.
+    next_index: u32,
+    /// Baskets that arrived ahead of their predecessor (keyed on
+    /// basket_index). Empty in steady state for both standard plan orders —
+    /// a branch's baskets sit at increasing offsets, so both sorts preserve
+    /// each per-branch subsequence — but the reorder keeps delivery correct
+    /// for *any* plan permutation.
+    parked: BTreeMap<u32, (BasketLoc, BasketContent)>,
+}
+
+/// Multi-branch scan: wraps the PR-3 [`BasketScan`] and re-routes its
+/// interleaved delivery into per-branch streams, each in basket_index
+/// (= event) order. Yields `(slot, BasketLoc, BasketContent)` where `slot`
+/// indexes the projection's branch list.
+pub struct ProjectionScan {
+    scan: BasketScan,
+    slots: Vec<SlotState>,
+    slot_of: HashMap<u32, usize>,
+    /// Baskets unblocked by the last arrival, not yet handed out.
+    ready: VecDeque<(usize, BasketLoc, BasketContent)>,
+    /// Set after a terminal error so the stream ends instead of re-erroring.
+    failed: bool,
+}
+
+impl ProjectionScan {
+    fn new(scan: BasketScan, branch_ids: &[u32]) -> Self {
+        let slots: Vec<SlotState> = branch_ids
+            .iter()
+            .map(|&id| SlotState { branch_id: id, next_index: 0, parked: BTreeMap::new() })
+            .collect();
+        let slot_of = branch_ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        Self { scan, slots, slot_of, ready: VecDeque::new(), failed: false }
+    }
+
+    /// Next basket in per-branch order (see type docs), or `None` when the
+    /// plan is exhausted. Decode errors surface on the basket that failed,
+    /// exactly like [`BasketScan::next_basket`].
+    pub fn next_basket(&mut self) -> Option<Result<(usize, BasketLoc, BasketContent)>> {
+        if self.failed {
+            return None;
+        }
+        loop {
+            if let Some(item) = self.ready.pop_front() {
+                return Some(Ok(item));
+            }
+            match self.scan.next_basket() {
+                None => {
+                    if self.slots.iter().any(|s| !s.parked.is_empty()) {
+                        self.failed = true;
+                        return Some(Err(anyhow!(
+                            "projection scan ended with undeliverable parked baskets \
+                             (directory has non-contiguous basket indices)"
+                        )));
+                    }
+                    return None;
+                }
+                Some(Err(e)) => {
+                    self.failed = true;
+                    return Some(Err(e));
+                }
+                Some(Ok((loc, content))) => {
+                    let Some(&slot) = self.slot_of.get(&loc.branch_id) else {
+                        self.failed = true;
+                        return Some(Err(anyhow!(
+                            "scan delivered basket for unprojected branch {}",
+                            loc.branch_id
+                        )));
+                    };
+                    let (branch_id, basket_index) = (loc.branch_id, loc.basket_index);
+                    let st = &mut self.slots[slot];
+                    let duplicate = match basket_index.cmp(&st.next_index) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Equal => {
+                            st.next_index += 1;
+                            self.ready.push_back((slot, loc, content));
+                            // Parked successors become deliverable in order.
+                            while let Some((l, c)) = st.parked.remove(&st.next_index) {
+                                st.next_index += 1;
+                                self.ready.push_back((slot, l, c));
+                            }
+                            false
+                        }
+                        std::cmp::Ordering::Greater => {
+                            st.parked.insert(basket_index, (loc, content)).is_some()
+                        }
+                    };
+                    if duplicate {
+                        self.failed = true;
+                        return Some(Err(anyhow!(
+                            "duplicate basket ({branch_id},{basket_index}) in projection plan"
+                        )));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Return a consumed basket's buffers to the underlying scan's pools
+    /// (see [`BasketScan::recycle`]).
+    pub fn recycle(&self, content: BasketContent) {
+        self.scan.recycle(content);
+    }
+
+    /// Branch id behind a delivery slot.
+    pub fn branch_id(&self, slot: usize) -> u32 {
+        self.slots[slot].branch_id
+    }
+}
+
+/// Read statistics for one projected branch (CLI `--branches` table).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BranchReadStats {
+    pub branch_id: u32,
+    pub name: String,
+    pub baskets: u64,
+    pub entries: u64,
+    pub compressed_bytes: u64,
+    pub logical_bytes: u64,
+}
+
+/// An aligned batch of projected rows: `rows[i][slot]` is the value of the
+/// projection's `slot`-th branch at entry `first_entry + i`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowBatch {
+    pub first_entry: u64,
+    pub rows: Vec<Vec<Value>>,
+}
+
+impl RowBatch {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Event-order consumer over a [`ProjectionScan`]: buffers each branch's
+/// decoded values and zips them into aligned [`RowBatch`]es
+/// ([`ProjectionReader::next_batch`]) or whole per-branch columns
+/// ([`ProjectionReader::read_columns`]).
+///
+/// ```
+/// use rootio::compression::{Algorithm, Settings};
+/// use rootio::coordinator::{ParallelTreeReader, ReadAhead};
+/// use rootio::gen::synthetic;
+/// use rootio::rfile::write_tree_serial;
+///
+/// let path = std::env::temp_dir().join(format!("rootio_doc_proj_{}.rfil", std::process::id()));
+/// let events = synthetic::events(300, 11);
+/// write_tree_serial(&path, "Events", synthetic::schema(),
+///                   Settings::new(Algorithm::Lz4, 1), 2048, events.iter().cloned()).unwrap();
+///
+/// let reader = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+/// // Project 2 of the 12 branches: one pass over the file, other branches
+/// // are never read or decompressed.
+/// let mut proj = reader.project(&["px", "nTrack"]).unwrap();
+/// let mut rows = 0usize;
+/// while let Some(batch) = proj.next_batch() {
+///     let batch = batch.unwrap();
+///     assert!(batch.rows.iter().all(|row| row.len() == 2));
+///     rows += batch.len();
+/// }
+/// assert_eq!(rows, 300);
+/// std::fs::remove_file(&path).ok();
+/// ```
+pub struct ProjectionReader {
+    scan: ProjectionScan,
+    types: Vec<BranchType>,
+    stats: Vec<BranchReadStats>,
+    n_entries: u64,
+    /// Decoded-but-unemitted values per slot (front = oldest entry).
+    bufs: Vec<VecDeque<Value>>,
+    value_scratch: Vec<Value>,
+    emitted: u64,
+    max_batch_rows: Option<usize>,
+    /// Latched after any error: a failed basket's values never reached
+    /// `bufs`, so continuing would emit misaligned rows. The stream ends
+    /// instead.
+    failed: bool,
+}
+
+impl ProjectionReader {
+    fn new(scan: ProjectionScan, meta: &TreeMeta, branch_ids: &[u32]) -> Self {
+        let types = branch_ids.iter().map(|&id| meta.branches[id as usize].ty).collect();
+        let stats = branch_ids
+            .iter()
+            .map(|&id| BranchReadStats {
+                branch_id: id,
+                name: meta.branches[id as usize].name.clone(),
+                ..BranchReadStats::default()
+            })
+            .collect();
+        let bufs = branch_ids.iter().map(|_| VecDeque::new()).collect();
+        Self {
+            scan,
+            types,
+            stats,
+            n_entries: meta.n_entries,
+            bufs,
+            value_scratch: Vec::new(),
+            emitted: 0,
+            max_batch_rows: None,
+            failed: false,
+        }
+    }
+
+    /// Cap the row count of each [`RowBatch`] (default: uncapped — batch
+    /// boundaries fall wherever basket alignment puts them).
+    pub fn set_max_batch_rows(&mut self, rows: usize) {
+        self.max_batch_rows = if rows == 0 { None } else { Some(rows) };
+    }
+
+    /// Per-branch read statistics accumulated so far (complete once the
+    /// projection is drained).
+    pub fn branch_stats(&self) -> &[BranchReadStats] {
+        &self.stats
+    }
+
+    /// Entries emitted through [`ProjectionReader::next_batch`] so far.
+    pub fn entries_emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    fn note_basket(&mut self, slot: usize, loc: &BasketLoc, content: &BasketContent) {
+        let st = &mut self.stats[slot];
+        st.baskets += 1;
+        st.entries += content.n_entries as u64;
+        st.compressed_bytes += loc.compressed_len as u64;
+        st.logical_bytes += (content.data.len() + 4 * content.offsets.len()) as u64;
+    }
+
+    /// Pull baskets until every projected branch has at least one pending
+    /// value, then emit the aligned rows. `None` once all entries are out.
+    /// An error is terminal: the failed basket's values never reached the
+    /// column buffers, so the stream ends (further calls return `None`)
+    /// rather than emitting misaligned rows.
+    pub fn next_batch(&mut self) -> Option<Result<RowBatch>> {
+        if self.failed || self.emitted >= self.n_entries {
+            return None;
+        }
+        loop {
+            let avail = self.bufs.iter().map(|b| b.len()).min().unwrap_or(0);
+            if avail > 0 {
+                return Some(Ok(self.emit_rows(avail)));
+            }
+            match self.scan.next_basket() {
+                Some(Ok((slot, loc, content))) => {
+                    self.value_scratch.clear();
+                    if let Err(e) = decode_values(&content, self.types[slot], &mut self.value_scratch)
+                    {
+                        self.failed = true;
+                        return Some(Err(e));
+                    }
+                    self.note_basket(slot, &loc, &content);
+                    self.scan.recycle(content);
+                    self.bufs[slot].extend(self.value_scratch.drain(..));
+                }
+                Some(Err(e)) => {
+                    self.failed = true;
+                    return Some(Err(e));
+                }
+                None => {
+                    self.failed = true;
+                    return Some(Err(anyhow!(
+                        "projection scan ended after {} of {} entries",
+                        self.emitted,
+                        self.n_entries
+                    )));
+                }
+            }
+        }
+    }
+
+    fn emit_rows(&mut self, mut avail: usize) -> RowBatch {
+        if let Some(cap) = self.max_batch_rows {
+            avail = avail.min(cap);
+        }
+        let first_entry = self.emitted;
+        let k = self.bufs.len();
+        let mut rows: Vec<Vec<Value>> = (0..avail).map(|_| Vec::with_capacity(k)).collect();
+        for buf in self.bufs.iter_mut() {
+            for row in rows.iter_mut() {
+                row.push(buf.pop_front().expect("avail is min over buffer lengths"));
+            }
+        }
+        self.emitted += avail as u64;
+        RowBatch { first_entry, rows }
+    }
+
+    /// Drain the projection into whole per-branch columns (event order, one
+    /// `Vec<Value>` per projected branch, in projection order). Covers the
+    /// entries not yet emitted through [`ProjectionReader::next_batch`];
+    /// verifies every column reaches the tree's entry count. Errors are
+    /// terminal, like [`ProjectionReader::next_batch`]'s.
+    pub fn read_columns(&mut self) -> Result<Vec<Vec<Value>>> {
+        if self.failed {
+            bail!("projection already failed; open a new projection to retry");
+        }
+        let r = self.read_columns_inner();
+        if r.is_err() {
+            self.failed = true;
+        }
+        r
+    }
+
+    fn read_columns_inner(&mut self) -> Result<Vec<Vec<Value>>> {
+        let expect = self.n_entries - self.emitted;
+        let mut columns: Vec<Vec<Value>> = self
+            .bufs
+            .iter_mut()
+            .map(|b| {
+                let mut col = Vec::with_capacity(expect as usize);
+                col.extend(b.drain(..));
+                col
+            })
+            .collect();
+        while let Some(item) = self.scan.next_basket() {
+            let (slot, loc, content) = item?;
+            self.note_basket(slot, &loc, &content);
+            decode_values(&content, self.types[slot], &mut columns[slot])?;
+            self.scan.recycle(content);
+        }
+        for (slot, col) in columns.iter().enumerate() {
+            if col.len() as u64 != expect {
+                bail!(
+                    "branch {} ('{}'): {} entries decoded, expected {expect}",
+                    self.stats[slot].branch_id,
+                    self.stats[slot].name,
+                    col.len()
+                );
+            }
+        }
+        self.emitted = self.n_entries;
+        Ok(columns)
+    }
+}
+
+impl ParallelTreeReader {
+    /// Project `branches` (by name) through one offset-sorted pipelined
+    /// pass — see [`ProjectionReader`]. The scan starts immediately.
+    pub fn project(&self, branches: &[&str]) -> Result<ProjectionReader> {
+        let ids = ProjectionPlan::resolve_names(&self.meta, branches)?;
+        let plan = ProjectionPlan::new(&self.meta, &ids, PrefetchOrder::FileOffset)?;
+        self.project_plan(&plan)
+    }
+
+    /// Project with an explicit, pre-built [`ProjectionPlan`] (choose the
+    /// prefetch order, inspect the sweep, reuse a plan across readers).
+    pub fn project_plan(&self, plan: &ProjectionPlan) -> Result<ProjectionReader> {
+        let scan = self.scan(plan.locs().to_vec())?;
+        Ok(ProjectionReader::new(
+            ProjectionScan::new(scan, plan.branch_ids()),
+            &self.meta,
+            plan.branch_ids(),
+        ))
+    }
+
+    /// One-call multi-branch read: per-branch event-order columns for
+    /// `branches`, byte-identical to k independent
+    /// [`TreeReader::read_branch`](crate::rfile::TreeReader::read_branch)
+    /// calls but issued as a single offset-sorted sweep.
+    pub fn read_branches(&self, branches: &[&str]) -> Result<Vec<Vec<Value>>> {
+        self.project(branches)?.read_columns()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{Algorithm, Settings};
+    use crate::coordinator::ReadAhead;
+    use crate::gen::synthetic;
+    use crate::rfile::{write_tree_serial, TreeReader};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rootio_proj_{}_{}", std::process::id(), name));
+        p
+    }
+
+    fn write_sample(name: &str, n: usize, basket: usize) -> PathBuf {
+        let path = tmp(name);
+        let events = synthetic::events(n, 0x13AF);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Lz4, 1),
+            basket,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        path
+    }
+
+    #[test]
+    fn offset_sorted_plan_is_one_monotonic_sweep() {
+        let path = write_sample("plan", 400, 1024);
+        let reader = TreeReader::open(&path).unwrap();
+        let ids: Vec<u32> = vec![0, 3, 7, 8];
+        let plan = ProjectionPlan::new(&reader.meta, &ids, PrefetchOrder::FileOffset).unwrap();
+        assert!(plan.is_monotonic_sweep(), "offset-sorted plan must never seek backward");
+        assert_eq!(plan.backward_seeks(), 0);
+        assert_eq!(
+            plan.locs().len(),
+            ids.iter().map(|&b| reader.meta.baskets_for(b).len()).sum::<usize>()
+        );
+
+        // The branch-major submission plan re-sweeps the file once per
+        // branch: with multiple interleaved baskets per branch it must seek
+        // backward at least once per branch boundary.
+        let sub = ProjectionPlan::new(&reader.meta, &ids, PrefetchOrder::Submission).unwrap();
+        assert!(!sub.is_monotonic_sweep());
+        assert!(sub.backward_seeks() >= ids.len() - 1, "seeks: {}", sub.backward_seeks());
+        assert_eq!(plan.logical_bytes(), sub.logical_bytes());
+
+        // First-basket profiling plan: also one forward sweep.
+        assert!(ProjectionPlan::first_baskets(&reader.meta).is_monotonic_sweep());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn plan_rejects_bad_projections() {
+        let path = write_sample("plan_bad", 50, 4096);
+        let reader = TreeReader::open(&path).unwrap();
+        assert!(ProjectionPlan::new(&reader.meta, &[], PrefetchOrder::FileOffset).is_err());
+        assert!(ProjectionPlan::new(&reader.meta, &[0, 0], PrefetchOrder::FileOffset).is_err());
+        assert!(ProjectionPlan::new(&reader.meta, &[99], PrefetchOrder::FileOffset).is_err());
+        assert!(ProjectionPlan::resolve_names(&reader.meta, &["nope"]).is_err());
+        assert_eq!(ProjectionPlan::resolve_names(&reader.meta, &["px", "nTrack"]).unwrap(), vec![3, 6]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn projection_columns_match_serial_and_stats_add_up() {
+        let path = write_sample("cols", 500, 1024);
+        let mut serial = TreeReader::open(&path).unwrap();
+        let par = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 3 }).unwrap();
+        let names = ["Track_pt", "px", "is_good"];
+        let mut proj = par.project(&names).unwrap();
+        let columns = proj.read_columns().unwrap();
+        assert_eq!(columns.len(), names.len());
+        for (slot, name) in names.iter().enumerate() {
+            let id = serial.branch_id(name).unwrap();
+            assert_eq!(columns[slot], serial.read_branch(id).unwrap(), "branch {name}");
+            let st = &proj.branch_stats()[slot];
+            assert_eq!(st.name, *name);
+            assert_eq!(st.baskets, serial.baskets_for(id).len() as u64);
+            assert_eq!(st.entries, serial.meta.n_entries);
+            assert_eq!(
+                st.compressed_bytes,
+                serial.baskets_for(id).iter().map(|l| l.compressed_len as u64).sum::<u64>()
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn batches_zip_columns_in_entry_order() {
+        let path = write_sample("batch", 300, 512);
+        let mut serial = TreeReader::open(&path).unwrap();
+        let par = ParallelTreeReader::open(&path, ReadAhead { workers: 3, depth: 2 }).unwrap();
+        let names = ["event_id", "Track_charge"];
+        let cols: Vec<Vec<Value>> = names
+            .iter()
+            .map(|n| serial.read_branch(serial.branch_id(n).unwrap()).unwrap())
+            .collect();
+        let mut proj = par.project(&names).unwrap();
+        proj.set_max_batch_rows(37); // force uneven batch boundaries
+        let mut entry = 0u64;
+        while let Some(batch) = proj.next_batch() {
+            let batch = batch.unwrap();
+            assert_eq!(batch.first_entry, entry);
+            assert!(batch.len() <= 37);
+            assert!(!batch.is_empty());
+            for (i, row) in batch.rows.iter().enumerate() {
+                let e = (entry + i as u64) as usize;
+                assert_eq!(row.len(), names.len());
+                for (slot, v) in row.iter().enumerate() {
+                    assert_eq!(*v, cols[slot][e], "entry {e} slot {slot}");
+                }
+            }
+            entry += batch.len() as u64;
+        }
+        assert_eq!(entry, serial.meta.n_entries);
+        assert_eq!(proj.entries_emitted(), entry);
+        // Exhausted: further calls keep returning None.
+        assert!(proj.next_batch().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn submission_order_delivers_identical_columns() {
+        let path = write_sample("order", 350, 768);
+        let par = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 2 }).unwrap();
+        let ids = ProjectionPlan::resolve_names(&par.meta, &["py", "label", "nTrack"]).unwrap();
+        let offset_plan = ProjectionPlan::new(&par.meta, &ids, PrefetchOrder::FileOffset).unwrap();
+        let sub_plan = ProjectionPlan::new(&par.meta, &ids, PrefetchOrder::Submission).unwrap();
+        let a = par.project_plan(&offset_plan).unwrap().read_columns().unwrap();
+        let b = par.project_plan(&sub_plan).unwrap().read_columns().unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_file(&path).ok();
+    }
+}

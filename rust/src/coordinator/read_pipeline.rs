@@ -38,6 +38,12 @@
 //! consistency checks) happens inside the workers' [`Engine::decompress_into`]
 //! calls — off the consumer's critical path, unlike the serial reader where
 //! it serializes with everything else.
+//!
+//! `scan` accepts *any* basket list, which is the multi-branch plumbing the
+//! columnar projection layer ([`super::projection`]) builds on: it merges
+//! several branches' directories into one offset-sorted prefetch plan and
+//! re-routes this pipeline's submission-order delivery back into per-branch
+//! event-order streams.
 
 use crate::compression::Engine;
 use crate::coordinator::metrics::{Metrics, Snapshot};

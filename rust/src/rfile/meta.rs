@@ -48,6 +48,47 @@ impl TreeMeta {
             .collect()
     }
 
+    /// Merged basket directory for several branches, branch-major in the
+    /// order given (each branch's run stays basket_index-ordered). This is
+    /// the submission-order seed a
+    /// [`ProjectionPlan`](crate::coordinator::ProjectionPlan) offset-sorts
+    /// into its single-sweep prefetch plan.
+    ///
+    /// One pass over the directory (O(baskets + branches), not a rescan
+    /// per requested branch). Ids outside the schema select nothing; if an
+    /// id repeats, its baskets appear once, under the last occurrence.
+    pub fn baskets_for_branches(&self, branch_ids: &[u32]) -> Vec<BasketLoc> {
+        const UNSELECTED: usize = usize::MAX;
+        let mut slot_of = vec![UNSELECTED; self.branches.len()];
+        for (slot, &id) in branch_ids.iter().enumerate() {
+            if let Some(s) = slot_of.get_mut(id as usize) {
+                *s = slot;
+            }
+        }
+        let mut buckets: Vec<Vec<BasketLoc>> = branch_ids.iter().map(|_| Vec::new()).collect();
+        for loc in &self.baskets {
+            match slot_of.get(loc.branch_id as usize) {
+                Some(&slot) if slot != UNSELECTED => buckets[slot].push(*loc),
+                _ => {}
+            }
+        }
+        buckets.into_iter().flatten().collect()
+    }
+
+    /// First basket of every branch that has one, in `(branch_id)` order —
+    /// what file profiling reads.
+    pub fn first_baskets(&self) -> Vec<BasketLoc> {
+        let mut firsts = Vec::with_capacity(self.branches.len());
+        let mut seen: Option<u32> = None;
+        for loc in &self.baskets {
+            if seen != Some(loc.branch_id) {
+                firsts.push(*loc);
+                seen = Some(loc.branch_id);
+            }
+        }
+        firsts
+    }
+
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::new();
         put_lp_bytes(&mut out, self.name.as_bytes());
@@ -174,6 +215,44 @@ mod tests {
         let bytes = meta.serialize();
         let back = TreeMeta::deserialize(&bytes).unwrap();
         assert_eq!(back, meta);
+    }
+
+    #[test]
+    fn multi_branch_directory_queries() {
+        let loc = |branch_id: u32, basket_index: u32, file_offset: u64| BasketLoc {
+            branch_id,
+            basket_index,
+            first_entry: 0,
+            n_entries: 10,
+            file_offset,
+            compressed_len: 5,
+            uncompressed_len: 9,
+        };
+        let meta = TreeMeta {
+            name: "T".into(),
+            branches: vec![
+                BranchDef::new("a", BranchType::I32),
+                BranchDef::new("b", BranchType::F32),
+                BranchDef::new("c", BranchType::F64),
+            ],
+            default_settings: Settings::default(),
+            n_entries: 20,
+            // Interleaved file layout, branch-major directory order.
+            baskets: vec![loc(0, 0, 6), loc(0, 1, 90), loc(1, 0, 30), loc(2, 0, 60), loc(2, 1, 120)],
+            dictionary_offset: None,
+        };
+        // Branch-major merge in the order asked for.
+        let merged = meta.baskets_for_branches(&[2, 0]);
+        assert_eq!(
+            merged.iter().map(|l| (l.branch_id, l.basket_index)).collect::<Vec<_>>(),
+            vec![(2, 0), (2, 1), (0, 0), (0, 1)]
+        );
+        // First basket per branch, branch order.
+        let firsts = meta.first_baskets();
+        assert_eq!(
+            firsts.iter().map(|l| (l.branch_id, l.file_offset)).collect::<Vec<_>>(),
+            vec![(0, 6), (1, 30), (2, 60)]
+        );
     }
 
     #[test]

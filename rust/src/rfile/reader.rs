@@ -84,6 +84,19 @@ impl TreeReader {
         )
     }
 
+    /// Project a subset of branches through the parallel pipeline: one
+    /// offset-sorted pass over the file, per-branch event-order columns or
+    /// aligned row batches. Convenience for
+    /// [`read_ahead`](TreeReader::read_ahead) followed by
+    /// [`ParallelTreeReader::project`](crate::coordinator::ParallelTreeReader::project).
+    pub fn project(
+        &self,
+        branches: &[&str],
+        config: crate::coordinator::ReadAhead,
+    ) -> Result<crate::coordinator::ProjectionReader> {
+        self.read_ahead(config).project(branches)
+    }
+
     pub fn branch_id(&self, name: &str) -> Option<u32> {
         self.meta.branch_id(name)
     }

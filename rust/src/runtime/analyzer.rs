@@ -160,20 +160,17 @@ pub struct BranchProfile {
 /// [`crate::coordinator::Planner::plan_from_features`] to propose new
 /// per-branch settings for a rewrite (the paper's §3 "switch between
 /// compression algorithms and settings" workflow, applied retroactively).
+///
+/// The basket sweep rides a
+/// [`ProjectionPlan::first_baskets`](crate::coordinator::ProjectionPlan::first_baskets)
+/// prefetch plan: the first baskets of all branches, sorted by file offset,
+/// so profiling is **one monotonically-increasing pass** over the head of
+/// the file instead of a branch-major walk that seeks back per branch.
 pub fn analyze_tree(path: &Path, workers: usize) -> Result<Vec<BranchProfile>> {
-    use crate::coordinator::{ParallelTreeReader, ReadAhead};
+    use crate::coordinator::{ParallelTreeReader, ProjectionPlan, ReadAhead};
     let reader = ParallelTreeReader::open(path, ReadAhead::with_workers(workers.max(1)))?;
-    let n_branches = reader.meta.branches.len();
-    // First basket of each branch: the directory is branch-major sorted, so
-    // one pass collects them in scan order.
-    let mut firsts = Vec::with_capacity(n_branches);
-    let mut seen: Option<u32> = None;
-    for loc in &reader.meta.baskets {
-        if seen != Some(loc.branch_id) {
-            firsts.push(*loc);
-            seen = Some(loc.branch_id);
-        }
-    }
+    let plan = ProjectionPlan::first_baskets(&reader.meta);
+    debug_assert!(plan.is_monotonic_sweep());
     let mut profiles: Vec<BranchProfile> = reader
         .meta
         .branches
@@ -193,7 +190,7 @@ pub fn analyze_tree(path: &Path, workers: usize) -> Result<Vec<BranchProfile>> {
             p.logical_bytes += loc.uncompressed_len as u64;
         }
     }
-    let mut scan = reader.scan(firsts)?;
+    let mut scan = reader.scan(plan.locs().to_vec())?;
     let mut logical = Vec::new();
     while let Some(item) = scan.next_basket() {
         let (loc, content) = item?;

@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Failure-injection suite: randomized bit flips, truncations and
 //! extensions of compressed records must NEVER panic, and must either
 //! error out or (only where the format carries no checksum) produce output

@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Paper §3: "while ZSTD can be used to generate the dictionary, the
 //! generated dictionaries are useable for ZLIB and LZ4 as well."
 //!

@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Pipeline invariants (property-style, seeded): for any worker count,
 //! queue depth, basket size, and workload, the parallel writer must produce
 //! a file whose *content* round-trips identically to the serial writer's —

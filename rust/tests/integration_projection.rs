@@ -1,0 +1,264 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
+//! Columnar projection invariants (property-style, seeded): a k-of-n
+//! branch projection through [`rootio::coordinator::ProjectionReader`]
+//! must be **byte-identical** to k independent serial
+//! [`rootio::rfile::TreeReader::read_branch`] calls — for any worker
+//! count (1/2/4), queue depth, codec × preconditioner, and either
+//! prefetch order — and must agree with the serial reader on *rejection*
+//! when a projected branch's basket is corrupted. A corrupted basket in
+//! an **unprojected** branch must not affect the projection at all:
+//! that's the columnar contract (untouched branches are never read).
+
+use rootio::compression::{Algorithm, Settings};
+use rootio::coordinator::{
+    ParallelTreeReader, PrefetchOrder, ProjectionPlan, ReadAhead,
+};
+use rootio::gen::synthetic;
+use rootio::precond::Precond;
+use rootio::rfile::{write_tree_serial, TreeReader, Value};
+use rootio::util::rng::Rng;
+use std::path::PathBuf;
+
+fn tmp_path(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("rootio_proj_prop_{}_{}", std::process::id(), name));
+    p
+}
+
+/// The full codec × preconditioner grid the container supports.
+fn grid() -> Vec<Settings> {
+    let mut v = Vec::new();
+    for (alg, level) in [
+        (Algorithm::None, 0u8),
+        (Algorithm::Zlib, 6),
+        (Algorithm::CfZlib, 1),
+        (Algorithm::Lz4, 1),
+        (Algorithm::Lz4, 9),
+        (Algorithm::Zstd, 5),
+        (Algorithm::Lzma, 6),
+        (Algorithm::OldRoot, 6),
+    ] {
+        for precond in [
+            Precond::None,
+            Precond::BitShuffle(4),
+            Precond::Shuffle(4),
+            Precond::Delta(4),
+        ] {
+            v.push(Settings::new(alg, level).with_precond(precond));
+        }
+    }
+    v
+}
+
+#[test]
+fn k_of_n_projection_equals_serial_read_branch_across_grid() {
+    let mut rng = Rng::new(0x9207);
+    let events = synthetic::events(150, 0xC01);
+    let n_branches = synthetic::schema().len() as u32;
+    for (i, settings) in grid().into_iter().enumerate() {
+        let basket_size = rng.range(256, 8192);
+        let path = tmp_path(&format!("grid{i}"));
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            settings,
+            basket_size,
+            events.iter().cloned(),
+        )
+        .unwrap();
+
+        // Rotate the projected subset per setting: k in 1..=4, stride-3
+        // indices are distinct mod 12.
+        let k = 1 + (i % 4);
+        let ids: Vec<u32> = (0..k).map(|j| ((i + 3 * j) as u32) % n_branches).collect();
+
+        // Serial oracle columns.
+        let mut serial = TreeReader::open(&path).unwrap();
+        let oracle: Vec<Vec<Value>> =
+            ids.iter().map(|&id| serial.read_branch(id).unwrap()).collect();
+
+        // Alternate the prefetch order across the grid; results must not
+        // depend on it.
+        let order = if i % 2 == 0 { PrefetchOrder::FileOffset } else { PrefetchOrder::Submission };
+        for workers in [1usize, 2, 4] {
+            let depth = rng.range(1, 8);
+            let par = ParallelTreeReader::open(&path, ReadAhead { workers, depth }).unwrap();
+            let plan = ProjectionPlan::new(&par.meta, &ids, order).unwrap();
+            if order == PrefetchOrder::FileOffset {
+                assert!(
+                    plan.is_monotonic_sweep(),
+                    "{} offset plan must be one forward sweep",
+                    settings.label()
+                );
+            }
+            let mut proj = par.project_plan(&plan).unwrap();
+            let columns = proj.read_columns().unwrap();
+            assert_eq!(
+                columns,
+                oracle,
+                "{} w={workers} d={depth} ids={ids:?} {order:?}",
+                settings.label()
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn name_level_apis_match_serial() {
+    let events = synthetic::events(400, 0xAB5);
+    let path = tmp_path("names");
+    write_tree_serial(
+        &path,
+        "Events",
+        synthetic::schema(),
+        Settings::new(Algorithm::Zstd, 5).with_precond(Precond::Shuffle(4)),
+        2048,
+        events.iter().cloned(),
+    )
+    .unwrap();
+    let mut serial = TreeReader::open(&path).unwrap();
+    let names = ["Track_pt", "px", "label"];
+    let oracle: Vec<Vec<Value>> = names
+        .iter()
+        .map(|n| serial.read_branch(serial.branch_id(n).unwrap()).unwrap())
+        .collect();
+    // ParallelTreeReader::read_branches (one-call columns).
+    let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(3)).unwrap();
+    assert_eq!(par.read_branches(&names).unwrap(), oracle);
+    // TreeReader::project (serial reader upgrade path).
+    let mut proj = serial.project(&names, ReadAhead::with_workers(2)).unwrap();
+    assert_eq!(proj.read_columns().unwrap(), oracle);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupted_projected_basket_rejected_in_parity_and_skipped_when_unprojected() {
+    let events = synthetic::events(300, 0xD0C);
+    let path = tmp_path("corrupt");
+    // BitShuffle makes the jagged float branch LZ4-compressible (the Fig-6
+    // rescue), so its spans carry the "L4" tag + CRC-32 rather than the
+    // checksum-less raw-store fallback.
+    write_tree_serial(
+        &path,
+        "Events",
+        synthetic::schema(),
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        1024,
+        events.iter().cloned(),
+    )
+    .unwrap();
+
+    // Corrupt the *stored CRC-32* of an LZ4 span in one Track_pt basket:
+    // the decoded bytes are untouched, so only checksum verification can
+    // catch it — both readers must reject (same technique as the
+    // read-pipeline checksum parity test; framing per docs/FORMAT.md §5–6).
+    let serial = TreeReader::open(&path).unwrap();
+    let victim_id = serial.branch_id("Track_pt").unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mut patched = false;
+    for loc in serial.baskets_for(victim_id) {
+        // Record layout at loc.file_offset: u32 len, u8 kind, payload.
+        let payload_start = loc.file_offset as usize + 5;
+        let payload = &bytes[payload_start..payload_start + loc.compressed_len as usize];
+        // Five uvarints (branch_id, basket_index, n_entries, data_len,
+        // n_offsets) precede the first span header.
+        let mut pos = 0usize;
+        for _ in 0..5 {
+            let (_, n) = rootio::util::varint::get_uvarint(&payload[pos..]).unwrap();
+            pos += n;
+        }
+        // Span header: 2-byte tag, level, 3+3-byte sizes, precond byte;
+        // the LZ4 CRC-32 is the first 4 bytes of the span body.
+        if payload.get(pos..pos + 2) == Some(b"L4") {
+            bytes[payload_start + pos + 10] ^= 0xFF;
+            patched = true;
+            break;
+        }
+    }
+    assert!(patched, "no LZ4-compressed Track_pt span found to patch");
+    let bad_path = tmp_path("corrupt_flipped");
+    std::fs::write(&bad_path, &bytes).unwrap();
+
+    // Serial oracle: the corrupted branch is rejected, others still read.
+    let mut serial = TreeReader::open(&bad_path).unwrap();
+    assert!(serial.read_branch(victim_id).is_err(), "serial accepted the corrupted basket");
+    let clean_oracle: Vec<Vec<Value>> = ["px", "event_id"]
+        .iter()
+        .map(|n| serial.read_branch(serial.branch_id(n).unwrap()).unwrap())
+        .collect();
+
+    for workers in [1usize, 2, 4] {
+        let par = ParallelTreeReader::open(&bad_path, ReadAhead::with_workers(workers)).unwrap();
+        // Projection that includes the corrupted branch: rejected, in
+        // parity with the serial reader.
+        let err = par.read_branches(&["px", "Track_pt"]);
+        assert!(err.is_err(), "w={workers}: projection accepted a corrupted projected basket");
+        // Projection that skips it: unaffected — the corrupted basket is
+        // never read, decoded, or checksummed.
+        assert_eq!(
+            par.read_branches(&["px", "event_id"]).unwrap(),
+            clean_oracle,
+            "w={workers}: projection without the corrupted branch must succeed"
+        );
+    }
+
+    // Errors are terminal on the batch iterator: after the first Err, the
+    // stream ends (None) instead of emitting rows misaligned by the lost
+    // basket, and read_columns refuses the failed projection too.
+    let par = ParallelTreeReader::open(&bad_path, ReadAhead::with_workers(2)).unwrap();
+    let mut proj = par.project(&["px", "Track_pt"]).unwrap();
+    let mut saw_err = false;
+    while let Some(batch) = proj.next_batch() {
+        if batch.is_err() {
+            saw_err = true;
+            break;
+        }
+    }
+    assert!(saw_err, "batch iterator never surfaced the corruption");
+    assert!(proj.next_batch().is_none(), "error must be terminal");
+    assert!(proj.read_columns().is_err(), "failed projection must not drain");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&bad_path).ok();
+}
+
+#[test]
+fn row_batches_zip_the_same_values() {
+    let events = synthetic::events(250, 0x3A7);
+    let path = tmp_path("rows");
+    write_tree_serial(
+        &path,
+        "Events",
+        synthetic::schema(),
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        1024,
+        events.iter().cloned(),
+    )
+    .unwrap();
+    let mut serial = TreeReader::open(&path).unwrap();
+    let names = ["nTrack", "Track_charge", "is_good"];
+    let cols: Vec<Vec<Value>> = names
+        .iter()
+        .map(|n| serial.read_branch(serial.branch_id(n).unwrap()).unwrap())
+        .collect();
+    let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+    let mut proj = par.project(&names).unwrap();
+    let mut entry = 0usize;
+    while let Some(batch) = proj.next_batch() {
+        let batch = batch.unwrap();
+        assert_eq!(batch.first_entry, entry as u64);
+        for row in &batch.rows {
+            for (slot, v) in row.iter().enumerate() {
+                assert_eq!(*v, cols[slot][entry], "entry {entry} slot {slot}");
+            }
+            entry += 1;
+        }
+    }
+    assert_eq!(entry as u64, serial.meta.n_entries);
+    std::fs::remove_file(&path).ok();
+}

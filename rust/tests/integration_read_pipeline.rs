@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Read-pipeline invariants (property-style, seeded): for any worker count
 //! (1/2/4), queue depth, basket size, codec, and preconditioner, the
 //! parallel reader must be **byte-identical** to the serial

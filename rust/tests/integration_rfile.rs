@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Integration: full write → read round-trips of the RFIL format across
 //! codecs, preconditioners, basket sizes, and corruption scenarios.
 

@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Runtime integration: the XLA-compiled analyzer must agree with the
 //! pure-rust mirror (which itself mirrors the python/numpy reference tested
 //! in python/tests/test_model.py) — closing the three-way cross-language

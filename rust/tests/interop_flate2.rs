@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Interop tests: our from-scratch zlib against the independent `flate2`
 //! implementation (miniz_oxide backend).
 //!

@@ -1,3 +1,8 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
 //! Cross-codec property suite: one seeded generator of adversarial payload
 //! classes, every codec (through the engine) must round-trip every payload
 //! at every level, and documented size bounds must hold.
