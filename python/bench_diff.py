@@ -13,6 +13,8 @@ bench job just regenerated is NEW. Prints
     decode workers, per setting),
   * the `projection` table of NEW (2of8 / 8of8 branch projections:
     serial vs offset-sorted vs submission-order prefetch),
+  * the `projection_range` table of NEW (entry-range slices: full tree vs
+    the middle-50% window, offset vs submission prefetch),
   * per-(payload, setting) compress/decompress throughput deltas vs the
     baseline where both sides have real numbers.
 
@@ -37,7 +39,12 @@ import argparse
 import json
 import sys
 
-KNOWN_SCHEMAS = ("bench-codecs/v1", "bench-codecs/v2", "bench-codecs/v3")
+KNOWN_SCHEMAS = (
+    "bench-codecs/v1",
+    "bench-codecs/v2",
+    "bench-codecs/v3",
+    "bench-codecs/v4",
+)
 
 
 class SchemaError(Exception):
@@ -69,10 +76,12 @@ def validate(doc, path):
         ("results", ("payload", "setting")),
         ("fast_path_speedups", ("name", "payload")),
     ]
-    if schema in ("bench-codecs/v2", "bench-codecs/v3"):
+    if schema in ("bench-codecs/v2", "bench-codecs/v3", "bench-codecs/v4"):
         required.append(("read_pipeline", ("setting", "workers")))
-    if schema == "bench-codecs/v3":
+    if schema in ("bench-codecs/v3", "bench-codecs/v4"):
         required.append(("projection", ("branches", "order", "workers")))
+    if schema == "bench-codecs/v4":
+        required.append(("projection_range", ("range", "order", "workers")))
     for key, row_keys in required:
         rows = doc.get(key)
         if not isinstance(rows, list):
@@ -135,6 +144,21 @@ def projection_table(doc, title):
     return out
 
 
+def projection_range_table(doc, title):
+    rows = doc.get("projection_range") or []
+    if not rows:
+        return {}
+    print(f"\n== {title}: entry-range projection ({len(rows)} lanes) ==")
+    print(f"  {'range':<12} {'order':<12} {'workers':>8} {'read':>9}")
+    out = {}
+    for r in rows:
+        rng, order = r.get("range", "?"), r.get("order", "?")
+        workers = r.get("workers", "?")
+        print(f"  {rng:<12} {order:<12} {workers!s:>8} {fmt_mbps(r.get('MBps'))}")
+        out[(rng, order, workers)] = r.get("MBps")
+    return out
+
+
 def check_lane_coverage(base_lanes, new_lanes, what):
     """A lane in the committed baseline that the regenerated file no longer
     produces means the bench and its baseline have drifted apart — fail."""
@@ -189,13 +213,16 @@ def main(argv=None):
     new_spd = speedup_table(new, "current run")
     new_read = read_pipeline_table(new, "current run")
     new_proj = projection_table(new, "current run")
+    new_prange = projection_range_table(new, "current run")
 
     base_spd = speedup_table(base, "committed baseline")
     base_read = read_pipeline_table(base, "committed baseline")
     base_proj = projection_table(base, "committed baseline")
+    base_prange = projection_range_table(base, "committed baseline")
     check_lane_coverage(base_spd, new_spd, "fast_path_speedups")
     check_lane_coverage(base_read, new_read, "read_pipeline")
     check_lane_coverage(base_proj, new_proj, "projection")
+    check_lane_coverage(base_prange, new_prange, "projection_range")
 
     common = [k for k in new_spd if k in base_spd
               and isinstance(new_spd[k], (int, float))
@@ -223,6 +250,15 @@ def main(argv=None):
         for k in sorted(common):
             w_s = "serial" if k[2] == 0 else f"{k[2]}w"
             print(f"  {k[0]:<12} {k[1]:<12} {w_s:>8} {base_proj[k]:8.1f} -> {new_proj[k]:8.1f} MB/s")
+
+    common = [k for k in new_prange if k in base_prange
+              and isinstance(new_prange[k], (int, float))
+              and isinstance(base_prange[k], (int, float))]
+    if common:
+        print("\n== entry-range projection drift vs baseline ==")
+        for k in sorted(common):
+            print(f"  {k[0]:<12} {k[1]:<12} {k[2]!s:>8} "
+                  f"{base_prange[k]:8.1f} -> {new_prange[k]:8.1f} MB/s")
 
     base_rows = {result_key(r): r for r in (base.get("results") or [])}
     new_rows = {result_key(r): r for r in (new.get("results") or [])}

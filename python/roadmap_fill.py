@@ -7,8 +7,8 @@ Usage:
 The PR-1/PR-2/PR-3 perf-trajectory sections of ROADMAP.md were authored in
 containers without a Rust toolchain, so their speedup claims point at the
 bench artifact instead of quoting numbers. This script renders the
-artifact's `fast_path_speedups` and `read_pipeline` sections as markdown
-tables into the block delimited by
+artifact's `fast_path_speedups`, `read_pipeline`, `projection`, and
+`projection_range` sections as markdown tables into the block delimited by
 
     <!-- BENCH_NUMBERS_BEGIN -->
     ...
@@ -96,6 +96,27 @@ def render(doc):
                 )
         else:
             lines.append("*(projection lanes present but unfilled)*")
+    pranges = doc.get("projection_range") or []
+    have_pranges = [r for r in pranges if isinstance(r.get("MBps"), (int, float))]
+    if pranges:
+        lines.append("")
+        lines.append("Entry-range projection (2-branch NanoAOD read at 4 workers; "
+                     "MB/s over the sliced plan's decoded bytes):")
+        lines.append("")
+        if have_pranges:
+            lines.append("| range | offset-sorted | submission-order |")
+            lines.append("|---|---:|---:|")
+            by_range = {}
+            for r in pranges:
+                by_range.setdefault(r.get("range", "?"), {})[r.get("order")] = r.get("MBps")
+            for rng, cells in by_range.items():
+                lines.append(
+                    f"| {rng} | "
+                    + " | ".join(fmt(cells.get(o)) for o in ("offset", "submission"))
+                    + " |"
+                )
+        else:
+            lines.append("*(projection_range lanes present but unfilled)*")
     return "\n".join(lines)
 
 

@@ -1,11 +1,11 @@
 #!/usr/bin/env python3
 """Self-tests for the bench tooling contract CI leans on:
 
-  * `bench_diff.py` — schema validation (v1/v2/v3), lane-coverage checks,
-    and the `--gate-fastpath` perf gate with its exit codes (0 ok,
+  * `bench_diff.py` — schema validation (v1/v2/v3/v4), lane-coverage
+    checks, and the `--gate-fastpath` perf gate with its exit codes (0 ok,
     2 schema mismatch, 3 perf regression);
   * `roadmap_fill.py` — marker-block replacement and table rendering for
-    every section of a v3 document.
+    every section of a v4 document.
 
 These run in the CI `python` job so bench-tooling drift fails the build
 even when no Rust toolchain is in play. Run:
@@ -71,6 +71,22 @@ def v3_doc(speedup=3.0, with_values=True):
     }
 
 
+def v4_doc(speedup=3.0, with_values=True):
+    """A minimal well-formed bench-codecs/v4 document (v3 + projection_range)."""
+    def mbps(v):
+        return v if with_values else None
+
+    doc = v3_doc(speedup=speedup, with_values=with_values)
+    doc["schema"] = "bench-codecs/v4"
+    doc["projection_range"] = [
+        {"range": "full", "order": "offset", "workers": 4, "MBps": mbps(950.0)},
+        {"range": "full", "order": "submission", "workers": 4, "MBps": mbps(720.0)},
+        {"range": "mid50", "order": "offset", "workers": 4, "MBps": mbps(910.0)},
+        {"range": "mid50", "order": "submission", "workers": 4, "MBps": mbps(680.0)},
+    ]
+    return doc
+
+
 def write_doc(tmp, name, doc):
     path = os.path.join(tmp, name)
     with open(path, "w") as f:
@@ -112,6 +128,24 @@ class ValidateTests(unittest.TestCase):
         with self.assertRaises(SchemaError):
             validate(doc, "doc")
 
+    def test_v4_roundtrip(self):
+        validate(v4_doc(), "doc")
+
+    def test_v4_requires_projection_range_section(self):
+        doc = v4_doc()
+        del doc["projection_range"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v3_does_not_require_projection_range(self):
+        validate(v3_doc(), "doc")  # no projection_range key at all
+
+    def test_projection_range_rows_need_keys(self):
+        doc = v4_doc()
+        del doc["projection_range"][0]["range"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
 
 class DiffCliTests(unittest.TestCase):
     def test_identical_docs_pass(self):
@@ -138,6 +172,33 @@ class DiffCliTests(unittest.TestCase):
             p = write_doc(tmp, "bad.json", doc)
             r = run_diff(p, p)
             self.assertEqual(r.returncode, 2)
+
+    def test_v4_docs_print_projection_range_table(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            p = write_doc(tmp, "a.json", v4_doc())
+            r = run_diff(p, p)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            self.assertIn("entry-range projection", r.stdout)
+            self.assertIn("mid50", r.stdout)
+
+    def test_missing_projection_range_lane_is_schema_mismatch(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v4_doc())
+            new_doc = v4_doc()
+            new_doc["projection_range"] = new_doc["projection_range"][:2]
+            new = write_doc(tmp, "new.json", new_doc)
+            r = run_diff(base, new)
+            self.assertEqual(r.returncode, 2, r.stdout)
+            self.assertIn("projection_range", r.stderr)
+
+    def test_v3_baseline_with_v4_new_passes(self):
+        # The first run after a schema bump diffs a v3 baseline against a
+        # freshly regenerated v4 file — must not fail.
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v3_doc())
+            new = write_doc(tmp, "new.json", v4_doc())
+            r = run_diff(base, new, "--gate-fastpath", "10")
+            self.assertEqual(r.returncode, 0, r.stderr)
 
 
 class GateTests(unittest.TestCase):
@@ -194,7 +255,7 @@ class RoadmapFillTests(unittest.TestCase):
 
     def test_fills_marker_block_with_all_tables(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v3_doc(), self.ROADMAP)
+            r, out = self.run_fill(tmp, v4_doc(), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
@@ -203,16 +264,28 @@ class RoadmapFillTests(unittest.TestCase):
             self.assertIn("Read-pipeline scaling", text)
             self.assertIn("Columnar projection", text)
             self.assertIn("| 2of8 | 300.0 | 900.0 | 700.0 |", text)
+            self.assertIn("Entry-range projection", text)
+            self.assertIn("| mid50 | 910.0 | 680.0 |", text)
             self.assertIn("tail", text)
+
+    def test_v3_doc_fills_without_projection_range(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            r, out = self.run_fill(tmp, v3_doc(), self.ROADMAP)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            with open(out) as f:
+                text = f.read()
+            self.assertIn("Columnar projection", text)
+            self.assertNotIn("Entry-range projection", text)
 
     def test_placeholder_doc_renders_placeholders(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v3_doc(with_values=False), self.ROADMAP)
+            r, out = self.run_fill(tmp, v4_doc(with_values=False), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
             self.assertIn("placeholder", text)
             self.assertIn("projection lanes present but unfilled", text)
+            self.assertIn("projection_range lanes present but unfilled", text)
 
     def test_missing_markers_exit_1(self):
         with tempfile.TemporaryDirectory() as tmp:

@@ -15,7 +15,8 @@
 //!  * `results/codecs.csv` + `results/precond.csv` (historical columns)
 //!    + `results/fastpath.csv` (fast-vs-reference speedups)
 //!    + `results/read_pipeline.csv` (read-side scaling)
-//!    + `results/projection.csv` (columnar projection lanes),
+//!    + `results/projection.csv` (columnar projection lanes)
+//!    + `results/projection_range.csv` (entry-range slice lanes),
 //!  * `BENCH_codecs.json` at the repo root — the machine-readable perf
 //!    trajectory consumed by CI and future PRs (schema documented in
 //!    `docs/BENCHMARKS.md`). Set BENCH_QUICK=1 for a smoke run.
@@ -131,6 +132,15 @@ struct ProjRow {
     /// single-pipeline baseline).
     order: &'static str,
     /// 0 for the serial baseline; pipeline decode workers otherwise.
+    workers: usize,
+    mbps: f64,
+}
+
+struct ProjRangeRow {
+    /// Entry window: "full" (whole tree) or "mid50" (middle 50% slice).
+    range: &'static str,
+    /// "offset" or "submission" prefetch order.
+    order: &'static str,
     workers: usize,
     mbps: f64,
 }
@@ -481,11 +491,74 @@ fn projection_lanes(cfg: &BenchConfig) -> Vec<ProjRow> {
     out
 }
 
+/// Entry-range projection lanes: the same 2-branch NanoAOD projection read
+/// over the whole tree vs its middle-50% entry slice, at both prefetch
+/// orders. The slice's MB/s denominator is the *sliced plan's* logical
+/// bytes (what the range actually decodes, boundary baskets included), so
+/// the lanes expose per-byte cost of a partial read, not just its smaller
+/// size — replan/distributed workloads read slices all day
+/// (docs/BENCHMARKS.md §projection_range).
+fn projection_range_lanes(cfg: &BenchConfig) -> Vec<ProjRangeRow> {
+    use rootio::coordinator::{ParallelTreeReader, PrefetchOrder, ProjectionPlan, ReadAhead};
+    use rootio::rfile::{write_tree_serial, TreeReader};
+    let names = ["Muon_pt", "Muon_eta"];
+    const WORKERS: usize = 4;
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_events = if quick { 1200 } else { 6000 };
+    let path =
+        std::env::temp_dir().join(format!("rootio_bench_projrange_{}.rfil", std::process::id()));
+    let events = nanoaod::events(n_events, 0x5A1C);
+    write_tree_serial(
+        &path,
+        "Events",
+        nanoaod::schema(),
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        32 * 1024,
+        events.iter().cloned(),
+    )
+    .expect("writing projection-range bench file");
+    let reader = TreeReader::open(&path).unwrap();
+    let ids: Vec<u32> = names
+        .iter()
+        .map(|n| reader.branch_id(n).expect("bench branch in nanoaod schema"))
+        .collect();
+    let n = reader.meta.n_entries;
+    let mut out = Vec::new();
+    for (range_tag, (a, b)) in [("full", (0, n)), ("mid50", (n / 4, n / 4 + n / 2))] {
+        for (order_tag, order) in [
+            ("offset", PrefetchOrder::FileOffset),
+            ("submission", PrefetchOrder::Submission),
+        ] {
+            let probe = ProjectionPlan::new(&reader.meta, &ids, order).unwrap().slice(a, b);
+            if order == PrefetchOrder::FileOffset {
+                assert!(probe.is_monotonic_sweep(), "sliced offset plan must stay one sweep");
+            }
+            let bytes = probe.logical_bytes() as usize;
+            // File open + plan build + slice inside the timer, matching
+            // the projection lanes: end-to-end read strategy comparison.
+            let r = bench(&format!("projrange-{range_tag}-{order_tag}"), bytes, cfg, || {
+                let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(WORKERS)).unwrap();
+                let plan = ProjectionPlan::new(&par.meta, &ids, order).unwrap().slice(a, b);
+                par.project_plan(&plan).unwrap().read_columns().unwrap().len()
+            });
+            out.push(ProjRangeRow {
+                range: range_tag,
+                order: order_tag,
+                workers: WORKERS,
+                mbps: r.mbps(),
+            });
+        }
+    }
+    std::fs::remove_file(&path).ok();
+    out
+}
+
 fn write_json(
     rows: &[Row],
     speedups: &[Speedup],
     reads: &[ReadRow],
     projections: &[ProjRow],
+    projection_ranges: &[ProjRangeRow],
     quick: bool,
 ) -> std::io::Result<()> {
     let result_items: Vec<String> = rows
@@ -540,13 +613,26 @@ fn write_json(
             )
         })
         .collect();
+    let proj_range_items: Vec<String> = projection_ranges
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"range\": \"{}\", \"order\": \"{}\", \"workers\": {}, \"MBps\": {}}}",
+                json_escape(p.range),
+                json_escape(p.order),
+                p.workers,
+                json_num(p.mbps),
+            )
+        })
+        .collect();
     let doc = format!(
-        "{{\n  \"schema\": \"bench-codecs/v3\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"read_pipeline\": {},\n  \"projection\": {}\n}}\n",
+        "{{\n  \"schema\": \"bench-codecs/v4\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"read_pipeline\": {},\n  \"projection\": {},\n  \"projection_range\": {}\n}}\n",
         quick,
         json_array(&result_items, "  "),
         json_array(&speedup_items, "  "),
         json_array(&read_items, "  "),
         json_array(&proj_items, "  "),
+        json_array(&proj_range_items, "  "),
     );
     // Land next to Cargo.toml (the repo root) regardless of CWD.
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_codecs.json");
@@ -632,6 +718,21 @@ fn main() {
     println!("{}", t5.render());
     t5.save_csv("projection").unwrap();
 
-    write_json(&rows, &speedups, &reads, &projections, quick)
+    // Entry-range projection: full tree vs middle-50% slice, both
+    // prefetch orders.
+    let projection_ranges = projection_range_lanes(&cfg);
+    let mut t6 = Table::new(&["range", "order", "workers", "read_MB_s"]);
+    for p in &projection_ranges {
+        t6.row(vec![
+            p.range.into(),
+            p.order.into(),
+            format!("{}", p.workers),
+            format!("{:.1}", p.mbps),
+        ]);
+    }
+    println!("{}", t6.render());
+    t6.save_csv("projection_range").unwrap();
+
+    write_json(&rows, &speedups, &reads, &projections, &projection_ranges, quick)
         .expect("writing BENCH_codecs.json");
 }

@@ -5,8 +5,10 @@
 //!                [--setting ZSTD-5] [--precond bitshuffle4] [--basket N]
 //!                [--workers N] [--adaptive analysis|production|balanced]
 //! rootio read    --in f.rfil [--branch NAME] [--branches A,B,C] [--workers N]
-//!                [--prefetch offset|submission]
-//! rootio inspect --in f.rfil [--replan analysis|production|balanced]
+//!                [--prefetch offset|submission] [--entries A..B]
+//!                [--feedback reads.profile]
+//! rootio inspect --in f.rfil [--replan analysis|production|balanced|profile
+//!                [--profile reads.profile]]
 //! rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
 //! rootio all-figures [--quick]
 //! ```
@@ -87,6 +89,30 @@ pub fn parse_precond(s: &str) -> Result<Precond> {
     })
 }
 
+/// Parse an entry range "A..B" (also "..B" from 0 and "A.." to EOF) into
+/// the half-open `[first, last)` window entry-range reads consume. The
+/// window is validated for order here and clamped to the tree by the
+/// readers, so "0..1000000" on a small file just reads everything.
+pub fn parse_entry_range(s: &str) -> Result<(u64, u64)> {
+    let (a, b) = s
+        .split_once("..")
+        .with_context(|| format!("bad entry range '{s}' (want A..B, half-open)"))?;
+    let first: u64 = if a.is_empty() {
+        0
+    } else {
+        a.trim().parse().with_context(|| format!("bad range start in '{s}'"))?
+    };
+    let last: u64 = if b.is_empty() {
+        u64::MAX
+    } else {
+        b.trim().parse().with_context(|| format!("bad range end in '{s}'"))?
+    };
+    if last < first {
+        bail!("backwards entry range '{s}' ({last} < {first})");
+    }
+    Ok((first, last))
+}
+
 pub fn usage() -> &'static str {
     "rootio — ROOT I/O compression survey reproduction (Shadura & Bockelman, CHEP 2019)
 
@@ -95,12 +121,21 @@ USAGE:
                [--setting ZSTD-5] [--precond bitshuffle4] [--basket BYTES]
                [--workers N] [--adaptive analysis|production|balanced]
                [--artifacts DIR]
-  rootio read --in FILE [--branch NAME] [--workers N]
-               (--workers N > 0 reads through the parallel basket pipeline)
+  rootio read --in FILE [--branch NAME] [--workers N] [--entries A..B]
+               (--workers N > 0 reads through the parallel basket pipeline;
+                --entries A..B reads only that entry range — boundary
+                baskets are trimmed, so you get exactly entries [A, B))
   rootio read --in FILE --branches A,B,C [--workers N] [--prefetch offset|submission]
+               [--entries A..B] [--feedback reads.profile]
                (columnar projection: one offset-sorted pass over the file,
-                per-branch read metrics; submission = branch-major baseline)
-  rootio inspect --in FILE [--replan analysis|production|balanced [--workers N]]
+                per-branch read metrics; submission = branch-major baseline;
+                --entries slices the plan to the baskets overlapping [A, B);
+                --feedback accumulates the scan's per-branch stats into a
+                read profile for `inspect --replan profile`)
+  rootio inspect --in FILE [--replan analysis|production|balanced|profile
+               [--workers N] [--profile reads.profile]]
+               (--replan profile replans from a recorded access profile:
+                hot branches get decode-speed settings, cold ones ratio)
   rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
   rootio all-figures [--quick]
 
@@ -283,10 +318,25 @@ fn cmd_read(args: &Args) -> Result<i32> {
         .transpose()?
         .unwrap_or(0);
     let mut reader = TreeReader::open(&path)?;
+    let entries = args
+        .flags
+        .get("entries")
+        .map(|s| parse_entry_range(s))
+        .transpose()?;
     // --branches: the columnar projection path (multi-branch single-pass
-    // scan with per-branch metrics).
+    // scan with per-branch metrics). --entries without a branch selection
+    // projects every branch over the range.
     if let Some(list) = args.flags.get("branches") {
-        return cmd_read_projection(args, &reader, list, workers);
+        let names: Vec<String> =
+            list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+        if names.is_empty() {
+            bail!("--branches needs a comma-separated list of branch names");
+        }
+        return cmd_read_projection(args, &reader, &names, workers, entries);
+    }
+    if entries.is_some() && !args.flags.contains_key("branch") {
+        let names: Vec<String> = reader.meta.branches.iter().map(|b| b.name.clone()).collect();
+        return cmd_read_projection(args, &reader, &names, workers, entries);
     }
     // Both paths answer directory queries from the same TreeMeta; only the
     // value reads dispatch to the serial oracle or the pipeline.
@@ -297,16 +347,33 @@ fn cmd_read(args: &Args) -> Result<i32> {
         let id = reader
             .branch_id(branch)
             .with_context(|| format!("no branch '{branch}'"))?;
-        let values = match &par {
-            Some(p) => p.read_branch(id)?,
-            None => reader.read_branch(id)?,
-        };
-        println!("branch '{branch}': {} entries", values.len());
-        bytes = reader
-            .baskets_for(id)
-            .iter()
-            .map(|l| l.uncompressed_len as usize)
-            .sum();
+        if let Some((a, b)) = entries {
+            // Entry-range read of one branch: only the overlapping baskets
+            // are decoded, boundary baskets trimmed.
+            let (a, b) = reader.meta.clamp_entry_range(a, b);
+            let values = match &par {
+                Some(p) => p.read_range(id, a..b)?,
+                None => reader.read_range(id, a..b)?,
+            };
+            println!("branch '{branch}' entries [{a}, {b}): {} values", values.len());
+            bytes = reader
+                .meta
+                .baskets_for_range(id, a, b)
+                .iter()
+                .map(|l| l.uncompressed_len as usize)
+                .sum();
+        } else {
+            let values = match &par {
+                Some(p) => p.read_branch(id)?,
+                None => reader.read_branch(id)?,
+            };
+            println!("branch '{branch}': {} entries", values.len());
+            bytes = reader
+                .baskets_for(id)
+                .iter()
+                .map(|l| l.uncompressed_len as usize)
+                .sum();
+        }
     } else {
         let events = match &par {
             Some(p) => p.read_all_events()?,
@@ -328,15 +395,22 @@ fn cmd_read(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `rootio read --branches A,B,C`: project a branch subset through one
-/// pipelined pass (offset-sorted prefetch unless `--prefetch submission`
-/// asks for the branch-major baseline) and report per-branch read metrics.
-fn cmd_read_projection(args: &Args, reader: &TreeReader, list: &str, workers: usize) -> Result<i32> {
+/// `rootio read --branches A,B,C [--entries A..B]`: project a branch
+/// subset through one pipelined pass (offset-sorted prefetch unless
+/// `--prefetch submission` asks for the branch-major baseline), optionally
+/// sliced to an entry range, and report per-branch read metrics.
+/// `--feedback FILE` folds the scan's stats into a read profile for
+/// `inspect --replan profile`.
+fn cmd_read_projection(
+    args: &Args,
+    reader: &TreeReader,
+    names: &[String],
+    workers: usize,
+    entries: Option<(u64, u64)>,
+) -> Result<i32> {
     use crate::coordinator::{PrefetchOrder, ProjectionPlan};
-    let names: Vec<&str> = list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
-    if names.is_empty() {
-        bail!("--branches needs a comma-separated list of branch names");
-    }
+    use crate::runtime::ReadFeedback;
+    let names: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
     // Projection always rides the pipeline; --workers 0/absent means the
     // default worker count, not the serial path.
     let workers = if workers == 0 { ReadAhead::default().workers } else { workers };
@@ -347,11 +421,20 @@ fn cmd_read_projection(args: &Args, reader: &TreeReader, list: &str, workers: us
     };
     let par = reader.read_ahead(ReadAhead::with_workers(workers));
     let ids = ProjectionPlan::resolve_names(&par.meta, &names)?;
-    let plan = ProjectionPlan::new(&par.meta, &ids, order)?;
+    let mut plan = ProjectionPlan::new(&par.meta, &ids, order)?;
+    let (range_start, range_end) = match entries {
+        Some((a, b)) => {
+            plan = plan.slice(a, b);
+            par.meta.clamp_entry_range(a, b)
+        }
+        None => (0, par.meta.n_entries),
+    };
     println!(
-        "projection: {} of {} branches, {} baskets, {} backward seeks ({})",
+        "projection: {} of {} branches, entries [{range_start}, {range_end}) of {}, \
+         {} baskets, {} backward seeks ({})",
         names.len(),
         par.meta.branches.len(),
+        par.meta.n_entries,
         plan.locs().len(),
         plan.backward_seeks(),
         match order {
@@ -363,7 +446,7 @@ fn cmd_read_projection(args: &Args, reader: &TreeReader, list: &str, workers: us
     let mut proj = par.project_plan(&plan)?;
     let columns = proj.read_columns()?;
     let wall = t0.elapsed();
-    println!("read {} entries x {} projected branches", par.meta.n_entries, columns.len());
+    println!("read {} entries x {} projected branches", range_end - range_start, columns.len());
     println!(
         "{:<28} {:>8} {:>10} {:>12} {:>12} {:>7}",
         "branch", "baskets", "entries", "raw", "compressed", "ratio"
@@ -387,6 +470,81 @@ fn cmd_read_projection(args: &Args, reader: &TreeReader, list: &str, workers: us
         wall.as_secs_f64(),
         bytes / 1e6 / wall.as_secs_f64()
     );
+    // --feedback FILE: fold this scan's per-branch stats into a persistent
+    // access profile (created on first use, accumulated across runs).
+    if let Some(fp) = args.flags.get("feedback") {
+        let fp = PathBuf::from(fp);
+        let mut fb = if fp.exists() { ReadFeedback::load(&fp)? } else { ReadFeedback::new() };
+        fb.record_scan(proj.branch_stats());
+        fb.save(&fp)?;
+        println!(
+            "recorded scan into read profile {} ({} scans, {} branches)",
+            fp.display(),
+            fb.scans,
+            fb.branches().len()
+        );
+    }
+    Ok(0)
+}
+
+/// `rootio inspect --replan profile --profile FILE`: replan per-branch
+/// settings from a recorded access profile. Each branch's analyzer
+/// features are weighted by its observed read intensity (profile bytes
+/// read per scan / stored bytes), so branches analyses hammer get
+/// decode-speed settings and branches nobody reads get ratio settings —
+/// the stats-fed closing of the paper's §3 adaptive loop.
+fn cmd_inspect_replan_profile(
+    path: &std::path::Path,
+    reader: &TreeReader,
+    profile_path: &std::path::Path,
+    workers: usize,
+) -> Result<i32> {
+    use crate::runtime::ReadFeedback;
+    let fb = ReadFeedback::load(profile_path)?;
+    if fb.scans == 0 {
+        bail!("read profile {} records no scans", profile_path.display());
+    }
+    let planner = Planner::new(UseCase::Balanced, FeatureSource::Native);
+    let profiles = crate::runtime::analyze_tree(path, workers)?;
+    println!(
+        "replan(profile {}: {} scans) of {} — {} branches, analyzed via {}w read pipeline",
+        profile_path.display(),
+        fb.scans,
+        path.display(),
+        profiles.len(),
+        workers
+    );
+    println!(
+        "{:<28} {:>12} {:>12} {:>10} {:<11} {:<24} {}",
+        "branch", "stored", "read", "intensity", "effective", "current", "suggested"
+    );
+    for p in &profiles {
+        let intensity = fb.intensity(&p.name, p.logical_bytes);
+        let (effective, suggested) = match &p.features {
+            Some(f) => {
+                let (uc, s) = planner.plan_from_feedback(f, intensity);
+                (uc, s.label())
+            }
+            None => {
+                let uc = Planner::use_case_for_intensity(intensity);
+                (uc, format!("{} (basket below analyzer bucket)", Planner::default_settings_for(uc).label()))
+            }
+        };
+        let current = reader.meta.branches[p.branch_id as usize]
+            .settings
+            .map(|s| s.label())
+            .unwrap_or_else(|| format!("(default {})", reader.meta.default_settings.label()));
+        println!(
+            "{:<28} {:>12} {:>12} {:>10.3} {:<11} {:<24} {}",
+            p.name,
+            p.logical_bytes,
+            fb.logical_bytes_read(&p.name),
+            intensity,
+            format!("{effective:?}").to_lowercase(),
+            current,
+            suggested
+        );
+    }
     Ok(0)
 }
 
@@ -397,18 +555,27 @@ fn cmd_inspect(args: &Args) -> Result<i32> {
     // parallel read pipeline and print the settings the adaptive planner
     // would pick for a rewrite.
     if let Some(mode) = args.flags.get("replan") {
-        let use_case = match mode.as_str() {
-            "analysis" => UseCase::Analysis,
-            "production" => UseCase::Production,
-            "balanced" => UseCase::Balanced,
-            other => bail!("unknown use case '{other}'"),
-        };
         let workers: usize = args
             .flags
             .get("workers")
             .map(|s| s.parse())
             .transpose()?
             .unwrap_or_else(|| ReadAhead::default().workers);
+        // --replan profile: weight the replan by a recorded access profile
+        // (what analyses actually read) instead of a static use-case label.
+        if mode == "profile" {
+            let fp = args
+                .flags
+                .get("profile")
+                .context("--replan profile needs --profile FILE (record one with `rootio read --branches ... --feedback FILE`)")?;
+            return cmd_inspect_replan_profile(&path, &reader, &PathBuf::from(fp), workers);
+        }
+        let use_case = match mode.as_str() {
+            "analysis" => UseCase::Analysis,
+            "production" => UseCase::Production,
+            "balanced" => UseCase::Balanced,
+            other => bail!("unknown use case '{other}' (want analysis|production|balanced|profile)"),
+        };
         let planner = Planner::new(use_case, FeatureSource::Native);
         let profiles = crate::runtime::analyze_tree(&path, workers)?;
         println!(
@@ -482,6 +649,20 @@ mod tests {
         assert_eq!(parse_precond("delta").unwrap(), Precond::Delta(4));
         assert_eq!(parse_precond("none").unwrap(), Precond::None);
         assert!(parse_precond("xor4").is_err());
+    }
+
+    #[test]
+    fn entry_range_parse() {
+        assert_eq!(parse_entry_range("100..200").unwrap(), (100, 200));
+        assert_eq!(parse_entry_range("..200").unwrap(), (0, 200));
+        assert_eq!(parse_entry_range("100..").unwrap(), (100, u64::MAX));
+        assert_eq!(parse_entry_range("..").unwrap(), (0, u64::MAX));
+        assert_eq!(parse_entry_range("7..7").unwrap(), (7, 7)); // empty window ok
+        assert_eq!(parse_entry_range(" 1 .. 2 ").unwrap(), (1, 2));
+        assert!(parse_entry_range("200..100").is_err(), "backwards rejected");
+        assert!(parse_entry_range("100").is_err());
+        assert!(parse_entry_range("a..b").is_err());
+        assert!(parse_entry_range("1..2..3").is_err());
     }
 
     #[test]

@@ -76,11 +76,46 @@ impl Planner {
 
     /// Pure decision logic (unit-testable without artifacts).
     pub fn plan_from_features(&self, f: &Features) -> Settings {
+        Self::decide(self.use_case, self.stride, f)
+    }
+
+    /// Plan one branch from analyzer features *weighted by observed read
+    /// behaviour* instead of this planner's static use case: `intensity`
+    /// is the fraction of the branch's stored bytes a recorded access
+    /// profile saw decoded per scan (see
+    /// [`ReadFeedback::intensity`](crate::runtime::ReadFeedback::intensity)).
+    /// Hot branches get the decode-speed-bound plan regardless of how the
+    /// file was written; branches the profile never read get the
+    /// ratio-bound plan. Returns the effective use case alongside the
+    /// settings so callers can report the decision.
+    pub fn plan_from_feedback(&self, f: &Features, intensity: f64) -> (UseCase, Settings) {
+        let uc = Self::use_case_for_intensity(intensity);
+        (uc, Self::decide(uc, self.stride, f))
+    }
+
+    /// Map observed per-scan read intensity to an effective use case:
+    /// branches whose bytes are mostly decoded on every scan are
+    /// decode-speed-bound (the paper's analysis constraint), branches the
+    /// profile never touches are ratio-bound (pure storage), everything
+    /// in between gets the balanced middle ground.
+    pub fn use_case_for_intensity(intensity: f64) -> UseCase {
+        if intensity >= 0.5 {
+            UseCase::Analysis
+        } else if intensity > 0.05 {
+            UseCase::Balanced
+        } else {
+            UseCase::Production
+        }
+    }
+
+    /// The decision table shared by the static and feedback-weighted
+    /// paths.
+    fn decide(use_case: UseCase, stride: u8, f: &Features) -> Settings {
         // Is the basket already incompressible noise? Entropy near 8 in
         // every view → don't waste CPU, fastest codec at level 1.
         let best_h = f.h_raw.min(f.h_shuffle).min(f.h_bitshuffle).min(f.h_delta);
         if best_h > 7.8 && f.rep_raw < 0.02 {
-            return match self.use_case {
+            return match use_case {
                 UseCase::Analysis => Settings::new(Algorithm::Lz4, 1),
                 _ => Settings::new(Algorithm::Zstd, 1),
             };
@@ -91,13 +126,13 @@ impl Planner {
             || (f.zero_bitshuffle > 0.5 && f.h_bitshuffle < f.h_raw);
         let shuffle_wins = !bitshuffle_wins && f.h_shuffle < 0.8 * f.h_raw;
         let precond = if bitshuffle_wins {
-            Precond::BitShuffle(self.stride)
+            Precond::BitShuffle(stride)
         } else if shuffle_wins {
-            Precond::Shuffle(self.stride)
+            Precond::Shuffle(stride)
         } else {
             Precond::None
         };
-        match self.use_case {
+        match use_case {
             UseCase::Analysis => {
                 // LZ4 keeps Fig-3 decode speed; precondition when it helps.
                 Settings::new(Algorithm::Lz4, 4).with_precond(precond)
@@ -116,7 +151,13 @@ impl Planner {
     }
 
     pub fn default_settings(&self) -> Settings {
-        match self.use_case {
+        Self::default_settings_for(self.use_case)
+    }
+
+    /// Static fallback settings for a use case (small baskets below the
+    /// analyzer's smallest bucket).
+    pub fn default_settings_for(use_case: UseCase) -> Settings {
+        match use_case {
             UseCase::Analysis => Settings::new(Algorithm::Lz4, 4),
             UseCase::Production => Settings::new(Algorithm::Zstd, 9),
             UseCase::Balanced => Settings::new(Algorithm::Zstd, 5),
@@ -178,6 +219,33 @@ mod tests {
             let s = p.plan_from_features(&f);
             assert_eq!(s.algorithm, Algorithm::Lz4, "{f:?}");
         }
+    }
+
+    #[test]
+    fn feedback_overrides_the_static_use_case() {
+        // A production-labelled planner still picks the decode-speed plan
+        // for a branch the access profile reads on every scan — and the
+        // ratio plan for one it never touches.
+        let p = Planner::new(UseCase::Production, FeatureSource::Native);
+        let f = feats(6.0, 4.0, 1.0, 0.9);
+        let (uc, s) = p.plan_from_feedback(&f, 1.0);
+        assert_eq!(uc, UseCase::Analysis);
+        assert_eq!(s.algorithm, Algorithm::Lz4);
+        assert_eq!(s, Planner::new(UseCase::Analysis, FeatureSource::Native).plan_from_features(&f));
+        let (uc, s) = p.plan_from_feedback(&f, 0.0);
+        assert_eq!(uc, UseCase::Production);
+        assert!(matches!(s.algorithm, Algorithm::Lzma | Algorithm::Zstd));
+        let (uc, _) = p.plan_from_feedback(&f, 0.2);
+        assert_eq!(uc, UseCase::Balanced);
+    }
+
+    #[test]
+    fn intensity_thresholds() {
+        assert_eq!(Planner::use_case_for_intensity(0.0), UseCase::Production);
+        assert_eq!(Planner::use_case_for_intensity(0.05), UseCase::Production);
+        assert_eq!(Planner::use_case_for_intensity(0.2), UseCase::Balanced);
+        assert_eq!(Planner::use_case_for_intensity(0.5), UseCase::Analysis);
+        assert_eq!(Planner::use_case_for_intensity(3.0), UseCase::Analysis);
     }
 
     #[test]

@@ -23,10 +23,22 @@
 //!                    batches via next_batch() (columns zipped per entry)
 //! ```
 //!
-//! Invariants (property-tested in `rust/tests/integration_projection.rs`):
+//! Plans can additionally be [sliced](ProjectionPlan::slice) to an **entry
+//! range** `[first, last)` — the cluster-range read distributed and
+//! partial-file workloads want (arXiv:1711.02659 §4): only the baskets
+//! whose entry spans overlap the window are prefetched and decoded, and
+//! the reader trims head/tail rows of boundary baskets so callers see
+//! exactly the requested events. Entry spans come from the directory
+//! ([`BasketLoc::entry_span`]); there is no wire-format change.
+//!
+//! Invariants (property-tested in `rust/tests/integration_projection.rs`
+//! and `rust/tests/integration_entry_range.rs`):
 //!  * a k-of-n projection is **byte-identical** to k independent serial
 //!    [`TreeReader::read_branch`](crate::rfile::TreeReader::read_branch)
 //!    calls, for any worker count and either prefetch order;
+//!  * an entry-range projection is byte-identical to the full read
+//!    followed by an in-memory slice — including empty windows, windows
+//!    past EOF, and windows landing exactly on basket boundaries;
 //!  * a corrupted basket in a projected branch fails the projection exactly
 //!    like the serial reader — and does *not* fail projections that skip
 //!    that branch (the columnar win: untouched branches are never read);
@@ -58,12 +70,17 @@ pub enum PrefetchOrder {
 
 /// A merged, ordered prefetch plan over the baskets of a set of projected
 /// branches. Build with [`ProjectionPlan::new`] (branch ids) or let
-/// [`ParallelTreeReader::project`] resolve names for you.
+/// [`ParallelTreeReader::project`] resolve names for you; narrow it to an
+/// entry range with [`ProjectionPlan::slice`].
 #[derive(Debug, Clone)]
 pub struct ProjectionPlan {
     branch_ids: Vec<u32>,
     locs: Vec<BasketLoc>,
     order: PrefetchOrder,
+    /// `[first, last)` entry window when the plan was sliced; `None` means
+    /// the whole tree. Stored unclamped — readers clamp to the tree's
+    /// entry count.
+    entry_range: Option<(u64, u64)>,
 }
 
 impl ProjectionPlan {
@@ -93,7 +110,37 @@ impl ProjectionPlan {
         if order == PrefetchOrder::FileOffset {
             locs.sort_by_key(|l| l.file_offset);
         }
-        Ok(Self { branch_ids: branch_ids.to_vec(), locs, order })
+        Ok(Self { branch_ids: branch_ids.to_vec(), locs, order, entry_range: None })
+    }
+
+    /// Narrow the plan to the baskets whose entry spans overlap
+    /// `[first, last)` — the cluster-range trim for partial-file reads.
+    /// Spans come from the directory's `first_entry`/`n_entries`
+    /// ([`BasketLoc::entry_span`]), so no extra I/O happens here. Prefetch
+    /// order is preserved (slicing an offset-sorted plan keeps it one
+    /// forward sweep). Slicing an already-sliced plan intersects the
+    /// ranges. A backwards or fully out-of-range window yields an empty
+    /// plan, which reads zero baskets and zero entries.
+    pub fn slice(&self, first: u64, last: u64) -> Self {
+        let (first, last) = match self.entry_range {
+            None => (first, last.max(first)),
+            Some((a, b)) => {
+                let lo = first.max(a);
+                (lo, last.min(b).max(lo))
+            }
+        };
+        let locs = self.locs.iter().copied().filter(|l| l.overlaps(first, last)).collect();
+        Self {
+            branch_ids: self.branch_ids.clone(),
+            locs,
+            order: self.order,
+            entry_range: Some((first, last)),
+        }
+    }
+
+    /// The `[first, last)` entry window this plan was sliced to, if any.
+    pub fn entry_range(&self) -> Option<(u64, u64)> {
+        self.entry_range
     }
 
     /// Resolve branch *names* to ids against `meta` (first error wins).
@@ -114,7 +161,7 @@ impl ProjectionPlan {
         let mut firsts = meta.first_baskets();
         firsts.sort_by_key(|l| l.file_offset);
         let branch_ids = (0..meta.branches.len() as u32).collect();
-        Self { branch_ids, locs: firsts, order: PrefetchOrder::FileOffset }
+        Self { branch_ids, locs: firsts, order: PrefetchOrder::FileOffset, entry_range: None }
     }
 
     /// The merged basket list in prefetch order.
@@ -183,10 +230,23 @@ pub struct ProjectionScan {
 }
 
 impl ProjectionScan {
-    fn new(scan: BasketScan, branch_ids: &[u32]) -> Self {
+    fn new(scan: BasketScan, plan: &ProjectionPlan) -> Self {
+        // A sliced plan starts each branch mid-directory: the first
+        // deliverable basket_index per branch is the smallest one in the
+        // plan, not 0.
+        let mut first_index: HashMap<u32, u32> = HashMap::new();
+        for l in plan.locs() {
+            let e = first_index.entry(l.branch_id).or_insert(l.basket_index);
+            *e = (*e).min(l.basket_index);
+        }
+        let branch_ids = plan.branch_ids();
         let slots: Vec<SlotState> = branch_ids
             .iter()
-            .map(|&id| SlotState { branch_id: id, next_index: 0, parked: BTreeMap::new() })
+            .map(|&id| SlotState {
+                branch_id: id,
+                next_index: first_index.get(&id).copied().unwrap_or(0),
+                parked: BTreeMap::new(),
+            })
             .collect();
         let slot_of = branch_ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
         Self { scan, slots, slot_of, ready: VecDeque::new(), failed: false }
@@ -329,6 +389,11 @@ pub struct ProjectionReader {
     scan: ProjectionScan,
     types: Vec<BranchType>,
     stats: Vec<BranchReadStats>,
+    /// First entry of the projected window (0 for whole-tree projections).
+    start: u64,
+    /// One past the last entry of the window (tree entry count when whole).
+    end: u64,
+    /// Entries this projection emits: `end - start`.
     n_entries: u64,
     /// Decoded-but-unemitted values per slot (front = oldest entry).
     bufs: Vec<VecDeque<Value>>,
@@ -342,7 +407,8 @@ pub struct ProjectionReader {
 }
 
 impl ProjectionReader {
-    fn new(scan: ProjectionScan, meta: &TreeMeta, branch_ids: &[u32]) -> Self {
+    fn new(scan: ProjectionScan, meta: &TreeMeta, plan: &ProjectionPlan) -> Self {
+        let branch_ids = plan.branch_ids();
         let types = branch_ids.iter().map(|&id| meta.branches[id as usize].ty).collect();
         let stats = branch_ids
             .iter()
@@ -353,11 +419,17 @@ impl ProjectionReader {
             })
             .collect();
         let bufs = branch_ids.iter().map(|_| VecDeque::new()).collect();
+        let (start, end) = match plan.entry_range() {
+            None => (0, meta.n_entries),
+            Some((a, b)) => meta.clamp_entry_range(a, b),
+        };
         Self {
             scan,
             types,
             stats,
-            n_entries: meta.n_entries,
+            start,
+            end,
+            n_entries: end - start,
             bufs,
             value_scratch: Vec::new(),
             emitted: 0,
@@ -381,6 +453,13 @@ impl ProjectionReader {
     /// Entries emitted through [`ProjectionReader::next_batch`] so far.
     pub fn entries_emitted(&self) -> u64 {
         self.emitted
+    }
+
+    /// The absolute entry window `[first, last)` this projection covers —
+    /// the whole tree unless the plan was sliced, already clamped to the
+    /// tree's entry count.
+    pub fn entry_range(&self) -> (u64, u64) {
+        (self.start, self.end)
     }
 
     fn note_basket(&mut self, slot: usize, loc: &BasketLoc, content: &BasketContent) {
@@ -415,7 +494,10 @@ impl ProjectionReader {
                     }
                     self.note_basket(slot, &loc, &content);
                     self.scan.recycle(content);
-                    self.bufs[slot].extend(self.value_scratch.drain(..));
+                    // Boundary baskets of a sliced projection decode whole
+                    // but contribute only the rows inside the window.
+                    let (from, to) = loc.trim_bounds(self.start, self.end);
+                    self.bufs[slot].extend(self.value_scratch.drain(..to).skip(from));
                 }
                 Some(Err(e)) => {
                     self.failed = true;
@@ -437,7 +519,8 @@ impl ProjectionReader {
         if let Some(cap) = self.max_batch_rows {
             avail = avail.min(cap);
         }
-        let first_entry = self.emitted;
+        // Absolute entry id: offset by the window start for sliced reads.
+        let first_entry = self.start + self.emitted;
         let k = self.bufs.len();
         let mut rows: Vec<Vec<Value>> = (0..avail).map(|_| Vec::with_capacity(k)).collect();
         for buf in self.bufs.iter_mut() {
@@ -451,9 +534,11 @@ impl ProjectionReader {
 
     /// Drain the projection into whole per-branch columns (event order, one
     /// `Vec<Value>` per projected branch, in projection order). Covers the
-    /// entries not yet emitted through [`ProjectionReader::next_batch`];
-    /// verifies every column reaches the tree's entry count. Errors are
-    /// terminal, like [`ProjectionReader::next_batch`]'s.
+    /// window entries not yet emitted through
+    /// [`ProjectionReader::next_batch`]; verifies every column reaches the
+    /// projection window's entry count (the whole tree unless the plan was
+    /// sliced). Errors are terminal, like
+    /// [`ProjectionReader::next_batch`]'s.
     pub fn read_columns(&mut self) -> Result<Vec<Vec<Value>>> {
         if self.failed {
             bail!("projection already failed; open a new projection to retry");
@@ -479,7 +564,17 @@ impl ProjectionReader {
         while let Some(item) = self.scan.next_basket() {
             let (slot, loc, content) = item?;
             self.note_basket(slot, &loc, &content);
-            decode_values(&content, self.types[slot], &mut columns[slot])?;
+            let (from, to) = loc.trim_bounds(self.start, self.end);
+            if from == 0 && to == loc.n_entries as usize {
+                // Interior basket: decode straight into the column.
+                decode_values(&content, self.types[slot], &mut columns[slot])?;
+            } else {
+                // Boundary basket of a sliced window: decode whole, keep
+                // only the rows inside `[start, end)`.
+                self.value_scratch.clear();
+                decode_values(&content, self.types[slot], &mut self.value_scratch)?;
+                columns[slot].extend(self.value_scratch.drain(..to).skip(from));
+            }
             self.scan.recycle(content);
         }
         for (slot, col) in columns.iter().enumerate() {
@@ -506,15 +601,29 @@ impl ParallelTreeReader {
         self.project_plan(&plan)
     }
 
+    /// Project `branches` over the entry window `[range.start, range.end)`
+    /// only: the plan is [sliced](ProjectionPlan::slice) to the baskets
+    /// overlapping the window, the pipeline decodes only those, and the
+    /// reader trims head/tail rows of boundary baskets so callers see
+    /// exactly the requested entries. Ranges are clamped to the tree
+    /// (past-EOF and empty windows yield zero rows, not errors).
+    pub fn project_range(
+        &self,
+        branches: &[&str],
+        range: std::ops::Range<u64>,
+    ) -> Result<ProjectionReader> {
+        let ids = ProjectionPlan::resolve_names(&self.meta, branches)?;
+        let plan = ProjectionPlan::new(&self.meta, &ids, PrefetchOrder::FileOffset)?
+            .slice(range.start, range.end);
+        self.project_plan(&plan)
+    }
+
     /// Project with an explicit, pre-built [`ProjectionPlan`] (choose the
-    /// prefetch order, inspect the sweep, reuse a plan across readers).
+    /// prefetch order, slice an entry range, inspect the sweep, reuse a
+    /// plan across readers).
     pub fn project_plan(&self, plan: &ProjectionPlan) -> Result<ProjectionReader> {
         let scan = self.scan(plan.locs().to_vec())?;
-        Ok(ProjectionReader::new(
-            ProjectionScan::new(scan, plan.branch_ids()),
-            &self.meta,
-            plan.branch_ids(),
-        ))
+        Ok(ProjectionReader::new(ProjectionScan::new(scan, plan), &self.meta, plan))
     }
 
     /// One-call multi-branch read: per-branch event-order columns for
@@ -648,6 +757,91 @@ mod tests {
         assert_eq!(entry, serial.meta.n_entries);
         assert_eq!(proj.entries_emitted(), entry);
         // Exhausted: further calls keep returning None.
+        assert!(proj.next_batch().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sliced_plans_keep_only_overlapping_baskets() {
+        let path = write_sample("slice_plan", 400, 1024);
+        let reader = TreeReader::open(&path).unwrap();
+        let ids = ProjectionPlan::resolve_names(&reader.meta, &["px", "Track_pt"]).unwrap();
+        let plan = ProjectionPlan::new(&reader.meta, &ids, PrefetchOrder::FileOffset).unwrap();
+        let n = reader.meta.n_entries;
+        let sliced = plan.slice(n / 4, 3 * n / 4);
+        assert!(sliced.locs().iter().all(|l| l.overlaps(n / 4, 3 * n / 4)));
+        assert!(sliced.locs().len() < plan.locs().len());
+        assert!(sliced.is_monotonic_sweep(), "slicing must preserve the forward sweep");
+        assert_eq!(sliced.entry_range(), Some((n / 4, 3 * n / 4)));
+        // Every in-range basket of each projected branch is present.
+        for &id in &ids {
+            assert_eq!(
+                sliced.locs().iter().filter(|l| l.branch_id == id).count(),
+                reader.meta.baskets_for_range(id, n / 4, 3 * n / 4).len(),
+                "branch {id}"
+            );
+        }
+        // Slicing a slice intersects the windows.
+        let nested = sliced.slice(0, n / 2);
+        assert_eq!(nested.entry_range(), Some((n / 4, n / 2)));
+        assert!(nested.locs().iter().all(|l| l.overlaps(n / 4, n / 2)));
+        // Empty and out-of-range windows yield empty plans.
+        assert!(plan.slice(10, 10).locs().is_empty());
+        assert!(plan.slice(n + 5, n + 50).locs().is_empty());
+        assert!(plan.slice(30, 10).locs().is_empty(), "backwards window is empty");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn project_range_matches_in_memory_slice() {
+        let path = write_sample("range_cols", 500, 1024);
+        let mut serial = TreeReader::open(&path).unwrap();
+        let par = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 3 }).unwrap();
+        let names = ["event_id", "Track_pt"];
+        let full: Vec<Vec<Value>> = names
+            .iter()
+            .map(|n| serial.read_branch(serial.branch_id(n).unwrap()).unwrap())
+            .collect();
+        let n = serial.meta.n_entries;
+        for (a, b) in [(0, n), (n / 3, 2 * n / 3), (0, 1), (n - 1, n), (7, 7), (n, n + 9)] {
+            let mut proj = par.project_range(&names, a..b).unwrap();
+            let cols = proj.read_columns().unwrap();
+            let (ca, cb) = (a.min(n) as usize, b.min(n).max(a.min(n)) as usize);
+            for (slot, col) in cols.iter().enumerate() {
+                assert_eq!(col.as_slice(), &full[slot][ca..cb], "range [{a},{b}) slot {slot}");
+            }
+            assert_eq!(proj.entry_range(), (ca as u64, cb as u64));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ranged_batches_report_absolute_entries() {
+        let path = write_sample("range_batch", 300, 512);
+        let mut serial = TreeReader::open(&path).unwrap();
+        let par = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 2 }).unwrap();
+        let names = ["py", "label"];
+        let cols: Vec<Vec<Value>> = names
+            .iter()
+            .map(|n| serial.read_branch(serial.branch_id(n).unwrap()).unwrap())
+            .collect();
+        let (a, b) = (41u64, 227u64);
+        let mut proj = par.project_range(&names, a..b).unwrap();
+        proj.set_max_batch_rows(23);
+        let mut entry = a;
+        while let Some(batch) = proj.next_batch() {
+            let batch = batch.unwrap();
+            assert_eq!(batch.first_entry, entry, "batches carry absolute entry ids");
+            for (i, row) in batch.rows.iter().enumerate() {
+                let e = (entry + i as u64) as usize;
+                for (slot, v) in row.iter().enumerate() {
+                    assert_eq!(*v, cols[slot][e], "entry {e} slot {slot}");
+                }
+            }
+            entry += batch.len() as u64;
+        }
+        assert_eq!(entry, b);
+        assert_eq!(proj.entries_emitted(), b - a);
         assert!(proj.next_batch().is_none());
         std::fs::remove_file(&path).ok();
     }

@@ -441,6 +441,46 @@ impl ParallelTreeReader {
         Ok(out)
     }
 
+    /// Read one branch over the entry window `[range.start, range.end)`
+    /// only — the parallel equivalent of [`TreeReader::read_range`],
+    /// byte-identical output. Only the baskets whose entry spans overlap
+    /// the window are prefetched and decoded; head/tail rows of boundary
+    /// baskets are trimmed. The range is clamped to the tree (past-EOF and
+    /// empty windows yield zero values, not errors).
+    pub fn read_range(&self, branch_id: u32, range: std::ops::Range<u64>) -> Result<Vec<Value>> {
+        let ty = self
+            .meta
+            .branches
+            .get(branch_id as usize)
+            .ok_or_else(|| anyhow::anyhow!("no branch {branch_id}"))?
+            .ty;
+        let (start, end) = self.meta.clamp_entry_range(range.start, range.end);
+        let locs = self.meta.baskets_for_range(branch_id, start, end);
+        let mut scan = self.scan(locs)?;
+        let mut out = Vec::with_capacity((end - start) as usize);
+        let mut scratch = Vec::new();
+        while let Some(item) = scan.next_basket() {
+            let (loc, content) = item?;
+            let (from, to) = loc.trim_bounds(start, end);
+            if from == 0 && to == loc.n_entries as usize {
+                decode_values(&content, ty, &mut out)?;
+            } else {
+                scratch.clear();
+                decode_values(&content, ty, &mut scratch)?;
+                out.extend(scratch.drain(..to).skip(from));
+            }
+            scan.recycle(content);
+        }
+        if out.len() as u64 != end - start {
+            bail!(
+                "branch {branch_id}: {} entries decoded for range [{start}, {end}), expected {}",
+                out.len(),
+                end - start
+            );
+        }
+        Ok(out)
+    }
+
     /// Row-wise reconstruction across all branches — the parallel
     /// equivalent of [`TreeReader::read_all_events`]. One scan covers the
     /// whole basket directory (branch-major order, so columns fill

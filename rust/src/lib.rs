@@ -23,6 +23,12 @@
 //! * Columnar reads: [`coordinator::ProjectionReader`] via
 //!   [`coordinator::ParallelTreeReader::project`] — multi-branch
 //!   single-pass scans with offset-sorted prefetch.
+//! * Entry-range reads: [`coordinator::ParallelTreeReader::project_range`]
+//!   / [`rfile::TreeReader::read_range`] — decode only the baskets
+//!   overlapping an entry window, boundary rows trimmed.
+//! * Stats-fed replanning: [`runtime::ReadFeedback`] +
+//!   [`coordinator::Planner::plan_from_feedback`] — replan compression
+//!   from a recorded access profile.
 //! * Buffer-level compression: [`compression::Engine`].
 //!
 //! ## End-to-end roundtrip

@@ -18,6 +18,36 @@ pub struct BasketLoc {
     pub uncompressed_len: u32,
 }
 
+impl BasketLoc {
+    /// Entry span `[first, last)` this basket covers. Derived from the
+    /// directory's `first_entry` + `n_entries` — entry-range reads need no
+    /// wire-format change (docs/FORMAT.md §4).
+    pub fn entry_span(&self) -> (u64, u64) {
+        (self.first_entry, self.first_entry + self.n_entries as u64)
+    }
+
+    /// True iff this basket's entry span intersects `[first, last)`. An
+    /// empty query window (`first >= last`) intersects nothing — without
+    /// the guard, a point window falling strictly inside the span would
+    /// report a hit and an "empty" range read would decode one basket.
+    pub fn overlaps(&self, first: u64, last: u64) -> bool {
+        let (a, b) = self.entry_span();
+        first < last && a < last && first < b
+    }
+
+    /// Indices `[from, to)` into this basket's *decoded* values that fall
+    /// inside the entry range `[first, last)` — the head/tail trim for
+    /// boundary baskets of an entry-range read. Saturating at the span
+    /// edges, so any `(first, last)` pair is safe (a non-overlapping span
+    /// yields an empty `from == to` window).
+    pub fn trim_bounds(&self, first: u64, last: u64) -> (usize, usize) {
+        let (span_start, span_end) = self.entry_span();
+        let lo = first.clamp(span_start, span_end);
+        let hi = last.clamp(span_start, span_end).max(lo);
+        ((lo - span_start) as usize, (hi - span_start) as usize)
+    }
+}
+
 /// Full tree metadata.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TreeMeta {
@@ -73,6 +103,25 @@ impl TreeMeta {
             }
         }
         buckets.into_iter().flatten().collect()
+    }
+
+    /// Basket directory for one branch restricted to the baskets whose
+    /// entry spans overlap `[first, last)` — the slice an entry-range read
+    /// decodes. Order follows the directory (basket_index order).
+    pub fn baskets_for_range(&self, branch_id: u32, first: u64, last: u64) -> Vec<BasketLoc> {
+        self.baskets
+            .iter()
+            .copied()
+            .filter(|l| l.branch_id == branch_id && l.overlaps(first, last))
+            .collect()
+    }
+
+    /// Clamp a caller-supplied entry range to this tree: returns
+    /// `[start, end)` with `start <= end <= n_entries`. Ranges past EOF
+    /// collapse to empty at the tree's end.
+    pub fn clamp_entry_range(&self, first: u64, last: u64) -> (u64, u64) {
+        let start = first.min(self.n_entries);
+        (start, last.min(self.n_entries).max(start))
     }
 
     /// First basket of every branch that has one, in `(branch_id)` order —
@@ -253,6 +302,71 @@ mod tests {
             firsts.iter().map(|l| (l.branch_id, l.file_offset)).collect::<Vec<_>>(),
             vec![(0, 6), (1, 30), (2, 60)]
         );
+    }
+
+    #[test]
+    fn entry_spans_and_trim_bounds() {
+        let loc = BasketLoc {
+            branch_id: 0,
+            basket_index: 1,
+            first_entry: 100,
+            n_entries: 50,
+            file_offset: 0,
+            compressed_len: 1,
+            uncompressed_len: 1,
+        };
+        assert_eq!(loc.entry_span(), (100, 150));
+        // Overlap is half-open on both the span and the query.
+        assert!(loc.overlaps(0, 101));
+        assert!(loc.overlaps(149, 1000));
+        assert!(!loc.overlaps(0, 100));
+        assert!(!loc.overlaps(150, 200));
+        assert!(!loc.overlaps(120, 120)); // empty query
+        // Interior basket of a wider range: no trim.
+        assert_eq!(loc.trim_bounds(0, 1000), (0, 50));
+        // Head trim only / tail trim only / both.
+        assert_eq!(loc.trim_bounds(110, 1000), (10, 50));
+        assert_eq!(loc.trim_bounds(0, 140), (0, 40));
+        assert_eq!(loc.trim_bounds(110, 140), (10, 40));
+        // Exact-boundary range: full basket, no trim.
+        assert_eq!(loc.trim_bounds(100, 150), (0, 50));
+        // Non-overlapping queries saturate to empty windows, no underflow.
+        assert_eq!(loc.trim_bounds(0, 50), (0, 0));
+        assert_eq!(loc.trim_bounds(200, 300), (50, 50));
+        let (f, t) = loc.trim_bounds(170, 120); // backwards range
+        assert_eq!(f, t);
+    }
+
+    #[test]
+    fn range_directory_queries() {
+        let loc = |basket_index: u32, first_entry: u64, n: u32| BasketLoc {
+            branch_id: 0,
+            basket_index,
+            first_entry,
+            n_entries: n,
+            file_offset: basket_index as u64 * 10,
+            compressed_len: 5,
+            uncompressed_len: 9,
+        };
+        let meta = TreeMeta {
+            name: "T".into(),
+            branches: vec![BranchDef::new("a", BranchType::I32)],
+            default_settings: Settings::default(),
+            n_entries: 30,
+            baskets: vec![loc(0, 0, 10), loc(1, 10, 10), loc(2, 20, 10)],
+            dictionary_offset: None,
+        };
+        let idx = |v: &[BasketLoc]| v.iter().map(|l| l.basket_index).collect::<Vec<_>>();
+        assert_eq!(idx(&meta.baskets_for_range(0, 0, 30)), vec![0, 1, 2]);
+        assert_eq!(idx(&meta.baskets_for_range(0, 10, 20)), vec![1]); // exact boundaries
+        assert_eq!(idx(&meta.baskets_for_range(0, 9, 11)), vec![0, 1]);
+        assert_eq!(idx(&meta.baskets_for_range(0, 15, 15)), Vec::<u32>::new());
+        assert_eq!(idx(&meta.baskets_for_range(0, 30, 99)), Vec::<u32>::new());
+        assert_eq!(idx(&meta.baskets_for_range(7, 0, 30)), Vec::<u32>::new()); // unknown branch
+        assert_eq!(meta.clamp_entry_range(5, 25), (5, 25));
+        assert_eq!(meta.clamp_entry_range(5, 99), (5, 30));
+        assert_eq!(meta.clamp_entry_range(40, 99), (30, 30));
+        assert_eq!(meta.clamp_entry_range(20, 10), (20, 20));
     }
 
     #[test]

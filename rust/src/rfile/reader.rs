@@ -154,6 +154,48 @@ impl TreeReader {
         Ok(out)
     }
 
+    /// Read one branch over the entry window `[range.start, range.end)`
+    /// only: decode just the baskets whose entry spans overlap the window
+    /// (per-basket spans come from the directory — no wire change) and
+    /// trim head/tail rows of boundary baskets, so the result equals
+    /// [`read_branch`](TreeReader::read_branch) followed by an in-memory
+    /// slice. The range is clamped to the tree: past-EOF and empty windows
+    /// yield zero values, not errors. This is the serial oracle for the
+    /// pipelined range reads
+    /// ([`ParallelTreeReader::read_range`](crate::coordinator::ParallelTreeReader::read_range),
+    /// [`ParallelTreeReader::project_range`](crate::coordinator::ParallelTreeReader::project_range)).
+    pub fn read_range(&mut self, branch_id: u32, range: std::ops::Range<u64>) -> Result<Vec<Value>> {
+        let ty = self
+            .meta
+            .branches
+            .get(branch_id as usize)
+            .ok_or_else(|| anyhow::anyhow!("no branch {branch_id}"))?
+            .ty;
+        let (start, end) = self.meta.clamp_entry_range(range.start, range.end);
+        let locs = self.meta.baskets_for_range(branch_id, start, end);
+        let mut out = Vec::with_capacity((end - start) as usize);
+        let mut scratch = Vec::new();
+        for loc in &locs {
+            let content = self.read_basket(loc)?;
+            let (from, to) = loc.trim_bounds(start, end);
+            if from == 0 && to == loc.n_entries as usize {
+                decode_values(&content, ty, &mut out)?;
+            } else {
+                scratch.clear();
+                decode_values(&content, ty, &mut scratch)?;
+                out.extend(scratch.drain(..to).skip(from));
+            }
+        }
+        if out.len() as u64 != end - start {
+            bail!(
+                "branch {branch_id}: {} entries decoded for range [{start}, {end}), expected {}",
+                out.len(),
+                end - start
+            );
+        }
+        Ok(out)
+    }
+
     /// Iterate all events (row-wise reconstruction across all branches).
     /// Memory-heavy for wide trees; used by examples and tests on small
     /// files. Returns `events[entry][branch]`.

@@ -159,7 +159,12 @@ pub struct BranchProfile {
 /// over its logical payload. Feed the resulting features into
 /// [`crate::coordinator::Planner::plan_from_features`] to propose new
 /// per-branch settings for a rewrite (the paper's §3 "switch between
-/// compression algorithms and settings" workflow, applied retroactively).
+/// compression algorithms and settings" workflow, applied retroactively) —
+/// or into [`crate::coordinator::Planner::plan_from_feedback`] together
+/// with a recorded access profile ([`crate::runtime::ReadFeedback`],
+/// intensity = profile bytes read / `BranchProfile::logical_bytes`) so the
+/// replan weights each branch by what analyses actually read
+/// (`rootio inspect --replan profile --profile reads.profile`).
 ///
 /// The basket sweep rides a
 /// [`ProjectionPlan::first_baskets`](crate::coordinator::ProjectionPlan::first_baskets)

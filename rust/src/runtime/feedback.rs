@@ -1,0 +1,387 @@
+//! Read-feedback accumulator: the loop-closer between what analyses
+//! *actually read* and what the adaptive planner chooses.
+//!
+//! "ROOT I/O compression improvements for HEP analysis" (arXiv:2004.10531)
+//! argues compression choices should track the observed workload, not a
+//! static label. Projection scans already measure per-branch reads
+//! ([`BranchReadStats`]); a [`ReadFeedback`] accumulates those stats
+//! across scans into a persistent **access profile**, and
+//! [`Planner::plan_from_feedback`](crate::coordinator::Planner::plan_from_feedback)
+//! weights its per-branch decision by the profile's observed read
+//! intensity instead of a use-case label:
+//!
+//! ```text
+//!  rootio read --branches a,b --feedback reads.profile   (repeat per scan)
+//!        │   ProjectionReader::branch_stats → ReadFeedback::record_scan
+//!        ▼
+//!  reads.profile (text, one line per branch, accumulates across runs)
+//!        │
+//!  rootio inspect --replan profile --profile reads.profile
+//!        │   runtime::analyze_tree features × ReadFeedback::intensity
+//!        ▼
+//!  per-branch settings: hot branches → decode-speed plan,
+//!                       untouched branches → ratio plan
+//! ```
+//!
+//! The profile format is a versioned plain-text table (no serde in the
+//! offline crate set), stable across files with the same schema because
+//! branches are keyed by **name**.
+
+use crate::coordinator::projection::BranchReadStats;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Header line of the on-disk profile format.
+const PROFILE_MAGIC: &str = "rootio-read-profile v1";
+
+/// Escape a branch name for the tab-separated profile line (names are
+/// arbitrary strings; a literal tab or newline would corrupt the framing
+/// and brick the profile for the strict parser).
+fn escape_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for c in name.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\t' => out.push_str("\\t"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Inverse of [`escape_name`]; rejects truncated or unknown escapes.
+fn unescape_name(escaped: &str) -> Option<String> {
+    let mut out = String::with_capacity(escaped.len());
+    let mut chars = escaped.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('\\') => out.push('\\'),
+            Some('t') => out.push('\t'),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+/// Accumulated read statistics for one branch across every recorded scan.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BranchFeedback {
+    /// Branch id at last record time (informative — lookups key on name).
+    pub branch_id: u32,
+    pub name: String,
+    /// Scans in which this branch was projected.
+    pub scans: u64,
+    /// Baskets decoded for this branch, summed over scans.
+    pub baskets: u64,
+    /// Entries decoded (boundary baskets of range reads decode whole).
+    pub entries: u64,
+    /// Uncompressed bytes decoded, summed over scans.
+    pub logical_bytes: u64,
+    /// Compressed bytes read off the file, summed over scans.
+    pub compressed_bytes: u64,
+}
+
+/// A recorded access profile: per-branch read totals plus the number of
+/// scans that produced them. Create empty ([`ReadFeedback::new`]), feed it
+/// [`BranchReadStats`] after each projection drain
+/// ([`ReadFeedback::record_scan`]), and persist it as a small text file
+/// ([`ReadFeedback::save`] / [`ReadFeedback::load`]) so the profile
+/// accumulates across processes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReadFeedback {
+    /// Scans recorded into this profile.
+    pub scans: u64,
+    branches: Vec<BranchFeedback>,
+}
+
+impl ReadFeedback {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one finished scan's per-branch stats into the profile.
+    /// Branches are matched by name, so profiles survive schema reorder
+    /// and apply across files with the same branch names.
+    pub fn record_scan(&mut self, stats: &[BranchReadStats]) {
+        self.scans += 1;
+        for st in stats {
+            let b = self.entry_mut(&st.name, st.branch_id);
+            b.scans += 1;
+            b.baskets += st.baskets;
+            b.entries += st.entries;
+            b.logical_bytes += st.logical_bytes;
+            b.compressed_bytes += st.compressed_bytes;
+        }
+    }
+
+    /// Fold another profile into this one (distributed workers each record
+    /// locally, then merge).
+    pub fn merge(&mut self, other: &ReadFeedback) {
+        self.scans += other.scans;
+        for ob in &other.branches {
+            let b = self.entry_mut(&ob.name, ob.branch_id);
+            b.scans += ob.scans;
+            b.baskets += ob.baskets;
+            b.entries += ob.entries;
+            b.logical_bytes += ob.logical_bytes;
+            b.compressed_bytes += ob.compressed_bytes;
+        }
+    }
+
+    fn entry_mut(&mut self, name: &str, branch_id: u32) -> &mut BranchFeedback {
+        if let Some(i) = self.branches.iter().position(|b| b.name == name) {
+            return &mut self.branches[i];
+        }
+        self.branches.push(BranchFeedback {
+            branch_id,
+            name: name.to_string(),
+            ..BranchFeedback::default()
+        });
+        self.branches.last_mut().expect("just pushed")
+    }
+
+    /// Per-branch totals, in first-recorded order.
+    pub fn branches(&self) -> &[BranchFeedback] {
+        &self.branches
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BranchFeedback> {
+        self.branches.iter().find(|b| b.name == name)
+    }
+
+    /// Uncompressed bytes the profile saw decoded for `name` (0 if the
+    /// branch was never read).
+    pub fn logical_bytes_read(&self, name: &str) -> u64 {
+        self.get(name).map(|b| b.logical_bytes).unwrap_or(0)
+    }
+
+    /// Total uncompressed bytes across every branch in the profile.
+    pub fn total_logical_bytes(&self) -> u64 {
+        self.branches.iter().map(|b| b.logical_bytes).sum()
+    }
+
+    /// Observed read intensity for `name`: the fraction of the branch's
+    /// stored (uncompressed) bytes decoded *per recorded scan*. ~1.0 means
+    /// the whole branch is read every scan (decode-speed-bound); ~0 means
+    /// the branch is effectively write-only (ratio-bound). Can exceed 1.0
+    /// when boundary baskets of overlapping range reads decode repeatedly.
+    /// This is the weight [`crate::coordinator::Planner::plan_from_feedback`]
+    /// consumes.
+    pub fn intensity(&self, name: &str, stored_logical_bytes: u64) -> f64 {
+        if self.scans == 0 || stored_logical_bytes == 0 {
+            return 0.0;
+        }
+        self.logical_bytes_read(name) as f64 / (stored_logical_bytes as f64 * self.scans as f64)
+    }
+
+    /// Render the profile in its on-disk text format.
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        out.push_str(PROFILE_MAGIC);
+        out.push('\n');
+        out.push_str(&format!("scans\t{}\n", self.scans));
+        for b in &self.branches {
+            out.push_str(&format!(
+                "branch\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                b.branch_id, b.scans, b.baskets, b.entries, b.logical_bytes, b.compressed_bytes,
+                escape_name(&b.name)
+            ));
+        }
+        out
+    }
+
+    /// Parse the on-disk text format (rejects unknown versions and
+    /// malformed lines — a profile is planner input, not a best-effort
+    /// log).
+    pub fn deserialize(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some(PROFILE_MAGIC) => {}
+            other => bail!("not a rootio read profile (header {:?})", other.unwrap_or("")),
+        }
+        let mut fb = ReadFeedback::new();
+        let mut saw_scans = false;
+        for (lineno, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let mut fields = line.split('\t');
+            let fail = || anyhow::anyhow!("read profile line {}: malformed '{line}'", lineno + 2);
+            match fields.next() {
+                Some("scans") => {
+                    fb.scans = fields.next().ok_or_else(fail)?.parse().map_err(|_| fail())?;
+                    saw_scans = true;
+                }
+                Some("branch") => {
+                    let mut num = || -> Result<u64> {
+                        fields.next().ok_or_else(fail)?.parse().map_err(|_| fail())
+                    };
+                    let branch_id = num()? as u32;
+                    let scans = num()?;
+                    let baskets = num()?;
+                    let entries = num()?;
+                    let logical_bytes = num()?;
+                    let compressed_bytes = num()?;
+                    // Name is the final field (tabs/newlines escaped by
+                    // `escape_name`), so a trailing tab means a malformed
+                    // line.
+                    let name =
+                        unescape_name(fields.next().ok_or_else(fail)?).ok_or_else(fail)?;
+                    if fields.next().is_some() || name.is_empty() {
+                        bail!("read profile line {}: malformed '{line}'", lineno + 2);
+                    }
+                    fb.branches.push(BranchFeedback {
+                        branch_id,
+                        name,
+                        scans,
+                        baskets,
+                        entries,
+                        logical_bytes,
+                        compressed_bytes,
+                    });
+                }
+                _ => bail!("read profile line {}: unknown record '{line}'", lineno + 2),
+            }
+        }
+        if !saw_scans {
+            bail!("read profile has no 'scans' line");
+        }
+        Ok(fb)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading read profile {}", path.display()))?;
+        Self::deserialize(&text)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.serialize())
+            .with_context(|| format!("writing read profile {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(name: &str, id: u32, logical: u64) -> BranchReadStats {
+        BranchReadStats {
+            branch_id: id,
+            name: name.into(),
+            baskets: 3,
+            entries: 100,
+            compressed_bytes: logical / 2,
+            logical_bytes: logical,
+        }
+    }
+
+    #[test]
+    fn record_accumulates_and_roundtrips() {
+        let mut fb = ReadFeedback::new();
+        fb.record_scan(&[stats("pt", 3, 1000), stats("eta", 4, 500)]);
+        fb.record_scan(&[stats("pt", 3, 1000)]);
+        assert_eq!(fb.scans, 2);
+        assert_eq!(fb.logical_bytes_read("pt"), 2000);
+        assert_eq!(fb.logical_bytes_read("eta"), 500);
+        assert_eq!(fb.logical_bytes_read("phi"), 0);
+        assert_eq!(fb.get("pt").unwrap().scans, 2);
+        assert_eq!(fb.get("eta").unwrap().scans, 1);
+        assert_eq!(fb.total_logical_bytes(), 2500);
+        let back = ReadFeedback::deserialize(&fb.serialize()).unwrap();
+        assert_eq!(back, fb);
+    }
+
+    #[test]
+    fn intensity_is_per_scan_fraction_of_stored_bytes() {
+        let mut fb = ReadFeedback::new();
+        fb.record_scan(&[stats("hot", 0, 1000), stats("warm", 1, 100)]);
+        fb.record_scan(&[stats("hot", 0, 1000)]);
+        // hot: 2000 bytes over 2 scans of a 1000-byte branch → 1.0.
+        assert!((fb.intensity("hot", 1000) - 1.0).abs() < 1e-9);
+        // warm: 100 bytes over 2 scans of a 1000-byte branch → 0.05.
+        assert!((fb.intensity("warm", 1000) - 0.05).abs() < 1e-9);
+        // Never read, zero-size, or empty profile → 0.
+        assert_eq!(fb.intensity("cold", 1000), 0.0);
+        assert_eq!(fb.intensity("hot", 0), 0.0);
+        assert_eq!(ReadFeedback::new().intensity("hot", 1000), 0.0);
+    }
+
+    #[test]
+    fn hostile_branch_names_roundtrip() {
+        // Names are arbitrary strings: tabs/newlines/backslashes must
+        // survive the tab-separated format instead of bricking the file.
+        let mut fb = ReadFeedback::new();
+        for name in ["a\tb", "line\nbreak", "back\\slash", "cr\rlf", "\\t literal"] {
+            fb.record_scan(&[stats(name, 0, 10)]);
+        }
+        let text = fb.serialize();
+        let back = ReadFeedback::deserialize(&text).unwrap();
+        assert_eq!(back, fb);
+        assert_eq!(back.logical_bytes_read("a\tb"), 10);
+        // Truncated / unknown escapes are rejected, not misread.
+        assert!(ReadFeedback::deserialize(
+            "rootio-read-profile v1\nscans\t1\nbranch\t0\t1\t2\t3\t4\t5\tbad\\\n"
+        )
+        .is_err());
+        assert!(ReadFeedback::deserialize(
+            "rootio-read-profile v1\nscans\t1\nbranch\t0\t1\t2\t3\t4\t5\tbad\\x\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn merge_folds_profiles() {
+        let mut a = ReadFeedback::new();
+        a.record_scan(&[stats("pt", 3, 1000)]);
+        let mut b = ReadFeedback::new();
+        b.record_scan(&[stats("pt", 3, 1000), stats("eta", 4, 500)]);
+        a.merge(&b);
+        assert_eq!(a.scans, 2);
+        assert_eq!(a.logical_bytes_read("pt"), 2000);
+        assert_eq!(a.logical_bytes_read("eta"), 500);
+    }
+
+    #[test]
+    fn malformed_profiles_rejected() {
+        assert!(ReadFeedback::deserialize("").is_err());
+        assert!(ReadFeedback::deserialize("some other file\n").is_err());
+        assert!(ReadFeedback::deserialize("rootio-read-profile v2\nscans\t1\n").is_err());
+        let ok = "rootio-read-profile v1\nscans\t1\nbranch\t0\t1\t2\t3\t4\t5\tpt\n";
+        assert!(ReadFeedback::deserialize(ok).is_ok());
+        // Missing scans line, truncated branch line, junk record, extra
+        // field, empty name.
+        assert!(ReadFeedback::deserialize("rootio-read-profile v1\n").is_err());
+        assert!(ReadFeedback::deserialize("rootio-read-profile v1\nscans\t1\nbranch\t0\t1\n")
+            .is_err());
+        assert!(ReadFeedback::deserialize("rootio-read-profile v1\nscans\t1\nwhat\t0\n").is_err());
+        assert!(ReadFeedback::deserialize(
+            "rootio-read-profile v1\nscans\t1\nbranch\t0\t1\t2\t3\t4\t5\tpt\textra\n"
+        )
+        .is_err());
+        assert!(ReadFeedback::deserialize(
+            "rootio-read-profile v1\nscans\t1\nbranch\t0\t1\t2\t3\t4\t5\t\n"
+        )
+        .is_err());
+        assert!(ReadFeedback::deserialize("rootio-read-profile v1\nscans\tx\n").is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut fb = ReadFeedback::new();
+        fb.record_scan(&[stats("pt", 3, 1000)]);
+        let mut path = std::env::temp_dir();
+        path.push(format!("rootio_feedback_{}.profile", std::process::id()));
+        fb.save(&path).unwrap();
+        assert_eq!(ReadFeedback::load(&path).unwrap(), fb);
+        std::fs::remove_file(&path).ok();
+    }
+}

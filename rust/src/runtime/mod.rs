@@ -4,8 +4,10 @@
 //! DESIGN.md §2).
 
 pub mod analyzer;
+pub mod feedback;
 
 pub use analyzer::{analyze_tree, Analyzer, BranchProfile, Features, BUCKETS, NUM_FEATURES};
+pub use feedback::{BranchFeedback, ReadFeedback};
 
 use anyhow::Result;
 

@@ -1,0 +1,226 @@
+//! Shared oracle testkit for the integration suites.
+//!
+//! Every property-style suite used to carry its own copy of the fixture
+//! builders (codec × preconditioner grid, seeded corpus, temp-file
+//! naming); this module is the single source of truth they all import via
+//! `mod common;`. It also owns the reproducibility contract:
+//!
+//! * **`PROP_SEED`** (env, `0x…` hex or decimal) overrides a test's
+//!   default RNG seed. Construct the RNG through [`seeded`]; the returned
+//!   guard prints `seed=0x…` into the output of any panicking test, so a
+//!   CI failure is reproducible locally with exactly one env var:
+//!   `PROP_SEED=0x… cargo test -q --test <suite>`.
+//! * **`PROP_ROUNDS`** (env) caps property-test rounds and grid cells
+//!   through [`prop_rounds`] / [`sample`] (values above a test's default
+//!   are clamped to the default, so it can only reduce work). The CI MSRV
+//!   matrix leg sets it so the pinned-toolchain build stops being the
+//!   long pole; stable runs the full grid. Documented in
+//!   docs/BENCHMARKS.md §"CI knobs".
+
+// Each test target compiles this module separately and uses a different
+// subset of it; unused helpers in one target are not dead code.
+#![allow(dead_code)]
+
+use rootio::compression::{Algorithm, Settings};
+use rootio::gen::synthetic;
+use rootio::precond::Precond;
+use rootio::rfile::{write_tree_serial, TreeMeta};
+use rootio::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Per-process temp file path, namespaced by suite and fixture name.
+pub fn tmp_path(suite: &str, name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("rootio_{suite}_{}_{name}", std::process::id()));
+    p
+}
+
+/// The full codec × preconditioner grid the container supports — the
+/// canonical coverage matrix for reader/writer oracle equivalence tests.
+pub fn grid() -> Vec<Settings> {
+    let mut v = Vec::new();
+    for (alg, level) in [
+        (Algorithm::None, 0u8),
+        (Algorithm::Zlib, 6),
+        (Algorithm::CfZlib, 1),
+        (Algorithm::Lz4, 1),
+        (Algorithm::Lz4, 9),
+        (Algorithm::Zstd, 5),
+        (Algorithm::Lzma, 6),
+        (Algorithm::OldRoot, 6),
+    ] {
+        for precond in [
+            Precond::None,
+            Precond::BitShuffle(4),
+            Precond::Shuffle(4),
+            Precond::Delta(4),
+        ] {
+            v.push(Settings::new(alg, level).with_precond(precond));
+        }
+    }
+    v
+}
+
+/// The survey settings the corruption suite attacks: every algorithm at a
+/// mid level, plus the two preconditioned lanes that change span framing.
+pub fn survey_settings() -> Vec<Settings> {
+    let mut v: Vec<Settings> = Algorithm::survey()
+        .iter()
+        .map(|&a| Settings::new(a, 6))
+        .collect();
+    v.push(Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)));
+    v.push(Settings::new(Algorithm::Zstd, 5).with_precond(Precond::Shuffle(4)));
+    v
+}
+
+/// Deterministic byte corpora for codec-level fault injection: structured
+/// offsets, pure noise, and repetitive text-ish payloads.
+pub fn corpus(rng: &mut Rng) -> Vec<Vec<u8>> {
+    vec![
+        (1u32..=20_000).flat_map(|i| i.to_be_bytes()).collect(),
+        rng.bytes(30_000),
+        {
+            let mut v = Vec::new();
+            while v.len() < 40_000 {
+                v.extend_from_slice(b"basket payload with structure ");
+                let extra = rng.bytes(3);
+                v.extend_from_slice(&extra);
+            }
+            v
+        },
+    ]
+}
+
+/// Write a synthetic-workload tree file: the standard on-disk fixture of
+/// the reader/projection suites. Deterministic for a given `seed`.
+pub fn write_sample_tree(
+    path: &std::path::Path,
+    settings: Settings,
+    n_events: usize,
+    basket_size: usize,
+    seed: u64,
+) -> TreeMeta {
+    let events = synthetic::events(n_events, seed);
+    write_tree_serial(
+        path,
+        "Events",
+        synthetic::schema(),
+        settings,
+        basket_size,
+        events.iter().cloned(),
+    )
+    .expect("writing sample tree")
+}
+
+/// Effective round count for a property test: `PROP_ROUNDS` (clamped to
+/// `[1, default]`) or the test's own default. See the module docs.
+pub fn prop_rounds(default: usize) -> usize {
+    match std::env::var("PROP_ROUNDS") {
+        Ok(v) if !v.trim().is_empty() => match v.trim().parse::<usize>() {
+            Ok(n) => n.clamp(1, default),
+            Err(_) => panic!("PROP_ROUNDS='{v}' is not a round count"),
+        },
+        _ => default,
+    }
+}
+
+/// Deterministically subsample `items` to at most `max` entries, spread
+/// evenly across the list (so a reduced `PROP_ROUNDS` run still touches
+/// every region of the grid, not just its head).
+pub fn sample<T>(mut items: Vec<T>, max: usize) -> Vec<T> {
+    let len = items.len();
+    if max == 0 || len <= max {
+        return items;
+    }
+    let mut keep = vec![false; len];
+    for i in 0..max {
+        keep[i * len / max] = true;
+    }
+    let mut j = 0;
+    items.retain(|_| {
+        let k = keep[j];
+        j += 1;
+        k
+    });
+    items
+}
+
+/// The seed a test should run with: `PROP_SEED` (hex `0x…` or decimal) or
+/// the test's default.
+pub fn prop_seed(default: u64) -> u64 {
+    match std::env::var("PROP_SEED") {
+        Ok(v) if !v.trim().is_empty() => {
+            let v = v.trim();
+            let parsed = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => v.parse(),
+            };
+            parsed.unwrap_or_else(|_| panic!("PROP_SEED='{v}' is not a u64 (0x… hex or decimal)"))
+        }
+        _ => default,
+    }
+}
+
+/// Prints the run's seed when (and only when) the test panics, making
+/// every property-test failure message carry its reproduction recipe.
+/// Keep it alive for the whole test: `let (mut rng, _guard) = seeded(…);`
+pub struct SeedGuard {
+    seed: u64,
+}
+
+impl Drop for SeedGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!(
+                "testkit: property test failed with seed=0x{:x} — rerun with \
+                 PROP_SEED=0x{:x} cargo test",
+                self.seed, self.seed
+            );
+        }
+    }
+}
+
+/// Seeded RNG + panic-time seed reporter: the required entry point for
+/// randomized tests (honors `PROP_SEED`, see module docs).
+pub fn seeded(default_seed: u64) -> (Rng, SeedGuard) {
+    let seed = prop_seed(default_seed);
+    (Rng::new(seed), SeedGuard { seed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_spreads_across_the_list() {
+        let v: Vec<usize> = (0..32).collect();
+        assert_eq!(sample(v.clone(), 40), v, "max above len keeps everything");
+        let s = sample(v.clone(), 6);
+        assert_eq!(s.len(), 6);
+        assert_eq!(s[0], 0, "always includes the head");
+        assert!(s.last().unwrap() >= &26, "reaches the tail region: {s:?}");
+        assert!(s.windows(2).all(|w| w[0] < w[1]), "order preserved");
+        assert_eq!(sample(v, 1), vec![0]);
+        assert_eq!(sample(Vec::<usize>::new(), 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn grid_covers_every_algorithm_and_precond() {
+        let g = grid();
+        assert_eq!(g.len(), 32);
+        for alg in [
+            Algorithm::None,
+            Algorithm::Zlib,
+            Algorithm::CfZlib,
+            Algorithm::Lz4,
+            Algorithm::Zstd,
+            Algorithm::Lzma,
+            Algorithm::OldRoot,
+        ] {
+            assert!(g.iter().any(|s| s.algorithm == alg), "{alg:?} missing");
+        }
+        for p in [Precond::None, Precond::BitShuffle(4), Precond::Shuffle(4), Precond::Delta(4)] {
+            assert!(g.iter().any(|s| s.precond == p), "{p:?} missing");
+        }
+    }
+}

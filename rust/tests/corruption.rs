@@ -8,47 +8,27 @@
 //! error out or (only where the format carries no checksum) produce output
 //! that differs from the original. Silent false success is the only
 //! forbidden outcome.
+//!
+//! Corpora and the attacked settings come from the shared testkit
+//! (`mod common`): `PROP_SEED` reproduces a failed run, `PROP_ROUNDS`
+//! caps the per-setting flip count (see rust/tests/common/mod.rs).
 
+mod common;
+
+use common::{corpus, prop_rounds, seeded, survey_settings};
 use rootio::compression::{Algorithm, Engine, Settings};
-use rootio::precond::Precond;
-use rootio::util::rng::Rng;
-
-fn corpus(rng: &mut Rng) -> Vec<Vec<u8>> {
-    vec![
-        (1u32..=20_000).flat_map(|i| i.to_be_bytes()).collect(),
-        rng.bytes(30_000),
-        {
-            let mut v = Vec::new();
-            while v.len() < 40_000 {
-                v.extend_from_slice(b"basket payload with structure ");
-                let extra = rng.bytes(3);
-                v.extend_from_slice(&extra);
-            }
-            v
-        },
-    ]
-}
-
-fn all_settings() -> Vec<Settings> {
-    let mut v: Vec<Settings> = Algorithm::survey()
-        .iter()
-        .map(|&a| Settings::new(a, 6))
-        .collect();
-    v.push(Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)));
-    v.push(Settings::new(Algorithm::Zstd, 5).with_precond(Precond::Shuffle(4)));
-    v
-}
 
 #[test]
 fn random_bit_flips_never_panic_or_lie() {
-    let mut rng = Rng::new(0xBAD_B17);
+    let (mut rng, _guard) = seeded(0xBAD_B17);
     let mut engine = Engine::new();
     let mut flips = 0usize;
     let mut silent_ok = 0usize;
+    let rounds = prop_rounds(30);
     for data in corpus(&mut rng) {
-        for s in all_settings() {
+        for s in survey_settings() {
             let c = engine.compress(&data, &s);
-            for _ in 0..30 {
+            for _ in 0..rounds {
                 let mut m = c.clone();
                 let at = rng.range(0, m.len() - 1);
                 m[at] ^= 1 << rng.range(0, 7);
@@ -67,20 +47,22 @@ fn random_bit_flips_never_panic_or_lie() {
             }
         }
     }
-    // Padding-bit flips are rare; the overwhelming majority must be caught.
-    assert!(flips >= 600);
+    // Every (corpus × setting) cell ran its full flip budget…
+    assert_eq!(flips, 3 * survey_settings().len() * rounds);
+    // …and padding-bit flips are rare; the overwhelming majority must be
+    // caught (floor of 1 keeps a PROP_ROUNDS-reduced run meaningful).
     assert!(
-        (silent_ok as f64) < 0.02 * flips as f64,
+        (silent_ok as f64) <= (0.02 * flips as f64).max(1.0),
         "{silent_ok}/{flips} corrupted streams decoded to the original"
     );
 }
 
 #[test]
 fn truncations_never_panic() {
-    let mut rng = Rng::new(0xBAD_717);
+    let (mut rng, _guard) = seeded(0xBAD_717);
     let mut engine = Engine::new();
     for data in corpus(&mut rng) {
-        for s in all_settings() {
+        for s in survey_settings() {
             let c = engine.compress(&data, &s);
             for frac in [0.0, 0.1, 0.5, 0.9, 0.99] {
                 let cut = ((c.len() as f64) * frac) as usize;
@@ -96,10 +78,10 @@ fn truncations_never_panic() {
 #[test]
 fn appended_garbage_detected() {
     // Extra trailing bytes parse as a (bogus) next record and must error.
-    let mut rng = Rng::new(0xBAD_A99);
+    let (mut rng, _guard) = seeded(0xBAD_A99);
     let mut engine = Engine::new();
     let data: Vec<u8> = (1u32..=10_000).flat_map(|i| i.to_be_bytes()).collect();
-    for s in all_settings() {
+    for s in survey_settings() {
         let mut c = engine.compress(&data, &s);
         let tail_len = rng.range(1, 40);
         let tail = rng.bytes(tail_len);
@@ -115,7 +97,7 @@ fn appended_garbage_detected() {
 fn header_field_fuzzing() {
     // Directly attack the 10-byte record header: every mutated size field
     // must be handled gracefully.
-    let mut rng = Rng::new(0xBADEADu64);
+    let (mut rng, _guard) = seeded(0xBADEAD);
     let mut engine = Engine::new();
     let data = rng.bytes(5_000);
     let c = engine.compress(&data, &Settings::new(Algorithm::Zstd, 5));

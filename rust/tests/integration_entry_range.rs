@@ -1,0 +1,229 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
+//! Entry-range read invariants (property-style, seeded): a sliced
+//! projection through
+//! [`rootio::coordinator::ParallelTreeReader::project_range`] must be
+//! **byte-identical** to the full `read_columns` followed by an in-memory
+//! slice — for any worker count (1/2/4), codec × preconditioner, and
+//! either prefetch order — and the single-branch range reads
+//! ([`rootio::rfile::TreeReader::read_range`],
+//! [`rootio::coordinator::ParallelTreeReader::read_range`]) must agree
+//! with the same oracle. Covered edge windows: empty ranges, ranges past
+//! EOF, single entries, and ranges landing exactly on basket boundaries
+//! (no head/tail trim on either side).
+//!
+//! Fixtures come from the shared testkit (`mod common`): `PROP_SEED`
+//! reproduces a failed run, `PROP_ROUNDS` caps the grid (see
+//! rust/tests/common/mod.rs).
+
+mod common;
+
+use common::{grid, prop_rounds, sample, seeded, tmp_path, write_sample_tree};
+use rootio::compression::{Algorithm, Settings};
+use rootio::coordinator::{ParallelTreeReader, PrefetchOrder, ProjectionPlan, ReadAhead};
+use rootio::gen::synthetic;
+use rootio::precond::Precond;
+use rootio::rfile::{TreeReader, Value};
+
+/// Slice-after-full-read oracle: `columns[slot][a..b]`, clamped like the
+/// readers clamp.
+fn slice_oracle(columns: &[Vec<Value>], a: u64, b: u64) -> Vec<Vec<Value>> {
+    let n = columns.first().map(|c| c.len() as u64).unwrap_or(0);
+    let (ca, cb) = (a.min(n) as usize, b.min(n).max(a.min(n)) as usize);
+    columns.iter().map(|c| c[ca..cb].to_vec()).collect()
+}
+
+#[test]
+fn sliced_projection_equals_full_read_then_slice_across_grid() {
+    let (mut rng, _guard) = seeded(0x3A11CE);
+    let events_seed = rng.next_u64();
+    let n_events = 160u64;
+    let n_branches = synthetic::schema().len() as u32;
+    let settings_grid = sample(grid(), prop_rounds(usize::MAX));
+    for (i, settings) in settings_grid.into_iter().enumerate() {
+        // Small, varied baskets put many boundaries inside every window.
+        let basket_size = rng.range(256, 4096);
+        let path = tmp_path("erange", &format!("grid{i}"));
+        write_sample_tree(&path, settings, n_events as usize, basket_size, events_seed);
+
+        // Rotate the projected subset per setting: k in 1..=3.
+        let k = 1 + (i % 3);
+        let ids: Vec<u32> = (0..k).map(|j| ((i + 5 * j) as u32) % n_branches).collect();
+
+        // Full-read oracle via the serial reader.
+        let mut serial = TreeReader::open(&path).unwrap();
+        let full: Vec<Vec<Value>> =
+            ids.iter().map(|&id| serial.read_branch(id).unwrap()).collect();
+
+        // Window mix: two random windows plus rotating edge cases —
+        // empty, past-EOF, tail-crossing, single-entry, and one landing
+        // exactly on a basket boundary of the first projected branch.
+        let mut windows: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..2 {
+            let a = rng.range(0, n_events as usize) as u64;
+            let b = rng.range(a as usize, n_events as usize) as u64;
+            windows.push((a, b));
+        }
+        let boundary_locs = serial.baskets_for(ids[0]);
+        if boundary_locs.len() >= 2 {
+            let first = boundary_locs[rng.range(1, boundary_locs.len() - 1)].first_entry;
+            let last = boundary_locs
+                .iter()
+                .map(|l| l.first_entry)
+                .find(|&e| e > first)
+                .unwrap_or(n_events);
+            windows.push((first, last)); // exact basket-boundary window
+        }
+        windows.push(match i % 4 {
+            0 => (7.min(n_events), 7.min(n_events)),       // empty
+            1 => (n_events + 3, n_events + 50),            // past EOF
+            2 => (n_events - 5, n_events + 5),             // crosses EOF
+            _ => (n_events / 2, n_events / 2 + 1),         // single entry
+        });
+
+        let order =
+            if i % 2 == 0 { PrefetchOrder::FileOffset } else { PrefetchOrder::Submission };
+        for &(a, b) in &windows {
+            let oracle = slice_oracle(&full, a, b);
+            for workers in [1usize, 2, 4] {
+                let depth = rng.range(1, 8);
+                let par = ParallelTreeReader::open(&path, ReadAhead { workers, depth }).unwrap();
+                let plan =
+                    ProjectionPlan::new(&par.meta, &ids, order).unwrap().slice(a, b);
+                if order == PrefetchOrder::FileOffset {
+                    assert!(
+                        plan.is_monotonic_sweep(),
+                        "{} sliced offset plan must stay one forward sweep",
+                        settings.label()
+                    );
+                }
+                let mut proj = par.project_plan(&plan).unwrap();
+                let columns = proj.read_columns().unwrap();
+                assert_eq!(
+                    columns,
+                    oracle,
+                    "{} w={workers} d={depth} ids={ids:?} window=[{a},{b}) {order:?}",
+                    settings.label()
+                );
+                // Stats only cover the sliced plan's baskets.
+                let decoded: u64 = proj.branch_stats().iter().map(|s| s.baskets).sum();
+                assert_eq!(decoded, plan.locs().len() as u64, "window=[{a},{b})");
+            }
+            // Single-branch range APIs against the same oracle.
+            let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+            assert_eq!(
+                par.read_range(ids[0], a..b).unwrap(),
+                oracle[0],
+                "{} parallel read_range window=[{a},{b})",
+                settings.label()
+            );
+            assert_eq!(
+                serial.read_range(ids[0], a..b).unwrap(),
+                oracle[0],
+                "{} serial read_range window=[{a},{b})",
+                settings.label()
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn boundary_windows_decode_only_their_baskets() {
+    // A window landing exactly on basket boundaries must decode exactly
+    // the covered baskets (no neighbour is read) and need no trim; a
+    // mid-basket window decodes its boundary baskets once each.
+    let path = tmp_path("erange", "boundary");
+    write_sample_tree(
+        &path,
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        300,
+        512,
+        0xB0D1,
+    );
+    let mut serial = TreeReader::open(&path).unwrap();
+    let id = serial.branch_id("px").unwrap();
+    let locs = serial.baskets_for(id);
+    assert!(locs.len() >= 4, "need several baskets, got {}", locs.len());
+    let full = serial.read_branch(id).unwrap();
+
+    let (a, b) = (locs[1].first_entry, locs[3].first_entry);
+    let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+    let mut proj = par.project_range(&["px"], a..b).unwrap();
+    let cols = proj.read_columns().unwrap();
+    assert_eq!(cols[0].as_slice(), &full[a as usize..b as usize]);
+    // Exactly baskets 1 and 2 were decoded: boundary alignment means the
+    // neighbours never enter the plan.
+    assert_eq!(proj.branch_stats()[0].baskets, 2);
+    assert_eq!(
+        proj.branch_stats()[0].entries,
+        (locs[1].n_entries + locs[2].n_entries) as u64
+    );
+
+    // Mid-basket window: both boundary baskets decode whole, rows trim.
+    let (a, b) = (locs[1].first_entry + 3, locs[2].first_entry + 2);
+    let mut proj = par.project_range(&["px"], a..b).unwrap();
+    let cols = proj.read_columns().unwrap();
+    assert_eq!(cols[0].as_slice(), &full[a as usize..b as usize]);
+    assert_eq!(proj.branch_stats()[0].baskets, 2);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn ranged_row_batches_match_the_slice() {
+    let path = tmp_path("erange", "batches");
+    write_sample_tree(&path, Settings::new(Algorithm::Zstd, 5), 280, 768, 0xBA7C);
+    let mut serial = TreeReader::open(&path).unwrap();
+    let names = ["event_id", "Track_pt", "is_good"];
+    let cols: Vec<Vec<Value>> = names
+        .iter()
+        .map(|n| serial.read_branch(serial.branch_id(n).unwrap()).unwrap())
+        .collect();
+    let (a, b) = (33u64, 251u64);
+    let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(3)).unwrap();
+    let mut proj = par.project_range(&names, a..b).unwrap();
+    proj.set_max_batch_rows(29);
+    let mut entry = a;
+    while let Some(batch) = proj.next_batch() {
+        let batch = batch.unwrap();
+        assert_eq!(batch.first_entry, entry, "absolute entry ids");
+        assert!(batch.len() <= 29 && !batch.is_empty());
+        for (j, row) in batch.rows.iter().enumerate() {
+            let e = (entry + j as u64) as usize;
+            assert_eq!(row.len(), names.len());
+            for (slot, v) in row.iter().enumerate() {
+                assert_eq!(*v, cols[slot][e], "entry {e} slot {slot}");
+            }
+        }
+        entry += batch.len() as u64;
+    }
+    assert_eq!(entry, b);
+    assert_eq!(proj.entries_emitted(), b - a);
+    assert!(proj.next_batch().is_none(), "drained range ends the stream");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn degenerate_windows_yield_no_rows_and_no_io() {
+    let path = tmp_path("erange", "degenerate");
+    write_sample_tree(&path, Settings::new(Algorithm::Lz4, 1), 120, 1024, 0xE0F);
+    let mut serial = TreeReader::open(&path).unwrap();
+    let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+    let n = par.meta.n_entries;
+    for (a, b) in [(0, 0), (60, 60), (n, n), (n, n + 10), (n + 100, n + 200)] {
+        let mut proj = par.project_range(&["px", "label"], a..b).unwrap();
+        let cols = proj.read_columns().unwrap();
+        assert!(cols.iter().all(|c| c.is_empty()), "window [{a},{b})");
+        assert!(proj.branch_stats().iter().all(|s| s.baskets == 0), "no basket decoded");
+        assert!(proj.next_batch().is_none());
+        assert_eq!(par.read_range(0, a..b).unwrap(), Vec::<Value>::new());
+        assert_eq!(serial.read_range(0, a..b).unwrap(), Vec::<Value>::new());
+    }
+    // Unknown branch id errors on the range path like the full path.
+    assert!(par.read_range(999, 0..10).is_err());
+    assert!(serial.read_range(999, 0..10).is_err());
+    std::fs::remove_file(&path).ok();
+}

@@ -7,25 +7,24 @@
 //! queue depth, basket size, and workload, the parallel writer must produce
 //! a file whose *content* round-trips identically to the serial writer's —
 //! no basket lost, duplicated, or reordered within a branch.
+//!
+//! Fixtures come from the shared testkit (`mod common`): `PROP_SEED`
+//! reproduces a failed run, `PROP_ROUNDS` caps the round count (see
+//! rust/tests/common/mod.rs).
 
+mod common;
+
+use common::{prop_rounds, seeded, tmp_path};
 use rootio::compression::{Algorithm, Settings};
 use rootio::coordinator::{write_tree_parallel, PipelineConfig};
 use rootio::gen::synthetic;
 use rootio::precond::Precond;
 use rootio::rfile::{write_tree_serial, TreeReader, Value};
-use rootio::util::rng::Rng;
-use std::path::PathBuf;
-
-fn tmp_path(name: &str) -> PathBuf {
-    let mut p = std::env::temp_dir();
-    p.push(format!("rootio_pipe_{}_{}", std::process::id(), name));
-    p
-}
 
 #[test]
 fn parallel_content_equals_serial_content() {
-    let mut rng = Rng::new(0x9199);
-    for round in 0..6 {
+    let (mut rng, _guard) = seeded(0x9199);
+    for round in 0..prop_rounds(6) {
         let n_events = rng.range(50, 600);
         let events = synthetic::events(n_events, round as u64 + 1);
         let basket_size = [512usize, 4096, 65536][round % 3];
@@ -36,8 +35,8 @@ fn parallel_content_equals_serial_content() {
             (round % 9 + 1) as u8,
         );
 
-        let ser_path = tmp_path(&format!("ser{round}"));
-        let par_path = tmp_path(&format!("par{round}"));
+        let ser_path = tmp_path("pipe", &format!("ser{round}"));
+        let par_path = tmp_path("pipe", &format!("par{round}"));
         write_tree_serial(
             &ser_path,
             "Events",
@@ -85,7 +84,7 @@ fn parallel_content_equals_serial_content() {
 fn single_worker_minimal_queue() {
     // Degenerate config must still work (backpressure path exercised hard).
     let events = synthetic::events(200, 42);
-    let path = tmp_path("degen");
+    let path = tmp_path("pipe", "degen");
     let (meta, _) = write_tree_parallel(
         &path,
         "Events",
@@ -105,7 +104,7 @@ fn single_worker_minimal_queue() {
 #[test]
 fn many_workers_tiny_workload() {
     let events = synthetic::events(3, 7);
-    let path = tmp_path("tiny");
+    let path = tmp_path("pipe", "tiny");
     let (_, _) = write_tree_parallel(
         &path,
         "Events",
@@ -124,7 +123,7 @@ fn many_workers_tiny_workload() {
 #[test]
 fn pipeline_with_preconditioned_settings() {
     let events = synthetic::events(400, 11);
-    let path = tmp_path("precond");
+    let path = tmp_path("pipe", "precond");
     let settings = Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4));
     let (_, snap) = write_tree_parallel(
         &path,
@@ -154,7 +153,7 @@ fn pipeline_with_dictionary() {
         .map(|rec| vec![Value::AU8(rec.clone())])
         .collect();
     let branches = vec![rootio::rfile::BranchDef::new("rec", rootio::rfile::BranchType::VarU8)];
-    let path = tmp_path("dict");
+    let path = tmp_path("pipe", "dict");
     let (meta, _) = write_tree_parallel(
         &path,
         "Records",

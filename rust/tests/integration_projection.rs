@@ -12,7 +12,14 @@
 //! when a projected branch's basket is corrupted. A corrupted basket in
 //! an **unprojected** branch must not affect the projection at all:
 //! that's the columnar contract (untouched branches are never read).
+//!
+//! Fixtures come from the shared testkit (`mod common`): `PROP_SEED`
+//! reproduces a failed run, `PROP_ROUNDS` caps the grid (see
+//! rust/tests/common/mod.rs).
 
+mod common;
+
+use common::{grid, prop_rounds, sample, seeded, tmp_path, write_sample_tree};
 use rootio::compression::{Algorithm, Settings};
 use rootio::coordinator::{
     ParallelTreeReader, PrefetchOrder, ProjectionPlan, ReadAhead,
@@ -20,48 +27,17 @@ use rootio::coordinator::{
 use rootio::gen::synthetic;
 use rootio::precond::Precond;
 use rootio::rfile::{write_tree_serial, TreeReader, Value};
-use rootio::util::rng::Rng;
-use std::path::PathBuf;
-
-fn tmp_path(name: &str) -> PathBuf {
-    let mut p = std::env::temp_dir();
-    p.push(format!("rootio_proj_prop_{}_{}", std::process::id(), name));
-    p
-}
-
-/// The full codec × preconditioner grid the container supports.
-fn grid() -> Vec<Settings> {
-    let mut v = Vec::new();
-    for (alg, level) in [
-        (Algorithm::None, 0u8),
-        (Algorithm::Zlib, 6),
-        (Algorithm::CfZlib, 1),
-        (Algorithm::Lz4, 1),
-        (Algorithm::Lz4, 9),
-        (Algorithm::Zstd, 5),
-        (Algorithm::Lzma, 6),
-        (Algorithm::OldRoot, 6),
-    ] {
-        for precond in [
-            Precond::None,
-            Precond::BitShuffle(4),
-            Precond::Shuffle(4),
-            Precond::Delta(4),
-        ] {
-            v.push(Settings::new(alg, level).with_precond(precond));
-        }
-    }
-    v
-}
 
 #[test]
 fn k_of_n_projection_equals_serial_read_branch_across_grid() {
-    let mut rng = Rng::new(0x9207);
-    let events = synthetic::events(150, 0xC01);
+    let (mut rng, _guard) = seeded(0x9207);
+    let events_seed = rng.next_u64();
+    let events = synthetic::events(150, events_seed);
     let n_branches = synthetic::schema().len() as u32;
-    for (i, settings) in grid().into_iter().enumerate() {
+    let settings_grid = sample(grid(), prop_rounds(usize::MAX));
+    for (i, settings) in settings_grid.into_iter().enumerate() {
         let basket_size = rng.range(256, 8192);
-        let path = tmp_path(&format!("grid{i}"));
+        let path = tmp_path("proj_prop", &format!("grid{i}"));
         write_tree_serial(
             &path,
             "Events",
@@ -111,17 +87,14 @@ fn k_of_n_projection_equals_serial_read_branch_across_grid() {
 
 #[test]
 fn name_level_apis_match_serial() {
-    let events = synthetic::events(400, 0xAB5);
-    let path = tmp_path("names");
-    write_tree_serial(
+    let path = tmp_path("proj_prop", "names");
+    write_sample_tree(
         &path,
-        "Events",
-        synthetic::schema(),
         Settings::new(Algorithm::Zstd, 5).with_precond(Precond::Shuffle(4)),
+        400,
         2048,
-        events.iter().cloned(),
-    )
-    .unwrap();
+        0xAB5,
+    );
     let mut serial = TreeReader::open(&path).unwrap();
     let names = ["Track_pt", "px", "label"];
     let oracle: Vec<Vec<Value>> = names
@@ -139,20 +112,17 @@ fn name_level_apis_match_serial() {
 
 #[test]
 fn corrupted_projected_basket_rejected_in_parity_and_skipped_when_unprojected() {
-    let events = synthetic::events(300, 0xD0C);
-    let path = tmp_path("corrupt");
+    let path = tmp_path("proj_prop", "corrupt");
     // BitShuffle makes the jagged float branch LZ4-compressible (the Fig-6
     // rescue), so its spans carry the "L4" tag + CRC-32 rather than the
     // checksum-less raw-store fallback.
-    write_tree_serial(
+    write_sample_tree(
         &path,
-        "Events",
-        synthetic::schema(),
         Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        300,
         1024,
-        events.iter().cloned(),
-    )
-    .unwrap();
+        0xD0C,
+    );
 
     // Corrupt the *stored CRC-32* of an LZ4 span in one Track_pt basket:
     // the decoded bytes are untouched, so only checksum verification can
@@ -182,7 +152,7 @@ fn corrupted_projected_basket_rejected_in_parity_and_skipped_when_unprojected() 
         }
     }
     assert!(patched, "no LZ4-compressed Track_pt span found to patch");
-    let bad_path = tmp_path("corrupt_flipped");
+    let bad_path = tmp_path("proj_prop", "corrupt_flipped");
     std::fs::write(&bad_path, &bytes).unwrap();
 
     // Serial oracle: the corrupted branch is rejected, others still read.
@@ -229,17 +199,14 @@ fn corrupted_projected_basket_rejected_in_parity_and_skipped_when_unprojected() 
 
 #[test]
 fn row_batches_zip_the_same_values() {
-    let events = synthetic::events(250, 0x3A7);
-    let path = tmp_path("rows");
-    write_tree_serial(
+    let path = tmp_path("proj_prop", "rows");
+    write_sample_tree(
         &path,
-        "Events",
-        synthetic::schema(),
         Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        250,
         1024,
-        events.iter().cloned(),
-    )
-    .unwrap();
+        0x3A7,
+    );
     let mut serial = TreeReader::open(&path).unwrap();
     let names = ["nTrack", "Track_charge", "is_good"];
     let cols: Vec<Vec<Value>> = names
