@@ -9,6 +9,7 @@
 //!                [--feedback reads.profile]
 //! rootio inspect --in f.rfil [--replan analysis|production|balanced|profile
 //!                [--profile reads.profile]]
+//! rootio scrub   --in f.rfil    (exit 0 clean / 1 damaged / 2 unreadable)
 //! rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
 //! rootio all-figures [--quick]
 //! ```
@@ -16,7 +17,9 @@
 use crate::bench::figures::run_figure;
 use crate::bench::BenchConfig;
 use crate::compression::{Algorithm, Settings};
-use crate::coordinator::{write_tree_parallel, FeatureSource, PipelineConfig, Planner, ReadAhead, UseCase};
+use crate::coordinator::{
+    write_tree_parallel, FeatureSource, PipelineConfig, Planner, ReadAhead, ScanMode, UseCase,
+};
 use crate::gen::{nanoaod, synthetic};
 use crate::precond::Precond;
 use crate::rfile::TreeReader;
@@ -132,6 +135,15 @@ USAGE:
                 --entries slices the plan to the baskets overlapping [A, B);
                 --feedback accumulates the scan's per-branch stats into a
                 read profile for `inspect --replan profile`)
+  rootio read --in FILE --salvage [--branch NAME | --branches A,B,C]
+               [--workers N] [--entries A..B]
+               (degraded scan of a damaged file: unreadable baskets are
+                skipped and reported as entry gaps instead of aborting;
+                always rides the parallel pipeline)
+  rootio scrub --in FILE
+               (walk the container, verify record frames and basket
+                payloads, print a damage map; exit 0 = clean, 1 = damaged
+                records found, 2 = container unreadable)
   rootio inspect --in FILE [--replan analysis|production|balanced|profile
                [--workers N] [--profile reads.profile]]
                (--replan profile replans from a recorded access profile:
@@ -160,6 +172,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "write" => cmd_write(&args),
         "read" => cmd_read(&args),
         "inspect" => cmd_inspect(&args),
+        "scrub" => cmd_scrub(&args),
         "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "dict" | "scaling" => {
             let cfg = bench_cfg(&args);
             let (out, _) = run_figure(&cmd, &cfg)?;
@@ -323,6 +336,9 @@ fn cmd_read(args: &Args) -> Result<i32> {
         .get("entries")
         .map(|s| parse_entry_range(s))
         .transpose()?;
+    // --salvage: degraded scan of a damaged file — unreadable baskets are
+    // skipped and reported as entry gaps instead of aborting the read.
+    let salvage = args.flags.contains_key("salvage");
     // --branches: the columnar projection path (multi-branch single-pass
     // scan with per-branch metrics). --entries without a branch selection
     // projects every branch over the range.
@@ -332,11 +348,15 @@ fn cmd_read(args: &Args) -> Result<i32> {
         if names.is_empty() {
             bail!("--branches needs a comma-separated list of branch names");
         }
-        return cmd_read_projection(args, &reader, &names, workers, entries);
+        return cmd_read_projection(args, &reader, &names, workers, entries, salvage);
     }
-    if entries.is_some() && !args.flags.contains_key("branch") {
+    if let Some(branch) = args.flags.get("branch") {
+        if salvage {
+            return cmd_read_branch_salvage(&reader, branch, workers, entries);
+        }
+    } else if entries.is_some() || salvage {
         let names: Vec<String> = reader.meta.branches.iter().map(|b| b.name.clone()).collect();
-        return cmd_read_projection(args, &reader, &names, workers, entries);
+        return cmd_read_projection(args, &reader, &names, workers, entries, salvage);
     }
     // Both paths answer directory queries from the same TreeMeta; only the
     // value reads dispatch to the serial oracle or the pipeline.
@@ -395,6 +415,61 @@ fn cmd_read(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `rootio scrub --in FILE`: walk the container record by record, verify
+/// every frame and basket payload, and print a damage map. Exit code is
+/// the CI contract: 0 = clean, 1 = damaged records found, 2 = container
+/// unreadable (header/trailer gone).
+fn cmd_scrub(args: &Args) -> Result<i32> {
+    let path = args
+        .flags
+        .get("in")
+        .cloned()
+        .or_else(|| args.bare.first().cloned())
+        .context("scrub needs --in FILE (or a bare path)")?;
+    let report = crate::rfile::scrub_file(&PathBuf::from(path))?;
+    println!("{}", report.render());
+    Ok(report.exit_code())
+}
+
+/// `rootio read --branch NAME --salvage [--entries A..B]`: salvage-mode
+/// single-branch read. Damaged baskets are skipped; the recovered values
+/// come back with explicit entry gaps and per-basket damage records.
+fn cmd_read_branch_salvage(
+    reader: &TreeReader,
+    branch: &str,
+    workers: usize,
+    entries: Option<(u64, u64)>,
+) -> Result<i32> {
+    // Salvage always rides the pipeline; 0/absent means default workers.
+    let workers = if workers == 0 { ReadAhead::default().workers } else { workers };
+    let par = reader.read_ahead(ReadAhead::with_workers(workers));
+    let id = reader
+        .branch_id(branch)
+        .with_context(|| format!("no branch '{branch}'"))?;
+    let (a, b) = match entries {
+        Some((a, b)) => reader.meta.clamp_entry_range(a, b),
+        None => (0, reader.meta.n_entries),
+    };
+    let t0 = std::time::Instant::now();
+    let col = par.read_range_salvage(id, a..b)?;
+    let wall = t0.elapsed();
+    println!(
+        "branch '{branch}' entries [{a}, {b}): {} values recovered, {} entries lost across {} gaps",
+        col.values.len(),
+        col.entries_skipped(),
+        col.gaps.len(),
+    );
+    for g in &col.gaps {
+        println!("  gap: entries [{}, {})", g.first_entry, g.end_entry());
+    }
+    for d in &col.damage {
+        println!("  damaged: {d}");
+    }
+    println!("{}", par.metrics_snapshot().report_decode(&format!("salvage[{workers}w]")));
+    println!("salvaged in {:.3}s", wall.as_secs_f64());
+    Ok(0)
+}
+
 /// `rootio read --branches A,B,C [--entries A..B]`: project a branch
 /// subset through one pipelined pass (offset-sorted prefetch unless
 /// `--prefetch submission` asks for the branch-major baseline), optionally
@@ -407,6 +482,7 @@ fn cmd_read_projection(
     names: &[String],
     workers: usize,
     entries: Option<(u64, u64)>,
+    salvage: bool,
 ) -> Result<i32> {
     use crate::coordinator::{PrefetchOrder, ProjectionPlan};
     use crate::runtime::ReadFeedback;
@@ -442,25 +518,47 @@ fn cmd_read_projection(
             PrefetchOrder::Submission => "submission-order baseline",
         },
     );
+    let mode = if salvage { ScanMode::Salvage } else { ScanMode::Strict };
     let t0 = std::time::Instant::now();
-    let mut proj = par.project_plan(&plan)?;
+    let mut proj = par.project_plan_with_mode(&plan, mode)?;
     let columns = proj.read_columns()?;
     let wall = t0.elapsed();
-    println!("read {} entries x {} projected branches", range_end - range_start, columns.len());
+    if salvage {
+        let lost: u64 = proj.branch_stats().iter().map(|s| s.damaged_entries).sum();
+        println!(
+            "salvaged {} projected branches over entries [{range_start}, {range_end}) \
+             ({lost} branch-entries lost to damage)",
+            columns.len(),
+        );
+    } else {
+        println!("read {} entries x {} projected branches", range_end - range_start, columns.len());
+    }
     println!(
-        "{:<28} {:>8} {:>10} {:>12} {:>12} {:>7}",
-        "branch", "baskets", "entries", "raw", "compressed", "ratio"
+        "{:<28} {:>8} {:>10} {:>12} {:>12} {:>7} {:>8} {:>8}",
+        "branch", "baskets", "entries", "raw", "compressed", "ratio", "damaged", "lost"
     );
     for st in proj.branch_stats() {
         println!(
-            "{:<28} {:>8} {:>10} {:>12} {:>12} {:>7.3}",
+            "{:<28} {:>8} {:>10} {:>12} {:>12} {:>7.3} {:>8} {:>8}",
             st.name,
             st.baskets,
             st.entries,
             st.logical_bytes,
             st.compressed_bytes,
             st.logical_bytes as f64 / st.compressed_bytes.max(1) as f64,
+            st.damaged_baskets,
+            st.damaged_entries,
         );
+    }
+    if salvage {
+        for (slot, name) in names.iter().enumerate() {
+            for g in proj.branch_gaps(slot) {
+                println!("  gap in '{name}': entries [{}, {})", g.first_entry, g.end_entry());
+            }
+        }
+        for d in proj.damage() {
+            println!("  damaged: {d}");
+        }
     }
     println!("{}", par.metrics_snapshot().report_decode(&format!("projection[{workers}w]")));
     let bytes = plan.logical_bytes() as f64;

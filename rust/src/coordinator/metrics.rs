@@ -17,6 +17,10 @@ pub struct Metrics {
     /// Latency histogram buckets (basket compress time): <100us, <1ms,
     /// <10ms, <100ms, >=100ms.
     pub lat_buckets: [AtomicU64; 5],
+    /// Transient read failures that were retried by the read pipeline's
+    /// [`RetryPolicy`](crate::rfile::RetryPolicy) layer (0 on the write
+    /// path and whenever retries are disabled).
+    pub read_retries: AtomicU64,
 }
 
 impl Metrics {
@@ -40,6 +44,13 @@ impl Metrics {
         self.lat_buckets[idx].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Fold retry attempts observed by a scan's retry layer into the
+    /// counters. `store` (not add): callers pass the cumulative value of
+    /// a per-reader counter, so re-snapshotting stays idempotent.
+    pub fn set_read_retries(&self, n: u64) {
+        self.read_retries.store(n, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             baskets: self.baskets.load(Ordering::Relaxed),
@@ -55,6 +66,7 @@ impl Metrics {
                 self.lat_buckets[3].load(Ordering::Relaxed),
                 self.lat_buckets[4].load(Ordering::Relaxed),
             ],
+            read_retries: self.read_retries.load(Ordering::Relaxed),
         }
     }
 }
@@ -69,6 +81,9 @@ pub struct Snapshot {
     pub commit_nanos: u64,
     pub analyze_nanos: u64,
     pub lat_buckets: [u64; 5],
+    /// Transient read failures retried by the read path (see
+    /// [`Metrics::read_retries`]).
+    pub read_retries: u64,
 }
 
 impl Snapshot {
@@ -99,8 +114,13 @@ impl Snapshot {
     }
 
     fn report_kind(&self, label: &str, verb: &str) -> String {
+        let retries = if self.read_retries > 0 {
+            format!(" read-retries={}", self.read_retries)
+        } else {
+            String::new()
+        };
         format!(
-            "{label}: baskets={} in={:.2}MB out={:.2}MB ratio={:.3} cpu-{verb}={:.1}ms ({:.1} MB/s/worker) lat[<.1ms,<1ms,<10ms,<100ms,>=]={:?}",
+            "{label}: baskets={} in={:.2}MB out={:.2}MB ratio={:.3} cpu-{verb}={:.1}ms ({:.1} MB/s/worker) lat[<.1ms,<1ms,<10ms,<100ms,>=]={:?}{retries}",
             self.baskets,
             self.bytes_in as f64 / 1e6,
             self.bytes_out as f64 / 1e6,
@@ -127,5 +147,18 @@ mod tests {
         assert_eq!(s.lat_buckets[0], 1);
         assert_eq!(s.lat_buckets[2], 1);
         assert!(s.compress_mbps() > 0.0);
+    }
+
+    #[test]
+    fn read_retries_surface_in_snapshot_and_report() {
+        let m = Metrics::new();
+        m.record_basket(100, 50, Duration::from_micros(10));
+        assert_eq!(m.snapshot().read_retries, 0);
+        assert!(!m.snapshot().report_decode("x").contains("read-retries"));
+        m.set_read_retries(7);
+        m.set_read_retries(7); // idempotent: cumulative store, not add
+        let s = m.snapshot();
+        assert_eq!(s.read_retries, 7);
+        assert!(s.report_decode("x").contains("read-retries=7"));
     }
 }

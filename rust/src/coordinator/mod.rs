@@ -17,4 +17,6 @@ pub use pipeline::{write_tree_parallel, ParallelSink, PipelineConfig};
 pub use projection::{
     BranchReadStats, PrefetchOrder, ProjectionPlan, ProjectionReader, ProjectionScan, RowBatch,
 };
-pub use read_pipeline::{BasketScan, ParallelTreeReader, ReadAhead};
+pub use read_pipeline::{
+    BasketScan, DamageRecord, Delivery, ParallelTreeReader, ReadAhead, SalvageColumn, ScanMode,
+};

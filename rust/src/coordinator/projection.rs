@@ -48,12 +48,12 @@
 
 use crate::rfile::basket::BasketContent;
 use crate::rfile::branch::{BranchType, Value};
-use crate::rfile::meta::{BasketLoc, TreeMeta};
+use crate::rfile::meta::{push_gap, BasketLoc, GapSpan, TreeMeta};
 use crate::rfile::reader::decode_values;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
-use super::read_pipeline::{BasketScan, ParallelTreeReader};
+use super::read_pipeline::{BasketScan, DamageRecord, Delivery, ParallelTreeReader, ScanMode};
 
 /// Order in which a projection's merged basket list is handed to the
 /// prefetcher.
@@ -202,7 +202,9 @@ impl ProjectionPlan {
     }
 }
 
-/// Per-slot reorder state: baskets of one projected branch.
+/// Per-slot reorder state: baskets of one projected branch. Salvage scans
+/// park damage markers (`None` content) alongside intact baskets so the
+/// per-branch index sequence stays contiguous even across casualties.
 struct SlotState {
     branch_id: u32,
     /// Next basket_index to deliver for this branch.
@@ -212,7 +214,7 @@ struct SlotState {
     /// a branch's baskets sit at increasing offsets, so both sorts preserve
     /// each per-branch subsequence — but the reorder keeps delivery correct
     /// for *any* plan permutation.
-    parked: BTreeMap<u32, (BasketLoc, BasketContent)>,
+    parked: BTreeMap<u32, (BasketLoc, Option<BasketContent>)>,
 }
 
 /// Multi-branch scan: wraps the PR-3 [`BasketScan`] and re-routes its
@@ -223,8 +225,9 @@ pub struct ProjectionScan {
     scan: BasketScan,
     slots: Vec<SlotState>,
     slot_of: HashMap<u32, usize>,
-    /// Baskets unblocked by the last arrival, not yet handed out.
-    ready: VecDeque<(usize, BasketLoc, BasketContent)>,
+    /// Baskets unblocked by the last arrival, not yet handed out. `None`
+    /// content is a salvage-mode damage marker.
+    ready: VecDeque<(usize, BasketLoc, Option<BasketContent>)>,
     /// Set after a terminal error so the stream ends instead of re-erroring.
     failed: bool,
 }
@@ -252,10 +255,13 @@ impl ProjectionScan {
         Self { scan, slots, slot_of, ready: VecDeque::new(), failed: false }
     }
 
-    /// Next basket in per-branch order (see type docs), or `None` when the
-    /// plan is exhausted. Decode errors surface on the basket that failed,
-    /// exactly like [`BasketScan::next_basket`].
-    pub fn next_basket(&mut self) -> Option<Result<(usize, BasketLoc, BasketContent)>> {
+    /// Next delivery in per-branch order: `(slot, loc, Some(content))` for
+    /// an intact basket, `(slot, loc, None)` for a salvage-mode damage
+    /// marker (strict scans never produce one — damage is an `Err` there).
+    /// `None` when the plan is exhausted.
+    pub fn next_delivery(
+        &mut self,
+    ) -> Option<Result<(usize, BasketLoc, Option<BasketContent>)>> {
         if self.failed {
             return None;
         }
@@ -263,7 +269,7 @@ impl ProjectionScan {
             if let Some(item) = self.ready.pop_front() {
                 return Some(Ok(item));
             }
-            match self.scan.next_basket() {
+            match self.scan.next_delivery() {
                 None => {
                     if self.slots.iter().any(|s| !s.parked.is_empty()) {
                         self.failed = true;
@@ -278,7 +284,11 @@ impl ProjectionScan {
                     self.failed = true;
                     return Some(Err(e));
                 }
-                Some(Ok((loc, content))) => {
+                Some(Ok(delivery)) => {
+                    let (loc, content) = match delivery {
+                        Delivery::Basket(loc, content) => (loc, Some(content)),
+                        Delivery::Damaged(rec) => (rec.loc, None),
+                    };
                     let Some(&slot) = self.slot_of.get(&loc.branch_id) else {
                         self.failed = true;
                         return Some(Err(anyhow!(
@@ -315,6 +325,21 @@ impl ProjectionScan {
         }
     }
 
+    /// Next intact basket in per-branch order (see type docs), or `None`
+    /// when the plan is exhausted. Decode errors surface on the basket that
+    /// failed, exactly like [`BasketScan::next_basket`]; salvage-mode
+    /// damage markers are skipped (use
+    /// [`next_delivery`](ProjectionScan::next_delivery) to observe them).
+    pub fn next_basket(&mut self) -> Option<Result<(usize, BasketLoc, BasketContent)>> {
+        loop {
+            match self.next_delivery()? {
+                Ok((slot, loc, Some(content))) => return Some(Ok((slot, loc, content))),
+                Ok((_, _, None)) => continue,
+                Err(e) => return Some(Err(e)),
+            }
+        }
+    }
+
     /// Return a consumed basket's buffers to the underlying scan's pools
     /// (see [`BasketScan::recycle`]).
     pub fn recycle(&self, content: BasketContent) {
@@ -324,6 +349,17 @@ impl ProjectionScan {
     /// Branch id behind a delivery slot.
     pub fn branch_id(&self, slot: usize) -> u32 {
         self.slots[slot].branch_id
+    }
+
+    /// The underlying scan's failure-handling mode.
+    pub fn mode(&self) -> ScanMode {
+        self.scan.mode()
+    }
+
+    /// Damage reports from the underlying scan (salvage mode; read-level
+    /// damage only — decode-level casualties are tracked by the reader).
+    pub fn damage(&self) -> &[DamageRecord] {
+        self.scan.damage()
     }
 }
 
@@ -336,6 +372,11 @@ pub struct BranchReadStats {
     pub entries: u64,
     pub compressed_bytes: u64,
     pub logical_bytes: u64,
+    /// Baskets skipped as unreadable/undecodable (salvage mode only;
+    /// always 0 in strict mode, where damage fails the projection).
+    pub damaged_baskets: u64,
+    /// Entries lost to damaged baskets, clamped to the projection window.
+    pub damaged_entries: u64,
 }
 
 /// An aligned batch of projected rows: `rows[i][slot]` is the value of the
@@ -404,6 +445,25 @@ pub struct ProjectionReader {
     /// `bufs`, so continuing would emit misaligned rows. The stream ends
     /// instead.
     failed: bool,
+    /// First terminal error (`{:#}` formatted), cited by later calls so
+    /// "projection already failed" says *what* failed.
+    fail_context: Option<String>,
+    /// Salvage-only state below; all empty/zero in strict mode.
+    /// Per-slot run-length segments of the entry stream: `(rows, present)`
+    /// — present rows are backed by `bufs`, absent rows were lost to
+    /// damage. Aligned across slots by construction (every basket covers
+    /// its directory span, damaged or not).
+    segs: Vec<VecDeque<(u64, bool)>>,
+    /// Row-level gaps (absolute entry ids): spans where at least one
+    /// projected branch was damaged, merged when adjacent.
+    gaps: Vec<GapSpan>,
+    /// Per-slot gaps (absolute entry ids) for column-shaped salvage reads.
+    slot_gaps: Vec<Vec<GapSpan>>,
+    /// Decode-level casualties found by this reader (read-level ones live
+    /// in the scan).
+    local_damage: Vec<DamageRecord>,
+    /// Entries dropped from the row stream because some slot was damaged.
+    skipped: u64,
 }
 
 impl ProjectionReader {
@@ -419,6 +479,8 @@ impl ProjectionReader {
             })
             .collect();
         let bufs = branch_ids.iter().map(|_| VecDeque::new()).collect();
+        let segs = branch_ids.iter().map(|_| VecDeque::new()).collect();
+        let slot_gaps = branch_ids.iter().map(|_| Vec::new()).collect();
         let (start, end) = match plan.entry_range() {
             None => (0, meta.n_entries),
             Some((a, b)) => meta.clamp_entry_range(a, b),
@@ -435,6 +497,19 @@ impl ProjectionReader {
             emitted: 0,
             max_batch_rows: None,
             failed: false,
+            fail_context: None,
+            segs,
+            gaps: Vec::new(),
+            slot_gaps,
+            local_damage: Vec::new(),
+            skipped: 0,
+        }
+    }
+
+    fn latch_failure(&mut self, e: &anyhow::Error) {
+        self.failed = true;
+        if self.fail_context.is_none() {
+            self.fail_context = Some(format!("{e:#}"));
         }
     }
 
@@ -470,14 +545,33 @@ impl ProjectionReader {
         st.logical_bytes += (content.data.len() + 4 * content.offsets.len()) as u64;
     }
 
+    /// Entries consumed from the window so far (emitted rows plus, in
+    /// salvage mode, rows dropped to damage).
+    fn consumed(&self) -> u64 {
+        self.emitted + self.skipped
+    }
+
     /// Pull baskets until every projected branch has at least one pending
     /// value, then emit the aligned rows. `None` once all entries are out.
-    /// An error is terminal: the failed basket's values never reached the
-    /// column buffers, so the stream ends (further calls return `None`)
-    /// rather than emitting misaligned rows.
+    ///
+    /// Strict mode: an error is terminal — the failed basket's values never
+    /// reached the column buffers, so the stream ends (further calls return
+    /// `None`) rather than emitting misaligned rows.
+    ///
+    /// Salvage mode: entry spans where *any* projected branch is damaged
+    /// are dropped from the row stream and reported as [`GapSpan`]s
+    /// ([`ProjectionReader::gaps`]); batches still carry absolute
+    /// `first_entry` ids, so consumers see exactly where the holes are.
     pub fn next_batch(&mut self) -> Option<Result<RowBatch>> {
-        if self.failed || self.emitted >= self.n_entries {
+        if self.failed || self.consumed() >= self.n_entries {
             return None;
+        }
+        if self.scan.mode() == ScanMode::Salvage {
+            let r = self.next_batch_salvage();
+            if let Some(Err(e)) = &r {
+                self.latch_failure(e);
+            }
+            return r;
         }
         loop {
             let avail = self.bufs.iter().map(|b| b.len()).min().unwrap_or(0);
@@ -489,7 +583,7 @@ impl ProjectionReader {
                     self.value_scratch.clear();
                     if let Err(e) = decode_values(&content, self.types[slot], &mut self.value_scratch)
                     {
-                        self.failed = true;
+                        self.latch_failure(&e);
                         return Some(Err(e));
                     }
                     self.note_basket(slot, &loc, &content);
@@ -500,17 +594,149 @@ impl ProjectionReader {
                     self.bufs[slot].extend(self.value_scratch.drain(..to).skip(from));
                 }
                 Some(Err(e)) => {
-                    self.failed = true;
+                    self.latch_failure(&e);
                     return Some(Err(e));
                 }
                 None => {
-                    self.failed = true;
-                    return Some(Err(anyhow!(
+                    let e = anyhow!(
                         "projection scan ended after {} of {} entries",
                         self.emitted,
                         self.n_entries
+                    );
+                    self.latch_failure(&e);
+                    return Some(Err(e));
+                }
+            }
+        }
+    }
+
+    /// Salvage-mode batch loop over the per-slot run-length segments: a
+    /// chunk (the min front-segment length across slots) where every slot
+    /// is present becomes a row batch; a chunk where any slot is absent
+    /// becomes a gap (present slots' values for it are discarded — rows
+    /// need all slots).
+    fn next_batch_salvage(&mut self) -> Option<Result<RowBatch>> {
+        loop {
+            while !self.segs.is_empty() && self.segs.iter().all(|s| !s.is_empty()) {
+                let chunk = self.segs.iter().map(|s| s.front().unwrap().0).min().unwrap();
+                let all_present = self.segs.iter().all(|s| s.front().unwrap().1);
+                if all_present {
+                    let take = match self.max_batch_rows {
+                        Some(cap) => chunk.min(cap as u64),
+                        None => chunk,
+                    };
+                    self.consume_segments(take);
+                    return Some(Ok(self.emit_rows(take as usize)));
+                }
+                // Damaged chunk: drop what the intact slots decoded for it.
+                for (slot, segs) in self.segs.iter_mut().enumerate() {
+                    if segs.front().unwrap().1 {
+                        self.bufs[slot].drain(..chunk as usize);
+                    }
+                }
+                let first_entry = self.start + self.consumed();
+                self.consume_segments(chunk);
+                push_gap(&mut self.gaps, GapSpan { first_entry, n_entries: chunk });
+                self.skipped += chunk;
+                if self.consumed() >= self.n_entries {
+                    return None;
+                }
+            }
+            match self.pull_salvage() {
+                Err(e) => return Some(Err(e)),
+                Ok(true) => {}
+                Ok(false) => {
+                    if self.consumed() >= self.n_entries {
+                        return None;
+                    }
+                    return Some(Err(anyhow!(
+                        "projection scan ended after {} of {} entries ({} skipped as damaged)",
+                        self.emitted,
+                        self.n_entries,
+                        self.skipped
                     )));
                 }
+            }
+        }
+    }
+
+    /// Subtract `n` rows from the front segment of every slot, popping
+    /// exhausted segments.
+    fn consume_segments(&mut self, n: u64) {
+        for segs in self.segs.iter_mut() {
+            let front = segs.front_mut().expect("consume with a front segment per slot");
+            debug_assert!(front.0 >= n);
+            front.0 -= n;
+            if front.0 == 0 {
+                segs.pop_front();
+            }
+        }
+    }
+
+    /// Append a `(rows, present)` run to a slot's segment queue, merging
+    /// with the tail when the presence flag matches.
+    fn push_seg(&mut self, slot: usize, rows: u64, present: bool) {
+        if rows == 0 {
+            return;
+        }
+        if let Some(tail) = self.segs[slot].back_mut() {
+            if tail.1 == present {
+                tail.0 += rows;
+                return;
+            }
+        }
+        self.segs[slot].push_back((rows, present));
+    }
+
+    /// Record a damaged basket against its slot's stats and gap list.
+    fn note_damage(&mut self, slot: usize, loc: &BasketLoc) {
+        if let Some(g) = loc.gap_within(self.start, self.end) {
+            self.stats[slot].damaged_baskets += 1;
+            self.stats[slot].damaged_entries += g.n_entries;
+            push_gap(&mut self.slot_gaps[slot], g);
+        }
+    }
+
+    /// Pull one delivery in salvage mode, updating buffers, segments,
+    /// stats, and damage lists. `Ok(false)` = plan exhausted.
+    fn pull_salvage(&mut self) -> Result<bool> {
+        match self.scan.next_delivery() {
+            None => Ok(false),
+            Some(Err(e)) => Err(e),
+            Some(Ok((slot, loc, maybe_content))) => {
+                let (from, to) = loc.trim_bounds(self.start, self.end);
+                let rows = (to - from) as u64;
+                match maybe_content {
+                    Some(content) => {
+                        self.value_scratch.clear();
+                        match decode_values(&content, self.types[slot], &mut self.value_scratch) {
+                            Ok(()) => {
+                                self.note_basket(slot, &loc, &content);
+                                self.bufs[slot].extend(self.value_scratch.drain(..to).skip(from));
+                                self.push_seg(slot, rows, true);
+                            }
+                            Err(e) => {
+                                // Decompressed fine but the payload is
+                                // structurally corrupt: a decode-level
+                                // casualty, same treatment as a read-level
+                                // one.
+                                self.local_damage.push(DamageRecord {
+                                    loc,
+                                    branch: self.stats[slot].name.clone(),
+                                    error: format!("{e:#}"),
+                                });
+                                self.note_damage(slot, &loc);
+                                self.push_seg(slot, rows, false);
+                            }
+                        }
+                        self.scan.recycle(content);
+                    }
+                    None => {
+                        self.note_damage(slot, &loc);
+                        self.push_seg(slot, rows, false);
+                    }
+                }
+                Ok(true)
             }
         }
     }
@@ -519,8 +745,9 @@ impl ProjectionReader {
         if let Some(cap) = self.max_batch_rows {
             avail = avail.min(cap);
         }
-        // Absolute entry id: offset by the window start for sliced reads.
-        let first_entry = self.start + self.emitted;
+        // Absolute entry id: offset by the window start for sliced reads
+        // (and by skipped damage spans in salvage mode).
+        let first_entry = self.start + self.consumed();
         let k = self.bufs.len();
         let mut rows: Vec<Vec<Value>> = (0..avail).map(|_| Vec::with_capacity(k)).collect();
         for buf in self.bufs.iter_mut() {
@@ -532,6 +759,35 @@ impl ProjectionReader {
         RowBatch { first_entry, rows }
     }
 
+    /// Row-level gaps (absolute entry ids) dropped from the batch stream so
+    /// far: spans where at least one projected branch was damaged. Salvage
+    /// mode only; always empty in strict mode. Complete once the batch
+    /// stream is drained.
+    pub fn gaps(&self) -> &[GapSpan] {
+        &self.gaps
+    }
+
+    /// Per-branch gaps (absolute entry ids) for projection slot `slot` —
+    /// finer-grained than [`gaps`](ProjectionReader::gaps), which unions
+    /// the slots.
+    pub fn branch_gaps(&self, slot: usize) -> &[GapSpan] {
+        &self.slot_gaps[slot]
+    }
+
+    /// Entries dropped from the row stream because some projected branch
+    /// was damaged there (salvage mode only).
+    pub fn entries_skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    /// All damage observed so far: read-level casualties from the scan,
+    /// then decode-level ones found by this reader.
+    pub fn damage(&self) -> Vec<DamageRecord> {
+        let mut all = self.scan.damage().to_vec();
+        all.extend(self.local_damage.iter().cloned());
+        all
+    }
+
     /// Drain the projection into whole per-branch columns (event order, one
     /// `Vec<Value>` per projected branch, in projection order). Covers the
     /// window entries not yet emitted through
@@ -539,15 +795,66 @@ impl ProjectionReader {
     /// projection window's entry count (the whole tree unless the plan was
     /// sliced). Errors are terminal, like
     /// [`ProjectionReader::next_batch`]'s.
+    ///
+    /// Salvage mode: each branch's column holds its *intact* values only
+    /// (damaged entries elided per branch), so columns may differ in
+    /// length; [`branch_gaps`](ProjectionReader::branch_gaps) says which
+    /// absolute entries each column is missing. Requires a fresh reader
+    /// (no batches emitted yet).
     pub fn read_columns(&mut self) -> Result<Vec<Vec<Value>>> {
         if self.failed {
-            bail!("projection already failed; open a new projection to retry");
+            match &self.fail_context {
+                Some(ctx) => bail!(
+                    "projection already failed ({ctx}); open a new projection to retry"
+                ),
+                None => bail!("projection already failed; open a new projection to retry"),
+            }
         }
-        let r = self.read_columns_inner();
-        if r.is_err() {
-            self.failed = true;
+        let r = if self.scan.mode() == ScanMode::Salvage {
+            self.read_columns_salvage()
+        } else {
+            self.read_columns_inner()
+        };
+        if let Err(e) = &r {
+            self.latch_failure(e);
         }
         r
+    }
+
+    /// Salvage-mode column drain: per-branch intact values, per-branch gap
+    /// accounting, no row alignment.
+    fn read_columns_salvage(&mut self) -> Result<Vec<Vec<Value>>> {
+        if self.emitted > 0 || self.skipped > 0 || self.bufs.iter().any(|b| !b.is_empty()) {
+            bail!(
+                "salvage read_columns needs a fresh projection: {} entries already pulled \
+                 through the batch stream",
+                self.consumed()
+            );
+        }
+        while self.pull_salvage()? {}
+        let mut columns: Vec<Vec<Value>> = Vec::with_capacity(self.bufs.len());
+        for b in self.bufs.iter_mut() {
+            columns.push(b.drain(..).collect());
+        }
+        for (slot, col) in columns.iter().enumerate() {
+            let expect = self.n_entries - self.stats[slot].damaged_entries;
+            if col.len() as u64 != expect {
+                bail!(
+                    "branch {} ('{}'): {} intact entries decoded, expected {expect} \
+                     ({} damaged of {})",
+                    self.stats[slot].branch_id,
+                    self.stats[slot].name,
+                    col.len(),
+                    self.stats[slot].damaged_entries,
+                    self.n_entries
+                );
+            }
+        }
+        // The column drain bypasses the row stream; mark the window
+        // consumed so next_batch() reports exhaustion, not a truncated scan.
+        self.emitted = self.n_entries;
+        self.segs.iter_mut().for_each(|s| s.clear());
+        Ok(columns)
     }
 
     fn read_columns_inner(&mut self) -> Result<Vec<Vec<Value>>> {
@@ -622,7 +929,33 @@ impl ParallelTreeReader {
     /// prefetch order, slice an entry range, inspect the sweep, reuse a
     /// plan across readers).
     pub fn project_plan(&self, plan: &ProjectionPlan) -> Result<ProjectionReader> {
-        let scan = self.scan(plan.locs().to_vec())?;
+        self.project_plan_with_mode(plan, ScanMode::Strict)
+    }
+
+    /// [`project`](Self::project) with an explicit failure-handling mode.
+    /// [`ScanMode::Salvage`] turns damaged baskets into reported gaps
+    /// instead of errors — see [`ProjectionReader::gaps`],
+    /// [`ProjectionReader::damage`].
+    pub fn project_with_mode(&self, branches: &[&str], mode: ScanMode) -> Result<ProjectionReader> {
+        let ids = ProjectionPlan::resolve_names(&self.meta, branches)?;
+        let plan = ProjectionPlan::new(&self.meta, &ids, PrefetchOrder::FileOffset)?;
+        self.project_plan_with_mode(&plan, mode)
+    }
+
+    /// Convenience for
+    /// [`project_with_mode`](Self::project_with_mode)`(branches, ScanMode::Salvage)`.
+    pub fn project_salvage(&self, branches: &[&str]) -> Result<ProjectionReader> {
+        self.project_with_mode(branches, ScanMode::Salvage)
+    }
+
+    /// [`project_plan`](Self::project_plan) with an explicit
+    /// failure-handling mode.
+    pub fn project_plan_with_mode(
+        &self,
+        plan: &ProjectionPlan,
+        mode: ScanMode,
+    ) -> Result<ProjectionReader> {
+        let scan = self.scan_with_mode(plan.locs().to_vec(), mode)?;
         Ok(ProjectionReader::new(ProjectionScan::new(scan, plan), &self.meta, plan))
     }
 
@@ -843,6 +1176,94 @@ mod tests {
         assert_eq!(entry, b);
         assert_eq!(proj.entries_emitted(), b - a);
         assert!(proj.next_batch().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn salvage_projection_skips_damaged_spans() {
+        let path = tmp("salvage_proj");
+        let events = synthetic::events(400, 0x5A17);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Zstd, 1),
+            1024,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        let probe = TreeReader::open(&path).unwrap();
+        let names = ["px", "nTrack"];
+        let ids = ProjectionPlan::resolve_names(&probe.meta, &names).unwrap();
+        let victim = probe.meta.baskets_for(ids[0])[1];
+        let n = probe.meta.n_entries;
+        // Flip bits in the basket's identity varint: deterministic damage
+        // regardless of codec.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[victim.file_offset as usize + 5] ^= 0x3F;
+        std::fs::write(&path, bytes).unwrap();
+
+        let par = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 2 }).unwrap();
+
+        // Strict projection fails citing branch + offset; the latch then
+        // repeats that context on the next call.
+        let mut strict = par.project(&names).unwrap();
+        let err = strict.read_columns().unwrap_err().to_string();
+        assert!(err.contains("branch 'px'"), "{err}");
+        assert!(err.contains(&format!("file offset {}", victim.file_offset)), "{err}");
+        let latched = strict.read_columns().unwrap_err().to_string();
+        assert!(latched.contains("projection already failed ("), "{latched}");
+        assert!(latched.contains("px"), "{latched}");
+
+        // Salvage batches: the victim's span drops out of the row stream
+        // and is reported as a gap with absolute entry ids.
+        let hole = victim.first_entry..victim.first_entry + victim.n_entries as u64;
+        let mut proj = par.project_salvage(&names).unwrap();
+        let mut seen = Vec::new();
+        while let Some(batch) = proj.next_batch() {
+            let batch = batch.unwrap();
+            for (i, row) in batch.rows.iter().enumerate() {
+                seen.push((batch.first_entry + i as u64, row.clone()));
+            }
+        }
+        let expected: Vec<(u64, Vec<Value>)> = (0..n)
+            .filter(|e| !hole.contains(e))
+            .map(|e| {
+                let ev = &events[e as usize];
+                (e, vec![ev[ids[0] as usize].clone(), ev[ids[1] as usize].clone()])
+            })
+            .collect();
+        assert_eq!(seen, expected);
+        assert_eq!(
+            proj.gaps(),
+            &[GapSpan { first_entry: hole.start, n_entries: victim.n_entries as u64 }]
+        );
+        assert_eq!(proj.entries_skipped(), victim.n_entries as u64);
+        let damage = proj.damage();
+        assert_eq!(damage.len(), 1);
+        assert_eq!(damage[0].branch, "px");
+        let st = &proj.branch_stats()[0];
+        assert_eq!((st.damaged_baskets, st.damaged_entries), (1, victim.n_entries as u64));
+        assert_eq!(proj.branch_gaps(0), proj.gaps());
+        assert!(proj.branch_gaps(1).is_empty());
+
+        // Salvage columns (fresh reader): per-branch intact values, so the
+        // damaged branch's column is shorter.
+        let mut proj2 = par.project_salvage(&names).unwrap();
+        let cols = proj2.read_columns().unwrap();
+        assert_eq!(cols[0].len() as u64, n - victim.n_entries as u64);
+        assert_eq!(cols[1].len() as u64, n);
+        let intact: Vec<Value> = (0..n)
+            .filter(|e| !hole.contains(e))
+            .map(|e| events[e as usize][ids[0] as usize].clone())
+            .collect();
+        assert_eq!(cols[0], intact);
+
+        // Mixing batch reads with a salvage column drain is rejected.
+        let mut proj3 = par.project_salvage(&names).unwrap();
+        proj3.set_max_batch_rows(5);
+        let _ = proj3.next_batch().unwrap().unwrap();
+        assert!(proj3.read_columns().is_err());
         std::fs::remove_file(&path).ok();
     }
 

@@ -44,21 +44,35 @@
 //! several branches' directories into one offset-sorted prefetch plan and
 //! re-routes this pipeline's submission-order delivery back into per-branch
 //! event-order streams.
+//!
+//! The prefetcher reads through the [`RangeSource`] seam
+//! ([`crate::rfile::source`]): a plain [`FileSource`] in production,
+//! optionally wrapped by a deterministic [`FaultSource`] (test substrate)
+//! and a [`RetrySource`] that transparently replays *transient* failures
+//! with bounded exponential backoff ([`ParallelTreeReader::with_retry`]).
+//! On top of that sits [`ScanMode::Salvage`]: instead of failing the scan,
+//! a permanently-unreadable or checksum-rejected basket is skipped and
+//! reported as a [`DamageRecord`], and degraded branch reads
+//! ([`ParallelTreeReader::read_branch_salvage`]) return the intact values
+//! plus explicit [`GapSpan`]s for what was lost.
 
 use crate::compression::Engine;
 use crate::coordinator::metrics::{Metrics, Snapshot};
 use crate::rfile::basket::{decode_basket_into, BasketContent};
-use crate::rfile::format::{self, RecordKind};
-use crate::rfile::meta::{BasketLoc, TreeMeta};
+use crate::rfile::format::RecordKind;
+use crate::rfile::meta::{push_gap, BasketLoc, GapSpan, TreeMeta};
 use crate::rfile::reader::{decode_values, TreeReader};
 use crate::rfile::branch::Value;
+use crate::rfile::source::{
+    read_record_from, FaultSource, FaultSpec, FaultStats, FileSource, RangeSource, RetryPolicy,
+    RetrySource,
+};
 use crate::util::pool::{BufferPool, OffsetPool};
 use crate::util::varint::Cursor;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
-use std::fs::File;
-use std::io::BufReader;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -94,6 +108,75 @@ impl ReadAhead {
     }
 }
 
+/// How a scan treats a basket that cannot be read or decoded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScanMode {
+    /// A damaged basket fails the scan — identical to the serial reader's
+    /// behaviour (the default).
+    #[default]
+    Strict,
+    /// Damaged baskets are skipped and reported: the scan delivers every
+    /// basket that is still intact plus a [`DamageRecord`] per casualty,
+    /// so a partially-corrupted file still yields its readable data.
+    Salvage,
+}
+
+/// One unreadable or undecodable basket observed by a scan.
+#[derive(Debug, Clone)]
+pub struct DamageRecord {
+    /// Directory entry of the damaged basket.
+    pub loc: BasketLoc,
+    /// Branch name, resolved from the tree metadata.
+    pub branch: String,
+    /// The underlying read/decode error.
+    pub error: String,
+}
+
+impl std::fmt::Display for DamageRecord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "basket {} of branch '{}' (id {}) at file offset {}: {}",
+            self.loc.basket_index,
+            self.branch,
+            self.loc.branch_id,
+            self.loc.file_offset,
+            self.error
+        )
+    }
+}
+
+/// One item from [`BasketScan::next_delivery`], in submission order.
+pub enum Delivery {
+    /// An intact, decoded basket.
+    Basket(BasketLoc, BasketContent),
+    /// A damaged basket's report (salvage mode only — strict scans turn
+    /// damage into an `Err` instead).
+    Damaged(DamageRecord),
+}
+
+/// Result of a degraded (salvage-mode) branch read: every decodable value
+/// in entry order, plus explicit gap spans (absolute entry ids) where
+/// damaged baskets used to be, plus the damage reports themselves.
+/// Invariant: `values.len() + entries_skipped()` equals the number of
+/// entries the equivalent strict read would have returned.
+#[derive(Debug, Clone)]
+pub struct SalvageColumn {
+    /// Values from intact baskets, in entry order (gaps elided).
+    pub values: Vec<Value>,
+    /// Entry spans lost to damage, sorted, merged when adjacent.
+    pub gaps: Vec<GapSpan>,
+    /// Per-basket damage reports, in delivery order.
+    pub damage: Vec<DamageRecord>,
+}
+
+impl SalvageColumn {
+    /// Entries lost to damage (the sum of the gap spans).
+    pub fn entries_skipped(&self) -> u64 {
+        self.gaps.iter().map(|g| g.n_entries).sum()
+    }
+}
+
 /// A raw basket record travelling prefetcher → worker. The payload is the
 /// record body read at `loc.file_offset` (rented from the raw-buffer pool);
 /// prefetch-side failures travel as `Err` so they surface in delivery order.
@@ -120,6 +203,9 @@ pub struct BasketScan {
     pending: BTreeMap<u64, Done>,
     next_seq: u64,
     total: u64,
+    mode: ScanMode,
+    branch_names: Arc<Vec<String>>,
+    damage: Vec<DamageRecord>,
     prefetcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     data_pool: BufferPool,
@@ -127,10 +213,13 @@ pub struct BasketScan {
 }
 
 impl BasketScan {
-    /// Next basket in submission order, or `None` when the scan is done.
-    /// Worker and prefetcher failures surface here, on the basket whose
-    /// decode failed, exactly like the serial reader's per-basket errors.
-    pub fn next_basket(&mut self) -> Option<Result<(BasketLoc, BasketContent)>> {
+    /// Next delivery in submission order: an intact basket, or (salvage
+    /// mode) a damage report. `None` when the scan is done. In strict mode
+    /// a damaged basket surfaces as `Err` — on the basket whose decode
+    /// failed, exactly like the serial reader's per-basket errors — and
+    /// the scan continues with the next basket afterwards; only a dead
+    /// worker pool is terminal.
+    pub fn next_delivery(&mut self) -> Option<Result<Delivery>> {
         if self.next_seq >= self.total {
             self.join_threads();
             return None;
@@ -139,13 +228,22 @@ impl BasketScan {
             if let Some(d) = self.pending.remove(&self.next_seq) {
                 self.next_seq += 1;
                 return Some(match d.result {
-                    Ok(c) => Ok((d.loc, c)),
-                    Err(e) => Err(anyhow::anyhow!(
-                        "basket ({},{}) at offset {}: {e}",
-                        d.loc.branch_id,
-                        d.loc.basket_index,
-                        d.loc.file_offset
-                    )),
+                    Ok(c) => Ok(Delivery::Basket(d.loc, c)),
+                    Err(e) => {
+                        let branch = self
+                            .branch_names
+                            .get(d.loc.branch_id as usize)
+                            .cloned()
+                            .unwrap_or_else(|| format!("#{}", d.loc.branch_id));
+                        let rec = DamageRecord { loc: d.loc, branch, error: e };
+                        match self.mode {
+                            ScanMode::Strict => Err(anyhow::anyhow!("{rec}")),
+                            ScanMode::Salvage => {
+                                self.damage.push(rec.clone());
+                                Ok(Delivery::Damaged(rec))
+                            }
+                        }
+                    }
                 });
             }
             let recv = match self.done_rx.as_ref() {
@@ -172,6 +270,35 @@ impl BasketScan {
                 }
             }
         }
+    }
+
+    /// Next intact basket in submission order, or `None` when the scan is
+    /// done. In salvage mode damaged baskets are silently skipped here
+    /// (inspect them via [`BasketScan::damage`]); in strict mode they
+    /// surface as `Err`.
+    pub fn next_basket(&mut self) -> Option<Result<(BasketLoc, BasketContent)>> {
+        loop {
+            match self.next_delivery()? {
+                Ok(Delivery::Basket(loc, content)) => return Some(Ok((loc, content))),
+                Ok(Delivery::Damaged(_)) => continue,
+                Err(e) => return Some(Err(e)),
+            }
+        }
+    }
+
+    /// Damage reports accumulated so far (always empty in strict mode).
+    pub fn damage(&self) -> &[DamageRecord] {
+        &self.damage
+    }
+
+    /// Take ownership of the accumulated damage reports.
+    pub fn take_damage(&mut self) -> Vec<DamageRecord> {
+        std::mem::take(&mut self.damage)
+    }
+
+    /// The scan's failure-handling mode.
+    pub fn mode(&self) -> ScanMode {
+        self.mode
     }
 
     /// Return a consumed basket's buffers to the scan's pools so the next
@@ -245,6 +372,10 @@ pub struct ParallelTreeReader {
     dictionary: Vec<u8>,
     config: ReadAhead,
     metrics: Arc<Metrics>,
+    retry: RetryPolicy,
+    faults: Option<FaultSpec>,
+    fault_stats: Arc<FaultStats>,
+    retry_counter: Arc<AtomicU64>,
 }
 
 impl ParallelTreeReader {
@@ -264,7 +395,46 @@ impl ParallelTreeReader {
     /// Build from already-loaded metadata (used by
     /// [`TreeReader::read_ahead`], which has the file open and parsed).
     pub fn from_parts(path: PathBuf, meta: TreeMeta, dictionary: Vec<u8>, config: ReadAhead) -> Self {
-        Self { path, meta, dictionary, config, metrics: Arc::new(Metrics::new()) }
+        Self {
+            path,
+            meta,
+            dictionary,
+            config,
+            metrics: Arc::new(Metrics::new()),
+            retry: RetryPolicy::default(),
+            faults: None,
+            fault_stats: Arc::new(FaultStats::default()),
+            retry_counter: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Replace the transient-failure retry policy (builder style). The
+    /// default policy retries transient read errors a few times with
+    /// bounded exponential backoff; [`RetryPolicy::disabled`] makes every
+    /// transient failure surface immediately, like the serial reader.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
+        self
+    }
+
+    /// Inject a seeded deterministic fault schedule *under* the retry
+    /// layer (builder style) — the substrate the fault-tolerance property
+    /// tests drive. Production readers never set this.
+    pub fn with_faults(mut self, spec: FaultSpec) -> Self {
+        self.faults = Some(spec);
+        self
+    }
+
+    /// Counters for faults injected by [`with_faults`](Self::with_faults)
+    /// (all zero when fault injection is off).
+    pub fn fault_stats(&self) -> Arc<FaultStats> {
+        Arc::clone(&self.fault_stats)
+    }
+
+    /// Transient read failures retried so far, across every scan this
+    /// reader served (also folded into [`Snapshot::read_retries`]).
+    pub fn read_retries(&self) -> u64 {
+        self.retry_counter.load(Ordering::Relaxed)
     }
 
     /// Branch id for a branch name (same [`TreeMeta`] query the serial
@@ -282,18 +452,40 @@ impl ParallelTreeReader {
     /// `bytes_in` = logical (uncompressed) bytes, `bytes_out` = compressed
     /// record bytes, `compress_nanos` = worker decode CPU time.
     pub fn metrics_snapshot(&self) -> Snapshot {
+        self.metrics.set_read_retries(self.retry_counter.load(Ordering::Relaxed));
         self.metrics.snapshot()
     }
 
     /// Start a pipelined scan over `locs`, delivering decoded baskets in
     /// exactly that order. The prefetcher reads raw records sequentially on
     /// one thread; `config.workers` workers decompress concurrently.
+    /// Strict mode: any damaged basket fails its delivery.
     pub fn scan(&self, locs: Vec<BasketLoc>) -> Result<BasketScan> {
+        self.scan_with_mode(locs, ScanMode::Strict)
+    }
+
+    /// [`scan`](Self::scan) with an explicit failure-handling `mode`
+    /// ([`ScanMode::Salvage`] skips and reports damaged baskets instead of
+    /// failing deliveries).
+    pub fn scan_with_mode(&self, locs: Vec<BasketLoc>, mode: ScanMode) -> Result<BasketScan> {
         let total = locs.len() as u64;
         let workers_n = self.config.workers.max(1);
         let depth = self.config.depth.max(1);
-        let file = File::open(&self.path)
-            .with_context(|| format!("opening {}", self.path.display()))?;
+        // Open before spawning so open errors surface to the caller, then
+        // assemble the prefetcher's source chain:
+        // FileSource → [FaultSource] → [RetrySource].
+        let mut source: Box<dyn RangeSource> = Box::new(FileSource::open(&self.path)?);
+        if let Some(spec) = self.faults {
+            source =
+                Box::new(FaultSource::with_stats(source, spec, Arc::clone(&self.fault_stats)));
+        }
+        if !self.retry.is_disabled() {
+            source = Box::new(RetrySource::new(
+                source,
+                self.retry,
+                Arc::clone(&self.retry_counter),
+            ));
+        }
 
         let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<RawJob>(depth);
         let (done_tx, done_rx) = std::sync::mpsc::sync_channel::<Done>(depth * 2);
@@ -375,13 +567,15 @@ impl ParallelTreeReader {
         }
         drop(done_tx);
 
+        let branch_names: Arc<Vec<String>> =
+            Arc::new(self.meta.branches.iter().map(|b| b.name.clone()).collect());
+
         let prefetch_raw_pool = raw_pool.clone();
         let prefetcher = std::thread::spawn(move || {
-            let mut file = BufReader::new(file);
+            let mut source = source;
             for (seq, loc) in locs.into_iter().enumerate() {
                 let mut buf = prefetch_raw_pool.get();
-                let payload = match format::read_record_at_into(&mut file, loc.file_offset, &mut buf)
-                {
+                let payload = match read_record_from(&mut source, loc.file_offset, &mut buf) {
                     Ok(RecordKind::Basket) => Ok(buf),
                     Ok(kind) => {
                         prefetch_raw_pool.put(buf);
@@ -392,7 +586,7 @@ impl ParallelTreeReader {
                     }
                     Err(e) => {
                         prefetch_raw_pool.put(buf);
-                        Err(format!("{e:#}"))
+                        Err(e.to_string())
                     }
                 };
                 if job_tx.send(RawJob { seq: seq as u64, loc, payload }).is_err() {
@@ -407,6 +601,9 @@ impl ParallelTreeReader {
             pending: BTreeMap::new(),
             next_seq: 0,
             total,
+            mode,
+            branch_names,
+            damage: Vec::new(),
             prefetcher: Some(prefetcher),
             workers,
             data_pool,
@@ -479,6 +676,85 @@ impl ParallelTreeReader {
             );
         }
         Ok(out)
+    }
+
+    /// Degraded-mode branch read: every basket that can still be read and
+    /// decoded contributes its values; damaged baskets become explicit
+    /// [`GapSpan`]s (absolute entry ids) and [`DamageRecord`]s instead of
+    /// failing the read. `values.len() + entries_skipped()` always equals
+    /// the branch's entry count.
+    pub fn read_branch_salvage(&self, branch_id: u32) -> Result<SalvageColumn> {
+        self.read_range_salvage(branch_id, 0..self.meta.n_entries)
+    }
+
+    /// Salvage twin of [`read_range`](Self::read_range) over the entry
+    /// window `[range.start, range.end)` (clamped to the tree). Gap spans
+    /// are clamped to the window too.
+    pub fn read_range_salvage(
+        &self,
+        branch_id: u32,
+        range: std::ops::Range<u64>,
+    ) -> Result<SalvageColumn> {
+        let ty = self
+            .meta
+            .branches
+            .get(branch_id as usize)
+            .ok_or_else(|| anyhow::anyhow!("no branch {branch_id}"))?
+            .ty;
+        let (start, end) = self.meta.clamp_entry_range(range.start, range.end);
+        let locs = self.meta.baskets_for_range(branch_id, start, end);
+        let mut scan = self.scan_with_mode(locs, ScanMode::Salvage)?;
+        let mut values = Vec::with_capacity((end - start) as usize);
+        let mut gaps: Vec<GapSpan> = Vec::new();
+        let mut damage: Vec<DamageRecord> = Vec::new();
+        let mut scratch = Vec::new();
+        while let Some(item) = scan.next_delivery() {
+            match item? {
+                Delivery::Basket(loc, content) => {
+                    let (from, to) = loc.trim_bounds(start, end);
+                    // Decode into scratch first: decode_values can fail
+                    // midway through a corrupt offset array, and a partial
+                    // append must not leak into the salvage output.
+                    scratch.clear();
+                    match decode_values(&content, ty, &mut scratch) {
+                        Ok(()) => values.extend(scratch.drain(..to).skip(from)),
+                        Err(e) => {
+                            let branch = self
+                                .meta
+                                .branches
+                                .get(loc.branch_id as usize)
+                                .map(|b| b.name.clone())
+                                .unwrap_or_else(|| format!("#{}", loc.branch_id));
+                            damage.push(DamageRecord {
+                                loc,
+                                branch,
+                                error: format!("{e:#}"),
+                            });
+                            if let Some(g) = loc.gap_within(start, end) {
+                                push_gap(&mut gaps, g);
+                            }
+                        }
+                    }
+                    scan.recycle(content);
+                }
+                Delivery::Damaged(rec) => {
+                    if let Some(g) = rec.loc.gap_within(start, end) {
+                        push_gap(&mut gaps, g);
+                    }
+                    damage.push(rec);
+                }
+            }
+        }
+        let skipped: u64 = gaps.iter().map(|g| g.n_entries).sum();
+        if values.len() as u64 + skipped != end - start {
+            bail!(
+                "branch {branch_id}: salvage accounting broken — {} values + {skipped} skipped \
+                 != {} entries in [{start}, {end})",
+                values.len(),
+                end - start
+            );
+        }
+        Ok(SalvageColumn { values, gaps, damage })
     }
 
     /// Row-wise reconstruction across all branches — the parallel
@@ -555,6 +831,7 @@ mod tests {
     use crate::compression::{Algorithm, Settings};
     use crate::gen::synthetic;
     use crate::rfile::write_tree_serial;
+    use std::time::Duration;
 
     fn tmp(name: &str) -> PathBuf {
         let mut p = std::env::temp_dir();
@@ -628,6 +905,121 @@ mod tests {
             scan.recycle(content);
         }
         drop(scan);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn salvage_skips_damage_and_reports_gaps() {
+        let path = tmp("salvage");
+        let events = synthetic::events(300, 11);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Lz4, 1),
+            1024,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        let reader = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 2 }).unwrap();
+        let locs = reader.baskets_for(0);
+        assert!(locs.len() >= 3, "want several baskets, got {}", locs.len());
+        let victim = locs[1];
+        // Flip bits in the basket's identity varint (first payload byte):
+        // deterministic frame-level damage regardless of codec.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[victim.file_offset as usize + 5] ^= 0x3F;
+        std::fs::write(&path, bytes).unwrap();
+
+        // Strict mode rejects, naming the casualty.
+        let err = reader.read_branch(0).unwrap_err().to_string();
+        assert!(err.contains("basket 1 of branch"), "{err}");
+        assert!(err.contains(&format!("file offset {}", victim.file_offset)), "{err}");
+
+        // Salvage returns exactly the intact complement plus the gap.
+        let col = reader.read_branch_salvage(0).unwrap();
+        let hole = victim.first_entry..victim.first_entry + victim.n_entries as u64;
+        let expected: Vec<Value> = events
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !hole.contains(&(*i as u64)))
+            .map(|(_, ev)| ev[0].clone())
+            .collect();
+        assert_eq!(col.values, expected);
+        assert_eq!(
+            col.gaps,
+            vec![GapSpan { first_entry: victim.first_entry, n_entries: victim.n_entries as u64 }]
+        );
+        assert_eq!(col.damage.len(), 1);
+        assert_eq!(col.damage[0].loc.basket_index, 1);
+        assert_eq!(col.entries_skipped(), victim.n_entries as u64);
+
+        // A windowed salvage clamps the gap to the window.
+        let lo = victim.first_entry + 1;
+        let win = reader.read_range_salvage(0, lo..lo + 1).unwrap();
+        assert!(win.values.is_empty());
+        assert_eq!(win.gaps, vec![GapSpan { first_entry: lo, n_entries: 1 }]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn injected_transient_faults_recover_with_retry() {
+        let path = tmp("faults");
+        let events = synthetic::events(200, 13);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Zstd, 1),
+            1024,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        let spec = FaultSpec {
+            seed: 42,
+            transient: 0.4,
+            short_read: 0.3,
+            max_consecutive: 2,
+            ..FaultSpec::default()
+        };
+        let policy = RetryPolicy {
+            max_attempts: 4, // > max_consecutive, so recovery is guaranteed
+            base_delay: Duration::ZERO,
+            backoff: 1.0,
+            max_delay: Duration::ZERO,
+        };
+        let reader = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 2 })
+            .unwrap()
+            .with_faults(spec)
+            .with_retry(policy);
+        assert_eq!(reader.read_all_events().unwrap(), events);
+        assert!(reader.fault_stats().total() > 0, "fault plan never fired");
+        assert!(reader.read_retries() > 0, "retries never observed");
+        assert!(reader.metrics_snapshot().read_retries > 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn disabled_retry_surfaces_injected_faults() {
+        let path = tmp("noretry");
+        let events = synthetic::events(60, 17);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Lz4, 1),
+            2048,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        let spec = FaultSpec { seed: 1, transient: 1.0, max_consecutive: 2, ..FaultSpec::default() };
+        let reader = ParallelTreeReader::open(&path, ReadAhead::with_workers(2))
+            .unwrap()
+            .with_faults(spec)
+            .with_retry(RetryPolicy::disabled());
+        let err = reader.read_branch(0).unwrap_err().to_string();
+        assert!(err.contains("injected transient I/O error"), "{err}");
+        assert_eq!(reader.read_retries(), 0);
         std::fs::remove_file(&path).ok();
     }
 

@@ -63,27 +63,47 @@ pub fn write_trailer(w: &mut impl Write, meta_offset: u64) -> Result<()> {
     Ok(())
 }
 
-/// Validate the header of an open file.
+/// Validate the header of an open file. A short or zero-length file gets
+/// an explicit truncation error (byte counts, not raw io noise) so a
+/// `scrub`/salvage report can cite exactly what is missing.
 pub fn read_header(r: &mut impl Read) -> Result<u16> {
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic).context("reading file magic")?;
-    if &magic != MAGIC {
+    let mut buf = [0u8; 6];
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading file header"),
+        }
+    }
+    if got < buf.len() {
+        bail!(
+            "file truncated: expected {} header bytes at offset 0, got {got}",
+            buf.len()
+        );
+    }
+    if &buf[..4] != MAGIC {
         bail!("not an RFIL file (bad magic)");
     }
-    let mut v = [0u8; 2];
-    r.read_exact(&mut v)?;
-    let version = u16::from_be_bytes(v);
+    let version = u16::from_be_bytes(buf[4..6].try_into().unwrap());
     if version != VERSION {
         bail!("unsupported RFIL version {version}");
     }
     Ok(version)
 }
 
-/// Read the trailer; returns the metadata record offset.
+/// Read the trailer; returns the metadata record offset. Truncation is
+/// reported with explicit byte counts (see [`read_header`]).
 pub fn read_trailer(f: &mut (impl Read + Seek)) -> Result<u64> {
     let end = f.seek(SeekFrom::End(0))?;
     if end < TRAILER_LEN + 6 {
-        bail!("file too short for trailer");
+        bail!(
+            "file truncated: expected {} trailer bytes at offset {} \
+             (file is only {end} bytes)",
+            TRAILER_LEN,
+            end.saturating_sub(TRAILER_LEN).max(6),
+        );
     }
     f.seek(SeekFrom::End(-(TRAILER_LEN as i64)))?;
     let mut buf = [0u8; 16];
@@ -169,6 +189,32 @@ mod tests {
     fn bad_magic_rejected() {
         let mut buf = Cursor::new(b"NOPE00".to_vec());
         assert!(read_header(&mut buf).is_err());
+    }
+
+    #[test]
+    fn short_and_empty_files_get_explicit_truncation_errors() {
+        // Zero-length and short files through read_header…
+        for len in [0usize, 1, 5] {
+            let mut buf = Cursor::new(MAGIC[..len.min(4)].to_vec());
+            buf.get_mut().resize(len, 0);
+            let err = read_header(&mut buf).unwrap_err().to_string();
+            assert!(
+                err.contains("file truncated") && err.contains("expected 6 header bytes"),
+                "len {len}: {err}"
+            );
+        }
+        // …and through read_trailer: a valid header but nothing else.
+        for len in [0usize, 6, 12, 21] {
+            let mut bytes = Vec::new();
+            write_header(&mut bytes).unwrap();
+            bytes.resize(len, 0);
+            let mut buf = Cursor::new(bytes);
+            let err = read_trailer(&mut buf).unwrap_err().to_string();
+            assert!(
+                err.contains("file truncated") && err.contains("expected 16 trailer bytes"),
+                "len {len}: {err}"
+            );
+        }
     }
 
     #[test]

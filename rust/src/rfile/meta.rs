@@ -46,6 +46,65 @@ impl BasketLoc {
         let hi = last.clamp(span_start, span_end).max(lo);
         ((lo - span_start) as usize, (hi - span_start) as usize)
     }
+
+    /// The gap a *damaged* basket leaves inside the entry window
+    /// `[first, last)`: the clamped intersection of this basket's span
+    /// with the window, or `None` if they don't intersect. Salvage-mode
+    /// scans report these so consumers know exactly which absolute entry
+    /// ids are missing.
+    pub fn gap_within(&self, first: u64, last: u64) -> Option<GapSpan> {
+        if !self.overlaps(first, last) {
+            return None;
+        }
+        let (span_start, span_end) = self.entry_span();
+        let lo = first.max(span_start);
+        let hi = last.min(span_end);
+        Some(GapSpan { first_entry: lo, n_entries: hi - lo })
+    }
+}
+
+/// A contiguous run of entries lost to damaged baskets — what a
+/// salvage-mode scan reports alongside the intact rows. Entry ids are
+/// absolute (tree coordinates), the span is `[first_entry,
+/// first_entry + n_entries)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GapSpan {
+    pub first_entry: u64,
+    pub n_entries: u64,
+}
+
+impl GapSpan {
+    /// Exclusive end of the span.
+    pub fn end_entry(&self) -> u64 {
+        self.first_entry + self.n_entries
+    }
+
+    /// Extend this span with an adjacent-or-overlapping follower; returns
+    /// false (leaving `self` untouched) if `other` is disjoint beyond the
+    /// end. Gap lists are built in entry order, so this is the only merge
+    /// direction needed.
+    pub fn absorb(&mut self, other: GapSpan) -> bool {
+        if other.first_entry > self.end_entry() {
+            return false;
+        }
+        let end = self.end_entry().max(other.end_entry());
+        self.n_entries = end - self.first_entry;
+        true
+    }
+}
+
+/// Append `span` to an entry-ordered gap list, merging it into the tail
+/// when adjacent or overlapping. Zero-length spans are dropped.
+pub fn push_gap(gaps: &mut Vec<GapSpan>, span: GapSpan) {
+    if span.n_entries == 0 {
+        return;
+    }
+    if let Some(tail) = gaps.last_mut() {
+        if tail.absorb(span) {
+            return;
+        }
+    }
+    gaps.push(span);
 }
 
 /// Full tree metadata.
@@ -367,6 +426,48 @@ mod tests {
         assert_eq!(meta.clamp_entry_range(5, 99), (5, 30));
         assert_eq!(meta.clamp_entry_range(40, 99), (30, 30));
         assert_eq!(meta.clamp_entry_range(20, 10), (20, 20));
+    }
+
+    #[test]
+    fn gap_spans_clamp_merge_and_drop_empties() {
+        let loc = BasketLoc {
+            branch_id: 0,
+            basket_index: 1,
+            first_entry: 100,
+            n_entries: 50,
+            file_offset: 0,
+            compressed_len: 1,
+            uncompressed_len: 1,
+        };
+        // Clamped intersection with the query window.
+        assert_eq!(
+            loc.gap_within(0, 1000),
+            Some(GapSpan { first_entry: 100, n_entries: 50 })
+        );
+        assert_eq!(
+            loc.gap_within(120, 140),
+            Some(GapSpan { first_entry: 120, n_entries: 20 })
+        );
+        assert_eq!(loc.gap_within(0, 100), None);
+        assert_eq!(loc.gap_within(150, 300), None);
+        assert_eq!(loc.gap_within(120, 120), None, "empty window");
+
+        // Entry-ordered list building: adjacency and overlap merge,
+        // disjoint spans append, empties vanish.
+        let mut gaps = Vec::new();
+        push_gap(&mut gaps, GapSpan { first_entry: 10, n_entries: 5 });
+        push_gap(&mut gaps, GapSpan { first_entry: 15, n_entries: 5 }); // adjacent
+        push_gap(&mut gaps, GapSpan { first_entry: 18, n_entries: 4 }); // overlapping
+        push_gap(&mut gaps, GapSpan { first_entry: 30, n_entries: 0 }); // empty
+        push_gap(&mut gaps, GapSpan { first_entry: 40, n_entries: 2 }); // disjoint
+        assert_eq!(
+            gaps,
+            vec![
+                GapSpan { first_entry: 10, n_entries: 12 },
+                GapSpan { first_entry: 40, n_entries: 2 },
+            ]
+        );
+        assert_eq!(gaps[0].end_entry(), 22);
     }
 
     #[test]

@@ -8,12 +8,19 @@ pub mod branch;
 pub mod format;
 pub mod meta;
 pub mod reader;
+pub mod scrub;
+pub mod source;
 pub mod writer;
 
 pub use basket::{BasketContent, PendingBasket};
 pub use branch::{BranchDef, BranchType, Value};
-pub use meta::{BasketLoc, TreeMeta};
+pub use meta::{push_gap, BasketLoc, GapSpan, TreeMeta};
 pub use reader::TreeReader;
+pub use scrub::{scrub_file, DamageKind, ScrubFinding, ScrubReport};
+pub use source::{
+    read_full_at, read_record_from, FaultSource, FaultSpec, FaultStats, FileSource, RangeSource,
+    RetryPolicy, RetrySource, SourceError,
+};
 pub use writer::{
     frame_basket_record, frame_basket_record_prefix, write_tree_serial, BasketSink, RecordWriter,
     SerialSink, TreeWriter,

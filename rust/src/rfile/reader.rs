@@ -6,6 +6,7 @@ use super::basket::{decode_basket, BasketContent};
 use super::branch::{BranchType, Value};
 use super::format::{self, RecordKind};
 use super::meta::{BasketLoc, TreeMeta};
+use super::source::{read_record_from, FileSource};
 use crate::compression::Engine;
 use crate::util::varint::Cursor;
 use anyhow::{bail, Context, Result};
@@ -32,7 +33,12 @@ use std::path::Path;
 /// std::fs::remove_file(&path).ok();
 /// ```
 pub struct TreeReader {
-    file: BufReader<File>,
+    /// Basket reads go through the
+    /// [`RangeSource`](crate::rfile::source::RangeSource) seam
+    /// ([`crate::rfile::source`]); the serial reader always rides a plain
+    /// [`FileSource`] — no retries, no fault injection — which keeps it an
+    /// unambiguous oracle for the fault-tolerant pipeline.
+    source: FileSource,
     path: std::path::PathBuf,
     pub meta: TreeMeta,
     engine: Engine,
@@ -61,7 +67,11 @@ impl TreeReader {
             }
             engine.set_dictionary(dict);
         }
-        Ok(Self { file, path: path.to_path_buf(), meta, engine })
+        // The open phase is sequential (header → trailer → directory), so
+        // it buffers; basket reads are positioned, so the handle drops the
+        // buffer and becomes a RangeSource.
+        let source = FileSource::from_file(file.into_inner(), path)?;
+        Ok(Self { source, path: path.to_path_buf(), meta, engine })
     }
 
     /// The dictionary blob the tree carries (empty if none) — shared with
@@ -108,7 +118,14 @@ impl TreeReader {
 
     /// Read + decompress one basket.
     pub fn read_basket(&mut self, loc: &BasketLoc) -> Result<BasketContent> {
-        let (kind, payload) = format::read_record_at(&mut self.file, loc.file_offset)?;
+        let mut payload = Vec::new();
+        let kind = read_record_from(&mut self.source, loc.file_offset, &mut payload)
+            .with_context(|| {
+                format!(
+                    "basket {} of branch id {} at file offset {}",
+                    loc.basket_index, loc.branch_id, loc.file_offset
+                )
+            })?;
         if kind != RecordKind::Basket {
             bail!("expected basket record at {}", loc.file_offset);
         }

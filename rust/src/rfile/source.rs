@@ -1,0 +1,736 @@
+//! Pluggable byte-range sources: the seam between basket plans and the
+//! physical read path (ROADMAP item 4 — "Increasing Parallelism in the
+//! ROOT I/O Subsystem" motivates decoupling logical scans from physical
+//! I/O resources).
+//!
+//! A [`RangeSource`] serves positioned reads. Three implementations:
+//!
+//! * [`FileSource`] — the production path: positional `pread`-style reads
+//!   against a local file (no shared cursor, so one handle per thread
+//!   needs no seeking discipline).
+//! * [`FaultSource`] — a seeded deterministic wrapper that injects
+//!   transient I/O errors, short reads, added latency and payload
+//!   bit-flips. This is the fault-tolerance test substrate; it reuses
+//!   [`crate::util::rng`] so every failure is reproducible from a seed.
+//! * [`RetrySource`] — a policy layer ([`RetryPolicy`]) that transparently
+//!   retries *transient* errors with bounded exponential backoff and
+//!   counts retry attempts into a shared counter (surfaced through
+//!   the coordinator's metrics snapshot).
+//!
+//! Errors are classified by [`SourceError`]: `Transient` failures are
+//! worth retrying (EINTR, injected EIO, a remote hiccup); `Permanent`
+//! failures are not (truncation, a hole in the file, a decode-level
+//! rejection). Short reads are legal for `read_at`; callers that need an
+//! exact fill loop through [`read_full_at`], which converts lack of
+//! progress into an explicit truncation error.
+
+use super::format::RecordKind;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::fmt;
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A read failure, classified by whether retrying could help.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SourceError {
+    /// Worth retrying: the same read may succeed later (interrupted
+    /// syscall, injected fault, remote hiccup).
+    Transient(String),
+    /// Not worth retrying: the bytes are not there or are wrong.
+    Permanent(String),
+}
+
+impl SourceError {
+    pub fn is_transient(&self) -> bool {
+        matches!(self, SourceError::Transient(_))
+    }
+}
+
+impl fmt::Display for SourceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SourceError::Transient(m) | SourceError::Permanent(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for SourceError {}
+
+/// A source of positioned byte-range reads.
+///
+/// `read_at` may return fewer bytes than requested (a short read); zero
+/// means end-of-source at `offset`. Implementations must be `Send` so a
+/// source can be moved onto the read pipeline's prefetch thread.
+pub trait RangeSource: Send {
+    /// Total size of the source in bytes.
+    fn size(&mut self) -> Result<u64, SourceError>;
+
+    /// Read up to `buf.len()` bytes at absolute `offset`; returns the
+    /// number of bytes read (0 = end of source).
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError>;
+}
+
+impl<S: RangeSource + ?Sized> RangeSource for Box<S> {
+    fn size(&mut self) -> Result<u64, SourceError> {
+        (**self).size()
+    }
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+        (**self).read_at(offset, buf)
+    }
+}
+
+/// Fill `buf` exactly from `offset`, looping over short reads. End of
+/// source before the fill completes becomes an explicit truncation error.
+pub fn read_full_at<S: RangeSource + ?Sized>(
+    src: &mut S,
+    offset: u64,
+    buf: &mut [u8],
+) -> Result<(), SourceError> {
+    let mut done = 0usize;
+    while done < buf.len() {
+        let n = src.read_at(offset + done as u64, &mut buf[done..])?;
+        if n == 0 {
+            return Err(SourceError::Permanent(format!(
+                "file truncated: expected {} bytes at offset {}, got {}",
+                buf.len(),
+                offset,
+                done
+            )));
+        }
+        done += n;
+    }
+    Ok(())
+}
+
+/// Read the record at `offset` through a [`RangeSource`], mirroring the
+/// validation in [`crate::rfile::format::read_record_at_into`]: 5-byte
+/// header, plausible total length, known kind, full payload. The payload
+/// buffer is reused (capacity kept across calls).
+pub fn read_record_from<S: RangeSource + ?Sized>(
+    src: &mut S,
+    offset: u64,
+    payload: &mut Vec<u8>,
+) -> Result<RecordKind, SourceError> {
+    let mut hdr = [0u8; 5];
+    read_full_at(src, offset, &mut hdr)
+        .map_err(|e| with_detail(e, format!("reading record header at offset {offset}")))?;
+    let total = u32::from_be_bytes(hdr[..4].try_into().unwrap()) as usize;
+    if !(5..=(1 << 30)).contains(&total) {
+        return Err(SourceError::Permanent(format!(
+            "implausible record length {total} at offset {offset}"
+        )));
+    }
+    let kind = RecordKind::from_u8(hdr[4]).ok_or_else(|| {
+        SourceError::Permanent(format!("unknown record kind {} at offset {offset}", hdr[4]))
+    })?;
+    let body_len = total - 5;
+    payload.clear();
+    // resize() zero-fills bytes about to be overwritten; unlike the
+    // BufReader path in `format`, a positioned read needs an initialized
+    // slice. The memset is noise next to the per-basket decompression,
+    // and the recycled buffer's capacity is still reused (§Perf).
+    payload.resize(body_len, 0);
+    read_full_at(src, offset + 5, payload)
+        .map_err(|e| with_detail(e, format!("reading record payload at offset {offset}")))?;
+    Ok(kind)
+}
+
+/// Prefix a classification-preserving context line onto a source error.
+fn with_detail(e: SourceError, ctx: String) -> SourceError {
+    match e {
+        SourceError::Transient(m) => SourceError::Transient(format!("{ctx}: {m}")),
+        SourceError::Permanent(m) => SourceError::Permanent(format!("{ctx}: {m}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FileSource
+// ---------------------------------------------------------------------------
+
+/// Positional reads against a local file: the production source. On unix
+/// this is `pread(2)` (no shared-cursor seeks); elsewhere it falls back to
+/// seek-and-read on the owned handle.
+pub struct FileSource {
+    file: File,
+    path: PathBuf,
+    len: u64,
+}
+
+impl FileSource {
+    /// Open `path` for range reads.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file =
+            File::open(path).with_context(|| format!("opening {} for read", path.display()))?;
+        Self::from_file(file, path)
+    }
+
+    /// Wrap an already-open handle (e.g. after the tree-open phase read
+    /// the header and directory through a `BufReader`).
+    pub fn from_file(file: File, path: &Path) -> Result<Self> {
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        Ok(Self { file, path: path.to_path_buf(), len })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl RangeSource for FileSource {
+    fn size(&mut self) -> Result<u64, SourceError> {
+        Ok(self.len)
+    }
+
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+        #[cfg(unix)]
+        let res = {
+            use std::os::unix::fs::FileExt;
+            self.file.read_at(buf, offset)
+        };
+        #[cfg(not(unix))]
+        let res = {
+            use std::io::{Read, Seek, SeekFrom};
+            self.file
+                .seek(SeekFrom::Start(offset))
+                .and_then(|_| self.file.read(buf))
+        };
+        res.map_err(|e| {
+            let msg = format!(
+                "reading {} bytes at offset {} from {}: {e}",
+                buf.len(),
+                offset,
+                self.path.display()
+            );
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                SourceError::Transient(msg)
+            } else {
+                SourceError::Permanent(msg)
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultSource
+// ---------------------------------------------------------------------------
+
+/// Deterministic fault-injection plan for a [`FaultSource`]. All
+/// probabilities are per `read_at` call; the RNG stream depends only on
+/// `seed` and the call sequence, so a single-threaded caller (the read
+/// pipeline's prefetcher) sees a reproducible fault schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// RNG seed for the fault schedule.
+    pub seed: u64,
+    /// P(inject a transient I/O error) per read.
+    pub transient: f64,
+    /// P(truncate a multi-byte read to a random shorter length) per read.
+    pub short_read: f64,
+    /// P(flip one random bit of the bytes just read) per read.
+    pub bit_flip: f64,
+    /// P(sleep `latency` before serving) per read.
+    pub delay: f64,
+    /// Sleep duration for injected latency.
+    pub latency: Duration,
+    /// Cap on back-to-back transient injections: after this many
+    /// consecutive failures the next read is served, so a retry policy
+    /// with `max_attempts > max_consecutive` always recovers.
+    pub max_consecutive: u32,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            transient: 0.0,
+            short_read: 0.0,
+            bit_flip: 0.0,
+            delay: 0.0,
+            latency: Duration::ZERO,
+            max_consecutive: 2,
+        }
+    }
+}
+
+/// Counters for faults actually injected, shared with the test harness so
+/// a property run can assert its fault plan really fired.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    pub transient: AtomicU64,
+    pub short_reads: AtomicU64,
+    pub bit_flips: AtomicU64,
+    pub delays: AtomicU64,
+}
+
+impl FaultStats {
+    /// Total faults injected across all categories.
+    pub fn total(&self) -> u64 {
+        self.transient.load(Ordering::Relaxed)
+            + self.short_reads.load(Ordering::Relaxed)
+            + self.bit_flips.load(Ordering::Relaxed)
+            + self.delays.load(Ordering::Relaxed)
+    }
+}
+
+/// Seeded deterministic fault injector wrapping any inner source.
+pub struct FaultSource<S> {
+    inner: S,
+    spec: FaultSpec,
+    rng: Rng,
+    consecutive: u32,
+    stats: Arc<FaultStats>,
+}
+
+impl<S: RangeSource> FaultSource<S> {
+    pub fn new(inner: S, spec: FaultSpec) -> Self {
+        Self::with_stats(inner, spec, Arc::new(FaultStats::default()))
+    }
+
+    /// Share the injection counters with the caller (tests assert on them).
+    pub fn with_stats(inner: S, spec: FaultSpec, stats: Arc<FaultStats>) -> Self {
+        Self { inner, spec, rng: Rng::new(spec.seed), consecutive: 0, stats }
+    }
+
+    pub fn stats(&self) -> Arc<FaultStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+impl<S: RangeSource> RangeSource for FaultSource<S> {
+    fn size(&mut self) -> Result<u64, SourceError> {
+        // Metadata plumbing is not under attack; only payload reads are.
+        self.inner.size()
+    }
+
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+        // Draw every category each call so the RNG stream depends only on
+        // the call count, never on which probabilities are non-zero.
+        let delay = self.rng.chance(self.spec.delay);
+        let transient = self.rng.chance(self.spec.transient);
+        let short = self.rng.chance(self.spec.short_read);
+        let flip = self.rng.chance(self.spec.bit_flip);
+
+        if delay && !self.spec.latency.is_zero() {
+            self.stats.delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.spec.latency);
+        }
+        if transient && self.consecutive < self.spec.max_consecutive {
+            self.consecutive += 1;
+            self.stats.transient.fetch_add(1, Ordering::Relaxed);
+            return Err(SourceError::Transient(format!(
+                "injected transient I/O error at offset {offset}"
+            )));
+        }
+        self.consecutive = 0;
+
+        let mut want = buf.len();
+        if short && want > 1 {
+            want = 1 + self.rng.below(want as u64 - 1) as usize;
+            self.stats.short_reads.fetch_add(1, Ordering::Relaxed);
+        }
+        let n = self.inner.read_at(offset, &mut buf[..want])?;
+        if flip && n > 0 {
+            let at = self.rng.below(n as u64) as usize;
+            buf[at] ^= 1 << self.rng.below(8);
+            self.stats.bit_flips.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retry layer
+// ---------------------------------------------------------------------------
+
+/// Bounded exponential backoff for transient read failures.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts per read (1 = no retries).
+    pub max_attempts: u32,
+    /// Delay before the first retry.
+    pub base_delay: Duration,
+    /// Multiplier applied to the delay after each failed attempt.
+    pub backoff: f64,
+    /// Upper bound on any single delay.
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            base_delay: Duration::from_millis(1),
+            backoff: 2.0,
+            max_delay: Duration::from_millis(100),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: every transient failure surfaces immediately.
+    pub fn disabled() -> Self {
+        Self { max_attempts: 1, ..Self::default() }
+    }
+
+    pub fn is_disabled(&self) -> bool {
+        self.max_attempts <= 1
+    }
+
+    /// Backoff delay before retry number `retry` (1-based), capped.
+    pub fn delay_for(&self, retry: u32) -> Duration {
+        let factor = self.backoff.max(1.0).powi(retry.saturating_sub(1) as i32);
+        let secs = (self.base_delay.as_secs_f64() * factor).min(self.max_delay.as_secs_f64());
+        Duration::from_secs_f64(secs.max(0.0))
+    }
+}
+
+/// Retry wrapper: replays transient failures per [`RetryPolicy`] and
+/// counts every retry into a shared counter. Permanent errors pass
+/// through untouched.
+pub struct RetrySource<S> {
+    inner: S,
+    policy: RetryPolicy,
+    retries: Arc<AtomicU64>,
+}
+
+impl<S: RangeSource> RetrySource<S> {
+    pub fn new(inner: S, policy: RetryPolicy, retries: Arc<AtomicU64>) -> Self {
+        Self { inner, policy, retries }
+    }
+
+    /// Retries performed so far (shared counter).
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    fn run<T>(
+        &mut self,
+        mut op: impl FnMut(&mut S) -> Result<T, SourceError>,
+    ) -> Result<T, SourceError> {
+        let attempts = self.policy.max_attempts.max(1);
+        let mut attempt = 1u32;
+        loop {
+            match op(&mut self.inner) {
+                Ok(v) => return Ok(v),
+                Err(e) if e.is_transient() && attempt < attempts => {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    let delay = self.policy.delay_for(attempt);
+                    if !delay.is_zero() {
+                        std::thread::sleep(delay);
+                    }
+                    attempt += 1;
+                }
+                Err(SourceError::Transient(m)) if attempt > 1 => {
+                    return Err(SourceError::Transient(format!(
+                        "{m} (after {attempt} attempts)"
+                    )));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl<S: RangeSource> RangeSource for RetrySource<S> {
+    fn size(&mut self) -> Result<u64, SourceError> {
+        self.run(|s| s.size())
+    }
+
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+        // The closure re-borrows `buf` each attempt; a failed attempt may
+        // have scribbled on it, which is fine — only the final successful
+        // read's bytes are reported to the caller.
+        self.run(|s| s.read_at(offset, buf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rfile::format;
+    use std::io::Cursor;
+
+    /// In-memory source for deterministic unit tests.
+    struct MemSource(Vec<u8>);
+
+    impl RangeSource for MemSource {
+        fn size(&mut self) -> Result<u64, SourceError> {
+            Ok(self.0.len() as u64)
+        }
+        fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+            let off = (offset as usize).min(self.0.len());
+            let n = buf.len().min(self.0.len() - off);
+            buf[..n].copy_from_slice(&self.0[off..off + n]);
+            Ok(n)
+        }
+    }
+
+    /// Serves at most `chunk` bytes per read — exercises the fill loop.
+    struct ChunkySource {
+        inner: MemSource,
+        chunk: usize,
+    }
+
+    impl RangeSource for ChunkySource {
+        fn size(&mut self) -> Result<u64, SourceError> {
+            self.inner.size()
+        }
+        fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+            let want = buf.len().min(self.chunk);
+            self.inner.read_at(offset, &mut buf[..want])
+        }
+    }
+
+    /// Fails transiently `fail` times, then serves.
+    struct FlakySource {
+        inner: MemSource,
+        fail: u32,
+    }
+
+    impl RangeSource for FlakySource {
+        fn size(&mut self) -> Result<u64, SourceError> {
+            self.inner.size()
+        }
+        fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+            if self.fail > 0 {
+                self.fail -= 1;
+                return Err(SourceError::Transient("flaky".into()));
+            }
+            self.inner.read_at(offset, buf)
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rootio_source_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn read_full_at_loops_over_short_reads() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let mut src = ChunkySource { inner: MemSource(data.clone()), chunk: 7 };
+        let mut buf = vec![0u8; 100];
+        read_full_at(&mut src, 30, &mut buf).unwrap();
+        assert_eq!(buf, &data[30..130]);
+    }
+
+    #[test]
+    fn truncation_is_an_explicit_permanent_error() {
+        let mut src = MemSource((0..64u8).collect());
+        let mut buf = vec![0u8; 32];
+        let err = read_full_at(&mut src, 48, &mut buf).unwrap_err();
+        assert!(!err.is_transient());
+        let msg = err.to_string();
+        assert!(
+            msg.contains("expected 32 bytes at offset 48") && msg.contains("got 16"),
+            "unhelpful truncation error: {msg}"
+        );
+    }
+
+    #[test]
+    fn file_source_serves_ranges_and_reports_eof() {
+        let path = tmp("filesource");
+        std::fs::write(&path, (0..200u32).flat_map(|i| i.to_be_bytes()).collect::<Vec<_>>())
+            .unwrap();
+        let mut src = FileSource::open(&path).unwrap();
+        assert_eq!(src.size().unwrap(), 800);
+        let mut buf = [0u8; 4];
+        read_full_at(&mut src, 4 * 7, &mut buf).unwrap();
+        assert_eq!(u32::from_be_bytes(buf), 7);
+        // Past-EOF fill is a truncation error, not a panic or a hang.
+        let mut big = vec![0u8; 16];
+        assert!(read_full_at(&mut src, 792, &mut big).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn record_read_parity_with_format_layer() {
+        // A record stream built by the format layer parses identically
+        // through a RangeSource.
+        let mut buf = Cursor::new(Vec::<u8>::new());
+        let pos = format::write_header(&mut buf).unwrap();
+        format::write_record(&mut buf, pos, RecordKind::Basket, b"the payload").unwrap();
+        let bytes = buf.into_inner();
+
+        let mut src = ChunkySource { inner: MemSource(bytes.clone()), chunk: 3 };
+        let mut payload = Vec::new();
+        let kind = read_record_from(&mut src, pos, &mut payload).unwrap();
+        assert_eq!(kind, RecordKind::Basket);
+        assert_eq!(payload, b"the payload");
+
+        let mut oracle = Cursor::new(bytes);
+        let mut expect = Vec::new();
+        let k2 = format::read_record_at_into(&mut oracle, pos, &mut expect).unwrap();
+        assert_eq!((kind, &payload), (k2, &expect));
+    }
+
+    #[test]
+    fn record_read_rejects_garbage_frames() {
+        // Implausible length.
+        let mut bad = vec![0xFFu8; 16];
+        bad[4] = 1;
+        let mut payload = Vec::new();
+        let err = read_record_from(&mut MemSource(bad), 0, &mut payload).unwrap_err();
+        assert!(err.to_string().contains("implausible record length"), "{err}");
+        // Unknown kind.
+        let mut frame = 9u32.to_be_bytes().to_vec();
+        frame.push(200);
+        frame.extend_from_slice(b"body");
+        let err = read_record_from(&mut MemSource(frame), 0, &mut payload).unwrap_err();
+        assert!(err.to_string().contains("unknown record kind"), "{err}");
+        // Truncated payload.
+        let mut frame = 105u32.to_be_bytes().to_vec();
+        frame.push(1);
+        frame.extend_from_slice(&[7u8; 10]);
+        let err = read_record_from(&mut MemSource(frame), 0, &mut payload).unwrap_err();
+        assert!(err.to_string().contains("file truncated"), "{err}");
+    }
+
+    #[test]
+    fn retry_recovers_transient_failures_and_counts_them() {
+        let data: Vec<u8> = (0..99u8).collect();
+        let counter = Arc::new(AtomicU64::new(0));
+        let flaky = FlakySource { inner: MemSource(data.clone()), fail: 2 };
+        let policy = RetryPolicy {
+            max_attempts: 4,
+            base_delay: Duration::ZERO,
+            backoff: 2.0,
+            max_delay: Duration::ZERO,
+        };
+        let mut src = RetrySource::new(flaky, policy, Arc::clone(&counter));
+        let mut buf = vec![0u8; 10];
+        read_full_at(&mut src, 5, &mut buf).unwrap();
+        assert_eq!(buf, &data[5..15]);
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn retry_exhaustion_and_disabled_policy_surface_the_error() {
+        let counter = Arc::new(AtomicU64::new(0));
+        let flaky = FlakySource { inner: MemSource(vec![0; 8]), fail: 10 };
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::ZERO,
+            backoff: 1.0,
+            max_delay: Duration::ZERO,
+        };
+        let mut src = RetrySource::new(flaky, policy, Arc::clone(&counter));
+        let mut buf = [0u8; 4];
+        let err = src.read_at(0, &mut buf).unwrap_err();
+        assert!(err.is_transient());
+        assert!(err.to_string().contains("after 3 attempts"), "{err}");
+        assert_eq!(counter.load(Ordering::Relaxed), 2, "two retries for three attempts");
+
+        let flaky = FlakySource { inner: MemSource(vec![0; 8]), fail: 1 };
+        let mut src =
+            RetrySource::new(flaky, RetryPolicy::disabled(), Arc::new(AtomicU64::new(0)));
+        assert!(src.read_at(0, &mut buf).is_err(), "disabled policy must not retry");
+    }
+
+    #[test]
+    fn retry_does_not_touch_permanent_errors() {
+        let counter = Arc::new(AtomicU64::new(0));
+        // MemSource returns 0 bytes past EOF; read_full_at turns that into
+        // a Permanent truncation which the retry layer must pass through.
+        let mut src =
+            RetrySource::new(MemSource(vec![1; 4]), RetryPolicy::default(), Arc::clone(&counter));
+        let mut buf = [0u8; 8];
+        let err = read_full_at(&mut src, 0, &mut buf).unwrap_err();
+        assert!(!err.is_transient());
+        assert_eq!(counter.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn backoff_delays_grow_and_cap() {
+        let p = RetryPolicy {
+            max_attempts: 8,
+            base_delay: Duration::from_millis(2),
+            backoff: 3.0,
+            max_delay: Duration::from_millis(20),
+        };
+        assert_eq!(p.delay_for(1), Duration::from_millis(2));
+        assert_eq!(p.delay_for(2), Duration::from_millis(6));
+        assert_eq!(p.delay_for(3), Duration::from_millis(18));
+        assert_eq!(p.delay_for(4), Duration::from_millis(20), "capped");
+        assert_eq!(p.delay_for(30), Duration::from_millis(20), "still capped");
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_for_a_seed() {
+        let data: Vec<u8> = (0..255u8).cycle().take(4096).collect();
+        let spec = FaultSpec {
+            seed: 0xFA_017,
+            transient: 0.3,
+            short_read: 0.4,
+            bit_flip: 0.2,
+            max_consecutive: 2,
+            ..FaultSpec::default()
+        };
+        let run = |spec: FaultSpec| {
+            let mut src = FaultSource::new(MemSource(data.clone()), spec);
+            let stats = src.stats();
+            let mut outcomes = Vec::new();
+            let mut buf = vec![0u8; 64];
+            for i in 0..200u64 {
+                match src.read_at((i * 13) % 4000, &mut buf) {
+                    Ok(n) => outcomes.push((n as i64, buf[..n].to_vec())),
+                    Err(e) => outcomes.push((-1, e.to_string().into_bytes())),
+                }
+            }
+            (outcomes, stats.total())
+        };
+        let (a, fa) = run(spec);
+        let (b, fb) = run(spec);
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        assert_eq!(fa, fb);
+        assert!(fa > 0, "fault plan never fired");
+        let (c, _) = run(FaultSpec { seed: 0xFA_018, ..spec });
+        assert_ne!(a, c, "different seed should change the schedule");
+    }
+
+    #[test]
+    fn consecutive_transient_cap_guarantees_retry_recovery() {
+        // With transient probability 1.0 the cap forces every third read
+        // to succeed, so a retry policy with more attempts always wins.
+        let data = vec![42u8; 256];
+        let spec = FaultSpec {
+            seed: 7,
+            transient: 1.0,
+            max_consecutive: 2,
+            ..FaultSpec::default()
+        };
+        let faulty = FaultSource::new(MemSource(data.clone()), spec);
+        let policy = RetryPolicy {
+            max_attempts: 4,
+            base_delay: Duration::ZERO,
+            backoff: 1.0,
+            max_delay: Duration::ZERO,
+        };
+        let mut src = RetrySource::new(faulty, policy, Arc::new(AtomicU64::new(0)));
+        let mut buf = vec![0u8; 16];
+        for i in 0..20 {
+            read_full_at(&mut src, i * 8, &mut buf).unwrap();
+            assert_eq!(buf, vec![42u8; 16]);
+        }
+    }
+
+    #[test]
+    fn bit_flips_corrupt_payloads() {
+        let data = vec![0u8; 1024];
+        let spec = FaultSpec { seed: 99, bit_flip: 1.0, ..FaultSpec::default() };
+        let mut src = FaultSource::new(MemSource(data), spec);
+        let stats = src.stats();
+        let mut buf = vec![0u8; 128];
+        let n = src.read_at(0, &mut buf).unwrap();
+        assert!(buf[..n].iter().any(|&b| b != 0), "flip must land in the returned bytes");
+        assert_eq!(stats.bit_flips.load(Ordering::Relaxed), 1);
+    }
+}

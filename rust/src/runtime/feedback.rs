@@ -263,8 +263,12 @@ impl ReadFeedback {
         Self::deserialize(&text)
     }
 
+    /// Persist the profile crash-safely: a partially written profile would
+    /// fail `deserialize` on the next run and silently discard the history,
+    /// so the bytes go to a temp file that is atomically renamed over the
+    /// destination.
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.serialize())
+        crate::util::fsio::atomic_write(path, self.serialize().as_bytes())
             .with_context(|| format!("writing read profile {}", path.display()))
     }
 }
@@ -281,6 +285,7 @@ mod tests {
             entries: 100,
             compressed_bytes: logical / 2,
             logical_bytes: logical,
+            ..BranchReadStats::default()
         }
     }
 

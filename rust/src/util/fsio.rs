@@ -1,0 +1,75 @@
+//! Filesystem helpers: crash-safe writes.
+//!
+//! Output files that feed later runs (read profiles, reports) must never
+//! be observable half-written: a crash mid-`fs::write` leaves a truncated
+//! file that the strict parsers reject, bricking the feedback loop. The
+//! classic fix is [`atomic_write`]: write a temp file in the same
+//! directory, flush it, then `rename(2)` over the destination.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// flushed to disk, then renamed over the destination. Readers see either
+/// the old contents or the new ones, never a torn file; on failure the
+/// destination is untouched and the temp file is removed.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let file_name = path.file_name().ok_or_else(|| {
+        anyhow::anyhow!("atomic write target {} has no file name", path.display())
+    })?;
+    // Same directory as the target: rename() is only atomic within a
+    // filesystem, and temp_dir may sit on another mount.
+    let mut tmp = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::new(),
+    };
+    tmp.push(format!(".{}.tmp.{}", file_name.to_string_lossy(), std::process::id()));
+    let write_all = std::fs::File::create(&tmp).and_then(|mut f| {
+        f.write_all(bytes)?;
+        // rename() publishes the name atomically, but only data already
+        // flushed survives a power cut — sync before the swap.
+        f.sync_all()
+    });
+    if let Err(e) = write_all {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("writing temp file {}", tmp.display()));
+    }
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::anyhow!("renaming {} over {}: {e}", tmp.display(), path.display())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_write_creates_replaces_and_leaves_no_litter() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("rootio_fsio_{}.txt", std::process::id()));
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer contents").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer contents");
+        let dir = path.parent().unwrap();
+        let litter = std::fs::read_dir(dir).unwrap().filter_map(|e| e.ok()).any(|e| {
+            let n = e.file_name().to_string_lossy().into_owned();
+            n.contains("rootio_fsio") && n.contains(".tmp.")
+        });
+        assert!(!litter, "temp file left behind");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn atomic_write_rejects_bad_targets() {
+        // Unwritable directory: the temp-file create fails, nothing is
+        // left behind, and the (nonexistent) destination stays absent.
+        let bad = Path::new("/nonexistent-rootio-dir/profile.txt");
+        assert!(atomic_write(bad, b"x").is_err());
+        assert!(!bad.exists());
+        // Target without a file name.
+        assert!(atomic_write(Path::new(".."), b"x").is_err());
+    }
+}

@@ -2,6 +2,7 @@
 //! statistics, timing, and the shared LZ77 match-finder substrate.
 
 pub mod bitio;
+pub mod fsio;
 pub mod match_finder;
 pub mod pool;
 pub mod rng;

@@ -1,0 +1,246 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
+//! Fault-tolerance properties (seeded, reproducible via `PROP_SEED`):
+//!
+//! 1. **Retry transparency** — under seeded transient faults (EIOs, short
+//!    reads, latency spikes) the retried parallel reader must be
+//!    **byte-identical** to a fault-free read, across the codec ×
+//!    preconditioner grid and 1/2/4 workers, while the fault/retry
+//!    counters prove the fault plan actually fired.
+//! 2. **Salvage completeness** — corrupt `k` random baskets and the
+//!    salvage scan must recover *exactly* the intact complement, with the
+//!    damaged entry spans reported as gaps and one damage record per
+//!    victim. Strict mode must keep rejecting, in parity with the serial
+//!    oracle.
+//! 3. **Decode-level damage** — a flipped stored LZ4 CRC is caught at
+//!    decompression (not framing) and salvage degrades identically.
+//!
+//! Fixtures come from the shared testkit (`mod common`): `PROP_SEED`
+//! reproduces a failed run, `PROP_ROUNDS` caps the grid/round counts (see
+//! rust/tests/common/mod.rs).
+
+mod common;
+
+use common::{grid, prop_rounds, sample, seeded, tmp_path, write_sample_tree};
+use rootio::compression::{Algorithm, Settings};
+use rootio::coordinator::{ParallelTreeReader, ReadAhead};
+use rootio::gen::synthetic;
+use rootio::rfile::{push_gap, BasketLoc, FaultSpec, GapSpan, RetryPolicy, TreeReader, Value};
+use rootio::util::varint::get_uvarint;
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+/// Retries without sleeping: the backoff schedule is covered by the
+/// source-layer unit tests; integration rounds only need the attempt loop.
+fn instant_retry() -> RetryPolicy {
+    RetryPolicy {
+        max_attempts: 4,
+        base_delay: Duration::ZERO,
+        backoff: 1.0,
+        max_delay: Duration::ZERO,
+    }
+}
+
+/// Corrupt a basket *record* deterministically and codec-agnostically:
+/// flip bits in the branch-id varint (first payload byte, `file_offset
+/// + 4(len) + 1(kind)`), so the record still frames but fails the
+/// identity check on decode.
+fn corrupt_identity(path: &std::path::Path, loc: &BasketLoc) {
+    let mut bytes = std::fs::read(path).unwrap();
+    bytes[loc.file_offset as usize + 5] ^= 0x3F;
+    std::fs::write(path, bytes).unwrap();
+}
+
+/// Expected salvage output for one branch: the event column minus the
+/// victims' entry spans, plus the merged gap list.
+fn intact_complement(
+    events: &[Vec<Value>],
+    branch_id: u32,
+    victims: &[BasketLoc],
+) -> (Vec<Value>, Vec<GapSpan>) {
+    let mut vals = Vec::new();
+    'entries: for (e, row) in events.iter().enumerate() {
+        for v in victims {
+            let (a, b) = v.entry_span();
+            if (e as u64) >= a && (e as u64) < b {
+                continue 'entries;
+            }
+        }
+        vals.push(row[branch_id as usize].clone());
+    }
+    let mut gaps = Vec::new();
+    for v in victims {
+        push_gap(&mut gaps, GapSpan { first_entry: v.first_entry, n_entries: v.n_entries as u64 });
+    }
+    (vals, gaps)
+}
+
+#[test]
+fn transient_faults_with_retry_are_byte_identical_to_fault_free() {
+    let (mut rng, _guard) = seeded(0xFA17);
+    let event_seed = rng.next_u64();
+    let events = synthetic::events(100, event_seed);
+    let settings_grid = sample(grid(), prop_rounds(12));
+    let (mut faults_total, mut retries_total) = (0u64, 0u64);
+    for (i, settings) in settings_grid.into_iter().enumerate() {
+        let basket_size = rng.range(256, 8192);
+        let path = tmp_path("faults_retry", &format!("grid{i}"));
+        write_sample_tree(&path, settings, events.len(), basket_size, event_seed);
+        for workers in [1usize, 2, 4] {
+            let spec = FaultSpec {
+                seed: rng.next_u64(),
+                transient: 0.35,
+                short_read: 0.35,
+                delay: 0.05,
+                latency: Duration::from_micros(20),
+                // bit_flip stays 0.0: flips are *undetectable* at this
+                // layer by design, so they would (correctly) break byte
+                // identity. max_consecutive=2 < max_attempts=4 keeps the
+                // retry loop guaranteed to converge.
+                ..FaultSpec::default()
+            };
+            let par = ParallelTreeReader::open(&path, ReadAhead { workers, depth: 4 })
+                .unwrap()
+                .with_faults(spec)
+                .with_retry(instant_retry());
+            let got = par.read_all_events().unwrap();
+            assert_eq!(got, events, "{} x{workers}w under faults", settings.label());
+            faults_total += par.fault_stats().total();
+            retries_total += par.read_retries();
+            assert_eq!(
+                par.metrics_snapshot().read_retries,
+                par.read_retries(),
+                "metrics bridge out of sync"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+    // Across the whole grid the seeded plan must actually have fired —
+    // otherwise the identity assertions above proved nothing.
+    assert!(faults_total > 0, "fault plan never fired");
+    assert!(retries_total > 0, "retry layer never engaged");
+}
+
+#[test]
+fn salvage_recovers_exact_intact_complement_and_strict_rejects() {
+    let (mut rng, _guard) = seeded(0x5A17A6E);
+    let lanes = [
+        Settings::new(Algorithm::Zstd, 5),
+        Settings::new(Algorithm::Lz4, 1),
+        Settings::new(Algorithm::Zlib, 6),
+    ];
+    for round in 0..prop_rounds(6) {
+        let settings = lanes[round % lanes.len()];
+        let event_seed = rng.next_u64();
+        let n_events = 150 + rng.range(0, 150);
+        let basket_size = rng.range(512, 4096);
+        let events = synthetic::events(n_events, event_seed);
+        let path = tmp_path("faults_salvage", &format!("r{round}"));
+        let meta = write_sample_tree(&path, settings, n_events, basket_size, event_seed);
+
+        // Corrupt k distinct random baskets (identity-varint flip).
+        // Rng::range is inclusive on both ends.
+        let k = rng.range(1, 3);
+        let mut victims: BTreeSet<usize> = BTreeSet::new();
+        while victims.len() < k.min(meta.baskets.len()) {
+            victims.insert(rng.range(0, meta.baskets.len() - 1));
+        }
+        let victims: Vec<BasketLoc> = victims.iter().map(|&i| meta.baskets[i]).collect();
+        for v in &victims {
+            corrupt_identity(&path, v);
+        }
+        let hit_branches: BTreeSet<u32> = victims.iter().map(|v| v.branch_id).collect();
+
+        // Strict parity: the serial oracle and the strict pipeline must
+        // both reject every branch that owns a victim.
+        let mut serial = TreeReader::open(&path).unwrap();
+        let par = serial.read_ahead(ReadAhead { workers: 2, depth: 4 });
+        for &b in &hit_branches {
+            let serial_err = serial.read_branch(b).is_err();
+            let par_err = par.read_branch(b).is_err();
+            assert!(serial_err, "serial oracle accepted damaged branch {b}");
+            assert!(par_err, "strict pipeline accepted damaged branch {b}");
+        }
+
+        // Salvage: every branch yields exactly the intact complement,
+        // with the victims' entry spans as (merged) gaps and one damage
+        // record per victim basket.
+        for b in 0..meta.branches.len() as u32 {
+            let branch_victims: Vec<BasketLoc> =
+                victims.iter().filter(|v| v.branch_id == b).copied().collect();
+            let col = par.read_branch_salvage(b).unwrap();
+            let (want_vals, want_gaps) = intact_complement(&events, b, &branch_victims);
+            assert_eq!(col.values, want_vals, "branch {b} salvage values (round {round})");
+            assert_eq!(col.gaps, want_gaps, "branch {b} salvage gaps (round {round})");
+            assert_eq!(
+                col.damage.len(),
+                branch_victims.len(),
+                "branch {b} damage records (round {round})"
+            );
+            let lost: u64 = branch_victims.iter().map(|v| v.n_entries as u64).sum();
+            assert_eq!(col.entries_skipped(), lost);
+            assert_eq!(col.values.len() as u64 + lost, meta.n_entries);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Walk a basket record's payload (5 uvarints: branch id, basket index,
+/// n_entries, data_len, n_offsets) to the engine blob offset.
+fn blob_offset(bytes: &[u8], loc: &BasketLoc) -> usize {
+    let mut pos = loc.file_offset as usize + 5;
+    for _ in 0..5 {
+        let (_, n) = get_uvarint(&bytes[pos..]).expect("basket payload varint");
+        pos += n;
+    }
+    pos
+}
+
+#[test]
+fn flipped_lz4_stored_crc_is_rejected_strictly_and_salvaged() {
+    let (mut rng, _guard) = seeded(0xC2C);
+    let event_seed = rng.next_u64();
+    let n_events = 300;
+    let events = synthetic::events(n_events, event_seed);
+    let path = tmp_path("faults_salvage", "lz4crc");
+    let meta =
+        write_sample_tree(&path, Settings::new(Algorithm::Lz4, 9), n_events, 1024, event_seed);
+
+    // Find a basket whose span actually carries the LZ4 tag — runs that
+    // did not compress fall back to a raw span with no stored CRC.
+    let mut bytes = std::fs::read(&path).unwrap();
+    let victim = *meta
+        .baskets
+        .iter()
+        .find(|loc| {
+            let at = blob_offset(&bytes, loc);
+            &bytes[at..at + 2] == b"L4"
+        })
+        .expect("no LZ4-compressed basket in a level-9 synthetic file");
+    // Engine span: 10-byte header, then the LZ4 body's leading 4-byte
+    // stored CRC32 — flip one CRC byte so framing stays valid and only
+    // the payload integrity check can catch it.
+    let at = blob_offset(&bytes, &victim) + 10;
+    bytes[at] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut serial = TreeReader::open(&path).unwrap();
+    let par = serial.read_ahead(ReadAhead { workers: 2, depth: 4 });
+    assert!(serial.read_branch(victim.branch_id).is_err(), "serial oracle accepted bad CRC");
+    let strict_err = format!("{:#}", par.read_branch(victim.branch_id).unwrap_err());
+    assert!(
+        strict_err.contains(&format!("file offset {}", victim.file_offset)),
+        "strict error lacks location context: {strict_err}"
+    );
+
+    let col = par.read_branch_salvage(victim.branch_id).unwrap();
+    let (want_vals, want_gaps) = intact_complement(&events, victim.branch_id, &[victim]);
+    assert_eq!(col.values, want_vals);
+    assert_eq!(col.gaps, want_gaps);
+    assert_eq!(col.damage.len(), 1);
+    assert_eq!(col.damage[0].loc.basket_index, victim.basket_index);
+    std::fs::remove_file(&path).ok();
+}
