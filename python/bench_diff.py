@@ -15,6 +15,8 @@ bench job just regenerated is NEW. Prints
     serial vs offset-sorted vs submission-order prefetch),
   * the `projection_range` table of NEW (entry-range slices: full tree vs
     the middle-50% window, offset vs submission prefetch),
+  * the `concurrent` table of NEW (scan-server waves of 1/8/64 queries:
+    aggregate MB/s and p99 latency, cold vs warm decoded-basket cache),
   * per-(payload, setting) compress/decompress throughput deltas vs the
     baseline where both sides have real numbers.
 
@@ -44,6 +46,7 @@ KNOWN_SCHEMAS = (
     "bench-codecs/v2",
     "bench-codecs/v3",
     "bench-codecs/v4",
+    "bench-codecs/v5",
 )
 
 
@@ -76,12 +79,17 @@ def validate(doc, path):
         ("results", ("payload", "setting")),
         ("fast_path_speedups", ("name", "payload")),
     ]
-    if schema in ("bench-codecs/v2", "bench-codecs/v3", "bench-codecs/v4"):
+    # Each schema bump adds one section; KNOWN_SCHEMAS is ordered, so the
+    # tag's index tells us which sections must be present.
+    version = KNOWN_SCHEMAS.index(schema) + 1
+    if version >= 2:
         required.append(("read_pipeline", ("setting", "workers")))
-    if schema in ("bench-codecs/v3", "bench-codecs/v4"):
+    if version >= 3:
         required.append(("projection", ("branches", "order", "workers")))
-    if schema == "bench-codecs/v4":
+    if version >= 4:
         required.append(("projection_range", ("range", "order", "workers")))
+    if version >= 5:
+        required.append(("concurrent", ("queries", "cache")))
     for key, row_keys in required:
         rows = doc.get(key)
         if not isinstance(rows, list):
@@ -159,6 +167,22 @@ def projection_range_table(doc, title):
     return out
 
 
+def concurrent_table(doc, title):
+    rows = doc.get("concurrent") or []
+    if not rows:
+        return {}
+    print(f"\n== {title}: concurrent scan server ({len(rows)} lanes) ==")
+    print(f"  {'queries':>8} {'cache':<8} {'aggregate':>9} {'p99 ms':>9}")
+    out = {}
+    for r in rows:
+        queries, cache = r.get("queries", "?"), r.get("cache", "?")
+        p99 = r.get("p99_ms")
+        p99_s = f"{p99:9.2f}" if isinstance(p99, (int, float)) else f"{'-':>9}"
+        print(f"  {queries!s:>8} {cache:<8} {fmt_mbps(r.get('MBps'))} {p99_s}")
+        out[(queries, cache)] = r.get("MBps")
+    return out
+
+
 def check_lane_coverage(base_lanes, new_lanes, what):
     """A lane in the committed baseline that the regenerated file no longer
     produces means the bench and its baseline have drifted apart — fail."""
@@ -214,15 +238,18 @@ def main(argv=None):
     new_read = read_pipeline_table(new, "current run")
     new_proj = projection_table(new, "current run")
     new_prange = projection_range_table(new, "current run")
+    new_conc = concurrent_table(new, "current run")
 
     base_spd = speedup_table(base, "committed baseline")
     base_read = read_pipeline_table(base, "committed baseline")
     base_proj = projection_table(base, "committed baseline")
     base_prange = projection_range_table(base, "committed baseline")
+    base_conc = concurrent_table(base, "committed baseline")
     check_lane_coverage(base_spd, new_spd, "fast_path_speedups")
     check_lane_coverage(base_read, new_read, "read_pipeline")
     check_lane_coverage(base_proj, new_proj, "projection")
     check_lane_coverage(base_prange, new_prange, "projection_range")
+    check_lane_coverage(base_conc, new_conc, "concurrent")
 
     common = [k for k in new_spd if k in base_spd
               and isinstance(new_spd[k], (int, float))
@@ -259,6 +286,15 @@ def main(argv=None):
         for k in sorted(common):
             print(f"  {k[0]:<12} {k[1]:<12} {k[2]!s:>8} "
                   f"{base_prange[k]:8.1f} -> {new_prange[k]:8.1f} MB/s")
+
+    common = [k for k in new_conc if k in base_conc
+              and isinstance(new_conc[k], (int, float))
+              and isinstance(base_conc[k], (int, float))]
+    if common:
+        print("\n== concurrent scan-server drift vs baseline ==")
+        for k in sorted(common):
+            print(f"  {k[0]!s:>8}q {k[1]:<8} "
+                  f"{base_conc[k]:8.1f} -> {new_conc[k]:8.1f} MB/s")
 
     base_rows = {result_key(r): r for r in (base.get("results") or [])}
     new_rows = {result_key(r): r for r in (new.get("results") or [])}

@@ -7,8 +7,9 @@ Usage:
 The PR-1/PR-2/PR-3 perf-trajectory sections of ROADMAP.md were authored in
 containers without a Rust toolchain, so their speedup claims point at the
 bench artifact instead of quoting numbers. This script renders the
-artifact's `fast_path_speedups`, `read_pipeline`, `projection`, and
-`projection_range` sections as markdown tables into the block delimited by
+artifact's `fast_path_speedups`, `read_pipeline`, `projection`,
+`projection_range`, and `concurrent` sections as markdown tables into the
+block delimited by
 
     <!-- BENCH_NUMBERS_BEGIN -->
     ...
@@ -117,6 +118,30 @@ def render(doc):
                 )
         else:
             lines.append("*(projection_range lanes present but unfilled)*")
+    concs = doc.get("concurrent") or []
+    have_concs = [r for r in concs if isinstance(r.get("MBps"), (int, float))]
+    if concs:
+        lines.append("")
+        lines.append("Concurrent scan server (waves of identical all-branch queries; "
+                     "aggregate uncompressed MB/s over the wave, per-query p99 latency; "
+                     "cold = fresh decoded-basket cache, warm = identical repeat wave):")
+        lines.append("")
+        if have_concs:
+            lines.append("| queries | cold MB/s | cold p99 ms | warm MB/s | warm p99 ms |")
+            lines.append("|---|---:|---:|---:|---:|")
+            by_queries = {}
+            for r in concs:
+                by_queries.setdefault(r.get("queries", "?"), {})[r.get("cache")] = (
+                    r.get("MBps"), r.get("p99_ms"))
+            for queries, cells in by_queries.items():
+                cold = cells.get("cold", (None, None))
+                warm = cells.get("warm", (None, None))
+                lines.append(
+                    f"| {queries} | {fmt(cold[0])} | {fmt(cold[1])} | "
+                    f"{fmt(warm[0])} | {fmt(warm[1])} |"
+                )
+        else:
+            lines.append("*(concurrent lanes present but unfilled)*")
     return "\n".join(lines)
 
 

@@ -1,11 +1,11 @@
 #!/usr/bin/env python3
 """Self-tests for the bench tooling contract CI leans on:
 
-  * `bench_diff.py` — schema validation (v1/v2/v3/v4), lane-coverage
-    checks, and the `--gate-fastpath` perf gate with its exit codes (0 ok,
-    2 schema mismatch, 3 perf regression);
+  * `bench_diff.py` — schema validation (v1..v5), lane-coverage checks,
+    and the `--gate-fastpath` perf gate with its exit codes (0 ok, 2
+    schema mismatch, 3 perf regression);
   * `roadmap_fill.py` — marker-block replacement and table rendering for
-    every section of a v4 document.
+    every section of a v5 document.
 
 These run in the CI `python` job so bench-tooling drift fails the build
 even when no Rust toolchain is in play. Run:
@@ -87,6 +87,22 @@ def v4_doc(speedup=3.0, with_values=True):
     return doc
 
 
+def v5_doc(speedup=3.0, with_values=True):
+    """A minimal well-formed bench-codecs/v5 document (v4 + concurrent)."""
+    def mbps(v):
+        return v if with_values else None
+
+    doc = v4_doc(speedup=speedup, with_values=with_values)
+    doc["schema"] = "bench-codecs/v5"
+    doc["concurrent"] = [
+        {"queries": 1, "cache": "cold", "MBps": mbps(600.0), "p99_ms": mbps(40.0)},
+        {"queries": 1, "cache": "warm", "MBps": mbps(2400.0), "p99_ms": mbps(10.0)},
+        {"queries": 8, "cache": "cold", "MBps": mbps(1400.0), "p99_ms": mbps(120.0)},
+        {"queries": 8, "cache": "warm", "MBps": mbps(5200.0), "p99_ms": mbps(30.0)},
+    ]
+    return doc
+
+
 def write_doc(tmp, name, doc):
     path = os.path.join(tmp, name)
     with open(path, "w") as f:
@@ -146,6 +162,24 @@ class ValidateTests(unittest.TestCase):
         with self.assertRaises(SchemaError):
             validate(doc, "doc")
 
+    def test_v5_roundtrip(self):
+        validate(v5_doc(), "doc")
+
+    def test_v5_requires_concurrent_section(self):
+        doc = v5_doc()
+        del doc["concurrent"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v4_does_not_require_concurrent(self):
+        validate(v4_doc(), "doc")  # no concurrent key at all
+
+    def test_concurrent_rows_need_keys(self):
+        doc = v5_doc()
+        del doc["concurrent"][0]["cache"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
 
 class DiffCliTests(unittest.TestCase):
     def test_identical_docs_pass(self):
@@ -199,6 +233,33 @@ class DiffCliTests(unittest.TestCase):
             new = write_doc(tmp, "new.json", v4_doc())
             r = run_diff(base, new, "--gate-fastpath", "10")
             self.assertEqual(r.returncode, 0, r.stderr)
+
+    def test_v4_baseline_with_v5_new_passes(self):
+        # Same story one bump later: a committed v4 baseline must diff
+        # cleanly against the first regenerated v5 artifact.
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v4_doc())
+            new = write_doc(tmp, "new.json", v5_doc())
+            r = run_diff(base, new, "--gate-fastpath", "10")
+            self.assertEqual(r.returncode, 0, r.stderr)
+
+    def test_v5_docs_print_concurrent_table(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            p = write_doc(tmp, "a.json", v5_doc())
+            r = run_diff(p, p)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            self.assertIn("concurrent scan server", r.stdout)
+            self.assertIn("warm", r.stdout)
+
+    def test_missing_concurrent_lane_is_schema_mismatch(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v5_doc())
+            new_doc = v5_doc()
+            new_doc["concurrent"] = new_doc["concurrent"][:2]
+            new = write_doc(tmp, "new.json", new_doc)
+            r = run_diff(base, new)
+            self.assertEqual(r.returncode, 2, r.stdout)
+            self.assertIn("concurrent", r.stderr)
 
 
 class GateTests(unittest.TestCase):
@@ -255,7 +316,7 @@ class RoadmapFillTests(unittest.TestCase):
 
     def test_fills_marker_block_with_all_tables(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v4_doc(), self.ROADMAP)
+            r, out = self.run_fill(tmp, v5_doc(), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
@@ -266,6 +327,8 @@ class RoadmapFillTests(unittest.TestCase):
             self.assertIn("| 2of8 | 300.0 | 900.0 | 700.0 |", text)
             self.assertIn("Entry-range projection", text)
             self.assertIn("| mid50 | 910.0 | 680.0 |", text)
+            self.assertIn("Concurrent scan server", text)
+            self.assertIn("| 8 | 1400.0 | 120.0 | 5200.0 | 30.0 |", text)
             self.assertIn("tail", text)
 
     def test_v3_doc_fills_without_projection_range(self):
@@ -277,15 +340,25 @@ class RoadmapFillTests(unittest.TestCase):
             self.assertIn("Columnar projection", text)
             self.assertNotIn("Entry-range projection", text)
 
+    def test_v4_doc_fills_without_concurrent(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            r, out = self.run_fill(tmp, v4_doc(), self.ROADMAP)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            with open(out) as f:
+                text = f.read()
+            self.assertIn("Entry-range projection", text)
+            self.assertNotIn("Concurrent scan server", text)
+
     def test_placeholder_doc_renders_placeholders(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v4_doc(with_values=False), self.ROADMAP)
+            r, out = self.run_fill(tmp, v5_doc(with_values=False), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
             self.assertIn("placeholder", text)
             self.assertIn("projection lanes present but unfilled", text)
             self.assertIn("projection_range lanes present but unfilled", text)
+            self.assertIn("concurrent lanes present but unfilled", text)
 
     def test_missing_markers_exit_1(self):
         with tempfile.TemporaryDirectory() as tmp:

@@ -16,7 +16,8 @@
 //!    + `results/fastpath.csv` (fast-vs-reference speedups)
 //!    + `results/read_pipeline.csv` (read-side scaling)
 //!    + `results/projection.csv` (columnar projection lanes)
-//!    + `results/projection_range.csv` (entry-range slice lanes),
+//!    + `results/projection_range.csv` (entry-range slice lanes)
+//!    + `results/concurrent.csv` (scan-server waves, cold vs warm cache),
 //!  * `BENCH_codecs.json` at the repo root — the machine-readable perf
 //!    trajectory consumed by CI and future PRs (schema documented in
 //!    `docs/BENCHMARKS.md`). Set BENCH_QUICK=1 for a smoke run.
@@ -143,6 +144,18 @@ struct ProjRangeRow {
     order: &'static str,
     workers: usize,
     mbps: f64,
+}
+
+struct ConcRow {
+    /// Concurrent queries in the wave: 1, 8, or 64.
+    queries: usize,
+    /// "cold" (first wave on a fresh server) or "warm" (identical second
+    /// wave against the populated decoded-basket cache).
+    cache: &'static str,
+    /// Aggregate uncompressed MB/s across the whole wave.
+    mbps: f64,
+    /// 99th-percentile per-query latency, milliseconds.
+    p99_ms: f64,
 }
 
 fn codec_grid(cfg: &BenchConfig) -> Vec<Row> {
@@ -553,12 +566,93 @@ fn projection_range_lanes(cfg: &BenchConfig) -> Vec<ProjRangeRow> {
     out
 }
 
+/// Concurrent serving lanes: waves of 1 / 8 / 64 identical all-branch
+/// queries over a two-file NanoAOD corpus through the scan server, cold
+/// (fresh server, empty cache) then warm (identical wave, populated
+/// cache). Aggregate MB/s is the wave's total uncompressed bytes over its
+/// wall time; p99 is per-query latency. Every query's prefetch plan is
+/// asserted to be one monotonic offset sweep — concurrency must not cost
+/// the seek-free property (docs/BENCHMARKS.md §concurrent).
+fn concurrent_lanes() -> Vec<ConcRow> {
+    use rootio::coordinator::{Query, ScanServer, ServeConfig};
+    use rootio::rfile::write_tree_serial;
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_events = if quick { 1200 } else { 6000 };
+    let dir = std::env::temp_dir().join(format!("rootio_bench_conc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench corpus dir");
+    let mut paths = Vec::new();
+    for (i, name) in ["a", "b"].iter().enumerate() {
+        let path = dir.join(format!("nanoaod_{name}.rfil"));
+        let events = nanoaod::events(n_events, 0xC0C0 + i as u64);
+        write_tree_serial(
+            &path,
+            "Events",
+            nanoaod::schema(),
+            Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+            32 * 1024,
+            events.iter().cloned(),
+        )
+        .expect("writing concurrent bench corpus");
+        paths.push(path);
+    }
+    let mut out = Vec::new();
+    for queries in [1usize, 8, 64] {
+        // Fresh server per lane so "cold" is actually cold.
+        let server = ScanServer::from_paths(&paths, ServeConfig::default()).expect("scan server");
+        let names: Vec<String> =
+            server.files().iter().map(|f| f.name.clone()).collect();
+        let mut wave = |cache: &'static str| {
+            let t0 = std::time::Instant::now();
+            let mut bytes = 0u64;
+            let mut lats: Vec<f64> = Vec::with_capacity(queries);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..queries)
+                    .map(|i| {
+                        let file = names[i % names.len()].clone();
+                        let server = &server;
+                        scope.spawn(move || {
+                            let q0 = std::time::Instant::now();
+                            let mut sq = server.query(&Query::all(&file)).expect("query");
+                            assert!(
+                                sq.plan().is_monotonic_sweep(),
+                                "concurrent plan must stay one forward sweep"
+                            );
+                            let logical = sq.plan().logical_bytes();
+                            sq.read_columns().expect("concurrent read");
+                            (logical, q0.elapsed().as_secs_f64())
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    let (b, lat) = h.join().expect("bench query thread");
+                    bytes += b;
+                    lats.push(lat);
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            lats.sort_by(|a, b| a.total_cmp(b));
+            let p99 = lats[((lats.len() as f64 * 0.99).ceil() as usize).clamp(1, lats.len()) - 1];
+            out.push(ConcRow {
+                queries,
+                cache,
+                mbps: bytes as f64 / 1e6 / wall,
+                p99_ms: p99 * 1e3,
+            });
+        };
+        wave("cold");
+        wave("warm");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    out
+}
+
 fn write_json(
     rows: &[Row],
     speedups: &[Speedup],
     reads: &[ReadRow],
     projections: &[ProjRow],
     projection_ranges: &[ProjRangeRow],
+    concurrent: &[ConcRow],
     quick: bool,
 ) -> std::io::Result<()> {
     let result_items: Vec<String> = rows
@@ -625,14 +719,27 @@ fn write_json(
             )
         })
         .collect();
+    let conc_items: Vec<String> = concurrent
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"queries\": {}, \"cache\": \"{}\", \"MBps\": {}, \"p99_ms\": {}}}",
+                c.queries,
+                json_escape(c.cache),
+                json_num(c.mbps),
+                json_num(c.p99_ms),
+            )
+        })
+        .collect();
     let doc = format!(
-        "{{\n  \"schema\": \"bench-codecs/v4\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"read_pipeline\": {},\n  \"projection\": {},\n  \"projection_range\": {}\n}}\n",
+        "{{\n  \"schema\": \"bench-codecs/v5\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"read_pipeline\": {},\n  \"projection\": {},\n  \"projection_range\": {},\n  \"concurrent\": {}\n}}\n",
         quick,
         json_array(&result_items, "  "),
         json_array(&speedup_items, "  "),
         json_array(&read_items, "  "),
         json_array(&proj_items, "  "),
         json_array(&proj_range_items, "  "),
+        json_array(&conc_items, "  "),
     );
     // Land next to Cargo.toml (the repo root) regardless of CWD.
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_codecs.json");
@@ -733,6 +840,20 @@ fn main() {
     println!("{}", t6.render());
     t6.save_csv("projection_range").unwrap();
 
-    write_json(&rows, &speedups, &reads, &projections, &projection_ranges, quick)
+    // Concurrent serving: 1/8/64-query waves, cold vs warm cache.
+    let concurrent = concurrent_lanes();
+    let mut t7 = Table::new(&["queries", "cache", "aggregate_MB_s", "p99_ms"]);
+    for c in &concurrent {
+        t7.row(vec![
+            format!("{}", c.queries),
+            c.cache.into(),
+            format!("{:.1}", c.mbps),
+            format!("{:.2}", c.p99_ms),
+        ]);
+    }
+    println!("{}", t7.render());
+    t7.save_csv("concurrent").unwrap();
+
+    write_json(&rows, &speedups, &reads, &projections, &projection_ranges, &concurrent, quick)
         .expect("writing BENCH_codecs.json");
 }

@@ -148,6 +148,20 @@ USAGE:
                [--workers N] [--profile reads.profile]]
                (--replan profile replans from a recorded access profile:
                 hot branches get decode-speed settings, cold ones ratio)
+  rootio serve --corpus DIR [--workers N] [--max-scans N] [--queue-depth N]
+               [--cache-mb N]
+               (long-running scan server over every .rfil in DIR: queries
+                share one worker pool and a decoded-basket cache. Line
+                protocol on stdin:
+                  QUERY file=NAME [branches=A,B] [entries=A..B] [salvage]
+                  STATS | WAIT | QUIT
+                QUERY lines run concurrently; WAIT drains them)
+  rootio bench-concurrent [--corpus DIR] [--queries N] [--events N]
+               [--workers N] [--cache-mb N]
+               (drive N concurrent all-branch queries twice — cold cache,
+                then warm — and report aggregate MB/s, p99 latency, and
+                cache counters; without --corpus a temporary 2-file
+                NanoAOD corpus is generated)
   rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
   rootio all-figures [--quick]
 
@@ -173,6 +187,8 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "read" => cmd_read(&args),
         "inspect" => cmd_inspect(&args),
         "scrub" => cmd_scrub(&args),
+        "serve" => cmd_serve(&args),
+        "bench-concurrent" => cmd_bench_concurrent(&args),
         "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "dict" | "scaling" => {
             let cfg = bench_cfg(&args);
             let (out, _) = run_figure(&cmd, &cfg)?;
@@ -569,16 +585,20 @@ fn cmd_read_projection(
         bytes / 1e6 / wall.as_secs_f64()
     );
     // --feedback FILE: fold this scan's per-branch stats into a persistent
-    // access profile (created on first use, accumulated across runs).
+    // access profile (created on first use, accumulated across runs). Each
+    // recording run closes one decay generation first, so the profile is
+    // an exponentially-weighted history rather than an unbounded sum.
     if let Some(fp) = args.flags.get("feedback") {
         let fp = PathBuf::from(fp);
         let mut fb = if fp.exists() { ReadFeedback::load(&fp)? } else { ReadFeedback::new() };
+        fb.advance_generation();
         fb.record_scan(proj.branch_stats());
         fb.save(&fp)?;
         println!(
-            "recorded scan into read profile {} ({} scans, {} branches)",
+            "recorded scan into read profile {} ({:.2} weighted scans, gen {}, {} branches)",
             fp.display(),
             fb.scans,
+            fb.generation,
             fb.branches().len()
         );
     }
@@ -599,13 +619,13 @@ fn cmd_inspect_replan_profile(
 ) -> Result<i32> {
     use crate::runtime::ReadFeedback;
     let fb = ReadFeedback::load(profile_path)?;
-    if fb.scans == 0 {
+    if fb.scans <= 0.0 {
         bail!("read profile {} records no scans", profile_path.display());
     }
     let planner = Planner::new(UseCase::Balanced, FeatureSource::Native);
     let profiles = crate::runtime::analyze_tree(path, workers)?;
     println!(
-        "replan(profile {}: {} scans) of {} — {} branches, analyzed via {}w read pipeline",
+        "replan(profile {}: {:.2} weighted scans) of {} — {} branches, analyzed via {}w read pipeline",
         profile_path.display(),
         fb.scans,
         path.display(),
@@ -633,7 +653,7 @@ fn cmd_inspect_replan_profile(
             .map(|s| s.label())
             .unwrap_or_else(|| format!("(default {})", reader.meta.default_settings.label()));
         println!(
-            "{:<28} {:>12} {:>12} {:>10.3} {:<11} {:<24} {}",
+            "{:<28} {:>12} {:>12.0} {:>10.3} {:<11} {:<24} {}",
             p.name,
             p.logical_bytes,
             fb.logical_bytes_read(&p.name),
@@ -724,6 +744,234 @@ fn cmd_inspect(args: &Args) -> Result<i32> {
             raw as f64 / comp.max(1) as f64,
             def.settings.map(|s| s.label()).unwrap_or_else(|| "(default)".into()),
         );
+    }
+    Ok(0)
+}
+
+/// Build a [`ServeConfig`](crate::coordinator::ServeConfig) from the
+/// shared serve/bench-concurrent flags.
+fn serve_cfg(args: &Args) -> Result<crate::coordinator::ServeConfig> {
+    let mut cfg = crate::coordinator::ServeConfig::default();
+    if let Some(w) = args.flags.get("workers") {
+        cfg.workers = w.parse::<usize>().context("bad --workers")?.max(1);
+        cfg.queue_depth = 2 * cfg.workers;
+    }
+    if let Some(m) = args.flags.get("max-scans") {
+        cfg.max_scans = m.parse::<usize>().context("bad --max-scans")?.max(1);
+    }
+    if let Some(q) = args.flags.get("queue-depth") {
+        cfg.queue_depth = q.parse::<usize>().context("bad --queue-depth")?.max(1);
+    }
+    if let Some(c) = args.flags.get("cache-mb") {
+        cfg.cache_bytes = c.parse::<u64>().context("bad --cache-mb")? << 20;
+    }
+    Ok(cfg)
+}
+
+/// Parse one `QUERY file=NAME [branches=A,B] [entries=A..B] [salvage]`
+/// line of the serve protocol.
+fn parse_serve_query(line: &str) -> Result<crate::coordinator::Query> {
+    use crate::coordinator::Query;
+    let mut q = Query { file: String::new(), branches: Vec::new(), entries: None, mode: ScanMode::Strict };
+    for tok in line.split_whitespace().skip(1) {
+        if let Some(f) = tok.strip_prefix("file=") {
+            q.file = f.to_string();
+        } else if let Some(b) = tok.strip_prefix("branches=") {
+            q.branches = b.split(',').filter(|s| !s.is_empty()).map(|s| s.to_string()).collect();
+        } else if let Some(e) = tok.strip_prefix("entries=") {
+            q.entries = Some(parse_entry_range(e)?);
+        } else if tok == "salvage" {
+            q.mode = ScanMode::Salvage;
+        } else {
+            bail!("unknown QUERY token '{tok}'");
+        }
+    }
+    if q.file.is_empty() {
+        bail!("QUERY needs file=NAME");
+    }
+    Ok(q)
+}
+
+/// `rootio serve --corpus DIR`: a long-running scan server speaking a
+/// line protocol on stdin (no network dependencies in the offline crate
+/// set — a socket front-end would wrap this same loop). QUERY lines run
+/// concurrently on the shared worker pool; results print as they finish.
+fn cmd_serve(args: &Args) -> Result<i32> {
+    use std::io::BufRead;
+    let corpus = PathBuf::from(args.flags.get("corpus").context("--corpus DIR required")?);
+    let server = crate::coordinator::ScanServer::open_corpus(&corpus, serve_cfg(args)?)?;
+    let files: Vec<String> = server.files().iter().map(|f| f.name.clone()).collect();
+    println!("serving {} file(s) from {}: {}", files.len(), corpus.display(), files.join(", "));
+    let stdin = std::io::stdin();
+    let mut next_id = 0u64;
+    std::thread::scope(|scope| -> Result<()> {
+        let server = &server;
+        for line in stdin.lock().lines() {
+            let line = line?;
+            let trimmed = line.trim();
+            let upper = trimmed.split_whitespace().next().unwrap_or("").to_uppercase();
+            match upper.as_str() {
+                "" => {}
+                "QUERY" => {
+                    let q = match parse_serve_query(trimmed) {
+                        Ok(q) => q,
+                        Err(e) => {
+                            println!("ERR {e:#}");
+                            continue;
+                        }
+                    };
+                    let id = next_id;
+                    next_id += 1;
+                    match server.query(&q) {
+                        Ok(mut sq) => {
+                            // Queries drain on their own threads so many can
+                            // be in flight; scope joins them all on QUIT/EOF.
+                            scope.spawn(move || {
+                                let t0 = std::time::Instant::now();
+                                match sq.read_columns() {
+                                    Ok(cols) => {
+                                        let st = sq.stats();
+                                        let rows = cols.first().map(|c| c.len()).unwrap_or(0);
+                                        println!(
+                                            "OK #{id} file={} rows={rows} cols={} gaps={} {:.3}s wait={:.3}s decoded={} cached={} coalesced={}",
+                                            q.file,
+                                            cols.len(),
+                                            sq.gaps().len(),
+                                            t0.elapsed().as_secs_f64(),
+                                            st.queue_wait.as_secs_f64(),
+                                            st.baskets_decoded,
+                                            st.baskets_from_cache,
+                                            st.baskets_coalesced,
+                                        );
+                                    }
+                                    Err(e) => println!("ERR #{id} {e:#}"),
+                                }
+                            });
+                        }
+                        Err(e) => println!("ERR #{id} {e:#}"),
+                    }
+                }
+                "STATS" => {
+                    let cs = server.cache_stats();
+                    println!(
+                        "STATS lookups={} hits={} misses={} evictions={} resident={}B/{} entries peak_active={}",
+                        cs.lookups, cs.hits, cs.misses, cs.evictions, cs.resident_bytes,
+                        cs.resident_entries, server.peak_active()
+                    );
+                    println!("{}", server.metrics_snapshot().report_decode("serve"));
+                }
+                // WAIT is only meaningful interactively: the scope already
+                // joins every query thread before QUIT returns.
+                "WAIT" => {}
+                "QUIT" | "EXIT" => break,
+                other => println!("ERR unknown command '{other}' (QUERY/STATS/WAIT/QUIT)"),
+            }
+        }
+        Ok(())
+    })?;
+    println!("{}", server.metrics_snapshot().report_decode("serve"));
+    Ok(0)
+}
+
+/// `rootio bench-concurrent`: drive N concurrent all-branch queries over
+/// a corpus twice — cold cache, then warm — and report aggregate
+/// throughput, p99 latency, and cache counters. The real lanes live in
+/// the bench harness (BENCH_codecs.json §concurrent); this is the
+/// interactive spot-check.
+fn cmd_bench_concurrent(args: &Args) -> Result<i32> {
+    use crate::coordinator::{Query, ScanServer};
+    let queries: usize =
+        args.flags.get("queries").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let queries = queries.max(1);
+    let events: usize = args.flags.get("events").map(|s| s.parse()).transpose()?.unwrap_or(20_000);
+
+    // Use --corpus if given, else generate a temporary two-file NanoAOD
+    // corpus (LZ4-1 + BitShuffle, the paper's Run-3 default lane).
+    let (corpus, temp): (PathBuf, bool) = match args.flags.get("corpus") {
+        Some(dir) => (PathBuf::from(dir), false),
+        None => {
+            let mut dir = std::env::temp_dir();
+            dir.push(format!("rootio_bench_concurrent_{}", std::process::id()));
+            std::fs::create_dir_all(&dir)?;
+            let mut settings = Settings::new(Algorithm::Lz4, 1);
+            settings.precond = Precond::BitShuffle(4);
+            for (i, name) in ["nanoaod_a", "nanoaod_b"].iter().enumerate() {
+                crate::rfile::write_tree_serial(
+                    &dir.join(format!("{name}.rfil")),
+                    "Events",
+                    nanoaod::schema(),
+                    settings,
+                    crate::rfile::DEFAULT_BASKET_SIZE,
+                    nanoaod::events(events, 0x5EED + i as u64).into_iter(),
+                )?;
+            }
+            (dir, true)
+        }
+    };
+
+    let server = ScanServer::open_corpus(&corpus, serve_cfg(args)?)?;
+    let names: Vec<String> = server.files().iter().map(|f| f.name.clone()).collect();
+    println!(
+        "bench-concurrent: {} queries over {} file(s), {} workers, cache {} MB",
+        queries,
+        names.len(),
+        serve_cfg(args)?.workers,
+        serve_cfg(args)?.cache_bytes >> 20
+    );
+
+    let wave = |label: &str| -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let mut bytes = 0u64;
+        let mut lats: Vec<f64> = Vec::with_capacity(queries);
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(queries);
+            for i in 0..queries {
+                let file = names[i % names.len()].clone();
+                let server = &server;
+                handles.push(scope.spawn(move || -> Result<(u64, f64)> {
+                    let q0 = std::time::Instant::now();
+                    let mut sq = server.query(&Query::all(&file))?;
+                    let logical = sq.plan().logical_bytes();
+                    sq.read_columns()?;
+                    Ok((logical, q0.elapsed().as_secs_f64()))
+                }));
+            }
+            for h in handles {
+                let (b, lat) = h.join().expect("query thread panicked")?;
+                bytes += b;
+                lats.push(lat);
+            }
+            Ok(())
+        })?;
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.total_cmp(b));
+        let p99 = lats[((lats.len() as f64 * 0.99).ceil() as usize).clamp(1, lats.len()) - 1];
+        println!(
+            "{label}: {:.2} MB in {:.3}s = {:.1} MB/s aggregate, p99 latency {:.3}s",
+            bytes as f64 / 1e6,
+            wall,
+            bytes as f64 / 1e6 / wall,
+            p99
+        );
+        Ok(())
+    };
+
+    wave("cold")?;
+    wave("warm")?;
+    let cs = server.cache_stats();
+    println!(
+        "cache: lookups={} hits={} misses={} evictions={} resident={:.2}MB peak_active={}",
+        cs.lookups,
+        cs.hits,
+        cs.misses,
+        cs.evictions,
+        cs.resident_bytes as f64 / 1e6,
+        server.peak_active()
+    );
+    println!("{}", server.metrics_snapshot().report_decode("bench-concurrent"));
+    if temp {
+        drop(server);
+        std::fs::remove_dir_all(&corpus).ok();
     }
     Ok(0)
 }

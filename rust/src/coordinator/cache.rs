@@ -1,0 +1,362 @@
+//! Sharded, byte-budgeted LRU cache of **decoded** basket payloads — the
+//! cross-scan decode-sharing layer under the concurrent scheduler
+//! ([`super::scheduler`]).
+//!
+//! The paper's analysis workload is "millions of users hitting the same
+//! hot NanoAOD branches": N concurrent projection scans over one corpus
+//! repeatedly decode the *same* baskets. Caching the decoded payload (not
+//! the compressed record — decompression is the expensive half, Fig 3)
+//! turns that duplicated CPU into a hash lookup.
+//!
+//! Design points:
+//!
+//! * **Key identity** — [`CacheKey`] is `(file_id, branch_id,
+//!   basket_index)`. [`FileId`](crate::rfile::FileId) hashes device/inode
+//!   + length + mtime, so a rewritten file never serves stale baskets and
+//!   two paths to the same file share entries.
+//! * **Sharding** — the key hash picks one of `n_shards` (power of two)
+//!   independently-locked shards, so concurrent scans touching different
+//!   baskets don't serialize on a global mutex. The byte budget is split
+//!   evenly across shards.
+//! * **Refcounted payloads** — entries hold `Arc<BasketContent>`; a `get`
+//!   clones the `Arc`. Eviction drops the cache's reference only, so an
+//!   in-flight scan keeps reading its (now-evicted) basket safely.
+//! * **LRU by logical tick** — each shard keeps a `tick → key` index; a
+//!   hit reassigns the entry's tick (O(log n) in the resident count).
+//!   Eviction pops the minimum tick until the shard is back under budget.
+//! * **Oversize rejection** — a payload larger than one shard's budget is
+//!   never inserted (it would evict the whole shard for a single-use
+//!   basket); the insert is counted in [`CacheStats::rejected`].
+//! * A `budget_bytes` of 0 disables caching entirely: every lookup
+//!   misses, every insert is rejected, and the scheduler falls back to
+//!   decode-per-scan.
+//!
+//! Accounting invariant (asserted by the concurrent integration suite):
+//! `hits + misses == lookups`, always.
+
+use crate::rfile::basket::BasketContent;
+use crate::rfile::FileId;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Identity of one decoded basket across the corpus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey {
+    /// Content identity of the owning file ([`FileId::of_path`]).
+    pub file: FileId,
+    /// Branch id within that file's tree.
+    pub branch_id: u32,
+    /// Basket sequence number within the branch.
+    pub basket_index: u32,
+}
+
+/// Counters describing cache behaviour since construction. Monotonic
+/// except `resident_*`, which snapshot the current contents.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Total `get` calls.
+    pub lookups: u64,
+    /// Lookups that returned a payload.
+    pub hits: u64,
+    /// Lookups that found nothing (`lookups - hits`).
+    pub misses: u64,
+    /// Payloads accepted by `insert`.
+    pub insertions: u64,
+    /// Entries evicted to make room (refcounted — in-flight readers of an
+    /// evicted payload are unaffected).
+    pub evictions: u64,
+    /// Inserts refused because the payload exceeds one shard's budget
+    /// (or the cache is disabled).
+    pub rejected: u64,
+    /// Logical bytes served to scans out of the cache (hit payload sizes).
+    pub bytes_from_cache: u64,
+    /// Bytes currently resident across all shards.
+    pub resident_bytes: u64,
+    /// Entries currently resident across all shards.
+    pub resident_entries: u64,
+}
+
+/// One cache entry: the shared payload plus its LRU bookkeeping.
+struct Entry {
+    content: Arc<BasketContent>,
+    bytes: u64,
+    /// Position in the shard's `lru` index (reassigned on every touch).
+    tick: u64,
+}
+
+/// One independently-locked shard: key → entry map plus a tick-ordered
+/// LRU index and the shard's running byte total.
+struct Shard {
+    map: HashMap<CacheKey, Entry>,
+    /// tick → key, oldest first. Ticks are unique within a shard.
+    lru: BTreeMap<u64, CacheKey>,
+    bytes: u64,
+    next_tick: u64,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard { map: HashMap::new(), lru: BTreeMap::new(), bytes: 0, next_tick: 0 }
+    }
+
+    fn touch(&mut self, key: &CacheKey) -> Option<Arc<BasketContent>> {
+        let tick = self.next_tick;
+        let e = self.map.get_mut(key)?;
+        self.lru.remove(&e.tick);
+        e.tick = tick;
+        self.next_tick += 1;
+        self.lru.insert(tick, *key);
+        Some(Arc::clone(&e.content))
+    }
+
+    /// Evict oldest entries until `bytes <= budget`. Returns evictions.
+    fn evict_to(&mut self, budget: u64) -> u64 {
+        let mut evicted = 0;
+        while self.bytes > budget {
+            let Some((&tick, &key)) = self.lru.iter().next() else { break };
+            self.lru.remove(&tick);
+            if let Some(e) = self.map.remove(&key) {
+                self.bytes -= e.bytes;
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+}
+
+/// The sharded LRU cache. Cheap to share (`Arc` internally per shard is
+/// unnecessary — the whole cache lives in one `Arc` inside the server).
+pub struct BasketCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard byte budget (total / n_shards).
+    shard_budget: u64,
+    /// Shard index mask (`n_shards` is a power of two).
+    mask: u64,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    rejected: AtomicU64,
+    bytes_from_cache: AtomicU64,
+}
+
+impl BasketCache {
+    /// Cache with `budget_bytes` total capacity split over `n_shards`
+    /// (rounded up to a power of two, min 1). `budget_bytes == 0` disables
+    /// caching.
+    pub fn new(budget_bytes: u64, n_shards: usize) -> Self {
+        let n = n_shards.max(1).next_power_of_two();
+        BasketCache {
+            shards: (0..n).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_budget: budget_bytes / n as u64,
+            mask: n as u64 - 1,
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            bytes_from_cache: AtomicU64::new(0),
+        }
+    }
+
+    /// The decoded size charged against the budget for a payload.
+    pub fn payload_bytes(content: &BasketContent) -> u64 {
+        (content.data.len() + 4 * content.offsets.len()) as u64
+    }
+
+    fn shard_of(&self, key: &CacheKey) -> &Mutex<Shard> {
+        // FNV-1a over the key words; independent of HashMap's hasher so a
+        // pathological basket distribution can't alias both levels.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for w in [key.file.0, key.branch_id as u64, key.basket_index as u64] {
+            for b in w.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        &self.shards[(h & self.mask) as usize]
+    }
+
+    /// Look up a decoded basket. A hit refreshes the entry's LRU position
+    /// and returns a refcounted payload that outlives any later eviction.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<BasketContent>> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let found = self.shard_of(key).lock().unwrap().touch(key);
+        if let Some(content) = &found {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.bytes_from_cache.fetch_add(Self::payload_bytes(content), Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Insert a decoded basket, evicting oldest entries in its shard as
+    /// needed. Payloads larger than one shard's budget are rejected (and
+    /// counted); re-inserting a resident key refreshes its payload.
+    /// Returns whether the payload is now resident.
+    pub fn insert(&self, key: CacheKey, content: Arc<BasketContent>) -> bool {
+        let bytes = Self::payload_bytes(&content);
+        if bytes > self.shard_budget {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let mut shard = self.shard_of(&key).lock().unwrap();
+        let tick = shard.next_tick;
+        shard.next_tick += 1;
+        if let Some(old) = shard.map.insert(key, Entry { content, bytes, tick }) {
+            shard.lru.remove(&old.tick);
+            shard.bytes -= old.bytes;
+        }
+        shard.lru.insert(tick, key);
+        shard.bytes += bytes;
+        let evicted = shard.evict_to(self.shard_budget);
+        drop(shard);
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// Whether a key is currently resident (no LRU touch, no counters) —
+    /// test/introspection hook.
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.shard_of(key).lock().unwrap().map.contains_key(key)
+    }
+
+    /// Snapshot the counters plus current residency.
+    pub fn stats(&self) -> CacheStats {
+        let lookups = self.lookups.load(Ordering::Relaxed);
+        let hits = self.hits.load(Ordering::Relaxed);
+        let (mut resident_bytes, mut resident_entries) = (0u64, 0u64);
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            resident_bytes += s.bytes;
+            resident_entries += s.map.len() as u64;
+        }
+        CacheStats {
+            lookups,
+            hits,
+            misses: lookups - hits,
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            bytes_from_cache: self.bytes_from_cache.load(Ordering::Relaxed),
+            resident_bytes,
+            resident_entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(file: u64, branch: u32, basket: u32) -> CacheKey {
+        CacheKey { file: FileId(file), branch_id: branch, basket_index: basket }
+    }
+
+    fn payload(n: usize, fill: u8) -> Arc<BasketContent> {
+        Arc::new(BasketContent { n_entries: n as u32, data: vec![fill; n], offsets: Vec::new() })
+    }
+
+    #[test]
+    fn hits_and_misses_account_exactly() {
+        let cache = BasketCache::new(1 << 20, 4);
+        assert!(cache.get(&key(1, 0, 0)).is_none());
+        cache.insert(key(1, 0, 0), payload(100, 7));
+        assert_eq!(cache.get(&key(1, 0, 0)).unwrap().data, vec![7u8; 100]);
+        assert!(cache.get(&key(1, 0, 1)).is_none(), "different basket");
+        assert!(cache.get(&key(2, 0, 0)).is_none(), "different file");
+        let s = cache.stats();
+        assert_eq!(s.lookups, 4);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.hits + s.misses, s.lookups);
+        assert_eq!(s.bytes_from_cache, 100);
+        assert_eq!(s.resident_entries, 1);
+        assert_eq!(s.resident_bytes, 100);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_and_hits_refresh_recency() {
+        // One shard, budget for exactly two 100-byte payloads.
+        let cache = BasketCache::new(200, 1);
+        cache.insert(key(1, 0, 0), payload(100, 0));
+        cache.insert(key(1, 0, 1), payload(100, 1));
+        // Touch basket 0 so basket 1 becomes the LRU victim.
+        assert!(cache.get(&key(1, 0, 0)).is_some());
+        cache.insert(key(1, 0, 2), payload(100, 2));
+        assert!(cache.contains(&key(1, 0, 0)), "recently-touched entry survives");
+        assert!(!cache.contains(&key(1, 0, 1)), "LRU entry evicted");
+        assert!(cache.contains(&key(1, 0, 2)));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident_entries, 2);
+        assert!(s.resident_bytes <= 200);
+    }
+
+    #[test]
+    fn eviction_never_invalidates_a_held_payload() {
+        let cache = BasketCache::new(100, 1);
+        cache.insert(key(1, 0, 0), payload(100, 9));
+        let held = cache.get(&key(1, 0, 0)).unwrap();
+        // This insert evicts basket 0 entirely.
+        cache.insert(key(1, 0, 1), payload(100, 3));
+        assert!(!cache.contains(&key(1, 0, 0)));
+        // The refcounted payload is still intact.
+        assert_eq!(held.data, vec![9u8; 100]);
+    }
+
+    #[test]
+    fn oversize_payloads_are_rejected_not_thrashed() {
+        let cache = BasketCache::new(400, 4); // 100 bytes per shard
+        cache.insert(key(1, 0, 0), payload(50, 1));
+        assert!(!cache.insert(key(1, 0, 1), payload(500, 2)), "bigger than a shard");
+        assert_eq!(cache.stats().rejected, 1);
+        assert!(cache.contains(&key(1, 0, 0)), "resident entries untouched by a rejection");
+        assert!(!cache.contains(&key(1, 0, 1)));
+    }
+
+    #[test]
+    fn zero_budget_disables_caching() {
+        let cache = BasketCache::new(0, 8);
+        assert!(!cache.insert(key(1, 0, 0), payload(1, 0)));
+        assert!(cache.get(&key(1, 0, 0)).is_none());
+        let s = cache.stats();
+        assert_eq!((s.insertions, s.rejected, s.hits), (0, 1, 0));
+        assert_eq!(s.resident_entries, 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_leaking_bytes() {
+        let cache = BasketCache::new(1 << 20, 1);
+        cache.insert(key(1, 2, 3), payload(100, 1));
+        cache.insert(key(1, 2, 3), payload(60, 2));
+        let s = cache.stats();
+        assert_eq!(s.resident_entries, 1);
+        assert_eq!(s.resident_bytes, 60, "old payload's bytes released");
+        assert_eq!(cache.get(&key(1, 2, 3)).unwrap().data, vec![2u8; 60]);
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        for n in [1usize, 2, 3, 5, 16, 17] {
+            let cache = BasketCache::new(1 << 20, n);
+            assert!(cache.shards.len().is_power_of_two());
+            assert!(cache.shards.len() >= n.min(32));
+        }
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let cache = BasketCache::new(1 << 20, 8);
+        let mut used = std::collections::HashSet::new();
+        for basket in 0..64u32 {
+            let k = key(42, 0, basket);
+            let shard = cache.shard_of(&k) as *const _ as usize;
+            used.insert(shard);
+        }
+        assert!(used.len() >= 4, "64 keys landed in only {} of 8 shards", used.len());
+    }
+}

@@ -21,6 +21,11 @@ pub struct Metrics {
     /// [`RetryPolicy`](crate::rfile::RetryPolicy) layer (0 on the write
     /// path and whenever retries are disabled).
     pub read_retries: AtomicU64,
+    /// Decoded-basket cache hits (serving layer; 0 outside a
+    /// [`ScanServer`](crate::coordinator::ScanServer)).
+    pub cache_hits: AtomicU64,
+    /// Decoded-basket cache misses (serving layer).
+    pub cache_misses: AtomicU64,
 }
 
 impl Metrics {
@@ -51,6 +56,13 @@ impl Metrics {
         self.read_retries.store(n, Ordering::Relaxed);
     }
 
+    /// Fold the decoded-basket cache's cumulative hit/miss counters in.
+    /// Same idempotent-store contract as [`Metrics::set_read_retries`].
+    pub fn set_cache_counters(&self, hits: u64, misses: u64) {
+        self.cache_hits.store(hits, Ordering::Relaxed);
+        self.cache_misses.store(misses, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             baskets: self.baskets.load(Ordering::Relaxed),
@@ -67,6 +79,8 @@ impl Metrics {
                 self.lat_buckets[4].load(Ordering::Relaxed),
             ],
             read_retries: self.read_retries.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -84,6 +98,10 @@ pub struct Snapshot {
     /// Transient read failures retried by the read path (see
     /// [`Metrics::read_retries`]).
     pub read_retries: u64,
+    /// Decoded-basket cache hits (see [`Metrics::cache_hits`]).
+    pub cache_hits: u64,
+    /// Decoded-basket cache misses (see [`Metrics::cache_misses`]).
+    pub cache_misses: u64,
 }
 
 impl Snapshot {
@@ -119,8 +137,13 @@ impl Snapshot {
         } else {
             String::new()
         };
+        let cache = if self.cache_hits + self.cache_misses > 0 {
+            format!(" cache-hits={} cache-misses={}", self.cache_hits, self.cache_misses)
+        } else {
+            String::new()
+        };
         format!(
-            "{label}: baskets={} in={:.2}MB out={:.2}MB ratio={:.3} cpu-{verb}={:.1}ms ({:.1} MB/s/worker) lat[<.1ms,<1ms,<10ms,<100ms,>=]={:?}{retries}",
+            "{label}: baskets={} in={:.2}MB out={:.2}MB ratio={:.3} cpu-{verb}={:.1}ms ({:.1} MB/s/worker) lat[<.1ms,<1ms,<10ms,<100ms,>=]={:?}{retries}{cache}",
             self.baskets,
             self.bytes_in as f64 / 1e6,
             self.bytes_out as f64 / 1e6,
@@ -160,5 +183,17 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.read_retries, 7);
         assert!(s.report_decode("x").contains("read-retries=7"));
+    }
+
+    #[test]
+    fn cache_counters_surface_in_snapshot_and_report() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().cache_hits, 0);
+        assert!(!m.snapshot().report_decode("x").contains("cache-hits"));
+        m.set_cache_counters(12, 3);
+        m.set_cache_counters(12, 3); // idempotent: cumulative store, not add
+        let s = m.snapshot();
+        assert_eq!((s.cache_hits, s.cache_misses), (12, 3));
+        assert!(s.report_decode("x").contains("cache-hits=12 cache-misses=3"));
     }
 }

@@ -1,22 +1,30 @@
 //! L3 coordinator: the parallel basket-compression pipeline (bounded-queue
 //! backpressure, ordered commit), its read-side twin (prefetch + parallel
 //! decompression + ordered delivery), columnar projection scans over that
-//! twin (multi-branch single-pass reads with offset-sorted prefetch),
-//! runtime metrics, and the adaptive compression planner served by the XLA
-//! runtime.
+//! twin (multi-branch single-pass reads with offset-sorted prefetch), the
+//! concurrent serving layer (a shared-worker scan scheduler over a sharded
+//! decoded-basket cache), runtime metrics, and the adaptive compression
+//! planner served by the XLA runtime.
 
 pub mod adaptive;
+pub mod cache;
 pub mod metrics;
 pub mod pipeline;
 pub mod projection;
 pub mod read_pipeline;
+pub mod scheduler;
 
 pub use adaptive::{FeatureSource, Planner, UseCase};
+pub use cache::{BasketCache, CacheKey, CacheStats};
 pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{write_tree_parallel, ParallelSink, PipelineConfig};
 pub use projection::{
     BranchReadStats, PrefetchOrder, ProjectionPlan, ProjectionReader, ProjectionScan, RowBatch,
 };
 pub use read_pipeline::{
-    BasketScan, DamageRecord, Delivery, ParallelTreeReader, ReadAhead, SalvageColumn, ScanMode,
+    BasketScan, BasketStream, DamageRecord, DecodedBasket, Delivery, ParallelTreeReader,
+    ReadAhead, SalvageColumn, ScanMode,
+};
+pub use scheduler::{
+    CorpusFile, Query, QueryStats, ScanServer, ServeConfig, ServeQuery, ServeStream,
 };

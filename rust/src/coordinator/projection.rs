@@ -53,7 +53,9 @@ use crate::rfile::reader::decode_values;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
-use super::read_pipeline::{BasketScan, DamageRecord, Delivery, ParallelTreeReader, ScanMode};
+use super::read_pipeline::{
+    BasketScan, BasketStream, DamageRecord, DecodedBasket, Delivery, ParallelTreeReader, ScanMode,
+};
 
 /// Order in which a projection's merged basket list is handed to the
 /// prefetcher.
@@ -213,27 +215,31 @@ struct SlotState {
     /// basket_index). Empty in steady state for both standard plan orders —
     /// a branch's baskets sit at increasing offsets, so both sorts preserve
     /// each per-branch subsequence — but the reorder keeps delivery correct
-    /// for *any* plan permutation.
-    parked: BTreeMap<u32, (BasketLoc, Option<BasketContent>)>,
+    /// for *any* plan permutation (the concurrent scheduler's streams
+    /// deliver in whatever order cache hits and worker skew produce).
+    parked: BTreeMap<u32, (BasketLoc, Option<DecodedBasket>)>,
 }
 
-/// Multi-branch scan: wraps the PR-3 [`BasketScan`] and re-routes its
-/// interleaved delivery into per-branch streams, each in basket_index
-/// (= event) order. Yields `(slot, BasketLoc, BasketContent)` where `slot`
-/// indexes the projection's branch list.
-pub struct ProjectionScan {
-    scan: BasketScan,
+/// Multi-branch scan: wraps any [`BasketStream`] — the single-reader
+/// [`BasketScan`] (the default) or a per-query
+/// [`ServeStream`](super::scheduler::ServeStream) from the concurrent
+/// scheduler — and re-routes its interleaved delivery into per-branch
+/// streams, each in basket_index (= event) order. Yields
+/// `(slot, BasketLoc, DecodedBasket)` where `slot` indexes the
+/// projection's branch list.
+pub struct ProjectionScan<S: BasketStream = BasketScan> {
+    scan: S,
     slots: Vec<SlotState>,
     slot_of: HashMap<u32, usize>,
     /// Baskets unblocked by the last arrival, not yet handed out. `None`
     /// content is a salvage-mode damage marker.
-    ready: VecDeque<(usize, BasketLoc, Option<BasketContent>)>,
+    ready: VecDeque<(usize, BasketLoc, Option<DecodedBasket>)>,
     /// Set after a terminal error so the stream ends instead of re-erroring.
     failed: bool,
 }
 
-impl ProjectionScan {
-    fn new(scan: BasketScan, plan: &ProjectionPlan) -> Self {
+impl<S: BasketStream> ProjectionScan<S> {
+    pub(crate) fn new(scan: S, plan: &ProjectionPlan) -> Self {
         // A sliced plan starts each branch mid-directory: the first
         // deliverable basket_index per branch is the smallest one in the
         // plan, not 0.
@@ -261,7 +267,7 @@ impl ProjectionScan {
     /// `None` when the plan is exhausted.
     pub fn next_delivery(
         &mut self,
-    ) -> Option<Result<(usize, BasketLoc, Option<BasketContent>)>> {
+    ) -> Option<Result<(usize, BasketLoc, Option<DecodedBasket>)>> {
         if self.failed {
             return None;
         }
@@ -330,7 +336,7 @@ impl ProjectionScan {
     /// failed, exactly like [`BasketScan::next_basket`]; salvage-mode
     /// damage markers are skipped (use
     /// [`next_delivery`](ProjectionScan::next_delivery) to observe them).
-    pub fn next_basket(&mut self) -> Option<Result<(usize, BasketLoc, BasketContent)>> {
+    pub fn next_basket(&mut self) -> Option<Result<(usize, BasketLoc, DecodedBasket)>> {
         loop {
             match self.next_delivery()? {
                 Ok((slot, loc, Some(content))) => return Some(Ok((slot, loc, content))),
@@ -341,8 +347,9 @@ impl ProjectionScan {
     }
 
     /// Return a consumed basket's buffers to the underlying scan's pools
-    /// (see [`BasketScan::recycle`]).
-    pub fn recycle(&self, content: BasketContent) {
+    /// (see [`BasketScan::recycle`]); shared cache-backed payloads are
+    /// simply dropped.
+    pub fn recycle(&self, content: DecodedBasket) {
         self.scan.recycle(content);
     }
 
@@ -426,8 +433,8 @@ impl RowBatch {
 /// assert_eq!(rows, 300);
 /// std::fs::remove_file(&path).ok();
 /// ```
-pub struct ProjectionReader {
-    scan: ProjectionScan,
+pub struct ProjectionReader<S: BasketStream = BasketScan> {
+    scan: ProjectionScan<S>,
     types: Vec<BranchType>,
     stats: Vec<BranchReadStats>,
     /// First entry of the projected window (0 for whole-tree projections).
@@ -466,8 +473,8 @@ pub struct ProjectionReader {
     skipped: u64,
 }
 
-impl ProjectionReader {
-    fn new(scan: ProjectionScan, meta: &TreeMeta, plan: &ProjectionPlan) -> Self {
+impl<S: BasketStream> ProjectionReader<S> {
+    pub(crate) fn new(scan: ProjectionScan<S>, meta: &TreeMeta, plan: &ProjectionPlan) -> Self {
         let branch_ids = plan.branch_ids();
         let types = branch_ids.iter().map(|&id| meta.branches[id as usize].ty).collect();
         let stats = branch_ids
@@ -965,6 +972,39 @@ impl ParallelTreeReader {
     /// calls but issued as a single offset-sorted sweep.
     pub fn read_branches(&self, branches: &[&str]) -> Result<Vec<Vec<Value>>> {
         self.project(branches)?.read_columns()
+    }
+
+    /// Project **every** branch over the entry window
+    /// `[range.start, range.end)` — the all-branch entry-range surface.
+    /// Skips the branch-name round-trip [`project_range`]
+    /// (Self::project_range) does: slot `i` is branch id `i` directly, in
+    /// schema order. The returned reader serves aligned row batches
+    /// ([`ProjectionReader::next_batch`], absolute entry ids) or whole
+    /// columns, exactly like any other projection.
+    pub fn project_all_range(&self, range: std::ops::Range<u64>) -> Result<ProjectionReader> {
+        let ids: Vec<u32> = (0..self.meta.branches.len() as u32).collect();
+        let plan = ProjectionPlan::new(&self.meta, &ids, PrefetchOrder::FileOffset)?
+            .slice(range.start, range.end);
+        self.project_plan(&plan)
+    }
+
+    /// Row-wise reconstruction of the entry window
+    /// `[range.start, range.end)` across **all** branches — the windowed
+    /// twin of [`read_all_events`](Self::read_all_events), byte-identical
+    /// to [`TreeReader::read_all_events_range`]. Only baskets overlapping
+    /// the window are read and decoded; the range is clamped to the tree.
+    pub fn read_all_events_range(&self, range: std::ops::Range<u64>) -> Result<Vec<Vec<Value>>> {
+        let mut proj = self.project_all_range(range)?;
+        let columns = proj.read_columns()?;
+        let n_branches = columns.len();
+        let n = columns.first().map(|c| c.len()).unwrap_or(0);
+        let mut events: Vec<Vec<Value>> = (0..n).map(|_| Vec::with_capacity(n_branches)).collect();
+        for col in columns {
+            for (ev, v) in events.iter_mut().zip(col) {
+                ev.push(v);
+            }
+        }
+        Ok(events)
     }
 }
 

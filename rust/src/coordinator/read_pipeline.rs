@@ -146,13 +146,84 @@ impl std::fmt::Display for DamageRecord {
     }
 }
 
+/// A decoded basket payload as delivered by a scan. Single-scan pipelines
+/// ([`BasketScan`]) deliver `Owned` contents whose buffers recycle through
+/// the scan's pools; the concurrent scheduler
+/// ([`super::scheduler::ScanServer`]) delivers `Shared` contents straight
+/// out of the decoded-basket cache — refcounted, so cache eviction never
+/// invalidates a basket an in-flight scan is still reading.
+///
+/// `Deref<Target = BasketContent>` means consumers read fields and call
+/// [`decode_values`] without caring which variant they hold; only
+/// `recycle` distinguishes them (shared payloads are not pooled — dropping
+/// the `Arc` is the whole protocol).
+#[derive(Debug)]
+pub enum DecodedBasket {
+    /// Exclusively-owned content; its buffers return to the scan's pools.
+    Owned(BasketContent),
+    /// Cache-resident content shared with other scans (and the cache).
+    Shared(Arc<BasketContent>),
+}
+
+impl std::ops::Deref for DecodedBasket {
+    type Target = BasketContent;
+    fn deref(&self) -> &BasketContent {
+        match self {
+            DecodedBasket::Owned(c) => c,
+            DecodedBasket::Shared(c) => c,
+        }
+    }
+}
+
+impl PartialEq for DecodedBasket {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl PartialEq<BasketContent> for DecodedBasket {
+    fn eq(&self, other: &BasketContent) -> bool {
+        **self == *other
+    }
+}
+
 /// One item from [`BasketScan::next_delivery`], in submission order.
 pub enum Delivery {
     /// An intact, decoded basket.
-    Basket(BasketLoc, BasketContent),
+    Basket(BasketLoc, DecodedBasket),
     /// A damaged basket's report (salvage mode only — strict scans turn
     /// damage into an `Err` instead).
     Damaged(DamageRecord),
+}
+
+/// The delivery surface shared by single-scan pipelines ([`BasketScan`])
+/// and per-query streams from the concurrent scheduler
+/// ([`super::scheduler::ServeStream`]). The projection layer is generic
+/// over this trait, so the same reorder/latch machinery serves both the
+/// one-reader path and the serving layer.
+pub trait BasketStream {
+    /// Next delivery in submission order (`None` when the stream is done).
+    fn next_delivery(&mut self) -> Option<Result<Delivery>>;
+
+    /// Hand back a consumed payload (pools owned buffers; drops shared).
+    fn recycle(&self, content: DecodedBasket);
+
+    /// The stream's failure-handling mode.
+    fn mode(&self) -> ScanMode;
+
+    /// Damage reports accumulated so far (always empty in strict mode).
+    fn damage(&self) -> &[DamageRecord];
+
+    /// Next intact basket, skipping damage reports in salvage mode.
+    fn next_basket(&mut self) -> Option<Result<(BasketLoc, DecodedBasket)>> {
+        loop {
+            match self.next_delivery()? {
+                Ok(Delivery::Basket(loc, content)) => return Some(Ok((loc, content))),
+                Ok(Delivery::Damaged(_)) => continue,
+                Err(e) => return Some(Err(e)),
+            }
+        }
+    }
 }
 
 /// Result of a degraded (salvage-mode) branch read: every decodable value
@@ -228,7 +299,7 @@ impl BasketScan {
             if let Some(d) = self.pending.remove(&self.next_seq) {
                 self.next_seq += 1;
                 return Some(match d.result {
-                    Ok(c) => Ok(Delivery::Basket(d.loc, c)),
+                    Ok(c) => Ok(Delivery::Basket(d.loc, DecodedBasket::Owned(c))),
                     Err(e) => {
                         let branch = self
                             .branch_names
@@ -276,7 +347,7 @@ impl BasketScan {
     /// done. In salvage mode damaged baskets are silently skipped here
     /// (inspect them via [`BasketScan::damage`]); in strict mode they
     /// surface as `Err`.
-    pub fn next_basket(&mut self) -> Option<Result<(BasketLoc, BasketContent)>> {
+    pub fn next_basket(&mut self) -> Option<Result<(BasketLoc, DecodedBasket)>> {
         loop {
             match self.next_delivery()? {
                 Ok(Delivery::Basket(loc, content)) => return Some(Ok((loc, content))),
@@ -303,10 +374,13 @@ impl BasketScan {
 
     /// Return a consumed basket's buffers to the scan's pools so the next
     /// basket decode reuses their capacity (§Perf: closes the last
-    /// per-basket allocation loop on the read side).
-    pub fn recycle(&self, content: BasketContent) {
-        self.data_pool.put(content.data);
-        self.offset_pool.put(content.offsets);
+    /// per-basket allocation loop on the read side). Shared (cache-backed)
+    /// payloads are simply dropped — their storage belongs to the cache.
+    pub fn recycle(&self, content: DecodedBasket) {
+        if let DecodedBasket::Owned(content) = content {
+            self.data_pool.put(content.data);
+            self.offset_pool.put(content.offsets);
+        }
     }
 
     /// (reuses, fresh allocations) of the decoded-content buffers —
@@ -325,8 +399,23 @@ impl BasketScan {
     }
 }
 
+impl BasketStream for BasketScan {
+    fn next_delivery(&mut self) -> Option<Result<Delivery>> {
+        BasketScan::next_delivery(self)
+    }
+    fn recycle(&self, content: DecodedBasket) {
+        BasketScan::recycle(self, content)
+    }
+    fn mode(&self) -> ScanMode {
+        BasketScan::mode(self)
+    }
+    fn damage(&self) -> &[DamageRecord] {
+        BasketScan::damage(self)
+    }
+}
+
 impl Iterator for BasketScan {
-    type Item = Result<(BasketLoc, BasketContent)>;
+    type Item = Result<(BasketLoc, DecodedBasket)>;
     fn next(&mut self) -> Option<Self::Item> {
         self.next_basket()
     }
@@ -800,8 +889,9 @@ impl ParallelTreeReader {
 
 /// Decode one raw basket record body against its directory entry: parse the
 /// framing prefix, check identity, decompress, check the entry count — the
-/// exact checks [`TreeReader::read_basket`] performs serially.
-fn decode_raw_basket(
+/// exact checks [`TreeReader::read_basket`] performs serially. Shared with
+/// the concurrent scheduler's workers ([`super::scheduler`]).
+pub(crate) fn decode_raw_basket(
     raw: &[u8],
     loc: &BasketLoc,
     engine: &mut Engine,

@@ -1,0 +1,912 @@
+//! Concurrent multi-scan scheduler: the serving layer.
+//!
+//! A [`ScanServer`] owns a **corpus** of RFIL files, ONE shared pool of
+//! decode workers, and a sharded decoded-basket cache
+//! ([`super::cache::BasketCache`]). Many projection / entry-range queries
+//! run concurrently; each gets a per-query [`ServeStream`] that plugs into
+//! the same reorder/latch machinery single-reader scans use
+//! ([`ProjectionScan`]/[`ProjectionReader`] are generic over
+//! [`BasketStream`]).
+//!
+//! ```text
+//!   query()──▶ admission (≤ max_scans active, FIFO)──▶ per-scan window
+//!                                                      (≤ queue_depth
+//!                                                       outstanding locs)
+//!        issue: cache hit ──────────────▶ deliver Arc payload directly
+//!               miss, decode in flight ─▶ coalesce (join the waiter list)
+//!               miss, fresh ───────────▶ shared job queue ─▶ N workers
+//!                                                             │ decode,
+//!                                            cache.insert ◀───┘ then fan
+//!                                            out to every waiting scan
+//! ```
+//!
+//! Scheduling properties:
+//!
+//! * **Single-flight decode** — a `pending` registry keyed on
+//!   [`CacheKey`] guarantees each basket is decoded at most once no
+//!   matter how many scans want it concurrently; late arrivals join the
+//!   waiter list instead of enqueueing a duplicate job. Together with the
+//!   cache this gives the warm-cache invariant the integration suite
+//!   asserts: N identical concurrent scans decode each basket exactly
+//!   once.
+//! * **Admission control** — at most `max_scans` scans are *active*
+//!   (issuing work); later queries queue FIFO and start the moment a slot
+//!   frees. Each active scan keeps at most `queue_depth` baskets
+//!   outstanding, so one huge cold scan cannot monopolize the worker pool
+//!   against small hot ones.
+//! * **Damage isolation** — a basket that fails to read/decode is
+//!   reported to every waiting scan (strict scans error, salvage scans
+//!   record a gap) and is **never cached**.
+//! * **Per-query metrics** — [`QueryStats`]: admission queue wait, decode
+//!   CPU time, baskets/bytes served from cache vs disk, coalesced joins.
+//!
+//! Lock order: the scheduler takes `state` then (inside `issue`) a cache
+//! shard lock; workers take a shard lock and *then* `state`, never
+//! nested. Delivery channels are unbounded but effectively bounded by the
+//! per-scan window (`queue_depth`), so sends never block while a lock is
+//! held.
+
+use crate::compression::Engine;
+use crate::coordinator::cache::{BasketCache, CacheKey, CacheStats};
+use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::coordinator::projection::{
+    ProjectionPlan, ProjectionReader, ProjectionScan, RowBatch,
+};
+use crate::coordinator::read_pipeline::{
+    decode_raw_basket, BasketStream, DamageRecord, DecodedBasket, Delivery, ScanMode,
+};
+use crate::coordinator::PrefetchOrder;
+use crate::rfile::basket::BasketContent;
+use crate::rfile::branch::Value;
+use crate::rfile::format::RecordKind;
+use crate::rfile::meta::{BasketLoc, GapSpan, TreeMeta};
+use crate::rfile::reader::TreeReader;
+use crate::rfile::source::{read_record_from, FileId, FileSource};
+use crate::runtime::ReadFeedback;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Shared decode worker threads.
+    pub workers: usize,
+    /// Scans allowed to issue work concurrently; later queries wait FIFO.
+    pub max_scans: usize,
+    /// Max outstanding (issued, unconsumed) baskets per scan — the
+    /// fairness/memory window.
+    pub queue_depth: usize,
+    /// Decoded-basket cache budget in bytes (0 disables caching).
+    pub cache_bytes: u64,
+    /// Cache shard count (rounded up to a power of two).
+    pub cache_shards: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .saturating_sub(1)
+            .max(1);
+        Self {
+            workers,
+            max_scans: 8,
+            queue_depth: 2 * workers,
+            cache_bytes: 256 << 20,
+            cache_shards: 16,
+        }
+    }
+}
+
+/// One file of the server's corpus: identity, parsed metadata, dictionary.
+pub struct CorpusFile {
+    /// Lookup name (the file stem for [`ScanServer::open_corpus`]).
+    pub name: String,
+    pub path: PathBuf,
+    /// Content identity used in cache keys.
+    pub file_id: FileId,
+    pub meta: TreeMeta,
+    dictionary: Arc<Vec<u8>>,
+}
+
+/// A query against the corpus.
+#[derive(Debug, Clone)]
+pub struct Query {
+    /// Corpus file name (see [`CorpusFile::name`]).
+    pub file: String,
+    /// Branch names to project; empty means **all** branches in schema
+    /// order (the all-branch row surface, no name round-trip).
+    pub branches: Vec<String>,
+    /// Optional `[first, last)` entry window.
+    pub entries: Option<(u64, u64)>,
+    /// Damage handling ([`ScanMode::Salvage`] reads around casualties).
+    pub mode: ScanMode,
+}
+
+impl Query {
+    /// Whole-file, all-branch strict query.
+    pub fn all(file: &str) -> Self {
+        Query { file: file.to_string(), branches: Vec::new(), entries: None, mode: ScanMode::Strict }
+    }
+
+    /// Strict projection of `branches`.
+    pub fn project(file: &str, branches: &[&str]) -> Self {
+        Query {
+            file: file.to_string(),
+            branches: branches.iter().map(|s| s.to_string()).collect(),
+            entries: None,
+            mode: ScanMode::Strict,
+        }
+    }
+
+    /// Narrow to the entry window `[first, last)` (builder style).
+    pub fn entries(mut self, first: u64, last: u64) -> Self {
+        self.entries = Some((first, last));
+        self
+    }
+
+    /// Set the damage-handling mode (builder style).
+    pub fn mode(mut self, mode: ScanMode) -> Self {
+        self.mode = mode;
+        self
+    }
+}
+
+/// Per-query counters, updated live while the scan runs.
+#[derive(Debug, Default)]
+struct QueryMetrics {
+    queue_wait_nanos: AtomicU64,
+    decode_nanos: AtomicU64,
+    baskets_decoded: AtomicU64,
+    baskets_from_cache: AtomicU64,
+    baskets_coalesced: AtomicU64,
+    bytes_from_cache: AtomicU64,
+    bytes_from_disk: AtomicU64,
+}
+
+/// Snapshot of one query's scheduling/decode accounting
+/// ([`ServeQuery::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Time between submission and admission (zero when admitted at once).
+    pub queue_wait: Duration,
+    /// Worker CPU time spent decoding baskets this query requested first.
+    pub decode_nanos: u64,
+    /// Baskets this query caused to be decoded from disk.
+    pub baskets_decoded: u64,
+    /// Baskets served straight from the decoded-basket cache.
+    pub baskets_from_cache: u64,
+    /// Baskets joined onto another scan's in-flight decode.
+    pub baskets_coalesced: u64,
+    /// Logical bytes served from the cache (incl. coalesced joins).
+    pub bytes_from_cache: u64,
+    /// Compressed bytes read from disk for this query's decodes.
+    pub bytes_from_disk: u64,
+}
+
+impl QueryMetrics {
+    fn stats(&self) -> QueryStats {
+        QueryStats {
+            queue_wait: Duration::from_nanos(self.queue_wait_nanos.load(Ordering::Relaxed)),
+            decode_nanos: self.decode_nanos.load(Ordering::Relaxed),
+            baskets_decoded: self.baskets_decoded.load(Ordering::Relaxed),
+            baskets_from_cache: self.baskets_from_cache.load(Ordering::Relaxed),
+            baskets_coalesced: self.baskets_coalesced.load(Ordering::Relaxed),
+            bytes_from_cache: self.bytes_from_cache.load(Ordering::Relaxed),
+            bytes_from_disk: self.bytes_from_disk.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One decoded (or failed) basket travelling scheduler/worker → scan.
+struct ScanDone {
+    loc: BasketLoc,
+    result: Result<Arc<BasketContent>, String>,
+}
+
+/// A basket decode the shared workers must perform. `origin` is the
+/// query whose request created the job (charged for the decode).
+struct DecodeJob {
+    key: CacheKey,
+    loc: BasketLoc,
+    file: usize,
+    origin: Arc<QueryMetrics>,
+}
+
+/// Scheduler-side state of one live scan.
+struct ScanState {
+    file: usize,
+    /// Plan locs in submission order.
+    locs: Vec<BasketLoc>,
+    /// Next loc index to issue.
+    next: usize,
+    /// Issued but not yet consumed by the scan's stream.
+    inflight: usize,
+    done_tx: Sender<ScanDone>,
+    submitted: Instant,
+    admitted: bool,
+    query: Arc<QueryMetrics>,
+}
+
+/// Mutable scheduler state, one mutex for all of it (the hot per-basket
+/// work — I/O and decode — happens outside this lock).
+struct SchedState {
+    queue: VecDeque<DecodeJob>,
+    scans: HashMap<u64, ScanState>,
+    /// Scans submitted but not yet admitted, FIFO.
+    waiting: VecDeque<u64>,
+    active: usize,
+    peak_active: usize,
+    next_scan_id: u64,
+    /// Keys with a decode in flight → scan ids waiting for it (origin
+    /// first). The single-flight registry.
+    pending: HashMap<CacheKey, Vec<u64>>,
+    shutdown: bool,
+}
+
+/// Everything the worker threads and streams share.
+struct ServerCore {
+    files: Vec<CorpusFile>,
+    by_name: HashMap<String, usize>,
+    cache: BasketCache,
+    metrics: Arc<Metrics>,
+    cfg: ServeConfig,
+    state: Mutex<SchedState>,
+    work_ready: Condvar,
+}
+
+impl ServerCore {
+    /// Issue more work for `scan_id` up to its window. Cache hits deliver
+    /// immediately; misses either coalesce onto an in-flight decode or
+    /// enqueue a fresh job. Caller holds the state lock.
+    fn issue(&self, st: &mut SchedState, scan_id: u64) {
+        let mut notify = false;
+        loop {
+            let Some(scan) = st.scans.get_mut(&scan_id) else { break };
+            if !scan.admitted || scan.inflight >= self.cfg.queue_depth || scan.next >= scan.locs.len()
+            {
+                break;
+            }
+            let loc = scan.locs[scan.next];
+            scan.next += 1;
+            scan.inflight += 1;
+            let key = CacheKey {
+                file: self.files[scan.file].file_id,
+                branch_id: loc.branch_id,
+                basket_index: loc.basket_index,
+            };
+            let query = Arc::clone(&scan.query);
+            let done_tx = scan.done_tx.clone();
+            let file = scan.file;
+            if let Some(content) = self.cache.get(&key) {
+                query.baskets_from_cache.fetch_add(1, Ordering::Relaxed);
+                query
+                    .bytes_from_cache
+                    .fetch_add(BasketCache::payload_bytes(&content), Ordering::Relaxed);
+                let _ = done_tx.send(ScanDone { loc, result: Ok(content) });
+                continue;
+            }
+            if let Some(waiters) = st.pending.get_mut(&key) {
+                waiters.push(scan_id);
+                query.baskets_coalesced.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            st.pending.insert(key, vec![scan_id]);
+            st.queue.push_back(DecodeJob { key, loc, file, origin: query });
+            notify = true;
+        }
+        if notify {
+            self.work_ready.notify_all();
+        }
+    }
+
+    /// Admit waiting scans while slots are free. Caller holds the lock.
+    fn admit(&self, st: &mut SchedState) {
+        while st.active < self.cfg.max_scans {
+            let Some(id) = st.waiting.pop_front() else { break };
+            let Some(scan) = st.scans.get_mut(&id) else { continue };
+            scan.admitted = true;
+            scan.query
+                .queue_wait_nanos
+                .store(scan.submitted.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            st.active += 1;
+            st.peak_active = st.peak_active.max(st.active);
+            self.issue(st, id);
+        }
+    }
+
+    /// A stream consumed one delivery: shrink its window, top it back up.
+    fn consumed(&self, scan_id: u64) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(scan) = st.scans.get_mut(&scan_id) {
+            scan.inflight = scan.inflight.saturating_sub(1);
+        }
+        self.issue(&mut st, scan_id);
+    }
+
+    /// A scan finished (drained, failed, or dropped): release its
+    /// admission slot and admit the next waiter. Idempotent.
+    fn finish_scan(&self, scan_id: u64) {
+        let mut st = self.state.lock().unwrap();
+        let Some(scan) = st.scans.remove(&scan_id) else { return };
+        if scan.admitted {
+            st.active -= 1;
+        } else {
+            st.waiting.retain(|&id| id != scan_id);
+        }
+        self.admit(&mut st);
+    }
+
+    /// Worker thread body: pop jobs, read + decode outside the lock,
+    /// publish to the cache, fan the result out to every waiting scan.
+    fn worker_loop(self: &Arc<Self>) {
+        let mut engine = Engine::new();
+        // Which file's dictionary the engine currently holds. Corpus files
+        // differ, so the engine re-arms on every file switch (an empty
+        // dictionary behaves exactly like no dictionary).
+        let mut dict_for: Option<usize> = None;
+        let mut sources: HashMap<usize, FileSource> = HashMap::new();
+        let mut raw = Vec::new();
+        let mut logical_scratch = Vec::new();
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if let Some(j) = st.queue.pop_front() {
+                        break j;
+                    }
+                    st = self.work_ready.wait(st).unwrap();
+                }
+            };
+            let result = self.decode_job(
+                &job,
+                &mut engine,
+                &mut dict_for,
+                &mut sources,
+                &mut raw,
+                &mut logical_scratch,
+            );
+            if let Ok(content) = &result {
+                // Publish before fan-out so a scan that misses the pending
+                // registry a microsecond later hits the cache instead.
+                // Damaged baskets never reach this insert.
+                self.cache.insert(job.key, Arc::clone(content));
+            }
+            let mut st = self.state.lock().unwrap();
+            let waiters = st.pending.remove(&job.key).unwrap_or_default();
+            for (i, w) in waiters.iter().enumerate() {
+                let Some(scan) = st.scans.get(w) else { continue };
+                if i > 0 {
+                    // Coalesced joins are served by the shared decode: count
+                    // their bytes as cache-served, same as a plain hit.
+                    if let Ok(content) = &result {
+                        scan.query
+                            .bytes_from_cache
+                            .fetch_add(BasketCache::payload_bytes(content), Ordering::Relaxed);
+                    }
+                }
+                let _ = scan.done_tx.send(ScanDone { loc: job.loc, result: result.clone() });
+            }
+        }
+    }
+
+    /// Read and decode one basket (no scheduler locks held).
+    fn decode_job(
+        &self,
+        job: &DecodeJob,
+        engine: &mut Engine,
+        dict_for: &mut Option<usize>,
+        sources: &mut HashMap<usize, FileSource>,
+        raw: &mut Vec<u8>,
+        logical_scratch: &mut Vec<u8>,
+    ) -> Result<Arc<BasketContent>, String> {
+        let file = &self.files[job.file];
+        if *dict_for != Some(job.file) {
+            engine.set_dictionary(file.dictionary.as_ref().clone());
+            *dict_for = Some(job.file);
+        }
+        let source = match sources.entry(job.file) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(v) => {
+                let src = FileSource::open(&file.path).map_err(|e| format!("{e:#}"))?;
+                v.insert(src)
+            }
+        };
+        let t0 = Instant::now();
+        match read_record_from(source, job.loc.file_offset, raw) {
+            Ok(RecordKind::Basket) => {}
+            Ok(kind) => {
+                return Err(format!(
+                    "expected basket record at {}, found {kind:?}",
+                    job.loc.file_offset
+                ))
+            }
+            Err(e) => return Err(e.to_string()),
+        }
+        let mut content =
+            BasketContent { n_entries: 0, data: Vec::new(), offsets: Vec::new() };
+        decode_raw_basket(raw, &job.loc, engine, logical_scratch, &mut content)?;
+        let elapsed = t0.elapsed();
+        let logical = content.data.len() + 4 * content.offsets.len();
+        self.metrics.record_basket(logical, raw.len(), elapsed);
+        job.origin.decode_nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        job.origin.baskets_decoded.fetch_add(1, Ordering::Relaxed);
+        job.origin.bytes_from_disk.fetch_add(raw.len() as u64, Ordering::Relaxed);
+        Ok(Arc::new(content))
+    }
+}
+
+/// Per-query delivery stream: the serving layer's [`BasketStream`].
+/// Deliveries arrive in whatever order cache hits and worker skew produce;
+/// the projection layer's per-slot parking restores per-branch order.
+pub struct ServeStream {
+    core: Arc<ServerCore>,
+    scan_id: u64,
+    done_rx: Receiver<ScanDone>,
+    mode: ScanMode,
+    branch_names: Arc<Vec<String>>,
+    damage: Vec<DamageRecord>,
+    delivered: u64,
+    total: u64,
+    /// Terminal (server shut down mid-scan): the stream ends.
+    broken: bool,
+    /// Admission slot released (idempotent guard).
+    released: bool,
+}
+
+impl ServeStream {
+    fn release(&mut self) {
+        if !self.released {
+            self.released = true;
+            self.core.finish_scan(self.scan_id);
+        }
+    }
+}
+
+impl BasketStream for ServeStream {
+    fn next_delivery(&mut self) -> Option<Result<Delivery>> {
+        if self.broken || self.delivered >= self.total {
+            self.release();
+            return None;
+        }
+        match self.done_rx.recv() {
+            Ok(d) => {
+                self.delivered += 1;
+                self.core.consumed(self.scan_id);
+                if self.delivered >= self.total {
+                    // Fully delivered: free the admission slot now rather
+                    // than waiting for the consumer to drop the reader.
+                    self.release();
+                }
+                Some(match d.result {
+                    Ok(content) => {
+                        Ok(Delivery::Basket(d.loc, DecodedBasket::Shared(content)))
+                    }
+                    Err(e) => {
+                        let branch = self
+                            .branch_names
+                            .get(d.loc.branch_id as usize)
+                            .cloned()
+                            .unwrap_or_else(|| format!("#{}", d.loc.branch_id));
+                        let rec = DamageRecord { loc: d.loc, branch, error: e };
+                        match self.mode {
+                            ScanMode::Strict => Err(anyhow!("{rec}")),
+                            ScanMode::Salvage => {
+                                self.damage.push(rec.clone());
+                                Ok(Delivery::Damaged(rec))
+                            }
+                        }
+                    }
+                })
+            }
+            Err(_) => {
+                self.broken = true;
+                self.release();
+                Some(Err(anyhow!(
+                    "scan server shut down ({} of {} baskets delivered)",
+                    self.delivered,
+                    self.total
+                )))
+            }
+        }
+    }
+
+    fn recycle(&self, _content: DecodedBasket) {
+        // Shared payloads belong to the cache; dropping the Arc is the
+        // whole return protocol.
+    }
+
+    fn mode(&self) -> ScanMode {
+        self.mode
+    }
+
+    fn damage(&self) -> &[DamageRecord] {
+        &self.damage
+    }
+}
+
+impl Drop for ServeStream {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+/// A live query: a [`ProjectionReader`] over a [`ServeStream`], plus the
+/// plan and per-query stats.
+pub struct ServeQuery {
+    reader: ProjectionReader<ServeStream>,
+    plan: ProjectionPlan,
+    metrics: Arc<QueryMetrics>,
+}
+
+impl ServeQuery {
+    /// The executed prefetch plan (offset-sorted; inspect
+    /// [`ProjectionPlan::is_monotonic_sweep`] etc.).
+    pub fn plan(&self) -> &ProjectionPlan {
+        &self.plan
+    }
+
+    /// The underlying projection reader (row batches, salvage gaps,
+    /// branch stats — everything a single-reader projection offers).
+    pub fn reader(&mut self) -> &mut ProjectionReader<ServeStream> {
+        &mut self.reader
+    }
+
+    /// Drain into per-branch event-order columns
+    /// (see [`ProjectionReader::read_columns`]).
+    pub fn read_columns(&mut self) -> Result<Vec<Vec<Value>>> {
+        self.reader.read_columns()
+    }
+
+    /// Next aligned row batch (see [`ProjectionReader::next_batch`]).
+    pub fn next_batch(&mut self) -> Option<Result<RowBatch>> {
+        self.reader.next_batch()
+    }
+
+    /// Per-branch read statistics accumulated so far.
+    pub fn branch_stats(&self) -> &[crate::coordinator::BranchReadStats] {
+        self.reader.branch_stats()
+    }
+
+    /// Row-level damage gaps (salvage mode).
+    pub fn gaps(&self) -> &[GapSpan] {
+        self.reader.gaps()
+    }
+
+    /// All damage observed (salvage mode).
+    pub fn damage(&self) -> Vec<DamageRecord> {
+        self.reader.damage()
+    }
+
+    /// This query's scheduling/decode accounting.
+    pub fn stats(&self) -> QueryStats {
+        self.metrics.stats()
+    }
+
+    /// Fold this query's per-branch reads into an access profile — the
+    /// per-query observe hook for the adaptive replanner. Call after
+    /// draining the query so the stats are complete.
+    pub fn record_feedback(&self, fb: &mut ReadFeedback) {
+        fb.record_scan(self.reader.branch_stats());
+    }
+}
+
+/// The long-running scan server: corpus + worker pool + cache + scheduler.
+///
+/// ```no_run
+/// use rootio::coordinator::{Query, ScanServer, ServeConfig};
+///
+/// let server = ScanServer::open_corpus("corpus/".as_ref(), ServeConfig::default()).unwrap();
+/// let mut q = server.query(&Query::project("events", &["Muon_pt", "nMuon"])).unwrap();
+/// let columns = q.read_columns().unwrap();
+/// assert_eq!(columns.len(), 2);
+/// println!("cache: {:?}", server.cache_stats());
+/// ```
+pub struct ScanServer {
+    core: Arc<ServerCore>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ScanServer {
+    /// Serve every `*.rfil` file under `dir` (sorted by name; the corpus
+    /// name of each file is its stem).
+    pub fn open_corpus(dir: &Path, cfg: ServeConfig) -> Result<Self> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading corpus dir {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("rfil"))
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            bail!("no .rfil files in corpus dir {}", dir.display());
+        }
+        Self::from_paths(&paths, cfg)
+    }
+
+    /// Serve an explicit list of RFIL files (corpus names are file stems).
+    pub fn from_paths(paths: &[PathBuf], cfg: ServeConfig) -> Result<Self> {
+        let mut files = Vec::with_capacity(paths.len());
+        let mut by_name = HashMap::new();
+        for path in paths {
+            let serial = TreeReader::open(path)
+                .with_context(|| format!("opening corpus file {}", path.display()))?;
+            let name = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| path.display().to_string());
+            if by_name.insert(name.clone(), files.len()).is_some() {
+                bail!("duplicate corpus file name '{name}'");
+            }
+            files.push(CorpusFile {
+                name,
+                path: path.clone(),
+                file_id: FileId::of_path(path)?,
+                meta: serial.meta.clone(),
+                dictionary: Arc::new(serial.dictionary().to_vec()),
+            });
+        }
+        let core = Arc::new(ServerCore {
+            files,
+            by_name,
+            cache: BasketCache::new(cfg.cache_bytes, cfg.cache_shards),
+            metrics: Arc::new(Metrics::new()),
+            cfg,
+            state: Mutex::new(SchedState {
+                queue: VecDeque::new(),
+                scans: HashMap::new(),
+                waiting: VecDeque::new(),
+                active: 0,
+                peak_active: 0,
+                next_scan_id: 0,
+                pending: HashMap::new(),
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let core = Arc::clone(&core);
+                std::thread::spawn(move || core.worker_loop())
+            })
+            .collect();
+        Ok(ScanServer { core, workers })
+    }
+
+    /// The corpus being served.
+    pub fn files(&self) -> &[CorpusFile] {
+        &self.core.files
+    }
+
+    /// Submit a query. Returns immediately — admission control may delay
+    /// *execution* (FIFO), but never the submission; the returned reader
+    /// blocks on its first delivery until the scan is admitted.
+    pub fn query(&self, q: &Query) -> Result<ServeQuery> {
+        let &file_idx = self
+            .core
+            .by_name
+            .get(&q.file)
+            .ok_or_else(|| anyhow!("no corpus file '{}'", q.file))?;
+        let meta = &self.core.files[file_idx].meta;
+        let ids: Vec<u32> = if q.branches.is_empty() {
+            (0..meta.branches.len() as u32).collect()
+        } else {
+            let names: Vec<&str> = q.branches.iter().map(|s| s.as_str()).collect();
+            ProjectionPlan::resolve_names(meta, &names)?
+        };
+        let mut plan = ProjectionPlan::new(meta, &ids, PrefetchOrder::FileOffset)?;
+        if let Some((a, b)) = q.entries {
+            plan = plan.slice(a, b);
+        }
+        let branch_names: Arc<Vec<String>> =
+            Arc::new(meta.branches.iter().map(|b| b.name.clone()).collect());
+        let metrics = Arc::new(QueryMetrics::default());
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<ScanDone>();
+
+        let scan_id = {
+            let mut st = self.core.state.lock().unwrap();
+            if st.shutdown {
+                bail!("scan server is shutting down");
+            }
+            let scan_id = st.next_scan_id;
+            st.next_scan_id += 1;
+            st.scans.insert(
+                scan_id,
+                ScanState {
+                    file: file_idx,
+                    locs: plan.locs().to_vec(),
+                    next: 0,
+                    inflight: 0,
+                    done_tx,
+                    submitted: Instant::now(),
+                    admitted: false,
+                    query: Arc::clone(&metrics),
+                },
+            );
+            st.waiting.push_back(scan_id);
+            self.core.admit(&mut st);
+            scan_id
+        };
+
+        let stream = ServeStream {
+            core: Arc::clone(&self.core),
+            scan_id,
+            done_rx,
+            mode: q.mode,
+            branch_names,
+            damage: Vec::new(),
+            delivered: 0,
+            total: plan.locs().len() as u64,
+            broken: false,
+            released: false,
+        };
+        let reader = ProjectionReader::new(ProjectionScan::new(stream, &plan), meta, &plan);
+        Ok(ServeQuery { reader, plan, metrics })
+    }
+
+    /// Cache behaviour counters (hits/misses/evictions/residency).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.core.cache.stats()
+    }
+
+    /// Aggregate decode metrics across every query served, with the cache
+    /// hit/miss counters folded in. `Snapshot::baskets` counts **actual
+    /// decodes** — the warm-cache invariant's witness.
+    pub fn metrics_snapshot(&self) -> Snapshot {
+        let cs = self.core.cache.stats();
+        self.core.metrics.set_cache_counters(cs.hits, cs.misses);
+        self.core.metrics.snapshot()
+    }
+
+    /// Highest number of concurrently-active (admitted) scans so far —
+    /// the admission-control witness (`≤ max_scans` always).
+    pub fn peak_active(&self) -> usize {
+        self.core.state.lock().unwrap().peak_active
+    }
+
+    fn shutdown(&mut self) {
+        {
+            let mut st = self.core.state.lock().unwrap();
+            st.shutdown = true;
+            st.queue.clear();
+            st.pending.clear();
+            st.waiting.clear();
+            // Dropping every scan's sender unblocks any stream still
+            // waiting on a delivery — it sees a terminal "server shut
+            // down" error instead of hanging.
+            st.scans.clear();
+        }
+        self.core.work_ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ScanServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{Algorithm, Settings};
+    use crate::gen::synthetic;
+    use crate::rfile::write_tree_serial;
+
+    fn corpus_dir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rootio_serve_{}_{}", std::process::id(), name));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn write_file(dir: &Path, name: &str, n: usize, seed: u64) -> Vec<Vec<Value>> {
+        let events = synthetic::events(n, seed);
+        write_tree_serial(
+            &dir.join(format!("{name}.rfil")),
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Lz4, 1),
+            1024,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        events
+    }
+
+    fn cfg_small() -> ServeConfig {
+        ServeConfig { workers: 2, max_scans: 4, queue_depth: 4, ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn serial_queries_match_direct_reads() {
+        let dir = corpus_dir("serial");
+        let events_a = write_file(&dir, "alpha", 300, 0xA);
+        let events_b = write_file(&dir, "beta", 200, 0xB);
+        let server = ScanServer::open_corpus(&dir, cfg_small()).unwrap();
+        assert_eq!(server.files().len(), 2);
+        assert_eq!(server.files()[0].name, "alpha");
+
+        // Projection query vs the in-memory truth.
+        let mut q = server.query(&Query::project("alpha", &["px", "nTrack"])).unwrap();
+        assert!(q.plan().is_monotonic_sweep());
+        let cols = q.read_columns().unwrap();
+        let px: Vec<Value> = events_a.iter().map(|e| e[3].clone()).collect();
+        assert_eq!(cols[0], px);
+
+        // All-branch entry-range query on the other file.
+        let mut q2 = server.query(&Query::all("beta").entries(50, 90)).unwrap();
+        let mut rows = Vec::new();
+        while let Some(batch) = q2.next_batch() {
+            let batch = batch.unwrap();
+            rows.extend(batch.rows);
+        }
+        assert_eq!(rows, events_b[50..90].to_vec());
+
+        // Unknown file / branch are clean errors.
+        assert!(server.query(&Query::all("gamma")).is_err());
+        assert!(server.query(&Query::project("alpha", &["nope"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_rescan_serves_from_cache() {
+        let dir = corpus_dir("warm");
+        let _ = write_file(&dir, "events", 400, 0xC);
+        let server = ScanServer::open_corpus(&dir, cfg_small()).unwrap();
+        let run = |server: &ScanServer| {
+            let mut q = server.query(&Query::project("events", &["px", "Track_pt"])).unwrap();
+            q.read_columns().unwrap();
+            q.stats()
+        };
+        let cold = run(&server);
+        let baskets = server.metrics_snapshot().baskets;
+        assert!(baskets > 0);
+        assert_eq!(cold.baskets_decoded, baskets, "cold scan decodes everything");
+        assert_eq!(cold.baskets_from_cache, 0);
+
+        let warm = run(&server);
+        assert_eq!(server.metrics_snapshot().baskets, baskets, "warm scan decodes nothing new");
+        assert_eq!(warm.baskets_decoded, 0);
+        assert_eq!(warm.baskets_from_cache, baskets);
+        assert!(warm.bytes_from_cache > 0);
+        let cs = server.cache_stats();
+        assert_eq!(cs.hits + cs.misses, cs.lookups);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shutdown_with_live_query_errors_instead_of_hanging() {
+        let dir = corpus_dir("shutdown");
+        let _ = write_file(&dir, "events", 300, 0xD);
+        let mut server = ScanServer::open_corpus(&dir, cfg_small()).unwrap();
+        let mut q = server.query(&Query::all("events")).unwrap();
+        // Pull one batch, then shut the server down under the live query.
+        let first = q.next_batch().unwrap().unwrap();
+        assert!(!first.is_empty());
+        server.shutdown();
+        let mut saw_error = false;
+        while let Some(item) = q.next_batch() {
+            if let Err(e) = item {
+                saw_error = true;
+                assert!(e.to_string().contains("scan server shut down"), "{e}");
+                break;
+            }
+        }
+        assert!(saw_error, "query over a shut-down server must surface an error");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -29,6 +29,10 @@
 //! * Stats-fed replanning: [`runtime::ReadFeedback`] +
 //!   [`coordinator::Planner::plan_from_feedback`] — replan compression
 //!   from a recorded access profile.
+//! * Concurrent serving: [`coordinator::ScanServer`] — many projection /
+//!   entry-range queries over a corpus through one shared worker pool,
+//!   with a sharded LRU cache of decoded baskets
+//!   ([`coordinator::BasketCache`]) and per-query metrics.
 //! * Buffer-level compression: [`compression::Engine`].
 //!
 //! ## End-to-end roundtrip

@@ -18,8 +18,8 @@ pub use meta::{push_gap, BasketLoc, GapSpan, TreeMeta};
 pub use reader::TreeReader;
 pub use scrub::{scrub_file, DamageKind, ScrubFinding, ScrubReport};
 pub use source::{
-    read_full_at, read_record_from, FaultSource, FaultSpec, FaultStats, FileSource, RangeSource,
-    RetryPolicy, RetrySource, SourceError,
+    read_full_at, read_record_from, FaultSource, FaultSpec, FaultStats, FileId, FileSource,
+    RangeSource, RetryPolicy, RetrySource, SourceError,
 };
 pub use writer::{
     frame_basket_record, frame_basket_record_prefix, write_tree_serial, BasketSink, RecordWriter,

@@ -233,6 +233,33 @@ impl TreeReader {
         }
         Ok(events)
     }
+
+    /// Row-wise reconstruction of the entry window
+    /// `[range.start, range.end)` across all branches: equals
+    /// [`read_all_events`](TreeReader::read_all_events) followed by an
+    /// in-memory slice, but only decodes baskets overlapping the window.
+    /// The range is clamped to the tree. Serial oracle for
+    /// [`ParallelTreeReader::read_all_events_range`](crate::coordinator::ParallelTreeReader::read_all_events_range)
+    /// and the scan server's all-branch range queries.
+    pub fn read_all_events_range(
+        &mut self,
+        range: std::ops::Range<u64>,
+    ) -> Result<Vec<Vec<Value>>> {
+        let n_branches = self.meta.branches.len();
+        let (start, end) = self.meta.clamp_entry_range(range.start, range.end);
+        let n = (end - start) as usize;
+        let mut columns = Vec::with_capacity(n_branches);
+        for b in 0..n_branches {
+            columns.push(self.read_range(b as u32, start..end)?);
+        }
+        let mut events: Vec<Vec<Value>> = (0..n).map(|_| Vec::with_capacity(n_branches)).collect();
+        for col in columns {
+            for (ev, v) in events.iter_mut().zip(col) {
+                ev.push(v);
+            }
+        }
+        Ok(events)
+    }
 }
 
 /// Decode a basket's raw content into typed per-entry values.

@@ -148,6 +148,77 @@ fn with_detail(e: SourceError, ctx: String) -> SourceError {
 }
 
 // ---------------------------------------------------------------------------
+// FileId
+// ---------------------------------------------------------------------------
+
+/// Stable identity of a file's *contents* for cross-scan cache keys.
+///
+/// Two opens of the same unmodified file yield the same `FileId`; replacing
+/// or appending to the file changes it (the hash covers device/inode — or a
+/// canonicalized path off unix — plus length and mtime). This is what a
+/// decoded-basket cache wants: identity follows the bytes on disk, not the
+/// path string, so `./a.rfil` and its absolute spelling share cache entries
+/// while a rewritten file never serves stale baskets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FileId(pub u64);
+
+impl FileId {
+    /// Derive the identity of the file at `path` from its metadata.
+    pub fn of_path(path: &Path) -> Result<Self> {
+        let meta = std::fs::metadata(path)
+            .with_context(|| format!("stat {} for file identity", path.display()))?;
+        let mut h = Fnv::new();
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::MetadataExt;
+            h.write_u64(meta.dev());
+            h.write_u64(meta.ino());
+        }
+        #[cfg(not(unix))]
+        {
+            let canon = std::fs::canonicalize(path)
+                .unwrap_or_else(|_| path.to_path_buf());
+            h.write_bytes(canon.to_string_lossy().as_bytes());
+        }
+        h.write_u64(meta.len());
+        if let Ok(mtime) = meta.modified() {
+            if let Ok(d) = mtime.duration_since(std::time::UNIX_EPOCH) {
+                h.write_u64(d.as_secs());
+                h.write_u64(d.subsec_nanos() as u64);
+            }
+        }
+        Ok(FileId(h.finish()))
+    }
+}
+
+impl fmt::Display for FileId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// Minimal FNV-1a, enough to mix metadata words into one u64.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+    fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+    fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
 // FileSource
 // ---------------------------------------------------------------------------
 
@@ -720,6 +791,30 @@ mod tests {
             read_full_at(&mut src, i * 8, &mut buf).unwrap();
             assert_eq!(buf, vec![42u8; 16]);
         }
+    }
+
+    #[test]
+    fn file_id_is_stable_until_the_file_changes() {
+        let path = tmp("fileid");
+        std::fs::write(&path, b"original contents").unwrap();
+        let a = FileId::of_path(&path).unwrap();
+        let b = FileId::of_path(&path).unwrap();
+        assert_eq!(a, b, "re-stat of an unmodified file must agree");
+        assert_eq!(format!("{a}").len(), 16, "display is fixed-width hex");
+
+        // Rewriting the file (different length) must change the identity:
+        // a cache keyed on FileId can never serve stale baskets.
+        std::fs::write(&path, b"rewritten with different length").unwrap();
+        let c = FileId::of_path(&path).unwrap();
+        assert_ne!(a, c, "rewritten file must get a new identity");
+
+        // A different file gets a different identity.
+        let other = tmp("fileid_other");
+        std::fs::write(&other, b"original contents").unwrap();
+        let d = FileId::of_path(&other).unwrap();
+        assert_ne!(c, d);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&other).ok();
     }
 
     #[test]

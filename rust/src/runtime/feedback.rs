@@ -26,13 +26,26 @@
 //! The profile format is a versioned plain-text table (no serde in the
 //! offline crate set), stable across files with the same schema because
 //! branches are keyed by **name**.
+//!
+//! Profiles **decay**: each [`ReadFeedback::advance_generation`] call
+//! multiplies every counter by [`ReadFeedback::DECAY_PER_GENERATION`], so
+//! the profile is an exponentially-weighted history — a branch that was
+//! hot last month but is cold now drifts back toward ratio-bound
+//! settings instead of pinning its old plan forever. Counters are f64
+//! for exactly this reason. [`ReadFeedback::merge`] aligns both sides to
+//! the newer generation before summing.
 
 use crate::coordinator::projection::BranchReadStats;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
-/// Header line of the on-disk profile format.
-const PROFILE_MAGIC: &str = "rootio-read-profile v1";
+/// Header line of the current on-disk profile format (v2 adds the
+/// `generation` record and fractional counters).
+const PROFILE_MAGIC: &str = "rootio-read-profile v2";
+
+/// v1 header: integer counters, no generation record. Still readable
+/// (parsed as generation 0); saves always write v2.
+const PROFILE_MAGIC_V1: &str = "rootio-read-profile v1";
 
 /// Escape a branch name for the tab-separated profile line (names are
 /// arbitrary strings; a literal tab or newline would corrupt the framing
@@ -72,21 +85,33 @@ fn unescape_name(escaped: &str) -> Option<String> {
 }
 
 /// Accumulated read statistics for one branch across every recorded scan.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+/// Counters are f64 because generation decay scales them fractionally
+/// (see [`ReadFeedback::advance_generation`]).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct BranchFeedback {
     /// Branch id at last record time (informative — lookups key on name).
     pub branch_id: u32,
     pub name: String,
-    /// Scans in which this branch was projected.
-    pub scans: u64,
+    /// Scans in which this branch was projected (decay-weighted).
+    pub scans: f64,
     /// Baskets decoded for this branch, summed over scans.
-    pub baskets: u64,
+    pub baskets: f64,
     /// Entries decoded (boundary baskets of range reads decode whole).
-    pub entries: u64,
+    pub entries: f64,
     /// Uncompressed bytes decoded, summed over scans.
-    pub logical_bytes: u64,
+    pub logical_bytes: f64,
     /// Compressed bytes read off the file, summed over scans.
-    pub compressed_bytes: u64,
+    pub compressed_bytes: f64,
+}
+
+impl BranchFeedback {
+    fn scale(&mut self, factor: f64) {
+        self.scans *= factor;
+        self.baskets *= factor;
+        self.entries *= factor;
+        self.logical_bytes *= factor;
+        self.compressed_bytes *= factor;
+    }
 }
 
 /// A recorded access profile: per-branch read totals plus the number of
@@ -95,14 +120,22 @@ pub struct BranchFeedback {
 /// ([`ReadFeedback::record_scan`]), and persist it as a small text file
 /// ([`ReadFeedback::save`] / [`ReadFeedback::load`]) so the profile
 /// accumulates across processes.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ReadFeedback {
-    /// Scans recorded into this profile.
-    pub scans: u64,
+    /// Scans recorded into this profile (decay-weighted).
+    pub scans: f64,
+    /// Decay epochs this profile has lived through
+    /// ([`ReadFeedback::advance_generation`]).
+    pub generation: u64,
     branches: Vec<BranchFeedback>,
 }
 
 impl ReadFeedback {
+    /// Weight multiplier applied to every counter per generation: after
+    /// `g` generations an observation contributes `0.8^g` of its original
+    /// weight (half-life ≈ 3.1 generations).
+    pub const DECAY_PER_GENERATION: f64 = 0.8;
+
     pub fn new() -> Self {
         Self::default()
     }
@@ -111,28 +144,53 @@ impl ReadFeedback {
     /// Branches are matched by name, so profiles survive schema reorder
     /// and apply across files with the same branch names.
     pub fn record_scan(&mut self, stats: &[BranchReadStats]) {
-        self.scans += 1;
+        self.scans += 1.0;
         for st in stats {
             let b = self.entry_mut(&st.name, st.branch_id);
-            b.scans += 1;
-            b.baskets += st.baskets;
-            b.entries += st.entries;
-            b.logical_bytes += st.logical_bytes;
-            b.compressed_bytes += st.compressed_bytes;
+            b.scans += 1.0;
+            b.baskets += st.baskets as f64;
+            b.entries += st.entries as f64;
+            b.logical_bytes += st.logical_bytes as f64;
+            b.compressed_bytes += st.compressed_bytes as f64;
+        }
+    }
+
+    /// Close one decay epoch: every counter shrinks by
+    /// [`Self::DECAY_PER_GENERATION`], so scans recorded *after* this call
+    /// outweigh ones recorded before it. Callers advance once per natural
+    /// aging unit (the CLI: once per process that records into a profile).
+    pub fn advance_generation(&mut self) {
+        self.generation += 1;
+        self.scans *= Self::DECAY_PER_GENERATION;
+        for b in &mut self.branches {
+            b.scale(Self::DECAY_PER_GENERATION);
         }
     }
 
     /// Fold another profile into this one (distributed workers each record
-    /// locally, then merge).
+    /// locally, then merge). Both sides are first aligned to the **newer**
+    /// generation — the older profile's counters are scaled by
+    /// `DECAY^(generation gap)` — so merging never lets stale history
+    /// outvote fresh observations.
     pub fn merge(&mut self, other: &ReadFeedback) {
-        self.scans += other.scans;
+        let target = self.generation.max(other.generation);
+        let self_factor = Self::DECAY_PER_GENERATION.powi((target - self.generation) as i32);
+        let other_factor = Self::DECAY_PER_GENERATION.powi((target - other.generation) as i32);
+        if self_factor != 1.0 {
+            self.scans *= self_factor;
+            for b in &mut self.branches {
+                b.scale(self_factor);
+            }
+        }
+        self.generation = target;
+        self.scans += other.scans * other_factor;
         for ob in &other.branches {
             let b = self.entry_mut(&ob.name, ob.branch_id);
-            b.scans += ob.scans;
-            b.baskets += ob.baskets;
-            b.entries += ob.entries;
-            b.logical_bytes += ob.logical_bytes;
-            b.compressed_bytes += ob.compressed_bytes;
+            b.scans += ob.scans * other_factor;
+            b.baskets += ob.baskets * other_factor;
+            b.entries += ob.entries * other_factor;
+            b.logical_bytes += ob.logical_bytes * other_factor;
+            b.compressed_bytes += ob.compressed_bytes * other_factor;
         }
     }
 
@@ -157,14 +215,14 @@ impl ReadFeedback {
         self.branches.iter().find(|b| b.name == name)
     }
 
-    /// Uncompressed bytes the profile saw decoded for `name` (0 if the
-    /// branch was never read).
-    pub fn logical_bytes_read(&self, name: &str) -> u64 {
-        self.get(name).map(|b| b.logical_bytes).unwrap_or(0)
+    /// Uncompressed bytes the profile saw decoded for `name`
+    /// (decay-weighted; 0 if the branch was never read).
+    pub fn logical_bytes_read(&self, name: &str) -> f64 {
+        self.get(name).map(|b| b.logical_bytes).unwrap_or(0.0)
     }
 
     /// Total uncompressed bytes across every branch in the profile.
-    pub fn total_logical_bytes(&self) -> u64 {
+    pub fn total_logical_bytes(&self) -> f64 {
         self.branches.iter().map(|b| b.logical_bytes).sum()
     }
 
@@ -176,18 +234,24 @@ impl ReadFeedback {
     /// This is the weight [`crate::coordinator::Planner::plan_from_feedback`]
     /// consumes.
     pub fn intensity(&self, name: &str, stored_logical_bytes: u64) -> f64 {
-        if self.scans == 0 || stored_logical_bytes == 0 {
+        if self.scans <= 0.0 || stored_logical_bytes == 0 {
             return 0.0;
         }
-        self.logical_bytes_read(name) as f64 / (stored_logical_bytes as f64 * self.scans as f64)
+        // Bytes and scan count decay by the same factor, so intensity is
+        // a decay-weighted average of per-scan intensities: recent scans
+        // dominate, but the ratio's scale is unchanged.
+        self.logical_bytes_read(name) / (stored_logical_bytes as f64 * self.scans)
     }
 
-    /// Render the profile in its on-disk text format.
+    /// Render the profile in its on-disk text format (always the current
+    /// v2). Rust's shortest-round-trip float formatting keeps save→load
+    /// lossless.
     pub fn serialize(&self) -> String {
         let mut out = String::new();
         out.push_str(PROFILE_MAGIC);
         out.push('\n');
         out.push_str(&format!("scans\t{}\n", self.scans));
+        out.push_str(&format!("generation\t{}\n", self.generation));
         for b in &self.branches {
             out.push_str(&format!(
                 "branch\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
@@ -200,11 +264,12 @@ impl ReadFeedback {
 
     /// Parse the on-disk text format (rejects unknown versions and
     /// malformed lines — a profile is planner input, not a best-effort
-    /// log).
+    /// log). v1 profiles (integer counters, no `generation` record) load
+    /// as generation 0.
     pub fn deserialize(text: &str) -> Result<Self> {
         let mut lines = text.lines();
         match lines.next() {
-            Some(PROFILE_MAGIC) => {}
+            Some(PROFILE_MAGIC) | Some(PROFILE_MAGIC_V1) => {}
             other => bail!("not a rootio read profile (header {:?})", other.unwrap_or("")),
         }
         let mut fb = ReadFeedback::new();
@@ -215,16 +280,28 @@ impl ReadFeedback {
             }
             let mut fields = line.split('\t');
             let fail = || anyhow::anyhow!("read profile line {}: malformed '{line}'", lineno + 2);
+            // Counters must be finite and non-negative: "inf"/"NaN"/"-3"
+            // parse as f64 but would poison every downstream ratio.
+            let counter = |s: &str| -> Option<f64> {
+                let v: f64 = s.parse().ok()?;
+                (v.is_finite() && v >= 0.0).then_some(v)
+            };
             match fields.next() {
                 Some("scans") => {
-                    fb.scans = fields.next().ok_or_else(fail)?.parse().map_err(|_| fail())?;
+                    fb.scans =
+                        counter(fields.next().ok_or_else(fail)?).ok_or_else(fail)?;
                     saw_scans = true;
                 }
+                Some("generation") => {
+                    fb.generation =
+                        fields.next().ok_or_else(fail)?.parse().map_err(|_| fail())?;
+                }
                 Some("branch") => {
-                    let mut num = || -> Result<u64> {
-                        fields.next().ok_or_else(fail)?.parse().map_err(|_| fail())
+                    let branch_id: u32 =
+                        fields.next().ok_or_else(fail)?.parse().map_err(|_| fail())?;
+                    let mut num = || -> Result<f64> {
+                        counter(fields.next().ok_or_else(fail)?).ok_or_else(fail)
                     };
-                    let branch_id = num()? as u32;
                     let scans = num()?;
                     let baskets = num()?;
                     let entries = num()?;
@@ -294,15 +371,92 @@ mod tests {
         let mut fb = ReadFeedback::new();
         fb.record_scan(&[stats("pt", 3, 1000), stats("eta", 4, 500)]);
         fb.record_scan(&[stats("pt", 3, 1000)]);
-        assert_eq!(fb.scans, 2);
-        assert_eq!(fb.logical_bytes_read("pt"), 2000);
-        assert_eq!(fb.logical_bytes_read("eta"), 500);
-        assert_eq!(fb.logical_bytes_read("phi"), 0);
-        assert_eq!(fb.get("pt").unwrap().scans, 2);
-        assert_eq!(fb.get("eta").unwrap().scans, 1);
-        assert_eq!(fb.total_logical_bytes(), 2500);
+        assert_eq!(fb.scans, 2.0);
+        assert_eq!(fb.logical_bytes_read("pt"), 2000.0);
+        assert_eq!(fb.logical_bytes_read("eta"), 500.0);
+        assert_eq!(fb.logical_bytes_read("phi"), 0.0);
+        assert_eq!(fb.get("pt").unwrap().scans, 2.0);
+        assert_eq!(fb.get("eta").unwrap().scans, 1.0);
+        assert_eq!(fb.total_logical_bytes(), 2500.0);
         let back = ReadFeedback::deserialize(&fb.serialize()).unwrap();
         assert_eq!(back, fb);
+    }
+
+    #[test]
+    fn generation_decay_fades_history() {
+        let d = ReadFeedback::DECAY_PER_GENERATION;
+        let mut fb = ReadFeedback::new();
+        fb.record_scan(&[stats("pt", 3, 1000)]);
+        fb.advance_generation();
+        fb.advance_generation();
+        assert_eq!(fb.generation, 2);
+        assert!((fb.scans - d * d).abs() < 1e-12);
+        assert!((fb.logical_bytes_read("pt") - 1000.0 * d * d).abs() < 1e-9);
+        let b = fb.get("pt").unwrap();
+        assert!((b.baskets - 3.0 * d * d).abs() < 1e-12);
+        assert!((b.entries - 100.0 * d * d).abs() < 1e-9);
+        assert!((b.compressed_bytes - 500.0 * d * d).abs() < 1e-9);
+        // Decay cancels in the intensity ratio: bytes and scan count
+        // shrink together, so a steadily-hot branch keeps intensity 1.0.
+        assert!((fb.intensity("pt", 1000) - 1.0).abs() < 1e-9);
+        // A fresh scan lands at full weight on top of faded history.
+        fb.record_scan(&[stats("pt", 3, 1000)]);
+        assert!((fb.scans - (d * d + 1.0)).abs() < 1e-12);
+        assert!((fb.logical_bytes_read("pt") - (1000.0 * d * d + 1000.0)).abs() < 1e-9);
+        // Decayed values survive save→load exactly.
+        let back = ReadFeedback::deserialize(&fb.serialize()).unwrap();
+        assert_eq!(back, fb);
+    }
+
+    #[test]
+    fn merge_aligns_generations_before_summing() {
+        let d = ReadFeedback::DECAY_PER_GENERATION;
+        // Old profile: one scan, then two epochs pass.
+        let mut old = ReadFeedback::new();
+        old.record_scan(&[stats("pt", 3, 1000)]);
+        old.advance_generation();
+        old.advance_generation();
+        // Fresh profile at generation 2 already.
+        let mut fresh = ReadFeedback::new();
+        fresh.record_scan(&[stats("pt", 3, 1000)]);
+        fresh.generation = 2;
+
+        // Merging fresh INTO old (same generation): plain sum.
+        let mut a = old.clone();
+        a.merge(&fresh);
+        assert_eq!(a.generation, 2);
+        assert!((a.logical_bytes_read("pt") - (1000.0 * d * d + 1000.0)).abs() < 1e-9);
+
+        // Merging a generation-0 profile into a generation-2 one decays
+        // the OTHER side's counters to align.
+        let mut lagging = ReadFeedback::new();
+        lagging.record_scan(&[stats("pt", 3, 1000)]);
+        let mut b = fresh.clone();
+        b.merge(&lagging);
+        assert_eq!(b.generation, 2);
+        assert!((b.logical_bytes_read("pt") - (1000.0 + 1000.0 * d * d)).abs() < 1e-9);
+
+        // Merging a newer profile into an older one decays SELF first.
+        let mut c = lagging.clone();
+        c.merge(&fresh);
+        assert_eq!(c.generation, 2);
+        assert!((c.scans - (d * d + 1.0)).abs() < 1e-12);
+        assert!((c.logical_bytes_read("pt") - (1000.0 * d * d + 1000.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn v1_profiles_load_as_generation_zero() {
+        let v1 = "rootio-read-profile v1\nscans\t2\nbranch\t3\t2\t6\t200\t2000\t1000\tpt\n";
+        let fb = ReadFeedback::deserialize(v1).unwrap();
+        assert_eq!(fb.generation, 0);
+        assert_eq!(fb.scans, 2.0);
+        assert_eq!(fb.logical_bytes_read("pt"), 2000.0);
+        // Re-serializing upgrades to v2 with an explicit generation line,
+        // and the upgraded text round-trips to the same profile.
+        let text = fb.serialize();
+        assert!(text.starts_with("rootio-read-profile v2\n"));
+        assert!(text.contains("generation\t0\n"));
+        assert_eq!(ReadFeedback::deserialize(&text).unwrap(), fb);
     }
 
     #[test]
@@ -331,7 +485,7 @@ mod tests {
         let text = fb.serialize();
         let back = ReadFeedback::deserialize(&text).unwrap();
         assert_eq!(back, fb);
-        assert_eq!(back.logical_bytes_read("a\tb"), 10);
+        assert_eq!(back.logical_bytes_read("a\tb"), 10.0);
         // Truncated / unknown escapes are rejected, not misread.
         assert!(ReadFeedback::deserialize(
             "rootio-read-profile v1\nscans\t1\nbranch\t0\t1\t2\t3\t4\t5\tbad\\\n"
@@ -350,18 +504,34 @@ mod tests {
         let mut b = ReadFeedback::new();
         b.record_scan(&[stats("pt", 3, 1000), stats("eta", 4, 500)]);
         a.merge(&b);
-        assert_eq!(a.scans, 2);
-        assert_eq!(a.logical_bytes_read("pt"), 2000);
-        assert_eq!(a.logical_bytes_read("eta"), 500);
+        assert_eq!(a.scans, 2.0);
+        assert_eq!(a.logical_bytes_read("pt"), 2000.0);
+        assert_eq!(a.logical_bytes_read("eta"), 500.0);
     }
 
     #[test]
     fn malformed_profiles_rejected() {
         assert!(ReadFeedback::deserialize("").is_err());
         assert!(ReadFeedback::deserialize("some other file\n").is_err());
-        assert!(ReadFeedback::deserialize("rootio-read-profile v2\nscans\t1\n").is_err());
+        assert!(ReadFeedback::deserialize("rootio-read-profile v3\nscans\t1\n").is_err());
+        // Both live versions parse.
         let ok = "rootio-read-profile v1\nscans\t1\nbranch\t0\t1\t2\t3\t4\t5\tpt\n";
         assert!(ReadFeedback::deserialize(ok).is_ok());
+        let ok2 = "rootio-read-profile v2\nscans\t1.5\ngeneration\t2\nbranch\t0\t1\t2\t3\t4\t5\tpt\n";
+        assert!(ReadFeedback::deserialize(ok2).is_ok());
+        // Non-finite or negative counters are rejected, not ingested.
+        assert!(ReadFeedback::deserialize("rootio-read-profile v2\nscans\tNaN\n").is_err());
+        assert!(ReadFeedback::deserialize("rootio-read-profile v2\nscans\tinf\n").is_err());
+        assert!(ReadFeedback::deserialize("rootio-read-profile v2\nscans\t-1\n").is_err());
+        assert!(ReadFeedback::deserialize(
+            "rootio-read-profile v2\nscans\t1\nbranch\t0\t1\t2\t-3\t4\t5\tpt\n"
+        )
+        .is_err());
+        // generation must be a non-negative integer.
+        assert!(
+            ReadFeedback::deserialize("rootio-read-profile v2\nscans\t1\ngeneration\t1.5\n")
+                .is_err()
+        );
         // Missing scans line, truncated branch line, junk record, extra
         // field, empty name.
         assert!(ReadFeedback::deserialize("rootio-read-profile v1\n").is_err());

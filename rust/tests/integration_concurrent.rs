@@ -1,0 +1,383 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
+//! Concurrent scan-server invariants (property-style, seeded): N scans
+//! multiplexed onto one worker pool with a shared decoded-basket cache
+//! must stay **byte-identical** to the serial [`TreeReader`] /
+//! [`ParallelTreeReader`] oracles — for mixed projections, entry ranges,
+//! and salvage scans, across the codec × preconditioner grid. On top of
+//! oracle parity the suite pins the cache contract:
+//!
+//! * hits + misses == lookups, always;
+//! * a warm identical re-scan decodes **zero** new baskets (and an 8-way
+//!   identical concurrent wave decodes each basket exactly once — the
+//!   single-flight registry, not just the cache);
+//! * a starvation-size budget evicts constantly yet never corrupts a
+//!   result;
+//! * damaged baskets are never cached (every scan re-observes the damage);
+//! * admission control bounds concurrently active scans at `max_scans`.
+//!
+//! Fixtures come from the shared testkit (`mod common`): `PROP_SEED`
+//! reproduces a failed run, `PROP_ROUNDS` caps the grid/round counts (see
+//! rust/tests/common/mod.rs).
+
+mod common;
+
+use common::{grid, prop_rounds, sample, seeded, tmp_path, write_sample_tree};
+use rootio::compression::{Algorithm, Settings};
+use rootio::coordinator::{
+    ParallelTreeReader, Query, ReadAhead, ScanMode, ScanServer, ServeConfig,
+};
+use rootio::precond::Precond;
+use rootio::rfile::{TreeReader, Value};
+use std::path::PathBuf;
+
+/// A small server config that still exercises real concurrency.
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        workers: 3,
+        max_scans: 8,
+        queue_depth: 4,
+        cache_bytes: 64 << 20,
+        cache_shards: 4,
+    }
+}
+
+/// Write a two-file corpus (different event counts and seeds) and return
+/// the paths. File stems — the corpus names — are `a` and `b`.
+fn write_corpus(
+    suite: &str,
+    tag: &str,
+    settings: Settings,
+    basket: usize,
+    seed: u64,
+) -> Vec<PathBuf> {
+    let pa = tmp_path(suite, &format!("{tag}_a.rfil"));
+    let pb = tmp_path(suite, &format!("{tag}_b.rfil"));
+    write_sample_tree(&pa, settings, 300, basket, seed);
+    write_sample_tree(&pb, settings, 190, basket, seed ^ 0xFFFF);
+    vec![pa, pb]
+}
+
+fn remove(paths: &[PathBuf]) {
+    for p in paths {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// Corpus names follow file stems: `..._a.rfil` → that stem.
+fn stem(p: &PathBuf) -> String {
+    p.file_stem().unwrap().to_str().unwrap().to_string()
+}
+
+#[test]
+fn concurrent_mixed_scans_match_serial_oracles_across_grid() {
+    let (mut rng, _guard) = seeded(0xC0C0);
+    // Each grid cell gets its own corpus + server; the mixed query wave
+    // (projection / entry range / all-branch / salvage) runs concurrently
+    // and every result is checked against the serial oracle.
+    let cells = sample(grid(), prop_rounds(8));
+    for settings in cells {
+        let paths = write_corpus("conc_grid", &format!("{settings:?}"), settings, 600, 0x5EED);
+        let names: Vec<String> = paths.iter().map(stem).collect();
+        let server = ScanServer::from_paths(&paths, cfg()).unwrap();
+
+        // Serial oracles, computed up front on the main thread.
+        let mut oracle_a = TreeReader::open(&paths[0]).unwrap();
+        let mut oracle_b = TreeReader::open(&paths[1]).unwrap();
+        let (ra, rb) = {
+            let a0 = rng.range(0, 250) as u64;
+            let a1 = a0 + rng.range(1, 60) as u64;
+            let b0 = rng.range(0, 150) as u64;
+            let b1 = b0 + rng.range(1, 50) as u64;
+            ((a0, a1), (b0, b1))
+        };
+        let px_id = oracle_a.branch_id("px").unwrap();
+        let tp_id = oracle_a.branch_id("Track_pt").unwrap();
+        let nt_id = oracle_b.branch_id("nTrack").unwrap();
+        let want_px = oracle_a.read_branch(px_id).unwrap();
+        let want_tp = oracle_a.read_branch(tp_id).unwrap();
+        let want_a_range = oracle_a.read_all_events_range(ra.0..ra.1).unwrap();
+        let want_nt_range = oracle_b.read_range(nt_id, rb.0..rb.1).unwrap();
+        let want_b_all = oracle_b.read_all_events().unwrap();
+
+        let queries: Vec<(Query, Vec<Vec<Value>>)> = vec![
+            (
+                Query::project(&names[0], &["px", "Track_pt"]),
+                vec![want_px.clone(), want_tp.clone()],
+            ),
+            (
+                Query::all(&names[0]).entries(ra.0, ra.1),
+                columns_of(&want_a_range),
+            ),
+            (
+                Query::project(&names[1], &["nTrack"]).entries(rb.0, rb.1),
+                vec![want_nt_range.clone()],
+            ),
+            (Query::all(&names[1]), columns_of(&want_b_all)),
+            // Salvage mode over an undamaged file must equal strict.
+            (
+                Query::project(&names[0], &["Track_pt", "px"]).mode(ScanMode::Salvage),
+                vec![want_tp, want_px],
+            ),
+        ];
+
+        std::thread::scope(|scope| {
+            for (i, (q, want)) in queries.iter().enumerate() {
+                let server = &server;
+                scope.spawn(move || {
+                    let mut sq = server.query(q).unwrap();
+                    assert!(
+                        sq.plan().is_monotonic_sweep(),
+                        "query {i} plan not offset-sorted under {settings:?}"
+                    );
+                    let got = sq.read_columns().unwrap();
+                    assert_eq!(&got, want, "query {i} diverged under {settings:?}");
+                    assert!(sq.gaps().is_empty(), "clean file produced gaps");
+                });
+            }
+        });
+
+        let cs = server.cache_stats();
+        assert_eq!(cs.hits + cs.misses, cs.lookups, "cache accounting under {settings:?}");
+        remove(&paths);
+    }
+}
+
+/// Transpose events (rows) into per-branch columns, the shape
+/// `read_columns` returns for an all-branch query.
+fn columns_of(events: &[Vec<Value>]) -> Vec<Vec<Value>> {
+    if events.is_empty() {
+        return Vec::new();
+    }
+    let n = events[0].len();
+    (0..n).map(|b| events.iter().map(|e| e[b].clone()).collect()).collect()
+}
+
+#[test]
+fn all_branch_range_surfaces_agree() {
+    let (mut rng, _guard) = seeded(0xA11B);
+    let path = tmp_path("conc_allrange", "f.rfil");
+    let settings = Settings::new(Algorithm::Zstd, 5).with_precond(Precond::Shuffle(4));
+    write_sample_tree(&path, settings, 257, 700, 0xF00D);
+    let mut serial = TreeReader::open(&path).unwrap();
+    let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+    let all = serial.read_all_events().unwrap();
+    for _ in 0..prop_rounds(6) {
+        let a = rng.range(0, 257) as u64;
+        let b = a + rng.range(0, 300) as u64; // may overshoot: clamped
+        let want: Vec<Vec<Value>> =
+            all[a.min(257) as usize..b.min(257) as usize].to_vec();
+        assert_eq!(serial.read_all_events_range(a..b).unwrap(), want, "serial [{a},{b})");
+        assert_eq!(par.read_all_events_range(a..b).unwrap(), want, "parallel [{a},{b})");
+        let mut proj = par.project_all_range(a..b).unwrap();
+        assert_eq!(proj.read_columns().unwrap(), columns_of(&want), "projection [{a},{b})");
+    }
+    // Degenerate windows: empty and fully out of range.
+    assert!(serial.read_all_events_range(5..5).unwrap().is_empty());
+    assert!(par.read_all_events_range(400..900).unwrap().is_empty());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn warm_identical_waves_decode_each_basket_exactly_once() {
+    let paths = write_corpus(
+        "conc_warm",
+        "w",
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        512,
+        0xBEEF,
+    );
+    let names: Vec<String> = paths.iter().map(stem).collect();
+    let server = ScanServer::from_paths(&paths, cfg()).unwrap();
+    let unique_baskets = server.files()[0].meta.baskets.len() as u64;
+    assert!(unique_baskets > 4, "fixture too small to be interesting");
+
+    // One 8-way wave of IDENTICAL all-branch scans over file `a`. The
+    // single-flight registry must collapse them: each basket decodes
+    // exactly once even though eight scans race for it cold.
+    let wave = |expect_all_cached: bool| {
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let server = &server;
+                let name = names[0].clone();
+                scope.spawn(move || {
+                    let mut sq = server.query(&Query::all(&name)).unwrap();
+                    let cols = sq.read_columns().unwrap();
+                    assert_eq!(cols.len(), server.files()[0].meta.branches.len());
+                    let st = sq.stats();
+                    assert_eq!(
+                        st.baskets_decoded + st.baskets_from_cache + st.baskets_coalesced,
+                        unique_baskets,
+                        "every basket accounted to exactly one source"
+                    );
+                    if expect_all_cached {
+                        assert_eq!(st.baskets_decoded, 0, "warm scan decoded");
+                        assert_eq!(st.baskets_coalesced, 0, "warm scan coalesced");
+                        assert_eq!(st.baskets_from_cache, unique_baskets);
+                        assert!(st.bytes_from_cache > 0);
+                    }
+                });
+            }
+        });
+    };
+
+    wave(false);
+    let after_cold = server.metrics_snapshot();
+    assert_eq!(
+        after_cold.baskets, unique_baskets,
+        "cold 8-way wave must decode each basket exactly once (single-flight)"
+    );
+
+    wave(true);
+    let after_warm = server.metrics_snapshot();
+    assert_eq!(after_warm.baskets, unique_baskets, "warm wave decoded new baskets");
+    assert!(after_warm.cache_hits >= 8 * unique_baskets, "warm wave should be all hits");
+
+    let cs = server.cache_stats();
+    assert_eq!(cs.hits + cs.misses, cs.lookups);
+    assert_eq!(cs.evictions, 0, "budget is ample; nothing should be evicted");
+    remove(&paths);
+}
+
+#[test]
+fn starvation_budget_evicts_constantly_but_never_corrupts() {
+    let paths = write_corpus(
+        "conc_tiny",
+        "t",
+        Settings::new(Algorithm::Zlib, 6),
+        512,
+        0xD1E7,
+    );
+    let names: Vec<String> = paths.iter().map(stem).collect();
+    // A cache too small to hold more than ~one basket: every scan thrashes
+    // it, evictions fire constantly, and results must still be exact
+    // (Arc refcounts keep in-flight payloads alive across eviction).
+    let server = ScanServer::from_paths(
+        &paths,
+        ServeConfig { cache_bytes: 4096, cache_shards: 1, ..cfg() },
+    )
+    .unwrap();
+    let mut oracle = TreeReader::open(&paths[0]).unwrap();
+    let want = columns_of(&oracle.read_all_events().unwrap());
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let server = &server;
+            let name = names[0].clone();
+            let want = &want;
+            scope.spawn(move || {
+                let mut sq = server.query(&Query::all(&name)).unwrap();
+                assert_eq!(&sq.read_columns().unwrap(), want, "tiny-budget scan diverged");
+            });
+        }
+    });
+    let cs = server.cache_stats();
+    assert_eq!(cs.hits + cs.misses, cs.lookups);
+    assert!(
+        cs.evictions > 0 || cs.rejected > 0,
+        "a 4 KiB budget must evict or reject under this workload: {cs:?}"
+    );
+    remove(&paths);
+}
+
+#[test]
+fn damaged_baskets_are_never_cached() {
+    let path = tmp_path("conc_damage", "d.rfil");
+    // LZ4 baskets carry a CRC-32 content checksum, so an interior payload
+    // flip is detected deterministically.
+    let meta = write_sample_tree(&path, Settings::new(Algorithm::Lz4, 9), 300, 600, 0xDA);
+    let victim = meta.baskets[meta.baskets.len() / 2];
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Record layout at loc.file_offset: u32 len, u8 kind, payload.
+    let target = victim.file_offset as usize + 5 + (victim.compressed_len as usize) / 2;
+    bytes[target] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+
+    // Salvage oracle: the parallel projection reader on the damaged file.
+    let par = ParallelTreeReader::open(&path, ReadAhead::with_workers(2)).unwrap();
+    let branch_names: Vec<String> = par.meta.branches.iter().map(|b| b.name.clone()).collect();
+    let name_refs: Vec<&str> = branch_names.iter().map(|s| s.as_str()).collect();
+    let mut oracle = par.project_salvage(&name_refs).unwrap();
+    let want = oracle.read_columns().unwrap();
+    let want_gaps = oracle.gaps().to_vec();
+    assert!(!want_gaps.is_empty(), "flip did not damage the victim basket");
+
+    let server = ScanServer::from_paths(&[path.clone()], cfg()).unwrap();
+    let run = |server: &ScanServer| {
+        let mut sq = server
+            .query(&Query::all(&stem(&path)).mode(ScanMode::Salvage))
+            .unwrap();
+        let got = sq.read_columns().unwrap();
+        assert_eq!(got, want, "salvage columns diverged from oracle");
+        assert_eq!(sq.gaps(), &want_gaps[..], "salvage gaps diverged from oracle");
+        assert_eq!(sq.damage().len(), 1);
+        sq.stats()
+    };
+    let cold = run(&server);
+    let warm = run(&server);
+    let total = meta.baskets.len() as u64;
+    // Cold pass: every intact basket decoded once, the damaged one failed.
+    assert_eq!(cold.baskets_decoded, total - 1);
+    // Warm pass: intact baskets come from cache; the damaged basket was
+    // NOT cached, so it is re-read and fails again (not served stale).
+    assert_eq!(warm.baskets_from_cache, total - 1, "damaged basket leaked into cache");
+    assert_eq!(warm.baskets_decoded, 0);
+    // A strict query over the same file still fails outright.
+    let mut strict = server.query(&Query::all(&stem(&path))).unwrap();
+    assert!(strict.read_columns().is_err(), "strict scan must refuse damage");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn admission_control_bounds_active_scans() {
+    let paths = write_corpus(
+        "conc_admit",
+        "m",
+        Settings::new(Algorithm::Zstd, 1),
+        512,
+        0xAD31,
+    );
+    let names: Vec<String> = paths.iter().map(stem).collect();
+    let server = ScanServer::from_paths(
+        &paths,
+        ServeConfig { max_scans: 2, ..cfg() },
+    )
+    .unwrap();
+    let mut oracle = TreeReader::open(&paths[1]).unwrap();
+    let want = columns_of(&oracle.read_all_events().unwrap());
+    std::thread::scope(|scope| {
+        for _ in 0..6 {
+            let server = &server;
+            let name = names[1].clone();
+            let want = &want;
+            scope.spawn(move || {
+                let mut sq = server.query(&Query::all(&name)).unwrap();
+                assert_eq!(&sq.read_columns().unwrap(), want);
+            });
+        }
+    });
+    assert!(
+        server.peak_active() <= 2,
+        "admission control violated: peak {} > max_scans 2",
+        server.peak_active()
+    );
+    assert!(server.peak_active() >= 1);
+    remove(&paths);
+}
+
+#[test]
+fn empty_window_queries_return_without_blocking() {
+    let paths = write_corpus("conc_empty", "e", Settings::new(Algorithm::None, 0), 512, 0xE);
+    let names: Vec<String> = paths.iter().map(stem).collect();
+    let server = ScanServer::from_paths(&paths, cfg()).unwrap();
+    // An empty entry window produces a zero-basket plan; it must complete
+    // immediately (even if admission were saturated) with empty columns.
+    let mut sq = server.query(&Query::all(&names[0]).entries(7, 7)).unwrap();
+    let cols = sq.read_columns().unwrap();
+    assert!(cols.iter().all(|c| c.is_empty()));
+    let st = sq.stats();
+    assert_eq!(st.baskets_decoded + st.baskets_from_cache + st.baskets_coalesced, 0);
+    remove(&paths);
+}
