@@ -9,6 +9,8 @@ bench job just regenerated is NEW. Prints
 
   * the `fast_path_speedups` table of NEW (one row per optimized lane:
     fast MB/s, naive-reference MB/s, speedup factor),
+  * the `entropy` table of NEW (fse2 / fse4 / huff0 coder lanes: ratio,
+    encode and decode MB/s per payload),
   * the `read_pipeline` scaling table of NEW (serial oracle vs 1/2/4
     decode workers, per setting),
   * the `projection` table of NEW (2of8 / 8of8 branch projections:
@@ -47,6 +49,7 @@ KNOWN_SCHEMAS = (
     "bench-codecs/v3",
     "bench-codecs/v4",
     "bench-codecs/v5",
+    "bench-codecs/v6",
 )
 
 
@@ -90,6 +93,8 @@ def validate(doc, path):
         required.append(("projection_range", ("range", "order", "workers")))
     if version >= 5:
         required.append(("concurrent", ("queries", "cache")))
+    if version >= 6:
+        required.append(("entropy", ("lane", "payload")))
     for key, row_keys in required:
         rows = doc.get(key)
         if not isinstance(rows, list):
@@ -183,6 +188,25 @@ def concurrent_table(doc, title):
     return out
 
 
+def entropy_table(doc, title):
+    rows = doc.get("entropy") or []
+    if not rows:
+        return {}
+    print(f"\n== {title}: entropy lanes ({len(rows)} lanes) ==")
+    print(f"  {'lane':<8} {'payload':<14} {'ratio':>7} {'encode':>9} {'decode':>9}")
+    out = {}
+    for r in rows:
+        lane, payload = r.get("lane", "?"), r.get("payload", "?")
+        ratio = r.get("ratio")
+        ratio_s = f"{ratio:7.3f}" if isinstance(ratio, (int, float)) else f"{'-':>7}"
+        print(
+            f"  {lane:<8} {payload:<14} {ratio_s} "
+            f"{fmt_mbps(r.get('encode_MBps'))} {fmt_mbps(r.get('decode_MBps'))}"
+        )
+        out[(lane, payload)] = (r.get("encode_MBps"), r.get("decode_MBps"))
+    return out
+
+
 def check_lane_coverage(base_lanes, new_lanes, what):
     """A lane in the committed baseline that the regenerated file no longer
     produces means the bench and its baseline have drifted apart — fail."""
@@ -235,17 +259,20 @@ def main(argv=None):
     new = validate(load(args.new), args.new)
 
     new_spd = speedup_table(new, "current run")
+    new_entropy = entropy_table(new, "current run")
     new_read = read_pipeline_table(new, "current run")
     new_proj = projection_table(new, "current run")
     new_prange = projection_range_table(new, "current run")
     new_conc = concurrent_table(new, "current run")
 
     base_spd = speedup_table(base, "committed baseline")
+    base_entropy = entropy_table(base, "committed baseline")
     base_read = read_pipeline_table(base, "committed baseline")
     base_proj = projection_table(base, "committed baseline")
     base_prange = projection_range_table(base, "committed baseline")
     base_conc = concurrent_table(base, "committed baseline")
     check_lane_coverage(base_spd, new_spd, "fast_path_speedups")
+    check_lane_coverage(base_entropy, new_entropy, "entropy")
     check_lane_coverage(base_read, new_read, "read_pipeline")
     check_lane_coverage(base_proj, new_proj, "projection")
     check_lane_coverage(base_prange, new_prange, "projection_range")
@@ -259,6 +286,16 @@ def main(argv=None):
         for k in sorted(common):
             d = new_spd[k] - base_spd[k]
             print(f"  {k[0]:<44} {k[1]:<14} {base_spd[k]:6.2f}x -> {new_spd[k]:6.2f}x ({d:+.2f})")
+
+    common = [k for k in new_entropy if k in base_entropy
+              and all(isinstance(v, (int, float)) for v in new_entropy[k])
+              and all(isinstance(v, (int, float)) for v in base_entropy[k])]
+    if common:
+        print("\n== entropy-lane drift vs baseline ==")
+        for k in sorted(common):
+            (be, bd), (ne, nd) = base_entropy[k], new_entropy[k]
+            print(f"  {k[0]:<8} {k[1]:<14} enc {be:8.1f} -> {ne:8.1f}  "
+                  f"dec {bd:8.1f} -> {nd:8.1f} MB/s")
 
     common = [k for k in new_read if k in base_read
               and isinstance(new_read[k], (int, float))

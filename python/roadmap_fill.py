@@ -7,7 +7,7 @@ Usage:
 The PR-1/PR-2/PR-3 perf-trajectory sections of ROADMAP.md were authored in
 containers without a Rust toolchain, so their speedup claims point at the
 bench artifact instead of quoting numbers. This script renders the
-artifact's `fast_path_speedups`, `read_pipeline`, `projection`,
+artifact's `fast_path_speedups`, `entropy`, `read_pipeline`, `projection`,
 `projection_range`, and `concurrent` sections as markdown tables into the
 block delimited by
 
@@ -58,6 +58,26 @@ def render(doc):
     else:
         lines.append("*(artifact is still a placeholder — fast-path MB/s "
                      "fields are null; re-run from a real bench artifact)*")
+    entropy = doc.get("entropy") or []
+    have_entropy = [r for r in entropy
+                    if isinstance(r.get("encode_MBps"), (int, float))]
+    if entropy:
+        lines.append("")
+        lines.append("Entropy lanes (fse2 = dual-state FSE, fse4 = quad-state FSE, "
+                     "huff0 = 4-stream Huffman literals; coder throughput, "
+                     "tables prebuilt for FSE):")
+        lines.append("")
+        if have_entropy:
+            lines.append("| lane | payload | ratio | encode MB/s | decode MB/s |")
+            lines.append("|---|---|---:|---:|---:|")
+            for r in entropy:
+                lines.append(
+                    f"| {r.get('lane','?')} | {r.get('payload','?')} | "
+                    f"{fmt(r.get('ratio'))} | {fmt(r.get('encode_MBps'))} | "
+                    f"{fmt(r.get('decode_MBps'))} |"
+                )
+        else:
+            lines.append("*(entropy lanes present but unfilled)*")
     reads = doc.get("read_pipeline") or []
     have_reads = [r for r in reads if isinstance(r.get("MBps"), (int, float))]
     if reads:

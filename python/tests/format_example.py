@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """Executable companion to docs/FORMAT.md: builds the spec's worked-example
-RFIL v2 file byte-by-byte from the *document's* rules (not from the Rust
+RFIL v3 file byte-by-byte from the *document's* rules (not from the Rust
 code), checks structural invariants (record lengths, trailer offset), and
 verifies the result is byte-identical to the hex dump embedded in
 docs/FORMAT.md §10 — so an edit to either the spec rules or the dump that
@@ -67,7 +67,7 @@ def build_example():
         + data
     )
 
-    header = b"RFIL" + (2).to_bytes(2, "big")   # §2
+    header = b"RFIL" + (3).to_bytes(2, "big")   # §2
     basket_offset = len(header)                  # first record at offset 6
     basket_rec = record(1, basket_payload)
 
@@ -94,7 +94,7 @@ def build_example():
     blob = header + basket_rec + meta_rec + trailer
 
     # Structural checks the spec promises.
-    assert blob[:4] == b"RFIL" and blob[4:6] == b"\x00\x02"
+    assert blob[:4] == b"RFIL" and blob[4:6] == b"\x00\x03"
     assert blob[-8:] == b"RFILEND1"
     assert int.from_bytes(blob[-16:-8], "big") == meta_offset
     total = int.from_bytes(blob[basket_offset : basket_offset + 4], "big")

@@ -1,0 +1,501 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/fixtures/compat_v2.rfile: a tiny RFIL **v2** file
+whose baskets carry dual-state (mode 2) FSE literal sections.
+
+The v3 reader must keep decoding v2 files event-for-event identical
+(docs/FORMAT.md section 9), so the conformance suite pins a committed v2
+file produced by this script. The byte layout is built here from scratch —
+an independent transliteration of the Rust dual-state FSE encoder
+(rust/src/zstd/fse.rs), the RZS1 container (rust/src/zstd/compress.rs,
+with n_seq = 0: a pure-literals block is a layout any v2 writer can emit),
+the 10-byte span header (rust/src/compression/record.rs) and the RFIL
+record/metadata framing (rust/src/rfile/{format,basket,writer,meta}.rs) —
+so the fixture cannot inherit a bug from the code it is meant to check.
+
+The script decodes its own output with a forward FSE decoder and a full
+file parse before writing anything, then emits the fixture plus the
+expected events (mirrored by `expected_fixture_events()` in
+rust/tests/conformance_entropy.rs).
+
+Run from the repo root:  python3 python/tests/gen_compat_fixture.py
+"""
+
+import struct
+import sys
+from pathlib import Path
+
+OUT_PATH = Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures" / "compat_v2.rfile"
+
+# --- varint / record helpers (rust/src/util/varint.rs, rfile/format.rs) ---
+
+def uvarint(v: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def lp(data: bytes) -> bytes:
+    return uvarint(len(data)) + data
+
+
+def record(kind: int, payload: bytes) -> bytes:
+    return struct.pack(">I", len(payload) + 5) + bytes([kind]) + payload
+
+
+def span_header(tag: bytes, level: int, comp_len: int, uncomp_len: int) -> bytes:
+    """10-byte span header: tag, level nibble, u24le sizes, precond byte."""
+    h = bytearray(tag)
+    h.append(level & 0x0F)
+    h += comp_len.to_bytes(3, "little")
+    h += uncomp_len.to_bytes(3, "little")
+    h.append(0)  # Precond::None
+    return bytes(h)
+
+
+# --- FSE transliteration (rust/src/zstd/fse.rs) -------------------------
+
+def optimal_table_log(total: int, present: int, max_log: int) -> int:
+    if total > 1:
+        log = max((total - 1).bit_length() - 1 - 2, 0)
+    else:
+        log = 5
+    min_for_alphabet = (max(present, 2) - 1).bit_length() + 1
+    return min(max(log, min_for_alphabet, 5), max_log)
+
+
+def normalize_counts(hist, total: int, table_log: int):
+    size = 1 << table_log
+    present = sum(1 for c in hist if c > 0)
+    assert 0 < present <= size and total > 0
+    norm = [0] * len(hist)
+    if present == 1:
+        norm[next(i for i, c in enumerate(hist) if c > 0)] = size
+        return norm
+    assigned = 0
+    for s, c in enumerate(hist):
+        if c == 0:
+            continue
+        scaled = (c * size) // total
+        v = min(max(scaled, 1), size - 1)
+        norm[s] = v
+        assigned += v
+    rest = size - assigned
+    while rest > 0:
+        # Rust max_by_key keeps the *last* maximum on ties.
+        best_s, best_key = 0, None
+        for s in range(len(hist)):
+            key = (norm[s], hist[s])
+            if best_key is None or key >= best_key:
+                best_key, best_s = key, s
+        add = max(min(rest, size // 8), 1)
+        norm[best_s] += add
+        rest -= add
+    while rest < 0:
+        # Strictly-greater comparison keeps the *first* maximum on ties.
+        best = None
+        for s in range(len(hist)):
+            if norm[s] > 1:
+                ratio = norm[s] * total / (max(hist[s], 1) * size)
+                if best is None or ratio > best[0]:
+                    best = (ratio, s)
+        assert best is not None, "normalization failed"
+        norm[best[1]] -= 1
+        rest += 1
+    assert sum(norm) == size
+    return norm
+
+
+def spread_symbols(norm, table_log: int):
+    size = 1 << table_log
+    table = [0] * size
+    step = (size >> 1) + (size >> 3) + 3
+    mask = size - 1
+    pos = 0
+    for sym, count in enumerate(norm):
+        for _ in range(count):
+            table[pos] = sym
+            pos = (pos + step) & mask
+    assert pos == 0
+    return table
+
+
+class EncTable:
+    def __init__(self, norm, table_log: int):
+        size = 1 << table_log
+        spread = spread_symbols(norm, table_log)
+        cumul = [0] * (len(norm) + 1)
+        for s in range(len(norm)):
+            cumul[s + 1] = cumul[s] + norm[s]
+        self.table_log = table_log
+        self.next_state = [0] * size
+        cursor = list(cumul)
+        for p, sym in enumerate(spread):
+            self.next_state[cursor[sym]] = size + p
+            cursor[sym] += 1
+        self.sym = [(0, 0)] * len(norm)
+        self.seed = [0] * len(norm)
+        total = 0
+        for s, count in enumerate(norm):
+            if count == 0:
+                continue
+            self.seed[s] = self.next_state[total]
+            if count == 1:
+                self.sym[s] = (total - 1, ((table_log << 16) - (1 << table_log)) & 0xFFFFFFFF)
+            else:
+                max_bits = table_log - ((count - 1).bit_length() - 1)
+                self.sym[s] = (total - count, ((max_bits << 16) - (count << max_bits)) & 0xFFFFFFFF)
+            total += count
+
+
+class BitWriter:
+    """LSB-first, matching rust/src/util/bitio.rs byte-for-byte."""
+
+    def __init__(self):
+        self.out = bytearray()
+        self.acc = 0
+        self.nbits = 0
+
+    def write_bits(self, bits: int, n: int):
+        self.acc |= bits << self.nbits
+        self.nbits += n
+        while self.nbits >= 8:
+            self.out.append(self.acc & 0xFF)
+            self.acc >>= 8
+            self.nbits -= 8
+
+    def finish(self) -> bytes:
+        if self.nbits > 0:
+            self.out.append(self.acc & 0xFF)
+            self.acc = 0
+            self.nbits = 0
+        return bytes(self.out)
+
+
+def encode_interleaved(enc: EncTable, symbols) -> tuple:
+    """Dual-state encode: the v2 stream layout (even lanes 0, odd lane 1)."""
+    size = 1 << enc.table_log
+    states = [size, size]
+    seeded = [False, False]
+    chunks = []
+    for i in reversed(range(len(symbols))):
+        s = symbols[i]
+        lane = i & 1
+        if not seeded[lane]:
+            states[lane] = enc.seed[s]
+            seeded[lane] = True
+            continue
+        delta_find, delta_nb = enc.sym[s]
+        st = states[lane]
+        nb = ((delta_nb + st) & 0xFFFFFFFF) >> 16
+        chunks.append((st & ((1 << nb) - 1), nb))
+        states[lane] = enc.next_state[(st >> nb) + delta_find]
+    w = BitWriter()
+    for bits, nb in reversed(chunks):
+        w.write_bits(bits, nb)
+    return w.finish(), (states[0], states[1])
+
+
+def write_norm(norm, table_log: int) -> bytes:
+    out = bytearray([table_log])
+    last = 0
+    for i, c in enumerate(norm):
+        if c > 0:
+            last = i + 1
+    out += uvarint(last)
+    zeros = 0
+    for c in norm[:last]:
+        if c == 0:
+            zeros += 1
+            continue
+        if zeros > 0:
+            out += uvarint(0) + uvarint(zeros)
+            zeros = 0
+        out += uvarint(c)
+    return bytes(out)
+
+
+# --- forward decoder (self-verification only) ---------------------------
+
+def dec_entries(norm, table_log: int):
+    size = 1 << table_log
+    occ = [0] * len(norm)
+    entries = []
+    for sym in spread_symbols(norm, table_log):
+        x = norm[sym] + occ[sym]
+        occ[sym] += 1
+        nb = table_log - (x.bit_length() - 1)
+        entries.append((sym, nb, (x << nb) - size))
+    return entries
+
+
+class BitReaderFwd:
+    def __init__(self, data: bytes):
+        self.data = data
+        self.pos = 0
+        self.over = False
+
+    def read_bits(self, n: int) -> int:
+        v = 0
+        for j in range(n):
+            byte_i = (self.pos + j) >> 3
+            if byte_i < len(self.data):
+                v |= ((self.data[byte_i] >> ((self.pos + j) & 7)) & 1) << j
+            else:
+                self.over = True
+        self.pos += n
+        return v
+
+
+def decode_interleaved(norm, table_log: int, init, count: int, payload: bytes):
+    size = 1 << table_log
+    entries = dec_entries(norm, table_log)
+    states = [s - size for s in init]
+    assert all(0 <= s < size for s in states), "invalid initial state"
+    r = BitReaderFwd(payload)
+    out = []
+    for k in range(count):
+        lane = k & 1
+        sym, nb, base = entries[states[lane]]
+        out.append(sym)
+        if k + 2 < count:
+            states[lane] = base + r.read_bits(nb)
+    assert not r.over, "payload exhausted"
+    return out
+
+
+# --- RZS1 v2 block + basket assembly ------------------------------------
+
+def fse_literal_section(data: bytes) -> bytes:
+    """Mode-2 (dual-state) literal section, exactly what a v2 writer emits:
+    [mode=2][len][norm table][state0][state1][payload_len][payload]."""
+    hist = [0] * 256
+    for b in data:
+        hist[b] += 1
+    present = sum(1 for c in hist if c > 0)
+    assert present >= 2 and len(data) >= 32, "data would pick raw/rle mode"
+    log = optimal_table_log(len(data), present, 11)
+    norm = normalize_counts(hist, len(data), log)
+    enc = EncTable(norm, log)
+    payload, states = encode_interleaved(enc, data)
+    # Self-check: forward decode recovers the input.
+    assert bytes(decode_interleaved(norm, log, states, len(data), payload)) == data
+    section = write_norm(norm, log) + uvarint(states[0]) + uvarint(states[1])
+    section += uvarint(len(payload)) + payload
+    # The v2 encoder only picks FSE when it wins; keep the fixture honest.
+    assert len(section) + 2 < len(data), "FSE section failed to win; pick skewer data"
+    return bytes([2]) + uvarint(len(data)) + section
+
+
+def rzs1_block(logical: bytes) -> bytes:
+    """Pure-literals RZS1 block: [raw_len][n_seq=0][literal section]."""
+    return uvarint(len(logical)) + uvarint(0) + fse_literal_section(logical)
+
+
+def basket_record_payload(branch_id: int, basket_index: int, n_entries: int,
+                          data: bytes, offsets) -> bytes:
+    logical = data + b"".join(struct.pack(">I", o) for o in offsets)
+    blob = rzs1_block(logical)
+    assert len(blob) < len(logical), "span would be stored raw, not ZS"
+    payload = uvarint(branch_id) + uvarint(basket_index)
+    payload += uvarint(n_entries) + uvarint(len(data)) + uvarint(len(offsets))
+    payload += span_header(b"ZS", 5, len(blob), len(logical)) + blob
+    return payload, len(logical)
+
+
+# --- fixture content (mirrored in rust/tests/conformance_entropy.rs) ----
+
+N_ENTRIES = 37
+TAG_NAMES = [b"Muon_pt", b"Jet_eta", b"MET_phi", b"Tau_q", b"HLT_Iso"]
+
+
+def expected_events():
+    events = []
+    for i in range(N_ENTRIES):
+        if i % 7 == 3:
+            tag = b""
+        else:
+            tag = TAG_NAMES[i % 5] + bytes([ord("0") + i % 10])
+        events.append((tag, i * 0.5 - 3.0))
+    return events
+
+
+def build_file() -> bytes:
+    events = expected_events()
+    # Branch 0 "tag" (VarU8, type code 7): jagged bytes + offset array.
+    tag_data = bytearray()
+    tag_offsets = []
+    for tag, _ in events:
+        tag_data += tag
+        tag_offsets.append(len(tag_data))
+    # Branch 1 "e" (F32, type code 0): fixed-width big-endian floats.
+    e_data = b"".join(struct.pack(">f", v) for _, v in events)
+
+    p0, logical0 = basket_record_payload(0, 0, N_ENTRIES, bytes(tag_data), tag_offsets)
+    p1, logical1 = basket_record_payload(1, 0, N_ENTRIES, e_data, [])
+
+    out = bytearray(b"RFIL" + (2).to_bytes(2, "big"))  # v2 header
+    off0 = len(out)
+    out += record(1, p0)
+    off1 = len(out)
+    out += record(1, p1)
+    meta_off = len(out)
+
+    # TreeMeta (rust/src/rfile/meta.rs::serialize).
+    meta = bytearray()
+    meta += lp(b"Events")
+    meta += uvarint(2)
+    meta += lp(b"tag") + bytes([7, 0])  # VarU8, no per-branch settings
+    meta += lp(b"e") + bytes([0, 0])    # F32,   no per-branch settings
+    meta += uvarint(505)                # default settings: ZSTD-5
+    meta.append(0)                      # precond byte: None
+    meta += uvarint(N_ENTRIES)
+    meta.append(0)                      # no dictionary
+    meta += uvarint(2)                  # two baskets
+    for branch_id, off, payload, logical in [(0, off0, p0, logical0), (1, off1, p1, logical1)]:
+        meta += uvarint(branch_id) + uvarint(0) + uvarint(0) + uvarint(N_ENTRIES)
+        meta += uvarint(off) + uvarint(len(payload)) + uvarint(logical)
+    out += record(2, bytes(meta))
+    out += struct.pack(">Q", meta_off) + b"RFILEND1"
+    return bytes(out)
+
+
+# --- independent re-parse of the finished file --------------------------
+
+class Cursor:
+    def __init__(self, data: bytes):
+        self.data = data
+        self.pos = 0
+
+    def uvarint(self) -> int:
+        v, shift = 0, 0
+        while True:
+            b = self.data[self.pos]
+            self.pos += 1
+            v |= (b & 0x7F) << shift
+            if b & 0x80 == 0:
+                return v
+            shift += 7
+
+    def u8(self) -> int:
+        b = self.data[self.pos]
+        self.pos += 1
+        return b
+
+    def take(self, n: int) -> bytes:
+        b = self.data[self.pos:self.pos + n]
+        assert len(b) == n, "truncated"
+        self.pos += n
+        return b
+
+
+def parse_basket(payload: bytes):
+    c = Cursor(payload)
+    branch_id, basket_index = c.uvarint(), c.uvarint()
+    n_entries, data_len, n_offsets = c.uvarint(), c.uvarint(), c.uvarint()
+    hdr = c.take(10)
+    assert hdr[:2] == b"ZS" and hdr[9] == 0
+    comp_len = int.from_bytes(hdr[3:6], "little")
+    uncomp_len = int.from_bytes(hdr[6:9], "little")
+    blob = c.take(comp_len)
+    assert c.pos == len(payload), "trailing bytes after span"
+    # RZS1: raw_len, n_seq = 0, mode-2 literal section.
+    b = Cursor(blob)
+    raw_len = b.uvarint()
+    assert raw_len == uncomp_len and b.uvarint() == 0
+    assert b.u8() == 2, "fixture must use the dual-state (mode 2) section"
+    lit_len = b.uvarint()
+    assert lit_len == raw_len
+    table_log = b.u8()
+    n = b.uvarint()
+    norm, i = [0] * n, 0
+    while i < n:
+        v = b.uvarint()
+        if v == 0:
+            i += b.uvarint()
+        else:
+            norm[i] = v
+            i += 1
+    assert sum(norm) == 1 << table_log
+    states = (b.uvarint(), b.uvarint())
+    fse_payload = b.take(b.uvarint())
+    assert b.pos == len(blob), "trailing bytes after FSE payload"
+    logical = bytes(decode_interleaved(norm, table_log, states, lit_len, fse_payload))
+    assert len(logical) == data_len + 4 * n_offsets
+    data, off_bytes = logical[:data_len], logical[data_len:]
+    offsets = [int.from_bytes(off_bytes[j:j + 4], "big") for j in range(0, len(off_bytes), 4)]
+    return branch_id, basket_index, n_entries, data, offsets
+
+
+def verify(blob: bytes):
+    assert blob[:4] == b"RFIL" and blob[4:6] == b"\x00\x02", "must be a v2 container"
+    assert blob[-8:] == b"RFILEND1"
+    meta_off = struct.unpack(">Q", blob[-16:-8])[0]
+
+    def rec_at(off: int):
+        total = struct.unpack(">I", blob[off:off + 4])[0]
+        return blob[off + 4], blob[off + 5:off + total]
+
+    kind, meta = rec_at(meta_off)
+    assert kind == 2
+    c = Cursor(meta)
+    assert c.take(c.uvarint()) == b"Events"
+    n_branches = c.uvarint()
+    branches = []
+    for _ in range(n_branches):
+        name = c.take(c.uvarint())
+        ty, has = c.u8(), c.u8()
+        assert has == 0
+        branches.append((name, ty))
+    assert branches == [(b"tag", 7), (b"e", 0)]
+    assert c.uvarint() == 505 and c.u8() == 0
+    assert c.uvarint() == N_ENTRIES and c.u8() == 0
+    n_baskets = c.uvarint()
+    assert n_baskets == 2
+
+    events = expected_events()
+    for _ in range(n_baskets):
+        branch_id = c.uvarint()
+        assert c.uvarint() == 0 and c.uvarint() == 0 and c.uvarint() == N_ENTRIES
+        off, comp_len, uncomp_len = c.uvarint(), c.uvarint(), c.uvarint()
+        kind, payload = rec_at(off)
+        assert kind == 1 and len(payload) == comp_len
+        bid, bidx, n_entries, data, offsets = parse_basket(payload)
+        assert bid == branch_id and bidx == 0 and n_entries == N_ENTRIES
+        if branch_id == 0:
+            assert len(offsets) == N_ENTRIES
+            start = 0
+            for i, end in enumerate(offsets):
+                assert data[start:end] == events[i][0], f"tag mismatch at entry {i}"
+                start = end
+            assert uncomp_len == len(data) + 4 * N_ENTRIES
+        else:
+            assert offsets == [] and uncomp_len == len(data) == 4 * N_ENTRIES
+            for i in range(N_ENTRIES):
+                (got,) = struct.unpack(">f", data[4 * i:4 * i + 4])
+                assert got == events[i][1], f"f32 mismatch at entry {i}"
+    assert c.pos == len(meta), "trailing metadata bytes"
+
+
+def main():
+    blob = build_file()
+    verify(blob)
+    OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
+    existing = OUT_PATH.read_bytes() if OUT_PATH.exists() else None
+    if existing == blob:
+        print(f"unchanged: {OUT_PATH} ({len(blob)} bytes)")
+    else:
+        OUT_PATH.write_bytes(blob)
+        print(f"wrote {OUT_PATH} ({len(blob)} bytes)")
+    if "--check" in sys.argv and existing != blob:
+        print("error: committed fixture is stale", file=sys.stderr)
+        sys.exit(1)
+    print("compat fixture self-check OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,11 @@
 #!/usr/bin/env python3
 """Self-tests for the bench tooling contract CI leans on:
 
-  * `bench_diff.py` — schema validation (v1..v5), lane-coverage checks,
+  * `bench_diff.py` — schema validation (v1..v6), lane-coverage checks,
     and the `--gate-fastpath` perf gate with its exit codes (0 ok, 2
     schema mismatch, 3 perf regression);
   * `roadmap_fill.py` — marker-block replacement and table rendering for
-    every section of a v5 document.
+    every section of a v6 document.
 
 These run in the CI `python` job so bench-tooling drift fails the build
 even when no Rust toolchain is in play. Run:
@@ -103,6 +103,24 @@ def v5_doc(speedup=3.0, with_values=True):
     return doc
 
 
+def v6_doc(speedup=3.0, with_values=True):
+    """A minimal well-formed bench-codecs/v6 document (v5 + entropy)."""
+    def mbps(v):
+        return v if with_values else None
+
+    doc = v5_doc(speedup=speedup, with_values=with_values)
+    doc["schema"] = "bench-codecs/v6"
+    doc["entropy"] = [
+        {"lane": "fse2", "payload": "nanoaod", "ratio": 1.6,
+         "encode_MBps": mbps(300.0), "decode_MBps": mbps(450.0)},
+        {"lane": "fse4", "payload": "nanoaod", "ratio": 1.6,
+         "encode_MBps": mbps(420.0), "decode_MBps": mbps(700.0)},
+        {"lane": "huff0", "payload": "noise", "ratio": 1.0,
+         "encode_MBps": mbps(500.0), "decode_MBps": mbps(800.0)},
+    ]
+    return doc
+
+
 def write_doc(tmp, name, doc):
     path = os.path.join(tmp, name)
     with open(path, "w") as f:
@@ -177,6 +195,24 @@ class ValidateTests(unittest.TestCase):
     def test_concurrent_rows_need_keys(self):
         doc = v5_doc()
         del doc["concurrent"][0]["cache"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v6_roundtrip(self):
+        validate(v6_doc(), "doc")
+
+    def test_v6_requires_entropy_section(self):
+        doc = v6_doc()
+        del doc["entropy"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v5_does_not_require_entropy(self):
+        validate(v5_doc(), "doc")  # no entropy key at all
+
+    def test_entropy_rows_need_keys(self):
+        doc = v6_doc()
+        del doc["entropy"][0]["lane"]
         with self.assertRaises(SchemaError):
             validate(doc, "doc")
 
@@ -261,6 +297,34 @@ class DiffCliTests(unittest.TestCase):
             self.assertEqual(r.returncode, 2, r.stdout)
             self.assertIn("concurrent", r.stderr)
 
+    def test_v5_baseline_with_v6_new_passes(self):
+        # The first run after the v6 bump diffs a committed v5 baseline
+        # against a freshly regenerated v6 artifact — must not fail.
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v5_doc())
+            new = write_doc(tmp, "new.json", v6_doc())
+            r = run_diff(base, new, "--gate-fastpath", "10")
+            self.assertEqual(r.returncode, 0, r.stderr)
+
+    def test_v6_docs_print_entropy_table(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            p = write_doc(tmp, "a.json", v6_doc())
+            r = run_diff(p, p)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            self.assertIn("entropy lanes", r.stdout)
+            self.assertIn("fse4", r.stdout)
+            self.assertIn("huff0", r.stdout)
+
+    def test_missing_entropy_lane_is_schema_mismatch(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v6_doc())
+            new_doc = v6_doc()
+            new_doc["entropy"] = new_doc["entropy"][:1]
+            new = write_doc(tmp, "new.json", new_doc)
+            r = run_diff(base, new)
+            self.assertEqual(r.returncode, 2, r.stdout)
+            self.assertIn("entropy", r.stderr)
+
 
 class GateTests(unittest.TestCase):
     def test_regression_beyond_gate_exits_3(self):
@@ -316,12 +380,14 @@ class RoadmapFillTests(unittest.TestCase):
 
     def test_fills_marker_block_with_all_tables(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v5_doc(), self.ROADMAP)
+            r, out = self.run_fill(tmp, v6_doc(), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
             self.assertNotIn("\nold\n", text)
             self.assertIn("| fast path |", text)
+            self.assertIn("Entropy lanes", text)
+            self.assertIn("| fse4 | nanoaod | 1.6 | 420.0 | 700.0 |", text)
             self.assertIn("Read-pipeline scaling", text)
             self.assertIn("Columnar projection", text)
             self.assertIn("| 2of8 | 300.0 | 900.0 | 700.0 |", text)
@@ -351,14 +417,24 @@ class RoadmapFillTests(unittest.TestCase):
 
     def test_placeholder_doc_renders_placeholders(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v5_doc(with_values=False), self.ROADMAP)
+            r, out = self.run_fill(tmp, v6_doc(with_values=False), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
             self.assertIn("placeholder", text)
+            self.assertIn("entropy lanes present but unfilled", text)
             self.assertIn("projection lanes present but unfilled", text)
             self.assertIn("projection_range lanes present but unfilled", text)
             self.assertIn("concurrent lanes present but unfilled", text)
+
+    def test_v5_doc_fills_without_entropy(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            r, out = self.run_fill(tmp, v5_doc(), self.ROADMAP)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            with open(out) as f:
+                text = f.read()
+            self.assertIn("Concurrent scan server", text)
+            self.assertNotIn("Entropy lanes", text)
 
     def test_missing_markers_exit_1(self):
         with tempfile.TemporaryDirectory() as tmp:

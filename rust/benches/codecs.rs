@@ -14,6 +14,7 @@
 //!  * human-readable tables on stdout,
 //!  * `results/codecs.csv` + `results/precond.csv` (historical columns)
 //!    + `results/fastpath.csv` (fast-vs-reference speedups)
+//!    + `results/entropy.csv` (fse2/fse4/huff0 entropy-lane throughput)
 //!    + `results/read_pipeline.csv` (read-side scaling)
 //!    + `results/projection.csv` (columnar projection lanes)
 //!    + `results/projection_range.csv` (entry-range slice lanes)
@@ -33,7 +34,7 @@ use rootio::lz4::Lz4Fast;
 use rootio::precond::{self, Precond};
 use rootio::util::bitio::{reference::NaiveBitWriter, BitReader, BitWriter};
 use rootio::util::rng::Rng;
-use rootio::zstd::fse;
+use rootio::zstd::{fse, huff0};
 
 fn nanoaod_payload() -> Vec<u8> {
     // Concatenated logical basket payloads (data + big-endian offset
@@ -116,6 +117,20 @@ struct Speedup {
     payload: &'static str,
     fast_mbps: f64,
     reference_mbps: f64,
+}
+
+struct EntropyRow {
+    /// Entropy lane: "fse2" (dual-state), "fse4" (quad-state), "huff0"
+    /// (4-stream Huffman literals).
+    lane: &'static str,
+    payload: &'static str,
+    /// Entropy-coded payload ratio (input bytes / coded bytes). For the
+    /// FSE lanes the denominator is the bitstream only (state words and
+    /// the shared norm table are per-section constants); for huff0 it is
+    /// the full blob including the code-length table and jump header.
+    ratio: f64,
+    encode_mbps: f64,
+    decode_mbps: f64,
 }
 
 struct ReadRow {
@@ -337,6 +352,81 @@ fn fast_path_speedups(cfg: &BenchConfig) -> Vec<Speedup> {
         });
     }
 
+    // 6b. FSE quad-state interleave (PR 8): four independent ANS states
+    // hide the state-update latency chain the dual-state coder still has.
+    {
+        let data = text;
+        let hist = fse::histogram(data);
+        let present = hist.iter().filter(|&&c| c > 0).count();
+        let log = fse::optimal_table_log(data.len(), present, 11);
+        let norm = fse::normalize_counts(&hist, data.len() as u64, log).expect("norm");
+        let enc = fse::EncTable::new(&norm, log).expect("enc table");
+        let dec = fse::DecTable::new(&norm, log).expect("dec table");
+        let syms: Vec<u16> = data.iter().map(|&b| b as u16).collect();
+        let fast = bench("fse4-encode-fast", data.len(), cfg, || enc.encode_interleaved4(&syms).0.len());
+        let refr = bench("fse4-encode-naive", data.len(), cfg, || {
+            fse::reference::encode_interleaved4_naive(&enc, &syms).0.len()
+        });
+        out.push(Speedup {
+            name: "fse_encode_interleaved4_vs_naive",
+            payload: "text",
+            fast_mbps: fast.mbps(),
+            reference_mbps: refr.mbps(),
+        });
+        let (payload_bits, states) = enc.encode_interleaved4(&syms);
+        let mut sym_buf: Vec<u16> = Vec::with_capacity(data.len());
+        let fast = bench("fse4-decode-fast", data.len(), cfg, || {
+            sym_buf.clear();
+            let mut r = BitReader::new(&payload_bits);
+            dec.decode_interleaved4(&mut r, states, data.len(), &mut sym_buf).unwrap();
+            sym_buf.len()
+        });
+        let refr = bench("fse4-decode-naive", data.len(), cfg, || {
+            sym_buf.clear();
+            let mut r = BitReader::new(&payload_bits);
+            fse::reference::decode_interleaved4_naive(&dec, &mut r, states, data.len(), &mut sym_buf)
+                .unwrap();
+            sym_buf.len()
+        });
+        out.push(Speedup {
+            name: "fse_decode_interleaved4_vs_naive",
+            payload: "text",
+            fast_mbps: fast.mbps(),
+            reference_mbps: refr.mbps(),
+        });
+    }
+
+    // 6c. Huff0-style 4-stream Huffman literals (PR 8) vs the retained
+    // single-stream naive coder (byte-identical blobs).
+    {
+        let data = text;
+        let fast = bench("huff0-compress-fast", data.len(), cfg, || {
+            huff0::compress(data).expect("text compresses").len()
+        });
+        let refr = bench("huff0-compress-naive", data.len(), cfg, || {
+            huff0::reference::compress_naive(data).expect("text compresses").len()
+        });
+        out.push(Speedup {
+            name: "huff0_compress_4stream_vs_naive",
+            payload: "text",
+            fast_mbps: fast.mbps(),
+            reference_mbps: refr.mbps(),
+        });
+        let blob = huff0::compress(data).expect("text compresses");
+        let fast = bench("huff0-decompress-fast", data.len(), cfg, || {
+            huff0::decompress(&blob, data.len()).unwrap().len()
+        });
+        let refr = bench("huff0-decompress-naive", data.len(), cfg, || {
+            huff0::reference::decompress_naive(&blob, data.len()).unwrap().len()
+        });
+        out.push(Speedup {
+            name: "huff0_decompress_4stream_vs_naive",
+            payload: "text",
+            fast_mbps: fast.mbps(),
+            reference_mbps: refr.mbps(),
+        });
+    }
+
     // 7. 4-lane histogram vs scalar (feeds normalize_counts on every FSE
     // section build).
     let fast = bench("histogram-4lane", nanoaod.len(), cfg, || {
@@ -368,6 +458,75 @@ fn fast_path_speedups(cfg: &BenchConfig) -> Vec<Speedup> {
             payload: "text",
             fast_mbps: fast.mbps(),
             reference_mbps: refr.mbps(),
+        });
+    }
+    out
+}
+
+/// Entropy lanes (PR 8): raw coder throughput of the three RZS1 literal
+/// entropy choices — dual-state FSE, quad-state FSE, and the 4-stream
+/// Huff0 literals coder — on the NanoAOD workload and a high-entropy
+/// noise slice. FSE table build happens outside the timer (tables are
+/// per-section constants on the real path); huff0's blob necessarily
+/// includes its own table build.
+fn entropy_lanes(cfg: &BenchConfig) -> Vec<EntropyRow> {
+    let all = payloads();
+    let nanoaod = payload_by_name(&all, "nanoaod");
+    let noise = payload_by_name(&all, "noise");
+    // 128 KiB noise slice: keeps every huff0 stream segment below the
+    // u16 jump-header limit even at ~8 bits/symbol.
+    let lanes: [(&'static str, &[u8]); 2] = [("nanoaod", nanoaod), ("noise", &noise[..128 << 10])];
+    let mut out = Vec::new();
+    for (pname, data) in lanes {
+        let hist = fse::histogram(data);
+        let present = hist.iter().filter(|&&c| c > 0).count();
+        let log = fse::optimal_table_log(data.len(), present, 11);
+        let norm = fse::normalize_counts(&hist, data.len() as u64, log).expect("norm");
+        let enc = fse::EncTable::new(&norm, log).expect("enc table");
+        let dec = fse::DecTable::new(&norm, log).expect("dec table");
+        let mut sym_buf: Vec<u16> = Vec::with_capacity(data.len());
+
+        let (p2, s2) = enc.encode_interleaved(data);
+        let e = bench("entropy-fse2-enc", data.len(), cfg, || enc.encode_interleaved(data).0.len());
+        let d = bench("entropy-fse2-dec", data.len(), cfg, || {
+            sym_buf.clear();
+            dec.decode_interleaved(&mut BitReader::new(&p2), s2, data.len(), &mut sym_buf).unwrap();
+            sym_buf.len()
+        });
+        out.push(EntropyRow {
+            lane: "fse2",
+            payload: pname,
+            ratio: data.len() as f64 / p2.len() as f64,
+            encode_mbps: e.mbps(),
+            decode_mbps: d.mbps(),
+        });
+
+        let (p4, s4) = enc.encode_interleaved4(data);
+        let e = bench("entropy-fse4-enc", data.len(), cfg, || enc.encode_interleaved4(data).0.len());
+        let d = bench("entropy-fse4-dec", data.len(), cfg, || {
+            sym_buf.clear();
+            dec.decode_interleaved4(&mut BitReader::new(&p4), s4, data.len(), &mut sym_buf).unwrap();
+            sym_buf.len()
+        });
+        out.push(EntropyRow {
+            lane: "fse4",
+            payload: pname,
+            ratio: data.len() as f64 / p4.len() as f64,
+            encode_mbps: e.mbps(),
+            decode_mbps: d.mbps(),
+        });
+
+        let blob = huff0::compress(data).expect("entropy bench payload compresses");
+        let e = bench("entropy-huff0-enc", data.len(), cfg, || huff0::compress(data).unwrap().len());
+        let d = bench("entropy-huff0-dec", data.len(), cfg, || {
+            huff0::decompress(&blob, data.len()).unwrap().len()
+        });
+        out.push(EntropyRow {
+            lane: "huff0",
+            payload: pname,
+            ratio: data.len() as f64 / blob.len() as f64,
+            encode_mbps: e.mbps(),
+            decode_mbps: d.mbps(),
         });
     }
     out
@@ -646,9 +805,11 @@ fn concurrent_lanes() -> Vec<ConcRow> {
     out
 }
 
+#[allow(clippy::too_many_arguments)] // one slice per schema section, called once
 fn write_json(
     rows: &[Row],
     speedups: &[Speedup],
+    entropy: &[EntropyRow],
     reads: &[ReadRow],
     projections: &[ProjRow],
     projection_ranges: &[ProjRangeRow],
@@ -681,6 +842,19 @@ fn write_json(
                 json_num(s.fast_mbps),
                 json_num(s.reference_mbps),
                 json_num(s.fast_mbps / s.reference_mbps),
+            )
+        })
+        .collect();
+    let entropy_items: Vec<String> = entropy
+        .iter()
+        .map(|e| {
+            format!(
+                "{{\"lane\": \"{}\", \"payload\": \"{}\", \"ratio\": {}, \"encode_MBps\": {}, \"decode_MBps\": {}}}",
+                json_escape(e.lane),
+                json_escape(e.payload),
+                json_num(e.ratio),
+                json_num(e.encode_mbps),
+                json_num(e.decode_mbps),
             )
         })
         .collect();
@@ -732,10 +906,11 @@ fn write_json(
         })
         .collect();
     let doc = format!(
-        "{{\n  \"schema\": \"bench-codecs/v5\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"read_pipeline\": {},\n  \"projection\": {},\n  \"projection_range\": {},\n  \"concurrent\": {}\n}}\n",
+        "{{\n  \"schema\": \"bench-codecs/v6\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"entropy\": {},\n  \"read_pipeline\": {},\n  \"projection\": {},\n  \"projection_range\": {},\n  \"concurrent\": {}\n}}\n",
         quick,
         json_array(&result_items, "  "),
         json_array(&speedup_items, "  "),
+        json_array(&entropy_items, "  "),
         json_array(&read_items, "  "),
         json_array(&proj_items, "  "),
         json_array(&proj_range_items, "  "),
@@ -797,6 +972,21 @@ fn main() {
     println!("{}", t3.render());
     t3.save_csv("fastpath").unwrap();
 
+    // Entropy lanes: fse2 vs fse4 vs huff0 coder throughput (PR 8).
+    let entropy = entropy_lanes(&cfg);
+    let mut t3b = Table::new(&["lane", "payload", "ratio", "encode_MB_s", "decode_MB_s"]);
+    for e in &entropy {
+        t3b.row(vec![
+            e.lane.into(),
+            e.payload.into(),
+            format!("{:.3}", e.ratio),
+            format!("{:.1}", e.encode_mbps),
+            format!("{:.1}", e.decode_mbps),
+        ]);
+    }
+    println!("{}", t3b.render());
+    t3b.save_csv("entropy").unwrap();
+
     // Read-pipeline scaling: serial oracle vs 1/2/4 decode workers.
     let reads = read_pipeline_lanes(&cfg);
     let mut t4 = Table::new(&["setting", "workers", "read_MB_s"]);
@@ -854,6 +1044,6 @@ fn main() {
     println!("{}", t7.render());
     t7.save_csv("concurrent").unwrap();
 
-    write_json(&rows, &speedups, &reads, &projections, &projection_ranges, &concurrent, quick)
+    write_json(&rows, &speedups, &entropy, &reads, &projections, &projection_ranges, &concurrent, quick)
         .expect("writing BENCH_codecs.json");
 }

@@ -171,7 +171,7 @@ impl Engine {
             Algorithm::Zstd => {
                 // Clone borrow dance: dictionary is read-only during encode.
                 let dict = std::mem::take(&mut self.dictionary);
-                let r = self.zstd.compress_dict(chunk, &dict, level);
+                let r = self.zstd.compress_dict_mode(chunk, &dict, level, settings.entropy);
                 self.dictionary = dict;
                 r
             }
@@ -340,6 +340,13 @@ mod tests {
         v.push(Settings::new(Algorithm::Lz4, 9).with_precond(Precond::Shuffle(4)));
         v.push(Settings::new(Algorithm::Zstd, 5).with_precond(Precond::Delta(4)));
         v.push(Settings::new(Algorithm::Zlib, 6).with_precond(Precond::BitShuffle(8)));
+        for mode in [
+            crate::zstd::EntropyMode::Fse2,
+            crate::zstd::EntropyMode::Fse4,
+            crate::zstd::EntropyMode::Huff0,
+        ] {
+            v.push(Settings::new(Algorithm::Zstd, 3).with_entropy(mode));
+        }
         v.push(Settings::new(Algorithm::None, 0));
         v
     }

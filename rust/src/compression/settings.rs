@@ -9,6 +9,7 @@
 //! and settings for different use cases".
 
 use crate::precond::Precond;
+use crate::zstd::EntropyMode;
 
 /// Compression algorithm family, numbered like ROOT's
 /// `ECompressionAlgorithm` (1 = ZLIB, 2 = LZMA, 3 = old/legacy, 4 = LZ4,
@@ -109,29 +110,44 @@ impl Algorithm {
     }
 }
 
-/// A full compression setting: algorithm + level + optional preconditioner.
+/// A full compression setting: algorithm + level + optional preconditioner
+/// + ZSTD entropy-lane choice.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Settings {
     pub algorithm: Algorithm,
     /// 0 disables compression; 1 fastest .. 9 best ratio (paper §2).
     pub level: u8,
     pub precond: Precond,
+    /// Entropy lanes for [`Algorithm::Zstd`] (ignored elsewhere). A
+    /// write-time knob: the RZS1 stream is self-describing, so this is
+    /// neither packed into `to_root_setting` nor stored in file metadata.
+    pub entropy: EntropyMode,
 }
 
 impl Default for Settings {
     fn default() -> Self {
         // ROOT's historical default: ZLIB-1 (kZLIB, level 1).
-        Self { algorithm: Algorithm::Zlib, level: 1, precond: Precond::None }
+        Self {
+            algorithm: Algorithm::Zlib,
+            level: 1,
+            precond: Precond::None,
+            entropy: EntropyMode::default(),
+        }
     }
 }
 
 impl Settings {
     pub fn new(algorithm: Algorithm, level: u8) -> Self {
-        Self { algorithm, level, precond: Precond::None }
+        Self { algorithm, level, precond: Precond::None, entropy: EntropyMode::default() }
     }
 
     pub fn with_precond(mut self, p: Precond) -> Self {
         self.precond = p;
+        self
+    }
+
+    pub fn with_entropy(mut self, mode: EntropyMode) -> Self {
+        self.entropy = mode;
         self
     }
 
@@ -194,7 +210,18 @@ mod tests {
 
     #[test]
     fn level_zero_is_uncompressed() {
-        let s = Settings { algorithm: Algorithm::Zstd, level: 0, precond: Precond::None };
+        let s = Settings::new(Algorithm::Zstd, 0);
         assert_eq!(s.to_root_setting(), 0);
+    }
+
+    #[test]
+    fn entropy_mode_is_not_packed() {
+        // The packed ROOT setting carries algorithm + level only; the
+        // entropy lane is a write-time knob and must not leak into it.
+        let base = Settings::new(Algorithm::Zstd, 5);
+        for mode in [EntropyMode::Fse2, EntropyMode::Fse4, EntropyMode::Huff0] {
+            assert_eq!(base.with_entropy(mode).to_root_setting(), base.to_root_setting());
+        }
+        assert_eq!(Settings::from_root_setting(505).unwrap().entropy, EntropyMode::default());
     }
 }

@@ -19,6 +19,7 @@ use crate::compression::{Algorithm, Settings};
 use crate::precond::Precond;
 use crate::runtime::analyzer::{analyze_native, bucket_for};
 use crate::runtime::{Analyzer, Features};
+use crate::zstd::EntropyMode;
 
 /// The workload profile the user declares (paper §1: production vs
 /// analysis have opposite constraints).
@@ -112,12 +113,17 @@ impl Planner {
     /// paths.
     fn decide(use_case: UseCase, stride: u8, f: &Features) -> Settings {
         // Is the basket already incompressible noise? Entropy near 8 in
-        // every view → don't waste CPU, fastest codec at level 1.
+        // every view → don't waste CPU, fastest codec at level 1. For the
+        // ZSTD arms, high entropy also means the LZ stage finds little and
+        // the block is literals-dominated — exactly where per-symbol ANS
+        // cost dominates, so the Huff0 multi-stream Huffman lane wins
+        // (PAPERS.md "Exploring compression techniques for ROOT IO"; the
+        // zcif enwik8 numbers in SNIPPETS.md).
         let best_h = f.h_raw.min(f.h_shuffle).min(f.h_bitshuffle).min(f.h_delta);
         if best_h > 7.8 && f.rep_raw < 0.02 {
             return match use_case {
                 UseCase::Analysis => Settings::new(Algorithm::Lz4, 1),
-                _ => Settings::new(Algorithm::Zstd, 1),
+                _ => Settings::new(Algorithm::Zstd, 1).with_entropy(EntropyMode::Huff0),
             };
         }
         // Does BitShuffle unlock structure (Fig-6 signature)? A large
@@ -198,6 +204,61 @@ mod tests {
         f.rep_raw = 0.0;
         let s = p.plan_from_features(&f);
         assert_eq!(s.level, 1);
+    }
+
+    /// High-entropy features (the noise row of the decision table).
+    fn noise_feats() -> Features {
+        let mut f = feats(7.99, 7.99, 7.99, 0.0);
+        f.rep_raw = 0.0;
+        f
+    }
+
+    #[test]
+    fn high_entropy_selects_huff0_literals_lane() {
+        // Literals-dominated noise: the ZSTD arms must pick the 4-stream
+        // Huffman lane; the LZ4 arm has no entropy stage to swap.
+        let f = noise_feats();
+        for uc in [UseCase::Production, UseCase::Balanced] {
+            let s = Planner::new(uc, FeatureSource::Native).plan_from_features(&f);
+            assert_eq!(s.algorithm, Algorithm::Zstd, "{uc:?}");
+            assert_eq!(s.entropy, EntropyMode::Huff0, "{uc:?}");
+        }
+        let s = Planner::new(UseCase::Analysis, FeatureSource::Native).plan_from_features(&f);
+        assert_eq!(s.algorithm, Algorithm::Lz4);
+        assert_eq!(s.entropy, EntropyMode::default());
+    }
+
+    #[test]
+    fn default_ans_branches_use_quad_state_fse() {
+        // Every non-noise ZSTD row rides the EntropyMode default (Fse4):
+        // the planner only overrides the entropy lane for the Huff0 case.
+        for uc in [UseCase::Production, UseCase::Balanced] {
+            for f in [feats(6.0, 4.0, 1.0, 0.9), feats(5.0, 4.9, 4.8, 0.1)] {
+                let s = Planner::new(uc, FeatureSource::Native).plan_from_features(&f);
+                if s.algorithm == Algorithm::Zstd {
+                    assert_eq!(s.entropy, EntropyMode::Fse4, "{uc:?} {f:?}");
+                }
+            }
+            assert_eq!(Planner::default_settings_for(uc).entropy, EntropyMode::Fse4);
+        }
+    }
+
+    #[test]
+    fn feedback_path_reaches_the_new_lanes() {
+        // plan_from_feedback must land on the same decision rows: cold or
+        // lukewarm high-entropy branches get ZSTD + Huff0 literals, hot
+        // ones stay on the LZ4 decode-speed plan.
+        let p = Planner::new(UseCase::Production, FeatureSource::Native);
+        let f = noise_feats();
+        for (intensity, uc) in [(0.0, UseCase::Production), (0.2, UseCase::Balanced)] {
+            let (got, s) = p.plan_from_feedback(&f, intensity);
+            assert_eq!(got, uc);
+            assert_eq!(s.algorithm, Algorithm::Zstd);
+            assert_eq!(s.entropy, EntropyMode::Huff0);
+        }
+        let (uc, s) = p.plan_from_feedback(&f, 0.9);
+        assert_eq!(uc, UseCase::Analysis);
+        assert_eq!(s.algorithm, Algorithm::Lz4);
     }
 
     #[test]

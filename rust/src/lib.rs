@@ -10,7 +10,7 @@
 //! sides, and an XLA-served adaptive compression planner.
 //!
 //! The layer map lives in `docs/ARCHITECTURE.md`; the byte-level on-disk
-//! format (RFIL v2 container, RZS1 sections) is specified in
+//! format (RFIL v3 container, RZS1 sections) is specified in
 //! `docs/FORMAT.md`; the bench artifact schema in `docs/BENCHMARKS.md`.
 //!
 //! ## Entry points

@@ -14,11 +14,19 @@ use anyhow::{bail, Context, Result};
 use std::io::{Read, Seek, SeekFrom, Write};
 
 pub const MAGIC: &[u8; 4] = b"RFIL";
-/// Container version. Bumped to 2 in PR 2: RZS1 FSE sections now carry two
-/// interleaved-lane initial states instead of one, so files written by the
-/// v1 reader/writer pair are not stream-compatible — the bump turns a
-/// would-be garbled decode into a clean "unsupported version" rejection.
-pub const VERSION: u16 = 2;
+/// Container version written by this build. Bumped to 2 in PR 2 (RZS1 FSE
+/// sections grew a second interleaved-lane initial state) and to 3 in PR 8
+/// (quad-state FSE sections + the Huff0 literals mode). Each bump turns a
+/// would-be garbled decode on an old reader into a clean "unsupported
+/// version" rejection.
+pub const VERSION: u16 = 3;
+/// Oldest container version this build still reads. v2 files decode
+/// unchanged: their dual-state FSE sections are a mode the v3 decoder
+/// accepts natively (see `docs/FORMAT.md` §9), so the reader takes the
+/// whole `MIN_VERSION..=VERSION` range while the writer always stamps
+/// [`VERSION`]. v1 predates the dual-state stream layout and stays
+/// rejected.
+pub const MIN_VERSION: u16 = 2;
 pub const TRAILER_MAGIC: &[u8; 8] = b"RFILEND1";
 pub const TRAILER_LEN: u64 = 16;
 
@@ -67,6 +75,14 @@ pub fn write_trailer(w: &mut impl Write, meta_offset: u64) -> Result<()> {
 /// an explicit truncation error (byte counts, not raw io noise) so a
 /// `scrub`/salvage report can cite exactly what is missing.
 pub fn read_header(r: &mut impl Read) -> Result<u16> {
+    read_header_versioned(r, MIN_VERSION, VERSION)
+}
+
+/// [`read_header`] with an explicit accepted version range — the seam the
+/// cross-version compat tests use to emulate an old reader (e.g. a v2-only
+/// build is `read_header_versioned(r, 2, 2)`) without keeping dead code
+/// around.
+pub fn read_header_versioned(r: &mut impl Read, min: u16, max: u16) -> Result<u16> {
     let mut buf = [0u8; 6];
     let mut got = 0usize;
     while got < buf.len() {
@@ -87,7 +103,7 @@ pub fn read_header(r: &mut impl Read) -> Result<u16> {
         bail!("not an RFIL file (bad magic)");
     }
     let version = u16::from_be_bytes(buf[4..6].try_into().unwrap());
-    if version != VERSION {
+    if version < min || version > max {
         bail!("unsupported RFIL version {version}");
     }
     Ok(version)
@@ -189,6 +205,40 @@ mod tests {
     fn bad_magic_rejected() {
         let mut buf = Cursor::new(b"NOPE00".to_vec());
         assert!(read_header(&mut buf).is_err());
+    }
+
+    fn header_bytes(version: u16) -> Vec<u8> {
+        let mut h = MAGIC.to_vec();
+        h.extend_from_slice(&version.to_be_bytes());
+        h
+    }
+
+    #[test]
+    fn version_range_acceptance() {
+        // The v3 reader takes the whole MIN_VERSION..=VERSION range…
+        for v in MIN_VERSION..=VERSION {
+            let mut buf = Cursor::new(header_bytes(v));
+            assert_eq!(read_header(&mut buf).unwrap(), v);
+        }
+        // …and rejects versions on either side with the versioned error.
+        for v in [0u16, 1, VERSION + 1, 999] {
+            let mut buf = Cursor::new(header_bytes(v));
+            let err = read_header(&mut buf).unwrap_err().to_string();
+            assert_eq!(err, format!("unsupported RFIL version {v}"), "v={v}");
+        }
+    }
+
+    #[test]
+    fn v3_header_rejected_by_v2_reader() {
+        // The FORMAT.md §9 reject rule, from the old reader's point of
+        // view: a v2-only build must refuse a v3 file cleanly, naming the
+        // version it saw, not garble-decode it.
+        let mut buf = Cursor::new(header_bytes(VERSION));
+        let err = read_header_versioned(&mut buf, 2, 2).unwrap_err().to_string();
+        assert_eq!(err, format!("unsupported RFIL version {VERSION}"));
+        // And the same v2-only build still accepts a v2 file.
+        let mut buf = Cursor::new(header_bytes(2));
+        assert_eq!(read_header_versioned(&mut buf, 2, 2).unwrap(), 2);
     }
 
     #[test]

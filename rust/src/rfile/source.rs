@@ -1,7 +1,7 @@
 //! Pluggable byte-range sources: the seam between basket plans and the
-//! physical read path (ROADMAP item 4 — "Increasing Parallelism in the
-//! ROOT I/O Subsystem" motivates decoupling logical scans from physical
-//! I/O resources).
+//! physical read path (the I/O-backend ROADMAP item — "Increasing
+//! Parallelism in the ROOT I/O Subsystem" motivates decoupling logical
+//! scans from physical I/O resources).
 //!
 //! A [`RangeSource`] serves positioned reads. Three implementations:
 //!

@@ -8,15 +8,24 @@
 //! literals:  [mode u8] 0=raw:   [len][bytes]
 //!                      1=rle:   [len][byte]
 //!                      2=fse:   [len][norm table][state0][state1][payload_len][payload]
+//!                      3=fse4:  [len][norm table][state0..state3][payload_len][payload]
+//!                      4=huff0: [len][blob_len][huff0 blob]      (literals only)
 //! if n_seq > 0, three code sections (ll, ml, of), each:
 //!            [mode u8] 0=raw:   [codes as bytes]        (len = n_seq)
 //!                      1=rle:   [code byte]
 //!                      2=fse:   [norm table][state0][state1][payload_len][payload]
+//!                      3=fse4:  [norm table][state0..state3][payload_len][payload]
 //!
-//! FSE sections carry **two** initial states: the entropy stage runs the
-//! §Perf interleaved dual-lane coder (`fse::EncTable::encode_interleaved`
-//! — even symbol indices on lane 0, odd on lane 1), whose byte-identical
-//! naive oracle lives in `fse::reference`.
+//! Mode 2 sections carry **two** initial states (the dual-lane
+//! `fse::EncTable::encode_interleaved` — even symbol indices on lane 0,
+//! odd on lane 1); mode 3 carries **four** (`encode_interleaved4`, lane
+//! `i & 3`); mode 4 embeds a 4-stream Huffman blob (`huff0::compress`).
+//! Which modes the *encoder* emits is selected by [`EntropyMode`]
+//! (decoders accept all of them unconditionally): `Fse2` reproduces the
+//! RFIL-v2 streams byte-identically, `Fse4` (default) upgrades FSE
+//! sections to mode 3, `Huff0` additionally tries mode 4 for literals.
+//! Every lane keeps its byte-identical naive oracle in
+//! `fse::reference` / `huff0::reference`.
 //! extras:    [payload_len][bit payload]   (ll, ml, of extra bits per seq)
 //! ```
 //!
@@ -25,9 +34,28 @@
 //! run, ml = match_len - 3, of = offset - 1.
 
 use super::fse;
+use super::huff0;
 use super::matcher::{ChainMatcher, SearchParams, Seq, MIN_MATCH};
 use crate::util::bitio::{BitReader, BitWriter};
 use crate::util::varint::{put_uvarint, Cursor};
+
+/// Which entropy lanes the *encoder* uses for RZS1 sections. A write-time
+/// knob only: the decoder accepts every mode unconditionally, and the
+/// choice is not recorded in file metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum EntropyMode {
+    /// Dual-state interleaved FSE everywhere (mode-2 sections): exactly
+    /// the streams RFIL-v2 writers produced, byte-for-byte.
+    Fse2,
+    /// 4-state interleaved FSE (mode-3 sections): four decode chains in
+    /// flight. The default for new files.
+    #[default]
+    Fse4,
+    /// Like [`EntropyMode::Fse4`], but literals additionally try the
+    /// 4-stream Huffman lane (mode 4) — the planner picks this for
+    /// high-entropy branches where per-symbol ANS cost dominates.
+    Huff0,
+}
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ZstdError(pub &'static str);
@@ -87,6 +115,19 @@ impl ZstdEncoder {
 
     /// Compress with a dictionary prefix (decoder must supply the same).
     pub fn compress_dict(&mut self, src: &[u8], dict: &[u8], level: u8) -> Vec<u8> {
+        self.compress_dict_mode(src, dict, level, EntropyMode::default())
+    }
+
+    /// Compress with a dictionary prefix and an explicit entropy-lane
+    /// choice (decoder must supply the same dictionary; the entropy mode
+    /// is self-describing in the stream).
+    pub fn compress_dict_mode(
+        &mut self,
+        src: &[u8],
+        dict: &[u8],
+        level: u8,
+        mode: EntropyMode,
+    ) -> Vec<u8> {
         let params = SearchParams::for_level(level);
         let start = if dict.is_empty() {
             self.matcher.parse(src, 0, &params, &mut self.seqs, &mut self.literals);
@@ -105,7 +146,7 @@ impl ZstdEncoder {
         put_uvarint(&mut out, self.seqs.len() as u64);
 
         // Literals section.
-        write_byte_section(&mut out, &self.literals);
+        write_byte_section(&mut out, &self.literals, mode);
 
         if !self.seqs.is_empty() {
             // Code streams.
@@ -124,9 +165,9 @@ impl ZstdEncoder {
                 extras.write_bits(me as u64, mn);
                 extras.write_bits(oe as u64, on);
             }
-            write_code_section(&mut out, &ll);
-            write_code_section(&mut out, &ml);
-            write_code_section(&mut out, &of);
+            write_code_section(&mut out, &ll, mode);
+            write_code_section(&mut out, &ml, mode);
+            write_code_section(&mut out, &of, mode);
             let eb = extras.finish();
             put_uvarint(&mut out, eb.len() as u64);
             out.extend_from_slice(&eb);
@@ -144,12 +185,66 @@ pub fn zstd_compress_dict(src: &[u8], dict: &[u8], level: u8) -> Vec<u8> {
     ZstdEncoder::new().compress_dict(src, dict, level)
 }
 
+pub fn zstd_compress_mode(src: &[u8], level: u8, mode: EntropyMode) -> Vec<u8> {
+    ZstdEncoder::new().compress_dict_mode(src, &[], level, mode)
+}
+
 const MODE_RAW: u8 = 0;
 const MODE_RLE: u8 = 1;
 const MODE_FSE: u8 = 2;
+const MODE_FSE4: u8 = 3;
+const MODE_HUFF: u8 = 4;
 
-/// Literals: choose raw / rle / fse by measured size.
-fn write_byte_section(out: &mut Vec<u8>, data: &[u8]) {
+/// Encode the chosen FSE variant into `section`; returns false if the
+/// table could not be built. `Fse2` emits the dual-state layout (two
+/// uvarint states — the RFIL-v2 stream, byte-identical); `Fse4`/`Huff0`
+/// emit the quad-state layout (four uvarint states).
+fn fse_section<S: fse::Symbol>(
+    section: &mut Vec<u8>,
+    data: &[S],
+    hist: &[u32],
+    present: usize,
+    max_log: u32,
+    mode: EntropyMode,
+) -> bool {
+    let log = fse::optimal_table_log(data.len(), present, max_log);
+    let norm = match fse::normalize_counts(hist, data.len() as u64, log) {
+        Ok(n) => n,
+        Err(_) => return false,
+    };
+    let enc = match fse::EncTable::new(&norm, log) {
+        Ok(e) => e,
+        Err(_) => return false,
+    };
+    fse::write_norm(section, &norm, log);
+    let payload = if mode == EntropyMode::Fse2 {
+        let (payload, states) = enc.encode_interleaved(data);
+        put_uvarint(section, states[0] as u64);
+        put_uvarint(section, states[1] as u64);
+        payload
+    } else {
+        let (payload, states) = enc.encode_interleaved4(data);
+        for &s in &states {
+            put_uvarint(section, s as u64);
+        }
+        payload
+    };
+    put_uvarint(section, payload.len() as u64);
+    section.extend_from_slice(&payload);
+    true
+}
+
+#[inline]
+fn fse_mode_byte(mode: EntropyMode) -> u8 {
+    if mode == EntropyMode::Fse2 {
+        MODE_FSE
+    } else {
+        MODE_FSE4
+    }
+}
+
+/// Literals: choose raw / rle / huff0 / fse by mode and measured size.
+fn write_byte_section(out: &mut Vec<u8>, data: &[u8], mode: EntropyMode) {
     if data.is_empty() {
         out.push(MODE_RAW);
         put_uvarint(out, 0);
@@ -161,27 +256,30 @@ fn write_byte_section(out: &mut Vec<u8>, data: &[u8]) {
         out.push(data[0]);
         return;
     }
-    // Try FSE (§Perf: 4-lane histogram + interleaved dual-state encode).
+    // Huff0 lane: 4-stream block Huffman for high-entropy literals.
+    if mode == EntropyMode::Huff0 && data.len() >= 32 {
+        if let Some(blob) = huff0::compress(data) {
+            if blob.len() + 4 < data.len() {
+                out.push(MODE_HUFF);
+                put_uvarint(out, data.len() as u64);
+                put_uvarint(out, blob.len() as u64);
+                out.extend_from_slice(&blob);
+                return;
+            }
+        }
+    }
+    // FSE (§Perf: 4-lane histogram + interleaved multi-state encode).
     let hist = fse::histogram(data);
     let present = hist.iter().filter(|&&c| c > 0).count();
     if present >= 2 && data.len() >= 32 {
-        let log = fse::optimal_table_log(data.len(), present, 11);
-        if let Ok(norm) = fse::normalize_counts(&hist, data.len() as u64, log) {
-            if let Ok(enc) = fse::EncTable::new(&norm, log) {
-                let (payload, states) = enc.encode_interleaved(data);
-                let mut section = Vec::with_capacity(payload.len() + 64);
-                fse::write_norm(&mut section, &norm, log);
-                put_uvarint(&mut section, states[0] as u64);
-                put_uvarint(&mut section, states[1] as u64);
-                put_uvarint(&mut section, payload.len() as u64);
-                section.extend_from_slice(&payload);
-                if section.len() + 2 < data.len() {
-                    out.push(MODE_FSE);
-                    put_uvarint(out, data.len() as u64);
-                    out.extend_from_slice(&section);
-                    return;
-                }
-            }
+        let mut section = Vec::with_capacity(data.len() / 2 + 64);
+        if fse_section(&mut section, data, &hist, present, 11, mode)
+            && section.len() + 2 < data.len()
+        {
+            out.push(fse_mode_byte(mode));
+            put_uvarint(out, data.len() as u64);
+            out.extend_from_slice(&section);
+            return;
         }
     }
     out.push(MODE_RAW);
@@ -190,7 +288,7 @@ fn write_byte_section(out: &mut Vec<u8>, data: &[u8]) {
 }
 
 /// Code stream (u16 codes < CODE_ALPHABET); length is known (n_seq).
-fn write_code_section(out: &mut Vec<u8>, codes: &[u16]) {
+fn write_code_section(out: &mut Vec<u8>, codes: &[u16], mode: EntropyMode) {
     debug_assert!(!codes.is_empty());
     if codes.iter().all(|&c| c == codes[0]) {
         out.push(MODE_RLE);
@@ -203,22 +301,13 @@ fn write_code_section(out: &mut Vec<u8>, codes: &[u16]) {
     }
     let present = hist.iter().filter(|&&c| c > 0).count();
     if codes.len() >= 16 {
-        let log = fse::optimal_table_log(codes.len(), present, 9);
-        if let Ok(norm) = fse::normalize_counts(&hist, codes.len() as u64, log) {
-            if let Ok(enc) = fse::EncTable::new(&norm, log) {
-                let (payload, states) = enc.encode_interleaved(codes);
-                let mut section = Vec::with_capacity(payload.len() + 32);
-                fse::write_norm(&mut section, &norm, log);
-                put_uvarint(&mut section, states[0] as u64);
-                put_uvarint(&mut section, states[1] as u64);
-                put_uvarint(&mut section, payload.len() as u64);
-                section.extend_from_slice(&payload);
-                if section.len() < codes.len() {
-                    out.push(MODE_FSE);
-                    out.extend_from_slice(&section);
-                    return;
-                }
-            }
+        let mut section = Vec::with_capacity(codes.len() / 2 + 32);
+        if fse_section(&mut section, codes, &hist, present, 9, mode)
+            && section.len() < codes.len()
+        {
+            out.push(fse_mode_byte(mode));
+            out.extend_from_slice(&section);
+            return;
         }
     }
     out.push(MODE_RAW);
@@ -242,18 +331,31 @@ fn read_byte_section(c: &mut Cursor, max_out: usize) -> Result<Vec<u8>, ZstdErro
             let b = c.u8().ok_or(E("truncated rle literal"))?;
             Ok(vec![b; len])
         }
-        MODE_FSE => {
+        MODE_FSE | MODE_FSE4 => {
             let (norm, log) = fse::read_norm(c).map_err(|_| E("bad literal table"))?;
-            let s0 = c.uvarint().ok_or(E("truncated literal state"))? as u16;
-            let s1 = c.uvarint().ok_or(E("truncated literal state"))? as u16;
+            let n_states = if mode == MODE_FSE { 2 } else { 4 };
+            let mut states = [0u16; 4];
+            for s in states.iter_mut().take(n_states) {
+                *s = c.uvarint().ok_or(E("truncated literal state"))? as u16;
+            }
             let plen = c.uvarint().ok_or(E("truncated literal payload len"))? as usize;
             let payload = c.bytes(plen).ok_or(E("truncated literal payload"))?;
             let dec = fse::DecTable::new(&norm, log).map_err(|_| E("bad literal table"))?;
             let mut r = BitReader::new(payload);
             let mut syms = Vec::with_capacity(len);
-            dec.decode_interleaved(&mut r, [s0, s1], len, &mut syms)
-                .map_err(|_| E("literal decode failed"))?;
+            if mode == MODE_FSE {
+                dec.decode_interleaved(&mut r, [states[0], states[1]], len, &mut syms)
+                    .map_err(|_| E("literal decode failed"))?;
+            } else {
+                dec.decode_interleaved4(&mut r, states, len, &mut syms)
+                    .map_err(|_| E("literal decode failed"))?;
+            }
             Ok(syms.into_iter().map(|s| s as u8).collect())
+        }
+        MODE_HUFF => {
+            let blen = c.uvarint().ok_or(E("truncated huff0 blob len"))? as usize;
+            let blob = c.bytes(blen).ok_or(E("truncated huff0 blob"))?;
+            huff0::decompress(blob, len).map_err(|_| E("literal decode failed"))
         }
         _ => Err(E("bad literal mode")),
     }
@@ -277,20 +379,28 @@ fn read_code_section(c: &mut Cursor, n: usize) -> Result<Vec<u16>, ZstdError> {
             }
             Ok(vec![b as u16; n])
         }
-        MODE_FSE => {
+        MODE_FSE | MODE_FSE4 => {
             let (norm, log) = fse::read_norm(c).map_err(|_| E("bad code table"))?;
             if norm.len() > CODE_ALPHABET {
                 return Err(E("code alphabet too large"));
             }
-            let s0 = c.uvarint().ok_or(E("truncated code state"))? as u16;
-            let s1 = c.uvarint().ok_or(E("truncated code state"))? as u16;
+            let n_states = if mode == MODE_FSE { 2 } else { 4 };
+            let mut states = [0u16; 4];
+            for s in states.iter_mut().take(n_states) {
+                *s = c.uvarint().ok_or(E("truncated code state"))? as u16;
+            }
             let plen = c.uvarint().ok_or(E("truncated code payload len"))? as usize;
             let payload = c.bytes(plen).ok_or(E("truncated code payload"))?;
             let dec = fse::DecTable::new(&norm, log).map_err(|_| E("bad code table"))?;
             let mut r = BitReader::new(payload);
             let mut syms = Vec::with_capacity(n);
-            dec.decode_interleaved(&mut r, [s0, s1], n, &mut syms)
-                .map_err(|_| E("code decode failed"))?;
+            if mode == MODE_FSE {
+                dec.decode_interleaved(&mut r, [states[0], states[1]], n, &mut syms)
+                    .map_err(|_| E("code decode failed"))?;
+            } else {
+                dec.decode_interleaved4(&mut r, states, n, &mut syms)
+                    .map_err(|_| E("code decode failed"))?;
+            }
             Ok(syms)
         }
         _ => Err(E("bad code mode")),
@@ -512,6 +622,59 @@ mod tests {
             }
             data.truncate(n);
             roundtrip(&data, [1u8, 3, 6, 9][round % 4]);
+        }
+    }
+
+    /// Literal-section mode byte of a compressed stream (follows the
+    /// raw_len and n_seq uvarints).
+    fn literal_mode(stream: &[u8]) -> u8 {
+        let mut c = Cursor::new(stream);
+        c.uvarint().unwrap();
+        c.uvarint().unwrap();
+        c.u8().unwrap()
+    }
+
+    #[test]
+    fn all_entropy_modes_roundtrip() {
+        let mut rng = Rng::new(0x2582);
+        let mut text = Vec::new();
+        while text.len() < 60_000 {
+            text.extend_from_slice(b"Events/Muon_pt basket payload, skewed literals. ");
+        }
+        let corpus = [
+            text,
+            rng.bytes(50_000),
+            (0u32..10_000).flat_map(|i| i.to_be_bytes()).collect(),
+            b"tiny".to_vec(),
+        ];
+        for data in &corpus {
+            for mode in [EntropyMode::Fse2, EntropyMode::Fse4, EntropyMode::Huff0] {
+                let c = zstd_compress_mode(data, 5, mode);
+                let d = zstd_decompress(&c, MAX).expect("decompress");
+                assert_eq!(&d, data, "mode {mode:?} n={}", data.len());
+            }
+        }
+    }
+
+    #[test]
+    fn entropy_mode_selects_expected_literal_section() {
+        // Skewed draws from a wide alphabet: few LZ matches (literals carry
+        // the block) but plenty of Huffman headroom.
+        let mut rng = Rng::new(0x2583);
+        let data: Vec<u8> = (0..40_000)
+            .map(|_| {
+                let r = rng.next_u64();
+                if r & 1 == 0 { (r >> 1) as u8 % 24 } else { (r >> 1) as u8 }
+            })
+            .collect();
+        let f2 = zstd_compress_mode(&data, 1, EntropyMode::Fse2);
+        let f4 = zstd_compress_mode(&data, 1, EntropyMode::Fse4);
+        let h = zstd_compress_mode(&data, 1, EntropyMode::Huff0);
+        assert_eq!(literal_mode(&f2), 2, "Fse2 → dual-state section");
+        assert_eq!(literal_mode(&f4), 3, "Fse4 → quad-state section");
+        assert_eq!(literal_mode(&h), 4, "Huff0 → multi-stream Huffman section");
+        for c in [&f2, &f4, &h] {
+            assert_eq!(zstd_decompress(c, MAX).unwrap(), data);
         }
     }
 

@@ -16,18 +16,29 @@
 //! state is stored in the stream header; decode recovers symbols in the
 //! original order.
 //!
-//! # §Perf: interleaved dual-state coding
+//! # §Perf: interleaved multi-state coding
 //!
-//! The production streams ([`EncTable::encode_interleaved`] /
-//! [`DecTable::decode_interleaved`]) run **two** ANS states that alternate
-//! over consecutive symbols (even indices on lane 0, odd on lane 1), the
-//! same trick real zstd and the ans_flex reproduction use: the two state
-//! chains carry no data dependency on each other, so the table lookups and
-//! the shared 57-bit-refill bit I/O pipeline instead of serializing. Each
-//! lane absorbs its final symbol into its transmitted initial state (two
-//! states in the header instead of one). Both directions keep a
-//! deliberately straightforward oracle in [`reference`] that they are
-//! property-tested **byte-identical** against (`rust/tests/prop_codecs.rs`),
+//! The production streams run multiple ANS states that alternate over
+//! consecutive symbols, the same trick real zstd and the ans_flex
+//! reproduction use: the state chains carry no data dependency on each
+//! other, so the table lookups and the shared 57-bit-refill bit I/O
+//! pipeline instead of serializing. Two widths are implemented:
+//!
+//! * **Dual-state** ([`EncTable::encode_interleaved`] /
+//!   [`DecTable::decode_interleaved`]) — even indices on lane 0, odd on
+//!   lane 1; the RFIL v2 stream layout (kept for v2 compatibility and as
+//!   the [`crate::zstd::EntropyMode::Fse2`] write mode).
+//! * **Quad-state** ([`EncTable::encode_interleaved4`] /
+//!   [`DecTable::decode_interleaved4`]) — lane `i & 3`, four initial
+//!   states in the section header; the RFIL v3 default
+//!   ([`crate::zstd::EntropyMode::Fse4`]), keeping four refill chains in
+//!   flight per block.
+//!
+//! Each lane absorbs its final symbol into its transmitted initial state
+//! (one header state per lane instead of one total). All four directions
+//! keep a deliberately straightforward oracle in [`reference`] that they
+//! are property-tested **byte-identical** against
+//! (`rust/tests/prop_codecs.rs`, `rust/tests/conformance_entropy.rs`),
 //! mirroring the PR-1 fast-path pattern. Histogramming, the other hot
 //! encoder pass, is the 4-lane [`histogram`] with the scalar
 //! [`reference::histogram_naive`] oracle.
@@ -323,6 +334,50 @@ impl EncTable {
         }
         (w.finish(), [states[0] as u16, states[1] as u16])
     }
+
+    /// §Perf hot path, RFIL v3 width: encode `symbols` with **four**
+    /// interleaved states — symbol `i` on lane `i & 3` — so four state
+    /// chains pipeline per block (the zstd/Huff0 stream-count sweet
+    /// spot). Each lane's last symbol is absorbed into its returned
+    /// initial state; a lane the input never seeds (fewer than four
+    /// symbols) returns the always-valid state `1 << table_log`.
+    /// Byte-identical to [`reference::encode_interleaved4_naive`]
+    /// (property-tested); decode with [`DecTable::decode_interleaved4`].
+    ///
+    /// Same chunk packing as [`EncTable::encode_interleaved`]:
+    /// `(bits, nb_bits)` in one `u32` (`bits | nb << 12`, both ≤ 12 bits),
+    /// reversed flush through the word-flush [`BitWriter`].
+    pub fn encode_interleaved4<S: Symbol>(&self, symbols: &[S]) -> (Vec<u8>, [u16; 4]) {
+        let size = 1u32 << self.table_log;
+        // Lanes a symbol never seeds keep `size`: a valid (ignored) state.
+        let mut states = [size, size, size, size];
+        let mut seeded = [false; 4];
+        let mut chunks: Vec<u32> = Vec::with_capacity(symbols.len());
+        let mut i = symbols.len();
+        while i > 0 {
+            i -= 1;
+            let s = symbols[i].as_u16() as usize;
+            let lane = i & 3;
+            if !seeded[lane] {
+                states[lane] = self.seed[s] as u32;
+                seeded[lane] = true;
+                continue;
+            }
+            let (delta_find, delta_nb) = self.sym[s];
+            let st = states[lane];
+            let nb = delta_nb.wrapping_add(st) >> 16;
+            chunks.push((st & ((1u32 << nb) - 1)) | (nb << 12));
+            states[lane] = self.next_state[((st >> nb) as i32 + delta_find) as usize] as u32;
+        }
+        let mut w = BitWriter::with_capacity(chunks.len() + 8);
+        for &c in chunks.iter().rev() {
+            w.write_bits((c & 0xFFF) as u64, c >> 12);
+        }
+        (
+            w.finish(),
+            [states[0] as u16, states[1] as u16, states[2] as u16, states[3] as u16],
+        )
+    }
 }
 
 /// Decoder table entry.
@@ -445,6 +500,59 @@ impl DecTable {
         }
         Ok(())
     }
+
+    /// §Perf hot path, RFIL v3 width: decode `count` symbols produced by
+    /// [`EncTable::encode_interleaved4`]. The batch loop emits one symbol
+    /// from each of the four lanes per iteration with no per-symbol
+    /// exhaustion checks — state transitions keep states in
+    /// `[size, 2*size)` by construction even on garbage bits, and the
+    /// single [`BitReader::overflowed`] check after the loop rejects
+    /// truncated payloads exactly like the per-symbol check in
+    /// [`reference::decode_interleaved4_naive`] (same accept/reject set;
+    /// identical symbols on accept — property-tested).
+    pub fn decode_interleaved4(
+        &self,
+        r: &mut BitReader,
+        init: [u16; 4],
+        count: usize,
+        out: &mut Vec<u16>,
+    ) -> Result<(), FseError> {
+        let size = 1u32 << self.table_log;
+        let mut states = [init[0] as u32, init[1] as u32, init[2] as u32, init[3] as u32];
+        for &s in &states {
+            if s < size || s >= 2 * size {
+                return Err(E("invalid initial state"));
+            }
+        }
+        out.reserve(count);
+        let entries = &self.entries[..];
+        let mut k = 0usize;
+        // Batch loop: symbol k reads bits iff k + 4 < count (each lane's
+        // final symbol was absorbed into its initial state), so a quad at
+        // (k .. k+3) is check-free when k + 7 < count.
+        while k + 7 < count {
+            for st in states.iter_mut() {
+                let e = entries[(*st - size) as usize];
+                out.push(e.symbol);
+                *st = size + e.base as u32 + r.read_bits(e.nb_bits as u32) as u32;
+            }
+            k += 4;
+        }
+        // Careful tail (≤ 7 symbols): per-symbol read guards.
+        while k < count {
+            let st = &mut states[k & 3];
+            let e = entries[(*st - size) as usize];
+            out.push(e.symbol);
+            if k + 4 < count {
+                *st = size + e.base as u32 + r.read_bits(e.nb_bits as u32) as u32;
+            }
+            k += 1;
+        }
+        if r.overflowed() {
+            return Err(E("bitstream exhausted"));
+        }
+        Ok(())
+    }
 }
 
 /// Deliberately straightforward oracles for the §Perf fast paths above.
@@ -513,6 +621,68 @@ pub mod reference {
             let e = table.entries[(states[lane] - size) as usize];
             out.push(e.symbol);
             if k + 2 < count {
+                let bits = r.read_bits(e.nb_bits as u32) as u32;
+                states[lane] = size + e.base as u32 + bits;
+                if r.overflowed() {
+                    return Err(E("bitstream exhausted"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One-symbol-at-a-time quad-lane encoder using the byte-at-a-time bit
+    /// writer (oracle for [`EncTable::encode_interleaved4`]).
+    pub fn encode_interleaved4_naive(table: &EncTable, symbols: &[u16]) -> (Vec<u8>, [u16; 4]) {
+        let size = 1u32 << table.table_log;
+        let mut states = [size, size, size, size];
+        let mut seeded = [false; 4];
+        let mut chunks: Vec<(u32, u32)> = Vec::new();
+        for i in (0..symbols.len()).rev() {
+            let s = symbols[i] as usize;
+            let lane = i % 4;
+            if !seeded[lane] {
+                states[lane] = table.seed[s] as u32;
+                seeded[lane] = true;
+                continue;
+            }
+            let (delta_find, delta_nb) = table.sym[s];
+            let st = states[lane];
+            let nb = delta_nb.wrapping_add(st) >> 16;
+            chunks.push((st & ((1u32 << nb) - 1), nb));
+            states[lane] = table.next_state[((st >> nb) as i32 + delta_find) as usize] as u32;
+        }
+        let mut w = NaiveBitWriter::new();
+        for &(bits, nb) in chunks.iter().rev() {
+            w.write_bits(bits as u64, nb);
+        }
+        (
+            w.finish(),
+            [states[0] as u16, states[1] as u16, states[2] as u16, states[3] as u16],
+        )
+    }
+
+    /// Per-symbol quad-lane decoder with an exhaustion check after every
+    /// read (oracle for [`DecTable::decode_interleaved4`]).
+    pub fn decode_interleaved4_naive(
+        table: &DecTable,
+        r: &mut BitReader,
+        init: [u16; 4],
+        count: usize,
+        out: &mut Vec<u16>,
+    ) -> Result<(), FseError> {
+        let size = 1u32 << table.table_log;
+        let mut states = [init[0] as u32, init[1] as u32, init[2] as u32, init[3] as u32];
+        for &s in &states {
+            if s < size || s >= 2 * size {
+                return Err(E("invalid initial state"));
+            }
+        }
+        for k in 0..count {
+            let lane = k % 4;
+            let e = table.entries[(states[lane] - size) as usize];
+            out.push(e.symbol);
+            if k + 4 < count {
                 let bits = r.read_bits(e.nb_bits as u32) as u32;
                 states[lane] = size + e.base as u32 + bits;
                 if r.overflowed() {
@@ -779,6 +949,109 @@ mod tests {
                 &mut out2,
             );
             assert!(rn.is_err(), "cut {cut} accepted by naive");
+        }
+    }
+
+    #[test]
+    fn interleaved4_roundtrip_and_matches_naive() {
+        let mut rng = Rng::new(0xF65);
+        for round in 0..80 {
+            let alphabet = rng.range(2, 260);
+            let n = rng.range(2, 4000);
+            let syms: Vec<u16> = (0..n)
+                .map(|_| {
+                    let r = rng.f64();
+                    (((alphabet as f64).powf(r) - 1.0) as usize).min(alphabet - 1) as u16
+                })
+                .collect();
+            let Some((enc, dec)) = tables_for(&syms, alphabet, 11) else { continue };
+            let (fast_payload, fast_states) = enc.encode_interleaved4(&syms);
+            let (naive_payload, naive_states) = reference::encode_interleaved4_naive(&enc, &syms);
+            assert_eq!(fast_payload, naive_payload, "round {round} n {n}");
+            assert_eq!(fast_states, naive_states, "round {round}");
+            let mut out = Vec::new();
+            dec.decode_interleaved4(&mut BitReader::new(&fast_payload), fast_states, syms.len(), &mut out)
+                .unwrap();
+            assert_eq!(out, syms, "round {round}");
+            let mut out2 = Vec::new();
+            reference::decode_interleaved4_naive(
+                &dec,
+                &mut BitReader::new(&fast_payload),
+                fast_states,
+                syms.len(),
+                &mut out2,
+            )
+            .unwrap();
+            assert_eq!(out2, syms, "round {round} (naive decode)");
+        }
+    }
+
+    #[test]
+    fn interleaved4_tiny_streams() {
+        // Covers every lane-seeding shape: streams shorter than the lane
+        // count, exactly the lane count, and every tail length mod 4.
+        for n in 2..40usize {
+            let syms: Vec<u16> = (0..n).map(|i| (i % 3) as u16).collect();
+            let Some((enc, dec)) = tables_for(&syms, 3, 9) else { continue };
+            let (payload, states) = enc.encode_interleaved4(&syms);
+            let mut out = Vec::new();
+            dec.decode_interleaved4(&mut BitReader::new(&payload), states, n, &mut out).unwrap();
+            assert_eq!(out, syms, "n={n}");
+        }
+    }
+
+    #[test]
+    fn interleaved4_u8_symbols_match_u16() {
+        let mut rng = Rng::new(0xF66);
+        let bytes: Vec<u8> = (0..5000).map(|_| (rng.next_u64() & 0x1F) as u8).collect();
+        let wide: Vec<u16> = bytes.iter().map(|&b| b as u16).collect();
+        let (enc, dec) = tables_for(&wide, 256, 11).unwrap();
+        let (pa, sa) = enc.encode_interleaved4(&bytes);
+        let (pb, sb) = enc.encode_interleaved4(&wide);
+        assert_eq!(pa, pb);
+        assert_eq!(sa, sb);
+        let mut out = Vec::new();
+        dec.decode_interleaved4(&mut BitReader::new(&pa), sa, bytes.len(), &mut out).unwrap();
+        assert_eq!(out, wide);
+    }
+
+    #[test]
+    fn interleaved4_truncation_rejected() {
+        let syms: Vec<u16> = (0..4000).map(|i| (i % 7) as u16).collect();
+        let (enc, dec) = tables_for(&syms, 7, 9).unwrap();
+        let (payload, states) = enc.encode_interleaved4(&syms);
+        for cut in [0usize, 1, payload.len() / 2] {
+            let mut out = Vec::new();
+            let r = dec.decode_interleaved4(&mut BitReader::new(&payload[..cut]), states, syms.len(), &mut out);
+            assert!(r.is_err(), "cut {cut} accepted");
+            let mut out2 = Vec::new();
+            let rn = reference::decode_interleaved4_naive(
+                &dec,
+                &mut BitReader::new(&payload[..cut]),
+                states,
+                syms.len(),
+                &mut out2,
+            );
+            assert!(rn.is_err(), "cut {cut} accepted by naive");
+        }
+    }
+
+    #[test]
+    fn interleaved4_bad_initial_states_rejected() {
+        let syms: Vec<u16> = (0..200).map(|i| (i % 5) as u16).collect();
+        let (enc, dec) = tables_for(&syms, 5, 9).unwrap();
+        let (payload, states) = enc.encode_interleaved4(&syms);
+        for lane in 0..4 {
+            for bad in [0u16, (1 << 9) - 1, 2 << 9] {
+                let mut s = states;
+                s[lane] = bad;
+                let mut out = Vec::new();
+                assert!(
+                    dec.decode_interleaved4(&mut BitReader::new(&payload), s, syms.len(), &mut out)
+                        .is_err(),
+                    "lane {lane} state {bad} accepted"
+                );
+            }
         }
     }
 

@@ -1,0 +1,409 @@
+//! Huff0-style multi-stream block Huffman for RZS1 literals (§Perf).
+//!
+//! One shared canonical Huffman table (built with the length-limited
+//! constructor from `crate::deflate::huffman`, capped at
+//! [`MAX_HUFF_BITS`] bits like real zstd's Huff0), with the payload split
+//! into **four independent bitstreams**: the input is cut into 4
+//! contiguous segments of `ceil(len / 4)` bytes and each segment is coded
+//! into its own LSB-first stream. A 3×u16 little-endian jump header
+//! records the byte sizes of streams 0–2 (stream 3 is the remainder), so
+//! a decoder can keep four refill chains in flight — the same trick as
+//! zstd's `HUF_compress4X` / ans_flex's `hufflpuff`.
+//!
+//! Blob layout (embedded as RZS1 literal-section mode 4; all multi-byte
+//! integers little-endian):
+//!
+//! ```text
+//! [uvarint n]                   alphabet bound: highest used symbol + 1
+//! [n code lengths]              u8 each (0 = unused, 1..=11);
+//!                               a 0 is followed by u8 extra_run =
+//!                               count of additional zero symbols
+//! [u16 j0][u16 j1][u16 j2]      byte sizes of streams 0..2
+//! [stream0][stream1][stream2][stream3]
+//! ```
+//!
+//! Oracle discipline: [`compress`] (word-flush [`BitWriter`], interleaved
+//! 4-at-a-time decode in [`decompress`]) is property-tested
+//! **byte-identical** to [`reference::compress_naive`] (byte-at-a-time
+//! [`NaiveBitWriter`](crate::util::bitio::reference::NaiveBitWriter),
+//! stream-at-a-time decode), with the same accept/reject set on
+//! truncated or corrupted blobs — see the in-file tests and
+//! `rust/tests/conformance_entropy.rs`.
+
+use super::fse;
+use crate::deflate::huffman::{build_code_lengths, canonical_codes, Decoder, INVALID_SYM};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::varint::{put_uvarint, Cursor};
+
+/// Max Huffman code length — zstd's Huff0 limit, not DEFLATE's 15;
+/// shorter codes keep the decode table L1-resident.
+pub const MAX_HUFF_BITS: usize = 11;
+
+/// Number of independent bitstreams per block.
+pub const N_STREAMS: usize = 4;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Huff0Error(pub &'static str);
+
+impl std::fmt::Display for Huff0Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "huff0: {}", self.0)
+    }
+}
+impl std::error::Error for Huff0Error {}
+
+const E: fn(&'static str) -> Huff0Error = Huff0Error;
+
+/// Segment length for a block of `len` bytes (streams 0..2 cover full
+/// segments; stream 3 covers the remainder).
+#[inline]
+fn segment_len(len: usize) -> usize {
+    (len + N_STREAMS - 1) / N_STREAMS
+}
+
+/// Per-stream symbol counts for a block of `len` bytes.
+#[inline]
+fn stream_counts(len: usize) -> [usize; N_STREAMS] {
+    let seg = segment_len(len);
+    let mut counts = [0usize; N_STREAMS];
+    for (i, c) in counts.iter_mut().enumerate() {
+        *c = len.saturating_sub(i * seg).min(seg);
+    }
+    counts
+}
+
+/// Serialize the code-length table (shared by fast and naive encoders).
+fn write_table(out: &mut Vec<u8>, lengths: &[u8]) {
+    let n = lengths
+        .iter()
+        .rposition(|&l| l > 0)
+        .map(|p| p + 1)
+        .unwrap_or(0);
+    put_uvarint(out, n as u64);
+    let mut sym = 0usize;
+    while sym < n {
+        let l = lengths[sym];
+        out.push(l);
+        sym += 1;
+        if l == 0 {
+            let mut run = 0usize;
+            while sym < n && lengths[sym] == 0 && run < 255 {
+                run += 1;
+                sym += 1;
+            }
+            out.push(run as u8);
+        }
+    }
+}
+
+/// Parse the code-length table back into a 256-entry length array.
+fn read_table(c: &mut Cursor) -> Result<Vec<u8>, Huff0Error> {
+    let n = c.uvarint().ok_or(E("truncated table len"))? as usize;
+    if n == 0 || n > 256 {
+        return Err(E("bad alphabet size"));
+    }
+    let mut lengths = vec![0u8; n];
+    let mut sym = 0usize;
+    while sym < n {
+        let l = c.u8().ok_or(E("truncated code length"))?;
+        if l as usize > MAX_HUFF_BITS {
+            return Err(E("code length too long"));
+        }
+        lengths[sym] = l;
+        sym += 1;
+        if l == 0 {
+            let run = c.u8().ok_or(E("truncated zero run"))? as usize;
+            if sym + run > n {
+                return Err(E("zero run overflows alphabet"));
+            }
+            sym += run;
+        }
+    }
+    Ok(lengths)
+}
+
+/// Build the shared table for `data`; `None` if Huffman coding cannot
+/// help (fewer than 2 distinct byte values — RLE territory).
+fn build_table(hist: &[u32; 256]) -> Option<(Vec<u8>, Vec<u16>)> {
+    if hist.iter().filter(|&&c| c > 0).count() < 2 {
+        return None;
+    }
+    let freqs: Vec<u64> = hist.iter().map(|&c| c as u64).collect();
+    let lengths = build_code_lengths(&freqs, MAX_HUFF_BITS);
+    let codes = canonical_codes(&lengths);
+    Some((lengths, codes))
+}
+
+/// Compress `data` into a 4-stream Huff0 blob. Returns `None` when the
+/// input is degenerate (< 2 distinct bytes) or any stream's byte size
+/// exceeds the u16 jump-header range; the caller falls back to another
+/// literal mode. Never fails on valid input — size arbitration (is the
+/// blob smaller than raw?) is the caller's job.
+pub fn compress(data: &[u8]) -> Option<Vec<u8>> {
+    let hist = fse::histogram(data);
+    let (lengths, codes) = build_table(&hist)?;
+
+    let seg = segment_len(data.len());
+    let mut streams: [Vec<u8>; N_STREAMS] = Default::default();
+    for (i, stream) in streams.iter_mut().enumerate() {
+        let start = (i * seg).min(data.len());
+        let end = ((i + 1) * seg).min(data.len());
+        let mut w = BitWriter::with_capacity(end - start + 8);
+        for &b in &data[start..end] {
+            w.write_bits(codes[b as usize] as u64, lengths[b as usize] as u32);
+        }
+        *stream = w.finish();
+        if stream.len() > u16::MAX as usize {
+            return None;
+        }
+    }
+
+    let mut out = Vec::with_capacity(data.len() / 2 + 64);
+    write_table(&mut out, &lengths);
+    for s in &streams[..N_STREAMS - 1] {
+        out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    }
+    for s in &streams {
+        out.extend_from_slice(s);
+    }
+    Some(out)
+}
+
+/// Split the post-table region of a blob into the four streams using the
+/// jump header. Shared by the fast and naive decoders so both reject
+/// exactly the same malformed headers.
+fn split_streams<'a>(c: &mut Cursor<'a>) -> Result<[&'a [u8]; N_STREAMS], Huff0Error> {
+    let mut sizes = [0usize; N_STREAMS - 1];
+    for s in sizes.iter_mut() {
+        let b = c.bytes(2).ok_or(E("truncated jump header"))?;
+        *s = u16::from_le_bytes([b[0], b[1]]) as usize;
+    }
+    let total: usize = sizes.iter().sum();
+    let rest = c.bytes(c.remaining()).unwrap_or(&[]);
+    if total > rest.len() {
+        return Err(E("jump header exceeds payload"));
+    }
+    let (s0, r) = rest.split_at(sizes[0]);
+    let (s1, r) = r.split_at(sizes[1]);
+    let (s2, s3) = r.split_at(sizes[2]);
+    Ok([s0, s1, s2, s3])
+}
+
+/// Decompress a Huff0 blob into exactly `len` bytes.
+///
+/// §Perf: the four bit readers are advanced **interleaved**, one symbol
+/// per stream per iteration, so four table lookups and four 57-bit
+/// refills are in flight at once; the tail (streams of unequal symbol
+/// count) finishes stream-at-a-time. Truncation is detected after the
+/// fact via [`BitReader::overflowed`], like every other lane.
+pub fn decompress(blob: &[u8], len: usize) -> Result<Vec<u8>, Huff0Error> {
+    let mut c = Cursor::new(blob);
+    let lengths = read_table(&mut c)?;
+    let dec = Decoder::from_lengths(&lengths).map_err(|_| E("bad code"))?;
+    let streams = split_streams(&mut c)?;
+
+    let counts = stream_counts(len);
+    let seg = segment_len(len);
+    let mut readers: Vec<BitReader> = streams.iter().map(|s| BitReader::new(s)).collect();
+    let mut out = vec![0u8; len];
+
+    // Batch loop: all four streams still have symbols left.
+    let min_count = counts[N_STREAMS - 1];
+    for j in 0..min_count {
+        for (i, r) in readers.iter_mut().enumerate() {
+            let sym = dec.decode_fast(r);
+            if sym == INVALID_SYM {
+                return Err(E("invalid code word"));
+            }
+            out[i * seg + j] = sym as u8;
+        }
+    }
+    // Tail: per-stream finish (stream i may hold up to seg symbols).
+    for (i, r) in readers.iter_mut().enumerate() {
+        for j in min_count..counts[i] {
+            let sym = dec.decode_fast(r);
+            if sym == INVALID_SYM {
+                return Err(E("invalid code word"));
+            }
+            out[i * seg + j] = sym as u8;
+        }
+        if r.overflowed() {
+            return Err(E("bitstream exhausted"));
+        }
+    }
+    Ok(out)
+}
+
+/// Pre-optimization reference implementations, kept in-tree as oracles:
+/// `compress` must stay **byte-identical** to [`reference::compress_naive`]
+/// and `decompress` must accept exactly the blobs
+/// [`reference::decompress_naive`] accepts, with identical output.
+pub mod reference {
+    use super::*;
+    use crate::util::bitio::reference::NaiveBitWriter;
+
+    /// Single-symbol-at-a-time encoder over the byte-at-a-time bit
+    /// writer and the naive histogram; same blob layout.
+    pub fn compress_naive(data: &[u8]) -> Option<Vec<u8>> {
+        let hist = fse::reference::histogram_naive(data);
+        let (lengths, codes) = build_table(&hist)?;
+
+        let seg = segment_len(data.len());
+        let mut streams: [Vec<u8>; N_STREAMS] = Default::default();
+        for (i, stream) in streams.iter_mut().enumerate() {
+            let start = (i * seg).min(data.len());
+            let end = ((i + 1) * seg).min(data.len());
+            let mut w = NaiveBitWriter::new();
+            for &b in &data[start..end] {
+                w.write_bits(codes[b as usize] as u64, lengths[b as usize] as u32);
+            }
+            *stream = w.finish();
+            if stream.len() > u16::MAX as usize {
+                return None;
+            }
+        }
+
+        let mut out = Vec::new();
+        write_table(&mut out, &lengths);
+        for s in &streams[..N_STREAMS - 1] {
+            out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+        }
+        for s in &streams {
+            out.extend_from_slice(s);
+        }
+        Some(out)
+    }
+
+    /// Stream-at-a-time decoder using the `Result`-returning
+    /// [`Decoder::decode`]; same accept/reject set as the interleaved
+    /// fast path.
+    pub fn decompress_naive(blob: &[u8], len: usize) -> Result<Vec<u8>, Huff0Error> {
+        let mut c = Cursor::new(blob);
+        let lengths = read_table(&mut c)?;
+        let dec = Decoder::from_lengths(&lengths).map_err(|_| E("bad code"))?;
+        let streams = split_streams(&mut c)?;
+
+        let counts = stream_counts(len);
+        let mut out = Vec::with_capacity(len);
+        for (i, stream) in streams.iter().enumerate() {
+            let mut r = BitReader::new(stream);
+            for _ in 0..counts[i] {
+                let sym = dec.decode(&mut r).map_err(|_| E("invalid code word"))?;
+                out.push(sym as u8);
+            }
+            if r.overflowed() {
+                return Err(E("bitstream exhausted"));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_corpus(rng: &mut Rng) -> Vec<Vec<u8>> {
+        let mut text = Vec::new();
+        while text.len() < 50_000 {
+            text.extend_from_slice(b"nanoAOD Muon_pt Jet_eta high-entropy literals lane. ");
+            text.push((rng.next_u64() & 0x7F) as u8);
+        }
+        let skew: Vec<u8> = (0..30_000)
+            .map(|_| {
+                if rng.chance(0.8) {
+                    (rng.next_u64() & 0x3) as u8
+                } else {
+                    (rng.next_u64() & 0xFF) as u8
+                }
+            })
+            .collect();
+        vec![text, rng.bytes(40_000), skew, rng.bytes(37)]
+    }
+
+    #[test]
+    fn roundtrip_and_matches_naive() {
+        let mut rng = Rng::new(0xB0F0);
+        for data in sample_corpus(&mut rng) {
+            let fast = compress(&data).expect("compressible input");
+            let naive = reference::compress_naive(&data).expect("naive");
+            assert_eq!(fast, naive, "blob must be byte-identical (n={})", data.len());
+            assert_eq!(decompress(&fast, data.len()).unwrap(), data);
+            assert_eq!(reference::decompress_naive(&fast, data.len()).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn small_and_uneven_lengths() {
+        // Exercise every len % 4 tail shape, including streams with zero
+        // symbols (len < 4) and single-symbol streams.
+        let mut rng = Rng::new(0xB0F1);
+        for n in 2..70usize {
+            let data: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0x0F) as u8).collect();
+            if data.iter().all(|&b| b == data[0]) {
+                assert!(compress(&data).is_none(), "single-symbol must bail n={n}");
+                continue;
+            }
+            let fast = compress(&data).expect("table");
+            assert_eq!(fast, reference::compress_naive(&data).unwrap(), "n={n}");
+            assert_eq!(decompress(&fast, n).unwrap(), data, "n={n}");
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_bail() {
+        assert!(compress(&[]).is_none());
+        assert!(compress(&[7]).is_none());
+        assert!(compress(&vec![42u8; 10_000]).is_none());
+        assert!(reference::compress_naive(&[]).is_none());
+        assert!(reference::compress_naive(&vec![42u8; 10_000]).is_none());
+    }
+
+    #[test]
+    fn oversize_stream_bails() {
+        // Incompressible data: each of the 4 streams needs ~ len/4 bytes,
+        // so 400 KB blows the u16 jump header and both encoders refuse.
+        let mut rng = Rng::new(0xB0F2);
+        let data = rng.bytes(400_000);
+        assert!(compress(&data).is_none());
+        assert!(reference::compress_naive(&data).is_none());
+    }
+
+    #[test]
+    fn truncation_rejection_parity() {
+        let mut rng = Rng::new(0xB0F3);
+        let data = rng.bytes(5_000);
+        let blob = compress(&data).unwrap();
+        for cut in [0, 1, 3, blob.len() / 2, blob.len() - 1] {
+            let fast = decompress(&blob[..cut], data.len());
+            let naive = reference::decompress_naive(&blob[..cut], data.len());
+            assert_eq!(fast.is_ok(), naive.is_ok(), "cut={cut}");
+            assert!(fast.is_err(), "cut={cut} must be rejected");
+        }
+    }
+
+    #[test]
+    fn bit_flip_parity() {
+        // Corruption may still decode (to wrong bytes) — but the fast and
+        // naive decoders must agree on accept/reject and on the output.
+        let mut rng = Rng::new(0xB0F4);
+        let data = rng.bytes(3_000);
+        let blob = compress(&data).unwrap();
+        for _ in 0..200 {
+            let mut bad = blob.clone();
+            let byte = rng.range(0, bad.len() - 1);
+            bad[byte] ^= 1 << rng.range(0, 7);
+            let fast = decompress(&bad, data.len());
+            let naive = reference::decompress_naive(&bad, data.len());
+            // Error *values* may differ (the interleaved loop can hit an
+            // invalid code in stream 1 before noticing stream 0 ran dry);
+            // the accept/reject decision and any accepted bytes must not.
+            match (fast, naive) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("accept/reject mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    }
+}

@@ -9,15 +9,26 @@
 //! property-tested against in `rust/tests/prop_codecs.rs`, the same
 //! discipline `crate::deflate` established in PR 1:
 //!
-//! * **Interleaved dual-state FSE** (`fse::EncTable::encode_interleaved` /
-//!   `fse::DecTable::decode_interleaved`): two ANS states alternate over
+//! * **Interleaved multi-state FSE** (`fse::EncTable::encode_interleaved`
+//!   + `encode_interleaved4` / `fse::DecTable::decode_interleaved` +
+//!   `decode_interleaved4`): two or four ANS states alternate over
 //!   consecutive symbols (the real-zstd / ans_flex trick), removing the
 //!   serial state dependency so table lookups and the 57-bit-refill bit
-//!   I/O pipeline; the decode batch loop emits a symbol pair per iteration
-//!   with the exhaustion check hoisted out. Oracles:
-//!   `fse::reference::{encode,decode}_interleaved_naive` — compressed
-//!   bytes **identical** on encode, symbols identical on decode, same
-//!   accept/reject set on truncation.
+//!   I/O pipeline; the decode batch loop emits a symbol pair (quad) per
+//!   iteration with the exhaustion check hoisted out. Which width the
+//!   encoder emits is the [`EntropyMode`] knob (dual-state = the RFIL-v2
+//!   stream, quad-state = the v3 default). Oracles:
+//!   `fse::reference::{encode,decode}_interleaved_naive` and
+//!   `{encode,decode}_interleaved4_naive` — compressed bytes **identical**
+//!   on encode, symbols identical on decode, same accept/reject set on
+//!   truncation.
+//! * **Huff0-style 4-stream Huffman literals** (`huff0::compress` /
+//!   `huff0::decompress`, picked by [`EntropyMode::Huff0`] for
+//!   high-entropy branches): one shared canonical table, payload split
+//!   into four independent LSB-first bitstreams behind a 3×u16 jump
+//!   header, so the decoder keeps four refill chains in flight. Oracles:
+//!   `huff0::reference::{compress,decompress}_naive` (byte-identical
+//!   blob, same accept/reject set).
 //! * **4-lane histogram** (`fse::histogram`): single pass, four count
 //!   arrays, 8 bytes per iteration, feeding `fse::normalize_counts`.
 //!   Oracle: `fse::reference::histogram_naive` (equal counts).
@@ -37,9 +48,10 @@
 pub mod compress;
 pub mod dict;
 pub mod fse;
+pub mod huff0;
 pub mod matcher;
 
 pub use compress::{
-    zstd_compress, zstd_compress_dict, zstd_decompress, zstd_decompress_dict, ZstdEncoder,
-    ZstdError,
+    zstd_compress, zstd_compress_dict, zstd_compress_mode, zstd_decompress, zstd_decompress_dict,
+    EntropyMode, ZstdEncoder, ZstdError,
 };

@@ -1,0 +1,367 @@
+// This target is linted by the CI clippy job; it shares the library's
+// style-lint policy (see the lint-policy note in rust/src/lib.rs).
+
+#![allow(unknown_lints, clippy::style)]
+
+//! Entropy-coder conformance suite (PR-8 satellite): every entropy lane —
+//! dual-state FSE, quad-state FSE, and the Huff0-style multi-stream
+//! Huffman literals coder — against its retained naive oracle, across the
+//! shared testkit corpora, at every feasible table log, plus truncation /
+//! bit-flip rejection parity and the degenerate-input table.
+//!
+//! Rejection parity uses the accept/reject discipline, not error-value
+//! equality: on a corrupt stream fast and naive must both accept (with
+//! identical output) or both reject; the error *values* may differ.
+//!
+//! The suite also owns the cross-version compatibility fixture: a
+//! committed RFIL **v2** file (generated and independently re-parsed by
+//! `python/tests/gen_compat_fixture.py`, never by this crate's writer)
+//! must read event-for-event identical under today's v3 reader.
+
+mod common;
+
+use common::{corpus, prop_rounds, seeded, tmp_path};
+use rootio::rfile::{TreeReader, Value};
+use rootio::util::bitio::BitReader;
+use rootio::util::rng::Rng;
+use rootio::util::varint::Cursor;
+use rootio::zstd::{fse, huff0};
+
+/// Build enc/dec tables for `data` at `table_log`, or `None` when the log
+/// cannot hold the alphabet (the suite probes infeasible logs on purpose).
+fn tables_at(data: &[u8], table_log: u32) -> Option<(fse::EncTable, fse::DecTable)> {
+    let hist = fse::histogram(data);
+    let norm = fse::normalize_counts(&hist, data.len() as u64, table_log).ok()?;
+    let enc = fse::EncTable::new(&norm, table_log).expect("enc table");
+    let dec = fse::DecTable::new(&norm, table_log).expect("dec table");
+    Some((enc, dec))
+}
+
+/// The table logs each payload is driven through: a deliberately small
+/// one (infeasible for wide alphabets — exercises the clean-error path),
+/// two mid logs, and the zstd literal maximum.
+const TABLE_LOGS: [u32; 4] = [7, 9, 11, fse::MAX_TABLE_LOG];
+
+/// Accept/reject parity check for a pair of decode outcomes.
+fn assert_parity(
+    fast: Result<Vec<u16>, fse::FseError>,
+    naive: Result<Vec<u16>, fse::FseError>,
+    what: &str,
+) {
+    match (fast, naive) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b, "{what}: both accepted, different symbols"),
+        (Err(_), Err(_)) => {}
+        (f, n) => panic!("{what}: fast {:?} vs naive {:?}", f.is_ok(), n.is_ok()),
+    }
+}
+
+fn decode2(dec: &fse::DecTable, payload: &[u8], init: [u16; 2], n: usize) -> Result<Vec<u16>, fse::FseError> {
+    let mut out = Vec::new();
+    dec.decode_interleaved(&mut BitReader::new(payload), init, n, &mut out)?;
+    Ok(out)
+}
+
+fn decode2_naive(dec: &fse::DecTable, payload: &[u8], init: [u16; 2], n: usize) -> Result<Vec<u16>, fse::FseError> {
+    let mut out = Vec::new();
+    fse::reference::decode_interleaved_naive(dec, &mut BitReader::new(payload), init, n, &mut out)?;
+    Ok(out)
+}
+
+fn decode4(dec: &fse::DecTable, payload: &[u8], init: [u16; 4], n: usize) -> Result<Vec<u16>, fse::FseError> {
+    let mut out = Vec::new();
+    dec.decode_interleaved4(&mut BitReader::new(payload), init, n, &mut out)?;
+    Ok(out)
+}
+
+fn decode4_naive(dec: &fse::DecTable, payload: &[u8], init: [u16; 4], n: usize) -> Result<Vec<u16>, fse::FseError> {
+    let mut out = Vec::new();
+    fse::reference::decode_interleaved4_naive(dec, &mut BitReader::new(payload), init, n, &mut out)?;
+    Ok(out)
+}
+
+#[test]
+fn fse_lanes_equal_naive_across_corpora_and_table_logs() {
+    // Both interleaved widths, every corpus, every feasible table log:
+    // encoders byte-identical (payload AND transmitted states) to the
+    // naive oracle, decoders symbol-identical, and both widths round-trip
+    // back to the input.
+    let (mut rng, _guard) = seeded(0x4C0F_2026);
+    let rounds = prop_rounds(6);
+    for round in 0..rounds {
+        for (ci, full) in corpus(&mut rng).into_iter().enumerate() {
+            // Vary the slice per round so reduced-round CI still sees
+            // fresh lengths (odd lengths exercise the lane tails).
+            let n = rng.range(2, full.len());
+            let data = &full[..n];
+            let syms: Vec<u16> = data.iter().map(|&b| b as u16).collect();
+            for log in TABLE_LOGS {
+                let Some((enc, dec)) = tables_at(data, log) else { continue };
+                // 2-state lane.
+                let (p2, s2) = enc.encode_interleaved(data);
+                let (p2n, s2n) = fse::reference::encode_interleaved_naive(&enc, &syms);
+                assert_eq!(p2, p2n, "enc2 payload: round {round} corpus {ci} log {log}");
+                assert_eq!(s2, s2n, "enc2 states: round {round} corpus {ci} log {log}");
+                let d2 = decode2(&dec, &p2, s2, n).expect("decode2");
+                assert_eq!(d2, decode2_naive(&dec, &p2, s2, n).expect("decode2 naive"));
+                assert_eq!(d2, syms, "2-state roundtrip: round {round} corpus {ci} log {log}");
+                // 4-state lane.
+                let (p4, s4) = enc.encode_interleaved4(data);
+                let (p4n, s4n) = fse::reference::encode_interleaved4_naive(&enc, &syms);
+                assert_eq!(p4, p4n, "enc4 payload: round {round} corpus {ci} log {log}");
+                assert_eq!(s4, s4n, "enc4 states: round {round} corpus {ci} log {log}");
+                let d4 = decode4(&dec, &p4, s4, n).expect("decode4");
+                assert_eq!(d4, decode4_naive(&dec, &p4, s4, n).expect("decode4 naive"));
+                assert_eq!(d4, syms, "4-state roundtrip: round {round} corpus {ci} log {log}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fse_rejection_parity_under_truncation_and_bit_flips() {
+    // Corrupt streams: fast and naive decoders must agree on accept vs
+    // reject for both widths. (Bit flips inside an FSE payload often still
+    // decode — every bit pattern maps to a valid state — in which case
+    // both must emit the same garbage symbols.)
+    let (mut rng, _guard) = seeded(0x4C0F_BAD0);
+    let rounds = prop_rounds(6);
+    for round in 0..rounds {
+        for full in corpus(&mut rng) {
+            let n = rng.range(64, full.len());
+            let data = &full[..n];
+            let log = fse::optimal_table_log(n, fse::histogram(data).iter().filter(|&&c| c > 0).count(), 11);
+            let Some((enc, dec)) = tables_at(data, log) else { continue };
+            let (p2, s2) = enc.encode_interleaved(data);
+            let (p4, s4) = enc.encode_interleaved4(data);
+            // Truncations, including the empty payload.
+            for cut in [0usize, p2.len() / 3, p2.len().saturating_sub(1)] {
+                assert_parity(
+                    decode2(&dec, &p2[..cut], s2, n),
+                    decode2_naive(&dec, &p2[..cut], s2, n),
+                    &format!("2-state cut {cut} round {round}"),
+                );
+            }
+            for cut in [0usize, p4.len() / 3, p4.len().saturating_sub(1)] {
+                assert_parity(
+                    decode4(&dec, &p4[..cut], s4, n),
+                    decode4_naive(&dec, &p4[..cut], s4, n),
+                    &format!("4-state cut {cut} round {round}"),
+                );
+            }
+            // Single-bit flips at random positions.
+            for _ in 0..4 {
+                if p2.is_empty() || p4.is_empty() {
+                    break;
+                }
+                let mut bad2 = p2.clone();
+                let at = rng.range(0, bad2.len() - 1);
+                bad2[at] ^= 1 << rng.range(0, 7);
+                assert_parity(
+                    decode2(&dec, &bad2, s2, n),
+                    decode2_naive(&dec, &bad2, s2, n),
+                    &format!("2-state flip at {at} round {round}"),
+                );
+                let mut bad4 = p4.clone();
+                let at = rng.range(0, bad4.len() - 1);
+                bad4[at] ^= 1 << rng.range(0, 7);
+                assert_parity(
+                    decode4(&dec, &bad4, s4, n),
+                    decode4_naive(&dec, &bad4, s4, n),
+                    &format!("4-state flip at {at} round {round}"),
+                );
+            }
+            // Invalid initial states must be rejected by both widths (the
+            // naive decoders share the same entry guard).
+            let size = 1u16 << enc.table_log();
+            let bad_init2 = [s2[0], size.wrapping_sub(1)];
+            assert!(decode2(&dec, &p2, bad_init2, n).is_err());
+            assert!(decode2_naive(&dec, &p2, bad_init2, n).is_err());
+            let bad_init4 = [s4[0], s4[1], s4[2], size.wrapping_sub(1)];
+            assert!(decode4(&dec, &p4, bad_init4, n).is_err());
+            assert!(decode4_naive(&dec, &p4, bad_init4, n).is_err());
+        }
+    }
+}
+
+#[test]
+fn fse_degenerate_input_table() {
+    // Empty input: normalization reports it, histograms agree.
+    assert_eq!(fse::histogram(&[]), fse::reference::histogram_naive(&[]));
+    assert!(fse::normalize_counts(&fse::histogram(&[]), 0, 9).is_err());
+
+    // Single occurrence of a single symbol, and an all-one-byte block:
+    // present == 1 gives the symbol the whole table; every lane width must
+    // still round-trip (the planner would pick RLE, but the lane must be
+    // legal — docs/FORMAT.md §7.3).
+    for data in [vec![0x41u8], vec![0x41u8; 4096]] {
+        let n = data.len();
+        let syms: Vec<u16> = data.iter().map(|&b| b as u16).collect();
+        let log = fse::optimal_table_log(n, 1, 11);
+        let (enc, dec) = tables_at(&data, log).expect("degenerate tables");
+        let (p2, s2) = enc.encode_interleaved(&data);
+        assert_eq!((p2.clone(), s2), fse::reference::encode_interleaved_naive(&enc, &syms));
+        assert_eq!(decode2(&dec, &p2, s2, n).unwrap(), syms);
+        let (p4, s4) = enc.encode_interleaved4(&data);
+        assert_eq!((p4.clone(), s4), fse::reference::encode_interleaved4_naive(&enc, &syms));
+        assert_eq!(decode4(&dec, &p4, s4, n).unwrap(), syms);
+    }
+
+    // Tiny two-symbol inputs around the lane count: every length from 2
+    // to 9 exercises each possible seeded/unseeded lane combination of
+    // the 4-state encoder (lengths < 4 leave lanes unseeded).
+    for n in 2usize..=9 {
+        let data: Vec<u8> = (0..n).map(|i| if i % 2 == 0 { b'a' } else { b'z' }).collect();
+        let syms: Vec<u16> = data.iter().map(|&b| b as u16).collect();
+        let (enc, dec) = tables_at(&data, 5).expect("tiny tables");
+        let (p4, s4) = enc.encode_interleaved4(&data);
+        assert_eq!((p4.clone(), s4), fse::reference::encode_interleaved4_naive(&enc, &syms));
+        assert_eq!(decode4(&dec, &p4, s4, n).unwrap(), syms, "n={n}");
+    }
+
+    // Max-size block (a full 128 KiB noise payload — the zstd literal
+    // block ceiling): both widths survive and round-trip.
+    let mut rng = Rng::new(0xB10C);
+    let data = rng.bytes(128 << 10);
+    let syms: Vec<u16> = data.iter().map(|&b| b as u16).collect();
+    let (enc, dec) = tables_at(&data, fse::MAX_TABLE_LOG).expect("max block tables");
+    let (p2, s2) = enc.encode_interleaved(&data[..]);
+    assert_eq!(decode2(&dec, &p2, s2, data.len()).unwrap(), syms);
+    let (p4, s4) = enc.encode_interleaved4(&data[..]);
+    assert_eq!(decode4(&dec, &p4, s4, data.len()).unwrap(), syms);
+}
+
+#[test]
+fn huff0_fast_equals_naive_across_corpora() {
+    // Compressed blobs byte-identical (including the None fallback
+    // decision), decoded bytes identical, round-trips exact.
+    let (mut rng, _guard) = seeded(0x48FF_2026);
+    let rounds = prop_rounds(6);
+    for round in 0..rounds {
+        for (ci, full) in corpus(&mut rng).into_iter().enumerate() {
+            let n = rng.range(1, full.len());
+            let data = &full[..n];
+            let fast = huff0::compress(data);
+            let naive = huff0::reference::compress_naive(data);
+            assert_eq!(fast, naive, "blob: round {round} corpus {ci} n {n}");
+            let Some(blob) = fast else { continue };
+            let d = huff0::decompress(&blob, n).expect("huff0 decompress");
+            let dn = huff0::reference::decompress_naive(&blob, n).expect("naive decompress");
+            assert_eq!(d, dn, "round {round} corpus {ci} n {n}");
+            assert_eq!(d, data, "roundtrip: round {round} corpus {ci} n {n}");
+        }
+    }
+}
+
+#[test]
+fn huff0_rejection_parity_and_degenerates() {
+    // Degenerate inputs: fewer than two distinct symbols is a fallback
+    // (None) from both implementations.
+    for data in [&b""[..], &b"A"[..], &[0x41u8; 10_000][..]] {
+        assert_eq!(huff0::compress(data), None);
+        assert_eq!(huff0::reference::compress_naive(data), None);
+    }
+    // Max-size block: 128 KiB of structured bytes still compresses and
+    // round-trips through all four streams.
+    let big: Vec<u8> = (0..128usize << 10).map(|i| (i % 7) as u8).collect();
+    let blob = huff0::compress(&big).expect("big blob");
+    assert_eq!(huff0::decompress(&blob, big.len()).unwrap(), big);
+
+    // Corruption: truncations and bit flips, accept/reject parity.
+    let (mut rng, _guard) = seeded(0x48FF_BAD0);
+    let rounds = prop_rounds(6);
+    for round in 0..rounds {
+        for full in corpus(&mut rng) {
+            let n = rng.range(16, full.len());
+            let data = &full[..n];
+            let Some(blob) = huff0::compress(data) else { continue };
+            for cut in [0usize, 1, blob.len() / 2, blob.len().saturating_sub(1)] {
+                let f = huff0::decompress(&blob[..cut], n);
+                let nv = huff0::reference::decompress_naive(&blob[..cut], n);
+                match (f, nv) {
+                    (Ok(a), Ok(b)) => assert_eq!(a, b, "cut {cut} round {round}"),
+                    (Err(_), Err(_)) => {}
+                    (f, nv) => panic!("cut {cut}: fast {:?} vs naive {:?}", f.is_ok(), nv.is_ok()),
+                }
+            }
+            for _ in 0..6 {
+                let mut bad = blob.clone();
+                let at = rng.range(0, bad.len() - 1);
+                bad[at] ^= 1 << rng.range(0, 7);
+                let f = huff0::decompress(&bad, n);
+                let nv = huff0::reference::decompress_naive(&bad, n);
+                match (f, nv) {
+                    (Ok(a), Ok(b)) => assert_eq!(a, b, "flip at {at} round {round}"),
+                    (Err(_), Err(_)) => {}
+                    (f, nv) => panic!("flip at {at}: fast {:?} vs naive {:?}", f.is_ok(), nv.is_ok()),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-version compatibility: the committed v2 fixture.
+// ---------------------------------------------------------------------------
+
+/// The fixture's ground-truth events, mirroring `expected_events()` in
+/// `python/tests/gen_compat_fixture.py` (which generated the file without
+/// touching this crate's writer).
+fn expected_fixture_events() -> Vec<Vec<Value>> {
+    const TAG_NAMES: [&[u8]; 5] = [b"Muon_pt", b"Jet_eta", b"MET_phi", b"Tau_q", b"HLT_Iso"];
+    (0..37)
+        .map(|i| {
+            let tag = if i % 7 == 3 {
+                Vec::new()
+            } else {
+                let mut t = TAG_NAMES[i % 5].to_vec();
+                t.push(b'0' + (i % 10) as u8);
+                t
+            };
+            vec![Value::AU8(tag), Value::F32(i as f32 * 0.5 - 3.0)]
+        })
+        .collect()
+}
+
+#[test]
+fn v2_fixture_reads_event_for_event_under_v3_reader() {
+    let bytes: &[u8] = include_bytes!("fixtures/compat_v2.rfile");
+    // It really is a v2 container — regenerating the fixture with a v3
+    // stamp would silently gut this test.
+    assert_eq!(&bytes[..4], b"RFIL");
+    assert_eq!(&bytes[4..6], &[0u8, 2], "fixture must stay version 2");
+
+    let path = tmp_path("conformance", "compat_v2.rfile");
+    std::fs::write(&path, bytes).expect("staging fixture");
+    let mut reader = TreeReader::open(&path).expect("v3 reader must accept a v2 file");
+    assert_eq!(reader.meta.name, "Events");
+    assert_eq!(reader.meta.n_entries, 37);
+    assert_eq!(reader.meta.branches.len(), 2);
+    let events = reader.read_all_events().expect("reading v2 fixture");
+    assert_eq!(events, expected_fixture_events());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn v2_fixture_actually_exercises_the_dual_state_fse_lane() {
+    // Parse the first basket record by hand and assert its RZS1 literal
+    // section is MODE_FSE (2) — i.e. the compat test above really decodes
+    // a dual-state FSE stream, not a raw/RLE section that any version
+    // would accept.
+    let bytes: &[u8] = include_bytes!("fixtures/compat_v2.rfile");
+    // Record frame at offset 6: u32_be total_len + u8 kind.
+    let total = u32::from_be_bytes(bytes[6..10].try_into().unwrap()) as usize;
+    assert_eq!(bytes[10], 1, "first record must be a basket");
+    let payload = &bytes[11..6 + total];
+    let mut c = Cursor::new(payload);
+    for field in ["branch_id", "basket_index", "n_entries", "data_len", "n_offsets"] {
+        c.uvarint().unwrap_or_else(|| panic!("basket framing: {field}"));
+    }
+    let blob = &payload[c.pos()..];
+    // 10-byte span header: tag, level, u24 comp, u24 uncomp, precond.
+    assert_eq!(&blob[..2], b"ZS", "fixture span must be ZSTD, not raw fallback");
+    assert_eq!(blob[2] & 0x0F, 5, "span level");
+    let mut s = Cursor::new(&blob[10..]);
+    s.uvarint().expect("rzs1 raw_len");
+    assert_eq!(s.uvarint(), Some(0), "fixture block must be pure literals (n_seq = 0)");
+    assert_eq!(s.u8(), Some(2), "literal section must be MODE_FSE (dual-state)");
+}
