@@ -19,6 +19,8 @@ bench job just regenerated is NEW. Prints
     the middle-50% window, offset vs submission prefetch),
   * the `concurrent` table of NEW (scan-server waves of 1/8/64 queries:
     aggregate MB/s and p99 latency, cold vs warm decoded-basket cache),
+  * the `repack` table of NEW (file size + full/hot-subset read MB/s
+    before and after a profile-driven `rootio repack`),
   * per-(payload, setting) compress/decompress throughput deltas vs the
     baseline where both sides have real numbers.
 
@@ -50,6 +52,7 @@ KNOWN_SCHEMAS = (
     "bench-codecs/v4",
     "bench-codecs/v5",
     "bench-codecs/v6",
+    "bench-codecs/v7",
 )
 
 
@@ -95,6 +98,8 @@ def validate(doc, path):
         required.append(("concurrent", ("queries", "cache")))
     if version >= 6:
         required.append(("entropy", ("lane", "payload")))
+    if version >= 7:
+        required.append(("repack", ("lane",)))
     for key, row_keys in required:
         rows = doc.get(key)
         if not isinstance(rows, list):
@@ -207,6 +212,23 @@ def entropy_table(doc, title):
     return out
 
 
+def repack_table(doc, title):
+    rows = doc.get("repack") or []
+    if not rows:
+        return {}
+    print(f"\n== {title}: profile-driven repack ({len(rows)} lanes) ==")
+    print(f"  {'lane':<8} {'file KB':>10} {'full read':>10} {'hot read':>10}")
+    out = {}
+    for r in rows:
+        lane = r.get("lane", "?")
+        fb = r.get("file_bytes")
+        fb_s = f"{fb / 1024:10.1f}" if isinstance(fb, (int, float)) else f"{'-':>10}"
+        print(f"  {lane:<8} {fb_s} {fmt_mbps(r.get('read_MBps')):>10} "
+              f"{fmt_mbps(r.get('hot_MBps')):>10}")
+        out[lane] = (fb, r.get("read_MBps"), r.get("hot_MBps"))
+    return out
+
+
 def check_lane_coverage(base_lanes, new_lanes, what):
     """A lane in the committed baseline that the regenerated file no longer
     produces means the bench and its baseline have drifted apart — fail."""
@@ -264,6 +286,7 @@ def main(argv=None):
     new_proj = projection_table(new, "current run")
     new_prange = projection_range_table(new, "current run")
     new_conc = concurrent_table(new, "current run")
+    new_repack = repack_table(new, "current run")
 
     base_spd = speedup_table(base, "committed baseline")
     base_entropy = entropy_table(base, "committed baseline")
@@ -271,12 +294,14 @@ def main(argv=None):
     base_proj = projection_table(base, "committed baseline")
     base_prange = projection_range_table(base, "committed baseline")
     base_conc = concurrent_table(base, "committed baseline")
+    base_repack = repack_table(base, "committed baseline")
     check_lane_coverage(base_spd, new_spd, "fast_path_speedups")
     check_lane_coverage(base_entropy, new_entropy, "entropy")
     check_lane_coverage(base_read, new_read, "read_pipeline")
     check_lane_coverage(base_proj, new_proj, "projection")
     check_lane_coverage(base_prange, new_prange, "projection_range")
     check_lane_coverage(base_conc, new_conc, "concurrent")
+    check_lane_coverage(base_repack, new_repack, "repack")
 
     common = [k for k in new_spd if k in base_spd
               and isinstance(new_spd[k], (int, float))
@@ -332,6 +357,16 @@ def main(argv=None):
         for k in sorted(common):
             print(f"  {k[0]!s:>8}q {k[1]:<8} "
                   f"{base_conc[k]:8.1f} -> {new_conc[k]:8.1f} MB/s")
+
+    common = [k for k in new_repack if k in base_repack
+              and all(isinstance(v, (int, float)) for v in new_repack[k])
+              and all(isinstance(v, (int, float)) for v in base_repack[k])]
+    if common:
+        print("\n== repack drift vs baseline ==")
+        for k in sorted(common):
+            (bf, br, bh), (nf, nr, nh) = base_repack[k], new_repack[k]
+            print(f"  {k:<8} size {bf / 1024:8.1f} -> {nf / 1024:8.1f} KB  "
+                  f"full {br:8.1f} -> {nr:8.1f}  hot {bh:8.1f} -> {nh:8.1f} MB/s")
 
     base_rows = {result_key(r): r for r in (base.get("results") or [])}
     new_rows = {result_key(r): r for r in (new.get("results") or [])}

@@ -1,11 +1,11 @@
 #!/usr/bin/env python3
 """Self-tests for the bench tooling contract CI leans on:
 
-  * `bench_diff.py` — schema validation (v1..v6), lane-coverage checks,
+  * `bench_diff.py` — schema validation (v1..v7), lane-coverage checks,
     and the `--gate-fastpath` perf gate with its exit codes (0 ok, 2
     schema mismatch, 3 perf regression);
   * `roadmap_fill.py` — marker-block replacement and table rendering for
-    every section of a v6 document.
+    every section of a v7 document.
 
 These run in the CI `python` job so bench-tooling drift fails the build
 even when no Rust toolchain is in play. Run:
@@ -121,6 +121,22 @@ def v6_doc(speedup=3.0, with_values=True):
     return doc
 
 
+def v7_doc(speedup=3.0, with_values=True):
+    """A minimal well-formed bench-codecs/v7 document (v6 + repack)."""
+    def mbps(v):
+        return v if with_values else None
+
+    doc = v6_doc(speedup=speedup, with_values=with_values)
+    doc["schema"] = "bench-codecs/v7"
+    doc["repack"] = [
+        {"lane": "before", "file_bytes": mbps(4_200_000),
+         "read_MBps": mbps(350.0), "hot_MBps": mbps(280.0)},
+        {"lane": "after", "file_bytes": mbps(3_900_000),
+         "read_MBps": mbps(900.0), "hot_MBps": mbps(1400.0)},
+    ]
+    return doc
+
+
 def write_doc(tmp, name, doc):
     path = os.path.join(tmp, name)
     with open(path, "w") as f:
@@ -213,6 +229,24 @@ class ValidateTests(unittest.TestCase):
     def test_entropy_rows_need_keys(self):
         doc = v6_doc()
         del doc["entropy"][0]["lane"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v7_roundtrip(self):
+        validate(v7_doc(), "doc")
+
+    def test_v7_requires_repack_section(self):
+        doc = v7_doc()
+        del doc["repack"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v6_does_not_require_repack(self):
+        validate(v6_doc(), "doc")  # no repack key at all
+
+    def test_repack_rows_need_keys(self):
+        doc = v7_doc()
+        del doc["repack"][0]["lane"]
         with self.assertRaises(SchemaError):
             validate(doc, "doc")
 
@@ -325,6 +359,34 @@ class DiffCliTests(unittest.TestCase):
             self.assertEqual(r.returncode, 2, r.stdout)
             self.assertIn("entropy", r.stderr)
 
+    def test_v6_baseline_with_v7_new_passes(self):
+        # The first run after the v7 bump diffs a committed v6 baseline
+        # against a freshly regenerated v7 artifact — must not fail.
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v6_doc())
+            new = write_doc(tmp, "new.json", v7_doc())
+            r = run_diff(base, new, "--gate-fastpath", "10")
+            self.assertEqual(r.returncode, 0, r.stderr)
+
+    def test_v7_docs_print_repack_table(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            p = write_doc(tmp, "a.json", v7_doc())
+            r = run_diff(p, p)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            self.assertIn("profile-driven repack", r.stdout)
+            self.assertIn("before", r.stdout)
+            self.assertIn("after", r.stdout)
+
+    def test_missing_repack_lane_is_schema_mismatch(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v7_doc())
+            new_doc = v7_doc()
+            new_doc["repack"] = new_doc["repack"][:1]
+            new = write_doc(tmp, "new.json", new_doc)
+            r = run_diff(base, new)
+            self.assertEqual(r.returncode, 2, r.stdout)
+            self.assertIn("repack", r.stderr)
+
 
 class GateTests(unittest.TestCase):
     def test_regression_beyond_gate_exits_3(self):
@@ -380,7 +442,7 @@ class RoadmapFillTests(unittest.TestCase):
 
     def test_fills_marker_block_with_all_tables(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v6_doc(), self.ROADMAP)
+            r, out = self.run_fill(tmp, v7_doc(), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
@@ -395,6 +457,8 @@ class RoadmapFillTests(unittest.TestCase):
             self.assertIn("| mid50 | 910.0 | 680.0 |", text)
             self.assertIn("Concurrent scan server", text)
             self.assertIn("| 8 | 1400.0 | 120.0 | 5200.0 | 30.0 |", text)
+            self.assertIn("Profile-driven repack", text)
+            self.assertIn("| after | 3808.6 | 900.0 | 1400.0 |", text)
             self.assertIn("tail", text)
 
     def test_v3_doc_fills_without_projection_range(self):
@@ -417,7 +481,7 @@ class RoadmapFillTests(unittest.TestCase):
 
     def test_placeholder_doc_renders_placeholders(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v6_doc(with_values=False), self.ROADMAP)
+            r, out = self.run_fill(tmp, v7_doc(with_values=False), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
@@ -426,6 +490,7 @@ class RoadmapFillTests(unittest.TestCase):
             self.assertIn("projection lanes present but unfilled", text)
             self.assertIn("projection_range lanes present but unfilled", text)
             self.assertIn("concurrent lanes present but unfilled", text)
+            self.assertIn("repack lanes present but unfilled", text)
 
     def test_v5_doc_fills_without_entropy(self):
         with tempfile.TemporaryDirectory() as tmp:
@@ -435,6 +500,15 @@ class RoadmapFillTests(unittest.TestCase):
                 text = f.read()
             self.assertIn("Concurrent scan server", text)
             self.assertNotIn("Entropy lanes", text)
+
+    def test_v6_doc_fills_without_repack(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            r, out = self.run_fill(tmp, v6_doc(), self.ROADMAP)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            with open(out) as f:
+                text = f.read()
+            self.assertIn("Entropy lanes", text)
+            self.assertNotIn("Profile-driven repack", text)
 
     def test_missing_markers_exit_1(self):
         with tempfile.TemporaryDirectory() as tmp:

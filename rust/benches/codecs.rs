@@ -18,7 +18,9 @@
 //!    + `results/read_pipeline.csv` (read-side scaling)
 //!    + `results/projection.csv` (columnar projection lanes)
 //!    + `results/projection_range.csv` (entry-range slice lanes)
-//!    + `results/concurrent.csv` (scan-server waves, cold vs warm cache),
+//!    + `results/concurrent.csv` (scan-server waves, cold vs warm cache)
+//!    + `results/repack.csv` (profile-driven repack: size + read MB/s
+//!      before/after),
 //!  * `BENCH_codecs.json` at the repo root — the machine-readable perf
 //!    trajectory consumed by CI and future PRs (schema documented in
 //!    `docs/BENCHMARKS.md`). Set BENCH_QUICK=1 for a smoke run.
@@ -171,6 +173,19 @@ struct ConcRow {
     mbps: f64,
     /// 99th-percentile per-query latency, milliseconds.
     p99_ms: f64,
+}
+
+struct RepackRow {
+    /// "before" (the zlib-6 production-style source) or "after" (the
+    /// profile-driven rewrite).
+    lane: &'static str,
+    /// On-disk file size in bytes.
+    file_bytes: u64,
+    /// Whole-tree read throughput at 2 decode workers, uncompressed MB/s.
+    read_mbps: f64,
+    /// Hot-subset projection throughput — the access pattern the recorded
+    /// profile describes.
+    hot_mbps: f64,
 }
 
 fn codec_grid(cfg: &BenchConfig) -> Vec<Row> {
@@ -805,6 +820,83 @@ fn concurrent_lanes() -> Vec<ConcRow> {
     out
 }
 
+/// Closing the adaptive loop end-to-end: write a production-style source
+/// (zlib-6, 32 KiB baskets), record an analysis-style profile against it
+/// (the hot kinematics subset scanned repeatedly, everything else once),
+/// `repack_file` under that profile, and measure file size plus full-tree
+/// and hot-subset read throughput on both sides. docs/REPACK.md's
+/// before/after table is this lane.
+fn repack_lanes(cfg: &BenchConfig) -> Vec<RepackRow> {
+    use rootio::coordinator::repack::{repack_file, RepackOptions};
+    use rootio::coordinator::{ParallelTreeReader, ReadAhead};
+    use rootio::rfile::write_tree_serial;
+    use rootio::runtime::ReadFeedback;
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_events = if quick { 1500 } else { 8000 };
+    let hot: [&str; 4] = ["Muon_pt", "Muon_eta", "MET_pt", "nMuon"];
+    let dir = std::env::temp_dir();
+    let src = dir.join(format!("rootio_bench_repack_src_{}.rfil", std::process::id()));
+    let dst = dir.join(format!("rootio_bench_repack_dst_{}.rfil", std::process::id()));
+    let events = nanoaod::events(n_events, 0x9A7);
+    write_tree_serial(
+        &src,
+        "Events",
+        nanoaod::schema(),
+        Settings::new(Algorithm::Zlib, 6),
+        32 * 1024,
+        events.iter().cloned(),
+    )
+    .expect("writing repack bench source");
+
+    // The profile the repack is steered by: nine hot-subset scans plus one
+    // full scan — intensity ~1 on the hot branches, ~0.1 on the rest.
+    let reader = ParallelTreeReader::open(&src, ReadAhead::with_workers(2)).expect("open source");
+    let mut profile = ReadFeedback::new();
+    for _ in 0..9 {
+        let mut proj = reader.project(&hot).expect("hot projection");
+        proj.read_columns().expect("hot scan");
+        profile.record_scan(proj.branch_stats());
+    }
+    let mut full = reader.project_all_range(0..reader.meta.n_entries).expect("full projection");
+    full.read_columns().expect("full scan");
+    profile.record_scan(full.branch_stats());
+    drop(full);
+    drop(reader);
+
+    let opts = RepackOptions { profile: Some(profile), ..RepackOptions::default() };
+    let report = repack_file(&src, &dst, &opts).expect("repack under recorded profile");
+    assert_eq!(report.n_entries_out, n_events as u64, "repack must keep every entry");
+
+    let mut out = Vec::new();
+    for (lane, path) in [("before", &src), ("after", &dst)] {
+        let file_bytes = std::fs::metadata(path).expect("bench file size").len();
+        let reader = ParallelTreeReader::open(path, ReadAhead::with_workers(2)).expect("open");
+        let logical: usize =
+            reader.meta.baskets.iter().map(|l| l.uncompressed_len as usize).sum();
+        let full = bench(&format!("repack-{lane}-full"), logical, cfg, || {
+            reader.read_all_events().expect("full read").len()
+        });
+        let hot_ids: Vec<u32> = hot
+            .iter()
+            .map(|n| reader.branch_id(n).expect("hot branch in nanoaod schema"))
+            .collect();
+        let hot_logical: usize = reader
+            .meta
+            .baskets_for_branches(&hot_ids)
+            .iter()
+            .map(|l| l.uncompressed_len as usize)
+            .sum();
+        let hot_r = bench(&format!("repack-{lane}-hot"), hot_logical, cfg, || {
+            let mut proj = reader.project(&hot).expect("hot projection");
+            proj.read_columns().expect("hot read").len()
+        });
+        out.push(RepackRow { lane, file_bytes, read_mbps: full.mbps(), hot_mbps: hot_r.mbps() });
+    }
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&dst).ok();
+    out
+}
+
 #[allow(clippy::too_many_arguments)] // one slice per schema section, called once
 fn write_json(
     rows: &[Row],
@@ -814,6 +906,7 @@ fn write_json(
     projections: &[ProjRow],
     projection_ranges: &[ProjRangeRow],
     concurrent: &[ConcRow],
+    repack: &[RepackRow],
     quick: bool,
 ) -> std::io::Result<()> {
     let result_items: Vec<String> = rows
@@ -905,8 +998,20 @@ fn write_json(
             )
         })
         .collect();
+    let repack_items: Vec<String> = repack
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"lane\": \"{}\", \"file_bytes\": {}, \"read_MBps\": {}, \"hot_MBps\": {}}}",
+                json_escape(r.lane),
+                r.file_bytes,
+                json_num(r.read_mbps),
+                json_num(r.hot_mbps),
+            )
+        })
+        .collect();
     let doc = format!(
-        "{{\n  \"schema\": \"bench-codecs/v6\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"entropy\": {},\n  \"read_pipeline\": {},\n  \"projection\": {},\n  \"projection_range\": {},\n  \"concurrent\": {}\n}}\n",
+        "{{\n  \"schema\": \"bench-codecs/v7\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"entropy\": {},\n  \"read_pipeline\": {},\n  \"projection\": {},\n  \"projection_range\": {},\n  \"concurrent\": {},\n  \"repack\": {}\n}}\n",
         quick,
         json_array(&result_items, "  "),
         json_array(&speedup_items, "  "),
@@ -915,6 +1020,7 @@ fn write_json(
         json_array(&proj_items, "  "),
         json_array(&proj_range_items, "  "),
         json_array(&conc_items, "  "),
+        json_array(&repack_items, "  "),
     );
     // Land next to Cargo.toml (the repo root) regardless of CWD.
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_codecs.json");
@@ -1044,6 +1150,21 @@ fn main() {
     println!("{}", t7.render());
     t7.save_csv("concurrent").unwrap();
 
-    write_json(&rows, &speedups, &entropy, &reads, &projections, &projection_ranges, &concurrent, quick)
+    // Profile-driven repack: file size + read throughput before/after
+    // rewriting under a recorded analysis-style profile.
+    let repack = repack_lanes(&cfg);
+    let mut t8 = Table::new(&["lane", "file_KB", "full_read_MB_s", "hot_read_MB_s"]);
+    for r in &repack {
+        t8.row(vec![
+            r.lane.into(),
+            format!("{:.1}", r.file_bytes as f64 / 1024.0),
+            format!("{:.1}", r.read_mbps),
+            format!("{:.1}", r.hot_mbps),
+        ]);
+    }
+    println!("{}", t8.render());
+    t8.save_csv("repack").unwrap();
+
+    write_json(&rows, &speedups, &entropy, &reads, &projections, &projection_ranges, &concurrent, &repack, quick)
         .expect("writing BENCH_codecs.json");
 }

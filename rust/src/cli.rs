@@ -9,6 +9,10 @@
 //!                [--feedback reads.profile]
 //! rootio inspect --in f.rfil [--replan analysis|production|balanced|profile
 //!                [--profile reads.profile]]
+//! rootio repack  IN OUT [--profile reads.profile]
+//!                [--use-case analysis|production|balanced]
+//!                [--target-basket-kb N] [--dict-budget BYTES] [--salvage]
+//!                [--workers N]
 //! rootio scrub   --in f.rfil    (exit 0 clean / 1 damaged / 2 unreadable)
 //! rootio fig2|fig3|fig4|fig5|fig6|dict|scaling [--quick]
 //! rootio all-figures [--quick]
@@ -147,7 +151,22 @@ USAGE:
   rootio inspect --in FILE [--replan analysis|production|balanced|profile
                [--workers N] [--profile reads.profile]]
                (--replan profile replans from a recorded access profile:
-                hot branches get decode-speed settings, cold ones ratio)
+                hot branches get decode-speed settings, cold ones ratio;
+                it also prints the exact `rootio repack` invocation that
+                applies the plan)
+  rootio repack IN OUT [--profile reads.profile]
+               [--use-case analysis|production|balanced]
+               [--target-basket-kb N] [--dict-budget BYTES] [--salvage]
+               [--workers N]
+               (profile-driven rewrite — the act step of the adaptive loop:
+                per-branch codec/preconditioner/entropy settings from the
+                recorded profile (or a static --use-case without one),
+                baskets re-chunked toward observed read windows, one shared
+                dictionary trained for small-basket branches. Strict by
+                default: a damaged input fails the rewrite; --salvage keeps
+                the intact rows and reports the dropped entry spans. The
+                output is event-for-event identical to the source — see
+                docs/REPACK.md for the operations book)
   rootio serve --corpus DIR [--workers N] [--max-scans N] [--queue-depth N]
                [--cache-mb N]
                (long-running scan server over every .rfil in DIR: queries
@@ -186,6 +205,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "write" => cmd_write(&args),
         "read" => cmd_read(&args),
         "inspect" => cmd_inspect(&args),
+        "repack" => cmd_repack(&args),
         "scrub" => cmd_scrub(&args),
         "serve" => cmd_serve(&args),
         "bench-concurrent" => cmd_bench_concurrent(&args),
@@ -663,6 +683,73 @@ fn cmd_inspect_replan_profile(
             suggested
         );
     }
+    // The advise → act handoff: print the exact repack invocation that
+    // applies this plan (docs/REPACK.md walks the full loop).
+    let out = path.with_extension("repacked.rfil");
+    println!("\nto apply this plan, rewrite the file with:");
+    println!(
+        "  rootio repack {} {} --profile {}",
+        path.display(),
+        out.display(),
+        profile_path.display()
+    );
+    Ok(0)
+}
+
+/// `rootio repack IN OUT`: apply a recorded access profile (or a static
+/// use case) to an existing file — per-branch settings, re-chunked
+/// baskets, trained dictionary — via
+/// [`repack_file`](crate::coordinator::repack::repack_file).
+fn cmd_repack(args: &Args) -> Result<i32> {
+    use crate::coordinator::repack::{repack_file, RepackOptions};
+    use crate::runtime::ReadFeedback;
+    let mut bare = args.bare.iter();
+    let src = args
+        .flags
+        .get("in")
+        .cloned()
+        .or_else(|| bare.next().cloned())
+        .context("repack needs IN OUT paths (bare args, or --in/--out)")?;
+    let dst = args
+        .flags
+        .get("out")
+        .cloned()
+        .or_else(|| bare.next().cloned())
+        .context("repack needs an output path (second bare arg, or --out)")?;
+    let src = PathBuf::from(src);
+    let dst = PathBuf::from(dst);
+    if src == dst {
+        bail!("repack output must differ from the input");
+    }
+    let mut opts = RepackOptions::default();
+    if let Some(uc) = args.flags.get("use-case") {
+        opts.use_case = match uc.as_str() {
+            "analysis" => UseCase::Analysis,
+            "production" => UseCase::Production,
+            "balanced" => UseCase::Balanced,
+            other => bail!("unknown use case '{other}' (want analysis|production|balanced)"),
+        };
+    }
+    if let Some(fp) = args.flags.get("profile") {
+        opts.profile = Some(ReadFeedback::load(&PathBuf::from(fp))?);
+    }
+    if let Some(kb) = args.flags.get("target-basket-kb") {
+        let kb: usize = kb.parse().context("bad --target-basket-kb")?;
+        if kb == 0 {
+            bail!("--target-basket-kb must be at least 1");
+        }
+        opts.target_basket_bytes = Some(kb * 1024);
+    }
+    if let Some(b) = args.flags.get("dict-budget") {
+        opts.dict_budget = b.parse().context("bad --dict-budget")?;
+    }
+    if let Some(w) = args.flags.get("workers") {
+        opts.workers = w.parse().context("bad --workers")?;
+    }
+    opts.salvage = args.flags.contains_key("salvage");
+    let report = repack_file(&src, &dst, &opts)?;
+    print!("{}", report.render());
+    println!("verify with: rootio read --in {} --workers 2", dst.display());
     Ok(0)
 }
 

@@ -21,6 +21,30 @@ use crate::runtime::analyzer::{analyze_native, bucket_for};
 use crate::runtime::{Analyzer, Features};
 use crate::zstd::EntropyMode;
 
+/// Smallest basket target [`Planner::repack_basket_bytes`] will choose:
+/// below this the per-basket record framing and directory overhead dwarf
+/// any window-alignment win.
+pub const MIN_REPACK_BASKET: usize = 4 * 1024;
+
+/// Largest basket target [`Planner::repack_basket_bytes`] will choose:
+/// beyond this a single boundary basket decodes more excess than any
+/// seek it saves.
+pub const MAX_REPACK_BASKET: usize = 512 * 1024;
+
+/// One branch's complete repack plan, produced by
+/// [`Planner::plan_repack`]: the effective use case (profile-derived or
+/// the planner's static label), the codec/preconditioner/entropy
+/// settings, and the re-chunk basket-size target in bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RepackDecision {
+    /// The use case the settings were decided under.
+    pub use_case: UseCase,
+    /// Codec + level + preconditioner + entropy lane for the branch.
+    pub settings: Settings,
+    /// Target logical basket size (bytes) for re-chunking.
+    pub basket_bytes: usize,
+}
+
 /// The workload profile the user declares (paper §1: production vs
 /// analysis have opposite constraints).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,6 +177,76 @@ impl Planner {
                 }
             }
             UseCase::Balanced => Settings::new(Algorithm::Zstd, 5).with_precond(precond),
+        }
+    }
+
+    /// The per-branch repack decision surface
+    /// ([`repack_file`](crate::coordinator::repack::repack_file) drives
+    /// this once per branch): fold analyzer features, the recorded
+    /// profile's read `intensity`, and its observed per-scan window size
+    /// into codec settings *and* a re-chunk basket target.
+    ///
+    /// * `features` — analyzer features of the branch's data (`None` for
+    ///   branches whose baskets are all below the smallest analyzer
+    ///   bucket; they get the effective use case's static default).
+    /// * `intensity` — observed per-scan read fraction from a recorded
+    ///   [`ReadFeedback`](crate::runtime::ReadFeedback) (`None` when
+    ///   repacking without a profile; the planner's static use case then
+    ///   applies to every branch).
+    /// * `window_bytes` — the profile's observed per-scan decoded window
+    ///   for this branch in logical bytes (`None` when unobserved); see
+    ///   [`Planner::repack_basket_bytes`].
+    /// * `target_override` — a caller-forced basket target
+    ///   (`--target-basket-kb`); floored at 1 KiB, otherwise honored
+    ///   verbatim for every branch.
+    pub fn plan_repack(
+        &self,
+        features: Option<&Features>,
+        intensity: Option<f64>,
+        window_bytes: Option<f64>,
+        target_override: Option<usize>,
+    ) -> RepackDecision {
+        let use_case = match intensity {
+            Some(i) => Self::use_case_for_intensity(i),
+            None => self.use_case,
+        };
+        let settings = match features {
+            Some(f) => Self::decide(use_case, self.stride, f),
+            None => Self::default_settings_for(use_case),
+        };
+        let basket_bytes = match target_override {
+            Some(t) => t.max(1024),
+            None => Self::repack_basket_bytes(use_case, window_bytes),
+        };
+        RepackDecision { use_case, settings, basket_bytes }
+    }
+
+    /// Re-chunk target for one branch: start from the use case's base
+    /// size — small baskets for decode-speed-bound branches (partial
+    /// windows decode less excess), large ones for ratio-bound branches
+    /// (better match windows and amortized entropy tables; cluster sizing
+    /// is the headline knob in "Optimizing ROOT IO For Analysis",
+    /// PAPERS.md) — then, when the profile observed actual reads, pull
+    /// the target toward the observed per-scan window so basket
+    /// boundaries align with what analyses actually decode. Clamped to
+    /// the [`MIN_REPACK_BASKET`]–[`MAX_REPACK_BASKET`] band; ratio-bound
+    /// branches never shrink below their base (their reads are rare by
+    /// definition, so ratio wins the trade).
+    pub fn repack_basket_bytes(use_case: UseCase, window_bytes: Option<f64>) -> usize {
+        let base = match use_case {
+            UseCase::Analysis => 16 * 1024,
+            UseCase::Balanced => 32 * 1024, // DEFAULT_BASKET_SIZE
+            UseCase::Production => 128 * 1024,
+        };
+        let window = match window_bytes {
+            Some(w) if w.is_finite() && w >= 1.0 => w as usize,
+            _ => return base,
+        };
+        match use_case {
+            UseCase::Analysis | UseCase::Balanced => {
+                window.clamp(MIN_REPACK_BASKET, MAX_REPACK_BASKET)
+            }
+            UseCase::Production => window.clamp(base, MAX_REPACK_BASKET),
         }
     }
 
@@ -307,6 +401,71 @@ mod tests {
         assert_eq!(Planner::use_case_for_intensity(0.2), UseCase::Balanced);
         assert_eq!(Planner::use_case_for_intensity(0.5), UseCase::Analysis);
         assert_eq!(Planner::use_case_for_intensity(3.0), UseCase::Analysis);
+    }
+
+    #[test]
+    fn repack_decision_tracks_profile_intensity() {
+        // With a profile, the effective use case comes from intensity and
+        // the settings match plan_from_feedback's row exactly; without
+        // one, the planner's static label applies.
+        let p = Planner::new(UseCase::Production, FeatureSource::Native);
+        let f = feats(6.0, 4.0, 1.0, 0.9);
+        let hot = p.plan_repack(Some(&f), Some(0.9), None, None);
+        assert_eq!(hot.use_case, UseCase::Analysis);
+        assert_eq!(hot.settings, p.plan_from_feedback(&f, 0.9).1);
+        let cold = p.plan_repack(Some(&f), Some(0.0), None, None);
+        assert_eq!(cold.use_case, UseCase::Production);
+        let unprofiled = p.plan_repack(Some(&f), None, None, None);
+        assert_eq!(unprofiled.use_case, UseCase::Production);
+        assert_eq!(unprofiled.settings, p.plan_from_features(&f));
+        // Small-basket branch (no features): the static default of the
+        // effective use case.
+        let small = p.plan_repack(None, Some(0.9), None, None);
+        assert_eq!(small.settings, Planner::default_settings_for(UseCase::Analysis));
+    }
+
+    #[test]
+    fn repack_basket_target_follows_observed_window() {
+        // No window observed: use-case bases, ordered small → large.
+        let a = Planner::repack_basket_bytes(UseCase::Analysis, None);
+        let b = Planner::repack_basket_bytes(UseCase::Balanced, None);
+        let p = Planner::repack_basket_bytes(UseCase::Production, None);
+        assert!(a < b && b < p, "{a} {b} {p}");
+        // Hot branches chunk toward the observed per-scan window, within
+        // the clamp band.
+        assert_eq!(
+            Planner::repack_basket_bytes(UseCase::Analysis, Some(10_000.0)),
+            10_000
+        );
+        assert_eq!(
+            Planner::repack_basket_bytes(UseCase::Analysis, Some(64.0)),
+            MIN_REPACK_BASKET
+        );
+        assert_eq!(
+            Planner::repack_basket_bytes(UseCase::Balanced, Some(1e12)),
+            MAX_REPACK_BASKET
+        );
+        // Ratio-bound branches never shrink below their base.
+        assert_eq!(
+            Planner::repack_basket_bytes(UseCase::Production, Some(64.0)),
+            128 * 1024
+        );
+        // Degenerate windows fall back to the base.
+        assert_eq!(Planner::repack_basket_bytes(UseCase::Analysis, Some(f64::NAN)), a);
+        assert_eq!(Planner::repack_basket_bytes(UseCase::Analysis, Some(0.0)), a);
+    }
+
+    #[test]
+    fn repack_override_wins_and_is_floored() {
+        let p = Planner::new(UseCase::Balanced, FeatureSource::Native);
+        let d = p.plan_repack(None, Some(0.9), Some(1e9), Some(8 * 1024));
+        assert_eq!(d.basket_bytes, 8 * 1024);
+        // The override is honored verbatim above 1 KiB, floored below it.
+        assert_eq!(p.plan_repack(None, None, None, Some(1)).basket_bytes, 1024);
+        assert_eq!(
+            p.plan_repack(None, None, None, Some(4 << 20)).basket_bytes,
+            4 << 20
+        );
     }
 
     #[test]

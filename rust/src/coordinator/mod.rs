@@ -3,8 +3,9 @@
 //! decompression + ordered delivery), columnar projection scans over that
 //! twin (multi-branch single-pass reads with offset-sorted prefetch), the
 //! concurrent serving layer (a shared-worker scan scheduler over a sharded
-//! decoded-basket cache), runtime metrics, and the adaptive compression
-//! planner served by the XLA runtime.
+//! decoded-basket cache), runtime metrics, the adaptive compression
+//! planner served by the XLA runtime, and the profile-driven repack
+//! rewriter that closes the adaptive loop ([`repack`]).
 
 pub mod adaptive;
 pub mod cache;
@@ -12,9 +13,11 @@ pub mod metrics;
 pub mod pipeline;
 pub mod projection;
 pub mod read_pipeline;
+pub mod repack;
 pub mod scheduler;
 
-pub use adaptive::{FeatureSource, Planner, UseCase};
+pub use adaptive::{FeatureSource, Planner, RepackDecision, UseCase};
+pub use repack::{plan_branches, repack_file, BranchPlan, RepackOptions, RepackReport};
 pub use cache::{BasketCache, CacheKey, CacheStats};
 pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{write_tree_parallel, ParallelSink, PipelineConfig};

@@ -1,0 +1,763 @@
+//! `rootio repack` — profile-driven file rewriting, the **act** step that
+//! closes the adaptive loop (observe: [`crate::runtime::ReadFeedback`];
+//! advise: `rootio inspect --replan profile`; act: here).
+//!
+//! The paper's thesis is matching compression to use case; "Optimizing
+//! ROOT IO For Analysis" and "ROOT I/O compression improvements for HEP
+//! analysis" (PAPERS.md) both show that re-matching codecs to *observed*
+//! access patterns and re-chunking basket/cluster sizes are the largest
+//! levers on read throughput and disk footprint. [`repack_file`] applies
+//! both retroactively to an existing RFIL file:
+//!
+//! ```text
+//!  source.rfil ──ParallelTreeReader::scan──▶ decoded baskets (branch-major)
+//!       │                                          │
+//!       │  runtime::analyze_tree (features)        ▼ per-branch Rechunker:
+//!       │  ReadFeedback (intensity, window)   re-split entries toward the
+//!       ▼                                     planned basket target, rebase
+//!  Planner::plan_repack per branch            jagged offsets
+//!  (codec + precond + entropy + basket size)       │
+//!                                                  ▼
+//!  repacked.rfil ◀──ParallelSink (parallel compress, ordered commit)──┘
+//!                  + one trained dictionary record for small-basket data
+//! ```
+//!
+//! Guarantees (property-tested in `rust/tests/integration_repack.rs`):
+//!
+//! * **Exact oracle** — the output is event-for-event identical to the
+//!   source under `read_all_events` / `read_all_events_range`, whatever
+//!   the profile says; repack only moves basket boundaries and codec
+//!   settings, never data.
+//! * **Directory invariants** — per-branch entry spans stay contiguous
+//!   from 0 and the rewritten directory is sorted by
+//!   `(branch_id, basket_index)`; baskets are committed branch-major in
+//!   file order, so an offset-sorted projection plan over the output is a
+//!   monotonic sweep.
+//! * **Version normalization** — the writer stamps the current container
+//!   version, so repacking any accepted input (v2 or v3) emits a v3 file.
+//! * **Honest failure** — a damaged input fails the rewrite by default;
+//!   with [`RepackOptions::salvage`] the intact rows are rewritten and
+//!   every dropped entry span is reported in the
+//!   [`RepackReport::gaps`] (rows are dropped across *all* branches so
+//!   the output stays rectangular).
+//!
+//! ```
+//! use rootio::compression::{Algorithm, Settings};
+//! use rootio::coordinator::repack::{repack_file, RepackOptions};
+//! use rootio::gen::synthetic;
+//! use rootio::rfile::{write_tree_serial, TreeReader};
+//!
+//! let dir = std::env::temp_dir();
+//! let src = dir.join(format!("rootio_doc_repack_src_{}.rfil", std::process::id()));
+//! let dst = dir.join(format!("rootio_doc_repack_dst_{}.rfil", std::process::id()));
+//! let events = synthetic::events(300, 9);
+//! write_tree_serial(&src, "Events", synthetic::schema(),
+//!                   Settings::new(Algorithm::Zlib, 6), 2048, events.iter().cloned()).unwrap();
+//!
+//! // Rewrite with per-branch planned settings and re-chunked baskets …
+//! let report = repack_file(&src, &dst, &RepackOptions::default()).unwrap();
+//! assert_eq!(report.n_entries_out, 300);
+//!
+//! // … and the repacked file is event-for-event identical.
+//! let mut out = TreeReader::open(&dst).unwrap();
+//! assert_eq!(out.read_all_events().unwrap(), events);
+//! std::fs::remove_file(&src).ok();
+//! std::fs::remove_file(&dst).ok();
+//! ```
+
+use crate::compression::Settings;
+use crate::coordinator::adaptive::{FeatureSource, Planner, RepackDecision, UseCase};
+use crate::coordinator::pipeline::{ParallelSink, PipelineConfig};
+use crate::coordinator::read_pipeline::{DamageRecord, ParallelTreeReader, ReadAhead, ScanMode};
+use crate::rfile::basket::{BasketContent, PendingBasket};
+use crate::rfile::branch::{BranchDef, BranchType};
+use crate::rfile::format::RecordKind;
+use crate::rfile::meta::{push_gap, GapSpan, TreeMeta};
+use crate::rfile::writer::{BasketSink, RecordWriter};
+use crate::runtime::analyzer::BUCKETS;
+use crate::runtime::{analyze_tree, ReadFeedback};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Default budget (bytes) for the trained shared dictionary covering
+/// small-basket branches. Matches the analyzer's smallest bucket: a
+/// dictionary larger than the baskets it seeds is wasted.
+pub const DEFAULT_DICT_BUDGET: usize = 4 * 1024;
+
+/// Sample baskets taken per dictionary-eligible branch for training.
+const DICT_SAMPLES_PER_BRANCH: usize = 4;
+
+/// How a repack run is steered. `Default` repacks without a profile under
+/// the `Balanced` use case with automatic basket targets and dictionary
+/// training on.
+#[derive(Debug, Clone)]
+pub struct RepackOptions {
+    /// Static use case applied to every branch when no profile is given
+    /// (with a profile, per-branch intensity overrides this).
+    pub use_case: UseCase,
+    /// Recorded access profile; when present, per-branch settings and
+    /// basket targets follow observed intensity and window sizes.
+    pub profile: Option<ReadFeedback>,
+    /// Force one basket target (bytes) for every branch
+    /// (`--target-basket-kb`); `None` lets the planner derive per-branch
+    /// targets.
+    pub target_basket_bytes: Option<usize>,
+    /// Reader/writer worker threads (0 = automatic).
+    pub workers: usize,
+    /// Rewrite the intact complement of a damaged file instead of
+    /// failing; dropped rows are reported as [`RepackReport::gaps`].
+    pub salvage: bool,
+    /// Trained-dictionary budget in bytes (0 disables training).
+    pub dict_budget: usize,
+}
+
+impl Default for RepackOptions {
+    fn default() -> Self {
+        Self {
+            use_case: UseCase::Balanced,
+            profile: None,
+            target_basket_bytes: None,
+            workers: 0,
+            salvage: false,
+            dict_budget: DEFAULT_DICT_BUDGET,
+        }
+    }
+}
+
+/// One branch's resolved repack plan, as applied to the output file.
+#[derive(Debug, Clone)]
+pub struct BranchPlan {
+    pub branch_id: u32,
+    pub name: String,
+    /// Observed per-scan read intensity (`None` when repacking without a
+    /// profile).
+    pub intensity: Option<f64>,
+    /// Effective use case + settings + basket target from
+    /// [`Planner::plan_repack`].
+    pub decision: RepackDecision,
+    /// Whether this branch's baskets fed the trained dictionary
+    /// (small-basket branches only).
+    pub dict_sampled: bool,
+}
+
+/// What a [`repack_file`] run did: the per-branch plans it applied and
+/// the before/after accounting for the operations book's size table.
+#[derive(Debug, Clone)]
+pub struct RepackReport {
+    pub plans: Vec<BranchPlan>,
+    /// Entries in the source tree.
+    pub n_entries_in: u64,
+    /// Entries in the output tree (less than `n_entries_in` only under
+    /// salvage with damage).
+    pub n_entries_out: u64,
+    pub baskets_in: usize,
+    pub baskets_out: usize,
+    /// Source file size in bytes.
+    pub bytes_in: u64,
+    /// Output file size in bytes.
+    pub bytes_out: u64,
+    /// Trained dictionary size (0 = no dictionary record written).
+    pub dictionary_bytes: usize,
+    /// Entry spans dropped from every branch (salvage mode; empty on a
+    /// clean repack). Sorted and merged.
+    pub gaps: Vec<GapSpan>,
+    /// Per-basket damage reports from the salvage read.
+    pub damage: Vec<DamageRecord>,
+}
+
+impl RepackReport {
+    /// Human-readable summary (the `rootio repack` CLI output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let pct = if self.bytes_in > 0 {
+            100.0 * self.bytes_out as f64 / self.bytes_in as f64
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "repacked {} entries ({} in), {} -> {} baskets, {} -> {} bytes ({:.1}% of source)\n",
+            self.n_entries_out,
+            self.n_entries_in,
+            self.baskets_in,
+            self.baskets_out,
+            self.bytes_in,
+            self.bytes_out,
+            pct
+        ));
+        if self.dictionary_bytes > 0 {
+            let n = self.plans.iter().filter(|p| p.dict_sampled).count();
+            out.push_str(&format!(
+                "dictionary: {} bytes trained from {} small-basket branch(es)\n",
+                self.dictionary_bytes, n
+            ));
+        }
+        out.push_str(&format!(
+            "{:<24} {:>9} {:>11} {:<22} {:>9}\n",
+            "branch", "intensity", "use-case", "settings", "basket-kb"
+        ));
+        for p in &self.plans {
+            let intensity = match p.intensity {
+                Some(i) => format!("{i:.3}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<24} {:>9} {:>11} {:<22} {:>9.1}\n",
+                p.name,
+                intensity,
+                format!("{:?}", p.decision.use_case).to_lowercase(),
+                p.decision.settings.label(),
+                p.decision.basket_bytes as f64 / 1024.0
+            ));
+        }
+        if !self.gaps.is_empty() {
+            let dropped: u64 = self.gaps.iter().map(|g| g.n_entries).sum();
+            out.push_str(&format!(
+                "salvage: dropped {dropped} entries across {} gap(s):\n",
+                self.gaps.len()
+            ));
+            for g in &self.gaps {
+                out.push_str(&format!(
+                    "  entries [{}, {}) lost to damage\n",
+                    g.first_entry,
+                    g.end_entry()
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Resolve every branch's repack plan for a file: analyzer features ×
+/// recorded profile → [`Planner::plan_repack`] per branch. Exposed
+/// separately from [`repack_file`] so `inspect --replan` and the tests
+/// can see the decision surface without rewriting anything.
+pub fn plan_branches(src: &Path, opts: &RepackOptions) -> Result<Vec<BranchPlan>> {
+    if let Some(fb) = &opts.profile {
+        if fb.scans <= 0.0 {
+            bail!("profile records no scans — nothing to weight the plan by");
+        }
+    }
+    let workers = effective_workers(opts.workers);
+    let profiles = analyze_tree(src, workers)?;
+    let planner = Planner::new(opts.use_case, FeatureSource::Native);
+    let mut plans = Vec::with_capacity(profiles.len());
+    for p in &profiles {
+        let intensity = opts
+            .profile
+            .as_ref()
+            .map(|fb| fb.intensity(&p.name, p.logical_bytes));
+        // The observed per-scan decoded window in logical bytes: the
+        // profile's window-stride signal for re-chunk sizing.
+        let window_bytes = opts
+            .profile
+            .as_ref()
+            .and_then(|fb| fb.get(&p.name))
+            .and_then(|b| (b.scans > 0.0).then(|| b.logical_bytes / b.scans));
+        let decision =
+            planner.plan_repack(p.features.as_ref(), intensity, window_bytes, opts.target_basket_bytes);
+        // Small-basket branches (average basket below the smallest
+        // analyzer bucket) feed the shared trained dictionary.
+        let dict_sampled = opts.dict_budget > 0
+            && p.baskets > 0
+            && p.logical_bytes / p.baskets as u64 < BUCKETS[0] as u64;
+        plans.push(BranchPlan {
+            branch_id: p.branch_id,
+            name: p.name.clone(),
+            intensity,
+            decision,
+            dict_sampled,
+        });
+    }
+    Ok(plans)
+}
+
+/// Rewrite `src` into `dst` under the plan [`plan_branches`] resolves:
+/// per-branch codec/preconditioner/entropy settings, re-chunked basket
+/// boundaries, and (when small-basket branches exist) one shared trained
+/// dictionary record. Strict by default — any unreadable basket fails
+/// the rewrite and removes the partial output; with
+/// [`RepackOptions::salvage`] the intact rows are kept and dropped spans
+/// are reported. See the module docs for the guarantees.
+pub fn repack_file(src: &Path, dst: &Path, opts: &RepackOptions) -> Result<RepackReport> {
+    let result = repack_file_inner(src, dst, opts);
+    if result.is_err() {
+        // Never leave a half-written output behind a failed repack.
+        let _ = std::fs::remove_file(dst);
+    }
+    result
+}
+
+fn effective_workers(workers: usize) -> usize {
+    if workers > 0 {
+        workers
+    } else {
+        ReadAhead::default().workers
+    }
+}
+
+fn repack_file_inner(src: &Path, dst: &Path, opts: &RepackOptions) -> Result<RepackReport> {
+    let workers = effective_workers(opts.workers);
+    let reader = ParallelTreeReader::open(src, ReadAhead::with_workers(workers))?;
+    let meta = reader.meta.clone();
+    let plans = plan_branches(src, opts)?;
+
+    // Train the shared dictionary from the small-basket branches' logical
+    // payloads before the writer spins up (workers seed their engines
+    // with it at construction).
+    let dictionary = train_dictionary(&reader, &plans, opts)?;
+
+    let writer = RecordWriter::create(dst)
+        .with_context(|| format!("creating repack output {}", dst.display()))?;
+    let mut wcfg = PipelineConfig::default();
+    if opts.workers > 0 {
+        wcfg.workers = opts.workers;
+        wcfg.queue_depth = 2 * opts.workers;
+    }
+    wcfg.dictionary = dictionary.clone();
+    let mut sink = ParallelSink::new(writer, wcfg);
+
+    let mut chunkers: Vec<Rechunker> = meta
+        .branches
+        .iter()
+        .enumerate()
+        .map(|(b, def)| Rechunker::new(b as u32, def.ty, &plans[b].decision))
+        .collect();
+
+    let mut gaps: Vec<GapSpan> = Vec::new();
+    let mut damage: Vec<DamageRecord> = Vec::new();
+    let n_entries_out;
+
+    if !opts.salvage {
+        // Strict streaming pass: the directory is sorted by
+        // (branch_id, basket_index), so one scan over it delivers
+        // branch-major in entry order and memory stays bounded by the
+        // read-ahead window plus one accumulating basket per branch.
+        let mut scan = reader.scan(meta.baskets.clone())?;
+        while let Some(item) = scan.next_basket() {
+            let (loc, content) = item?;
+            let ch = chunkers
+                .get_mut(loc.branch_id as usize)
+                .with_context(|| format!("basket for unknown branch {}", loc.branch_id))?;
+            if loc.first_entry != ch.source_entries() {
+                bail!(
+                    "branch {}: basket {} starts at entry {}, expected {} — source entry spans \
+                     are not contiguous",
+                    loc.branch_id,
+                    loc.basket_index,
+                    loc.first_entry,
+                    ch.source_entries()
+                );
+            }
+            ch.push_basket(&content, &mut sink)?;
+            scan.recycle(content);
+        }
+        n_entries_out = meta.n_entries;
+    } else {
+        // Salvage pass: decode every column degraded, then drop each
+        // damaged entry span from *every* branch so the output stays
+        // rectangular, and report exactly what was lost.
+        let n = meta.n_entries as usize;
+        let mut keep = vec![true; n];
+        let mut columns = Vec::with_capacity(meta.branches.len());
+        for b in 0..meta.branches.len() as u32 {
+            let col = reader.read_range_salvage(b, 0..meta.n_entries)?;
+            for g in &col.gaps {
+                for e in g.first_entry..g.end_entry() {
+                    keep[e as usize] = false;
+                }
+            }
+            damage.extend(col.damage.iter().cloned());
+            columns.push(col);
+        }
+        let mut i = 0usize;
+        while i < n {
+            if keep[i] {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < n && !keep[i] {
+                i += 1;
+            }
+            push_gap(
+                &mut gaps,
+                GapSpan { first_entry: start as u64, n_entries: (i - start) as u64 },
+            );
+        }
+        n_entries_out = keep.iter().filter(|&&k| k).count() as u64;
+        let mut buf = Vec::new();
+        for (b, col) in columns.iter().enumerate() {
+            let ch = &mut chunkers[b];
+            let mut values = col.values.iter();
+            let mut gi = 0usize;
+            for e in 0..n as u64 {
+                while gi < col.gaps.len() && e >= col.gaps[gi].end_entry() {
+                    gi += 1;
+                }
+                if gi < col.gaps.len() && e >= col.gaps[gi].first_entry {
+                    continue; // lost in this branch: no value to consume
+                }
+                let v = values
+                    .next()
+                    .with_context(|| format!("branch {b}: salvage column ran dry at entry {e}"))?;
+                if keep[e as usize] {
+                    buf.clear();
+                    v.serialize(&mut buf);
+                    ch.push_entry(&buf, &mut sink)?;
+                }
+            }
+            if values.next().is_some() {
+                bail!("branch {b}: salvage column has surplus values");
+            }
+        }
+    }
+
+    for ch in &mut chunkers {
+        ch.finish(&mut sink)?;
+        if ch.written_entries() != n_entries_out {
+            bail!(
+                "branch {}: wrote {} entries, expected {}",
+                ch.branch_id,
+                ch.written_entries(),
+                n_entries_out
+            );
+        }
+    }
+
+    let mut locs = sink.finish()?;
+    locs.sort_by_key(|l| (l.branch_id, l.basket_index));
+    let baskets_out = locs.len();
+    let branches: Vec<BranchDef> = meta
+        .branches
+        .iter()
+        .zip(&plans)
+        .map(|(def, p)| {
+            let mut d = def.clone();
+            d.settings = Some(p.decision.settings);
+            d
+        })
+        .collect();
+    let mut out_meta = TreeMeta {
+        name: meta.name.clone(),
+        branches,
+        default_settings: meta.default_settings,
+        n_entries: n_entries_out,
+        baskets: locs,
+        dictionary_offset: None,
+    };
+    let mut writer = sink.take_writer().context("repack writer missing after finish")?;
+    if !dictionary.is_empty() {
+        let off = writer.append(RecordKind::Dictionary, &dictionary)?;
+        out_meta.dictionary_offset = Some(off);
+    }
+    writer.close(&out_meta)?;
+
+    let bytes_in = std::fs::metadata(src)?.len();
+    let bytes_out = std::fs::metadata(dst)?.len();
+    Ok(RepackReport {
+        plans,
+        n_entries_in: meta.n_entries,
+        n_entries_out,
+        baskets_in: meta.baskets.len(),
+        baskets_out,
+        bytes_in,
+        bytes_out,
+        dictionary_bytes: dictionary.len(),
+        gaps,
+        damage,
+    })
+}
+
+/// Train the shared dictionary from up to [`DICT_SAMPLES_PER_BRANCH`]
+/// leading baskets of every dictionary-eligible branch. Returns empty
+/// when training is disabled or no branch qualifies.
+fn train_dictionary(
+    reader: &ParallelTreeReader,
+    plans: &[BranchPlan],
+    opts: &RepackOptions,
+) -> Result<Vec<u8>> {
+    if opts.dict_budget == 0 || !plans.iter().any(|p| p.dict_sampled) {
+        return Ok(Vec::new());
+    }
+    let mut locs = Vec::new();
+    for p in plans.iter().filter(|p| p.dict_sampled) {
+        locs.extend(
+            reader
+                .baskets_for(p.branch_id)
+                .into_iter()
+                .take(DICT_SAMPLES_PER_BRANCH),
+        );
+    }
+    // One monotonic sweep over the sample baskets.
+    locs.sort_by_key(|l| l.file_offset);
+    let mode = if opts.salvage { ScanMode::Salvage } else { ScanMode::Strict };
+    let mut scan = reader.scan_with_mode(locs, mode)?;
+    let mut samples: Vec<Vec<u8>> = Vec::new();
+    while let Some(item) = scan.next_basket() {
+        let (_, content) = item?;
+        // The training sample is the basket's logical payload exactly as
+        // the engine compresses it: element data, then the big-endian
+        // end-of-entry offsets.
+        let mut sample =
+            Vec::with_capacity(content.data.len() + 4 * content.offsets.len());
+        sample.extend_from_slice(&content.data);
+        for off in content.offsets.iter() {
+            sample.extend_from_slice(&off.to_be_bytes());
+        }
+        samples.push(sample);
+        scan.recycle(content);
+    }
+    Ok(crate::zstd::dict::train_from_corpus(&samples, opts.dict_budget))
+}
+
+/// Per-branch re-chunking accumulator: entries stream in (from decoded
+/// source baskets or salvage columns), baskets of the planned target size
+/// stream out, with jagged end-of-entry offsets rebased to each new
+/// basket's data and entry spans kept contiguous from 0.
+struct Rechunker {
+    branch_id: u32,
+    jagged: bool,
+    elem_size: usize,
+    target: usize,
+    settings: Settings,
+    basket_index: u32,
+    first_entry: u64,
+    n_entries: u32,
+    source_entries: u64,
+    data: Vec<u8>,
+    offsets: Vec<u32>,
+}
+
+impl Rechunker {
+    fn new(branch_id: u32, ty: BranchType, decision: &RepackDecision) -> Self {
+        Self {
+            branch_id,
+            jagged: ty.is_var(),
+            elem_size: ty.elem_size(),
+            target: decision.basket_bytes.max(1),
+            settings: decision.settings,
+            basket_index: 0,
+            first_entry: 0,
+            n_entries: 0,
+            source_entries: 0,
+            data: Vec::new(),
+            offsets: Vec::new(),
+        }
+    }
+
+    /// Source entries consumed so far (for span-continuity checks).
+    fn source_entries(&self) -> u64 {
+        self.source_entries
+    }
+
+    /// Entries flushed into output baskets (valid after [`finish`](Self::finish)).
+    fn written_entries(&self) -> u64 {
+        self.first_entry
+    }
+
+    /// Feed one decoded source basket through, re-splitting at the target.
+    fn push_basket<S: BasketSink>(&mut self, content: &BasketContent, sink: &mut S) -> Result<()> {
+        if self.jagged {
+            let mut prev = 0usize;
+            for off in content.offsets.iter() {
+                let end = *off as usize;
+                if end < prev || end > content.data.len() {
+                    bail!("branch {}: corrupt offset array in decoded basket", self.branch_id);
+                }
+                self.push_entry(&content.data[prev..end], sink)?;
+                prev = end;
+            }
+        } else {
+            // Fixed-width fast path: bulk-copy as many whole entries as
+            // fit before each flush instead of one memcpy per entry.
+            let esz = self.elem_size;
+            let total = content.n_entries as usize;
+            let mut i = 0usize;
+            while i < total {
+                let room = self.target.saturating_sub(self.data.len());
+                let fit = (room / esz).max(1).min(total - i);
+                self.data.extend_from_slice(&content.data[i * esz..(i + fit) * esz]);
+                self.n_entries += fit as u32;
+                self.source_entries += fit as u64;
+                i += fit;
+                if self.data.len() >= self.target {
+                    self.flush(sink)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Append one entry's element bytes; flush when the accumulated
+    /// logical size (data + offset array) reaches the target — the same
+    /// rule [`TreeWriter`](crate::rfile::TreeWriter) flushes under.
+    fn push_entry<S: BasketSink>(&mut self, entry: &[u8], sink: &mut S) -> Result<()> {
+        self.data.extend_from_slice(entry);
+        if self.jagged {
+            self.offsets.push(self.data.len() as u32);
+        }
+        self.n_entries += 1;
+        self.source_entries += 1;
+        if self.data.len() + 4 * self.offsets.len() >= self.target {
+            self.flush(sink)?;
+        }
+        Ok(())
+    }
+
+    fn flush<S: BasketSink>(&mut self, sink: &mut S) -> Result<()> {
+        if self.n_entries == 0 {
+            return Ok(());
+        }
+        let basket = PendingBasket {
+            branch_id: self.branch_id,
+            basket_index: self.basket_index,
+            first_entry: self.first_entry,
+            n_entries: self.n_entries,
+            data: std::mem::take(&mut self.data),
+            offsets: std::mem::take(&mut self.offsets),
+        };
+        self.basket_index += 1;
+        self.first_entry += self.n_entries as u64;
+        self.n_entries = 0;
+        sink.submit(basket, self.settings)
+    }
+
+    /// Flush the final partial basket.
+    fn finish<S: BasketSink>(&mut self, sink: &mut S) -> Result<()> {
+        self.flush(sink)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::Algorithm;
+    use crate::rfile::meta::BasketLoc;
+
+    /// A sink that keeps the submitted baskets for inspection.
+    struct CollectSink(Vec<(PendingBasket, Settings)>);
+
+    impl BasketSink for CollectSink {
+        fn submit(&mut self, basket: PendingBasket, settings: Settings) -> Result<()> {
+            self.0.push((basket, settings));
+            Ok(())
+        }
+        fn finish(&mut self) -> Result<Vec<BasketLoc>> {
+            Ok(Vec::new())
+        }
+    }
+
+    fn decision(basket_bytes: usize) -> RepackDecision {
+        RepackDecision {
+            use_case: UseCase::Balanced,
+            settings: Settings::new(Algorithm::Lz4, 1),
+            basket_bytes,
+        }
+    }
+
+    #[test]
+    fn rechunker_preserves_fixed_entries_and_spans() {
+        let mut sink = CollectSink(Vec::new());
+        let mut ch = Rechunker::new(0, BranchType::F32, &decision(64));
+        // 3 source baskets of 10/7/13 entries → 30 entries of 4 bytes.
+        let mut next = 0u32;
+        for n in [10u32, 7, 13] {
+            let mut data = Vec::new();
+            for _ in 0..n {
+                data.extend_from_slice(&next.to_be_bytes());
+                next += 1;
+            }
+            let content = BasketContent { n_entries: n, data, offsets: Vec::new() };
+            ch.push_basket(&content, &mut sink).unwrap();
+        }
+        ch.finish(&mut sink).unwrap();
+        assert_eq!(ch.source_entries(), 30);
+        assert_eq!(ch.written_entries(), 30);
+        // Spans contiguous from 0, indexes consecutive, data concatenates
+        // back to the source byte stream, every basket hits the target
+        // except possibly the last.
+        let mut expect_first = 0u64;
+        let mut all = Vec::new();
+        for (i, (b, s)) in sink.0.iter().enumerate() {
+            assert_eq!(b.basket_index, i as u32);
+            assert_eq!(b.first_entry, expect_first);
+            assert!(b.offsets.is_empty());
+            assert_eq!(s.algorithm, Algorithm::Lz4);
+            if i + 1 < sink.0.len() {
+                assert!(b.data.len() >= 64, "basket {i} under target");
+            }
+            expect_first += b.n_entries as u64;
+            all.extend_from_slice(&b.data);
+        }
+        assert_eq!(expect_first, 30);
+        let expected: Vec<u8> = (0u32..30).flat_map(|v| v.to_be_bytes()).collect();
+        assert_eq!(all, expected);
+    }
+
+    #[test]
+    fn rechunker_rebases_jagged_offsets() {
+        let mut sink = CollectSink(Vec::new());
+        let mut ch = Rechunker::new(2, BranchType::VarU8, &decision(24));
+        // Two source baskets of jagged entries with varying lengths
+        // (including empty entries).
+        let entries: Vec<Vec<u8>> = vec![
+            vec![1, 2, 3],
+            vec![],
+            vec![4; 10],
+            vec![5],
+            vec![6, 7],
+            vec![],
+            vec![8; 30], // bigger than the whole target on its own
+            vec![9, 10],
+        ];
+        for half in entries.chunks(4) {
+            let mut data = Vec::new();
+            let mut offsets = Vec::new();
+            for e in half {
+                data.extend_from_slice(e);
+                offsets.push(data.len() as u32);
+            }
+            let content =
+                BasketContent { n_entries: half.len() as u32, data, offsets };
+            ch.push_basket(&content, &mut sink).unwrap();
+        }
+        ch.finish(&mut sink).unwrap();
+        assert_eq!(ch.written_entries(), entries.len() as u64);
+        // Reassemble the entries from the rewritten baskets: offsets must
+        // be basket-relative ends in order, and the entry bytes identical.
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        let mut expect_first = 0u64;
+        for (i, (b, _)) in sink.0.iter().enumerate() {
+            assert_eq!(b.basket_index, i as u32);
+            assert_eq!(b.first_entry, expect_first);
+            assert_eq!(b.offsets.len(), b.n_entries as usize);
+            let mut prev = 0usize;
+            for &end in &b.offsets {
+                let end = end as usize;
+                assert!(end >= prev && end <= b.data.len());
+                got.push(b.data[prev..end].to_vec());
+                prev = end;
+            }
+            assert_eq!(prev, b.data.len(), "basket {i} has trailing bytes");
+            expect_first += b.n_entries as u64;
+        }
+        assert_eq!(got, entries);
+    }
+
+    #[test]
+    fn rechunker_flush_rule_counts_offset_array() {
+        // 8 one-byte jagged entries with a 16-byte target: the offset
+        // array (4 bytes/entry) must count toward the flush rule, so
+        // baskets split well before 16 data bytes accumulate.
+        let mut sink = CollectSink(Vec::new());
+        let mut ch = Rechunker::new(0, BranchType::VarU8, &decision(16));
+        for i in 0u8..8 {
+            ch.push_entry(&[i], &mut sink).unwrap();
+        }
+        ch.finish(&mut sink).unwrap();
+        assert!(sink.0.len() >= 2, "offset array ignored by flush rule");
+        for (b, _) in &sink.0 {
+            assert!(b.data.len() + 4 * b.offsets.len() <= 16 + 5);
+        }
+    }
+}

@@ -29,6 +29,11 @@
 //! * Stats-fed replanning: [`runtime::ReadFeedback`] +
 //!   [`coordinator::Planner::plan_from_feedback`] — replan compression
 //!   from a recorded access profile.
+//! * Profile-driven repack: [`coordinator::repack_file`] +
+//!   [`coordinator::Planner::plan_repack`] — rewrite a file under a
+//!   recorded profile (per-branch codecs, re-chunked baskets, trained
+//!   dictionary), closing the adaptive loop; event-for-event identical
+//!   output.
 //! * Concurrent serving: [`coordinator::ScanServer`] — many projection /
 //!   entry-range queries over a corpus through one shared worker pool,
 //!   with a sharded LRU cache of decoded baskets

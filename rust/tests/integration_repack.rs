@@ -1,0 +1,368 @@
+//! Property suite for `rootio repack` (`coordinator::repack`): the
+//! profile-driven rewriter must be an *exact* transformation — whatever
+//! the recorded profile says, the output file is event-for-event
+//! identical to the source — while re-chunked directories keep every
+//! invariant the readers rely on, dictionaries round-trip, and damaged
+//! inputs fail strict / degrade honestly under salvage.
+//!
+//! Runs on the shared testkit: `PROP_SEED=0x…` reproduces a failure,
+//! `PROP_ROUNDS=n` caps the grid sample (see `common/mod.rs`).
+
+mod common;
+
+use rootio::compression::{Algorithm, Settings};
+use rootio::coordinator::repack::{plan_branches, repack_file, RepackOptions};
+use rootio::coordinator::{BranchReadStats, ParallelTreeReader, ReadAhead, UseCase};
+use rootio::gen::synthetic;
+use rootio::rfile::{TreeReader, Value};
+use rootio::runtime::ReadFeedback;
+
+/// Flip one byte in the record header varints of `victim` — deterministic
+/// frame-level damage that every codec lane detects (same technique as
+/// the read-pipeline salvage suite).
+fn corrupt_basket(path: &std::path::Path, file_offset: u64) {
+    let mut bytes = std::fs::read(path).unwrap();
+    bytes[file_offset as usize + 5] ^= 0x3F;
+    std::fs::write(path, bytes).unwrap();
+}
+
+/// The tentpole oracle: repack across the codec × preconditioner grid
+/// under *random* recorded profiles (random hot subsets, scan counts,
+/// generation decay, use cases, and basket overrides) and demand the
+/// output reads event-for-event identical — full scans and random entry
+/// windows, serial and parallel readers.
+#[test]
+fn repack_is_event_identical_across_grid_with_random_profiles() {
+    let (mut rng, _guard) = common::seeded(0x9e0c_11aa_2026_0808);
+    let settings = common::sample(common::grid(), common::prop_rounds(10));
+    let n_events = 300usize;
+    for (i, s) in settings.iter().enumerate() {
+        let src = common::tmp_path("repack", &format!("grid_src_{i}"));
+        let dst = common::tmp_path("repack", &format!("grid_dst_{i}"));
+        let seed = rng.next_u64();
+        let meta = common::write_sample_tree(&src, *s, n_events, 1024, seed);
+        let events = synthetic::events(n_events, seed);
+
+        // A random access profile: some branches hot, some cold, recorded
+        // over a few (possibly decayed) scans.
+        let mut profile = ReadFeedback::new();
+        for _ in 0..rng.range(1, 3) {
+            let mut stats = Vec::new();
+            for (b, def) in meta.branches.iter().enumerate() {
+                if !rng.chance(0.6) {
+                    continue;
+                }
+                let stored: u64 = meta
+                    .baskets
+                    .iter()
+                    .filter(|l| l.branch_id == b as u32)
+                    .map(|l| l.uncompressed_len as u64)
+                    .sum();
+                stats.push(BranchReadStats {
+                    branch_id: b as u32,
+                    name: def.name.clone(),
+                    baskets: rng.range(1, 6) as u64,
+                    entries: rng.range(1, n_events) as u64,
+                    logical_bytes: (stored as f64 * rng.f64() * 1.5) as u64,
+                    compressed_bytes: 1 + rng.below(10_000),
+                    ..BranchReadStats::default()
+                });
+            }
+            profile.record_scan(&stats);
+            if rng.chance(0.3) {
+                profile.advance_generation();
+            }
+        }
+
+        let mut opts = RepackOptions {
+            profile: Some(profile),
+            workers: 1 + rng.below(3) as usize,
+            ..RepackOptions::default()
+        };
+        opts.use_case = [UseCase::Analysis, UseCase::Balanced, UseCase::Production]
+            [rng.below(3) as usize];
+        if rng.chance(0.25) {
+            opts.target_basket_bytes = Some(1usize << (10 + rng.below(4)));
+        }
+
+        let report = repack_file(&src, &dst, &opts).unwrap();
+        assert_eq!(report.n_entries_in, n_events as u64, "under {s:?}");
+        assert_eq!(report.n_entries_out, n_events as u64, "under {s:?}");
+        assert!(report.gaps.is_empty() && report.damage.is_empty());
+
+        let mut serial = TreeReader::open(&dst).unwrap();
+        assert_eq!(serial.read_all_events().unwrap(), events, "serial read under {s:?}");
+
+        let par = ParallelTreeReader::open(&dst, ReadAhead::with_workers(2)).unwrap();
+        assert_eq!(par.read_all_events().unwrap(), events, "parallel read under {s:?}");
+        assert!(
+            par.meta.branches.iter().all(|d| d.settings.is_some()),
+            "repack stamps planned settings on every branch"
+        );
+
+        // Random entry windows decode identically from the re-chunked file.
+        for _ in 0..3 {
+            let lo = rng.below(n_events as u64 + 1);
+            let hi = lo + rng.below(n_events as u64 - lo + 1);
+            let got = par.read_all_events_range(lo..hi).unwrap();
+            assert_eq!(
+                got,
+                events[lo as usize..hi as usize].to_vec(),
+                "window {lo}..{hi} under {s:?}"
+            );
+        }
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+}
+
+/// Re-chunking must preserve every directory invariant the readers
+/// assume: spans contiguous from 0 per branch, `(branch_id,
+/// basket_index)` sort order, and strictly increasing file offsets (so
+/// an offset-sorted projection plan over the output is one monotonic
+/// sweep). A forced `--target-basket-kb` style override must be hit by
+/// every basket except each branch's last.
+#[test]
+fn repack_rechunks_with_contiguous_spans_and_monotonic_sweep() {
+    let src = common::tmp_path("repack", "chunk_src");
+    let dst = common::tmp_path("repack", "chunk_dst");
+    let n_events = 600usize;
+    let seed = 0x51ab;
+    common::write_sample_tree(&src, Settings::new(Algorithm::Zstd, 5), n_events, 512, seed);
+
+    let target = 8 * 1024usize;
+    let opts = RepackOptions {
+        target_basket_bytes: Some(target),
+        ..RepackOptions::default()
+    };
+    let report = repack_file(&src, &dst, &opts).unwrap();
+    assert!(
+        report.baskets_out < report.baskets_in,
+        "coalescing 512-byte baskets toward 8 KiB must shrink the directory \
+         ({} -> {})",
+        report.baskets_in,
+        report.baskets_out
+    );
+
+    let out = ParallelTreeReader::open(&dst, ReadAhead::with_workers(2)).unwrap();
+    let meta = &out.meta;
+    assert_eq!(meta.baskets.len(), report.baskets_out);
+    for w in meta.baskets.windows(2) {
+        assert!(
+            (w[0].branch_id, w[0].basket_index) < (w[1].branch_id, w[1].basket_index),
+            "directory must stay sorted by (branch_id, basket_index)"
+        );
+        assert!(
+            w[0].file_offset < w[1].file_offset,
+            "branch-major directory order must be file order (monotonic sweep)"
+        );
+    }
+    for b in 0..meta.branches.len() as u32 {
+        let locs = out.baskets_for(b);
+        let mut next = 0u64;
+        for (i, l) in locs.iter().enumerate() {
+            assert_eq!(l.basket_index, i as u32, "branch {b}: basket indexes consecutive");
+            assert_eq!(l.first_entry, next, "branch {b}: entry spans contiguous");
+            next += l.n_entries as u64;
+            if i + 1 < locs.len() {
+                assert!(
+                    l.uncompressed_len as usize >= target,
+                    "branch {b} basket {i}: {} logical bytes under the {target}-byte target",
+                    l.uncompressed_len
+                );
+            }
+        }
+        assert_eq!(next, meta.n_entries, "branch {b}: spans cover the tree");
+    }
+
+    let events = synthetic::events(n_events, seed);
+    assert_eq!(out.read_all_events().unwrap(), events);
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&dst).ok();
+}
+
+/// Small-basket branches feed one shared trained dictionary: the report
+/// accounts for it, the output file carries the dictionary record, and
+/// dictionary-seeded baskets round-trip exactly.
+#[test]
+fn repack_trains_a_shared_dictionary_for_small_basket_branches() {
+    let src = common::tmp_path("repack", "dict_src");
+    let dst = common::tmp_path("repack", "dict_dst");
+    let n_events = 400usize;
+    let seed = 0xd1c7;
+    // 512-byte source baskets: every branch averages below the smallest
+    // analyzer bucket, so every branch is dictionary-eligible.
+    common::write_sample_tree(&src, Settings::new(Algorithm::Zstd, 5), n_events, 512, seed);
+
+    let report = repack_file(&src, &dst, &RepackOptions::default()).unwrap();
+    assert!(report.dictionary_bytes > 0, "small-basket corpus must train a dictionary");
+    assert!(report.plans.iter().any(|p| p.dict_sampled));
+
+    let mut out = TreeReader::open(&dst).unwrap();
+    assert_eq!(out.dictionary().len(), report.dictionary_bytes);
+    assert_eq!(out.read_all_events().unwrap(), synthetic::events(n_events, seed));
+
+    // Disabling the budget must suppress the record entirely.
+    let opts = RepackOptions { dict_budget: 0, ..RepackOptions::default() };
+    let report = repack_file(&src, &dst, &opts).unwrap();
+    assert_eq!(report.dictionary_bytes, 0);
+    assert!(!report.plans.iter().any(|p| p.dict_sampled));
+    let mut out = TreeReader::open(&dst).unwrap();
+    assert!(out.dictionary().is_empty());
+    assert_eq!(out.read_all_events().unwrap(), synthetic::events(n_events, seed));
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&dst).ok();
+}
+
+/// Strict repack of a damaged file must fail — and must not leave a
+/// half-written output behind.
+#[test]
+fn repack_strict_fails_on_damage_and_leaves_no_output() {
+    let src = common::tmp_path("repack", "strict_src");
+    let dst = common::tmp_path("repack", "strict_dst");
+    let n_events = 500usize;
+    let meta =
+        common::write_sample_tree(&src, Settings::new(Algorithm::Lz4, 9), n_events, 1024, 0xdead);
+    let victim = meta
+        .baskets
+        .iter()
+        .find(|l| l.branch_id == 2 && l.basket_index == 1)
+        .expect("fixture has a second basket on branch 2");
+    corrupt_basket(&src, victim.file_offset);
+
+    assert!(repack_file(&src, &dst, &RepackOptions::default()).is_err());
+    assert!(!dst.exists(), "failed repack must remove its partial output");
+    std::fs::remove_file(&src).ok();
+}
+
+/// Salvage repack of the same damage keeps the intact complement: the
+/// damaged span is dropped from *every* branch (the output stays
+/// rectangular), reported exactly in the gaps, and the surviving rows
+/// read back identical to the source complement.
+#[test]
+fn repack_salvage_drops_damaged_spans_and_reports_gaps() {
+    let src = common::tmp_path("repack", "salvage_src");
+    let dst = common::tmp_path("repack", "salvage_dst");
+    let n_events = 500usize;
+    let seed = 0xdead;
+    let meta =
+        common::write_sample_tree(&src, Settings::new(Algorithm::Lz4, 9), n_events, 1024, seed);
+    let victim = *meta
+        .baskets
+        .iter()
+        .find(|l| l.branch_id == 2 && l.basket_index == 1)
+        .expect("fixture has a second basket on branch 2");
+    corrupt_basket(&src, victim.file_offset);
+
+    let opts = RepackOptions { salvage: true, ..RepackOptions::default() };
+    let report = repack_file(&src, &dst, &opts).unwrap();
+    assert!(!report.damage.is_empty(), "salvage must report the damaged basket");
+    assert_eq!(report.gaps.len(), 1, "exactly the victim's span is lost: {:?}", report.gaps);
+    let gap = &report.gaps[0];
+    assert_eq!(gap.first_entry, victim.first_entry);
+    assert_eq!(gap.n_entries, victim.n_entries as u64);
+    assert_eq!(report.n_entries_in, n_events as u64);
+    assert_eq!(report.n_entries_out, n_events as u64 - victim.n_entries as u64);
+
+    // Every surviving row equals the source row, across all branches.
+    let events = synthetic::events(n_events, seed);
+    let expected: Vec<Vec<Value>> = events
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| {
+            let e = *i as u64;
+            e < gap.first_entry || e >= gap.end_entry()
+        })
+        .map(|(_, row)| row.clone())
+        .collect();
+    let mut out = TreeReader::open(&dst).unwrap();
+    assert_eq!(out.read_all_events().unwrap(), expected);
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&dst).ok();
+}
+
+/// The decision surface end-to-end: a recorded profile pushes hot
+/// branches onto the decode-speed lane (LZ4 family, window-sized
+/// baskets) and cold branches onto the ratio lane (ZSTD-high / LZMA,
+/// large baskets) — and applying the plan still rewrites exactly.
+#[test]
+fn profile_steers_branch_lanes_and_basket_targets() {
+    let src = common::tmp_path("repack", "steer_src");
+    let dst = common::tmp_path("repack", "steer_dst");
+    let n_events = 2500usize;
+    let seed = 0x7001;
+    // 8 KiB source baskets so every wide branch clears the analyzer's
+    // smallest feature bucket.
+    let meta =
+        common::write_sample_tree(&src, Settings::new(Algorithm::Zlib, 6), n_events, 8192, seed);
+
+    let hot = "energy";
+    let hot_id = meta.branches.iter().position(|d| d.name == hot).unwrap() as u32;
+    let stored: u64 = meta
+        .baskets
+        .iter()
+        .filter(|l| l.branch_id == hot_id)
+        .map(|l| l.uncompressed_len as u64)
+        .sum();
+    // One scan that decoded the hot branch in full and nothing else.
+    let mut profile = ReadFeedback::new();
+    profile.record_scan(&[BranchReadStats {
+        branch_id: hot_id,
+        name: hot.into(),
+        baskets: 3,
+        entries: n_events as u64,
+        logical_bytes: stored,
+        compressed_bytes: stored / 2,
+        ..BranchReadStats::default()
+    }]);
+
+    let opts = RepackOptions { profile: Some(profile), ..RepackOptions::default() };
+    let plans = plan_branches(&src, &opts).unwrap();
+
+    let hot_plan = plans.iter().find(|p| p.name == hot).unwrap();
+    assert!((hot_plan.intensity.unwrap() - 1.0).abs() < 1e-9, "fully-read branch has intensity 1");
+    assert_eq!(hot_plan.decision.use_case, UseCase::Analysis);
+    assert_eq!(
+        hot_plan.decision.settings.algorithm,
+        Algorithm::Lz4,
+        "hot branches ride the decode-speed lane, got {:?}",
+        hot_plan.decision.settings
+    );
+    // The observed per-scan window (here: the whole branch) becomes the
+    // re-chunk target.
+    assert_eq!(hot_plan.decision.basket_bytes, stored as usize);
+
+    let cold_plan = plans.iter().find(|p| p.name == "event_id").unwrap();
+    assert_eq!(cold_plan.intensity, Some(0.0), "untouched branch has intensity 0");
+    assert_eq!(cold_plan.decision.use_case, UseCase::Production);
+    assert!(
+        matches!(cold_plan.decision.settings.algorithm, Algorithm::Zstd | Algorithm::Lzma),
+        "cold branches ride a ratio-bound lane, got {:?}",
+        cold_plan.decision.settings
+    );
+    assert!(cold_plan.decision.basket_bytes >= 128 * 1024, "ratio lane keeps large baskets");
+
+    // Applying the plan is still an exact rewrite.
+    let report = repack_file(&src, &dst, &opts).unwrap();
+    let applied = report.plans.iter().find(|p| p.name == hot).unwrap();
+    assert_eq!(applied.decision.settings.algorithm, Algorithm::Lz4);
+    let mut out = TreeReader::open(&dst).unwrap();
+    assert_eq!(out.read_all_events().unwrap(), synthetic::events(n_events, seed));
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&dst).ok();
+}
+
+/// A profile with no recorded scans carries no signal; repack must say so
+/// instead of silently planning from nothing.
+#[test]
+fn repack_rejects_an_empty_profile() {
+    let src = common::tmp_path("repack", "empty_profile_src");
+    common::write_sample_tree(&src, Settings::new(Algorithm::Lz4, 1), 50, 1024, 0x11);
+    let opts = RepackOptions {
+        profile: Some(ReadFeedback::new()),
+        ..RepackOptions::default()
+    };
+    let err = plan_branches(&src, &opts).unwrap_err();
+    assert!(err.to_string().contains("no scans"), "got: {err}");
+    std::fs::remove_file(&src).ok();
+}
