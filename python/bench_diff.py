@@ -21,6 +21,9 @@ bench job just regenerated is NEW. Prints
     aggregate MB/s and p99 latency, cold vs warm decoded-basket cache),
   * the `repack` table of NEW (file size + full/hot-subset read MB/s
     before and after a profile-driven `rootio repack`),
+  * the `io_backends` table of NEW (physical reads per full sweep for
+    the pread/coalesced/mmap backends, plus the remote-sim latency x
+    prefetch-depth throughput surface),
   * per-(payload, setting) compress/decompress throughput deltas vs the
     baseline where both sides have real numbers.
 
@@ -53,6 +56,7 @@ KNOWN_SCHEMAS = (
     "bench-codecs/v5",
     "bench-codecs/v6",
     "bench-codecs/v7",
+    "bench-codecs/v8",
 )
 
 
@@ -100,6 +104,8 @@ def validate(doc, path):
         required.append(("entropy", ("lane", "payload")))
     if version >= 7:
         required.append(("repack", ("lane",)))
+    if version >= 8:
+        required.append(("io_backends", ("backend", "latency_ms", "depth")))
     for key, row_keys in required:
         rows = doc.get(key)
         if not isinstance(rows, list):
@@ -229,6 +235,23 @@ def repack_table(doc, title):
     return out
 
 
+def io_backends_table(doc, title):
+    rows = doc.get("io_backends") or []
+    if not rows:
+        return {}
+    print(f"\n== {title}: I/O backends ({len(rows)} lanes) ==")
+    print(f"  {'backend':<12} {'lat ms':>7} {'depth':>6} {'reads':>8} {'read':>9}")
+    out = {}
+    for r in rows:
+        backend = r.get("backend", "?")
+        lat, depth = r.get("latency_ms", "?"), r.get("depth", "?")
+        reads = r.get("reads")
+        reads_s = f"{reads:8d}" if isinstance(reads, int) else f"{'-':>8}"
+        print(f"  {backend:<12} {lat!s:>7} {depth!s:>6} {reads_s} {fmt_mbps(r.get('MBps'))}")
+        out[(backend, lat, depth)] = r.get("MBps")
+    return out
+
+
 def check_lane_coverage(base_lanes, new_lanes, what):
     """A lane in the committed baseline that the regenerated file no longer
     produces means the bench and its baseline have drifted apart — fail."""
@@ -287,6 +310,7 @@ def main(argv=None):
     new_prange = projection_range_table(new, "current run")
     new_conc = concurrent_table(new, "current run")
     new_repack = repack_table(new, "current run")
+    new_io = io_backends_table(new, "current run")
 
     base_spd = speedup_table(base, "committed baseline")
     base_entropy = entropy_table(base, "committed baseline")
@@ -295,6 +319,7 @@ def main(argv=None):
     base_prange = projection_range_table(base, "committed baseline")
     base_conc = concurrent_table(base, "committed baseline")
     base_repack = repack_table(base, "committed baseline")
+    base_io = io_backends_table(base, "committed baseline")
     check_lane_coverage(base_spd, new_spd, "fast_path_speedups")
     check_lane_coverage(base_entropy, new_entropy, "entropy")
     check_lane_coverage(base_read, new_read, "read_pipeline")
@@ -302,6 +327,7 @@ def main(argv=None):
     check_lane_coverage(base_prange, new_prange, "projection_range")
     check_lane_coverage(base_conc, new_conc, "concurrent")
     check_lane_coverage(base_repack, new_repack, "repack")
+    check_lane_coverage(base_io, new_io, "io_backends")
 
     common = [k for k in new_spd if k in base_spd
               and isinstance(new_spd[k], (int, float))
@@ -367,6 +393,15 @@ def main(argv=None):
             (bf, br, bh), (nf, nr, nh) = base_repack[k], new_repack[k]
             print(f"  {k:<8} size {bf / 1024:8.1f} -> {nf / 1024:8.1f} KB  "
                   f"full {br:8.1f} -> {nr:8.1f}  hot {bh:8.1f} -> {nh:8.1f} MB/s")
+
+    common = [k for k in new_io if k in base_io
+              and isinstance(new_io[k], (int, float))
+              and isinstance(base_io[k], (int, float))]
+    if common:
+        print("\n== I/O backend drift vs baseline ==")
+        for k in sorted(common):
+            print(f"  {k[0]:<12} lat={k[1]!s:>3}ms depth={k[2]!s:>3} "
+                  f"{base_io[k]:8.1f} -> {new_io[k]:8.1f} MB/s")
 
     base_rows = {result_key(r): r for r in (base.get("results") or [])}
     new_rows = {result_key(r): r for r in (new.get("results") or [])}

@@ -8,8 +8,8 @@ The PR-1/PR-2/PR-3 perf-trajectory sections of ROADMAP.md were authored in
 containers without a Rust toolchain, so their speedup claims point at the
 bench artifact instead of quoting numbers. This script renders the
 artifact's `fast_path_speedups`, `entropy`, `read_pipeline`, `projection`,
-`projection_range`, `concurrent`, and `repack` sections as markdown tables
-into the block delimited by
+`projection_range`, `concurrent`, `repack`, and `io_backends` sections as
+markdown tables into the block delimited by
 
     <!-- BENCH_NUMBERS_BEGIN -->
     ...
@@ -182,6 +182,26 @@ def render(doc):
                 )
         else:
             lines.append("*(repack lanes present but unfilled)*")
+    ios = doc.get("io_backends") or []
+    have_ios = [r for r in ios if isinstance(r.get("MBps"), (int, float))]
+    if ios:
+        lines.append("")
+        lines.append("I/O backends (physical reads + uncompressed MB/s for one "
+                     "full-tree sweep; remote-sim lanes add a fixed per-request "
+                     "latency, hidden by prefetch depth):")
+        lines.append("")
+        if have_ios:
+            lines.append("| backend | latency ms | depth | reads | read MB/s |")
+            lines.append("|---|---:|---:|---:|---:|")
+            for r in ios:
+                reads = r.get("reads")
+                reads_s = str(reads) if isinstance(reads, int) else "—"
+                lines.append(
+                    f"| {r.get('backend','?')} | {r.get('latency_ms','?')} | "
+                    f"{r.get('depth','?')} | {reads_s} | {fmt(r.get('MBps'))} |"
+                )
+        else:
+            lines.append("*(io_backends lanes present but unfilled)*")
     return "\n".join(lines)
 
 

@@ -1,11 +1,11 @@
 #!/usr/bin/env python3
 """Self-tests for the bench tooling contract CI leans on:
 
-  * `bench_diff.py` — schema validation (v1..v7), lane-coverage checks,
+  * `bench_diff.py` — schema validation (v1..v8), lane-coverage checks,
     and the `--gate-fastpath` perf gate with its exit codes (0 ok, 2
     schema mismatch, 3 perf regression);
   * `roadmap_fill.py` — marker-block replacement and table rendering for
-    every section of a v7 document.
+    every section of a v8 document.
 
 These run in the CI `python` job so bench-tooling drift fails the build
 even when no Rust toolchain is in play. Run:
@@ -137,6 +137,28 @@ def v7_doc(speedup=3.0, with_values=True):
     return doc
 
 
+def v8_doc(speedup=3.0, with_values=True):
+    """A minimal well-formed bench-codecs/v8 document (v7 + io_backends)."""
+    def mbps(v):
+        return v if with_values else None
+
+    doc = v7_doc(speedup=speedup, with_values=with_values)
+    doc["schema"] = "bench-codecs/v8"
+    doc["io_backends"] = [
+        {"backend": "pread", "latency_ms": 0, "depth": 8,
+         "reads": 96 if with_values else None, "MBps": mbps(800.0)},
+        {"backend": "coalesced", "latency_ms": 0, "depth": 8,
+         "reads": 3 if with_values else None, "MBps": mbps(950.0)},
+        {"backend": "mmap", "latency_ms": 0, "depth": 8,
+         "reads": 5 if with_values else None, "MBps": mbps(980.0)},
+        {"backend": "remote-sim", "latency_ms": 10, "depth": 2,
+         "reads": 96 if with_values else None, "MBps": mbps(12.0)},
+        {"backend": "remote-sim", "latency_ms": 10, "depth": 32,
+         "reads": 96 if with_values else None, "MBps": mbps(310.0)},
+    ]
+    return doc
+
+
 def write_doc(tmp, name, doc):
     path = os.path.join(tmp, name)
     with open(path, "w") as f:
@@ -247,6 +269,24 @@ class ValidateTests(unittest.TestCase):
     def test_repack_rows_need_keys(self):
         doc = v7_doc()
         del doc["repack"][0]["lane"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v8_roundtrip(self):
+        validate(v8_doc(), "doc")
+
+    def test_v8_requires_io_backends_section(self):
+        doc = v8_doc()
+        del doc["io_backends"]
+        with self.assertRaises(SchemaError):
+            validate(doc, "doc")
+
+    def test_v7_does_not_require_io_backends(self):
+        validate(v7_doc(), "doc")  # no io_backends key at all
+
+    def test_io_backends_rows_need_keys(self):
+        doc = v8_doc()
+        del doc["io_backends"][0]["depth"]
         with self.assertRaises(SchemaError):
             validate(doc, "doc")
 
@@ -387,6 +427,34 @@ class DiffCliTests(unittest.TestCase):
             self.assertEqual(r.returncode, 2, r.stdout)
             self.assertIn("repack", r.stderr)
 
+    def test_v7_baseline_with_v8_new_passes(self):
+        # The first run after the v8 bump diffs a committed v7 baseline
+        # against a freshly regenerated v8 artifact — must not fail.
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v7_doc())
+            new = write_doc(tmp, "new.json", v8_doc())
+            r = run_diff(base, new, "--gate-fastpath", "10")
+            self.assertEqual(r.returncode, 0, r.stderr)
+
+    def test_v8_docs_print_io_backends_table(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            p = write_doc(tmp, "a.json", v8_doc())
+            r = run_diff(p, p)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            self.assertIn("I/O backends", r.stdout)
+            self.assertIn("coalesced", r.stdout)
+            self.assertIn("remote-sim", r.stdout)
+
+    def test_missing_io_backends_lane_is_schema_mismatch(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_doc(tmp, "base.json", v8_doc())
+            new_doc = v8_doc()
+            new_doc["io_backends"] = new_doc["io_backends"][:2]
+            new = write_doc(tmp, "new.json", new_doc)
+            r = run_diff(base, new)
+            self.assertEqual(r.returncode, 2, r.stdout)
+            self.assertIn("io_backends", r.stderr)
+
 
 class GateTests(unittest.TestCase):
     def test_regression_beyond_gate_exits_3(self):
@@ -442,7 +510,7 @@ class RoadmapFillTests(unittest.TestCase):
 
     def test_fills_marker_block_with_all_tables(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v7_doc(), self.ROADMAP)
+            r, out = self.run_fill(tmp, v8_doc(), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
@@ -459,6 +527,9 @@ class RoadmapFillTests(unittest.TestCase):
             self.assertIn("| 8 | 1400.0 | 120.0 | 5200.0 | 30.0 |", text)
             self.assertIn("Profile-driven repack", text)
             self.assertIn("| after | 3808.6 | 900.0 | 1400.0 |", text)
+            self.assertIn("I/O backends", text)
+            self.assertIn("| coalesced | 0 | 8 | 3 | 950.0 |", text)
+            self.assertIn("| remote-sim | 10 | 32 | 96 | 310.0 |", text)
             self.assertIn("tail", text)
 
     def test_v3_doc_fills_without_projection_range(self):
@@ -481,7 +552,7 @@ class RoadmapFillTests(unittest.TestCase):
 
     def test_placeholder_doc_renders_placeholders(self):
         with tempfile.TemporaryDirectory() as tmp:
-            r, out = self.run_fill(tmp, v7_doc(with_values=False), self.ROADMAP)
+            r, out = self.run_fill(tmp, v8_doc(with_values=False), self.ROADMAP)
             self.assertEqual(r.returncode, 0, r.stderr)
             with open(out) as f:
                 text = f.read()
@@ -491,6 +562,7 @@ class RoadmapFillTests(unittest.TestCase):
             self.assertIn("projection_range lanes present but unfilled", text)
             self.assertIn("concurrent lanes present but unfilled", text)
             self.assertIn("repack lanes present but unfilled", text)
+            self.assertIn("io_backends lanes present but unfilled", text)
 
     def test_v5_doc_fills_without_entropy(self):
         with tempfile.TemporaryDirectory() as tmp:
@@ -509,6 +581,15 @@ class RoadmapFillTests(unittest.TestCase):
                 text = f.read()
             self.assertIn("Entropy lanes", text)
             self.assertNotIn("Profile-driven repack", text)
+
+    def test_v7_doc_fills_without_io_backends(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            r, out = self.run_fill(tmp, v7_doc(), self.ROADMAP)
+            self.assertEqual(r.returncode, 0, r.stderr)
+            with open(out) as f:
+                text = f.read()
+            self.assertIn("Profile-driven repack", text)
+            self.assertNotIn("I/O backends", text)
 
     def test_missing_markers_exit_1(self):
         with tempfile.TemporaryDirectory() as tmp:

@@ -20,7 +20,9 @@
 //!    + `results/projection_range.csv` (entry-range slice lanes)
 //!    + `results/concurrent.csv` (scan-server waves, cold vs warm cache)
 //!    + `results/repack.csv` (profile-driven repack: size + read MB/s
-//!      before/after),
+//!      before/after)
+//!    + `results/io_backends.csv` (physical reads per sweep per I/O
+//!      backend + the remote-sim latency × prefetch-depth surface),
 //!  * `BENCH_codecs.json` at the repo root — the machine-readable perf
 //!    trajectory consumed by CI and future PRs (schema documented in
 //!    `docs/BENCHMARKS.md`). Set BENCH_QUICK=1 for a smoke run.
@@ -186,6 +188,21 @@ struct RepackRow {
     /// Hot-subset projection throughput — the access pattern the recorded
     /// profile describes.
     hot_mbps: f64,
+}
+
+struct IoRow {
+    /// I/O backend lane: "pread", "coalesced", "mmap", or "remote-sim".
+    backend: &'static str,
+    /// Simulated per-request round-trip latency (remote-sim lanes only;
+    /// 0 on the local backends).
+    latency_ms: u64,
+    /// Prefetch queue depth — on the remote lanes this is the pipeline
+    /// window, i.e. the latency-hiding knob.
+    depth: usize,
+    /// Physical reads the backend issued for one full-tree sweep.
+    reads: u64,
+    /// Full-sweep throughput, uncompressed MB/s.
+    mbps: f64,
 }
 
 fn codec_grid(cfg: &BenchConfig) -> Vec<Row> {
@@ -897,6 +914,73 @@ fn repack_lanes(cfg: &BenchConfig) -> Vec<RepackRow> {
     out
 }
 
+/// I/O backend lanes (PR 10). Two questions, one corpus:
+///
+///  * how many physical reads does one full-tree sweep cost on each
+///    local backend (pread's 2-per-record floor vs coalesced merge
+///    groups vs the one-time mmap image load), and
+///  * on the simulated remote store, how much of a fixed per-request
+///    latency does prefetch depth hide — the latency × depth surface
+///    docs/BENCHMARKS.md plots.
+///
+/// Small (8 KiB) baskets on purpose: the sweep must carry enough
+/// records that both coalescing and the remote pipeline window have
+/// something to batch.
+fn io_backend_lanes() -> Vec<IoRow> {
+    use rootio::coordinator::{ParallelTreeReader, ReadAhead};
+    use rootio::rfile::{write_tree_serial, IoBackend, IoConfig};
+    use std::time::Duration;
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_events = if quick { 1500 } else { 6000 };
+    let path = std::env::temp_dir().join(format!("rootio_bench_io_{}.rfil", std::process::id()));
+    let events = nanoaod::events(n_events, 0x10BE);
+    write_tree_serial(
+        &path,
+        "Events",
+        nanoaod::schema(),
+        Settings::new(Algorithm::Lz4, 1).with_precond(Precond::BitShuffle(4)),
+        8 * 1024,
+        events.iter().cloned(),
+    )
+    .expect("writing io bench corpus");
+
+    let mut out = Vec::new();
+    // One timed sweep per lane, not bench()'s repeat-until-stable loop:
+    // the remote lanes are dominated by the simulated wire, which is
+    // deterministic by construction, so repetition would only multiply
+    // the sleeping without tightening the estimate.
+    let mut sweep = |backend: IoBackend, latency: Duration, depth: usize| {
+        let mut io = IoConfig::for_backend(backend);
+        io.latency = latency;
+        let reader = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth })
+            .expect("open io bench corpus")
+            .with_io(io);
+        let logical: usize =
+            reader.meta.baskets.iter().map(|l| l.uncompressed_len as usize).sum();
+        let t0 = std::time::Instant::now();
+        let n = reader.read_all_events().expect("io backend sweep").len();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(n, n_events, "io sweep dropped events ({backend})");
+        out.push(IoRow {
+            backend: backend.as_str(),
+            latency_ms: latency.as_millis() as u64,
+            depth,
+            reads: reader.metrics_snapshot().io_syscalls,
+            mbps: logical as f64 / 1e6 / wall,
+        });
+    };
+    for backend in [IoBackend::Pread, IoBackend::Coalesced, IoBackend::Mmap] {
+        sweep(backend, Duration::ZERO, 8);
+    }
+    for latency_ms in [0u64, 1, 10] {
+        for depth in [2usize, 8, 32] {
+            sweep(IoBackend::RemoteSim, Duration::from_millis(latency_ms), depth);
+        }
+    }
+    std::fs::remove_file(&path).ok();
+    out
+}
+
 #[allow(clippy::too_many_arguments)] // one slice per schema section, called once
 fn write_json(
     rows: &[Row],
@@ -907,6 +991,7 @@ fn write_json(
     projection_ranges: &[ProjRangeRow],
     concurrent: &[ConcRow],
     repack: &[RepackRow],
+    io: &[IoRow],
     quick: bool,
 ) -> std::io::Result<()> {
     let result_items: Vec<String> = rows
@@ -1010,8 +1095,21 @@ fn write_json(
             )
         })
         .collect();
+    let io_items: Vec<String> = io
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"backend\": \"{}\", \"latency_ms\": {}, \"depth\": {}, \"reads\": {}, \"MBps\": {}}}",
+                json_escape(r.backend),
+                r.latency_ms,
+                r.depth,
+                r.reads,
+                json_num(r.mbps),
+            )
+        })
+        .collect();
     let doc = format!(
-        "{{\n  \"schema\": \"bench-codecs/v7\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"entropy\": {},\n  \"read_pipeline\": {},\n  \"projection\": {},\n  \"projection_range\": {},\n  \"concurrent\": {},\n  \"repack\": {}\n}}\n",
+        "{{\n  \"schema\": \"bench-codecs/v8\",\n  \"generated_by\": \"cargo bench --bench codecs\",\n  \"quick_mode\": {},\n  \"corpus\": \"offsets/floats/text/noise + synthetic NanoAOD baskets\",\n  \"results\": {},\n  \"fast_path_speedups\": {},\n  \"entropy\": {},\n  \"read_pipeline\": {},\n  \"projection\": {},\n  \"projection_range\": {},\n  \"concurrent\": {},\n  \"repack\": {},\n  \"io_backends\": {}\n}}\n",
         quick,
         json_array(&result_items, "  "),
         json_array(&speedup_items, "  "),
@@ -1021,6 +1119,7 @@ fn write_json(
         json_array(&proj_range_items, "  "),
         json_array(&conc_items, "  "),
         json_array(&repack_items, "  "),
+        json_array(&io_items, "  "),
     );
     // Land next to Cargo.toml (the repo root) regardless of CWD.
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_codecs.json");
@@ -1165,6 +1264,22 @@ fn main() {
     println!("{}", t8.render());
     t8.save_csv("repack").unwrap();
 
-    write_json(&rows, &speedups, &entropy, &reads, &projections, &projection_ranges, &concurrent, &repack, quick)
+    // I/O backends: physical reads per sweep, plus the remote-sim
+    // latency × prefetch-depth surface.
+    let io = io_backend_lanes();
+    let mut t9 = Table::new(&["backend", "latency_ms", "depth", "reads", "read_MB_s"]);
+    for r in &io {
+        t9.row(vec![
+            r.backend.into(),
+            format!("{}", r.latency_ms),
+            format!("{}", r.depth),
+            format!("{}", r.reads),
+            format!("{:.1}", r.mbps),
+        ]);
+    }
+    println!("{}", t9.render());
+    t9.save_csv("io_backends").unwrap();
+
+    write_json(&rows, &speedups, &entropy, &reads, &projections, &projection_ranges, &concurrent, &repack, &io, quick)
         .expect("writing BENCH_codecs.json");
 }

@@ -26,10 +26,11 @@ use crate::coordinator::{
 };
 use crate::gen::{nanoaod, synthetic};
 use crate::precond::Precond;
-use crate::rfile::TreeReader;
+use crate::rfile::{IoBackend, IoConfig, TreeReader};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::time::Duration;
 
 /// Parsed flags: `--key value` pairs plus bare flags.
 pub struct Args {
@@ -120,6 +121,30 @@ pub fn parse_entry_range(s: &str) -> Result<(u64, u64)> {
     Ok((first, last))
 }
 
+/// Parse the shared `--io BACKEND [--io-latency-ms N]` flags into an
+/// [`IoConfig`]. `None` when no backend was requested (callers keep their
+/// default). `--io-latency-ms` models the per-request round-trip of the
+/// simulated remote store, so it demands `--io remote-sim`.
+pub fn parse_io_config(args: &Args) -> Result<Option<IoConfig>> {
+    let Some(s) = args.flags.get("io") else {
+        if args.flags.contains_key("io-latency-ms") {
+            bail!("--io-latency-ms only applies to --io remote-sim");
+        }
+        return Ok(None);
+    };
+    let backend = IoBackend::parse(s)
+        .with_context(|| format!("unknown --io backend '{s}' (want pread|coalesced|mmap|remote-sim)"))?;
+    let mut io = IoConfig::for_backend(backend);
+    if let Some(ms) = args.flags.get("io-latency-ms") {
+        if backend != IoBackend::RemoteSim {
+            bail!("--io-latency-ms only applies to --io remote-sim (got --io {backend})");
+        }
+        let ms: u64 = ms.parse().context("bad --io-latency-ms")?;
+        io.latency = Duration::from_millis(ms);
+    }
+    Ok(Some(io))
+}
+
 pub fn usage() -> &'static str {
     "rootio — ROOT I/O compression survey reproduction (Shadura & Bockelman, CHEP 2019)
 
@@ -129,9 +154,14 @@ USAGE:
                [--workers N] [--adaptive analysis|production|balanced]
                [--artifacts DIR]
   rootio read --in FILE [--branch NAME] [--workers N] [--entries A..B]
+               [--io pread|coalesced|mmap|remote-sim] [--io-latency-ms N]
                (--workers N > 0 reads through the parallel basket pipeline;
                 --entries A..B reads only that entry range — boundary
-                baskets are trimmed, so you get exactly entries [A, B))
+                baskets are trimmed, so you get exactly entries [A, B);
+                --io selects the physical read backend: plan-aware request
+                coalescing, a simulated memory map, or a simulated remote
+                byte-range store with --io-latency-ms per-request latency
+                that the prefetch depth hides)
   rootio read --in FILE --branches A,B,C [--workers N] [--prefetch offset|submission]
                [--entries A..B] [--feedback reads.profile]
                (columnar projection: one offset-sorted pass over the file,
@@ -168,7 +198,7 @@ USAGE:
                 output is event-for-event identical to the source — see
                 docs/REPACK.md for the operations book)
   rootio serve --corpus DIR [--workers N] [--max-scans N] [--queue-depth N]
-               [--cache-mb N]
+               [--cache-mb N] [--io BACKEND] [--io-latency-ms N]
                (long-running scan server over every .rfil in DIR: queries
                 share one worker pool and a decoded-basket cache. Line
                 protocol on stdin:
@@ -375,6 +405,8 @@ fn cmd_read(args: &Args) -> Result<i32> {
     // --salvage: degraded scan of a damaged file — unreadable baskets are
     // skipped and reported as entry gaps instead of aborting the read.
     let salvage = args.flags.contains_key("salvage");
+    // --io: physical read backend for the parallel pipeline's prefetcher.
+    let io = parse_io_config(args)?;
     // --branches: the columnar projection path (multi-branch single-pass
     // scan with per-branch metrics). --entries without a branch selection
     // projects every branch over the range.
@@ -388,7 +420,7 @@ fn cmd_read(args: &Args) -> Result<i32> {
     }
     if let Some(branch) = args.flags.get("branch") {
         if salvage {
-            return cmd_read_branch_salvage(&reader, branch, workers, entries);
+            return cmd_read_branch_salvage(&reader, branch, workers, entries, io);
         }
     } else if entries.is_some() || salvage {
         let names: Vec<String> = reader.meta.branches.iter().map(|b| b.name.clone()).collect();
@@ -396,7 +428,16 @@ fn cmd_read(args: &Args) -> Result<i32> {
     }
     // Both paths answer directory queries from the same TreeMeta; only the
     // value reads dispatch to the serial oracle or the pipeline.
-    let par = (workers > 0).then(|| reader.read_ahead(ReadAhead::with_workers(workers)));
+    if io.is_some() && workers == 0 {
+        bail!("--io selects the parallel pipeline's read backend; add --workers N");
+    }
+    let par = (workers > 0).then(|| {
+        let p = reader.read_ahead(ReadAhead::with_workers(workers));
+        match io {
+            Some(cfg) => p.with_io(cfg),
+            None => p,
+        }
+    });
     let t0 = std::time::Instant::now();
     let bytes: usize;
     if let Some(branch) = args.flags.get("branch") {
@@ -475,10 +516,14 @@ fn cmd_read_branch_salvage(
     branch: &str,
     workers: usize,
     entries: Option<(u64, u64)>,
+    io: Option<IoConfig>,
 ) -> Result<i32> {
     // Salvage always rides the pipeline; 0/absent means default workers.
     let workers = if workers == 0 { ReadAhead::default().workers } else { workers };
-    let par = reader.read_ahead(ReadAhead::with_workers(workers));
+    let mut par = reader.read_ahead(ReadAhead::with_workers(workers));
+    if let Some(cfg) = io {
+        par = par.with_io(cfg);
+    }
     let id = reader
         .branch_id(branch)
         .with_context(|| format!("no branch '{branch}'"))?;
@@ -531,7 +576,10 @@ fn cmd_read_projection(
         Some("submission") => PrefetchOrder::Submission,
         Some(other) => bail!("unknown prefetch order '{other}' (want offset|submission)"),
     };
-    let par = reader.read_ahead(ReadAhead::with_workers(workers));
+    let mut par = reader.read_ahead(ReadAhead::with_workers(workers));
+    if let Some(cfg) = parse_io_config(args)? {
+        par = par.with_io(cfg);
+    }
     let ids = ProjectionPlan::resolve_names(&par.meta, &names)?;
     let mut plan = ProjectionPlan::new(&par.meta, &ids, order)?;
     let (range_start, range_end) = match entries {
@@ -852,6 +900,9 @@ fn serve_cfg(args: &Args) -> Result<crate::coordinator::ServeConfig> {
     if let Some(c) = args.flags.get("cache-mb") {
         cfg.cache_bytes = c.parse::<u64>().context("bad --cache-mb")? << 20;
     }
+    if let Some(io) = parse_io_config(args)? {
+        cfg.io = io;
+    }
     Ok(cfg)
 }
 
@@ -1096,6 +1147,32 @@ mod tests {
         assert!(parse_entry_range("100").is_err());
         assert!(parse_entry_range("a..b").is_err());
         assert!(parse_entry_range("1..2..3").is_err());
+    }
+
+    #[test]
+    fn io_config_parse() {
+        let parse = |argv: &[&str]| {
+            parse_io_config(&parse_args(
+                &argv.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            ))
+        };
+        assert!(parse(&[]).unwrap().is_none(), "no flags → caller default");
+        let io = parse(&["--io", "coalesced"]).unwrap().unwrap();
+        assert_eq!(io.backend, IoBackend::Coalesced);
+        let io = parse(&["--io", "remote-sim", "--io-latency-ms", "10"]).unwrap().unwrap();
+        assert_eq!(io.backend, IoBackend::RemoteSim);
+        assert_eq!(io.latency, Duration::from_millis(10));
+        assert_eq!(parse(&["--io", "mmap"]).unwrap().unwrap().backend, IoBackend::Mmap);
+        assert_eq!(parse(&["--io", "pread"]).unwrap().unwrap().backend, IoBackend::Pread);
+        assert!(parse(&["--io", "sata"]).is_err(), "unknown backend rejected");
+        assert!(
+            parse(&["--io-latency-ms", "5"]).is_err(),
+            "latency without remote-sim rejected"
+        );
+        assert!(
+            parse(&["--io", "mmap", "--io-latency-ms", "5"]).is_err(),
+            "latency on a local backend rejected"
+        );
     }
 
     #[test]

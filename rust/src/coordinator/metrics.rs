@@ -26,6 +26,14 @@ pub struct Metrics {
     pub cache_hits: AtomicU64,
     /// Decoded-basket cache misses (serving layer).
     pub cache_misses: AtomicU64,
+    /// Physical reads issued to the underlying file by the I/O backend
+    /// (see [`IoStats`](crate::rfile::IoStats); 0 on the write path).
+    pub io_syscalls: AtomicU64,
+    /// Bytes served out of coalesced merge buffers instead of dedicated
+    /// reads (0 unless the `coalesced` backend is selected).
+    pub io_bytes_merged: AtomicU64,
+    /// Requests satisfied from a coalesced merge buffer.
+    pub io_requests_coalesced: AtomicU64,
 }
 
 impl Metrics {
@@ -63,6 +71,14 @@ impl Metrics {
         self.cache_misses.store(misses, Ordering::Relaxed);
     }
 
+    /// Fold the I/O backend's cumulative physical-read counters in. Same
+    /// idempotent-store contract as [`Metrics::set_read_retries`].
+    pub fn set_io_counters(&self, syscalls: u64, bytes_merged: u64, requests_coalesced: u64) {
+        self.io_syscalls.store(syscalls, Ordering::Relaxed);
+        self.io_bytes_merged.store(bytes_merged, Ordering::Relaxed);
+        self.io_requests_coalesced.store(requests_coalesced, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             baskets: self.baskets.load(Ordering::Relaxed),
@@ -81,6 +97,9 @@ impl Metrics {
             read_retries: self.read_retries.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            io_syscalls: self.io_syscalls.load(Ordering::Relaxed),
+            io_bytes_merged: self.io_bytes_merged.load(Ordering::Relaxed),
+            io_requests_coalesced: self.io_requests_coalesced.load(Ordering::Relaxed),
         }
     }
 }
@@ -102,6 +121,15 @@ pub struct Snapshot {
     pub cache_hits: u64,
     /// Decoded-basket cache misses (see [`Metrics::cache_misses`]).
     pub cache_misses: u64,
+    /// Physical reads issued by the I/O backend (see
+    /// [`Metrics::io_syscalls`]).
+    pub io_syscalls: u64,
+    /// Bytes served from coalesced merge buffers (see
+    /// [`Metrics::io_bytes_merged`]).
+    pub io_bytes_merged: u64,
+    /// Requests satisfied from a coalesced merge buffer (see
+    /// [`Metrics::io_requests_coalesced`]).
+    pub io_requests_coalesced: u64,
 }
 
 impl Snapshot {
@@ -142,8 +170,22 @@ impl Snapshot {
         } else {
             String::new()
         };
+        let io = if self.io_syscalls > 0 {
+            let merged = if self.io_requests_coalesced > 0 {
+                format!(
+                    " io-coalesced={} io-merged={:.2}MB",
+                    self.io_requests_coalesced,
+                    self.io_bytes_merged as f64 / 1e6
+                )
+            } else {
+                String::new()
+            };
+            format!(" io-syscalls={}{merged}", self.io_syscalls)
+        } else {
+            String::new()
+        };
         format!(
-            "{label}: baskets={} in={:.2}MB out={:.2}MB ratio={:.3} cpu-{verb}={:.1}ms ({:.1} MB/s/worker) lat[<.1ms,<1ms,<10ms,<100ms,>=]={:?}{retries}{cache}",
+            "{label}: baskets={} in={:.2}MB out={:.2}MB ratio={:.3} cpu-{verb}={:.1}ms ({:.1} MB/s/worker) lat[<.1ms,<1ms,<10ms,<100ms,>=]={:?}{retries}{cache}{io}",
             self.baskets,
             self.bytes_in as f64 / 1e6,
             self.bytes_out as f64 / 1e6,
@@ -195,5 +237,29 @@ mod tests {
         let s = m.snapshot();
         assert_eq!((s.cache_hits, s.cache_misses), (12, 3));
         assert!(s.report_decode("x").contains("cache-hits=12 cache-misses=3"));
+    }
+
+    #[test]
+    fn io_counters_surface_in_snapshot_and_report() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().io_syscalls, 0);
+        assert!(!m.snapshot().report_decode("x").contains("io-syscalls"));
+        // pread-style run: syscalls only, no coalescing suffix.
+        m.set_io_counters(40, 0, 0);
+        let s = m.snapshot();
+        assert_eq!(s.io_syscalls, 40);
+        let r = s.report_decode("x");
+        assert!(r.contains("io-syscalls=40"), "{r}");
+        assert!(!r.contains("io-coalesced"), "{r}");
+        // Coalesced run: idempotent store, full suffix.
+        m.set_io_counters(3, 2_000_000, 38);
+        m.set_io_counters(3, 2_000_000, 38);
+        let s = m.snapshot();
+        assert_eq!(
+            (s.io_syscalls, s.io_bytes_merged, s.io_requests_coalesced),
+            (3, 2_000_000, 38)
+        );
+        let r = s.report_decode("x");
+        assert!(r.contains("io-syscalls=3 io-coalesced=38 io-merged=2.00MB"), "{r}");
     }
 }

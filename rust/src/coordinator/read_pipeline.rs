@@ -45,11 +45,19 @@
 //! re-routes this pipeline's submission-order delivery back into per-branch
 //! event-order streams.
 //!
-//! The prefetcher reads through the [`RangeSource`] seam
-//! ([`crate::rfile::source`]): a plain [`FileSource`] in production,
-//! optionally wrapped by a deterministic [`FaultSource`] (test substrate)
-//! and a [`RetrySource`] that transparently replays *transient* failures
-//! with bounded exponential backoff ([`ParallelTreeReader::with_retry`]).
+//! The prefetcher reads through the
+//! [`RangeSource`](crate::rfile::RangeSource) seam
+//! ([`crate::rfile::source`]): a plain
+//! [`FileSource`](crate::rfile::FileSource) in production, optionally
+//! wrapped by a deterministic [`FaultSource`](crate::rfile::FaultSource)
+//! (test substrate), one of the pluggable I/O backends
+//! ([`IoBackend`](crate::rfile::IoBackend), selected via
+//! [`ParallelTreeReader::with_io`]: plan-aware request coalescing, a
+//! simulated memory map, or a simulated high-latency remote store whose
+//! throughput the prefetch depth recovers), and a
+//! [`RetrySource`](crate::rfile::RetrySource) that transparently replays
+//! *transient* failures with bounded exponential backoff
+//! ([`ParallelTreeReader::with_retry`]).
 //! On top of that sits [`ScanMode::Salvage`]: instead of failing the scan,
 //! a permanently-unreadable or checksum-rejected basket is skipped and
 //! reported as a [`DamageRecord`], and degraded branch reads
@@ -64,8 +72,8 @@ use crate::rfile::meta::{push_gap, BasketLoc, GapSpan, TreeMeta};
 use crate::rfile::reader::{decode_values, TreeReader};
 use crate::rfile::branch::Value;
 use crate::rfile::source::{
-    read_record_from, FaultSource, FaultSpec, FaultStats, FileSource, RangeSource, RetryPolicy,
-    RetrySource,
+    compose_chain, read_record_from, FaultSpec, FaultStats, IoConfig, IoStats, RemotePacing,
+    RetryPolicy,
 };
 use crate::util::pool::{BufferPool, OffsetPool};
 use crate::util::varint::Cursor;
@@ -281,9 +289,17 @@ pub struct BasketScan {
     workers: Vec<JoinHandle<()>>,
     data_pool: BufferPool,
     offset_pool: OffsetPool,
+    read_retries: Arc<AtomicU64>,
 }
 
 impl BasketScan {
+    /// Transient read failures retried while serving *this scan only* —
+    /// the counter is created fresh per source chain, so concurrent scans
+    /// of one file never bleed into each other's numbers.
+    pub fn read_retries(&self) -> u64 {
+        self.read_retries.load(Ordering::Relaxed)
+    }
+
     /// Next delivery in submission order: an intact basket, or (salvage
     /// mode) a damage report. `None` when the scan is done. In strict mode
     /// a damaged basket surfaces as `Err` — on the basket whose decode
@@ -461,9 +477,9 @@ pub struct ParallelTreeReader {
     dictionary: Vec<u8>,
     config: ReadAhead,
     metrics: Arc<Metrics>,
-    retry: RetryPolicy,
-    faults: Option<FaultSpec>,
+    io: IoConfig,
     fault_stats: Arc<FaultStats>,
+    io_stats: Arc<IoStats>,
     retry_counter: Arc<AtomicU64>,
 }
 
@@ -490,9 +506,9 @@ impl ParallelTreeReader {
             dictionary,
             config,
             metrics: Arc::new(Metrics::new()),
-            retry: RetryPolicy::default(),
-            faults: None,
+            io: IoConfig { retry: RetryPolicy::default(), ..IoConfig::default() },
             fault_stats: Arc::new(FaultStats::default()),
+            io_stats: Arc::new(IoStats::default()),
             retry_counter: Arc::new(AtomicU64::new(0)),
         }
     }
@@ -502,7 +518,7 @@ impl ParallelTreeReader {
     /// bounded exponential backoff; [`RetryPolicy::disabled`] makes every
     /// transient failure surface immediately, like the serial reader.
     pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
-        self.retry = policy;
+        self.io.retry = policy;
         self
     }
 
@@ -510,7 +526,19 @@ impl ParallelTreeReader {
     /// layer (builder style) — the substrate the fault-tolerance property
     /// tests drive. Production readers never set this.
     pub fn with_faults(mut self, spec: FaultSpec) -> Self {
-        self.faults = Some(spec);
+        self.io.faults = Some(spec);
+        self
+    }
+
+    /// Select the I/O backend and its knobs (builder style):
+    /// `pread` (default), plan-aware `coalesced` reads, a simulated
+    /// `mmap` image, or the `remote-sim` high-latency store. Fault
+    /// injection and retry policy keep their own builders
+    /// ([`with_faults`](Self::with_faults) /
+    /// [`with_retry`](Self::with_retry)) — whatever they configured is
+    /// preserved across this call.
+    pub fn with_io(mut self, io: IoConfig) -> Self {
+        self.io = IoConfig { faults: self.io.faults, retry: self.io.retry, ..io };
         self
     }
 
@@ -518,6 +546,13 @@ impl ParallelTreeReader {
     /// (all zero when fault injection is off).
     pub fn fault_stats(&self) -> Arc<FaultStats> {
         Arc::clone(&self.fault_stats)
+    }
+
+    /// Physical-I/O counters (syscalls issued, requests coalesced, bytes
+    /// served from merge buffers) aggregated across every scan this
+    /// reader served — also folded into the metrics snapshot.
+    pub fn io_stats(&self) -> Arc<IoStats> {
+        Arc::clone(&self.io_stats)
     }
 
     /// Transient read failures retried so far, across every scan this
@@ -542,6 +577,11 @@ impl ParallelTreeReader {
     /// record bytes, `compress_nanos` = worker decode CPU time.
     pub fn metrics_snapshot(&self) -> Snapshot {
         self.metrics.set_read_retries(self.retry_counter.load(Ordering::Relaxed));
+        self.metrics.set_io_counters(
+            self.io_stats.syscalls(),
+            self.io_stats.bytes_merged(),
+            self.io_stats.requests_coalesced(),
+        );
         self.metrics.snapshot()
     }
 
@@ -562,19 +602,25 @@ impl ParallelTreeReader {
         let depth = self.config.depth.max(1);
         // Open before spawning so open errors surface to the caller, then
         // assemble the prefetcher's source chain:
-        // FileSource → [FaultSource] → [RetrySource].
-        let mut source: Box<dyn RangeSource> = Box::new(FileSource::open(&self.path)?);
-        if let Some(spec) = self.faults {
-            source =
-                Box::new(FaultSource::with_stats(source, spec, Arc::clone(&self.fault_stats)));
-        }
-        if !self.retry.is_disabled() {
-            source = Box::new(RetrySource::new(
-                source,
-                self.retry,
-                Arc::clone(&self.retry_counter),
-            ));
-        }
+        // FileSource → [FaultSource] → backend → [RetrySource].
+        // The plan (exact record extents, offset-sorted by the caller's
+        // sweep) feeds the coalescing backend; the prefetch depth doubles
+        // as the remote backend's pipeline window. Sleep pacing is correct
+        // here because the prefetcher is this scan's own thread — blocking
+        // it charges only this scan.
+        let plan: Vec<(u64, u64)> = locs.iter().map(|l| l.record_span()).collect();
+        let chain = compose_chain(
+            &self.path,
+            &self.io,
+            &plan,
+            depth,
+            RemotePacing::Sleep,
+            Arc::clone(&self.io_stats),
+            Arc::clone(&self.fault_stats),
+            &[Arc::clone(&self.retry_counter)],
+        )?;
+        let source = chain.source;
+        let scan_retries = chain.retries;
 
         let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<RawJob>(depth);
         let (done_tx, done_rx) = std::sync::mpsc::sync_channel::<Done>(depth * 2);
@@ -697,6 +743,7 @@ impl ParallelTreeReader {
             workers,
             data_pool,
             offset_pool,
+            read_retries: scan_retries,
         })
     }
 
@@ -920,6 +967,7 @@ mod tests {
     use super::*;
     use crate::compression::{Algorithm, Settings};
     use crate::gen::synthetic;
+    use crate::rfile::source::IoBackend;
     use crate::rfile::write_tree_serial;
     use std::time::Duration;
 
@@ -1110,6 +1158,106 @@ mod tests {
         let err = reader.read_branch(0).unwrap_err().to_string();
         assert!(err.contains("injected transient I/O error"), "{err}");
         assert_eq!(reader.read_retries(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn coalesced_backend_matches_pread_with_far_fewer_syscalls() {
+        let path = tmp("coalesce");
+        let events = synthetic::events(400, 21);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Lz4, 1),
+            1024,
+            events.iter().cloned(),
+        )
+        .unwrap();
+
+        let pread = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 4 }).unwrap();
+        let baseline = pread.read_all_events().unwrap();
+        assert_eq!(baseline, events);
+        let pread_syscalls = pread.metrics_snapshot().io_syscalls;
+        // pread issues two reads per record (5-byte frame header + body);
+        // short reads can only push the count higher.
+        let baskets = pread.meta.baskets.len() as u64;
+        assert!(pread_syscalls >= 2 * baskets, "{pread_syscalls} < {}", 2 * baskets);
+
+        let reader = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 4 })
+            .unwrap()
+            .with_io(IoConfig::for_backend(IoBackend::Coalesced));
+        assert_eq!(reader.read_all_events().unwrap(), events);
+        let snap = reader.metrics_snapshot();
+        // A full projection sweep's plan entries are near-adjacent by
+        // construction, so k plan entries collapse into a handful of
+        // merged fills — far below the 2-per-basket pread floor.
+        assert!(
+            snap.io_syscalls * 4 <= pread_syscalls,
+            "coalescing barely helped: {} vs pread {}",
+            snap.io_syscalls,
+            pread_syscalls
+        );
+        assert!(snap.io_requests_coalesced > 0, "no request was served from a merged buffer");
+        assert!(snap.io_bytes_merged > 0);
+
+        // The other backends stay byte-identical too.
+        for backend in [IoBackend::Mmap, IoBackend::RemoteSim] {
+            let r = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 4 })
+                .unwrap()
+                .with_io(IoConfig::for_backend(backend));
+            assert_eq!(r.read_all_events().unwrap(), events, "{backend} diverged");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn per_scan_retry_counters_are_isolated() {
+        let path = tmp("scanretries");
+        let events = synthetic::events(120, 23);
+        write_tree_serial(
+            &path,
+            "Events",
+            synthetic::schema(),
+            Settings::new(Algorithm::Lz4, 1),
+            1024,
+            events.iter().cloned(),
+        )
+        .unwrap();
+        let spec = FaultSpec {
+            seed: 7,
+            transient: 0.5,
+            max_consecutive: 2,
+            ..FaultSpec::default()
+        };
+        let policy = RetryPolicy {
+            max_attempts: 4,
+            base_delay: Duration::ZERO,
+            backoff: 1.0,
+            max_delay: Duration::ZERO,
+        };
+        let reader = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 2 })
+            .unwrap()
+            .with_faults(spec)
+            .with_retry(policy);
+        let locs = reader.meta.baskets.clone();
+        let mut first = 0u64;
+        for round in 0..2 {
+            let mut scan = reader.scan(locs.clone()).unwrap();
+            while let Some(item) = scan.next_basket() {
+                let (_, content) = item.unwrap();
+                scan.recycle(content);
+            }
+            let this_scan = scan.read_retries();
+            assert!(this_scan > 0, "round {round}: fault plan never fired");
+            if round == 0 {
+                first = this_scan;
+            } else {
+                // Per-chain counter restarts from zero each scan while the
+                // reader-lifetime cumulative keeps the running total.
+                assert_eq!(reader.read_retries(), first + this_scan);
+            }
+        }
         std::fs::remove_file(&path).ok();
     }
 

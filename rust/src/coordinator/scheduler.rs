@@ -61,7 +61,10 @@ use crate::rfile::branch::Value;
 use crate::rfile::format::RecordKind;
 use crate::rfile::meta::{BasketLoc, GapSpan, TreeMeta};
 use crate::rfile::reader::TreeReader;
-use crate::rfile::source::{read_record_from, FileId, FileSource};
+use crate::rfile::source::{
+    compose_chain, read_record_from, FaultStats, FileId, IoConfig, IoStats, RemotePacing,
+    SourceChain,
+};
 use crate::runtime::ReadFeedback;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
@@ -86,6 +89,13 @@ pub struct ServeConfig {
     pub cache_bytes: u64,
     /// Cache shard count (rounded up to a power of two).
     pub cache_shards: usize,
+    /// Default I/O backend configuration for every corpus file
+    /// (overridable per file via [`ScanServer::from_paths_with_io`]).
+    /// Remote-simulation latency is paced with [`RemotePacing::Deferred`]
+    /// here: workers never sleep — the wait is charged to the requesting
+    /// query's delivery instead, so a slow file cannot stall the shared
+    /// pool.
+    pub io: IoConfig,
 }
 
 impl Default for ServeConfig {
@@ -101,6 +111,7 @@ impl Default for ServeConfig {
             queue_depth: 2 * workers,
             cache_bytes: 256 << 20,
             cache_shards: 16,
+            io: IoConfig::default(),
         }
     }
 }
@@ -113,6 +124,10 @@ pub struct CorpusFile {
     /// Content identity used in cache keys.
     pub file_id: FileId,
     pub meta: TreeMeta,
+    /// How workers read this file's bytes (defaults to
+    /// [`ServeConfig::io`]; per-file overrides model mixed corpora, e.g.
+    /// one file on local disk next to one behind a simulated remote).
+    pub io: IoConfig,
     dictionary: Arc<Vec<u8>>,
 }
 
@@ -169,6 +184,7 @@ struct QueryMetrics {
     baskets_coalesced: AtomicU64,
     bytes_from_cache: AtomicU64,
     bytes_from_disk: AtomicU64,
+    read_retries: AtomicU64,
 }
 
 /// Snapshot of one query's scheduling/decode accounting
@@ -189,6 +205,10 @@ pub struct QueryStats {
     pub bytes_from_cache: u64,
     /// Compressed bytes read from disk for this query's decodes.
     pub bytes_from_disk: u64,
+    /// Transient read failures retried while serving *this query's*
+    /// decode jobs. Charged per job from the per-chain counter deltas, so
+    /// concurrent queries against the same file never double-count.
+    pub read_retries: u64,
 }
 
 impl QueryMetrics {
@@ -201,6 +221,7 @@ impl QueryMetrics {
             baskets_coalesced: self.baskets_coalesced.load(Ordering::Relaxed),
             bytes_from_cache: self.bytes_from_cache.load(Ordering::Relaxed),
             bytes_from_disk: self.bytes_from_disk.load(Ordering::Relaxed),
+            read_retries: self.read_retries.load(Ordering::Relaxed),
         }
     }
 }
@@ -209,6 +230,11 @@ impl QueryMetrics {
 struct ScanDone {
     loc: BasketLoc,
     result: Result<Arc<BasketContent>, String>,
+    /// Simulated-remote availability deadline: the banked
+    /// ([`RemotePacing::Deferred`]) latency this job incurred, converted
+    /// to an absolute instant. The consuming stream sleeps until it on
+    /// its *own* thread — workers and unrelated scans never pay it.
+    ready_at: Option<Instant>,
 }
 
 /// A basket decode the shared workers must perform. `origin` is the
@@ -260,6 +286,15 @@ struct ServerCore {
     cfg: ServeConfig,
     state: Mutex<SchedState>,
     work_ready: Condvar,
+    /// Physical-read counters aggregated across every worker chain.
+    io_stats: Arc<IoStats>,
+    /// Injected-fault counters (all zero unless a file's [`IoConfig`]
+    /// carries a fault spec — the integration tests' substrate).
+    fault_stats: Arc<FaultStats>,
+    /// Server-lifetime retry total (per-query attribution happens via
+    /// per-chain deltas in `decode_job`; this is the metrics-snapshot
+    /// cumulative).
+    retry_total: Arc<AtomicU64>,
 }
 
 impl ServerCore {
@@ -290,7 +325,7 @@ impl ServerCore {
                 query
                     .bytes_from_cache
                     .fetch_add(BasketCache::payload_bytes(&content), Ordering::Relaxed);
-                let _ = done_tx.send(ScanDone { loc, result: Ok(content) });
+                let _ = done_tx.send(ScanDone { loc, result: Ok(content), ready_at: None });
                 continue;
             }
             if let Some(waiters) = st.pending.get_mut(&key) {
@@ -352,7 +387,7 @@ impl ServerCore {
         // differ, so the engine re-arms on every file switch (an empty
         // dictionary behaves exactly like no dictionary).
         let mut dict_for: Option<usize> = None;
-        let mut sources: HashMap<usize, FileSource> = HashMap::new();
+        let mut chains: HashMap<usize, SourceChain> = HashMap::new();
         let mut raw = Vec::new();
         let mut logical_scratch = Vec::new();
         loop {
@@ -368,11 +403,11 @@ impl ServerCore {
                     st = self.work_ready.wait(st).unwrap();
                 }
             };
-            let result = self.decode_job(
+            let (result, ready_at) = self.decode_job(
                 &job,
                 &mut engine,
                 &mut dict_for,
-                &mut sources,
+                &mut chains,
                 &mut raw,
                 &mut logical_scratch,
             );
@@ -395,54 +430,91 @@ impl ServerCore {
                             .fetch_add(BasketCache::payload_bytes(content), Ordering::Relaxed);
                     }
                 }
-                let _ = scan.done_tx.send(ScanDone { loc: job.loc, result: result.clone() });
+                let _ =
+                    scan.done_tx.send(ScanDone { loc: job.loc, result: result.clone(), ready_at });
             }
         }
     }
 
-    /// Read and decode one basket (no scheduler locks held).
+    /// Read and decode one basket (no scheduler locks held). Returns the
+    /// result plus the delivery deadline the simulated remote banked for
+    /// this job (`None` on local backends). Retries observed by this
+    /// job's chain are charged to the *originating* query only.
     fn decode_job(
         &self,
         job: &DecodeJob,
         engine: &mut Engine,
         dict_for: &mut Option<usize>,
-        sources: &mut HashMap<usize, FileSource>,
+        chains: &mut HashMap<usize, SourceChain>,
         raw: &mut Vec<u8>,
         logical_scratch: &mut Vec<u8>,
-    ) -> Result<Arc<BasketContent>, String> {
+    ) -> (Result<Arc<BasketContent>, String>, Option<Instant>) {
         let file = &self.files[job.file];
         if *dict_for != Some(job.file) {
             engine.set_dictionary(file.dictionary.as_ref().clone());
             *dict_for = Some(job.file);
         }
-        let source = match sources.entry(job.file) {
+        // Worker-local source chain per file: the backend layers are
+        // stateful (merge buffers, pacing windows), so they are never
+        // shared across threads. The coalescing plan is the file's whole
+        // basket directory; the remote pipeline window is the per-scan
+        // queue depth (what a scan can keep outstanding).
+        let chain = match chains.entry(job.file) {
             std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
             std::collections::hash_map::Entry::Vacant(v) => {
-                let src = FileSource::open(&file.path).map_err(|e| format!("{e:#}"))?;
-                v.insert(src)
+                let plan: Vec<(u64, u64)> =
+                    file.meta.baskets.iter().map(|l| l.record_span()).collect();
+                let chain = match compose_chain(
+                    &file.path,
+                    &file.io,
+                    &plan,
+                    self.cfg.queue_depth.max(1),
+                    RemotePacing::Deferred,
+                    Arc::clone(&self.io_stats),
+                    Arc::clone(&self.fault_stats),
+                    &[Arc::clone(&self.retry_total)],
+                ) {
+                    Ok(c) => c,
+                    Err(e) => return (Err(format!("{e:#}")), None),
+                };
+                v.insert(chain)
             }
         };
-        let t0 = Instant::now();
-        match read_record_from(source, job.loc.file_offset, raw) {
-            Ok(RecordKind::Basket) => {}
-            Ok(kind) => {
-                return Err(format!(
-                    "expected basket record at {}, found {kind:?}",
-                    job.loc.file_offset
-                ))
+        let retries_before = chain.retries.load(Ordering::Relaxed);
+        let owed_before = chain.owed.load(Ordering::Relaxed);
+        let result = (|| {
+            let t0 = Instant::now();
+            match read_record_from(&mut chain.source, job.loc.file_offset, raw) {
+                Ok(RecordKind::Basket) => {}
+                Ok(kind) => {
+                    return Err(format!(
+                        "expected basket record at {}, found {kind:?}",
+                        job.loc.file_offset
+                    ))
+                }
+                Err(e) => return Err(e.to_string()),
             }
-            Err(e) => return Err(e.to_string()),
+            let mut content =
+                BasketContent { n_entries: 0, data: Vec::new(), offsets: Vec::new() };
+            decode_raw_basket(raw, &job.loc, engine, logical_scratch, &mut content)?;
+            let elapsed = t0.elapsed();
+            let logical = content.data.len() + 4 * content.offsets.len();
+            self.metrics.record_basket(logical, raw.len(), elapsed);
+            job.origin.decode_nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+            job.origin.baskets_decoded.fetch_add(1, Ordering::Relaxed);
+            job.origin.bytes_from_disk.fetch_add(raw.len() as u64, Ordering::Relaxed);
+            Ok(Arc::new(content))
+        })();
+        // Charge this job's chain-counter deltas (retries, banked remote
+        // latency) to the query that requested it — including on failure,
+        // where the retry layer may have burned all its attempts.
+        let retries = chain.retries.load(Ordering::Relaxed).saturating_sub(retries_before);
+        if retries > 0 {
+            job.origin.read_retries.fetch_add(retries, Ordering::Relaxed);
         }
-        let mut content =
-            BasketContent { n_entries: 0, data: Vec::new(), offsets: Vec::new() };
-        decode_raw_basket(raw, &job.loc, engine, logical_scratch, &mut content)?;
-        let elapsed = t0.elapsed();
-        let logical = content.data.len() + 4 * content.offsets.len();
-        self.metrics.record_basket(logical, raw.len(), elapsed);
-        job.origin.decode_nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
-        job.origin.baskets_decoded.fetch_add(1, Ordering::Relaxed);
-        job.origin.bytes_from_disk.fetch_add(raw.len() as u64, Ordering::Relaxed);
-        Ok(Arc::new(content))
+        let owed = chain.owed.load(Ordering::Relaxed).saturating_sub(owed_before);
+        let ready_at = (owed > 0).then(|| Instant::now() + Duration::from_nanos(owed));
+        (result, ready_at)
     }
 }
 
@@ -481,6 +553,17 @@ impl BasketStream for ServeStream {
         }
         match self.done_rx.recv() {
             Ok(d) => {
+                // Deferred remote pacing: the payload "arrives" at its
+                // banked deadline. Sleeping here — on this query's own
+                // consumer thread — is the whole point of the deferral:
+                // the worker that produced it moved on long ago, and
+                // concurrent queries against fast files never wait.
+                if let Some(t) = d.ready_at {
+                    let now = Instant::now();
+                    if t > now {
+                        std::thread::sleep(t - now);
+                    }
+                }
                 self.delivered += 1;
                 self.core.consumed(self.scan_id);
                 if self.delivered >= self.total {
@@ -634,10 +717,19 @@ impl ScanServer {
     }
 
     /// Serve an explicit list of RFIL files (corpus names are file stems).
+    /// Every file uses [`ServeConfig::io`].
     pub fn from_paths(paths: &[PathBuf], cfg: ServeConfig) -> Result<Self> {
-        let mut files = Vec::with_capacity(paths.len());
+        let specs: Vec<(PathBuf, IoConfig)> = paths.iter().map(|p| (p.clone(), cfg.io)).collect();
+        Self::from_paths_with_io(&specs, cfg)
+    }
+
+    /// [`from_paths`](Self::from_paths) with a per-file [`IoConfig`] —
+    /// the mixed-corpus entry point (e.g. one local pread file served
+    /// next to one behind a 10 ms simulated remote).
+    pub fn from_paths_with_io(specs: &[(PathBuf, IoConfig)], cfg: ServeConfig) -> Result<Self> {
+        let mut files = Vec::with_capacity(specs.len());
         let mut by_name = HashMap::new();
-        for path in paths {
+        for (path, io) in specs {
             let serial = TreeReader::open(path)
                 .with_context(|| format!("opening corpus file {}", path.display()))?;
             let name = path
@@ -653,6 +745,7 @@ impl ScanServer {
                 path: path.clone(),
                 file_id: FileId::of_path(path)?,
                 meta: serial.meta.clone(),
+                io: *io,
                 dictionary: Arc::new(serial.dictionary().to_vec()),
             });
         }
@@ -673,6 +766,9 @@ impl ScanServer {
                 shutdown: false,
             }),
             work_ready: Condvar::new(),
+            io_stats: Arc::new(IoStats::default()),
+            fault_stats: Arc::new(FaultStats::default()),
+            retry_total: Arc::new(AtomicU64::new(0)),
         });
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -765,7 +861,25 @@ impl ScanServer {
     pub fn metrics_snapshot(&self) -> Snapshot {
         let cs = self.core.cache.stats();
         self.core.metrics.set_cache_counters(cs.hits, cs.misses);
+        self.core.metrics.set_read_retries(self.core.retry_total.load(Ordering::Relaxed));
+        self.core.metrics.set_io_counters(
+            self.core.io_stats.syscalls(),
+            self.core.io_stats.bytes_merged(),
+            self.core.io_stats.requests_coalesced(),
+        );
         self.core.metrics.snapshot()
+    }
+
+    /// Physical-read counters aggregated across every worker's source
+    /// chain (also folded into [`metrics_snapshot`](Self::metrics_snapshot)).
+    pub fn io_stats(&self) -> Arc<IoStats> {
+        Arc::clone(&self.core.io_stats)
+    }
+
+    /// Injected-fault counters (zero unless some file's [`IoConfig`]
+    /// carries a fault spec).
+    pub fn fault_stats(&self) -> Arc<FaultStats> {
+        Arc::clone(&self.core.fault_stats)
     }
 
     /// Highest number of concurrently-active (admitted) scans so far —
@@ -885,6 +999,36 @@ mod tests {
         assert!(warm.bytes_from_cache > 0);
         let cs = server.cache_stats();
         assert_eq!(cs.hits + cs.misses, cs.lookups);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn every_backend_serves_identical_columns() {
+        use crate::rfile::source::IoBackend;
+        let dir = corpus_dir("backends");
+        let events = write_file(&dir, "events", 250, 0xE);
+        let px: Vec<Value> = events.iter().map(|e| e[3].clone()).collect();
+        for backend in IoBackend::all() {
+            let cfg = ServeConfig {
+                io: IoConfig::for_backend(backend),
+                // Cold reads every time: this test is about the I/O path,
+                // not the cache.
+                cache_bytes: 0,
+                ..cfg_small()
+            };
+            let server = ScanServer::open_corpus(&dir, cfg).unwrap();
+            let mut q = server.query(&Query::project("events", &["px"])).unwrap();
+            let cols = q.read_columns().unwrap();
+            assert_eq!(cols[0], px, "{backend} diverged from the written data");
+            let snap = server.metrics_snapshot();
+            assert!(snap.io_syscalls > 0, "{backend}: no physical reads counted");
+            if backend == IoBackend::Coalesced {
+                assert!(
+                    snap.io_requests_coalesced > 0,
+                    "coalesced backend never served from a merge buffer"
+                );
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -47,6 +47,15 @@ impl BasketLoc {
         ((lo - span_start) as usize, (hi - span_start) as usize)
     }
 
+    /// Exact `(offset, len)` disk extent of this basket's record: the
+    /// 5-byte record frame (u32 total length + kind byte) plus the framed
+    /// payload, whose length the writer stores as `compressed_len`. This
+    /// is what a plan-aware I/O layer (the coalesced backend) merges on —
+    /// no heuristics, the directory knows each record's exact footprint.
+    pub fn record_span(&self) -> (u64, u64) {
+        (self.file_offset, 5 + self.compressed_len as u64)
+    }
+
     /// The gap a *damaged* basket leaves inside the entry window
     /// `[first, last)`: the clamped intersection of this basket's span
     /// with the window, or `None` if they don't intersect. Salvage-mode

@@ -18,8 +18,10 @@ pub use meta::{push_gap, BasketLoc, GapSpan, TreeMeta};
 pub use reader::TreeReader;
 pub use scrub::{scrub_file, DamageKind, ScrubFinding, ScrubReport};
 pub use source::{
-    read_full_at, read_record_from, FaultSource, FaultSpec, FaultStats, FileId, FileSource,
-    RangeSource, RetryPolicy, RetrySource, SourceError,
+    compose_chain, read_full_at, read_record_from, CoalescedSource, CountingSource, FaultSource,
+    FaultSpec, FaultStats, FileId, FileSource, IoBackend, IoConfig, IoStats, MmapSource,
+    RangeSource, RemotePacing, RemoteSource, RemoteSpec, RetryPolicy, RetrySource, SourceChain,
+    SourceError,
 };
 pub use writer::{
     frame_basket_record, frame_basket_record_prefix, write_tree_serial, BasketSink, RecordWriter,

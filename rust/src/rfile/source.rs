@@ -3,7 +3,7 @@
 //! Parallelism in the ROOT I/O Subsystem" motivates decoupling logical
 //! scans from physical I/O resources).
 //!
-//! A [`RangeSource`] serves positioned reads. Three implementations:
+//! A [`RangeSource`] serves positioned reads. The implementations:
 //!
 //! * [`FileSource`] — the production path: positional `pread`-style reads
 //!   against a local file (no shared cursor, so one handle per thread
@@ -14,8 +14,17 @@
 //!   [`crate::util::rng`] so every failure is reproducible from a seed.
 //! * [`RetrySource`] — a policy layer ([`RetryPolicy`]) that transparently
 //!   retries *transient* errors with bounded exponential backoff and
-//!   counts retry attempts into a shared counter (surfaced through
+//!   counts retry attempts into per-chain counters (surfaced through
 //!   the coordinator's metrics snapshot).
+//!
+//! On top of the decorators sit the selectable **I/O backends**
+//! ([`IoBackend`], wired by [`compose_chain`]): [`CountingSource`] (the
+//! instrumented `pread` baseline), [`CoalescedSource`] (plan-aware
+//! request merging — k adjacent basket reads become one physical read),
+//! [`MmapSource`] (a whole-file mapped image behind the same positioned
+//! contract), and [`RemoteSource`] (a simulated high-latency remote
+//! byte-range store where the prefetch window is the latency-hiding
+//! knob). All of them report into a shared [`IoStats`].
 //!
 //! Errors are classified by [`SourceError`]: `Transient` failures are
 //! worth retrying (EINTR, injected EIO, a remote hiccup); `Permanent`
@@ -27,12 +36,13 @@
 use super::format::RecordKind;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
+use std::collections::VecDeque;
 use std::fmt;
 use std::fs::File;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A read failure, classified by whether retrying could help.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -463,20 +473,32 @@ impl RetryPolicy {
 }
 
 /// Retry wrapper: replays transient failures per [`RetryPolicy`] and
-/// counts every retry into a shared counter. Permanent errors pass
-/// through untouched.
+/// counts every retry into the chain's own counter (plus any extra
+/// sinks registered via [`RetrySource::also_count`] — e.g. a
+/// reader-lifetime cumulative). Permanent errors pass through untouched.
+///
+/// The primary counter is **per chain** by construction: two readers (or
+/// two server queries) over the same file never share one, so per-query
+/// retry metrics cannot double-count each other's recoveries.
 pub struct RetrySource<S> {
     inner: S,
     policy: RetryPolicy,
     retries: Arc<AtomicU64>,
+    extra: Vec<Arc<AtomicU64>>,
 }
 
 impl<S: RangeSource> RetrySource<S> {
     pub fn new(inner: S, policy: RetryPolicy, retries: Arc<AtomicU64>) -> Self {
-        Self { inner, policy, retries }
+        Self { inner, policy, retries, extra: Vec::new() }
     }
 
-    /// Retries performed so far (shared counter).
+    /// Bill every retry to `sink` as well as the per-chain counter.
+    pub fn also_count(mut self, sink: Arc<AtomicU64>) -> Self {
+        self.extra.push(sink);
+        self
+    }
+
+    /// Retries performed so far (per-chain counter).
     pub fn retries(&self) -> u64 {
         self.retries.load(Ordering::Relaxed)
     }
@@ -492,6 +514,9 @@ impl<S: RangeSource> RetrySource<S> {
                 Ok(v) => return Ok(v),
                 Err(e) if e.is_transient() && attempt < attempts => {
                     self.retries.fetch_add(1, Ordering::Relaxed);
+                    for sink in &self.extra {
+                        sink.fetch_add(1, Ordering::Relaxed);
+                    }
                     let delay = self.policy.delay_for(attempt);
                     if !delay.is_zero() {
                         std::thread::sleep(delay);
@@ -520,6 +545,581 @@ impl<S: RangeSource> RangeSource for RetrySource<S> {
         // read's bytes are reported to the caller.
         self.run(|s| s.read_at(offset, buf))
     }
+}
+
+// ---------------------------------------------------------------------------
+// I/O backends
+// ---------------------------------------------------------------------------
+
+/// Which physical read strategy backs a scan's source chain.
+///
+/// The chain keeps its shape regardless of backend —
+/// `FileSource → FaultSource? → backend layer → RetrySource?` — the
+/// backend layer is what turns logical plan requests into physical I/O.
+/// Faults inject *below* the backend (so merged/mapped reads observe
+/// damage exactly where it lies on disk) and retries sit *above* it (so
+/// a failed merge fill or image load is simply redone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoBackend {
+    /// One positional `pread` per request (the production default;
+    /// [`CountingSource`] over [`FileSource`]).
+    #[default]
+    Pread,
+    /// Plan-aware coalescing: adjacent / near-adjacent plan entries are
+    /// fetched in one large read and sliced back per basket
+    /// ([`CoalescedSource`]).
+    Coalesced,
+    /// Whole-file in-memory image behind the same positioned-read
+    /// contract ([`MmapSource`] — a simulated mapping, see its docs).
+    Mmap,
+    /// Simulated high-latency remote byte-range store
+    /// ([`RemoteSource`], HTTP/xrootd-shaped).
+    RemoteSim,
+}
+
+impl IoBackend {
+    /// Stable CLI / bench-lane spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IoBackend::Pread => "pread",
+            IoBackend::Coalesced => "coalesced",
+            IoBackend::Mmap => "mmap",
+            IoBackend::RemoteSim => "remote-sim",
+        }
+    }
+
+    /// Parse a CLI spelling (`--io pread|coalesced|mmap|remote-sim`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pread" => Some(IoBackend::Pread),
+            "coalesced" => Some(IoBackend::Coalesced),
+            "mmap" => Some(IoBackend::Mmap),
+            "remote-sim" | "remote" => Some(IoBackend::RemoteSim),
+            _ => None,
+        }
+    }
+
+    /// Every backend, for test grids and bench lanes.
+    pub fn all() -> [IoBackend; 4] {
+        [IoBackend::Pread, IoBackend::Coalesced, IoBackend::Mmap, IoBackend::RemoteSim]
+    }
+}
+
+impl fmt::Display for IoBackend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Backend selection plus the knobs each backend reads. One value
+/// configures a whole source chain; [`compose_chain`] assembles it.
+#[derive(Debug, Clone, Copy)]
+pub struct IoConfig {
+    pub backend: IoBackend,
+    /// `remote-sim`: fixed per-request latency of the simulated store.
+    pub latency: Duration,
+    /// `remote-sim`: link bandwidth in bytes/second (0 = unmetered).
+    pub bandwidth: u64,
+    /// `coalesced`: merge neighboring plan spans whose gap is at most
+    /// this many bytes (0 = strictly adjacent only).
+    pub gap_tolerance: u64,
+    /// `coalesced`: upper bound on a single merged read, so pathological
+    /// plans cannot buffer an entire file at once.
+    pub max_merged: u64,
+    /// Optional deterministic fault injection *below* the backend layer.
+    pub faults: Option<FaultSpec>,
+    /// Transient-failure retry policy *above* the backend layer.
+    pub retry: RetryPolicy,
+}
+
+impl Default for IoConfig {
+    fn default() -> Self {
+        Self {
+            backend: IoBackend::Pread,
+            latency: Duration::ZERO,
+            bandwidth: 0,
+            gap_tolerance: 4096,
+            max_merged: 8 << 20,
+            faults: None,
+            retry: RetryPolicy::disabled(),
+        }
+    }
+}
+
+impl IoConfig {
+    /// Default knobs for `backend`.
+    pub fn for_backend(backend: IoBackend) -> Self {
+        Self { backend, ..Self::default() }
+    }
+}
+
+/// Physical-I/O counters, shared across a chain (and, in the scan
+/// server, across every chain of a corpus) the way [`FaultStats`] is.
+#[derive(Debug, Default)]
+pub struct IoStats {
+    /// Logical `read_at` requests arriving at the backend layer.
+    pub reads_requested: AtomicU64,
+    /// Physical reads the backend issued downstream: one per syscall on
+    /// the pread path, one per merge-group fill (plus fallbacks) on the
+    /// coalesced path, one per image-load chunk on the mmap path, one
+    /// per simulated range request on the remote path.
+    pub syscalls: AtomicU64,
+    /// Logical requests served out of a coalesced merge buffer instead
+    /// of their own physical read.
+    pub requests_coalesced: AtomicU64,
+    /// Bytes handed out of merge buffers.
+    pub bytes_merged: AtomicU64,
+}
+
+impl IoStats {
+    pub fn syscalls(&self) -> u64 {
+        self.syscalls.load(Ordering::Relaxed)
+    }
+    pub fn requests_coalesced(&self) -> u64 {
+        self.requests_coalesced.load(Ordering::Relaxed)
+    }
+    pub fn bytes_merged(&self) -> u64 {
+        self.bytes_merged.load(Ordering::Relaxed)
+    }
+}
+
+/// Thin pass-through that bills every request as one physical read — the
+/// `pread` backend's bookkeeping layer, and the baseline the coalescing
+/// counters are judged against.
+pub struct CountingSource<S> {
+    inner: S,
+    stats: Arc<IoStats>,
+}
+
+impl<S: RangeSource> CountingSource<S> {
+    pub fn new(inner: S, stats: Arc<IoStats>) -> Self {
+        Self { inner, stats }
+    }
+}
+
+impl<S: RangeSource> RangeSource for CountingSource<S> {
+    fn size(&mut self) -> Result<u64, SourceError> {
+        self.inner.size()
+    }
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+        self.stats.reads_requested.fetch_add(1, Ordering::Relaxed);
+        let n = self.inner.read_at(offset, buf)?;
+        self.stats.syscalls.fetch_add(1, Ordering::Relaxed);
+        Ok(n)
+    }
+}
+
+/// Plan-aware request coalescing over any inner source.
+///
+/// Construction takes the scan's plan — the exact `(offset, len)` disk
+/// extents of the records the caller will read (see
+/// [`crate::rfile::meta::BasketLoc::record_span`]), in any order — and
+/// greedily merges offset-sorted neighbors into *merge groups*: a span
+/// joins the current group while the gap to the group's end is at most
+/// `gap_tolerance` bytes and the group stays within `max_merged`. The
+/// first request landing in a group fetches the whole group with one
+/// inner read; every further request inside the buffered group is sliced
+/// out of memory. The offset-sorted prefetch sweep therefore turns k
+/// adjacent record reads (2k `read_at` calls — header + body each) into
+/// one physical read per group.
+///
+/// Requests outside any plan span, or past the buffered bytes, fall back
+/// to a direct inner read — the layer is transparent to correctness,
+/// only the batching changes. A failed group fill invalidates the
+/// buffer, so a retry layer above simply re-requests and the fill is
+/// redone from scratch.
+pub struct CoalescedSource<S> {
+    inner: S,
+    /// Merged `(offset, len)` groups, offset-sorted.
+    groups: Vec<(u64, u64)>,
+    buf: Vec<u8>,
+    /// Absolute offset of `buf[0]`.
+    buf_off: u64,
+    /// Usable prefix of `buf` (the fill tolerates end-of-source inside a
+    /// group, e.g. a truncated final record).
+    buf_valid: usize,
+    stats: Arc<IoStats>,
+}
+
+impl<S: RangeSource> CoalescedSource<S> {
+    /// `plan`: exact disk extents of the records the caller will read.
+    pub fn new(
+        inner: S,
+        plan: &[(u64, u64)],
+        gap_tolerance: u64,
+        max_merged: u64,
+        stats: Arc<IoStats>,
+    ) -> Self {
+        let mut spans: Vec<(u64, u64)> =
+            plan.iter().copied().filter(|&(_, len)| len > 0).collect();
+        spans.sort_unstable();
+        let max_merged = max_merged.max(1);
+        let mut groups: Vec<(u64, u64)> = Vec::with_capacity(spans.len());
+        for (off, len) in spans {
+            let end = off.saturating_add(len);
+            if let Some(last) = groups.last_mut() {
+                let last_end = last.0 + last.1;
+                let new_end = end.max(last_end);
+                if off <= last_end.saturating_add(gap_tolerance) && new_end - last.0 <= max_merged
+                {
+                    last.1 = new_end - last.0;
+                    continue;
+                }
+            }
+            groups.push((off, len));
+        }
+        Self { inner, groups, buf: Vec::new(), buf_off: 0, buf_valid: 0, stats }
+    }
+
+    /// Merge groups the plan collapsed to (tests assert on the count).
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    fn group_for(&self, offset: u64) -> Option<(u64, u64)> {
+        let idx = self.groups.partition_point(|&(off, _)| off <= offset);
+        let (off, len) = *self.groups.get(idx.checked_sub(1)?)?;
+        (offset < off + len).then_some((off, len))
+    }
+
+    /// Serve `buf` from the resident merge buffer if `offset` lies in its
+    /// valid range; a request extending past the buffer gets a legal
+    /// short read (the caller's fill loop continues past the group).
+    fn serve_from_buffer(&mut self, offset: u64, buf: &mut [u8]) -> Option<usize> {
+        let valid_end = self.buf_off + self.buf_valid as u64;
+        if self.buf_valid == 0 || offset < self.buf_off || offset >= valid_end {
+            return None;
+        }
+        let start = (offset - self.buf_off) as usize;
+        let n = buf.len().min(self.buf_valid - start);
+        buf[..n].copy_from_slice(&self.buf[start..start + n]);
+        self.stats.requests_coalesced.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_merged.fetch_add(n as u64, Ordering::Relaxed);
+        Some(n)
+    }
+
+    fn fill(&mut self, group_off: u64, group_len: u64) -> Result<(), SourceError> {
+        self.buf_valid = 0; // invalidate first: a failed fill must not serve stale bytes
+        self.buf.clear();
+        self.buf.resize(group_len as usize, 0);
+        self.buf_off = group_off;
+        let mut done = 0usize;
+        while done < group_len as usize {
+            let n = self
+                .inner
+                .read_at(group_off + done as u64, &mut self.buf[done..])
+                .map_err(|e| {
+                    with_detail(e, format!("coalesced fill of {group_len} bytes at offset {group_off}"))
+                })?;
+            self.stats.syscalls.fetch_add(1, Ordering::Relaxed);
+            if n == 0 {
+                break; // end of source inside the group (truncated file)
+            }
+            done += n;
+        }
+        self.buf_valid = done;
+        Ok(())
+    }
+}
+
+impl<S: RangeSource> RangeSource for CoalescedSource<S> {
+    fn size(&mut self) -> Result<u64, SourceError> {
+        self.inner.size()
+    }
+
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+        self.stats.reads_requested.fetch_add(1, Ordering::Relaxed);
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        if let Some(n) = self.serve_from_buffer(offset, buf) {
+            return Ok(n);
+        }
+        if let Some((group_off, group_len)) = self.group_for(offset) {
+            self.fill(group_off, group_len)?;
+            if let Some(n) = self.serve_from_buffer(offset, buf) {
+                return Ok(n);
+            }
+            // The fill hit end-of-source before `offset`; fall through so
+            // the inner source reports EOF authoritatively.
+        }
+        // Out-of-plan request (metadata probes, gap bytes between groups,
+        // truncation tails): pass straight through.
+        let n = self.inner.read_at(offset, buf)?;
+        self.stats.syscalls.fetch_add(1, Ordering::Relaxed);
+        Ok(n)
+    }
+}
+
+/// Chunk size for materializing the [`MmapSource`] image.
+const MMAP_LOAD_CHUNK: usize = 1 << 20;
+
+/// Memory-mapped-style backend: the whole file is presented as one
+/// in-memory image and every positioned read is a bounds-checked copy.
+///
+/// This is a **simulated** mapping — the offline build links no OS mmap
+/// bindings, so the image is materialized once with large sequential
+/// inner reads (1 MiB chunks, resumable across transient faults) rather
+/// than `mmap(2)`. The observable contract is the mapped one: after the
+/// image is resident no read touches the descriptor again, a read whose
+/// range lies inside the file always succeeds in full, and a read past
+/// the end observes end-of-source so [`read_full_at`] classifies
+/// truncation as [`SourceError::Permanent`] instead of looping.
+pub struct MmapSource<S> {
+    inner: S,
+    image: Vec<u8>,
+    /// Progress cursor: a transient fault mid-load resumes here on the
+    /// next call instead of rereading from zero.
+    loaded: usize,
+    len: Option<u64>,
+    stats: Arc<IoStats>,
+}
+
+impl<S: RangeSource> MmapSource<S> {
+    pub fn new(inner: S, stats: Arc<IoStats>) -> Self {
+        Self { inner, image: Vec::new(), loaded: 0, len: None, stats }
+    }
+
+    fn ensure_resident(&mut self) -> Result<(), SourceError> {
+        let len = match self.len {
+            Some(len) => len,
+            None => {
+                let len = self.inner.size()?;
+                self.image.resize(len as usize, 0);
+                self.len = Some(len);
+                len
+            }
+        };
+        while (self.loaded as u64) < len {
+            let end = self.image.len().min(self.loaded + MMAP_LOAD_CHUNK);
+            let n = self
+                .inner
+                .read_at(self.loaded as u64, &mut self.image[self.loaded..end])
+                .map_err(|e| {
+                    with_detail(e, format!("mapping file image at offset {}", self.loaded))
+                })?;
+            self.stats.syscalls.fetch_add(1, Ordering::Relaxed);
+            if n == 0 {
+                // File shorter than its stat length: clamp the image so
+                // the missing tail reads as end-of-source.
+                self.image.truncate(self.loaded);
+                self.len = Some(self.loaded as u64);
+                break;
+            }
+            self.loaded += n;
+        }
+        Ok(())
+    }
+}
+
+impl<S: RangeSource> RangeSource for MmapSource<S> {
+    fn size(&mut self) -> Result<u64, SourceError> {
+        self.ensure_resident()?;
+        Ok(self.image.len() as u64)
+    }
+
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+        self.ensure_resident()?;
+        self.stats.reads_requested.fetch_add(1, Ordering::Relaxed);
+        if offset >= self.image.len() as u64 {
+            return Ok(0);
+        }
+        let start = offset as usize;
+        let n = buf.len().min(self.image.len() - start);
+        buf[..n].copy_from_slice(&self.image[start..start + n]);
+        Ok(n)
+    }
+}
+
+/// Pacing discipline for [`RemoteSource`] — *where* simulated wire time
+/// is spent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemotePacing {
+    /// Block the calling thread. Right for a per-scan prefetch thread,
+    /// which owns its chain outright: only that scan pays.
+    Sleep,
+    /// Never block: bank the wait into a shared nanosecond debt counter
+    /// the caller settles where it chooses. The scan server uses this so
+    /// a slow file charges its own query's delivery, never the shared
+    /// worker pool.
+    Deferred,
+}
+
+/// Connection model for the simulated remote store.
+#[derive(Debug, Clone, Copy)]
+pub struct RemoteSpec {
+    /// Fixed per-request round-trip latency.
+    pub latency: Duration,
+    /// Link bandwidth in bytes/second (0 = unmetered).
+    pub bandwidth: u64,
+    /// Pipeline window: how many range requests may be in flight at
+    /// once. Wired from the scan's prefetch depth — the latency-hiding
+    /// knob.
+    pub window: usize,
+}
+
+/// Mock high-latency byte-range store (HTTP/xrootd-shaped), grown out of
+/// [`FaultSource`]'s latency injection into a connection model: every
+/// `read_at` is one range request costing `latency + len/bandwidth`, and
+/// up to `window` requests overlap on the simulated wire.
+///
+/// Request *i* completes at
+/// `d_i = max(issue_i, d_(i-window)) + latency + len/bandwidth`, and the
+/// caller only waits for the `(i-window)`-th deadline — the pipeline
+/// slot freeing up — so a window of `w` sustains `w` requests per
+/// latency period and the first `w` requests are free. Prefetch depth
+/// therefore converts directly into hidden latency, which is what the
+/// `io_backends` bench lanes measure.
+pub struct RemoteSource<S> {
+    inner: S,
+    spec: RemoteSpec,
+    pacing: RemotePacing,
+    deadlines: VecDeque<Instant>,
+    owed: Arc<AtomicU64>,
+    stats: Arc<IoStats>,
+}
+
+impl<S: RangeSource> RemoteSource<S> {
+    pub fn new(inner: S, spec: RemoteSpec, pacing: RemotePacing, stats: Arc<IoStats>) -> Self {
+        Self::with_debt(inner, spec, pacing, Arc::new(AtomicU64::new(0)), stats)
+    }
+
+    /// Share the deferred-pacing debt counter (nanoseconds) with the
+    /// caller. Only [`RemotePacing::Deferred`] accumulates into it.
+    pub fn with_debt(
+        inner: S,
+        spec: RemoteSpec,
+        pacing: RemotePacing,
+        owed: Arc<AtomicU64>,
+        stats: Arc<IoStats>,
+    ) -> Self {
+        Self {
+            inner,
+            spec: RemoteSpec { window: spec.window.max(1), ..spec },
+            pacing,
+            deadlines: VecDeque::new(),
+            owed,
+            stats,
+        }
+    }
+
+    fn service_time(&self, bytes: usize) -> Duration {
+        let wire = if self.spec.bandwidth > 0 {
+            Duration::from_secs_f64(bytes as f64 / self.spec.bandwidth as f64)
+        } else {
+            Duration::ZERO
+        };
+        self.spec.latency + wire
+    }
+
+    /// Advance the pipeline clock for one request of `bytes` and pay (or
+    /// bank) the wait for its slot.
+    fn pace(&mut self, bytes: usize) {
+        let service = self.service_time(bytes);
+        if service.is_zero() {
+            return;
+        }
+        let now = Instant::now();
+        let gate = if self.deadlines.len() >= self.spec.window {
+            self.deadlines.pop_front()
+        } else {
+            None
+        };
+        let start = match gate {
+            Some(g) => g.max(now),
+            None => now,
+        };
+        self.deadlines.push_back(start + service);
+        let wait = start.saturating_duration_since(now);
+        if wait.is_zero() {
+            return;
+        }
+        match self.pacing {
+            RemotePacing::Sleep => std::thread::sleep(wait),
+            RemotePacing::Deferred => {
+                self.owed.fetch_add(wait.as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl<S: RangeSource> RangeSource for RemoteSource<S> {
+    fn size(&mut self) -> Result<u64, SourceError> {
+        // Metadata probe, not a range request.
+        self.inner.size()
+    }
+
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> Result<usize, SourceError> {
+        self.stats.reads_requested.fetch_add(1, Ordering::Relaxed);
+        let n = self.inner.read_at(offset, buf)?;
+        self.stats.syscalls.fetch_add(1, Ordering::Relaxed);
+        self.pace(n.max(1));
+        Ok(n)
+    }
+}
+
+/// A composed source chain plus its per-chain observation handles.
+pub struct SourceChain {
+    pub source: Box<dyn RangeSource>,
+    /// Retries performed by THIS chain only — never shared with another
+    /// concurrently open chain over the same file.
+    pub retries: Arc<AtomicU64>,
+    /// Deferred remote-pacing debt in nanoseconds (stays 0 unless the
+    /// backend is `remote-sim` under [`RemotePacing::Deferred`]).
+    pub owed: Arc<AtomicU64>,
+}
+
+/// Assemble `FileSource → FaultSource? → backend → RetrySource?` for
+/// `path` under `io`.
+///
+/// * `plan` — exact `(offset, len)` disk extents the caller will read
+///   (only the coalesced backend consumes it).
+/// * `window` — the scan's prefetch depth (only remote-sim consumes it).
+/// * `extra_retry_sinks` — additional counters every retry is billed to
+///   (e.g. a reader-lifetime cumulative), on top of the fresh per-chain
+///   counter returned in [`SourceChain::retries`].
+pub fn compose_chain(
+    path: &Path,
+    io: &IoConfig,
+    plan: &[(u64, u64)],
+    window: usize,
+    pacing: RemotePacing,
+    io_stats: Arc<IoStats>,
+    fault_stats: Arc<FaultStats>,
+    extra_retry_sinks: &[Arc<AtomicU64>],
+) -> Result<SourceChain> {
+    let mut source: Box<dyn RangeSource> = Box::new(FileSource::open(path)?);
+    if let Some(spec) = io.faults {
+        source = Box::new(FaultSource::with_stats(source, spec, fault_stats));
+    }
+    let owed = Arc::new(AtomicU64::new(0));
+    source = match io.backend {
+        IoBackend::Pread => Box::new(CountingSource::new(source, io_stats)),
+        IoBackend::Coalesced => Box::new(CoalescedSource::new(
+            source,
+            plan,
+            io.gap_tolerance,
+            io.max_merged,
+            io_stats,
+        )),
+        IoBackend::Mmap => Box::new(MmapSource::new(source, io_stats)),
+        IoBackend::RemoteSim => Box::new(RemoteSource::with_debt(
+            source,
+            RemoteSpec { latency: io.latency, bandwidth: io.bandwidth, window },
+            pacing,
+            Arc::clone(&owed),
+            io_stats,
+        )),
+    };
+    let retries = Arc::new(AtomicU64::new(0));
+    if !io.retry.is_disabled() {
+        let mut retry = RetrySource::new(source, io.retry, Arc::clone(&retries));
+        for sink in extra_retry_sinks {
+            retry = retry.also_count(Arc::clone(sink));
+        }
+        source = Box::new(retry);
+    }
+    Ok(SourceChain { source, retries, owed })
 }
 
 #[cfg(test)]
@@ -827,5 +1427,336 @@ mod tests {
         let n = src.read_at(0, &mut buf).unwrap();
         assert!(buf[..n].iter().any(|&b| b != 0), "flip must land in the returned bytes");
         assert_eq!(stats.bit_flips.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn file_source_exact_eof_boundary() {
+        // A fill whose last byte is the file's last byte succeeds; one
+        // byte past must classify as Permanent truncation — and neither
+        // may loop.
+        let path = tmp("exact_eof");
+        let data: Vec<u8> = (0..64u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let mut src = FileSource::open(&path).unwrap();
+
+        let mut last16 = [0u8; 16];
+        read_full_at(&mut src, 48, &mut last16).unwrap();
+        assert_eq!(last16, &data[48..64]);
+
+        let mut past = [0u8; 16];
+        let err = read_full_at(&mut src, 49, &mut past).unwrap_err();
+        assert!(!err.is_transient(), "EOF shortfall must be Permanent: {err}");
+        assert!(err.to_string().contains("file truncated"), "{err}");
+
+        // Raw read_at at and past EOF reports end-of-source, not an error.
+        let mut buf = [0u8; 8];
+        assert_eq!(src.read_at(64, &mut buf).unwrap(), 0, "read at len is EOF");
+        assert_eq!(src.read_at(65, &mut buf).unwrap(), 0, "read past len is EOF");
+        // A read straddling EOF serves exactly the remaining bytes.
+        assert_eq!(src.read_at(60, &mut buf).unwrap(), 4);
+        assert_eq!(buf[..4], data[60..64]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn io_stats() -> Arc<IoStats> {
+        Arc::new(IoStats::default())
+    }
+
+    #[test]
+    fn coalesced_merges_adjacent_plan_entries_into_one_read() {
+        // Three back-to-back records read the way the prefetcher reads
+        // them (header + body each): 6 logical requests, ONE syscall.
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let plan = [(100u64, 50u64), (150, 60), (210, 40)];
+        let stats = io_stats();
+        let mut src =
+            CoalescedSource::new(MemSource(data.clone()), &plan, 0, 1 << 20, Arc::clone(&stats));
+        assert_eq!(src.group_count(), 1, "adjacent spans must merge");
+        for &(off, len) in &plan {
+            let mut hdr = [0u8; 5];
+            read_full_at(&mut src, off, &mut hdr).unwrap();
+            assert_eq!(hdr, &data[off as usize..off as usize + 5]);
+            let mut body = vec![0u8; len as usize - 5];
+            read_full_at(&mut src, off + 5, &mut body).unwrap();
+            assert_eq!(body, &data[off as usize + 5..(off + len) as usize]);
+        }
+        assert_eq!(stats.syscalls(), 1, "k adjacent plan entries must coalesce to 1 read");
+        assert_eq!(stats.reads_requested.load(Ordering::Relaxed), 6);
+        assert_eq!(stats.requests_coalesced(), 6);
+        assert_eq!(stats.bytes_merged(), 150);
+    }
+
+    #[test]
+    fn coalesced_gap_tolerance_and_max_merged_split_groups() {
+        let data = vec![7u8; 8192];
+        // Gaps of 10 bytes between spans: tolerance 9 splits, 10 merges.
+        let plan = [(0u64, 100u64), (110, 100), (220, 100)];
+        let tight = CoalescedSource::new(MemSource(data.clone()), &plan, 9, 1 << 20, io_stats());
+        assert_eq!(tight.group_count(), 3);
+        let loose = CoalescedSource::new(MemSource(data.clone()), &plan, 10, 1 << 20, io_stats());
+        assert_eq!(loose.group_count(), 1);
+        // max_merged caps group growth even with a permissive gap.
+        let capped = CoalescedSource::new(MemSource(data), &plan, 1 << 20, 250, io_stats());
+        assert_eq!(capped.group_count(), 2, "320-byte merge exceeds the 250-byte cap");
+    }
+
+    #[test]
+    fn coalesced_is_byte_identical_to_inner_including_fallbacks() {
+        // Requests inside, straddling, and outside plan spans all return
+        // the same bytes the inner source would — through a chunky inner
+        // that forces the fill loop to iterate.
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 31 % 251) as u8).collect();
+        let plan = [(64u64, 200u64), (300, 120), (1000, 500)];
+        let stats = io_stats();
+        let inner = ChunkySource { inner: MemSource(data.clone()), chunk: 37 };
+        let mut src = CoalescedSource::new(inner, &plan, 16, 1 << 20, Arc::clone(&stats));
+        let cases: &[(u64, usize)] = &[
+            (64, 200),   // exact span
+            (300, 120),  // second group (may refill)
+            (100, 400),  // straddles group end into gap + next group
+            (0, 64),     // before any span
+            (3000, 300), // far outside the plan
+            (1100, 100), // interior slice of a span
+        ];
+        for &(off, len) in cases {
+            let mut got = vec![0u8; len];
+            read_full_at(&mut src, off, &mut got).unwrap();
+            assert_eq!(got, &data[off as usize..off as usize + len], "range {off}+{len}");
+        }
+        // Truncation past EOF still classifies Permanent through the layer.
+        let mut tail = vec![0u8; 64];
+        let err = read_full_at(&mut src, 4090, &mut tail).unwrap_err();
+        assert!(!err.is_transient());
+    }
+
+    #[test]
+    fn coalesced_fill_failures_are_retryable() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1024).collect();
+        let plan = [(0u64, 512u64)];
+        let stats = io_stats();
+        let flaky = FlakySource { inner: MemSource(data.clone()), fail: 2 };
+        let coalesced = CoalescedSource::new(flaky, &plan, 0, 1 << 20, Arc::clone(&stats));
+        let policy = RetryPolicy {
+            max_attempts: 4,
+            base_delay: Duration::ZERO,
+            backoff: 1.0,
+            max_delay: Duration::ZERO,
+        };
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut src = RetrySource::new(coalesced, policy, Arc::clone(&counter));
+        let mut buf = vec![0u8; 128];
+        read_full_at(&mut src, 100, &mut buf).unwrap();
+        assert_eq!(buf, &data[100..228]);
+        assert_eq!(counter.load(Ordering::Relaxed), 2, "both transient fills retried");
+    }
+
+    #[test]
+    fn mmap_source_serves_image_and_classifies_truncation() {
+        let data: Vec<u8> = (0..2000u32).flat_map(|i| (i as u16).to_le_bytes()).collect();
+        let stats = io_stats();
+        let mut src = MmapSource::new(MemSource(data.clone()), Arc::clone(&stats));
+        assert_eq!(src.size().unwrap(), data.len() as u64);
+        let load_syscalls = stats.syscalls();
+        assert!(load_syscalls >= 1);
+        let mut buf = vec![0u8; 333];
+        for pass in 0..10u64 {
+            read_full_at(&mut src, pass * 137, &mut buf).unwrap();
+            let off = (pass * 137) as usize;
+            assert_eq!(buf, &data[off..off + 333]);
+        }
+        assert_eq!(stats.syscalls(), load_syscalls, "resident image must not re-read");
+        // At-EOF and past-EOF behave exactly like pread.
+        let len = data.len() as u64;
+        let mut probe = [0u8; 8];
+        assert_eq!(src.read_at(len, &mut probe).unwrap(), 0);
+        assert_eq!(src.read_at(len + 10, &mut probe).unwrap(), 0);
+        let err = read_full_at(&mut src, len - 4, &mut probe).unwrap_err();
+        assert!(!err.is_transient(), "truncation through mmap must stay Permanent");
+    }
+
+    #[test]
+    fn mmap_load_resumes_after_transient_faults() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(3000).collect();
+        let flaky = FlakySource { inner: MemSource(data.clone()), fail: 1 };
+        let mut src = MmapSource::new(flaky, io_stats());
+        let mut buf = vec![0u8; 100];
+        let err = src.read_at(0, &mut buf).unwrap_err();
+        assert!(err.is_transient(), "load fault must surface as retryable: {err}");
+        // The next attempt resumes the load and serves correct bytes.
+        read_full_at(&mut src, 2900, &mut buf).unwrap();
+        assert_eq!(buf, &data[2900..3000]);
+    }
+
+    #[test]
+    fn remote_window_hides_latency() {
+        let data = vec![1u8; 4096];
+        let run = |window: usize| {
+            let spec = RemoteSpec {
+                latency: Duration::from_millis(4),
+                bandwidth: 0,
+                window,
+            };
+            let mut src = RemoteSource::new(
+                MemSource(data.clone()),
+                spec,
+                RemotePacing::Sleep,
+                io_stats(),
+            );
+            let mut buf = vec![0u8; 64];
+            let t0 = Instant::now();
+            for i in 0..12u64 {
+                src.read_at(i * 64, &mut buf).unwrap();
+            }
+            t0.elapsed()
+        };
+        let narrow = run(1);
+        let wide = run(16);
+        // 12 requests at window 1 serialize ~11 waits of 4 ms; window 16
+        // never gates. Compare relatively so CI jitter cannot flake it.
+        assert!(
+            wide * 3 < narrow,
+            "wide window must hide latency: narrow={narrow:?} wide={wide:?}"
+        );
+        assert!(narrow >= Duration::from_millis(20), "narrow window must pay: {narrow:?}");
+    }
+
+    #[test]
+    fn remote_deferred_banks_debt_instead_of_sleeping() {
+        let data = vec![1u8; 1024];
+        let spec = RemoteSpec { latency: Duration::from_millis(5), bandwidth: 0, window: 1 };
+        let owed = Arc::new(AtomicU64::new(0));
+        let mut src = RemoteSource::with_debt(
+            MemSource(data),
+            spec,
+            RemotePacing::Deferred,
+            Arc::clone(&owed),
+            io_stats(),
+        );
+        let mut buf = vec![0u8; 32];
+        for i in 0..4u64 {
+            src.read_at(i * 32, &mut buf).unwrap();
+        }
+        let banked = Duration::from_nanos(owed.load(Ordering::Relaxed));
+        assert!(
+            banked >= Duration::from_millis(12),
+            "3 gated requests at 5 ms must bank >=12 ms, got {banked:?}"
+        );
+    }
+
+    #[test]
+    fn remote_bandwidth_charges_bytes() {
+        // 1 MiB/s link, 100 KiB read, window 1: the second request waits
+        // for the first's wire time (~100 ms) even with zero latency.
+        let data = vec![9u8; 300 * 1024];
+        let spec = RemoteSpec { latency: Duration::ZERO, bandwidth: 1 << 20, window: 1 };
+        let owed = Arc::new(AtomicU64::new(0));
+        let mut src = RemoteSource::with_debt(
+            MemSource(data),
+            spec,
+            RemotePacing::Deferred,
+            Arc::clone(&owed),
+            io_stats(),
+        );
+        let mut buf = vec![0u8; 100 * 1024];
+        src.read_at(0, &mut buf).unwrap();
+        src.read_at(100 * 1024, &mut buf).unwrap();
+        let banked = Duration::from_nanos(owed.load(Ordering::Relaxed));
+        assert!(banked >= Duration::from_millis(80), "wire time must gate: {banked:?}");
+    }
+
+    #[test]
+    fn io_backend_parse_roundtrips() {
+        for backend in IoBackend::all() {
+            assert_eq!(IoBackend::parse(backend.as_str()), Some(backend));
+            assert_eq!(format!("{backend}"), backend.as_str());
+        }
+        assert_eq!(IoBackend::parse("remote"), Some(IoBackend::RemoteSim));
+        assert_eq!(IoBackend::parse("o_direct"), None);
+    }
+
+    #[test]
+    fn compose_chain_keeps_retry_counters_per_chain() {
+        let path = tmp("compose_chain");
+        let data: Vec<u8> = (0..=255u8).cycle().take(2048).collect();
+        std::fs::write(&path, &data).unwrap();
+        let io = IoConfig {
+            faults: Some(FaultSpec {
+                seed: 11,
+                transient: 0.6,
+                max_consecutive: 2,
+                ..FaultSpec::default()
+            }),
+            retry: RetryPolicy {
+                max_attempts: 4,
+                base_delay: Duration::ZERO,
+                backoff: 1.0,
+                max_delay: Duration::ZERO,
+            },
+            ..IoConfig::default()
+        };
+        let cumulative = Arc::new(AtomicU64::new(0));
+        let drive = |seed: u64| {
+            let io = IoConfig {
+                faults: Some(FaultSpec { seed, ..io.faults.unwrap() }),
+                ..io
+            };
+            let chain = compose_chain(
+                &path,
+                &io,
+                &[],
+                4,
+                RemotePacing::Sleep,
+                Arc::new(IoStats::default()),
+                Arc::new(FaultStats::default()),
+                &[Arc::clone(&cumulative)],
+            )
+            .unwrap();
+            let mut source = chain.source;
+            let mut buf = vec![0u8; 64];
+            for i in 0..16u64 {
+                read_full_at(&mut source, i * 100, &mut buf).unwrap();
+                assert_eq!(buf, &data[(i * 100) as usize..(i * 100) as usize + 64]);
+            }
+            chain.retries.load(Ordering::Relaxed)
+        };
+        let a = drive(11);
+        let b = drive(12);
+        assert!(a > 0 && b > 0, "fault plans must have fired: a={a} b={b}");
+        assert_eq!(
+            cumulative.load(Ordering::Relaxed),
+            a + b,
+            "extra sink accumulates across chains while per-chain counters stay isolated"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compose_chain_backends_read_identical_bytes() {
+        let path = tmp("compose_backends");
+        let data: Vec<u8> = (0..5000u32).map(|i| (i * 17 % 241) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let plan = [(0u64, 1000u64), (1000, 1000), (2500, 800)];
+        for backend in IoBackend::all() {
+            let io = IoConfig { backend, ..IoConfig::default() };
+            let chain = compose_chain(
+                &path,
+                &io,
+                &plan,
+                8,
+                RemotePacing::Sleep,
+                Arc::new(IoStats::default()),
+                Arc::new(FaultStats::default()),
+                &[],
+            )
+            .unwrap();
+            let mut source = chain.source;
+            assert_eq!(source.size().unwrap(), data.len() as u64, "{backend}");
+            let mut buf = vec![0u8; 800];
+            for &(off, _) in &plan {
+                read_full_at(&mut source, off, &mut buf).unwrap();
+                assert_eq!(buf, &data[off as usize..off as usize + 800], "{backend} at {off}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
     }
 }

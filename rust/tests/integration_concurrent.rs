@@ -31,8 +31,9 @@ use rootio::coordinator::{
     ParallelTreeReader, Query, ReadAhead, ScanMode, ScanServer, ServeConfig,
 };
 use rootio::precond::Precond;
-use rootio::rfile::{TreeReader, Value};
+use rootio::rfile::{FaultSpec, IoBackend, IoConfig, RetryPolicy, TreeReader, Value};
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 /// A small server config that still exercises real concurrency.
 fn cfg() -> ServeConfig {
@@ -42,6 +43,7 @@ fn cfg() -> ServeConfig {
         queue_depth: 4,
         cache_bytes: 64 << 20,
         cache_shards: 4,
+        io: IoConfig::default(),
     }
 }
 
@@ -365,6 +367,132 @@ fn admission_control_bounds_active_scans() {
     );
     assert!(server.peak_active() >= 1);
     remove(&paths);
+}
+
+/// Satellite regression (PR 10): a high-latency remote-sim file must not
+/// stall a concurrent zero-latency scan. The scheduler banks the remote
+/// wait ([`RemotePacing::Deferred`] under the hood) and charges it to the
+/// slow query's own deliveries — workers never sleep, so the fast file's
+/// query runs at local-disk speed and its queue-wait stays flat.
+#[test]
+fn slow_remote_file_does_not_stall_concurrent_local_scan() {
+    let pa = tmp_path("conc_iso", "fast_a.rfil");
+    let pb = tmp_path("conc_iso", "slow_b.rfil");
+    let settings = Settings::new(Algorithm::Lz4, 1);
+    write_sample_tree(&pa, settings, 200, 512, 0xFA);
+    let meta_b = write_sample_tree(&pb, settings, 200, 512, 0xFB);
+    // Floor the slow query's wall time: with 3 workers × window 2 the
+    // remote pipeline moves ≤ 6 requests per latency period, so with ≥ 24
+    // baskets some worker carries ≥ 8 of them — ≥ 4 full 25 ms periods on
+    // one chain, regardless of machine speed.
+    assert!(meta_b.baskets.len() >= 24, "fixture too small: {}", meta_b.baskets.len());
+    let mut slow_io = IoConfig::for_backend(IoBackend::RemoteSim);
+    slow_io.latency = Duration::from_millis(25);
+    let server = ScanServer::from_paths_with_io(
+        &[(pa.clone(), IoConfig::default()), (pb.clone(), slow_io)],
+        // Cold reads only (no cache) and a narrow window so the latency
+        // model, not the cache, dominates the slow file.
+        ServeConfig { cache_bytes: 0, queue_depth: 2, ..cfg() },
+    )
+    .unwrap();
+    let mut oracle_a = TreeReader::open(&pa).unwrap();
+    let want_a = columns_of(&oracle_a.read_all_events().unwrap());
+    let mut oracle_b = TreeReader::open(&pb).unwrap();
+    let want_b = columns_of(&oracle_b.read_all_events().unwrap());
+
+    let (fast, slow) = std::thread::scope(|scope| {
+        let fast = {
+            let server = &server;
+            let want_a = &want_a;
+            scope.spawn(move || {
+                let t0 = Instant::now();
+                let mut sq = server.query(&Query::all("fast_a")).unwrap();
+                assert_eq!(&sq.read_columns().unwrap(), want_a, "fast file diverged");
+                (t0.elapsed(), sq.stats())
+            })
+        };
+        let slow = {
+            let server = &server;
+            let want_b = &want_b;
+            scope.spawn(move || {
+                let t0 = Instant::now();
+                let mut sq = server.query(&Query::all("slow_b")).unwrap();
+                assert_eq!(&sq.read_columns().unwrap(), want_b, "slow file diverged");
+                (t0.elapsed(), sq.stats())
+            })
+        };
+        (fast.join().unwrap(), slow.join().unwrap())
+    });
+    let (fast_wall, fast_stats) = fast;
+    let (slow_wall, _slow_stats) = slow;
+    assert!(
+        slow_wall >= Duration::from_millis(100),
+        "latency model never charged the slow query: {slow_wall:?}"
+    );
+    assert!(
+        fast_wall * 3 < slow_wall,
+        "zero-latency scan degraded by the concurrent slow file: fast {fast_wall:?} vs slow {slow_wall:?}"
+    );
+    assert!(
+        fast_stats.queue_wait < Duration::from_millis(50),
+        "fast query queued behind the slow file: {:?}",
+        fast_stats.queue_wait
+    );
+    remove(&[pa, pb]);
+}
+
+/// Satellite regression (PR 10): per-query `read_retries` must not
+/// double-count when the server opens the same file for several queries.
+/// Counters are per source chain and charged per decode job, so each
+/// query sees exactly its own retries and the server total is their sum.
+#[test]
+fn per_query_retry_counters_do_not_double_count() {
+    let pf = tmp_path("conc_retry", "faulty.rfil");
+    let pc = tmp_path("conc_retry", "clean.rfil");
+    write_sample_tree(&pf, Settings::new(Algorithm::Zstd, 1), 250, 512, 0x1F);
+    write_sample_tree(&pc, Settings::new(Algorithm::Zstd, 1), 250, 512, 0x2C);
+    let faulty_io = IoConfig {
+        faults: Some(FaultSpec {
+            seed: 9,
+            transient: 0.4,
+            max_consecutive: 2,
+            ..FaultSpec::default()
+        }),
+        retry: RetryPolicy {
+            max_attempts: 4, // > max_consecutive: recovery guaranteed
+            base_delay: Duration::ZERO,
+            backoff: 1.0,
+            max_delay: Duration::ZERO,
+        },
+        ..IoConfig::default()
+    };
+    let server = ScanServer::from_paths_with_io(
+        &[(pf.clone(), faulty_io), (pc.clone(), IoConfig::default())],
+        // No cache: every pass re-reads, so the fault schedule fires on
+        // both faulty queries.
+        ServeConfig { cache_bytes: 0, ..cfg() },
+    )
+    .unwrap();
+    let run = |name: &str| {
+        let mut sq = server.query(&Query::all(name)).unwrap();
+        sq.read_columns().unwrap();
+        sq.stats()
+    };
+    let faulty_first = run("faulty");
+    let clean = run("clean");
+    let faulty_second = run("faulty");
+    assert!(faulty_first.read_retries > 0, "fault schedule never fired on pass 1");
+    assert!(faulty_second.read_retries > 0, "fault schedule never fired on pass 2");
+    assert_eq!(
+        clean.read_retries, 0,
+        "clean file's query was billed another query's retries"
+    );
+    assert_eq!(
+        server.metrics_snapshot().read_retries,
+        faulty_first.read_retries + faulty_second.read_retries,
+        "per-query retry counters must partition the server total"
+    );
+    remove(&[pf, pc]);
 }
 
 #[test]

@@ -17,10 +17,15 @@
 //!    oracle.
 //! 3. **Decode-level damage** — a flipped stored LZ4 CRC is caught at
 //!    decompression (not framing) and salvage degrades identically.
+//! 4. **Backend independence** — properties 1 and 2 hold under every
+//!    [`IoBackend`], and the coalesced backend's buffer slicing must
+//!    keep attributing damage to exactly the overlapping basket.
 //!
 //! Fixtures come from the shared testkit (`mod common`): `PROP_SEED`
 //! reproduces a failed run, `PROP_ROUNDS` caps the grid/round counts (see
-//! rust/tests/common/mod.rs).
+//! rust/tests/common/mod.rs). `ROOTIO_FAULTS_BACKEND` pins the grids to
+//! one I/O backend (CI re-runs the suite once per backend at elevated
+//! rounds); unset, every backend runs at the default budget.
 
 mod common;
 
@@ -28,10 +33,24 @@ use common::{grid, prop_rounds, sample, seeded, tmp_path, write_sample_tree};
 use rootio::compression::{Algorithm, Settings};
 use rootio::coordinator::{ParallelTreeReader, ReadAhead};
 use rootio::gen::synthetic;
-use rootio::rfile::{push_gap, BasketLoc, FaultSpec, GapSpan, RetryPolicy, TreeReader, Value};
+use rootio::rfile::{
+    push_gap, BasketLoc, FaultSpec, GapSpan, IoBackend, IoConfig, RetryPolicy, TreeReader, Value,
+};
 use rootio::util::varint::get_uvarint;
 use std::collections::BTreeSet;
 use std::time::Duration;
+
+/// I/O backend lanes for the property grids (see the module docs).
+fn backends_under_test() -> Vec<IoBackend> {
+    match std::env::var("ROOTIO_FAULTS_BACKEND") {
+        Ok(name) => {
+            let backend = IoBackend::parse(&name)
+                .unwrap_or_else(|| panic!("ROOTIO_FAULTS_BACKEND={name}: unknown backend"));
+            vec![backend]
+        }
+        Err(_) => IoBackend::all().to_vec(),
+    }
+}
 
 /// Retries without sleeping: the backoff schedule is covered by the
 /// source-layer unit tests; integration rounds only need the attempt loop.
@@ -84,6 +103,7 @@ fn transient_faults_with_retry_are_byte_identical_to_fault_free() {
     let event_seed = rng.next_u64();
     let events = synthetic::events(100, event_seed);
     let settings_grid = sample(grid(), prop_rounds(12));
+    let backends = backends_under_test();
     let (mut faults_total, mut retries_total) = (0u64, 0u64);
     for (i, settings) in settings_grid.into_iter().enumerate() {
         let basket_size = rng.range(256, 8192);
@@ -102,19 +122,30 @@ fn transient_faults_with_retry_are_byte_identical_to_fault_free() {
                 // retry loop guaranteed to converge.
                 ..FaultSpec::default()
             };
-            let par = ParallelTreeReader::open(&path, ReadAhead { workers, depth: 4 })
-                .unwrap()
-                .with_faults(spec)
-                .with_retry(instant_retry());
-            let got = par.read_all_events().unwrap();
-            assert_eq!(got, events, "{} x{workers}w under faults", settings.label());
-            faults_total += par.fault_stats().total();
-            retries_total += par.read_retries();
-            assert_eq!(
-                par.metrics_snapshot().read_retries,
-                par.read_retries(),
-                "metrics bridge out of sync"
-            );
+            // Faults inject *below* the backend, so each backend's
+            // batching (group fills, image load, windowed ranges) must
+            // absorb the same seeded plan and still converge.
+            for &backend in &backends {
+                let par = ParallelTreeReader::open(&path, ReadAhead { workers, depth: 4 })
+                    .unwrap()
+                    .with_faults(spec)
+                    .with_retry(instant_retry())
+                    .with_io(IoConfig::for_backend(backend));
+                let got = par.read_all_events().unwrap();
+                assert_eq!(
+                    got,
+                    events,
+                    "{} x{workers}w io={backend} under faults",
+                    settings.label()
+                );
+                faults_total += par.fault_stats().total();
+                retries_total += par.read_retries();
+                assert_eq!(
+                    par.metrics_snapshot().read_retries,
+                    par.read_retries(),
+                    "metrics bridge out of sync (io={backend})"
+                );
+            }
         }
         std::fs::remove_file(&path).ok();
     }
@@ -154,35 +185,51 @@ fn salvage_recovers_exact_intact_complement_and_strict_rejects() {
         }
         let hit_branches: BTreeSet<u32> = victims.iter().map(|v| v.branch_id).collect();
 
-        // Strict parity: the serial oracle and the strict pipeline must
-        // both reject every branch that owns a victim.
+        // Strict parity: the serial oracle rejects every branch that
+        // owns a victim, and the strict pipeline must agree under every
+        // I/O backend (rotating the worker count across rounds).
         let mut serial = TreeReader::open(&path).unwrap();
-        let par = serial.read_ahead(ReadAhead { workers: 2, depth: 4 });
         for &b in &hit_branches {
-            let serial_err = serial.read_branch(b).is_err();
-            let par_err = par.read_branch(b).is_err();
-            assert!(serial_err, "serial oracle accepted damaged branch {b}");
-            assert!(par_err, "strict pipeline accepted damaged branch {b}");
+            assert!(serial.read_branch(b).is_err(), "serial oracle accepted damaged branch {b}");
         }
+        let workers = [1usize, 2, 4][round % 3];
+        for backend in backends_under_test() {
+            let par = serial
+                .read_ahead(ReadAhead { workers, depth: 4 })
+                .with_io(IoConfig::for_backend(backend));
+            for &b in &hit_branches {
+                assert!(
+                    par.read_branch(b).is_err(),
+                    "strict pipeline (io={backend}) accepted damaged branch {b}"
+                );
+            }
 
-        // Salvage: every branch yields exactly the intact complement,
-        // with the victims' entry spans as (merged) gaps and one damage
-        // record per victim basket.
-        for b in 0..meta.branches.len() as u32 {
-            let branch_victims: Vec<BasketLoc> =
-                victims.iter().filter(|v| v.branch_id == b).copied().collect();
-            let col = par.read_branch_salvage(b).unwrap();
-            let (want_vals, want_gaps) = intact_complement(&events, b, &branch_victims);
-            assert_eq!(col.values, want_vals, "branch {b} salvage values (round {round})");
-            assert_eq!(col.gaps, want_gaps, "branch {b} salvage gaps (round {round})");
-            assert_eq!(
-                col.damage.len(),
-                branch_victims.len(),
-                "branch {b} damage records (round {round})"
-            );
-            let lost: u64 = branch_victims.iter().map(|v| v.n_entries as u64).sum();
-            assert_eq!(col.entries_skipped(), lost);
-            assert_eq!(col.values.len() as u64 + lost, meta.n_entries);
+            // Salvage: every branch yields exactly the intact
+            // complement, with the victims' entry spans as (merged) gaps
+            // and one damage record per victim basket — regardless of
+            // how the backend batched the bytes underneath.
+            for b in 0..meta.branches.len() as u32 {
+                let branch_victims: Vec<BasketLoc> =
+                    victims.iter().filter(|v| v.branch_id == b).copied().collect();
+                let col = par.read_branch_salvage(b).unwrap();
+                let (want_vals, want_gaps) = intact_complement(&events, b, &branch_victims);
+                assert_eq!(
+                    col.values, want_vals,
+                    "branch {b} salvage values (round {round}, io={backend})"
+                );
+                assert_eq!(
+                    col.gaps, want_gaps,
+                    "branch {b} salvage gaps (round {round}, io={backend})"
+                );
+                assert_eq!(
+                    col.damage.len(),
+                    branch_victims.len(),
+                    "branch {b} damage records (round {round}, io={backend})"
+                );
+                let lost: u64 = branch_victims.iter().map(|v| v.n_entries as u64).sum();
+                assert_eq!(col.entries_skipped(), lost);
+                assert_eq!(col.values.len() as u64 + lost, meta.n_entries);
+            }
         }
         std::fs::remove_file(&path).ok();
     }
@@ -242,5 +289,66 @@ fn flipped_lz4_stored_crc_is_rejected_strictly_and_salvaged() {
     assert_eq!(col.gaps, want_gaps);
     assert_eq!(col.damage.len(), 1);
     assert_eq!(col.damage[0].loc.basket_index, victim.basket_index);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn coalesced_slicing_preserves_per_basket_damage_attribution() {
+    let (mut rng, _guard) = seeded(0xC0A7E5CE);
+    let event_seed = rng.next_u64();
+    let n_events = 240;
+    let events = synthetic::events(n_events, event_seed);
+    let path = tmp_path("faults_coalesce", "attrib");
+    let meta =
+        write_sample_tree(&path, Settings::new(Algorithm::Zstd, 3), n_events, 512, event_seed);
+    let n_records = meta.baskets.len() as u64;
+    assert!(n_records >= 8, "need a multi-record file to form merge groups");
+
+    // Clean full sweep first: contiguous record spans must merge, so the
+    // coalesced backend stays far under the 2-reads-per-record pread
+    // floor — counter-asserted through the metrics snapshot, the same
+    // surface the CLI report and the io_backends bench lanes read.
+    let par = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 4 })
+        .unwrap()
+        .with_io(IoConfig::for_backend(IoBackend::Coalesced));
+    assert_eq!(par.read_all_events().unwrap(), events);
+    let snap = par.metrics_snapshot();
+    assert!(
+        snap.io_syscalls * 4 <= 2 * n_records,
+        "coalescing barely batched: {} physical reads for {n_records} records",
+        snap.io_syscalls
+    );
+    assert!(
+        snap.io_requests_coalesced > 0 && snap.io_bytes_merged > 0,
+        "merge counters never moved: coalesced={} merged={}",
+        snap.io_requests_coalesced,
+        snap.io_bytes_merged
+    );
+
+    // Flip one identity varint mid-file. The victim's bytes travel
+    // inside a merge group shared with many intact records; slicing the
+    // group buffer back into per-basket payloads must hand the damage to
+    // exactly the overlapping basket and nothing else.
+    let victim = meta.baskets[meta.baskets.len() / 2];
+    corrupt_identity(&path, &victim);
+    let par = ParallelTreeReader::open(&path, ReadAhead { workers: 2, depth: 4 })
+        .unwrap()
+        .with_io(IoConfig::for_backend(IoBackend::Coalesced));
+    for b in 0..meta.branches.len() as u32 {
+        let branch_victims: Vec<BasketLoc> =
+            [victim].into_iter().filter(|v| v.branch_id == b).collect();
+        let col = par.read_branch_salvage(b).unwrap();
+        let (want_vals, want_gaps) = intact_complement(&events, b, &branch_victims);
+        assert_eq!(col.values, want_vals, "branch {b}: intact complement must survive slicing");
+        assert_eq!(col.gaps, want_gaps, "branch {b} gaps");
+        assert_eq!(
+            col.damage.len(),
+            branch_victims.len(),
+            "branch {b}: damage attributed to the wrong basket"
+        );
+        if let Some(d) = col.damage.first() {
+            assert_eq!((d.loc.branch_id, d.loc.basket_index), (b, victim.basket_index));
+        }
+    }
     std::fs::remove_file(&path).ok();
 }
